@@ -1,0 +1,79 @@
+//! §3 reproduction: the evolutionary discovery of the split-heuristic flaw
+//! (OpenEvolve analog).
+//!
+//! Runs the generational search over (num_splits, pack_gqa, sm_margin)
+//! rule genomes against the simulated H100, prints per-generation
+//! progress, renders the best genome as the Python-bindings heuristic
+//! (the paper's Figure 1 artifact), and compares it with the conservative
+//! distilled C++ policy (§4).
+//!
+//! Run: `cargo run --release --example evolve_search -- [--generations 30]`
+
+use fa3_split::evolve::{Genome, Search, SearchConfig};
+use fa3_split::heuristics::tiles::DecodeShape;
+use fa3_split::heuristics::{SequenceAwarePolicy, SplitPolicy};
+use fa3_split::sim::Simulator;
+use fa3_split::util::cli;
+
+fn main() {
+    let args = cli::Parser::new("Evolutionary search over split heuristics (§3)")
+        .opt("generations", "30", "EA generations")
+        .opt("population", "48", "population size")
+        .opt("seed", "58113", "search seed")
+        .parse();
+
+    let cfg = SearchConfig {
+        seed: args.u64("seed"),
+        population: args.usize("population"),
+        generations: args.usize("generations"),
+        ..Default::default()
+    };
+    let search = Search::new(cfg, Simulator::h100());
+
+    println!("== Evolutionary search (OpenEvolve analog): minimizing chat-panel TPOT ==\n");
+    let report = search.run(|g| {
+        println!(
+            "gen {:>3}: best TPOT {:.3} µs | mean(valid) {:.3} µs | rejected {}",
+            g.generation, g.best_tpot_us, g.mean_valid_tpot_us, g.rejected
+        );
+    });
+
+    println!("\nupstream heuristic TPOT : {:.3} µs", report.upstream_tpot_us);
+    println!("best evolved TPOT       : {:.3} µs", report.best_tpot_us);
+    println!("search speedup          : {:.3}x", report.speedup());
+
+    println!("\nBest evolved heuristic rendered as the Python-bindings logic (cf. paper Figure 1):\n");
+    println!("{}", report.best.render_python());
+
+    // The §3.3 dissection: what does the winner do at the boundary shape?
+    let boundary = DecodeShape::llama70b_tp8(1, 512);
+    let md = report.best.decide(&boundary);
+    println!(
+        "at the boundary shape (B=1, L_K=512, H_KV=1): evolved s = {}, pack_gqa = {}, sm_margin = {}",
+        md.num_splits, md.pack_gqa, md.sm_margin
+    );
+
+    // Compare: paper's Figure-1 candidate and the distilled C++ policy.
+    let sim = Simulator::h100();
+    let eval = search.evaluator();
+    let fig1_tpot = eval.panel_tpot_us(&Genome::figure1());
+    println!("\npaper's Figure-1 candidate TPOT : {:.3} µs", fig1_tpot);
+    let policy = SequenceAwarePolicy;
+    let mut total = 0.0;
+    let mut steps = 0usize;
+    for &(prompt, n) in &fa3_split::workload::ChatWorkload::evolution_panel() {
+        for step in 0..n {
+            let shape = DecodeShape::llama70b_tp8(1, prompt + step + 1);
+            total += sim.kernel_us(&policy.metadata(&shape, 0, true));
+            steps += 1;
+        }
+    }
+    println!(
+        "distilled C++ policy (§4) TPOT  : {:.3} µs  (conservative: trades TPOT for a one-line, regression-free rule)",
+        total / steps as f64
+    );
+    println!(
+        "\nThe search rediscovers the paper's mechanism: force num_splits > 1 for short\n\
+         single-batch prompts where the static L_K <= 512 guard strands the SMs."
+    );
+}

@@ -1,0 +1,44 @@
+//! §5.3 reproduction: the 160-configuration regression test matrix.
+//!
+//! Run: `cargo run --release --example regression_matrix -- [--full]`
+//! (`--full` prints every cell, not just the non-1.00x ones.)
+
+use fa3_split::bench_harness::regression;
+use fa3_split::sim::Simulator;
+use fa3_split::util::cli;
+use fa3_split::util::table::{speedup, us, Align, Table};
+
+fn main() {
+    let args = cli::Parser::new("§5.3 regression matrix (160 configs)")
+        .flag("full", "print all 160 rows")
+        .opt("replays", "201", "interleaved replays per cell")
+        .parse();
+
+    let sim = Simulator::h100();
+    let cells = regression::run(&sim, args.usize("replays"), 0x5E53);
+
+    if args.has("full") {
+        let mut t = Table::new(&["Batch", "L_K", "H_KV", "Std (µs)", "Patched (µs)", "Speedup"])
+            .align(&[Align::Right; 6]);
+        for c in &cells {
+            t.row(&[
+                c.shape.batch.to_string(),
+                c.shape.l_k.to_string(),
+                c.shape.h_kv.to_string(),
+                us(c.standard_us),
+                us(c.patched_us),
+                speedup(c.speedup()),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    print!("{}", regression::render(&cells));
+    match regression::verify(&cells) {
+        Ok(()) => println!("VERIFIED: no regressions (>= 0.99x); wins only in the paper's target cells"),
+        Err(e) => {
+            eprintln!("FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+}

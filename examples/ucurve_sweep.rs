@@ -1,0 +1,63 @@
+//! Figure 3's u_curve_sweep experiment: kernel-level split sweep s = 1..64
+//! with precomputed scheduler metadata, on the simulated H100 — and, with
+//! `--real`, the same sweep executed for real through the PJRT CPU backend
+//! (absolute times differ from H100; the sim column carries the paper
+//! comparison, the real column proves the artifacts run at every s).
+//!
+//! Run: `cargo run --release --example ucurve_sweep -- [--real]`
+
+use fa3_split::bench_harness::{ucurve, Bencher};
+use fa3_split::runtime::{HostTensor, Registry};
+use fa3_split::sim::Simulator;
+use fa3_split::util::cli;
+use fa3_split::util::prng::Rng;
+use fa3_split::util::table::{us, Align, Table};
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let args = cli::Parser::new("Figure 3: extended split sweep")
+        .flag("real", "also execute each split's artifact through PJRT (CPU)")
+        .opt("replays", "301", "interleaved replays per point")
+        .parse();
+
+    let sim = Simulator::h100();
+    let points = ucurve::run(&sim, args.usize("replays"), 0xF163);
+
+    println!("Figure 3 — split sweep, Batch=1 L_K=512 H_KV=1 D=128 (simulated H100):\n");
+    print!("{}", ucurve::render_table(&points));
+    println!();
+    println!("{}", ucurve::render_plot(&points, 14));
+    ucurve::verify(&points).map_err(|e| anyhow::anyhow!(e))?;
+
+    if args.has("real") {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+        let reg = Registry::open(&dir)?;
+        let mut rng = Rng::new(2);
+        let n = |shape: &[usize], rng: &mut Rng| {
+            let count: usize = shape.iter().product();
+            HostTensor::f32(shape, (0..count).map(|_| rng.normal() as f32).collect()).unwrap()
+        };
+        let q = n(&[1, 8, 128], &mut rng);
+        let k = n(&[1, 512, 1, 128], &mut rng);
+        let v = n(&[1, 512, 1, 128], &mut rng);
+        let lens = HostTensor::s32(&[1], vec![512])?;
+        let bench = Bencher { warmup_iters: 10, samples: 25, batch_iters: 5 };
+
+        println!("\nReal PJRT CPU execution of the same sweep (runtime structure check):\n");
+        let mut t = Table::new(&["num_splits", "CPU latency (µs)"]).align(&[Align::Right; 2]);
+        for &s in &ucurve::SWEEP_SPLITS {
+            let Some(entry) = reg.manifest.find_kernel(1, 512, 1, s) else {
+                continue;
+            };
+            let exe = reg.executor_for(entry)?;
+            let r = bench.bench(&format!("s={s}"), || {
+                exe.execute(&[q.clone(), k.clone(), v.clone(), lens.clone()]).unwrap()
+            });
+            t.row(&[s.to_string(), us(r.mean_ns() / 1e3)]);
+        }
+        t.print();
+        println!("(CPU has no SM-occupancy cliff; this column validates execution, not H100 latency)");
+    }
+    Ok(())
+}

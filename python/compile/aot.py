@@ -1,0 +1,262 @@
+"""AOT artifact builder: lower L2/L1 JAX programs to HLO text + manifest.
+
+Run once at build time (``make artifacts``); the rust runtime then loads
+``artifacts/manifest.json`` and the referenced ``*.hlo.txt`` files and never
+touches Python again.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the rust side's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced:
+  * kernel artifacts  — the standalone L1 split-KV decode-attention kernel
+    for each (B, L_K, H_Q, H_KV, D, s) variant the benches/examples need:
+    the Figure-3 u-curve sweep set and the Table-1 A/B pairs.
+  * model artifacts   — decode_step and prefill of the synthetic GQA model
+    for each (batch-bucket, num_splits) / (batch-bucket, prompt-bucket)
+    variant the serving engine routes to (vLLM-style shape bucketing, the
+    CUDA-Graph analog).
+  * weights.bin       — flat little-endian f32 dump of the model parameters
+    in ``param_specs`` order (the positional ABI the rust runtime follows).
+  * manifest.json     — index of everything above with full input/output
+    shape+dtype signatures.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts
+[--preset paper|small|gqa2] [--fast]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.flash_decode import flash_decode
+
+MANIFEST_VERSION = 2
+
+# (L_K, H_KV, num_splits) kernel variants for Table 1 A/B on the real CPU
+# backend. H_Q = 8 * H_KV (Llama-70B's 8:1 GQA ratio), D = 128, Batch = 1.
+TABLE1_KERNELS = [
+    (128, 1, 1), (128, 1, 3),
+    (256, 1, 1), (256, 1, 3),
+    (384, 1, 1), (384, 1, 3),
+    (512, 1, 1), (512, 1, 3),
+    (512, 2, 1), (512, 2, 3),
+    (512, 8, 1),
+    (2048, 1, 1), (2048, 1, 8),
+]
+
+# Figure 3 u-curve sweep: Batch=1, L_K=512, H_KV=1, D=128, s = 1..64.
+UCURVE_SPLITS = [1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64]
+
+# Serving shape buckets (vLLM-style): batch x num_splits for decode,
+# batch x prompt-length for prefill. Prompt buckets are power-of-two-ish so
+# a median-200-token chat prompt pays a 256^2 prefill, not 512^2 (§Perf
+# opt-1 in EXPERIMENTS.md: finer buckets cut TTFT ~2.8x on the CPU path).
+DECODE_BATCH_BUCKETS = [1, 2, 4]
+DECODE_SPLITS = [1, 3]
+PREFILL_PROMPT_BUCKETS = [64, 128, 256, 512]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals):
+    out = []
+    for a in avals:
+        dt = {"float32": "f32", "int32": "s32", "bfloat16": "bf16"}[str(a.dtype)]
+        out.append({"shape": [int(d) for d in a.shape], "dtype": dt})
+    return out
+
+
+def _lower_entry(name, kind, fn, example_args, meta, out_dir):
+    """jit-lower ``fn`` at ``example_args`` and write <name>.hlo.txt."""
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    in_avals = [jax.core.get_aval(a) for a in jax.tree_util.tree_leaves(example_args)]
+    out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+    entry = {
+        "name": name,
+        "kind": kind,
+        "hlo": fname,
+        "meta": meta,
+        "inputs": _sig(in_avals),
+        "outputs": _sig(out_avals),
+    }
+    print(f"  [{kind:7s}] {name}: {len(text) / 1e6:.2f} MB HLO "
+          f"({time.time() - t0:.1f}s)")
+    return entry
+
+
+def build_kernel_entries(out_dir, fast=False):
+    """Standalone attention-kernel artifacts (Table 1 + Figure 3 shapes)."""
+    entries = []
+    variants = []
+    for lk, hkv, s in TABLE1_KERNELS:
+        variants.append((1, lk, 8 * hkv, hkv, 128, s, "table1"))
+    for s in UCURVE_SPLITS:
+        if (512, 1, s) not in TABLE1_KERNELS:
+            variants.append((1, 512, 8, 1, 128, s, "ucurve"))
+    if fast:
+        variants = [v for v in variants if v[1] <= 512 and v[5] <= 4]
+
+    seen = set()
+    for b, lk, hq, hkv, d, s, group in variants:
+        name = f"attn_b{b}_lk{lk}_hq{hq}_hkv{hkv}_d{d}_s{s}"
+        if name in seen:
+            continue
+        seen.add(name)
+
+        def fn(q, k, v, kv_lens, _s=s):
+            return flash_decode(q, k, v, kv_lens, num_splits=_s)
+
+        args = (
+            jax.ShapeDtypeStruct((b, hq, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, lk, hkv, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, lk, hkv, d), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        )
+        meta = {"group": group, "batch": b, "l_k": lk, "h_q": hq,
+                "h_kv": hkv, "d": d, "num_splits": s}
+        entries.append(_lower_entry(name, "kernel", fn, args, meta, out_dir))
+    return entries
+
+
+def build_model_entries(cfg: M.ModelConfig, preset: str, out_dir, fast=False):
+    """decode_step / prefill artifacts + weights.bin for the serving model."""
+    params = M.init_params(cfg, seed=0)
+    flat = M.flatten_params(cfg, params)
+    specs = M.param_specs(cfg)
+
+    # weights.bin: positional f32 dump.
+    offset = 0
+    param_index = []
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for (name, shape), arr in zip(specs, flat):
+            data = np.asarray(arr, dtype="<f4").tobytes()
+            f.write(data)
+            param_index.append({
+                "name": name,
+                "shape": list(shape),
+                "offset_bytes": offset,
+                "size_bytes": len(data),
+            })
+            offset += len(data)
+    print(f"  [weights] {offset / 1e6:.1f} MB ({cfg.n_params() / 1e6:.1f}M params)")
+
+    param_structs = tuple(
+        jax.ShapeDtypeStruct(tuple(s["shape"]), jnp.float32) for s in param_index
+    )
+
+    entries = []
+    batches = [1] if fast else DECODE_BATCH_BUCKETS
+    splits = DECODE_SPLITS
+    prompts = [64] if fast else PREFILL_PROMPT_BUCKETS
+
+    for b in batches:
+        cache = jax.ShapeDtypeStruct(
+            (cfg.n_layers, b, cfg.max_seq, cfg.n_heads_kv, cfg.head_dim),
+            jnp.float32,
+        )
+        for s in splits:
+            def fn(tokens, positions, kv_k, kv_v, *ps, _s=s):
+                p = M.unflatten_params(cfg, list(ps))
+                return M.decode_step(cfg, p, tokens, positions, kv_k, kv_v,
+                                     num_splits=_s)
+
+            args = (
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+                cache, cache, *param_structs,
+            )
+            meta = {"preset": preset, "batch": b, "num_splits": s,
+                    "max_seq": cfg.max_seq}
+            entries.append(_lower_entry(
+                f"model_decode_b{b}_s{s}", "decode", fn, args, meta, out_dir))
+
+        for p_len in prompts:
+            def fn(tokens, kv_lens, kv_k, kv_v, *ps):
+                p = M.unflatten_params(cfg, list(ps))
+                return M.prefill(cfg, p, tokens, kv_lens, kv_k, kv_v)
+
+            args = (
+                jax.ShapeDtypeStruct((b, p_len), jnp.int32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+                cache, cache, *param_structs,
+            )
+            meta = {"preset": preset, "batch": b, "prompt_len": p_len,
+                    "max_seq": cfg.max_seq}
+            entries.append(_lower_entry(
+                f"model_prefill_b{b}_p{p_len}", "prefill", fn, args, meta,
+                out_dir))
+
+    model_block = {
+        "preset": preset,
+        "config": {
+            "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+            "n_heads_q": cfg.n_heads_q, "n_heads_kv": cfg.n_heads_kv,
+            "head_dim": cfg.head_dim, "ffn_dim": cfg.ffn_dim,
+            "vocab": cfg.vocab, "max_seq": cfg.max_seq,
+            "n_params": cfg.n_params(),
+        },
+        "weights": "weights.bin",
+        "params": param_index,
+    }
+    return entries, model_block
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default=os.environ.get("FA3_MODEL_PRESET", "paper"),
+                    choices=sorted(M.PRESETS))
+    ap.add_argument("--fast", action="store_true",
+                    help="small variant matrix for CI smoke runs")
+    ap.add_argument("--skip-model", action="store_true")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+    entries = []
+    model_block = None
+    if not args.skip_kernels:
+        print("== kernel artifacts")
+        entries += build_kernel_entries(args.out, fast=args.fast)
+    if not args.skip_model:
+        print(f"== model artifacts (preset={args.preset})")
+        cfg = M.PRESETS[args.preset]
+        m_entries, model_block = build_model_entries(
+            cfg, args.preset, args.out, fast=args.fast)
+        entries += m_entries
+
+    manifest = {"version": MANIFEST_VERSION, "entries": entries}
+    if model_block is not None:
+        manifest["model"] = model_block
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"== wrote {len(entries)} artifacts to {args.out} "
+          f"in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

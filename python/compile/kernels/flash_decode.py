@@ -1,0 +1,251 @@
+"""Split-KV flash decode attention as a Pallas kernel (Layer 1).
+
+This is the compute hot-spot of the paper: decode-step attention
+(L_Q = 1) over a KV cache, parallelized along the *sequence* dimension by a
+``num_splits`` scheduling parameter — the knob the paper's sequence-aware
+heuristic controls. Two kernels:
+
+  1. ``_split_kernel``  — grid ``(B, H_KV, num_splits)``. Each grid program
+     owns a contiguous slice of the KV cache and runs the streaming flash
+     loop over kBlockN=128 chunks, producing an *unnormalized-then-locally-
+     normalized* partial output plus its log-sum-exp (LSE).
+  2. ``_combine_kernel`` — grid ``(B, H_KV)``. Reduces the ``num_splits``
+     partials with the numerically-stable LSE-weighted combination (the
+     "split-combine" step whose overhead the paper's conservative s = 3
+     policy is balancing against occupancy).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): what FlashAttention-3
+expresses with CTAs on H100 SMs, we express as a Pallas *grid dimension* —
+each (b, h, split) program is the analog of one CTA, BlockSpec carves the
+HBM→VMEM schedule the CUDA version did with thread blocks, and ``pack_gqa``
+folds the H_Q/H_KV group into the query block so one program serves a whole
+KV-head group (the memory-layout trick FA3's ``pack_gqa`` flag controls).
+
+``interpret=True`` always: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute; interpret mode lowers to plain HLO so the
+same artifact runs under the rust runtime. Scheduling *latency* on H100 is
+modeled by ``rust/src/sim`` — this kernel is the *numerics* (and the HLO
+that actually executes on the CPU backend).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_decode", "split_geometry", "KV_BLOCK"]
+
+# KV-block granularity: kBlockN of the FA3 Hopper decode kernel. The FA3
+# heuristic's nblk = ceil(L_K / 128) counts these blocks; the paper's guard
+# fires on nblk == 4 (L_K in (384, 512]).
+KV_BLOCK = 128
+
+_NEG_INF = float("-inf")
+_MASK_VAL = -1e30  # finite mask sentinel used inside the streaming loop
+
+
+def split_geometry(l_k: int, num_splits: int, block_k: int = KV_BLOCK):
+    """Static split geometry for a sequence of length ``l_k``.
+
+    Returns ``(nblk, blocks_per_split, split_len, padded_len)`` where
+    ``split_len = blocks_per_split * block_k`` is the per-program KV slice
+    and ``padded_len = num_splits * split_len`` is what K/V are padded to.
+    Over-splitting (``num_splits > nblk``) is legal — surplus programs see
+    fully-masked slices and contribute LSE = -inf partials, exactly like
+    FA3 CTAs that exit early. This path is exercised by the paper's Figure 3
+    sweep up to s = 64 with nblk = 4.
+    """
+    if l_k < 1:
+        raise ValueError(f"l_k must be >= 1, got {l_k}")
+    if num_splits < 1:
+        raise ValueError(f"num_splits must be >= 1, got {num_splits}")
+    nblk = -(-l_k // block_k)
+    blocks_per_split = -(-nblk // num_splits)
+    split_len = blocks_per_split * block_k
+    padded_len = num_splits * split_len
+    return nblk, blocks_per_split, split_len, padded_len
+
+
+def _split_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    len_ref,
+    o_ref,
+    lse_ref,
+    *,
+    scale: float,
+    split_len: int,
+    block_k: int,
+):
+    """One (batch, kv-head, split) program: streaming flash over its slice."""
+    sp = pl.program_id(2)
+    kv_len = len_ref[0, 0]
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (g, D)
+    g = q.shape[0]
+
+    start = sp * split_len
+    nchunks = split_len // block_k
+
+    def body(i, carry):
+        m, l, acc = carry
+        k_blk = k_ref[0, pl.dslice(i * block_k, block_k), 0, :].astype(
+            jnp.float32
+        )  # (block_k, D)
+        v_blk = v_ref[0, pl.dslice(i * block_k, block_k), 0, :].astype(
+            jnp.float32
+        )
+        pos = start + i * block_k + jax.lax.iota(jnp.int32, block_k)
+        valid = pos < kv_len  # (block_k,)
+
+        s_ij = q @ k_blk.T  # (g, block_k)
+        s_ij = jnp.where(valid[None, :], s_ij, _MASK_VAL)
+
+        m_new = jnp.maximum(m, jnp.max(s_ij, axis=1))
+        # alpha rescales the running accumulator; exp(_MASK_VAL - m) == 0
+        # whenever anything valid has been seen, and exp(0) == 1 when both
+        # are still at the sentinel (harmless: l and acc are then zero).
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s_ij - m_new[:, None]) * valid[None, :].astype(jnp.float32)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ v_blk
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((g,), _MASK_VAL, dtype=jnp.float32)
+    l0 = jnp.zeros((g,), dtype=jnp.float32)
+    acc0 = jnp.zeros_like(q)
+    m, l, acc = jax.lax.fori_loop(0, nchunks, body, (m0, l0, acc0))
+
+    has_any = l > 0.0
+    safe_l = jnp.where(has_any, l, 1.0)
+    o_ref[0, 0, 0] = (acc / safe_l[:, None]).astype(o_ref.dtype)
+    lse_ref[0, 0, 0] = jnp.where(has_any, m + jnp.log(safe_l), _NEG_INF)
+
+
+def _combine_kernel(o_parts_ref, lse_ref, out_ref):
+    """LSE-weighted combination of per-split partials for one (b, h)."""
+    o_parts = o_parts_ref[0, 0].astype(jnp.float32)  # (s, g, D)
+    lse = lse_ref[0, 0]  # (s, g), f32
+
+    m_star = jnp.max(lse, axis=0)  # (g,)
+    m_safe = jnp.where(jnp.isfinite(m_star), m_star, 0.0)
+    w = jnp.exp(lse - m_safe[None, :])  # (s, g); exp(-inf - c) == 0
+    w = jnp.where(jnp.isfinite(lse), w, 0.0)
+    denom = jnp.sum(w, axis=0)  # (g,)
+    denom = jnp.where(denom > 0.0, denom, 1.0)
+    out = jnp.einsum("sg,sgd->gd", w, o_parts) / denom[:, None]
+    out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+def flash_decode(
+    q,
+    k,
+    v,
+    kv_lens=None,
+    *,
+    num_splits: int = 1,
+    block_k: int = KV_BLOCK,
+    softmax_scale=None,
+    pack_gqa: bool = True,
+    interpret: bool = True,
+):
+    """Split-KV flash decode attention.
+
+    Args:
+      q: ``(B, H_Q, D)`` decode-step queries.
+      k, v: ``(B, L_K, H_KV, D)`` KV cache (row-padded beyond ``kv_lens``).
+      kv_lens: optional ``(B,)`` valid lengths (int32). ``None`` ⇒ full L_K.
+      num_splits: sequence-split count ``s`` — the paper's control variable.
+        Must be static (each value is a distinct compiled artifact, matching
+        the precomputed-scheduler-metadata deployment path of §5.1).
+      block_k: KV streaming block (kBlockN), default 128.
+      softmax_scale: defaults to ``1/sqrt(D)``.
+      pack_gqa: fold the query-head group into each program (FA3's layout
+        flag). ``False`` runs one program per *query* head instead, i.e.
+        grid ``(B, H_Q, s)`` with a singleton group — more programs, more
+        partial traffic; the EA of §3 explores this knob.
+      interpret: keep True (see module docstring).
+
+    Returns:
+      ``(B, H_Q, D)`` attention output in ``q.dtype``.
+    """
+    b, h_q, d = q.shape
+    _, l_k, h_kv, dk = k.shape
+    if v.shape != k.shape:
+        raise ValueError(f"k/v shape mismatch: {k.shape} vs {v.shape}")
+    if dk != d:
+        raise ValueError(f"q/k head-dim mismatch: {d} vs {dk}")
+    if h_q % h_kv != 0:
+        raise ValueError(f"H_Q={h_q} not divisible by H_KV={h_kv}")
+    if softmax_scale is None:
+        softmax_scale = 1.0 / math.sqrt(d)
+
+    if not pack_gqa:
+        # One program per query head: replicate KV across the group and
+        # reinterpret every query head as its own KV head.
+        group = h_q // h_kv
+        if group > 1:
+            k = jnp.repeat(k, group, axis=2)
+            v = jnp.repeat(v, group, axis=2)
+        h_kv = h_q
+
+    g = h_q // h_kv
+    s = int(num_splits)
+    _, _, split_len, padded_len = split_geometry(l_k, s, block_k)
+
+    if kv_lens is None:
+        kv_lens = jnp.full((b,), l_k, dtype=jnp.int32)
+    kv_lens = kv_lens.astype(jnp.int32).reshape(b, 1)
+
+    if padded_len > l_k:
+        pad = [(0, 0), (0, padded_len - l_k), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+
+    qg = q.reshape(b, h_kv, g, d)
+
+    kernel = functools.partial(
+        _split_kernel, scale=softmax_scale, split_len=split_len, block_k=block_k
+    )
+    o_parts, lse = pl.pallas_call(
+        kernel,
+        grid=(b, h_kv, s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, split_len, 1, d), lambda bi, hi, si: (bi, si, hi, 0)),
+            pl.BlockSpec((1, split_len, 1, d), lambda bi, hi, si: (bi, si, hi, 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi, si: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g, d), lambda bi, hi, si: (bi, hi, si, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g), lambda bi, hi, si: (bi, hi, si, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h_kv, s, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h_kv, s, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, kv_lens)
+
+    if s == 1:
+        # No combine needed: the single partial is already normalized.
+        out = o_parts[:, :, 0]  # (B, H_KV, g, D)
+    else:
+        out = pl.pallas_call(
+            _combine_kernel,
+            grid=(b, h_kv),
+            in_specs=[
+                pl.BlockSpec((1, 1, s, g, d), lambda bi, hi: (bi, hi, 0, 0, 0)),
+                pl.BlockSpec((1, 1, s, g), lambda bi, hi: (bi, hi, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi: (bi, hi, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, h_kv, g, d), jnp.float32),
+            interpret=interpret,
+        )(o_parts, lse)
+
+    return out.reshape(b, h_q, d).astype(q.dtype)

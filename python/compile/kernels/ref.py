@@ -1,0 +1,73 @@
+"""Pure-jnp oracle for split-KV flash decode attention.
+
+This is the numerical ground truth the Pallas kernel (flash_decode.py) is
+validated against in python/tests/test_kernel.py. It implements exactly the
+semantics the kernel must honor:
+
+  * decode-step attention: one query token per sequence (L_Q = 1),
+  * grouped-query attention: H_Q query heads share H_KV key/value heads
+    (group size g = H_Q // H_KV),
+  * per-sequence KV lengths (``kv_lens``) for continuous batching: positions
+    >= kv_lens[b] are masked out,
+  * softmax computed in float32 regardless of input dtype.
+
+No splitting happens here — split-KV is a scheduling decision, and the whole
+point of the paper is that it must not change the math. The oracle is the
+s-independent answer every split count must reproduce.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention_decode_ref"]
+
+
+def attention_decode_ref(q, k, v, kv_lens=None, softmax_scale=None):
+    """Reference decode attention.
+
+    Args:
+      q: ``(B, H_Q, D)`` query for the single decode token.
+      k: ``(B, L_K, H_KV, D)`` key cache (possibly padded beyond kv_lens).
+      v: ``(B, L_K, H_KV, D)`` value cache.
+      kv_lens: optional ``(B,)`` int32 valid lengths; ``None`` means all of
+        ``L_K`` is valid for every sequence.
+      softmax_scale: optional scale; defaults to ``1/sqrt(D)``.
+
+    Returns:
+      ``(B, H_Q, D)`` attention output in ``q.dtype``.
+    """
+    b, h_q, d = q.shape
+    _, l_k, h_kv, _ = k.shape
+    if h_q % h_kv != 0:
+        raise ValueError(f"H_Q={h_q} not divisible by H_KV={h_kv}")
+    g = h_q // h_kv
+    if softmax_scale is None:
+        softmax_scale = 1.0 / (d**0.5)
+
+    qf = q.astype(jnp.float32).reshape(b, h_kv, g, d)
+    kf = k.astype(jnp.float32)  # (B, L, H_KV, D)
+    vf = v.astype(jnp.float32)
+
+    # scores: (B, H_KV, g, L)
+    scores = jnp.einsum("bhgd,blhd->bhgl", qf, kf) * softmax_scale
+
+    valid = None
+    if kv_lens is not None:
+        pos = jnp.arange(l_k, dtype=jnp.int32)
+        valid = pos[None, :] < kv_lens.astype(jnp.int32)[:, None]  # (B, L)
+        scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+
+    # Numerically stable softmax in f32.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    # Guard fully-masked rows (kv_len == 0): max is -inf, exp -> nan otherwise.
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(scores - m)
+    if valid is not None:
+        p = jnp.where(valid[:, None, None, :], p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    probs = p / denom
+
+    out = jnp.einsum("bhgl,blhd->bhgd", probs, vf)
+    return out.reshape(b, h_q, d).astype(q.dtype)

@@ -1,0 +1,126 @@
+"""AOT builder: manifest structure, weights ABI, HLO text validity.
+
+These tests run the builder in --fast mode into a temp dir and validate the
+contract the rust runtime (rust/src/runtime/artifacts.rs) depends on.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+PY_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--fast", "--preset", "small"],
+        cwd=PY_DIR, check=True, capture_output=True,
+    )
+    with open(out / "manifest.json") as f:
+        manifest = json.load(f)
+    return out, manifest
+
+
+def test_manifest_schema(built):
+    out, m = built
+    assert m["version"] == 2
+    assert m["entries"], "no artifacts built"
+    for e in m["entries"]:
+        assert e["kind"] in ("kernel", "decode", "prefill")
+        assert (out / e["hlo"]).exists()
+        for sig in e["inputs"] + e["outputs"]:
+            assert sig["dtype"] in ("f32", "s32", "bf16")
+            assert all(isinstance(d, int) and d >= 1 for d in sig["shape"])
+
+
+def test_hlo_text_is_parseable_text(built):
+    out, m = built
+    for e in m["entries"][:4]:
+        text = (out / e["hlo"]).read_text()
+        assert text.startswith("HloModule"), e["name"]
+        assert "ENTRY" in text
+
+
+def test_kernel_entry_signatures(built):
+    _, m = built
+    kernels = [e for e in m["entries"] if e["kind"] == "kernel"]
+    assert kernels
+    for e in kernels:
+        meta = e["meta"]
+        b, lk = meta["batch"], meta["l_k"]
+        hq, hkv, d = meta["h_q"], meta["h_kv"], meta["d"]
+        assert [s["shape"] for s in e["inputs"]] == [
+            [b, hq, d], [b, lk, hkv, d], [b, lk, hkv, d], [b],
+        ]
+        assert e["inputs"][3]["dtype"] == "s32"
+        assert e["outputs"][0]["shape"] == [b, hq, d]
+        assert hq == 8 * hkv  # Llama-70B 8:1 GQA ratio throughout Table 1
+
+
+def test_ucurve_and_table1_coverage_full_matrix():
+    """The non-fast matrix must cover Table 1 pairs and the Fig-3 sweep."""
+    from compile.aot import TABLE1_KERNELS, UCURVE_SPLITS
+
+    # Table 1's winning cells and their s=1 baselines must be present.
+    assert (512, 1, 1) in TABLE1_KERNELS and (512, 1, 3) in TABLE1_KERNELS
+    assert (512, 2, 1) in TABLE1_KERNELS and (512, 2, 3) in TABLE1_KERNELS
+    assert (512, 8, 1) in TABLE1_KERNELS  # unchanged control
+    # Fig 3 sweep spans s = 1 .. 64.
+    assert min(UCURVE_SPLITS) == 1 and max(UCURVE_SPLITS) == 64
+    assert 3 in UCURVE_SPLITS  # the paper's chosen split
+
+
+def test_model_block_weights_abi(built):
+    out, m = built
+    mb = m["model"]
+    assert mb["preset"] == "small"
+    size = os.path.getsize(out / mb["weights"])
+    # Offsets are contiguous, sizes consistent with shapes (f32 = 4 bytes).
+    offset = 0
+    for p in mb["params"]:
+        assert p["offset_bytes"] == offset
+        assert p["size_bytes"] == 4 * int(np.prod(p["shape"]))
+        offset += p["size_bytes"]
+    assert offset == size
+    assert sum(int(np.prod(p["shape"])) for p in mb["params"]) == \
+        mb["config"]["n_params"]
+
+
+def test_decode_entry_input_layout(built):
+    out, m = built
+    decs = [e for e in m["entries"] if e["kind"] == "decode"]
+    assert decs
+    n_params = len(m["model"]["params"])
+    cfg = m["model"]["config"]
+    for e in decs:
+        b = e["meta"]["batch"]
+        cache = [cfg["n_layers"], b, cfg["max_seq"], cfg["n_heads_kv"],
+                 cfg["head_dim"]]
+        ins = e["inputs"]
+        assert len(ins) == 4 + n_params
+        assert ins[0]["shape"] == [b] and ins[0]["dtype"] == "s32"   # tokens
+        assert ins[1]["shape"] == [b] and ins[1]["dtype"] == "s32"   # positions
+        assert ins[2]["shape"] == cache and ins[3]["shape"] == cache
+        outs = e["outputs"]
+        assert outs[0]["shape"] == [b, cfg["vocab"]]
+        assert outs[1]["shape"] == cache and outs[2]["shape"] == cache
+
+
+def test_weights_deterministic(built, tmp_path):
+    """Same seed ⇒ bit-identical weights.bin (reproducible artifacts)."""
+    out, m = built
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(tmp_path),
+         "--fast", "--preset", "small", "--skip-kernels"],
+        cwd=PY_DIR, check=True, capture_output=True,
+    )
+    a = (out / "weights.bin").read_bytes()
+    b = (tmp_path / "weights.bin").read_bytes()
+    assert a == b

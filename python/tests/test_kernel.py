@@ -1,0 +1,221 @@
+"""L1 correctness: the split-KV Pallas kernel vs the pure-jnp oracle.
+
+The paper's core safety claim is that ``num_splits`` is a *scheduling*
+parameter: any split count must reproduce the unsplit math bit-for-bit up
+to float tolerance. These tests sweep shapes, dtypes, and split counts
+(including the over-split s > nblk regime Figure 3 exercises up to s=64)
+with hypothesis, plus deterministic edge cases.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_decode import KV_BLOCK, flash_decode, split_geometry
+from compile.kernels.ref import attention_decode_ref
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _check(b, h_q, h_kv, d, l_k, s, dtype, seed=0, pack_gqa=True,
+           kv_lens=None, scale=None, atol=None):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h_q, d), dtype)
+    k = _rand(rng, (b, l_k, h_kv, d), dtype)
+    v = _rand(rng, (b, l_k, h_kv, d), dtype)
+    lens = None if kv_lens is None else jnp.asarray(kv_lens, jnp.int32)
+    out = flash_decode(q, k, v, lens, num_splits=s, pack_gqa=pack_gqa,
+                       softmax_scale=scale)
+    ref = attention_decode_ref(q, k, v, lens, softmax_scale=scale)
+    assert out.shape == ref.shape == (b, h_q, d)
+    assert out.dtype == q.dtype
+    if atol is None:
+        atol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=atol
+    )
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h_kv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 8]),
+    d=st.sampled_from([32, 64, 128]),
+    l_k=st.integers(1, 700),
+    s=st.integers(1, 12),
+    seed=st.integers(0, 2**31),
+)
+def test_matches_oracle_f32(b, h_kv, group, d, l_k, s, seed):
+    _check(b, group * h_kv, h_kv, d, l_k, s, jnp.float32, seed=seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l_k=st.integers(1, 600),
+    s=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_matches_oracle_bf16(l_k, s, seed):
+    _check(1, 8, 1, 128, l_k, s, jnp.bfloat16, seed=seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    l_k=st.integers(2, 500),
+    s=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+    data=st.data(),
+)
+def test_variable_kv_lens(b, l_k, s, seed, data):
+    lens = data.draw(
+        st.lists(st.integers(1, l_k), min_size=b, max_size=b), label="lens"
+    )
+    _check(b, 8, 1, 64, l_k, s, jnp.float32, seed=seed, kv_lens=lens)
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.integers(1, 64), seed=st.integers(0, 2**31))
+def test_split_count_invariance_paper_shape(s, seed):
+    """Figure 3's sweep domain: B=1, L_K=512, H_KV=1, D=128, s in 1..64.
+
+    Every split count must produce the same attention output — splitting is
+    scheduling, never math.
+    """
+    _check(1, 8, 1, 128, 512, s, jnp.float32, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic edge cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", [1, 2, 3, 4, 5, 8, 16])
+def test_table1_boundary_bucket(s):
+    """nblk = 4 boundary bucket (L_K = 512), H_KV in {1, 2}: the paper's
+    target shapes."""
+    _check(1, 8, 1, 128, 512, s, jnp.float32)
+    _check(1, 16, 2, 128, 512, s, jnp.float32)
+
+
+def test_single_token_cache():
+    _check(1, 8, 1, 64, 1, 1, jnp.float32)
+    _check(1, 8, 1, 64, 1, 4, jnp.float32)  # heavy over-split of 1 token
+
+
+def test_kv_len_one_of_many():
+    _check(2, 8, 2, 64, 300, 3, jnp.float32, kv_lens=[1, 300])
+
+
+def test_oversplit_beyond_nblk():
+    # nblk = ceil(130/128) = 2, s = 16: 14 splits see only padding.
+    _check(1, 4, 1, 32, 130, 16, jnp.float32)
+
+
+def test_pack_gqa_false_matches():
+    _check(2, 8, 2, 64, 200, 2, jnp.float32, pack_gqa=False)
+    _check(1, 8, 1, 128, 512, 3, jnp.float32, pack_gqa=False)
+
+
+def test_custom_softmax_scale():
+    _check(1, 8, 1, 64, 256, 2, jnp.float32, scale=0.5)
+    _check(1, 8, 1, 64, 256, 2, jnp.float32, scale=1.0 / math.sqrt(999))
+
+
+def test_mqa_vs_gqa_head_layouts():
+    for h_kv in (1, 2, 4, 8):
+        _check(1, 8, h_kv, 64, 384, 3, jnp.float32)
+
+
+def test_large_magnitude_scores_stable():
+    """Softmax stability: huge logits must not overflow through the split
+    combine (the LSE path)."""
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(100.0 * rng.standard_normal((1, 8, 64)), jnp.float32)
+    k = jnp.asarray(100.0 * rng.standard_normal((1, 256, 1, 64)), jnp.float32)
+    v = _rand(rng, (1, 256, 1, 64), jnp.float32)
+    out = flash_decode(q, k, v, num_splits=4)
+    ref = attention_decode_ref(q, k, v)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_identical_keys_uniform_attention():
+    """All-equal keys ⇒ output is the mean of values, for any split."""
+    b, h, d, l = 1, 4, 32, 256
+    q = jnp.ones((b, h, d), jnp.float32)
+    k = jnp.ones((b, l, 1, d), jnp.float32)
+    rng = np.random.default_rng(3)
+    v = _rand(rng, (b, l, 1, d), jnp.float32)
+    expect = np.broadcast_to(np.asarray(v.mean(axis=1)), (b, h, d))
+    for s in (1, 2, 3, 7):
+        out = flash_decode(q, k, v, num_splits=s)
+        np.testing.assert_allclose(np.asarray(out), expect, atol=1e-5)
+
+
+def test_determinism():
+    rng = np.random.default_rng(9)
+    q = _rand(rng, (1, 8, 64), jnp.float32)
+    k = _rand(rng, (1, 512, 1, 64), jnp.float32)
+    v = _rand(rng, (1, 512, 1, 64), jnp.float32)
+    a = flash_decode(q, k, v, num_splits=3)
+    b = flash_decode(q, k, v, num_splits=3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# split_geometry unit tests (the static shape arithmetic the rust heuristics
+# must agree with — mirrored in rust/src/heuristics/tiles.rs)
+# ---------------------------------------------------------------------------
+
+def test_split_geometry_basics():
+    # L_K = 512 -> nblk = 4 (the paper's boundary bucket).
+    assert split_geometry(512, 1) == (4, 4, 512, 512)
+    assert split_geometry(512, 3) == (4, 2, 256, 768)
+    assert split_geometry(512, 4) == (4, 1, 128, 512)
+    assert split_geometry(512, 64) == (4, 1, 128, 8192)
+    assert split_geometry(384, 1) == (3, 3, 384, 384)
+    assert split_geometry(1, 1) == (1, 1, 128, 128)
+
+
+@settings(max_examples=100, deadline=None)
+@given(l_k=st.integers(1, 10_000), s=st.integers(1, 64))
+def test_split_geometry_invariants(l_k, s):
+    nblk, bps, split_len, padded = split_geometry(l_k, s)
+    assert nblk == -(-l_k // KV_BLOCK)
+    assert split_len == bps * KV_BLOCK
+    assert padded == s * split_len
+    assert padded >= l_k                      # all tokens covered
+    assert bps == -(-nblk // s)               # ceil division
+    assert (s == 1) == (padded == split_len)
+
+
+def test_split_geometry_rejects_bad_args():
+    with pytest.raises(ValueError):
+        split_geometry(0, 1)
+    with pytest.raises(ValueError):
+        split_geometry(128, 0)
+
+
+def test_shape_validation_errors():
+    q = jnp.zeros((1, 8, 64), jnp.float32)
+    k = jnp.zeros((1, 128, 3, 64), jnp.float32)  # 8 % 3 != 0
+    with pytest.raises(ValueError):
+        flash_decode(q, k, k, num_splits=1)
+    k2 = jnp.zeros((1, 128, 1, 32), jnp.float32)  # head-dim mismatch
+    with pytest.raises(ValueError):
+        flash_decode(q, k2, k2, num_splits=1)
+    v_bad = jnp.zeros((1, 64, 1, 64), jnp.float32)
+    k3 = jnp.zeros((1, 128, 1, 64), jnp.float32)
+    with pytest.raises(ValueError):
+        flash_decode(q, k3, v_bad, num_splits=1)

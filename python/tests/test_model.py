@@ -1,0 +1,188 @@
+"""L2 correctness: the GQA transformer decode model.
+
+Key invariants:
+  * decode_step output is independent of ``num_splits`` (the scheduling
+    knob must never change the math — the paper's safety property lifted
+    to the whole model),
+  * prefill(prompt) ≡ decoding the prompt token-by-token,
+  * batch elements are independent (continuous-batching prerequisite),
+  * parameter ABI (param_specs ordering) is stable and complete.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+TINY = M.ModelConfig(
+    n_layers=2, d_model=64, n_heads_q=4, n_heads_kv=1, head_dim=16,
+    ffn_dim=128, vocab=97, max_seq=64,
+)
+TINY_GQA = M.ModelConfig(
+    n_layers=2, d_model=64, n_heads_q=4, n_heads_kv=2, head_dim=16,
+    ffn_dim=128, vocab=97, max_seq=64,
+)
+
+
+def _fresh_cache(cfg, b):
+    shape = (cfg.n_layers, b, cfg.max_seq, cfg.n_heads_kv, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def _decode_n(cfg, params, tokens, positions, kv_k, kv_v, n, num_splits):
+    outs = []
+    for _ in range(n):
+        logits, kv_k, kv_v = M.decode_step(
+            cfg, params, tokens, positions, kv_k, kv_v, num_splits=num_splits
+        )
+        tokens = jnp.argmax(logits, -1).astype(jnp.int32)
+        positions = positions + 1
+        outs.append(np.asarray(logits))
+    return outs, kv_k, kv_v
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_GQA], ids=["mqa", "gqa2"])
+@pytest.mark.parametrize("s", [2, 3, 5])
+def test_decode_split_invariance(cfg, s):
+    params = M.init_params(cfg, seed=1)
+    rng = np.random.default_rng(0)
+    b = 2
+    kv_k, kv_v = _fresh_cache(cfg, b)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b,)), jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    ref, _, _ = _decode_n(cfg, params, toks, pos, kv_k, kv_v, 4, 1)
+    got, _, _ = _decode_n(cfg, params, toks, pos, kv_k, kv_v, 4, s)
+    for a, b_ in zip(ref, got):
+        np.testing.assert_allclose(a, b_, atol=1e-4)
+
+
+def test_prefill_equals_decode_loop():
+    cfg, params = TINY, M.init_params(TINY, seed=2)
+    rng = np.random.default_rng(1)
+    p_len = 10
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, p_len)), jnp.int32)
+    kv_k, kv_v = _fresh_cache(cfg, 1)
+
+    lg_p, k_p, v_p = M.prefill(cfg, params, prompt, jnp.asarray([p_len], jnp.int32),
+                               kv_k, kv_v)
+    k_d, v_d = kv_k, kv_v
+    for t in range(p_len):
+        lg_d, k_d, v_d = M.decode_step(
+            cfg, params, prompt[:, t], jnp.asarray([t], jnp.int32), k_d, v_d
+        )
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_d), atol=1e-3)
+    # Cache contents for the prompt region must agree too.
+    np.testing.assert_allclose(
+        np.asarray(k_p[:, :, :p_len]), np.asarray(k_d[:, :, :p_len]), atol=1e-3
+    )
+    np.testing.assert_allclose(
+        np.asarray(v_p[:, :, :p_len]), np.asarray(v_d[:, :, :p_len]), atol=1e-3
+    )
+
+
+def test_prefill_respects_padding():
+    """Right-padding beyond kv_lens must not influence the last-token logits."""
+    cfg, params = TINY, M.init_params(TINY, seed=3)
+    rng = np.random.default_rng(2)
+    true_len = 6
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, true_len)), jnp.int32)
+    padded_a = jnp.pad(prompt, ((0, 0), (0, 6)), constant_values=0)
+    padded_b = jnp.pad(prompt, ((0, 0), (0, 6)), constant_values=42)
+    kv_k, kv_v = _fresh_cache(cfg, 1)
+    lens = jnp.asarray([true_len], jnp.int32)
+    lg_a, _, _ = M.prefill(cfg, params, padded_a, lens, kv_k, kv_v)
+    lg_b, _, _ = M.prefill(cfg, params, padded_b, lens, kv_k, kv_v)
+    np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b), atol=1e-5)
+
+
+def test_batch_independence():
+    """Row b of a batched decode must equal the same sequence decoded alone."""
+    cfg, params = TINY, M.init_params(TINY, seed=4)
+    rng = np.random.default_rng(3)
+    b = 3
+    kv_k, kv_v = _fresh_cache(cfg, b)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b,)), jnp.int32)
+    pos = jnp.asarray([0, 0, 0], jnp.int32)
+    lg_batch, _, _ = M.decode_step(cfg, params, toks, pos, kv_k, kv_v)
+    for row in range(b):
+        k1, v1 = _fresh_cache(cfg, 1)
+        lg_one, _, _ = M.decode_step(
+            cfg, params, toks[row:row + 1], pos[row:row + 1], k1, v1
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg_batch[row]), np.asarray(lg_one[0]), atol=1e-4
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), s=st.integers(1, 6))
+def test_decode_finite_logits(seed, s):
+    cfg, params = TINY, M.init_params(TINY, seed=5)
+    rng = np.random.default_rng(seed)
+    kv_k, kv_v = _fresh_cache(cfg, 1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1,)), jnp.int32)
+    outs, _, _ = _decode_n(cfg, params, toks, jnp.zeros((1,), jnp.int32),
+                           kv_k, kv_v, 3, s)
+    for o in outs:
+        assert np.isfinite(o).all()
+
+
+def test_param_specs_abi():
+    cfg = TINY
+    specs = M.param_specs(cfg)
+    names = [n for n, _ in specs]
+    # Stable ordering: embed first, w_out last, 9 tensors per layer.
+    assert names[0] == "embed"
+    assert names[-1] == "w_out"
+    assert names[-2] == "out_norm"
+    assert len(names) == 2 * 9 + 3
+    assert len(set(names)) == len(names)
+    # n_params matches the spec shapes exactly.
+    total = sum(int(np.prod(s)) for _, s in specs)
+    assert total == cfg.n_params()
+
+
+def test_flatten_roundtrip():
+    cfg = TINY
+    params = M.init_params(cfg, seed=6)
+    flat = M.flatten_params(cfg, params)
+    back = M.unflatten_params(cfg, flat)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(back[k]))
+    with pytest.raises(ValueError):
+        M.unflatten_params(cfg, flat[:-1])
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        M.ModelConfig(n_heads_q=3, n_heads_kv=2)
+    with pytest.raises(ValueError):
+        M.ModelConfig(n_heads_q=8, n_heads_kv=1, head_dim=100, d_model=1024)
+
+
+def test_presets_sane():
+    for name, cfg in M.PRESETS.items():
+        assert cfg.n_params() > 0
+        assert cfg.n_heads_q % cfg.n_heads_kv == 0
+    paper = M.PRESETS["paper"]
+    # The paper's per-device Llama-70B/TP-8 attention geometry.
+    assert (paper.n_heads_q, paper.n_heads_kv, paper.head_dim) == (8, 1, 128)
+
+
+def test_rope_rotation_property():
+    """RoPE must preserve vector norm (it is a rotation)."""
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((2, 4, 16)), jnp.float32)
+    pos = jnp.asarray([3, 11], jnp.int32)
+    y = M._rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # Position 0 is the identity.
+    y0 = M._rope(x, jnp.zeros((2,), jnp.int32), 10000.0)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(x), atol=1e-6)

@@ -1,0 +1,30 @@
+//! Bench: ablation studies over the design choices (DESIGN.md §Perf /
+//! experiment index): hardware scale, boundary sweep, pack_gqa layout,
+//! sm_margin, and the policy ladder from conservative patch to learned
+//! table to evolved genome.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use fa3_split::bench_harness::ablations;
+use fa3_split::sim::Simulator;
+
+fn main() {
+    let sim = Simulator::h100();
+
+    println!("== A1: hardware scale (same boundary cell across GPUs, §2.2) ==");
+    ablations::hardware_scale().print();
+
+    println!("\n== A2: boundary sweep (§4.1 — where behavior changes) ==");
+    ablations::boundary_sweep(&sim).print();
+
+    println!("\n== A3: pack_gqa layout ablation (§3.1 knob) ==");
+    ablations::pack_gqa_ablation(&sim).print();
+
+    println!("\n== A4: sm_margin ablation at the boundary shape (§3.1 knob) ==");
+    ablations::sm_margin_ablation(&sim).print();
+
+    println!("\n== A5: policy ladder (§4.1/§5.2 future work realized) ==");
+    ablations::policy_ladder(&sim).print();
+
+    println!("\nOK");
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate Figure 3 (extended split sweep s = 1..64 for
+//! Batch = 1, L_K = 512, H_KV = 1, D = 128, precomputed metadata).
+//!
+//! Run: `cargo bench --bench fig3_ucurve`
+
+use fa3_split::bench_harness::ucurve;
+use fa3_split::sim::Simulator;
+
+fn main() {
+    let sim = Simulator::h100();
+    println!("== Figure 3: split sweep, B=1 L_K=512 H_KV=1 D=128 (simulated H100) ==\n");
+    let points = ucurve::run(&sim, 301, 0xF163);
+    print!("{}", ucurve::render_table(&points));
+    println!();
+    println!("{}", ucurve::render_plot(&points, 14));
+    let best = points
+        .iter()
+        .cloned()
+        .reduce(|a, b| if b.latency_us < a.latency_us { b } else { a })
+        .unwrap();
+    let p1 = points[0];
+    let p3 = points.iter().find(|p| p.num_splits == 3).unwrap();
+    println!(
+        "s=1: {:.2}µs | s=3 (paper's choice): {:.2}µs | best: s={} at {:.2}µs (s=3 within {:.1}% of best)",
+        p1.latency_us,
+        p3.latency_us,
+        best.num_splits,
+        best.latency_us,
+        (p3.latency_us - best.latency_us) / best.latency_us * 100.0
+    );
+    match ucurve::verify(&points) {
+        Ok(()) => println!("OK: steep drop from s=1, shallow plateau, s=3 inside it"),
+        Err(e) => {
+            eprintln!("FIGURE 3 SHAPE VIOLATION: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Bench: the L3 hot path itself — the split decision and scheduler-
+//! metadata construction that run on every decode step. The paper's patch
+//! must not make dispatch slower: both policies should decide in
+//! nanoseconds (DESIGN.md §Perf target: < 100 ns).
+//!
+//! Run: `cargo bench --bench heuristic_hot_path`
+
+use fa3_split::bench_harness::Bencher;
+use fa3_split::heuristics::tiles::DecodeShape;
+use fa3_split::heuristics::{SequenceAwarePolicy, SplitPolicy, StandardPolicy, H100_NUM_SMS};
+
+fn main() {
+    println!("== Heuristic hot path (per-launch decision cost) ==\n");
+    let b = Bencher { warmup_iters: 1_000, samples: 60, batch_iters: 10_000 };
+
+    let boundary = DecodeShape::llama70b_tp8(1, 512);
+    let long = DecodeShape::llama70b_tp8(1, 4096);
+    let dense = DecodeShape::decode(8, 2048, 64, 8, 128);
+
+    let r1 = b.run("standard.num_splits  (L_K=512 guard path)", || {
+        StandardPolicy.num_splits(&boundary, H100_NUM_SMS, true)
+    });
+    let r2 = b.run("patched.num_splits   (L_K=512 override path)", || {
+        SequenceAwarePolicy.num_splits(&boundary, H100_NUM_SMS, true)
+    });
+    let r3 = b.run("standard.num_splits  (L_K=4096 efficiency loop)", || {
+        StandardPolicy.num_splits(&long, H100_NUM_SMS, true)
+    });
+    b.run("patched.num_splits   (L_K=4096 efficiency loop)", || {
+        SequenceAwarePolicy.num_splits(&long, H100_NUM_SMS, true)
+    });
+    b.run("patched.num_splits   (dense B=8 H_KV=8)", || {
+        SequenceAwarePolicy.num_splits(&dense, H100_NUM_SMS, true)
+    });
+    b.run("patched.metadata     (full metadata build)", || {
+        SequenceAwarePolicy.metadata(&boundary, 0, true)
+    });
+
+    println!();
+    let guard_paths_ok = r1.mean_ns() < 100.0 && r2.mean_ns() < 100.0;
+    println!(
+        "guard-path decisions: standard {:.1} ns, patched {:.1} ns (target < 100 ns: {})",
+        r1.mean_ns(),
+        r2.mean_ns(),
+        if guard_paths_ok { "OK" } else { "MISS" }
+    );
+    println!(
+        "efficiency-loop decision: {:.1} ns (allocating loop; amortized once per shape by the scheduler cache)",
+        r3.mean_ns()
+    );
+    if !guard_paths_ok {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate §5.3's 160-configuration regression sweep
+//! (Batch ∈ {1,2,4,8} × L_K ∈ {128..8192} × H_KV ∈ {1,2,4,8,32}).
+//!
+//! Run: `cargo bench --bench regression_sweep`
+
+use fa3_split::bench_harness::regression;
+use fa3_split::sim::Simulator;
+
+fn main() {
+    let sim = Simulator::h100();
+    println!("== §5.3: 160-config safety/regression sweep (simulated H100) ==\n");
+    let cells = regression::run(&sim, 201, 0x5E53);
+    print!("{}", regression::render(&cells));
+    match regression::verify(&cells) {
+        Ok(()) => println!("OK: >= 0.99x everywhere; wins exactly at the low-tile L_K=512 cells"),
+        Err(e) => {
+            eprintln!("REGRESSION SWEEP VIOLATION: {e}");
+            std::process::exit(1);
+        }
+    }
+}

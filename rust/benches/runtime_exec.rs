@@ -1,0 +1,78 @@
+//! Bench: real PJRT execution latency of the AOT artifacts on the CPU
+//! backend — the end-to-end request path the rust coordinator drives.
+//!
+//! CPU absolute times are NOT the paper's H100 numbers (the simulator
+//! reproduces those); this bench tracks the *runtime's* cost structure:
+//! kernel execute, decode-step execute with persistent weights, and the
+//! one-time weight upload. Requires `make artifacts`.
+//!
+//! Run: `cargo bench --bench runtime_exec`
+
+use fa3_split::bench_harness::Bencher;
+use fa3_split::runtime::{HostTensor, Registry};
+use fa3_split::util::prng::Rng;
+use std::path::PathBuf;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built — run `make artifacts` first");
+        return;
+    }
+    let reg = Registry::open(&dir).expect("open registry");
+    let mut rng = Rng::new(0xBE7C);
+
+    println!("== PJRT runtime execution (CPU backend; structure, not H100 absolutes) ==\n");
+    let b = Bencher { warmup_iters: 5, samples: 30, batch_iters: 3 };
+
+    // Attention kernel artifacts: s = 1 vs s = 3 at the paper shape.
+    let rand = |rng: &mut Rng, shape: &[usize]| {
+        let n: usize = shape.iter().product();
+        HostTensor::f32(shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+    };
+    let q = rand(&mut rng, &[1, 8, 128]);
+    let k = rand(&mut rng, &[1, 512, 1, 128]);
+    let v = rand(&mut rng, &[1, 512, 1, 128]);
+    let lens = HostTensor::s32(&[1], vec![512]).unwrap();
+    for s in [1usize, 3] {
+        if let Some(entry) = reg.manifest.find_kernel(1, 512, 1, s) {
+            let exe = reg.executor_for(entry).expect("compile");
+            let args = [q.clone(), k.clone(), v.clone(), lens.clone()];
+            b.run(&format!("attn kernel L_K=512 s={s}       (execute)"), || {
+                exe.execute(&args).unwrap()
+            });
+        }
+    }
+
+    // Weight upload (one-time cost) + decode step with persistent weights.
+    if reg.manifest.model.is_some() {
+        let t0 = std::time::Instant::now();
+        let weights = reg.weights().expect("weights");
+        println!(
+            "weights: {} params uploaded once in {:.1} ms",
+            weights.len(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+
+        if let Some(entry) = reg.manifest.find_decode_bucket(1, 1) {
+            let cfg = &reg.manifest.model.as_ref().unwrap().config;
+            let bsz = entry.meta.batch.unwrap();
+            let cache_shape =
+                [cfg.n_layers, bsz, cfg.max_seq, cfg.n_heads_kv, cfg.head_dim];
+            let tokens = HostTensor::s32(&[bsz], vec![1; bsz]).unwrap();
+            let positions = HostTensor::s32(&[bsz], vec![0; bsz]).unwrap();
+            let kv_k = HostTensor::zeros_f32(&cache_shape);
+            let kv_v = HostTensor::zeros_f32(&cache_shape);
+            let name = entry.name.clone();
+            let heavy = Bencher::heavy();
+            heavy.run("model decode step b=1 s=1      (execute_model)", || {
+                reg.execute_model(
+                    &name,
+                    &[tokens.clone(), positions.clone(), kv_k.clone(), kv_v.clone()],
+                )
+                .unwrap()
+            });
+        }
+    }
+    println!("\nOK");
+}

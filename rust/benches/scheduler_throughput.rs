@@ -1,0 +1,66 @@
+//! Bench: coordinator throughput — simulator evals/s (the EA's budget),
+//! engine step rate in simulated mode, block-manager ops, and the batcher
+//! plan. L3 must never be the bottleneck (DESIGN.md §Perf: the simulator
+//! needs >= 1M kernel evals/s for the evolutionary search).
+//!
+//! Run: `cargo bench --bench scheduler_throughput`
+
+use fa3_split::bench_harness::Bencher;
+use fa3_split::coordinator::{
+    BlockManager, BlockManagerConfig, Engine, EngineConfig, Request,
+};
+use fa3_split::coordinator::scheduler::AttnGeometry;
+use fa3_split::heuristics::tiles::DecodeShape;
+use fa3_split::heuristics::{SchedulerMetadata, SequenceAwarePolicy};
+use fa3_split::sim::Simulator;
+
+fn main() {
+    println!("== Coordinator / simulator throughput ==\n");
+    let b = Bencher { warmup_iters: 500, samples: 50, batch_iters: 2_000 };
+
+    // 1. Simulator kernel eval (the EA fitness inner loop).
+    let sim = Simulator::h100();
+    let md = SchedulerMetadata::forced(DecodeShape::llama70b_tp8(1, 512), 3);
+    let r_sim = b.run("sim.kernel_us        (one launch eval)", || sim.kernel_us(&md));
+    let evals_per_s = 1e9 / r_sim.mean_ns();
+
+    // 2. Block manager admit/release cycle.
+    let mut mgr = BlockManager::new(BlockManagerConfig::default());
+    let mut id = 0u64;
+    b.run("block_manager        (admit+release)", || {
+        id += 1;
+        mgr.admit(id, 200, 64).unwrap();
+        mgr.release(id).unwrap();
+    });
+
+    // 3. Simulated engine: full serving steps (admit→schedule→decode→
+    //    sample→retire) per second.
+    let geometry = AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 };
+    let heavy = Bencher { warmup_iters: 1, samples: 15, batch_iters: 1 };
+    let r_engine = heavy.run("engine.run           (sim backend, 16 reqs x 32 tok)", || {
+        let mut e = Engine::with_simulator(
+            Simulator::h100(),
+            Box::new(SequenceAwarePolicy),
+            geometry,
+            vec![1, 3],
+            EngineConfig::default(),
+        );
+        for i in 0..16u64 {
+            e.submit(Request::new(i, vec![1; 100], 32));
+        }
+        e.run_until_idle().unwrap().len()
+    });
+    // 16 requests x 32 tokens but batched 4-wide: ~128 decode steps/run.
+    let steps_per_s = 128.0 * 1e9 / r_engine.mean_ns();
+
+    println!();
+    println!(
+        "simulator: {:.2}M kernel evals/s (target >= 1M: {})",
+        evals_per_s / 1e6,
+        if evals_per_s >= 1e6 { "OK" } else { "MISS" }
+    );
+    println!("engine (sim backend): ~{steps_per_s:.0} full serving steps/s");
+    if evals_per_s < 1e6 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,87 @@
+//! Bench: serving-level A/B on the simulated H100 — the paper's kernel
+//! effect projected through the full coordinator (continuous batching,
+//! prefill, scheduling) under three workload regimes.
+//!
+//! Run: `cargo bench --bench serving_ab`
+
+use fa3_split::coordinator::scheduler::AttnGeometry;
+use fa3_split::coordinator::{BatcherConfig, Engine, EngineConfig};
+use fa3_split::heuristics::{SequenceAwarePolicy, SplitPolicy, StandardPolicy};
+use fa3_split::sim::Simulator;
+use fa3_split::util::table::{speedup, us, Align, Table};
+use fa3_split::workload::ChatWorkload;
+
+fn run(policy: Box<dyn SplitPolicy>, workload: &ChatWorkload, max_batch: usize) -> f64 {
+    let buckets: Vec<usize> = [1usize, 2, 4, 8].into_iter().filter(|&b| b <= max_batch).collect();
+    let mut engine = Engine::with_simulator(
+        Simulator::h100(),
+        policy,
+        AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 },
+        vec![1, 3],
+        EngineConfig {
+            batcher: BatcherConfig { max_batch: *buckets.last().unwrap(), batch_buckets: buckets },
+            ..Default::default()
+        },
+    );
+    for g in workload.generate() {
+        engine.submit(g.request);
+    }
+    engine.run_until_idle().unwrap();
+    engine.metrics.tpot().map(|s| s.mean).unwrap_or(0.0)
+}
+
+fn main() {
+    println!("== Serving-level A/B (simulated H100; attention TPOT per request) ==\n");
+    let regimes = [
+        (
+            "paper regime: B=1 chat, prompts ~400",
+            ChatWorkload {
+                n_requests: 12,
+                prompt_median: 400,
+                output_mean: 96,
+                output_cap: 96,
+                seed: 0xAB,
+                ..Default::default()
+            },
+            1usize,
+        ),
+        (
+            "short chat: B=1, prompts ~150",
+            ChatWorkload {
+                n_requests: 12,
+                prompt_median: 150,
+                output_mean: 64,
+                output_cap: 64,
+                seed: 0xAC,
+                ..Default::default()
+            },
+            1usize,
+        ),
+        (
+            "batched: up to B=4, prompts ~400",
+            ChatWorkload {
+                n_requests: 12,
+                prompt_median: 400,
+                output_mean: 96,
+                output_cap: 96,
+                seed: 0xAD,
+                ..Default::default()
+            },
+            4usize,
+        ),
+    ];
+
+    let mut t = Table::new(&["Workload", "Std TPOT (µs)", "Patched TPOT (µs)", "Speedup"])
+        .align(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+    for (name, workload, max_batch) in regimes {
+        let a = run(Box::new(StandardPolicy), &workload, max_batch);
+        let b = run(Box::new(SequenceAwarePolicy), &workload, max_batch);
+        t.row(&[name.to_string(), us(a), us(b), speedup(a / b)]);
+    }
+    t.print();
+    println!(
+        "\nExpected shape: a clear win in the paper regime (requests crossing the\n\
+         L_K=385..512 bucket at B=1), ~1.00x for short chat (guard 1 region) and\n\
+         for batch-4 (tiles >= 4 — saturated boundary, Guard 2)."
+    );
+}

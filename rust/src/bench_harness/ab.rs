@@ -1,0 +1,70 @@
+//! Interleaved A/B measurement on the simulator.
+//!
+//! §5 methodology: "CUDA Graph replay and A/B-interleaved timing within
+//! the Python bindings to measure pure kernel execution times". We keep
+//! the interleaving and the median-of-replays reduction, swapping graph
+//! replay for the calibrated latency model plus its measurement-noise
+//! stream — so the harness *methodology* is the paper's even though the
+//! substrate is simulated (DESIGN.md §Substitutions).
+
+use crate::heuristics::SchedulerMetadata;
+use crate::sim::Simulator;
+use crate::util::prng::Rng;
+use crate::util::stats::median;
+
+/// Interleaved A/B: alternate noisy "replays" of the two schedules and
+/// return (median_a_us, median_b_us).
+pub fn ab_median_us(
+    sim: &Simulator,
+    a: &SchedulerMetadata,
+    b: &SchedulerMetadata,
+    replays: usize,
+    rng: &mut Rng,
+) -> (f64, f64) {
+    assert!(replays > 0);
+    let mut ta = Vec::with_capacity(replays);
+    let mut tb = Vec::with_capacity(replays);
+    for _ in 0..replays {
+        // Interleave: A then B within each replay round, sharing the noise
+        // stream's drift exactly like back-to-back graph launches.
+        ta.push(sim.kernel_us_noisy(a, rng));
+        tb.push(sim.kernel_us_noisy(b, rng));
+    }
+    (median(&ta), median(&tb))
+}
+
+/// Median of noisy replays of a single schedule.
+pub fn median_us(sim: &Simulator, md: &SchedulerMetadata, replays: usize, rng: &mut Rng) -> f64 {
+    let samples: Vec<f64> = (0..replays).map(|_| sim.kernel_us_noisy(md, rng)).collect();
+    median(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::heuristics::tiles::DecodeShape;
+
+    #[test]
+    fn medians_converge_to_model() {
+        let sim = Simulator::h100();
+        let shape = DecodeShape::llama70b_tp8(1, 512);
+        let a = SchedulerMetadata::forced(shape, 1);
+        let b = SchedulerMetadata::forced(shape, 3);
+        let mut rng = Rng::new(1);
+        let (ma, mb) = ab_median_us(&sim, &a, &b, 201, &mut rng);
+        let clean_a = sim.kernel_us(&a);
+        let clean_b = sim.kernel_us(&b);
+        assert!((ma - clean_a).abs() / clean_a < 0.01);
+        assert!((mb - clean_b).abs() / clean_b < 0.01);
+        assert!(ma > mb, "s=1 must be slower at the boundary bucket");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let sim = Simulator::h100();
+        let md = SchedulerMetadata::forced(DecodeShape::llama70b_tp8(1, 256), 1);
+        let x = median_us(&sim, &md, 51, &mut Rng::new(9));
+        let y = median_us(&sim, &md, 51, &mut Rng::new(9));
+        assert_eq!(x, y);
+    }
+}

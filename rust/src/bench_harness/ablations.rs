@@ -1,0 +1,207 @@
+//! Ablation studies for the design choices DESIGN.md calls out.
+//!
+//! A1 — **Hardware scale** (§2.2: "This static threshold overlooks the
+//!      hardware scale of H100"): the same A/B on A100 (108 SMs), H100
+//!      PCIe (114), H100 SXM (132) — the win exists wherever the grid
+//!      underfills the part, and grows with SM count.
+//! A2 — **Boundary sweep** (§4.1): L_K ∈ {128..640} × policy, showing
+//!      unchanged behavior below the bucket, the win inside it, and the
+//!      efficiency-loop takeover beyond it.
+//! A3 — **pack_gqa layout** (§3.1 knob): packed vs unpacked grids across
+//!      H_KV, quantifying why the evolved candidates kept pack_gqa=True.
+//! A4 — **sm_margin** (§3.1 knob): reserved-SM sweep at the boundary
+//!      shape, showing why the search settled on margin 0.
+//! A5 — **Policy ladder** (§4.1/§5.2 future work): standard → conservative
+//!      patch → learned table → evolved genome, TPOT on the chat panel.
+
+use crate::evolve::{Evaluator, Genome};
+use crate::heuristics::extended::TuneConfig;
+use crate::heuristics::tiles::DecodeShape;
+use crate::heuristics::{
+    ExtendedPolicy, SchedulerMetadata, SequenceAwarePolicy, SplitPolicy, StandardPolicy,
+};
+use crate::sim::{Calibration, GpuSpec, Simulator};
+use crate::util::table::{speedup, us, Align, Table};
+
+/// A1: boundary-cell speedup across GPU generations.
+pub fn hardware_scale() -> Table {
+    let shape = DecodeShape::llama70b_tp8(1, 512);
+    let mut t = Table::new(&["GPU", "SMs", "Std (µs)", "Patched (µs)", "Speedup", "Occupancy s=1"])
+        .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for gpu in [GpuSpec::a100_sxm(), GpuSpec::h100_pcie(), GpuSpec::h100_sxm()] {
+        let sim = Simulator::new(gpu.clone(), Calibration::paper_h100());
+        let md_std = StandardPolicy.metadata(&shape, 0, true);
+        let md_pat = SequenceAwarePolicy.metadata(&shape, 0, true);
+        let a = sim.kernel_us(&md_std);
+        let b = sim.kernel_us(&md_pat);
+        t.row(&[
+            gpu.name.to_string(),
+            gpu.num_sms.to_string(),
+            us(a),
+            us(b),
+            speedup(a / b),
+            format!("{:.1}%", 100.0 / gpu.num_sms as f64),
+        ]);
+    }
+    t
+}
+
+/// A2: the §4.1 boundary sweep (which L_K change behavior, and how).
+pub fn boundary_sweep(sim: &Simulator) -> Table {
+    let mut t = Table::new(&["L_K", "nblk", "s std", "s pat", "Std (µs)", "Patched (µs)", "Speedup"])
+        .align(&[Align::Right; 7]);
+    for l_k in [128usize, 256, 384, 448, 512, 576, 640, 1024] {
+        let shape = DecodeShape::llama70b_tp8(1, l_k);
+        let md_std = StandardPolicy.metadata(&shape, 0, true);
+        let md_pat = SequenceAwarePolicy.metadata(&shape, 0, true);
+        let a = sim.kernel_us(&md_std);
+        let b = sim.kernel_us(&md_pat);
+        t.row(&[
+            l_k.to_string(),
+            shape.nblk().to_string(),
+            md_std.num_splits.to_string(),
+            md_pat.num_splits.to_string(),
+            us(a),
+            us(b),
+            speedup(a / b),
+        ]);
+    }
+    t
+}
+
+/// A3: pack_gqa on/off across H_KV at the boundary length.
+pub fn pack_gqa_ablation(sim: &Simulator) -> Table {
+    let mut t = Table::new(&["H_KV", "tiles packed", "tiles unpacked", "Packed (µs)", "Unpacked (µs)", "Packed win"])
+        .align(&[Align::Right; 6]);
+    for h_kv in [1usize, 2, 4, 8] {
+        let shape = DecodeShape::decode(1, 512, 8 * h_kv, h_kv, 128);
+        let s_packed = SequenceAwarePolicy.num_splits(&shape, 132, true);
+        let s_unpacked = SequenceAwarePolicy.num_splits(&shape, 132, false);
+        let md_p = SchedulerMetadata {
+            shape,
+            num_splits: s_packed,
+            pack_gqa: true,
+            sm_margin: 0,
+            path: crate::heuristics::DispatchPath::PrecomputedMetadata,
+        };
+        let md_u = SchedulerMetadata { pack_gqa: false, num_splits: s_unpacked, ..md_p };
+        let a = sim.kernel_us(&md_p);
+        let b = sim.kernel_us(&md_u);
+        t.row(&[
+            h_kv.to_string(),
+            shape.total_mblocks(true).to_string(),
+            shape.total_mblocks(false).to_string(),
+            us(a),
+            us(b),
+            speedup(b / a),
+        ]);
+    }
+    t
+}
+
+/// A4: sm_margin sweep — at the paper's boundary shape (2 CTAs: reserving
+/// SMs costs nothing, which is why the evolved candidates kept margin 0)
+/// and at a near-saturation grid (128 CTAs: any margin forces a second
+/// wave — the cost the knob trades against).
+pub fn sm_margin_ablation(sim: &Simulator) -> Table {
+    let boundary = DecodeShape::llama70b_tp8(1, 512);
+    // 16 tiles x s=8 = 128 CTAs: one wave on a full H100, two with margin.
+    let dense = DecodeShape::decode(2, 8192, 64, 8, 128);
+    let mut t = Table::new(&["sm_margin", "SMs left", "Boundary 2-CTA (µs)", "Dense 128-CTA (µs)"])
+        .align(&[Align::Right; 4]);
+    for margin in [0usize, 4, 8, 16, 32, 64] {
+        let md_b = SequenceAwarePolicy.metadata(&boundary, margin, true);
+        let md_d = SchedulerMetadata {
+            shape: dense,
+            num_splits: 8,
+            pack_gqa: true,
+            sm_margin: margin,
+            path: crate::heuristics::DispatchPath::PrecomputedMetadata,
+        };
+        t.row(&[
+            margin.to_string(),
+            sim.gpu.sms_with_margin(margin).to_string(),
+            us(sim.kernel_us(&md_b)),
+            us(sim.kernel_us(&md_d)),
+        ]);
+    }
+    t
+}
+
+/// A5: the policy ladder on the §3.1 chat panel (TPOT).
+pub fn policy_ladder(sim: &Simulator) -> Table {
+    let evaluator = Evaluator::new(sim.clone());
+    let upstream = evaluator.panel_tpot_us(&Genome::upstream());
+
+    let panel_tpot = |policy: &dyn SplitPolicy| {
+        let mut total = 0.0;
+        let mut steps = 0usize;
+        for &(prompt, n) in &crate::workload::ChatWorkload::evolution_panel() {
+            for step in 0..n {
+                let shape = DecodeShape::llama70b_tp8(1, prompt + step + 1);
+                total += sim.kernel_us(&policy.metadata(&shape, 0, true));
+                steps += 1;
+            }
+        }
+        total / steps as f64
+    };
+
+    let t_pat = panel_tpot(&SequenceAwarePolicy);
+    let table_policy = ExtendedPolicy::tune(&TuneConfig::default(), |shape, s| {
+        sim.kernel_us(&SchedulerMetadata::forced(*shape, s))
+    });
+    let t_ext = panel_tpot(&table_policy);
+    let t_fig1 = evaluator.panel_tpot_us(&Genome::figure1());
+
+    let mut t = Table::new(&["Policy", "Chat-panel TPOT (µs)", "vs upstream"])
+        .align(&[Align::Left, Align::Right, Align::Right]);
+    t.row(&["upstream (premature guard)".into(), us(upstream), speedup(1.0)]);
+    t.row(&["paper patch (Fig 2, conservative)".into(), us(t_pat), speedup(upstream / t_pat)]);
+    t.row(&[
+        format!("learned table ({} buckets, future work)", table_policy.len()),
+        us(t_ext),
+        speedup(upstream / t_ext),
+    ]);
+    t.row(&["evolved Python (Fig 1, aggressive)".into(), us(t_fig1), speedup(upstream / t_fig1)]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hardware_scale_win_everywhere_low_tile() {
+        // The occupancy hole exists on every modern part; speedup column
+        // should show >1.1x on all three GPUs.
+        let t = hardware_scale();
+        let render = t.render();
+        assert!(render.contains("A100"));
+        assert!(render.contains("H100-SXM5"));
+        assert!(!render.contains("| 1.00x |"), "every row should win:\n{render}");
+    }
+
+    #[test]
+    fn boundary_sweep_transitions() {
+        let sim = Simulator::h100();
+        let t = boundary_sweep(&sim).render();
+        // Below the bucket: both s=1. Inside: 1 vs 3. Beyond: equal again.
+        assert!(t.contains("1.00x"));
+        assert!(t.contains("1.2"));
+    }
+
+    #[test]
+    fn ladder_is_monotone() {
+        let sim = Simulator::h100();
+        let t = policy_ladder(&sim);
+        // Structural check only (values asserted in module tests):
+        assert_eq!(t.render().lines().count(), 2 + 4);
+    }
+
+    #[test]
+    fn margin_hurts_at_scale() {
+        let sim = Simulator::h100();
+        let out = sm_margin_ablation(&sim).render();
+        assert!(out.contains("128"));
+    }
+}

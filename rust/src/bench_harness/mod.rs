@@ -1,0 +1,23 @@
+//! Bench harnesses: one per paper table/figure, plus the timing substrate.
+//!
+//! Each harness produces the same rows/series the paper reports, printed
+//! through `util::table` and returned as data so EXPERIMENTS.md and the
+//! `rust/benches/*` entrypoints share one implementation.
+//!
+//! * [`timer`]      — warmup/sample wall-clock bencher (criterion is
+//!                    unavailable offline),
+//! * [`ab`]         — interleaved A/B measurement on the simulator (the
+//!                    paper's CUDA-Graph-replay methodology),
+//! * [`table1`]     — Table 1: standard vs patched across the shape grid,
+//! * [`ucurve`]     — Figure 3: the s = 1..64 split sweep,
+//! * [`regression`] — §5.3: the 160-config no-regression sweep.
+
+pub mod ab;
+pub mod ablations;
+pub mod regression;
+pub mod table1;
+pub mod timer;
+pub mod ucurve;
+
+pub use ab::ab_median_us;
+pub use timer::Bencher;

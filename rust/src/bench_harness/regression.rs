@@ -1,0 +1,159 @@
+//! §5.3 reproduction: the 160-configuration safety/regression sweep.
+//!
+//! Batch ∈ {1,2,4,8} × L_K ∈ {128..8192} × H_KV ∈ {1,2,4,8,32}, standard
+//! vs sequence-aware, asserting the paper's claim: no configuration below
+//! 0.99x, wins only at L_K = 512 with H_KV ∈ {1, 2} (low-tile cells).
+
+use crate::heuristics::tiles::DecodeShape;
+use crate::heuristics::{SequenceAwarePolicy, SplitPolicy, StandardPolicy};
+use crate::sim::Simulator;
+use crate::util::prng::Rng;
+use crate::util::table::{speedup, us, Align, Table};
+use crate::workload::shapes::regression_grid;
+
+use super::ab::ab_median_us;
+
+/// One sweep cell.
+#[derive(Debug, Clone)]
+pub struct RegressionCell {
+    pub shape: DecodeShape,
+    pub standard_us: f64,
+    pub patched_us: f64,
+}
+
+impl RegressionCell {
+    pub fn speedup(&self) -> f64 {
+        self.standard_us / self.patched_us
+    }
+}
+
+/// Sweep summary.
+#[derive(Debug, Clone)]
+pub struct RegressionSummary {
+    pub total: usize,
+    pub wins: usize,
+    pub unchanged: usize,
+    pub regressions: usize,
+    pub min_speedup: f64,
+    pub max_speedup: f64,
+}
+
+pub fn run(sim: &Simulator, replays: usize, seed: u64) -> Vec<RegressionCell> {
+    let mut rng = Rng::new(seed);
+    regression_grid()
+        .into_iter()
+        .map(|shape| {
+            let md_std = StandardPolicy.metadata(&shape, 0, true);
+            let md_pat = SequenceAwarePolicy.metadata(&shape, 0, true);
+            let (standard_us, patched_us) = ab_median_us(sim, &md_std, &md_pat, replays, &mut rng);
+            RegressionCell { shape, standard_us, patched_us }
+        })
+        .collect()
+}
+
+pub fn summarize(cells: &[RegressionCell]) -> RegressionSummary {
+    let mut s = RegressionSummary {
+        total: cells.len(),
+        wins: 0,
+        unchanged: 0,
+        regressions: 0,
+        min_speedup: f64::INFINITY,
+        max_speedup: 0.0,
+    };
+    for c in cells {
+        let sp = c.speedup();
+        s.min_speedup = s.min_speedup.min(sp);
+        s.max_speedup = s.max_speedup.max(sp);
+        if sp >= 1.05 {
+            s.wins += 1;
+        } else if sp >= 0.99 {
+            s.unchanged += 1;
+        } else {
+            s.regressions += 1;
+        }
+    }
+    s
+}
+
+/// Render only the interesting rows (wins + any regressions) plus the
+/// summary — 160 rows of 1.00x would drown the signal.
+pub fn render(cells: &[RegressionCell]) -> String {
+    let s = summarize(cells);
+    let mut t = Table::new(&["Batch", "L_K", "H_KV", "Std (µs)", "Patched (µs)", "Speedup"])
+        .align(&[Align::Right; 6]);
+    for c in cells {
+        let sp = c.speedup();
+        if !(0.99..1.05).contains(&sp) {
+            t.row(&[
+                c.shape.batch.to_string(),
+                c.shape.l_k.to_string(),
+                c.shape.h_kv.to_string(),
+                us(c.standard_us),
+                us(c.patched_us),
+                speedup(sp),
+            ]);
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} configs: {} wins (>=1.05x), {} unchanged, {} regressions; speedup range [{:.3}, {:.3}]\n",
+        s.total, s.wins, s.unchanged, s.regressions, s.min_speedup, s.max_speedup
+    ));
+    if !t.is_empty() {
+        out.push_str("non-1.00x cells:\n");
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// The paper's §5.3 claims as a checkable predicate.
+pub fn verify(cells: &[RegressionCell]) -> Result<(), String> {
+    let s = summarize(cells);
+    if s.total != 160 {
+        return Err(format!("expected 160 configs, got {}", s.total));
+    }
+    if s.min_speedup < 0.99 {
+        return Err(format!("regression found: min speedup {:.3} < 0.99", s.min_speedup));
+    }
+    for c in cells {
+        let sp = c.speedup();
+        let expected_win = c.shape.l_k == 512 && c.shape.h_kv <= 2 && c.shape.batch * c.shape.h_kv < 4;
+        if expected_win && sp < 1.05 {
+            return Err(format!(
+                "expected win missing at B={} L_K={} H_KV={}: {sp:.3}",
+                c.shape.batch, c.shape.l_k, c.shape.h_kv
+            ));
+        }
+        if !expected_win && sp > 1.05 {
+            return Err(format!(
+                "unexpected win at B={} L_K={} H_KV={}: {sp:.3} (policy surface wider than paper)",
+                c.shape.batch, c.shape.l_k, c.shape.h_kv
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_matches_paper_claims() {
+        let cells = run(&Simulator::h100(), 41, 7);
+        verify(&cells).unwrap();
+        let s = summarize(&cells);
+        // Wins: L_K=512, (B, H_KV) with B*H_KV < 4 and H_KV <= 2:
+        // (1,1), (1,2), (2,1) — three cells.
+        assert_eq!(s.wins, 3, "{s:?}");
+        assert_eq!(s.regressions, 0);
+    }
+
+    #[test]
+    fn render_shows_summary() {
+        let cells = run(&Simulator::h100(), 11, 9);
+        let out = render(&cells);
+        assert!(out.contains("160 configs"));
+        assert!(out.contains("0 regressions"));
+    }
+}

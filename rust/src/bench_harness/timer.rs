@@ -1,0 +1,135 @@
+//! Wall-clock micro-bencher (criterion substitute).
+//!
+//! Warmup then fixed-count sampling, reporting mean ± 95% CI and
+//! percentiles. Samples are *per-batch* (each sample times `batch_iters`
+//! closure invocations) so sub-µs operations resolve above timer noise.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration latency summary, ns.
+    pub per_iter_ns: Summary,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.per_iter_ns.mean
+    }
+
+    pub fn report_line(&self) -> String {
+        let s = &self.per_iter_ns;
+        let (scale, unit) = if s.mean >= 1e6 {
+            (1e6, "ms")
+        } else if s.mean >= 1e3 {
+            (1e3, "µs")
+        } else {
+            (1.0, "ns")
+        };
+        format!(
+            "{:<44} {:>10.3} {unit}/iter (p50 {:.3}, p99 {:.3}, n={})",
+            self.name,
+            s.mean / scale,
+            s.p50 / scale,
+            s.p99 / scale,
+            s.n
+        )
+    }
+}
+
+/// The bencher.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    pub batch_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 50, samples: 60, batch_iters: 20 }
+    }
+}
+
+impl Bencher {
+    /// Configuration for expensive closures (PJRT executions).
+    pub fn heavy() -> Bencher {
+        Bencher { warmup_iters: 3, samples: 15, batch_iters: 1 }
+    }
+
+    /// Time `f`, returning per-iteration stats. The closure's return value
+    /// is black-boxed to keep the optimizer honest.
+    pub fn bench<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.batch_iters {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            per_iter.push(dt / self.batch_iters as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            per_iter_ns: Summary::of(&per_iter),
+            samples: self.samples,
+            iters_per_sample: self.batch_iters,
+        }
+    }
+
+    /// Bench and print the one-line report (the benches' main loop).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, f: F) -> BenchResult {
+        let r = self.bench(name, f);
+        println!("{}", r.report_line());
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher { warmup_iters: 2, samples: 10, batch_iters: 100 };
+        let r = b.bench("noop-ish", || std::hint::black_box(3u64).wrapping_mul(7));
+        assert!(r.mean_ns() >= 0.0);
+        assert_eq!(r.per_iter_ns.n, 10);
+    }
+
+    #[test]
+    fn slower_closure_measures_slower() {
+        let b = Bencher { warmup_iters: 2, samples: 15, batch_iters: 5 };
+        let fast = b.bench("fast", || 1u64);
+        let slow = b.bench("slow", || {
+            let mut acc = 0u64;
+            for i in 0..5_000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            acc
+        });
+        assert!(slow.mean_ns() > fast.mean_ns() * 3.0);
+    }
+
+    #[test]
+    fn report_line_scales_units() {
+        let mk = |mean_ns: f64| BenchResult {
+            name: "x".into(),
+            per_iter_ns: Summary::of(&[mean_ns]),
+            samples: 1,
+            iters_per_sample: 1,
+        };
+        assert!(mk(500.0).report_line().contains("ns/iter"));
+        assert!(mk(5_000.0).report_line().contains("µs/iter"));
+        assert!(mk(5_000_000.0).report_line().contains("ms/iter"));
+    }
+}

@@ -1,0 +1,233 @@
+//! Continuous batcher: FCFS admission into a bounded running set, with
+//! per-step plans that pack the running set into the artifact batch
+//! buckets (static-shape routing).
+
+use std::collections::VecDeque;
+
+use super::kv_cache::BlockManager;
+use super::request::{Request, RequestId, RunningRequest};
+
+/// Batcher configuration.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Maximum concurrently-running requests (the largest decode bucket).
+    pub max_batch: usize,
+    /// Available artifact batch buckets, ascending (e.g. [1, 2, 4]).
+    pub batch_buckets: Vec<usize>,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 4, batch_buckets: vec![1, 2, 4] }
+    }
+}
+
+/// What the engine should do this step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepPlan {
+    /// Requests (by slot) that still need prompt ingestion.
+    pub prefill_slots: Vec<usize>,
+    /// Requests (by slot) ready for one decode step.
+    pub decode_slots: Vec<usize>,
+    /// Bucket chosen for the decode call (>= decode_slots.len()).
+    pub decode_bucket: Option<usize>,
+}
+
+/// The continuous batcher. Owns the waiting queue and running set.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    waiting: VecDeque<Request>,
+    running: Vec<Option<RunningRequest>>, // indexed by slot
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        assert!(!cfg.batch_buckets.is_empty());
+        assert!(cfg.batch_buckets.windows(2).all(|w| w[0] < w[1]), "buckets must ascend");
+        assert_eq!(*cfg.batch_buckets.last().unwrap(), cfg.max_batch);
+        let running = (0..cfg.max_batch).map(|_| None).collect();
+        Batcher { cfg, waiting: VecDeque::new(), running }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.waiting.push_back(req);
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.iter().filter(|r| r.is_some()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.running_len() == 0
+    }
+
+    /// Admit waiting requests into free slots while the block manager
+    /// accepts them (FCFS — head-of-line blocking is intentional, matching
+    /// vLLM's default scheduler).
+    pub fn admit(&mut self, blocks: &mut BlockManager, now_us: u64) -> Vec<RequestId> {
+        let mut admitted = Vec::new();
+        while self.running_len() < self.cfg.max_batch {
+            let Some(front) = self.waiting.front() else { break };
+            if !blocks.can_admit(front.prompt.len(), front.max_new_tokens) {
+                break;
+            }
+            let req = self.waiting.pop_front().unwrap();
+            blocks
+                .admit(req.id, req.prompt.len(), req.max_new_tokens)
+                .expect("can_admit checked");
+            let slot = self
+                .running
+                .iter()
+                .position(|r| r.is_none())
+                .expect("running_len < max_batch implies a free slot");
+            admitted.push(req.id);
+            self.running[slot] = Some(RunningRequest::new(req, slot, now_us));
+        }
+        admitted
+    }
+
+    /// Build the step plan: prefill-first (prompt ingestion finishes before
+    /// a request joins the decode batch), then one decode call for every
+    /// prompt-complete request, packed into the smallest bucket that fits.
+    pub fn plan(&self) -> StepPlan {
+        let mut prefill_slots = Vec::new();
+        let mut decode_slots = Vec::new();
+        for r in self.running.iter().flatten() {
+            if !r.prompt_done() {
+                prefill_slots.push(r.slot);
+            } else if !r.done() {
+                decode_slots.push(r.slot);
+            }
+        }
+        let decode_bucket = if decode_slots.is_empty() {
+            None
+        } else {
+            self.cfg
+                .batch_buckets
+                .iter()
+                .copied()
+                .find(|&b| b >= decode_slots.len())
+        };
+        StepPlan { prefill_slots, decode_slots, decode_bucket }
+    }
+
+    pub(crate) fn running(&self, slot: usize) -> Option<&RunningRequest> {
+        self.running.get(slot).and_then(|r| r.as_ref())
+    }
+
+    pub(crate) fn running_mut(&mut self, slot: usize) -> Option<&mut RunningRequest> {
+        self.running.get_mut(slot).and_then(|r| r.as_mut())
+    }
+
+    pub(crate) fn take(&mut self, slot: usize) -> Option<RunningRequest> {
+        self.running.get_mut(slot).and_then(|r| r.take())
+    }
+
+    /// Drain every request (engine shutdown).
+    pub(crate) fn drain(&mut self) -> (Vec<Request>, Vec<RunningRequest>) {
+        let waiting = self.waiting.drain(..).collect();
+        let running = self.running.iter_mut().filter_map(|r| r.take()).collect();
+        (waiting, running)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kv_cache::BlockManagerConfig;
+
+    fn setup(max_batch: usize, num_blocks: usize) -> (Batcher, BlockManager) {
+        let buckets: Vec<usize> = [1, 2, 4, 8].into_iter().filter(|&b| b <= max_batch).collect();
+        let b = Batcher::new(BatcherConfig { max_batch, batch_buckets: buckets });
+        let m = BlockManager::new(BlockManagerConfig {
+            block_size: 16,
+            num_blocks,
+            max_seq: 1024,
+        });
+        (b, m)
+    }
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+        Request::new(id, vec![1; prompt_len], max_new)
+    }
+
+    #[test]
+    fn fcfs_admission_respects_batch_and_blocks() {
+        let (mut b, mut m) = setup(2, 8); // 128-token budget
+        b.submit(req(1, 32, 16)); // 3 blocks
+        b.submit(req(2, 32, 16)); // 3 blocks
+        b.submit(req(3, 32, 16)); // would fit blocks (2 left? 8-6=2 < 3) -> no
+        let admitted = b.admit(&mut m, 0);
+        assert_eq!(admitted, vec![1, 2]);
+        assert_eq!(b.running_len(), 2);
+        assert_eq!(b.waiting_len(), 1);
+        // Slot freed => next admit picks up request 3.
+        let r = b.take(0).unwrap();
+        m.release(r.req.id).unwrap();
+        let admitted = b.admit(&mut m, 1);
+        assert_eq!(admitted, vec![3]);
+    }
+
+    #[test]
+    fn head_of_line_blocking_is_fcfs() {
+        let (mut b, mut m) = setup(4, 4); // tiny: 64 tokens
+        b.submit(req(1, 60, 4)); // 4 blocks — fits alone
+        b.submit(req(2, 8, 8));  // 1 block — would fit, but behind #1
+        let admitted = b.admit(&mut m, 0);
+        assert_eq!(admitted, vec![1]);
+        // #2 must NOT leapfrog even though it fits.
+        assert_eq!(b.admit(&mut m, 0), Vec::<u64>::new());
+        assert_eq!(b.waiting_len(), 1);
+    }
+
+    #[test]
+    fn plan_separates_prefill_and_decode() {
+        let (mut b, mut m) = setup(4, 64);
+        b.submit(req(1, 4, 4));
+        b.submit(req(2, 4, 4));
+        b.admit(&mut m, 0);
+        // Initially both need prefill.
+        let p = b.plan();
+        assert_eq!(p.prefill_slots.len(), 2);
+        assert!(p.decode_slots.is_empty());
+        assert_eq!(p.decode_bucket, None);
+        // Mark slot 0 prefilled: it moves to the decode set.
+        b.running_mut(0).unwrap().prefilled = 4;
+        let p = b.plan();
+        assert_eq!(p.prefill_slots.len(), 1);
+        assert_eq!(p.decode_slots, vec![0]);
+        assert_eq!(p.decode_bucket, Some(1));
+    }
+
+    #[test]
+    fn decode_bucket_is_smallest_fit() {
+        let (mut b, mut m) = setup(4, 64);
+        for id in 1..=3 {
+            b.submit(req(id, 2, 4));
+        }
+        b.admit(&mut m, 0);
+        for slot in 0..3 {
+            b.running_mut(slot).unwrap().prefilled = 2;
+        }
+        let p = b.plan();
+        assert_eq!(p.decode_slots.len(), 3);
+        assert_eq!(p.decode_bucket, Some(4)); // buckets are 1,2,4
+    }
+
+    #[test]
+    fn drain_empties_everything() {
+        let (mut b, mut m) = setup(2, 64);
+        b.submit(req(1, 2, 2));
+        b.submit(req(2, 2, 2));
+        b.submit(req(3, 2, 2));
+        b.admit(&mut m, 0);
+        let (waiting, running) = b.drain();
+        assert_eq!(waiting.len(), 1);
+        assert_eq!(running.len(), 2);
+        assert!(b.is_idle());
+    }
+}

@@ -1,0 +1,805 @@
+//! The serving engine: continuous-batching decode loop over a backend.
+//!
+//! Two backends share the same scheduler/batcher/cache machinery:
+//!
+//! * **Pjrt** — real execution of the AOT artifacts on the CPU PJRT
+//!   client: true logits, true KV caches, wall-clock timing. This is the
+//!   end-to-end path (examples/serve_decode.rs).
+//! * **Simulated** — the H100 latency model with a virtual clock: no
+//!   numerics, but faithful *timing* under each split policy. This is how
+//!   serving-level results are projected onto the paper's hardware
+//!   (DESIGN.md §Substitutions), and it's what the A/B serving bench uses.
+//!
+//! Either way the per-step flow is the vLLM shape: admit → prefill →
+//! decode(batch bucket, split metadata) → sample → retire.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::heuristics::SplitPolicy;
+use crate::runtime::{HostTensor, Registry};
+use crate::sim::Simulator;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::kv_cache::{BlockManager, BlockManagerConfig};
+use super::metrics::{EngineMetrics, RequestTiming};
+use super::request::{FinishReason, FinishedRequest, Request, RunningRequest};
+use super::scheduler::{scheduler_from_manifest, AttnGeometry, DecodeScheduler};
+
+/// Execution backend.
+pub enum EngineBackend {
+    /// Real PJRT execution of the AOT artifacts.
+    Pjrt(Arc<Registry>),
+    /// H100 latency simulation (virtual clock, synthetic tokens).
+    Simulated(Simulator),
+}
+
+/// Engine configuration.
+pub struct EngineConfig {
+    pub batcher: BatcherConfig,
+    pub blocks: BlockManagerConfig,
+    /// Per-step framework overhead added in simulated mode, µs (sampler,
+    /// scheduler, python-free launch path — small by construction).
+    pub sim_framework_overhead_us: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            batcher: BatcherConfig::default(),
+            blocks: BlockManagerConfig::default(),
+            sim_framework_overhead_us: 2.0,
+        }
+    }
+}
+
+/// Dense KV cache pair sized for the largest batch bucket.
+struct CacheStore {
+    n_layers: usize,
+    max_batch: usize,
+    max_seq: usize,
+    h_kv: usize,
+    d: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl CacheStore {
+    fn new(n_layers: usize, max_batch: usize, max_seq: usize, h_kv: usize, d: usize) -> CacheStore {
+        let n = n_layers * max_batch * max_seq * h_kv * d;
+        CacheStore { n_layers, max_batch, max_seq, h_kv, d, k: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    fn row_elems(&self) -> usize {
+        self.max_seq * self.h_kv * self.d
+    }
+
+    fn layer_stride(&self) -> usize {
+        self.max_batch * self.row_elems()
+    }
+
+    /// True when `slots` are exactly rows 0..len in order AND the bucket
+    /// width matches the store: gather/scatter degenerate to one straight
+    /// memcpy of the whole store (§Perf opt-2 — the steady-state case for
+    /// a full batch, which is when the copies are largest).
+    fn contiguous_full(&self, slots: &[usize], bucket: usize) -> bool {
+        bucket == self.max_batch && slots.len() == bucket
+            && slots.iter().enumerate().all(|(i, &s)| i == s)
+    }
+
+    /// Gather `slots` rows into bucket-shaped tensors (L, b, S, H, D).
+    fn gather(&self, slots: &[usize], bucket: usize) -> (HostTensor, HostTensor) {
+        assert!(slots.len() <= bucket);
+        let shape = [self.n_layers, bucket, self.max_seq, self.h_kv, self.d];
+        if self.contiguous_full(slots, bucket) {
+            return (
+                HostTensor::f32(&shape, self.k.clone()).unwrap(),
+                HostTensor::f32(&shape, self.v.clone()).unwrap(),
+            );
+        }
+        let row = self.row_elems();
+        let mut k = vec![0.0f32; shape.iter().product()];
+        let mut v = vec![0.0f32; shape.iter().product()];
+        for l in 0..self.n_layers {
+            for (bi, &slot) in slots.iter().enumerate() {
+                let src = l * self.layer_stride() + slot * row;
+                let dst = (l * bucket + bi) * row;
+                k[dst..dst + row].copy_from_slice(&self.k[src..src + row]);
+                v[dst..dst + row].copy_from_slice(&self.v[src..src + row]);
+            }
+        }
+        (
+            HostTensor::f32(&shape, k).unwrap(),
+            HostTensor::f32(&shape, v).unwrap(),
+        )
+    }
+
+    /// Scatter bucket-shaped tensors back into `slots` rows. For the
+    /// contiguous-full case the returned tensors REPLACE the store's
+    /// backing vectors (move, no copy).
+    fn scatter(&mut self, slots: &[usize], k: &HostTensor, v: &HostTensor) {
+        let bucket = k.shape()[1];
+        let kd = k.as_f32().unwrap();
+        let vd = v.as_f32().unwrap();
+        if self.contiguous_full(slots, bucket) {
+            self.k.copy_from_slice(kd);
+            self.v.copy_from_slice(vd);
+            return;
+        }
+        let row = self.row_elems();
+        for l in 0..self.n_layers {
+            for (bi, &slot) in slots.iter().enumerate() {
+                let dst = l * self.layer_stride() + slot * row;
+                let src = (l * bucket + bi) * row;
+                self.k[dst..dst + row].copy_from_slice(&kd[src..src + row]);
+                self.v[dst..dst + row].copy_from_slice(&vd[src..src + row]);
+            }
+        }
+    }
+
+    fn clear_row(&mut self, slot: usize) {
+        let row = self.row_elems();
+        for l in 0..self.n_layers {
+            let at = l * self.layer_stride() + slot * row;
+            self.k[at..at + row].fill(0.0);
+            self.v[at..at + row].fill(0.0);
+        }
+    }
+}
+
+/// The engine.
+pub struct Engine {
+    backend: EngineBackend,
+    scheduler: DecodeScheduler,
+    batcher: Batcher,
+    blocks: BlockManager,
+    pub metrics: EngineMetrics,
+    cache: Option<CacheStore>,
+    vocab: usize,
+    started: Instant,
+    /// Virtual clock (µs) for the simulated backend.
+    sim_clock_us: f64,
+    sim_overhead_us: f64,
+    /// Open-loop arrivals not yet due (simulated backend): sorted by time.
+    pending_arrivals: Vec<(u64, Request)>,
+    finished: Vec<FinishedRequest>,
+}
+
+impl Engine {
+    /// Real-execution engine over loaded artifacts.
+    pub fn with_pjrt(
+        registry: Arc<Registry>,
+        policy: Box<dyn SplitPolicy>,
+        cfg: EngineConfig,
+    ) -> Result<Engine> {
+        let scheduler = scheduler_from_manifest(&registry.manifest, policy)?;
+        let model = registry.manifest.model.as_ref().context("no model block")?;
+        let g = scheduler.geometry();
+        let cache = CacheStore::new(
+            model.config.n_layers,
+            cfg.batcher.max_batch,
+            g.max_seq,
+            g.h_kv,
+            g.d,
+        );
+        let vocab = model.config.vocab;
+        let mut blocks_cfg = cfg.blocks.clone();
+        blocks_cfg.max_seq = blocks_cfg.max_seq.min(g.max_seq);
+        Ok(Engine {
+            backend: EngineBackend::Pjrt(registry),
+            scheduler,
+            batcher: Batcher::new(cfg.batcher.clone()),
+            blocks: BlockManager::new(blocks_cfg),
+            metrics: EngineMetrics::default(),
+            cache: Some(cache),
+            vocab,
+            started: Instant::now(),
+            sim_clock_us: 0.0,
+            sim_overhead_us: cfg.sim_framework_overhead_us,
+            pending_arrivals: Vec::new(),
+            finished: Vec::new(),
+        })
+    }
+
+    /// Simulated engine: H100 latency model, synthetic tokens.
+    pub fn with_simulator(
+        sim: Simulator,
+        policy: Box<dyn SplitPolicy>,
+        geometry: AttnGeometry,
+        available_splits: Vec<usize>,
+        cfg: EngineConfig,
+    ) -> Engine {
+        let scheduler = DecodeScheduler::new(policy, geometry, available_splits);
+        let mut blocks_cfg = cfg.blocks.clone();
+        blocks_cfg.max_seq = blocks_cfg.max_seq.min(geometry.max_seq);
+        Engine {
+            backend: EngineBackend::Simulated(sim),
+            scheduler,
+            batcher: Batcher::new(cfg.batcher.clone()),
+            blocks: BlockManager::new(blocks_cfg),
+            metrics: EngineMetrics::default(),
+            cache: None,
+            vocab: 1 << 15,
+            started: Instant::now(),
+            sim_clock_us: 0.0,
+            sim_overhead_us: cfg.sim_framework_overhead_us,
+            pending_arrivals: Vec::new(),
+            finished: Vec::new(),
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.scheduler.policy_name()
+    }
+
+    fn now_us(&self) -> u64 {
+        match self.backend {
+            EngineBackend::Pjrt(_) => self.started.elapsed().as_micros() as u64,
+            EngineBackend::Simulated(_) => self.sim_clock_us as u64,
+        }
+    }
+
+    /// Submit a request (timestamps it on arrival).
+    pub fn submit(&mut self, mut req: Request) {
+        req.arrival_us = self.now_us();
+        self.batcher.submit(req);
+    }
+
+    /// Open-loop arrival (simulated backend): the request becomes visible
+    /// to the batcher once the virtual clock reaches `arrival_us`. This is
+    /// the trace-replay path for load testing under Poisson traffic
+    /// (workload::ChatWorkload::generate's arrival offsets).
+    pub fn submit_at(&mut self, mut req: Request, arrival_us: u64) {
+        assert!(
+            matches!(self.backend, EngineBackend::Simulated(_)),
+            "submit_at is a virtual-clock (simulated backend) feature"
+        );
+        req.arrival_us = arrival_us;
+        let pos = self
+            .pending_arrivals
+            .partition_point(|(t, _)| *t <= arrival_us);
+        self.pending_arrivals.insert(pos, (arrival_us, req));
+    }
+
+    /// Move due open-loop arrivals into the batcher; if the engine is
+    /// otherwise idle, fast-forward the virtual clock to the next arrival.
+    fn ingest_arrivals(&mut self) {
+        if self.pending_arrivals.is_empty() {
+            return;
+        }
+        if self.batcher.is_idle() {
+            let next = self.pending_arrivals[0].0;
+            if (self.sim_clock_us as u64) < next {
+                self.sim_clock_us = next as f64;
+            }
+        }
+        let now = self.now_us();
+        while let Some((t, _)) = self.pending_arrivals.first() {
+            if *t > now {
+                break;
+            }
+            let (_, req) = self.pending_arrivals.remove(0);
+            self.batcher.submit(req);
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.batcher.is_idle() && self.pending_arrivals.is_empty()
+    }
+
+    /// Abort everything queued or running (engine shutdown): releases all
+    /// blocks and emits `FinishReason::Aborted` results.
+    pub fn abort_all(&mut self) -> Result<Vec<FinishedRequest>> {
+        let now = self.now_us();
+        let (waiting, running) = self.batcher.drain();
+        let mut aborted = Vec::new();
+        for req in waiting {
+            aborted.push(FinishedRequest {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                reason: FinishReason::Aborted,
+                timing: RequestTiming { arrival_us: req.arrival_us, ..Default::default() },
+            });
+        }
+        for r in running {
+            self.blocks.release(r.req.id)?;
+            if let Some(cache) = self.cache.as_mut() {
+                cache.clear_row(r.slot);
+            }
+            aborted.push(FinishedRequest {
+                id: r.req.id,
+                prompt_len: r.req.prompt.len(),
+                tokens: r.generated,
+                reason: FinishReason::Aborted,
+                timing: RequestTiming {
+                    arrival_us: r.req.arrival_us,
+                    scheduled_us: r.scheduled_us,
+                    first_token_us: r.first_token_us.unwrap_or(now),
+                    finished_us: now,
+                    n_generated: 0,
+                },
+            });
+        }
+        Ok(aborted)
+    }
+
+    /// Run until every submitted request completes; returns them in
+    /// completion order.
+    pub fn run_until_idle(&mut self) -> Result<Vec<FinishedRequest>> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        self.metrics.wall_us = self.now_us();
+        Ok(std::mem::take(&mut self.finished))
+    }
+
+    /// One engine step: admit → prefill one batch → decode one batch.
+    pub fn step(&mut self) -> Result<()> {
+        self.ingest_arrivals();
+        let now = self.now_us();
+        self.batcher.admit(&mut self.blocks, now);
+        let plan = self.batcher.plan();
+        let t0 = Instant::now();
+        let mut decoded = 0;
+
+        if !plan.prefill_slots.is_empty() {
+            self.prefill(&plan.prefill_slots)?;
+        } else if !plan.decode_slots.is_empty() {
+            decoded = self.decode(&plan.decode_slots, plan.decode_bucket.context("no bucket")?)?;
+        }
+
+        let step_us = match &self.backend {
+            EngineBackend::Pjrt(_) => t0.elapsed().as_micros() as f64,
+            EngineBackend::Simulated(_) => 0.0, // accounted inside prefill/decode
+        };
+        if matches!(self.backend, EngineBackend::Pjrt(_)) {
+            self.metrics.record_step(step_us, decoded);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Prefill
+    // ------------------------------------------------------------------
+
+    fn prefill(&mut self, slots: &[usize]) -> Result<()> {
+        match &self.backend {
+            EngineBackend::Pjrt(reg) => {
+                let reg = reg.clone();
+                for &slot in slots {
+                    self.prefill_one_pjrt(&reg, slot)?;
+                }
+            }
+            EngineBackend::Simulated(_) => {
+                // Prefill latency is policy-invariant (the paper's change is
+                // decode-only); model it as one bulk step per request.
+                for &slot in slots {
+                    let r = self.batcher.running_mut(slot).context("slot")?;
+                    r.prefilled = r.req.prompt.len();
+                    let prompt_us = 50.0 + 0.05 * r.req.prompt.len() as f64;
+                    self.sim_clock_us += prompt_us;
+                    self.metrics.prefill_calls += 1;
+                    self.metrics.record_step(prompt_us, 0);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn prefill_one_pjrt(&mut self, reg: &Registry, slot: usize) -> Result<()> {
+        let (id, prompt) = {
+            let r = self.batcher.running(slot).context("slot")?;
+            (r.req.id, r.req.prompt.clone())
+        };
+        let _ = id;
+        let p_len = prompt.len();
+        let entry = reg
+            .manifest
+            .find_prefill_bucket(1, p_len)
+            .map(|e| e.clone());
+        if let Some(entry) = entry {
+            let b = entry.meta.batch.unwrap();
+            let bucket_p = entry.meta.prompt_len.unwrap();
+            let cache = self.cache.as_ref().context("cache")?;
+            let (kv_k, kv_v) = cache.gather(&[slot], b);
+            let mut tokens = vec![0i32; b * bucket_p];
+            tokens[..p_len].copy_from_slice(&prompt);
+            let mut lens = vec![1i32; b]; // padded rows: 1 token, ignored
+            lens[0] = p_len as i32;
+            let out = reg.execute_model(
+                &entry.name,
+                &[
+                    HostTensor::s32(&[b, bucket_p], tokens)?,
+                    HostTensor::s32(&[b], lens)?,
+                    kv_k,
+                    kv_v,
+                ],
+            )?;
+            self.cache.as_mut().unwrap().scatter(&[slot], &out[1], &out[2]);
+            let r = self.batcher.running_mut(slot).context("slot")?;
+            r.prefilled = p_len;
+            self.metrics.prefill_calls += 1;
+        } else {
+            // No prefill bucket fits: ingest via the decode path token by
+            // token (slow path; exercised by tests with tiny buckets).
+            self.prefill_via_decode(reg, slot)?;
+        }
+        Ok(())
+    }
+
+    fn prefill_via_decode(&mut self, reg: &Registry, slot: usize) -> Result<()> {
+        let prompt = self.batcher.running(slot).context("slot")?.req.prompt.clone();
+        let already = self.batcher.running(slot).context("slot")?.prefilled;
+        for (t, &tok) in prompt.iter().enumerate().skip(already) {
+            let decision = self.scheduler.decide(1, t + 1)?;
+            let entry = reg
+                .manifest
+                .find_decode_bucket(1, decision.artifact_splits)
+                .context("no decode bucket for prefill-via-decode")?
+                .clone();
+            let b = entry.meta.batch.unwrap();
+            let cache = self.cache.as_ref().context("cache")?;
+            let (kv_k, kv_v) = cache.gather(&[slot], b);
+            let mut toks = vec![0i32; b];
+            toks[0] = tok;
+            let mut pos = vec![0i32; b];
+            pos[0] = t as i32;
+            let out = reg.execute_model(
+                &entry.name,
+                &[HostTensor::s32(&[b], toks)?, HostTensor::s32(&[b], pos)?, kv_k, kv_v],
+            )?;
+            self.cache.as_mut().unwrap().scatter(&[slot], &out[1], &out[2]);
+        }
+        let r = self.batcher.running_mut(slot).context("slot")?;
+        r.prefilled = prompt.len();
+        self.metrics.prefill_calls += 1;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Decode
+    // ------------------------------------------------------------------
+
+    fn decode(&mut self, slots: &[usize], bucket: usize) -> Result<usize> {
+        // The scheduler sees the live batch shape: the longest row's KV
+        // length (including the token being written this step).
+        let max_kv = slots
+            .iter()
+            .map(|&s| self.batcher.running(s).map(|r| r.kv_len() + 1).unwrap_or(1))
+            .max()
+            .unwrap_or(1);
+        let decision = self.scheduler.decide(slots.len(), max_kv)?;
+        self.metrics.record_split(decision.metadata.num_splits);
+
+        match &self.backend {
+            EngineBackend::Pjrt(reg) => {
+                let reg = reg.clone();
+                self.decode_pjrt(&reg, slots, bucket, decision.artifact_splits)
+            }
+            EngineBackend::Simulated(sim) => {
+                let kernel_us = sim.kernel_us(&decision.metadata);
+                // One attention launch per layer; use 1 layer as the unit
+                // (policy comparisons are ratios, layers scale both sides).
+                let step_us = kernel_us + self.sim_overhead_us;
+                self.sim_clock_us += step_us;
+                self.metrics.record_step(step_us, slots.len());
+                let now = self.now_us();
+                let mut finished = Vec::new();
+                for &slot in slots {
+                    let r = self.batcher.running_mut(slot).context("slot")?;
+                    let synth = (r.kv_len() % 1000) as i32;
+                    r.generated.push(synth);
+                    r.first_token_us.get_or_insert(now);
+                    if r.done() {
+                        finished.push((slot, FinishReason::Length));
+                    }
+                }
+                for (slot, reason) in finished {
+                    self.retire(slot, reason)?;
+                }
+                Ok(slots.len())
+            }
+        }
+    }
+
+    fn decode_pjrt(
+        &mut self,
+        reg: &Registry,
+        slots: &[usize],
+        bucket: usize,
+        artifact_splits: usize,
+    ) -> Result<usize> {
+        let entry = reg
+            .manifest
+            .find_decode_bucket(bucket, artifact_splits)
+            .or_else(|| reg.manifest.find_decode_bucket(bucket, 1))
+            .with_context(|| format!("no decode bucket for b={bucket}"))?
+            .clone();
+        let b = entry.meta.batch.unwrap();
+        if slots.len() > b {
+            bail!("bucket {b} smaller than batch {}", slots.len());
+        }
+
+        let mut tokens = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        for (bi, &slot) in slots.iter().enumerate() {
+            let r = self.batcher.running(slot).context("slot")?;
+            // Next input token: last generated, or last prompt token when
+            // none generated yet (the prefill consumed prompt[..len-1]...
+            // here: full prompt ingested, so feed the last generated or a
+            // BOS-continuation of the prompt).
+            tokens[bi] = *r.generated.last().unwrap_or(r.req.prompt.last().unwrap_or(&0));
+            positions[bi] = r.kv_len() as i32;
+        }
+        let cache = self.cache.as_ref().context("cache")?;
+        let (kv_k, kv_v) = cache.gather(slots, b);
+        let out = reg.execute_model(
+            &entry.name,
+            &[
+                HostTensor::s32(&[b], tokens)?,
+                HostTensor::s32(&[b], positions)?,
+                kv_k,
+                kv_v,
+            ],
+        )?;
+        self.cache.as_mut().unwrap().scatter(slots, &out[1], &out[2]);
+
+        let logits = out[0].as_f32()?;
+        let now = self.now_us();
+        let mut finished = Vec::new();
+        for (bi, &slot) in slots.iter().enumerate() {
+            let row = &logits[bi * self.vocab..(bi + 1) * self.vocab];
+            let tok = argmax(row) as i32;
+            let r = self.batcher.running_mut(slot).context("slot")?;
+            r.generated.push(tok);
+            r.first_token_us.get_or_insert(now);
+            if r.done() {
+                finished.push((slot, FinishReason::Length));
+            } else if r.kv_len() + 1 > self.scheduler.geometry().max_seq {
+                finished.push((slot, FinishReason::CacheFull));
+            }
+        }
+        for (slot, reason) in finished {
+            self.retire(slot, reason)?;
+        }
+        Ok(slots.len())
+    }
+
+    fn retire(&mut self, slot: usize, reason: FinishReason) -> Result<()> {
+        let r: RunningRequest = self.batcher.take(slot).context("retire empty slot")?;
+        self.blocks.release(r.req.id)?;
+        if let Some(cache) = self.cache.as_mut() {
+            cache.clear_row(slot);
+        }
+        let now = self.now_us();
+        let timing = RequestTiming {
+            arrival_us: r.req.arrival_us,
+            scheduled_us: r.scheduled_us,
+            first_token_us: r.first_token_us.unwrap_or(now),
+            finished_us: now,
+            n_generated: r.generated.len(),
+        };
+        self.metrics.record_finished(&timing);
+        self.finished.push(FinishedRequest {
+            id: r.req.id,
+            prompt_len: r.req.prompt.len(),
+            tokens: r.generated,
+            reason,
+            timing,
+        });
+        Ok(())
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+// ----------------------------------------------------------------------
+// Threaded server facade
+// ----------------------------------------------------------------------
+
+/// Handle to an engine running on its own thread (tokio is unavailable
+/// offline; a dedicated thread + channels is the same architecture).
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+    pub results: mpsc::Receiver<FinishedRequest>,
+    join: Option<std::thread::JoinHandle<EngineMetrics>>,
+}
+
+impl EngineHandle {
+    /// Spawn `engine` on a worker thread. The engine drains its queue,
+    /// sleeping briefly when idle, until the sender is dropped.
+    pub fn spawn(mut engine: Engine) -> EngineHandle {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (out_tx, out_rx) = mpsc::channel::<FinishedRequest>();
+        let join = std::thread::spawn(move || {
+            loop {
+                // Pull everything currently queued.
+                let mut disconnected = false;
+                loop {
+                    match rx.try_recv() {
+                        Ok(req) => engine.submit(req),
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            disconnected = true;
+                            break;
+                        }
+                    }
+                }
+                if engine.is_idle() {
+                    if disconnected {
+                        break;
+                    }
+                    // Block for the next request to avoid spinning.
+                    match rx.recv() {
+                        Ok(req) => engine.submit(req),
+                        Err(_) => break,
+                    }
+                }
+                if let Err(e) = engine.step() {
+                    eprintln!("engine step failed: {e:#}");
+                    break;
+                }
+                for fin in std::mem::take(&mut engine.finished) {
+                    let _ = out_tx.send(fin);
+                }
+            }
+            engine.metrics.wall_us = engine.now_us();
+            engine.metrics
+        });
+        EngineHandle { tx, results: out_rx, join: Some(join) }
+    }
+
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.tx.send(req).map_err(|_| anyhow::anyhow!("engine thread gone"))
+    }
+
+    /// Close the submit side and wait for the engine to drain.
+    pub fn shutdown(mut self) -> EngineMetrics {
+        let EngineHandle { tx, join, .. } = &mut self;
+        drop(std::mem::replace(tx, mpsc::channel().0));
+        join.take().expect("joined once").join().expect("engine thread panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::heuristics::{SequenceAwarePolicy, StandardPolicy};
+
+    fn sim_engine(policy: Box<dyn SplitPolicy>) -> Engine {
+        Engine::with_simulator(
+            Simulator::h100(),
+            policy,
+            AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 },
+            vec![1, 3],
+            EngineConfig::default(),
+        )
+    }
+
+    #[test]
+    fn simulated_generation_completes() {
+        let mut e = sim_engine(Box::new(SequenceAwarePolicy));
+        e.submit(Request::new(1, vec![7; 100], 20));
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens.len(), 20);
+        assert_eq!(done[0].reason, FinishReason::Length);
+        assert!(e.metrics.tokens_generated >= 20);
+        assert!(e.blocks.check_invariants().is_ok());
+        assert_eq!(e.blocks.num_seqs(), 0, "all blocks released");
+    }
+
+    #[test]
+    fn patched_policy_faster_through_boundary_bucket() {
+        // Decode from KV 400 to 512: inside nblk=4 bucket, tiles=1.
+        let run = |policy: Box<dyn SplitPolicy>| {
+            let mut e = sim_engine(policy);
+            e.submit(Request::new(1, vec![1; 400], 112));
+            let done = e.run_until_idle().unwrap();
+            (done[0].timing.tpot_us(), e.metrics.split_histogram.clone())
+        };
+        let (tpot_std, hist_std) = run(Box::new(StandardPolicy));
+        let (tpot_pat, hist_pat) = run(Box::new(SequenceAwarePolicy));
+        assert!(tpot_std / tpot_pat > 1.1, "std {tpot_std:.1} vs pat {tpot_pat:.1}");
+        // Standard never splits here; patched uses s=3 throughout.
+        assert!(hist_std.get(3).copied().unwrap_or(0) == 0);
+        assert!(hist_pat[3] > 100);
+    }
+
+    #[test]
+    fn batched_requests_share_steps() {
+        let mut e = sim_engine(Box::new(StandardPolicy));
+        for id in 0..4 {
+            e.submit(Request::new(id, vec![1; 50], 10));
+        }
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done.len(), 4);
+        // 4 requests x 10 tokens but batched: decode steps ≈ 10, not 40.
+        assert!(e.metrics.decode_steps <= 12, "steps={}", e.metrics.decode_steps);
+    }
+
+    #[test]
+    fn queueing_beyond_batch_capacity() {
+        let mut e = sim_engine(Box::new(StandardPolicy));
+        for id in 0..9 {
+            e.submit(Request::new(id, vec![1; 10], 5));
+        }
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done.len(), 9);
+        // Later requests must have queued (scheduled after arrival).
+        let queued = done.iter().filter(|f| f.timing.queue_us() > 0).count();
+        assert!(queued >= 1);
+    }
+
+    #[test]
+    fn open_loop_arrivals_respect_virtual_time() {
+        let mut e = sim_engine(Box::new(SequenceAwarePolicy));
+        // Three arrivals spaced 10 ms apart on the virtual clock.
+        for (i, t) in [0u64, 10_000, 20_000].iter().enumerate() {
+            e.submit_at(Request::new(i as u64, vec![1; 40], 8), *t);
+        }
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done.len(), 3);
+        let mut by_id = done.clone();
+        by_id.sort_by_key(|f| f.id);
+        for (i, f) in by_id.iter().enumerate() {
+            assert_eq!(f.timing.arrival_us, 10_000 * i as u64);
+            // Scheduled at-or-after arrival on the virtual clock.
+            assert!(f.timing.first_token_us >= f.timing.arrival_us);
+        }
+        // The clock fast-forwarded through idle gaps: total wall is at
+        // least the last arrival.
+        assert!(e.metrics.wall_us >= 20_000);
+    }
+
+    #[test]
+    fn abort_all_releases_everything() {
+        let mut e = sim_engine(Box::new(StandardPolicy));
+        for id in 0..6 {
+            e.submit(Request::new(id, vec![1; 50], 1000));
+        }
+        // Run a few steps so some requests are mid-flight.
+        for _ in 0..5 {
+            e.step().unwrap();
+        }
+        let aborted = e.abort_all().unwrap();
+        assert_eq!(aborted.len(), 6);
+        assert!(aborted.iter().all(|f| f.reason == FinishReason::Aborted));
+        assert!(e.is_idle());
+        assert!(e.blocks.check_invariants().is_ok());
+        assert_eq!(e.blocks.num_seqs(), 0);
+    }
+
+    #[test]
+    fn threaded_handle_round_trip() {
+        let e = sim_engine(Box::new(SequenceAwarePolicy));
+        let handle = EngineHandle::spawn(e);
+        for id in 0..3 {
+            handle.submit(Request::new(id, vec![2; 64], 8)).unwrap();
+        }
+        let mut got = 0;
+        while got < 3 {
+            if handle.results.recv_timeout(std::time::Duration::from_secs(10)).is_ok() {
+                got += 1;
+            } else {
+                panic!("timed out waiting for results");
+            }
+        }
+        let metrics = handle.shutdown();
+        assert_eq!(metrics.requests_finished, 3);
+    }
+}

@@ -1,0 +1,177 @@
+//! Serving metrics: per-request timing and engine-level aggregates.
+
+use crate::util::stats::Summary;
+
+/// Timing of one completed request (all µs, relative to engine start).
+#[derive(Debug, Clone, Default)]
+pub struct RequestTiming {
+    pub arrival_us: u64,
+    pub scheduled_us: u64,
+    pub first_token_us: u64,
+    pub finished_us: u64,
+    pub n_generated: usize,
+}
+
+impl RequestTiming {
+    /// Queueing delay before the request entered the running set.
+    pub fn queue_us(&self) -> u64 {
+        self.scheduled_us.saturating_sub(self.arrival_us)
+    }
+
+    /// Time to first token from arrival.
+    pub fn ttft_us(&self) -> u64 {
+        self.first_token_us.saturating_sub(self.arrival_us)
+    }
+
+    /// Time per output token after the first (the paper's §3.1 target
+    /// metric). Zero if fewer than 2 tokens.
+    pub fn tpot_us(&self) -> f64 {
+        if self.n_generated < 2 {
+            return 0.0;
+        }
+        self.finished_us.saturating_sub(self.first_token_us) as f64
+            / (self.n_generated - 1) as f64
+    }
+
+    pub fn e2e_us(&self) -> u64 {
+        self.finished_us.saturating_sub(self.arrival_us)
+    }
+}
+
+/// Rolling engine metrics.
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    pub steps: usize,
+    pub decode_steps: usize,
+    pub prefill_calls: usize,
+    pub tokens_generated: usize,
+    pub requests_finished: usize,
+    step_latencies_us: Vec<f64>,
+    tpots_us: Vec<f64>,
+    ttfts_us: Vec<f64>,
+    /// Histogram of split counts chosen by the scheduler (index = splits).
+    pub split_histogram: Vec<usize>,
+    pub wall_us: u64,
+}
+
+impl EngineMetrics {
+    pub fn record_step(&mut self, latency_us: f64, decoded: usize) {
+        self.steps += 1;
+        if decoded > 0 {
+            self.decode_steps += 1;
+            self.tokens_generated += decoded;
+        }
+        self.step_latencies_us.push(latency_us);
+    }
+
+    pub fn record_split(&mut self, num_splits: usize) {
+        if self.split_histogram.len() <= num_splits {
+            self.split_histogram.resize(num_splits + 1, 0);
+        }
+        self.split_histogram[num_splits] += 1;
+    }
+
+    pub fn record_finished(&mut self, timing: &RequestTiming) {
+        self.requests_finished += 1;
+        if timing.n_generated >= 2 {
+            self.tpots_us.push(timing.tpot_us());
+        }
+        self.ttfts_us.push(timing.ttft_us() as f64);
+    }
+
+    pub fn step_latency(&self) -> Option<Summary> {
+        (!self.step_latencies_us.is_empty()).then(|| Summary::of(&self.step_latencies_us))
+    }
+
+    pub fn tpot(&self) -> Option<Summary> {
+        (!self.tpots_us.is_empty()).then(|| Summary::of(&self.tpots_us))
+    }
+
+    pub fn ttft(&self) -> Option<Summary> {
+        (!self.ttfts_us.is_empty()).then(|| Summary::of(&self.ttfts_us))
+    }
+
+    /// Generated tokens per second of wall time.
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall_us == 0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / (self.wall_us as f64 / 1e6)
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "steps={} (decode={} prefill_calls={}) tokens={} finished={}\n",
+            self.steps, self.decode_steps, self.prefill_calls, self.tokens_generated, self.requests_finished
+        ));
+        if let Some(s) = self.step_latency() {
+            out.push_str(&format!(
+                "step latency µs: mean={:.1} p50={:.1} p99={:.1}\n",
+                s.mean, s.p50, s.p99
+            ));
+        }
+        if let Some(s) = self.tpot() {
+            out.push_str(&format!("TPOT µs: mean={:.1} p50={:.1} p99={:.1}\n", s.mean, s.p50, s.p99));
+        }
+        if let Some(s) = self.ttft() {
+            out.push_str(&format!("TTFT µs: mean={:.1} p50={:.1} p99={:.1}\n", s.mean, s.p50, s.p99));
+        }
+        out.push_str(&format!("throughput: {:.1} tok/s\n", self.throughput_tok_s()));
+        let hist: Vec<String> = self
+            .split_histogram
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(s, c)| format!("s={s}:{c}"))
+            .collect();
+        if !hist.is_empty() {
+            out.push_str(&format!("split histogram: {}\n", hist.join(" ")));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_derivations() {
+        let t = RequestTiming {
+            arrival_us: 100,
+            scheduled_us: 150,
+            first_token_us: 400,
+            finished_us: 1400,
+            n_generated: 11,
+        };
+        assert_eq!(t.queue_us(), 50);
+        assert_eq!(t.ttft_us(), 300);
+        assert_eq!(t.e2e_us(), 1300);
+        assert!((t.tpot_us() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tpot_needs_two_tokens() {
+        let t = RequestTiming { n_generated: 1, ..Default::default() };
+        assert_eq!(t.tpot_us(), 0.0);
+    }
+
+    #[test]
+    fn metrics_aggregate() {
+        let mut m = EngineMetrics::default();
+        m.record_step(10.0, 2);
+        m.record_step(20.0, 0);
+        m.record_split(1);
+        m.record_split(3);
+        m.record_split(3);
+        m.wall_us = 1_000_000;
+        assert_eq!(m.steps, 2);
+        assert_eq!(m.decode_steps, 1);
+        assert_eq!(m.tokens_generated, 2);
+        assert_eq!(m.split_histogram[3], 2);
+        assert!((m.throughput_tok_s() - 2.0).abs() < 1e-9);
+        let rep = m.report();
+        assert!(rep.contains("s=3:2"));
+    }
+}

@@ -1,0 +1,30 @@
+//! Layer 3: the serving coordinator (vLLM-shaped).
+//!
+//! The paper's improvement only materializes on the *precomputed scheduler
+//! metadata* path (§5.1) — the path where an inference stack decides
+//! `num_splits` before launch. This module is that stack: a continuous-
+//! batching decode engine whose per-step scheduler builds
+//! [`crate::heuristics::SchedulerMetadata`] from the live batch shape and
+//! routes each step to the matching AOT artifact.
+//!
+//! * [`request`]  — request/response types and lifecycle timing,
+//! * [`kv_cache`] — paged KV block manager (admission + capacity),
+//! * [`batcher`]  — continuous batcher (FCFS admission, bucket packing),
+//! * [`scheduler`]— per-step split decision + artifact routing,
+//! * [`engine`]   — the serving loop over the PJRT runtime or the H100
+//!                  simulator backend,
+//! * [`metrics`]  — TTFT/TPOT/throughput accounting.
+
+pub mod batcher;
+pub mod engine;
+pub mod kv_cache;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+
+pub use batcher::{Batcher, BatcherConfig, StepPlan};
+pub use engine::{Engine, EngineBackend, EngineConfig};
+pub use kv_cache::{BlockManager, BlockManagerConfig};
+pub use metrics::{EngineMetrics, RequestTiming};
+pub use request::{FinishReason, FinishedRequest, Request, RequestId};
+pub use scheduler::{DecodeScheduler, StepDecision};

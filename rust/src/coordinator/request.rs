@@ -1,0 +1,104 @@
+//! Request/response types for the decode engine.
+
+/// Engine-assigned request identifier.
+pub type RequestId = u64;
+
+/// An incoming generation request. Prompts are token ids (the synthetic
+/// serving model has no tokenizer — clients send ids directly).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Arrival timestamp, µs since engine start (set by the engine).
+    pub arrival_us: u64,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        Request { id, prompt, max_new_tokens, arrival_us: 0 }
+    }
+}
+
+/// Why a request finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated `max_new_tokens`.
+    Length,
+    /// KV cache would exceed the model's max_seq.
+    CacheFull,
+    /// Engine shutdown before completion.
+    Aborted,
+}
+
+/// A completed request with its generation and timing.
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub reason: FinishReason,
+    pub timing: super::metrics::RequestTiming,
+}
+
+/// Internal per-request state while scheduled.
+#[derive(Debug, Clone)]
+pub(crate) struct RunningRequest {
+    pub req: Request,
+    /// Generated tokens so far.
+    pub generated: Vec<i32>,
+    /// Tokens of the prompt already ingested into the KV cache.
+    pub prefilled: usize,
+    /// Row in the engine's KV cache tensor.
+    pub slot: usize,
+    /// µs timestamp of first generated token (TTFT), if any.
+    pub first_token_us: Option<u64>,
+    /// µs timestamp when scheduling started.
+    pub scheduled_us: u64,
+}
+
+impl RunningRequest {
+    pub fn new(req: Request, slot: usize, now_us: u64) -> RunningRequest {
+        RunningRequest {
+            req,
+            generated: Vec::new(),
+            prefilled: 0,
+            slot,
+            first_token_us: None,
+            scheduled_us: now_us,
+        }
+    }
+
+    /// Current KV length: ingested prompt + generated tokens.
+    pub fn kv_len(&self) -> usize {
+        self.prefilled + self.generated.len()
+    }
+
+    pub fn prompt_done(&self) -> bool {
+        self.prefilled >= self.req.prompt.len()
+    }
+
+    pub fn done(&self) -> bool {
+        self.prompt_done() && self.generated.len() >= self.req.max_new_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_counters() {
+        let req = Request::new(1, vec![5, 6, 7], 2);
+        let mut run = RunningRequest::new(req, 0, 100);
+        assert_eq!(run.kv_len(), 0);
+        assert!(!run.prompt_done());
+        run.prefilled = 3;
+        assert!(run.prompt_done());
+        assert!(!run.done());
+        run.generated.push(9);
+        run.generated.push(10);
+        assert!(run.done());
+        assert_eq!(run.kv_len(), 5);
+    }
+}

@@ -1,0 +1,180 @@
+//! The decode scheduler: where the paper's contribution meets the engine.
+//!
+//! Each decode step, the scheduler derives the live attention shape from
+//! the running batch (max KV length across rows, bucketed to the artifact
+//! grid), asks the configured [`SplitPolicy`] for scheduler metadata —
+//! exactly FA3's `get_scheduler_metadata()` deployment path — and routes
+//! to the AOT artifact compiled for that (bucket, num_splits).
+
+use anyhow::{Context, Result};
+
+use crate::heuristics::tiles::DecodeShape;
+use crate::heuristics::{SchedulerMetadata, SplitPolicy};
+
+/// Model attention geometry the scheduler needs (from the manifest).
+#[derive(Debug, Clone, Copy)]
+pub struct AttnGeometry {
+    pub h_q: usize,
+    pub h_kv: usize,
+    pub d: usize,
+    pub max_seq: usize,
+}
+
+/// The split decision for one engine step.
+#[derive(Debug, Clone)]
+pub struct StepDecision {
+    /// Metadata handed to the launch (the paper's precomputed-metadata path).
+    pub metadata: SchedulerMetadata,
+    /// Split count actually requested from the artifact registry (the
+    /// metadata's num_splits snapped onto the compiled split variants).
+    pub artifact_splits: usize,
+}
+
+/// Per-step split scheduler.
+pub struct DecodeScheduler {
+    policy: Box<dyn SplitPolicy>,
+    geometry: AttnGeometry,
+    /// Split variants the artifact set was compiled with (ascending).
+    available_splits: Vec<usize>,
+    pub sm_margin: usize,
+    pub pack_gqa: bool,
+}
+
+impl DecodeScheduler {
+    pub fn new(
+        policy: Box<dyn SplitPolicy>,
+        geometry: AttnGeometry,
+        mut available_splits: Vec<usize>,
+    ) -> DecodeScheduler {
+        assert!(!available_splits.is_empty(), "no split variants available");
+        available_splits.sort_unstable();
+        assert_eq!(available_splits[0], 1, "s = 1 variant must exist");
+        DecodeScheduler { policy, geometry, available_splits, sm_margin: 0, pack_gqa: true }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Decide the split schedule for a decode step over `batch` rows whose
+    /// longest row attends over `max_kv_len` cache entries.
+    pub fn decide(&self, batch: usize, max_kv_len: usize) -> Result<StepDecision> {
+        let l_k = max_kv_len.min(self.geometry.max_seq).max(1);
+        let shape =
+            DecodeShape::decode(batch, l_k, self.geometry.h_q, self.geometry.h_kv, self.geometry.d);
+        let metadata = self.policy.metadata(&shape, self.sm_margin, self.pack_gqa);
+        let artifact_splits = self.snap_splits(metadata.num_splits);
+        Ok(StepDecision { metadata, artifact_splits })
+    }
+
+    /// Snap the policy's split count onto the compiled variants: the
+    /// largest available split <= requested (falling back to 1). Static
+    /// artifact grids can't realize arbitrary s — same constraint as
+    /// CUDA-Graph-captured kernels in vLLM.
+    fn snap_splits(&self, requested: usize) -> usize {
+        self.available_splits
+            .iter()
+            .copied()
+            .filter(|&s| s <= requested)
+            .next_back()
+            .unwrap_or(1)
+    }
+
+    pub fn geometry(&self) -> AttnGeometry {
+        self.geometry
+    }
+
+    pub fn available_splits(&self) -> &[usize] {
+        &self.available_splits
+    }
+}
+
+impl std::fmt::Debug for DecodeScheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DecodeScheduler")
+            .field("policy", &self.policy.name())
+            .field("geometry", &self.geometry)
+            .field("available_splits", &self.available_splits)
+            .finish()
+    }
+}
+
+/// Build the scheduler from a loaded manifest (geometry + split variants
+/// come from the artifacts themselves, so engine and artifacts can't skew).
+pub fn scheduler_from_manifest(
+    manifest: &crate::runtime::Manifest,
+    policy: Box<dyn SplitPolicy>,
+) -> Result<DecodeScheduler> {
+    let model = manifest.model.as_ref().context("manifest has no model block")?;
+    let geometry = AttnGeometry {
+        h_q: model.config.n_heads_q,
+        h_kv: model.config.n_heads_kv,
+        d: model.config.head_dim,
+        max_seq: model.config.max_seq,
+    };
+    let mut splits: Vec<usize> = manifest
+        .entries
+        .iter()
+        .filter(|e| e.kind == crate::runtime::ArtifactKind::Decode)
+        .filter_map(|e| e.meta.num_splits)
+        .collect();
+    splits.sort_unstable();
+    splits.dedup();
+    Ok(DecodeScheduler::new(policy, geometry, splits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::heuristics::{SequenceAwarePolicy, StandardPolicy};
+
+    fn geom() -> AttnGeometry {
+        AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 }
+    }
+
+    #[test]
+    fn patched_policy_splits_in_boundary_bucket() {
+        let s = DecodeScheduler::new(Box::new(SequenceAwarePolicy), geom(), vec![1, 3]);
+        let d = s.decide(1, 512).unwrap();
+        assert_eq!(d.metadata.num_splits, 3);
+        assert_eq!(d.artifact_splits, 3);
+        // Short context: unchanged.
+        let d = s.decide(1, 384).unwrap();
+        assert_eq!(d.metadata.num_splits, 1);
+        assert_eq!(d.artifact_splits, 1);
+    }
+
+    #[test]
+    fn standard_policy_never_splits_short() {
+        let s = DecodeScheduler::new(Box::new(StandardPolicy), geom(), vec![1, 3]);
+        for kv in [64, 128, 384, 512] {
+            let d = s.decide(1, kv).unwrap();
+            assert_eq!(d.artifact_splits, 1, "kv={kv}");
+        }
+    }
+
+    #[test]
+    fn snapping_caps_to_available_variants() {
+        // Long context: the efficiency loop may ask for s = 8; with only
+        // {1, 3} compiled, snap down to 3.
+        let s = DecodeScheduler::new(Box::new(StandardPolicy), geom(), vec![1, 3]);
+        let d = s.decide(1, 1024).unwrap(); // nblk = 8 > 4: loop engages
+        assert!(d.metadata.num_splits > 1);
+        assert_eq!(d.artifact_splits, 3);
+    }
+
+    #[test]
+    fn kv_len_clamped_to_max_seq() {
+        let s = DecodeScheduler::new(Box::new(SequenceAwarePolicy), geom(), vec![1, 3]);
+        let d = s.decide(1, 4096).unwrap();
+        assert_eq!(d.metadata.shape.l_k, 1024);
+        let d0 = s.decide(1, 0).unwrap();
+        assert_eq!(d0.metadata.shape.l_k, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn requires_split_one_variant() {
+        DecodeScheduler::new(Box::new(StandardPolicy), geom(), vec![3]);
+    }
+}

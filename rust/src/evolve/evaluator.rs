@@ -1,0 +1,191 @@
+//! Fitness evaluation + the invalid-candidate rejector.
+//!
+//! §3.2: "The evaluation framework compiled and cached target variants via
+//! a subprocess evaluator, rejecting invalid or numerically unstable
+//! candidates." Our analog: numerics are invariant by construction (split
+//! count never changes the math — the L1 tests prove it) and out-of-range
+//! knobs are clamped by the genome, so "invalid/unstable" maps to
+//! *pathological* behavior: a genome is rejected if it regresses any
+//! safety-panel configuration by more than `tolerance` (default 15%) —
+//! e.g. forcing wide splits on dense grids, where the combine's atomic
+//! contention bites (§5.3). Small off-target regressions are NOT rejected:
+//! the paper's own Figure-1 candidate has them, which is exactly why §4
+//! distills a conservative C++ rule afterwards.
+//!
+//! Fitness: mean attention TPOT (µs) over the §3.1 chat panel —
+//! short-prompt, Batch = 1 generations — plus a tiny parsimony term so
+//! equal-TPOT genomes prefer fewer rules (the paper's distillation
+//! pressure toward a small upstreamable rule).
+
+use crate::heuristics::tiles::DecodeShape;
+use crate::sim::Simulator;
+use crate::workload::chatgen::ChatWorkload;
+
+use super::genome::Genome;
+
+/// Evaluation outcome.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    /// Mean TPOT over the fitness panel, µs (lower is better).
+    pub tpot_us: f64,
+    /// Fitness including parsimony (what selection uses).
+    pub fitness: f64,
+    /// None if valid; Some(reason) if rejected.
+    pub rejected: Option<String>,
+}
+
+impl EvalResult {
+    pub fn is_valid(&self) -> bool {
+        self.rejected.is_none()
+    }
+}
+
+/// The evaluator: simulator + panels.
+pub struct Evaluator {
+    sim: Simulator,
+    /// (prompt_len, n_tokens) fitness generations (Batch = 1 chat).
+    fitness_panel: Vec<(usize, usize)>,
+    /// Safety shapes that must not regress vs upstream.
+    safety_panel: Vec<DecodeShape>,
+    /// Allowed relative regression before rejection (measurement noise).
+    pub tolerance: f64,
+    /// Parsimony weight, µs per rule.
+    pub parsimony_us: f64,
+}
+
+impl Evaluator {
+    pub fn new(sim: Simulator) -> Evaluator {
+        Evaluator {
+            sim,
+            fitness_panel: ChatWorkload::evolution_panel(),
+            safety_panel: crate::workload::shapes::regression_grid(),
+            tolerance: 0.15,
+            parsimony_us: 0.02,
+        }
+    }
+
+    /// Mean attention TPOT of `genome` over the fitness panel.
+    pub fn panel_tpot_us(&self, genome: &Genome) -> f64 {
+        let mut total = 0.0;
+        let mut steps = 0usize;
+        for &(prompt, n_tokens) in &self.fitness_panel {
+            for step in 0..n_tokens {
+                let l_k = prompt + step + 1;
+                let shape = DecodeShape::llama70b_tp8(1, l_k);
+                let md = genome.decide(&shape);
+                total += self.sim.kernel_us(&md);
+                steps += 1;
+            }
+        }
+        total / steps as f64
+    }
+
+    /// Full evaluation: fitness + safety rejection.
+    pub fn evaluate(&self, genome: &Genome) -> EvalResult {
+        // Safety: compare against upstream on the §5.3 grid.
+        let upstream = Genome::upstream();
+        for shape in &self.safety_panel {
+            let t_up = self.sim.kernel_us(&upstream.decide(shape));
+            let t_ge = self.sim.kernel_us(&genome.decide(shape));
+            if t_ge > t_up * (1.0 + self.tolerance) {
+                return EvalResult {
+                    tpot_us: f64::INFINITY,
+                    fitness: f64::INFINITY,
+                    rejected: Some(format!(
+                        "regression at B={} L_K={} H_KV={}: {:.2}µs vs upstream {:.2}µs",
+                        shape.batch, shape.l_k, shape.h_kv, t_ge, t_up
+                    )),
+                };
+            }
+        }
+        let tpot = self.panel_tpot_us(genome);
+        EvalResult {
+            tpot_us: tpot,
+            fitness: tpot + self.parsimony_us * genome.complexity() as f64,
+            rejected: None,
+        }
+    }
+
+    pub fn simulator(&self) -> &Simulator {
+        &self.sim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evolve::genome::Rule;
+
+    fn eval() -> Evaluator {
+        Evaluator::new(Simulator::h100())
+    }
+
+    #[test]
+    fn upstream_is_valid_baseline() {
+        let e = eval();
+        let r = e.evaluate(&Genome::upstream());
+        assert!(r.is_valid());
+        assert!(r.tpot_us > 0.0);
+    }
+
+    #[test]
+    fn figure1_candidate_beats_upstream() {
+        // The paper's evolved candidate must win on the chat panel —
+        // that's the §3 observation that motivated everything.
+        let e = eval();
+        let up = e.evaluate(&Genome::upstream());
+        let fig1 = e.evaluate(&Genome::figure1());
+        assert!(fig1.is_valid(), "{:?}", fig1.rejected);
+        assert!(
+            fig1.tpot_us < up.tpot_us,
+            "figure1 {:.2} should beat upstream {:.2}",
+            fig1.tpot_us,
+            up.tpot_us
+        );
+    }
+
+    #[test]
+    fn harmful_genome_rejected() {
+        // Forcing huge splits on saturated dense shapes adds combine
+        // overhead: the safety panel must reject it.
+        let g = Genome {
+            rules: vec![Rule {
+                batch_max: usize::MAX,
+                lk_min: 1,
+                lk_max: usize::MAX,
+                hkv_max: usize::MAX,
+                num_splits: 64,
+                pack_gqa: true,
+                sm_margin: 0,
+            }],
+        };
+        let r = eval().evaluate(&g);
+        assert!(!r.is_valid());
+        assert!(r.fitness.is_infinite());
+    }
+
+    #[test]
+    fn parsimony_breaks_ties() {
+        let e = eval();
+        // Two genomes with identical decisions but different rule counts:
+        // a redundant duplicate rule must score slightly worse.
+        let lean = Genome {
+            rules: vec![Rule {
+                batch_max: 1,
+                lk_min: 385,
+                lk_max: 512,
+                hkv_max: 2,
+                num_splits: 3,
+                pack_gqa: true,
+                sm_margin: 0,
+            }],
+        };
+        let mut fat = lean.clone();
+        fat.rules.push(lean.rules[0].clone());
+        let r_lean = e.evaluate(&lean);
+        let r_fat = e.evaluate(&fat);
+        assert!(r_lean.is_valid() && r_fat.is_valid());
+        assert!((r_lean.tpot_us - r_fat.tpot_us).abs() < 1e-9);
+        assert!(r_lean.fitness < r_fat.fitness);
+    }
+}

@@ -1,0 +1,219 @@
+//! The heuristic genome: an ordered rule list over the three knobs §3.1
+//! exposed to the search (num_splits, pack_gqa, sm_margin).
+//!
+//! This is exactly the *shape* of the evolved Python heuristics the paper
+//! shows (Figure 1): nested conditions on batch size and sequence length
+//! selecting a split count. First matching rule wins; unmatched shapes
+//! fall through to the upstream C++ heuristic, so a genome is always a
+//! *delta* against upstream — the same property that made the paper's
+//! final patch upstreamable.
+
+use crate::heuristics::standard::num_splits_heuristic_upstream;
+use crate::heuristics::tiles::DecodeShape;
+use crate::heuristics::{DispatchPath, SchedulerMetadata, H100_NUM_SMS, MAX_SPLITS};
+
+/// One condition→action rule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Rule {
+    /// Applies when `batch <= batch_max`.
+    pub batch_max: usize,
+    /// Applies when `lk_min <= l_k <= lk_max`.
+    pub lk_min: usize,
+    pub lk_max: usize,
+    /// Applies when `h_kv <= hkv_max`.
+    pub hkv_max: usize,
+    /// Action: forced split count.
+    pub num_splits: usize,
+    /// Action: GQA packing layout.
+    pub pack_gqa: bool,
+    /// Action: SMs reserved for the combine scheduler.
+    pub sm_margin: usize,
+}
+
+impl Rule {
+    pub fn matches(&self, shape: &DecodeShape) -> bool {
+        shape.batch <= self.batch_max
+            && (self.lk_min..=self.lk_max).contains(&shape.l_k)
+            && shape.h_kv <= self.hkv_max
+    }
+}
+
+/// An evolved heuristic: ordered rules with upstream fallback.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Genome {
+    pub rules: Vec<Rule>,
+}
+
+impl Genome {
+    /// The identity genome: always falls through to upstream.
+    pub fn upstream() -> Genome {
+        Genome { rules: Vec::new() }
+    }
+
+    /// The paper's Figure-1 evolved candidate, transcribed:
+    /// `batch==1 → s=12, pack_gqa, margin 0; seqlen<256 → s=16`.
+    pub fn figure1() -> Genome {
+        Genome {
+            rules: vec![
+                Rule {
+                    batch_max: 1,
+                    lk_min: 1,
+                    lk_max: 255,
+                    hkv_max: usize::MAX,
+                    num_splits: 16,
+                    pack_gqa: true,
+                    sm_margin: 0,
+                },
+                Rule {
+                    batch_max: 1,
+                    lk_min: 1,
+                    lk_max: 512,
+                    hkv_max: usize::MAX,
+                    num_splits: 12,
+                    pack_gqa: true,
+                    sm_margin: 0,
+                },
+            ],
+        }
+    }
+
+    /// Decide the launch schedule for `shape`.
+    pub fn decide(&self, shape: &DecodeShape) -> SchedulerMetadata {
+        for rule in &self.rules {
+            if rule.matches(shape) {
+                let num_sm = H100_NUM_SMS.saturating_sub(rule.sm_margin).max(1);
+                let _ = num_sm;
+                return SchedulerMetadata {
+                    shape: *shape,
+                    num_splits: rule.num_splits.clamp(1, MAX_SPLITS),
+                    pack_gqa: rule.pack_gqa,
+                    sm_margin: rule.sm_margin,
+                    path: DispatchPath::PrecomputedMetadata,
+                };
+            }
+        }
+        // Upstream fallback (pack_gqa on, no margin — upstream defaults).
+        let splits = num_splits_heuristic_upstream(
+            shape.total_mblocks(true),
+            H100_NUM_SMS,
+            shape.nblk(),
+            MAX_SPLITS,
+        );
+        SchedulerMetadata {
+            shape: *shape,
+            num_splits: splits,
+            pack_gqa: true,
+            sm_margin: 0,
+            path: DispatchPath::PrecomputedMetadata,
+        }
+    }
+
+    /// Structural complexity (parsimony pressure in the fitness).
+    pub fn complexity(&self) -> usize {
+        self.rules.len()
+    }
+
+    /// Render as the Python-bindings heuristic the paper's Figure 1 shows —
+    /// the human-readable artifact of the search.
+    pub fn render_python(&self) -> String {
+        let mut out = String::new();
+        out.push_str("def num_splits_heuristic(batch_size, seqlen_k, num_heads_kv):\n");
+        if self.rules.is_empty() {
+            out.push_str("    return None  # defer to the C++ heuristic\n");
+            return out;
+        }
+        for rule in &self.rules {
+            let mut conds = Vec::new();
+            if rule.batch_max != usize::MAX {
+                conds.push(if rule.batch_max == 1 {
+                    "batch_size == 1".to_string()
+                } else {
+                    format!("batch_size <= {}", rule.batch_max)
+                });
+            }
+            if rule.lk_min > 1 {
+                conds.push(format!("seqlen_k >= {}", rule.lk_min));
+            }
+            if rule.lk_max != usize::MAX {
+                conds.push(format!("seqlen_k <= {}", rule.lk_max));
+            }
+            if rule.hkv_max != usize::MAX {
+                conds.push(format!("num_heads_kv <= {}", rule.hkv_max));
+            }
+            let cond = if conds.is_empty() { "True".to_string() } else { conds.join(" and ") };
+            out.push_str(&format!("    if {cond}:\n"));
+            out.push_str(&format!(
+                "        return dict(num_splits={}, pack_gqa={}, sm_margin={})\n",
+                rule.num_splits,
+                if rule.pack_gqa { "True" } else { "False" },
+                rule.sm_margin
+            ));
+        }
+        out.push_str("    return None  # defer to the C++ heuristic\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_genome_is_upstream() {
+        let g = Genome::upstream();
+        let shape = DecodeShape::llama70b_tp8(1, 512);
+        let md = g.decide(&shape);
+        assert_eq!(md.num_splits, 1); // premature guard
+        let long = DecodeShape::llama70b_tp8(1, 2048);
+        assert!(g.decide(&long).num_splits > 1); // efficiency loop
+    }
+
+    #[test]
+    fn first_matching_rule_wins() {
+        let g = Genome::figure1();
+        // L_K = 200 matches the seqlen<256 rule first: s = 16.
+        assert_eq!(g.decide(&DecodeShape::llama70b_tp8(1, 200)).num_splits, 16);
+        // L_K = 400 falls to the second rule: s = 12.
+        assert_eq!(g.decide(&DecodeShape::llama70b_tp8(1, 400)).num_splits, 12);
+        // Batch 2 matches nothing: upstream (guard ⇒ 1).
+        assert_eq!(g.decide(&DecodeShape::llama70b_tp8(2, 400)).num_splits, 1);
+        // Beyond 512 matches nothing: falls through to upstream, which is
+        // past the guard there (nblk = 5 ⇒ efficiency loop).
+        let beyond = DecodeShape::llama70b_tp8(1, 513);
+        let up = crate::heuristics::standard::num_splits_heuristic_upstream(
+            beyond.total_mblocks(true),
+            H100_NUM_SMS,
+            beyond.nblk(),
+            MAX_SPLITS,
+        );
+        assert_eq!(g.decide(&beyond).num_splits, up);
+        assert!(up > 1, "nblk=5 engages the efficiency loop");
+    }
+
+    #[test]
+    fn split_counts_clamped() {
+        let g = Genome {
+            rules: vec![Rule {
+                batch_max: usize::MAX,
+                lk_min: 1,
+                lk_max: usize::MAX,
+                hkv_max: usize::MAX,
+                num_splits: 10_000,
+                pack_gqa: true,
+                sm_margin: 0,
+            }],
+        };
+        assert_eq!(g.decide(&DecodeShape::llama70b_tp8(1, 512)).num_splits, MAX_SPLITS);
+    }
+
+    #[test]
+    fn render_python_shape() {
+        let code = Genome::figure1().render_python();
+        assert!(code.contains("batch_size == 1"));
+        assert!(code.contains("num_splits=12"));
+        assert!(code.contains("num_splits=16"));
+        assert!(code.contains("seqlen_k <= 255"));
+        let empty = Genome::upstream().render_python();
+        assert!(empty.contains("defer to the C++ heuristic"));
+    }
+}

@@ -1,0 +1,27 @@
+//! Evolutionary search over split-scheduling heuristics — the OpenEvolve
+//! analog (§3).
+//!
+//! The paper discovered the premature-guard flaw by letting an LLM-guided
+//! evolutionary loop rewrite the Python-level scheduling logic
+//! (`num_splits`, `pack_gqa`, `sm_margin`) against a live H100, with model
+//! semantics frozen. We reproduce that discovery loop with the same search
+//! space and the same fitness signal (TPOT on short-prompt Batch=1 chat
+//! decode), swapping the live GPU for the calibrated simulator and the LLM
+//! mutation proposer for typed mutations over a rule-DSL genome:
+//!
+//! * [`genome`]    — ordered condition→(s, pack_gqa, sm_margin) rules with
+//!                   upstream fallback (what Figure 1's evolved Python is),
+//! * [`mutate`]    — mutation + crossover operators,
+//! * [`evaluator`] — fitness (panel TPOT) + the invalid-candidate rejector
+//!                   (the paper's subprocess evaluator),
+//! * [`search`]    — the generational loop.
+
+pub mod evaluator;
+pub mod genome;
+pub mod mutate;
+pub mod search;
+
+pub use evaluator::{EvalResult, Evaluator};
+pub use genome::{Genome, Rule};
+pub use mutate::Mutator;
+pub use search::{Search, SearchConfig, SearchReport};

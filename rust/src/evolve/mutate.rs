@@ -1,0 +1,200 @@
+//! Mutation and crossover operators over the rule-DSL genome.
+//!
+//! These replace the paper's LLM proposer: typed edits that preserve
+//! well-formedness (ranges stay ordered, knobs stay in bounds) while
+//! exploring the same space the LLM explored — split counts, sequence
+//! ranges, batch/head conditions, layout and margin knobs.
+
+use crate::util::prng::Rng;
+
+use super::genome::{Genome, Rule};
+
+/// Bounds for generated rules.
+const LK_MAX: usize = 8192;
+const SPLIT_CHOICES: [usize; 10] = [1, 2, 3, 4, 6, 8, 12, 16, 24, 32];
+const MARGIN_CHOICES: [usize; 4] = [0, 4, 8, 16];
+
+/// Mutation engine.
+pub struct Mutator {
+    /// Probability of structural edits (add/remove rule) vs knob tweaks.
+    pub p_structural: f64,
+}
+
+impl Default for Mutator {
+    fn default() -> Self {
+        Mutator { p_structural: 0.3 }
+    }
+}
+
+impl Mutator {
+    /// A random well-formed rule (used for seeding and add-rule edits).
+    pub fn random_rule(&self, rng: &mut Rng) -> Rule {
+        let lk_a = rng.range(1, LK_MAX);
+        let lk_b = rng.range(1, LK_MAX);
+        Rule {
+            batch_max: *rng.choose(&[1, 1, 1, 2, 4, usize::MAX]),
+            lk_min: lk_a.min(lk_b),
+            lk_max: lk_a.max(lk_b),
+            hkv_max: *rng.choose(&[1, 2, 2, 4, 8, usize::MAX]),
+            num_splits: *rng.choose(&SPLIT_CHOICES),
+            pack_gqa: rng.chance(0.85),
+            sm_margin: *rng.choose(&MARGIN_CHOICES),
+        }
+    }
+
+    /// A random single-rule genome (initial population).
+    pub fn random_genome(&self, rng: &mut Rng) -> Genome {
+        let n = rng.range(1, 2);
+        Genome { rules: (0..n).map(|_| self.random_rule(rng)).collect() }
+    }
+
+    /// Mutate in place (always changes something).
+    pub fn mutate(&self, genome: &mut Genome, rng: &mut Rng) {
+        if genome.rules.is_empty() || rng.chance(self.p_structural) {
+            self.mutate_structure(genome, rng);
+        } else {
+            self.mutate_knob(genome, rng);
+        }
+    }
+
+    fn mutate_structure(&self, genome: &mut Genome, rng: &mut Rng) {
+        let can_remove = genome.rules.len() > 1;
+        if genome.rules.is_empty() || (!can_remove && genome.rules.len() < 4) && rng.chance(0.7) {
+            genome.rules.push(self.random_rule(rng));
+        } else if can_remove && rng.chance(0.5) {
+            let i = rng.range(0, genome.rules.len() - 1);
+            genome.rules.remove(i);
+        } else if genome.rules.len() >= 2 && rng.chance(0.5) {
+            // Swap priority of two rules.
+            let i = rng.range(0, genome.rules.len() - 2);
+            genome.rules.swap(i, i + 1);
+        } else if genome.rules.len() < 6 {
+            genome.rules.push(self.random_rule(rng));
+        }
+    }
+
+    fn mutate_knob(&self, genome: &mut Genome, rng: &mut Rng) {
+        let i = rng.range(0, genome.rules.len() - 1);
+        let rule = &mut genome.rules[i];
+        match rng.range(0, 6) {
+            0 => {
+                // Nudge or resample the split count.
+                rule.num_splits = match rng.range(0, 2) {
+                    0 => (rule.num_splits + 1).min(64),
+                    1 => rule.num_splits.saturating_sub(1).max(1),
+                    _ => *rng.choose(&SPLIT_CHOICES),
+                };
+            }
+            1 => {
+                // Shift a sequence bound by a block-ish quantum.
+                let delta = *rng.choose(&[64usize, 128, 256]);
+                if rng.chance(0.5) {
+                    rule.lk_max = (rule.lk_max.saturating_add(delta)).min(LK_MAX);
+                } else {
+                    rule.lk_max = rule.lk_max.saturating_sub(delta).max(rule.lk_min);
+                }
+            }
+            2 => {
+                let delta = *rng.choose(&[64usize, 128, 256]);
+                if rng.chance(0.5) {
+                    rule.lk_min = rule.lk_min.saturating_sub(delta).max(1);
+                } else {
+                    rule.lk_min = (rule.lk_min + delta).min(rule.lk_max);
+                }
+            }
+            3 => rule.batch_max = *rng.choose(&[1, 1, 2, 4, 8, usize::MAX]),
+            4 => rule.hkv_max = *rng.choose(&[1, 2, 2, 4, 8, usize::MAX]),
+            _ => {
+                if rng.chance(0.5) {
+                    rule.pack_gqa = !rule.pack_gqa;
+                } else {
+                    rule.sm_margin = *rng.choose(&MARGIN_CHOICES);
+                }
+            }
+        }
+    }
+
+    /// One-point crossover on rule lists.
+    pub fn crossover(&self, a: &Genome, b: &Genome, rng: &mut Rng) -> Genome {
+        if a.rules.is_empty() {
+            return b.clone();
+        }
+        if b.rules.is_empty() {
+            return a.clone();
+        }
+        let cut_a = rng.range(0, a.rules.len());
+        let cut_b = rng.range(0, b.rules.len());
+        let mut rules: Vec<Rule> = a.rules[..cut_a].to_vec();
+        rules.extend_from_slice(&b.rules[cut_b..]);
+        if rules.is_empty() {
+            rules.push(a.rules[0].clone());
+        }
+        rules.truncate(6);
+        Genome { rules }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wellformed(g: &Genome) -> bool {
+        g.rules.iter().all(|r| {
+            r.lk_min <= r.lk_max && r.num_splits >= 1 && r.num_splits <= 64 && r.sm_margin <= 16
+        })
+    }
+
+    #[test]
+    fn random_genomes_wellformed() {
+        let m = Mutator::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let g = m.random_genome(&mut rng);
+            assert!(wellformed(&g));
+            assert!(!g.rules.is_empty());
+        }
+    }
+
+    #[test]
+    fn mutation_preserves_wellformedness() {
+        let m = Mutator::default();
+        let mut rng = Rng::new(2);
+        let mut g = m.random_genome(&mut rng);
+        for _ in 0..500 {
+            m.mutate(&mut g, &mut rng);
+            assert!(wellformed(&g), "{g:?}");
+            assert!(g.rules.len() <= 7);
+        }
+    }
+
+    #[test]
+    fn mutation_changes_something_often() {
+        let m = Mutator::default();
+        let mut rng = Rng::new(3);
+        let base = m.random_genome(&mut rng);
+        let mut changed = 0;
+        for _ in 0..100 {
+            let mut g = base.clone();
+            m.mutate(&mut g, &mut rng);
+            if g != base {
+                changed += 1;
+            }
+        }
+        assert!(changed > 80, "only {changed}/100 mutations changed the genome");
+    }
+
+    #[test]
+    fn crossover_mixes_parents() {
+        let m = Mutator::default();
+        let mut rng = Rng::new(4);
+        let a = Genome::figure1();
+        let b = m.random_genome(&mut rng);
+        let child = m.crossover(&a, &b, &mut rng);
+        assert!(wellformed(&child));
+        assert!(!child.rules.is_empty());
+        // Empty parent yields the other parent.
+        let up = Genome::upstream();
+        assert_eq!(m.crossover(&up, &a, &mut rng), a);
+        assert_eq!(m.crossover(&a, &up, &mut rng), a);
+    }
+}

@@ -1,0 +1,34 @@
+//! Split-KV scheduling heuristics — the paper's subject and contribution.
+//!
+//! FlashAttention-3's Hopper dispatch logic decides, per kernel launch, how
+//! many *sequence splits* (`num_splits`, the paper's `s`) to carve the KV
+//! reduction into. More splits ⇒ more CTAs ⇒ better SM occupancy, at the
+//! cost of a final split-combine reduction. This module contains:
+//!
+//! * [`tiles`]           — the tile/shape arithmetic shared by everything
+//!                         (`nblk`, `total_mblocks`, split geometry),
+//! * [`standard`]        — a faithful port of the upstream `heuristics.h`
+//!                         decision function, including the premature
+//!                         `L_K <= 512` guard the paper diagnoses (§2.2),
+//! * [`sequence_aware`]  — the paper's conservative patch (Figure 2),
+//! * [`metadata`]        — the precomputed-scheduler-metadata launch path
+//!                         (vLLM-style, §5.1) and the policy trait.
+
+pub mod extended;
+pub mod metadata;
+pub mod sequence_aware;
+pub mod standard;
+pub mod tiles;
+
+pub use extended::ExtendedPolicy;
+pub use metadata::{DispatchPath, SchedulerMetadata, SplitPolicy};
+pub use sequence_aware::SequenceAwarePolicy;
+pub use standard::StandardPolicy;
+pub use tiles::{DecodeShape, SplitGeometry};
+
+/// H100 SXM5 streaming-multiprocessor count — the hardware constant the
+/// whole occupancy argument revolves around (§2.1).
+pub const H100_NUM_SMS: usize = 132;
+
+/// Upstream FA3 cap on split counts.
+pub const MAX_SPLITS: usize = 128;

@@ -1,0 +1,172 @@
+//! The paper's contribution: the sequence-aware split policy (Figure 2).
+//!
+//! A conservative, upstreamable modification of `heuristics.h`: keep every
+//! existing decision *except* in the low-tile `nblk == 4` boundary bucket
+//! (`384 < L_K <= 512`), where the premature guard strands the H100. There,
+//! if fewer than 4 work tiles exist (`Batch * H_KV < 4` for packed decode),
+//! override to a small split count (`s = 3` on the current stack).
+//!
+//! Verbatim policy from the paper:
+//!
+//! ```c
+//! // Guard 1: L_K <= 384 (nblk <= 3) - leave shorter contexts unchanged
+//! if (num_n_blocks <= 3) { return 1; }
+//! // Guard 2: nblk = 4 boundary bucket with enough tiles
+//! if (num_n_blocks <= 4 && total_mblocks >= 4) { return 1; }
+//! // Low-tile boundary case: demonstrate the idea with one small override
+//! if (num_n_blocks == 4 && total_mblocks < 4) { return 3; }
+//! // For longer contexts, existing efficiency loop runs (unchanged)
+//! ```
+
+use super::metadata::SplitPolicy;
+use super::standard::efficiency_loop;
+use super::tiles::DecodeShape;
+
+/// Split count the paper's policy uses in the low-tile boundary bucket:
+/// "the smallest split that enters the low-latency regime" (§5.2).
+pub const BOUNDARY_SPLIT: usize = 3;
+
+/// Tile threshold below which the boundary bucket counts as SM-starved.
+pub const LOW_TILE_THRESHOLD: usize = 4;
+
+/// The patched policy.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SequenceAwarePolicy;
+
+/// The patched decision function — `heuristics.h` with Figure 2 applied.
+pub fn num_splits_heuristic_patched(
+    total_mblocks: usize,
+    num_sm: usize,
+    num_n_blocks: usize,
+    max_splits: usize,
+) -> usize {
+    // Unchanged upstream prelude: saturated grids never split.
+    if total_mblocks as f32 >= 0.8 * num_sm as f32 {
+        return 1;
+    }
+    // Guard 1: L_K <= 384 (nblk <= 3) — shorter contexts left unchanged in
+    // this initial policy (§4.1 documents wins may exist here; future work).
+    if num_n_blocks <= 3 {
+        return 1;
+    }
+    // Guard 2: nblk = 4 boundary bucket with enough tiles — keep s = 1.
+    if num_n_blocks <= 4 && total_mblocks >= LOW_TILE_THRESHOLD {
+        return 1;
+    }
+    // Low-tile boundary case (the paper's demonstration): nblk = 4 and the
+    // SMs are starved ⇒ small conservative split.
+    if num_n_blocks == 4 && total_mblocks < LOW_TILE_THRESHOLD {
+        return BOUNDARY_SPLIT;
+    }
+    // Longer contexts: the pre-existing efficiency loop, unchanged.
+    efficiency_loop(total_mblocks, num_sm, num_n_blocks, max_splits)
+}
+
+impl SplitPolicy for SequenceAwarePolicy {
+    fn name(&self) -> &'static str {
+        "sequence-aware"
+    }
+
+    fn num_splits(&self, shape: &DecodeShape, num_sm: usize, pack_gqa: bool) -> usize {
+        num_splits_heuristic_patched(
+            shape.total_mblocks(pack_gqa),
+            num_sm,
+            shape.nblk(),
+            super::MAX_SPLITS,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::heuristics::{SplitPolicy, StandardPolicy, H100_NUM_SMS};
+
+    fn patched(b: usize, l_k: usize, h_kv: usize) -> usize {
+        let shape = DecodeShape::decode(b, l_k, 8 * h_kv, h_kv, 128);
+        SequenceAwarePolicy.num_splits(&shape, H100_NUM_SMS, true)
+    }
+
+    fn standard(b: usize, l_k: usize, h_kv: usize) -> usize {
+        let shape = DecodeShape::decode(b, l_k, 8 * h_kv, h_kv, 128);
+        StandardPolicy.num_splits(&shape, H100_NUM_SMS, true)
+    }
+
+    #[test]
+    fn guard1_short_contexts_unchanged() {
+        for l_k in [1, 64, 128, 256, 384] {
+            for h_kv in [1, 2, 8] {
+                assert_eq!(patched(1, l_k, h_kv), 1, "l_k={l_k} h_kv={h_kv}");
+            }
+        }
+    }
+
+    #[test]
+    fn low_tile_boundary_bucket_overrides_to_three() {
+        // Table 1's winning cells: L_K = 512, B = 1, H_KV in {1, 2} ⇒ tiles
+        // in {1, 2} < 4 ⇒ s = 3.
+        assert_eq!(patched(1, 512, 1), BOUNDARY_SPLIT);
+        assert_eq!(patched(1, 512, 2), BOUNDARY_SPLIT);
+        // Any L_K in the nblk = 4 bucket behaves identically.
+        assert_eq!(patched(1, 385, 1), BOUNDARY_SPLIT);
+        assert_eq!(patched(1, 448, 1), BOUNDARY_SPLIT);
+        // Batch 2 x H_KV 1 = 2 tiles < 4: also covered by the override.
+        assert_eq!(patched(2, 512, 1), BOUNDARY_SPLIT);
+    }
+
+    #[test]
+    fn guard2_saturated_boundary_unchanged() {
+        // H_KV >= 4 ⇒ tiles >= 4 ⇒ keep s = 1 (§5.3: "the H_KV in {4, 8, 32}
+        // cases remain unchanged because both heuristics resolve to s = 1").
+        assert_eq!(patched(1, 512, 4), 1);
+        assert_eq!(patched(1, 512, 8), 1);
+        assert_eq!(patched(1, 512, 32), 1);
+        assert_eq!(patched(4, 512, 1), 1); // Batch*H_KV = 4 tiles
+        assert_eq!(patched(8, 512, 8), 1); // dense: would add combine overhead
+    }
+
+    #[test]
+    fn longer_contexts_fall_through_identically() {
+        // Table 1's 2048/4096 controls: patched == standard.
+        for l_k in [640, 1024, 2048, 4096, 8192] {
+            for h_kv in [1, 2, 8] {
+                for b in [1, 2, 8] {
+                    assert_eq!(
+                        patched(b, l_k, h_kv),
+                        standard(b, l_k, h_kv),
+                        "b={b} l_k={l_k} h_kv={h_kv}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn patch_differs_only_in_boundary_bucket() {
+        // Exhaustive: the two policies may differ ONLY when nblk == 4 and
+        // tiles < 4 — the paper's "no broader policy surface" claim.
+        for b in [1, 2, 4, 8, 16] {
+            for l_k in (64..=8192).step_by(64) {
+                for h_kv in [1, 2, 4, 8, 32] {
+                    let shape = DecodeShape::decode(b, l_k, 8 * h_kv, h_kv, 128);
+                    let s_std = standard(b, l_k, h_kv);
+                    let s_pat = patched(b, l_k, h_kv);
+                    if s_std != s_pat {
+                        assert_eq!(shape.nblk(), 4, "unexpected diff at l_k={l_k}");
+                        assert!(shape.total_mblocks(true) < LOW_TILE_THRESHOLD);
+                        assert_eq!(s_std, 1);
+                        assert_eq!(s_pat, BOUNDARY_SPLIT);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn saturated_prelude_still_wins() {
+        // Even in the boundary bucket, a saturated grid keeps s = 1 via the
+        // unchanged 0.8 * SM prelude (tiles >= 106 with nblk = 4 needs
+        // batch * h_kv >= 106, e.g. batch 14 x h_kv 8).
+        assert_eq!(patched(14, 512, 8), 1);
+    }
+}

@@ -1,0 +1,163 @@
+//! Faithful port of the upstream FlashAttention-3 Hopper split heuristic
+//! (`hopper/heuristics.h::num_splits_heuristic`), including the premature
+//! short-sequence guard the paper diagnoses (§2.2): `num_n_blocks <= 4`
+//! (i.e. `L_K <= 512`) unconditionally returns `num_splits = 1`, no matter
+//! how few work tiles exist relative to the 132 H100 SMs.
+
+use super::metadata::SplitPolicy;
+use super::tiles::DecodeShape;
+
+/// The unpatched upstream policy.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StandardPolicy;
+
+/// Core upstream decision function. Arguments mirror `heuristics.h`:
+///
+/// * `total_mblocks` — aggregate work-tile count before splitting
+///   (`Batch * H_KV` for packed decode),
+/// * `num_sm` — SMs available to the grid (132 minus `sm_margin`),
+/// * `num_n_blocks` — KV-sequence blocks of 128 (`nblk`),
+/// * `max_splits` — upstream cap (128).
+///
+/// Returns the chosen `num_splits`.
+pub fn num_splits_heuristic_upstream(
+    total_mblocks: usize,
+    num_sm: usize,
+    num_n_blocks: usize,
+    max_splits: usize,
+) -> usize {
+    // If we have enough tiles to almost fill the SMs, use 1 split.
+    if total_mblocks as f32 >= 0.8 * num_sm as f32 {
+        return 1;
+    }
+    // THE PREMATURE GUARD (§2.2): "an explicit guard in the underlying C++
+    // heuristic returns s = 1 if the sequence length L_K <= 512". This is
+    // the line the paper's patch replaces.
+    if num_n_blocks <= 4 {
+        return 1;
+    }
+    efficiency_loop(total_mblocks, num_sm, num_n_blocks, max_splits)
+}
+
+/// The pre-existing wave-quantization efficiency loop that runs for longer
+/// contexts (unchanged by the paper's patch — its behavior on
+/// `L_K >= 640` is why Table 1's 2048/4096 rows are 1.00x controls).
+pub fn efficiency_loop(
+    total_mblocks: usize,
+    num_sm: usize,
+    num_n_blocks: usize,
+    max_splits: usize,
+) -> usize {
+    let max_splits = max_splits.min(num_sm).min(num_n_blocks).max(1);
+
+    // A split count is only *eligible* if it changes the per-split block
+    // count: ceil(nblk/s) == ceil(nblk/(s-1)) means s buys nothing over
+    // s-1 (it only adds empty splits).
+    let ceildiv = |a: usize, b: usize| a.div_ceil(b);
+    let eligible = |s: usize| s == 1 || ceildiv(num_n_blocks, s) != ceildiv(num_n_blocks, s - 1);
+
+    let mut efficiency = Vec::with_capacity(max_splits);
+    let mut max_efficiency = 0.0_f32;
+    for s in 1..=max_splits {
+        if !eligible(s) {
+            efficiency.push(0.0);
+            continue;
+        }
+        let n_waves = (total_mblocks * s) as f32 / num_sm as f32;
+        let eff = n_waves / n_waves.ceil();
+        if eff > max_efficiency {
+            max_efficiency = eff;
+        }
+        efficiency.push(eff);
+    }
+    // Pick the smallest split whose wave efficiency is within 85% of the
+    // best achievable.
+    for s in 1..=max_splits {
+        if efficiency[s - 1] >= 0.85 * max_efficiency {
+            return s;
+        }
+    }
+    1
+}
+
+impl SplitPolicy for StandardPolicy {
+    fn name(&self) -> &'static str {
+        "standard"
+    }
+
+    fn num_splits(&self, shape: &DecodeShape, num_sm: usize, pack_gqa: bool) -> usize {
+        num_splits_heuristic_upstream(
+            shape.total_mblocks(pack_gqa),
+            num_sm,
+            shape.nblk(),
+            super::MAX_SPLITS,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::heuristics::{SplitPolicy, H100_NUM_SMS};
+
+    fn splits(b: usize, l_k: usize, h_kv: usize) -> usize {
+        let shape = DecodeShape::decode(b, l_k, 8 * h_kv, h_kv, 128);
+        StandardPolicy.num_splits(&shape, H100_NUM_SMS, true)
+    }
+
+    #[test]
+    fn premature_guard_forces_one_split_short_contexts() {
+        // §2.2: every L_K <= 512 shape resolves to s = 1, even B=1/H_KV=1
+        // where only one tile exists for 132 SMs.
+        for l_k in [1, 128, 256, 384, 512] {
+            for h_kv in [1, 2, 8] {
+                assert_eq!(splits(1, l_k, h_kv), 1, "l_k={l_k} h_kv={h_kv}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturated_grids_never_split() {
+        // 0.8 * 132 ≈ 105.6 tiles ⇒ no splitting even for long contexts.
+        assert_eq!(splits(16, 8192, 8), 1); // 128 tiles >= 105.6
+        assert_eq!(splits(8, 4096, 32), 1); // 256 tiles
+    }
+
+    #[test]
+    fn long_low_tile_contexts_do_split() {
+        // The existing efficiency loop engages past the guard (nblk > 4):
+        // B=1, H_KV=1, L_K=2048 (nblk=16) has 1 tile — splitting is chosen.
+        assert!(splits(1, 2048, 1) > 1);
+        assert!(splits(1, 4096, 1) > 1);
+        assert!(splits(1, 640, 1) > 1); // nblk = 5, just past the guard
+    }
+
+    #[test]
+    fn efficiency_loop_eligibility() {
+        // nblk = 16, 1 tile: eligible split counts change ceil(16/s).
+        // The loop returns the smallest split within 85% of max efficiency.
+        let s = efficiency_loop(1, H100_NUM_SMS, 16, 128);
+        assert!(s >= 1 && s <= 16);
+        // With one tile and <= 132 SMs, more splits strictly help wave
+        // efficiency; the best eligible value is 16 (one block per split).
+        assert_eq!(s, 16);
+    }
+
+    #[test]
+    fn efficiency_loop_respects_caps() {
+        assert_eq!(efficiency_loop(1, 4, 1000, 2), 2); // max_splits cap
+        let s = efficiency_loop(1, 2, 1000, 128); // SM cap
+        assert!(s <= 2);
+        // Saturation is handled by the 0.8*SM prelude in the caller, not
+        // the loop itself: the full heuristic returns 1 for many tiles.
+        assert_eq!(num_splits_heuristic_upstream(200, 132, 100, 128), 1);
+    }
+
+    #[test]
+    fn boundary_nblk_five_escapes_guard() {
+        // L_K = 640 ⇒ nblk = 5: first length past the guard.
+        assert_eq!(DecodeShape::llama70b_tp8(1, 640).nblk(), 5);
+        assert!(splits(1, 640, 1) > 1);
+        assert_eq!(splits(1, 512, 1), 1);
+    }
+}

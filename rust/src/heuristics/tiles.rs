@@ -1,0 +1,190 @@
+//! Tile/shape arithmetic shared by the heuristics, the simulator, and the
+//! coordinator. Mirrors `python/compile/kernels/flash_decode.split_geometry`
+//! (tested for agreement in python/tests/test_kernel.py and here).
+
+/// KV-block granularity (FA3 Hopper `kBlockN`): the heuristic counts
+/// sequence blocks of 128.
+pub const KV_BLOCK: usize = 128;
+
+/// Query-block granularity (FA3 Hopper `kBlockM` for the decode kernel):
+/// with `pack_gqa`, the query-head group is folded into the M dimension, so
+/// a group of up to this many rows still occupies a single M-block.
+pub const Q_BLOCK: usize = 64;
+
+/// One decode-attention launch shape: the paper's tuple
+/// `(Batch, L_Q, L_K, H_Q, H_KV, D)` with `L_Q = 1` for autoregressive
+/// decoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DecodeShape {
+    pub batch: usize,
+    pub l_q: usize,
+    pub l_k: usize,
+    pub h_q: usize,
+    pub h_kv: usize,
+    pub d: usize,
+}
+
+impl DecodeShape {
+    /// Decode-step shape (`L_Q = 1`), the regime the paper studies.
+    pub fn decode(batch: usize, l_k: usize, h_q: usize, h_kv: usize, d: usize) -> DecodeShape {
+        DecodeShape { batch, l_q: 1, l_k, h_q, h_kv, d }
+    }
+
+    /// The paper's running example: Llama-3.1-70B under TP-8 ⇒ per-device
+    /// `H_Q = 8, H_KV = 1, D = 128` (§5.1).
+    pub fn llama70b_tp8(batch: usize, l_k: usize) -> DecodeShape {
+        DecodeShape::decode(batch, l_k, 8, 1, 128)
+    }
+
+    pub fn group_size(&self) -> usize {
+        assert!(
+            self.h_q % self.h_kv == 0,
+            "H_Q={} not divisible by H_KV={}",
+            self.h_q,
+            self.h_kv
+        );
+        self.h_q / self.h_kv
+    }
+
+    /// Number of KV sequence blocks: the heuristic's `num_n_blocks`.
+    /// `nblk = 4` ⇔ `384 < L_K <= 512` — the paper's boundary bucket.
+    pub fn nblk(&self) -> usize {
+        self.l_k.div_ceil(KV_BLOCK)
+    }
+
+    /// M-blocks per (batch, kv-head) unit of work. With `pack_gqa` the
+    /// query group rides along the M dimension (`L_Q * group` rows); without
+    /// it each query head is its own scheduling unit.
+    pub fn m_blocks(&self, pack_gqa: bool) -> usize {
+        if pack_gqa {
+            (self.l_q * self.group_size()).div_ceil(Q_BLOCK)
+        } else {
+            self.l_q.div_ceil(Q_BLOCK)
+        }
+    }
+
+    /// The heuristic's `total_mblocks`: aggregate work-tile count before
+    /// splitting. For decode (`L_Q = 1`) with `pack_gqa` this reduces to
+    /// `Batch * H_KV` (§4: "the earlier Batch × H_KV intuition").
+    pub fn total_mblocks(&self, pack_gqa: bool) -> usize {
+        let heads = if pack_gqa { self.h_kv } else { self.h_q };
+        self.batch * heads * self.m_blocks(pack_gqa)
+    }
+
+    /// Bytes of one KV head's K+V data (f16/bf16 = 2 bytes each of K and V):
+    /// `size_one_kv_head` in upstream `heuristics.h`, used by its eligibility
+    /// logic and by our simulator's memory model.
+    pub fn size_one_kv_head_bytes(&self, dtype_bytes: usize) -> usize {
+        2 * self.l_k * self.d * dtype_bytes
+    }
+}
+
+/// Static split geometry (mirrors the Python `split_geometry`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitGeometry {
+    pub nblk: usize,
+    pub blocks_per_split: usize,
+    pub split_len: usize,
+    pub padded_len: usize,
+}
+
+impl SplitGeometry {
+    pub fn of(l_k: usize, num_splits: usize) -> SplitGeometry {
+        assert!(l_k >= 1, "l_k must be >= 1");
+        assert!(num_splits >= 1, "num_splits must be >= 1");
+        let nblk = l_k.div_ceil(KV_BLOCK);
+        let blocks_per_split = nblk.div_ceil(num_splits);
+        let split_len = blocks_per_split * KV_BLOCK;
+        SplitGeometry {
+            nblk,
+            blocks_per_split,
+            split_len,
+            padded_len: num_splits * split_len,
+        }
+    }
+
+    /// Splits that actually receive work (`s > nblk` leaves empty splits —
+    /// legal but wasted launches; see Figure 3's plateau).
+    pub fn effective_splits(l_k: usize, num_splits: usize) -> usize {
+        let g = SplitGeometry::of(l_k, num_splits);
+        g.nblk.div_ceil(g.blocks_per_split)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nblk_buckets() {
+        // The paper's bucket boundaries (§4 Guard 1/2).
+        assert_eq!(DecodeShape::llama70b_tp8(1, 128).nblk(), 1);
+        assert_eq!(DecodeShape::llama70b_tp8(1, 384).nblk(), 3);
+        assert_eq!(DecodeShape::llama70b_tp8(1, 385).nblk(), 4);
+        assert_eq!(DecodeShape::llama70b_tp8(1, 512).nblk(), 4);
+        assert_eq!(DecodeShape::llama70b_tp8(1, 513).nblk(), 5);
+        assert_eq!(DecodeShape::llama70b_tp8(1, 640).nblk(), 5);
+    }
+
+    #[test]
+    fn total_mblocks_decode_intuition() {
+        // §4: for decode, total_mblocks == Batch * H_KV under pack_gqa.
+        for (b, h_kv) in [(1, 1), (1, 2), (2, 4), (8, 8)] {
+            let s = DecodeShape::decode(b, 512, 8 * h_kv, h_kv, 128);
+            assert_eq!(s.total_mblocks(true), b * h_kv);
+        }
+        // Without pack_gqa each query head is a tile.
+        let s = DecodeShape::decode(1, 512, 8, 1, 128);
+        assert_eq!(s.total_mblocks(false), 8);
+    }
+
+    #[test]
+    fn pack_gqa_large_group_spills_mblocks() {
+        // A 128-way group (hypothetical) would need 2 M-blocks of 64 rows.
+        let s = DecodeShape::decode(1, 512, 128, 1, 128);
+        assert_eq!(s.m_blocks(true), 2);
+        assert_eq!(s.total_mblocks(true), 2);
+    }
+
+    #[test]
+    fn geometry_matches_python_oracle() {
+        // Mirrors test_split_geometry_basics in python/tests/test_kernel.py.
+        assert_eq!(
+            SplitGeometry::of(512, 1),
+            SplitGeometry { nblk: 4, blocks_per_split: 4, split_len: 512, padded_len: 512 }
+        );
+        assert_eq!(
+            SplitGeometry::of(512, 3),
+            SplitGeometry { nblk: 4, blocks_per_split: 2, split_len: 256, padded_len: 768 }
+        );
+        assert_eq!(
+            SplitGeometry::of(512, 64),
+            SplitGeometry { nblk: 4, blocks_per_split: 1, split_len: 128, padded_len: 8192 }
+        );
+        assert_eq!(
+            SplitGeometry::of(1, 1),
+            SplitGeometry { nblk: 1, blocks_per_split: 1, split_len: 128, padded_len: 128 }
+        );
+    }
+
+    #[test]
+    fn effective_splits_saturate_at_nblk() {
+        assert_eq!(SplitGeometry::effective_splits(512, 1), 1);
+        assert_eq!(SplitGeometry::effective_splits(512, 3), 2); // ceil(4/2)=2... see below
+        assert_eq!(SplitGeometry::effective_splits(512, 4), 4);
+        assert_eq!(SplitGeometry::effective_splits(512, 64), 4);
+    }
+
+    #[test]
+    fn size_one_kv_head() {
+        let s = DecodeShape::llama70b_tp8(1, 512);
+        // K+V, 512 tokens, D=128, bf16: 2 * 512 * 128 * 2 = 256 KiB.
+        assert_eq!(s.size_one_kv_head_bytes(2), 256 * 1024);
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_heads_panic() {
+        DecodeShape::decode(1, 128, 8, 3, 64).group_size();
+    }
+}

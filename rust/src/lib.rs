@@ -1,0 +1,24 @@
+//! # fa3-split
+//!
+//! Reproduction stack for *"Sequence-Aware Split Heuristic to Mitigate SM
+//! Underutilization in FlashAttention-3 Low-Head-Count Decoding"*.
+//!
+//! Layer 3 of the three-layer architecture (see DESIGN.md): a rust serving
+//! coordinator that loads AOT-compiled JAX/Pallas artifacts via PJRT and
+//! makes the paper's split-scheduling decision on the request path, plus
+//! the substrates the reproduction needs — a calibrated H100 SM-level
+//! latency simulator, both split heuristics, an evolutionary-search
+//! harness (the OpenEvolve analog of §3), workload generators, and the
+//! bench harnesses that regenerate every table and figure in the paper.
+//!
+//! Python never runs at request time: `make artifacts` lowers the model
+//! and kernels once, and everything here is self-contained after that.
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod evolve;
+pub mod heuristics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

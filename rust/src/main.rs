@@ -1,0 +1,280 @@
+//! fa3-split CLI — leader entrypoint for the reproduction stack.
+//!
+//! Subcommands:
+//!   serve       end-to-end serving over the AOT artifacts (PJRT CPU)
+//!   table1      reproduce Table 1 (kernel A/B on the simulated H100)
+//!   ucurve      reproduce Figure 3 (split sweep s = 1..64)
+//!   regression  reproduce §5.3 (160-config safety sweep)
+//!   evolve      reproduce §3 (evolutionary search, OpenEvolve analog)
+//!   decide      print both heuristics' decisions for one shape
+//!   info        artifact/manifest inventory
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fa3_split::bench_harness::{regression, table1, ucurve};
+use fa3_split::coordinator::{Engine, EngineConfig};
+use fa3_split::evolve::{Search, SearchConfig};
+use fa3_split::heuristics::tiles::DecodeShape;
+use fa3_split::heuristics::{SequenceAwarePolicy, SplitPolicy, StandardPolicy};
+use fa3_split::runtime::Registry;
+use fa3_split::sim::Simulator;
+use fa3_split::util::cli;
+use fa3_split::workload::ChatWorkload;
+
+const USAGE: &str = "fa3-split — sequence-aware split heuristic reproduction
+
+Usage: fa3-split <command> [options]
+
+Commands:
+  serve        serve a synthetic chat workload over the AOT artifacts
+  table1       reproduce Table 1 (A/B kernel test, simulated H100)
+  ucurve       reproduce Figure 3 (split sweep s=1..64)
+  regression   reproduce §5.3 (160-config regression sweep)
+  evolve       reproduce §3 (evolutionary heuristic search)
+  decide       show both policies' split decision for a shape
+  info         list artifacts and model config
+
+Run `fa3-split <command> --help` for per-command options.";
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("FA3_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let Some(command) = argv.get(1).cloned() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    // Re-split argv for the subcommand parsers (skip the command token).
+    let sub_argv: Vec<String> =
+        std::iter::once(format!("fa3-split {command}")).chain(argv[2..].iter().cloned()).collect();
+
+    match command.as_str() {
+        "serve" => cmd_serve(&sub_argv),
+        "table1" => cmd_table1(&sub_argv),
+        "ucurve" => cmd_ucurve(&sub_argv),
+        "regression" => cmd_regression(&sub_argv),
+        "evolve" => cmd_evolve(&sub_argv),
+        "decide" => cmd_decide(&sub_argv),
+        "info" => cmd_info(),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse(p: cli::Parser, argv: &[String]) -> cli::Args {
+    match p.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn policy_by_name(name: &str) -> Box<dyn SplitPolicy> {
+    match name {
+        "standard" => Box::new(StandardPolicy),
+        "patched" | "sequence-aware" => Box::new(SequenceAwarePolicy),
+        other => {
+            eprintln!("unknown policy '{other}' (use standard|patched)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
+    let args = parse(
+        cli::Parser::new("serve a synthetic chat workload over the AOT artifacts")
+            .opt("requests", "8", "number of requests")
+            .opt("tokens", "32", "max new tokens per request")
+            .opt("policy", "patched", "split policy: standard|patched")
+            .opt("seed", "7", "workload seed"),
+        argv,
+    );
+    let dir = artifacts_dir();
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let registry = Arc::new(Registry::open(&dir)?);
+    let mut engine = Engine::with_pjrt(
+        registry,
+        policy_by_name(&args.str("policy")),
+        EngineConfig::default(),
+    )?;
+    let workload = ChatWorkload {
+        seed: args.u64("seed"),
+        n_requests: args.usize("requests"),
+        output_mean: args.usize("tokens"),
+        output_cap: args.usize("tokens"),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    for g in workload.generate() {
+        let mut r = g.request;
+        r.max_new_tokens = args.usize("tokens");
+        engine.submit(r);
+    }
+    let done = engine.run_until_idle()?;
+    engine.metrics.wall_us = t0.elapsed().as_micros() as u64;
+    println!(
+        "policy '{}': served {} requests in {:.2}s",
+        engine.policy_name(),
+        done.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    print!("{}", engine.metrics.report());
+    Ok(())
+}
+
+fn cmd_table1(argv: &[String]) -> anyhow::Result<()> {
+    let args = parse(
+        cli::Parser::new("Table 1 A/B on the simulated H100")
+            .opt("replays", "501", "interleaved replays per cell")
+            .opt("seed", "43777", "noise seed"),
+        argv,
+    );
+    let cells = table1::run(&Simulator::h100(), args.usize("replays"), args.u64("seed"));
+    print!("{}", table1::render(&cells));
+    table1::verify(&cells).map_err(|e| anyhow::anyhow!(e))?;
+    println!("OK");
+    Ok(())
+}
+
+fn cmd_ucurve(argv: &[String]) -> anyhow::Result<()> {
+    let args = parse(
+        cli::Parser::new("Figure 3 split sweep")
+            .opt("replays", "301", "replays per point")
+            .opt("seed", "61795", "noise seed"),
+        argv,
+    );
+    let points = ucurve::run(&Simulator::h100(), args.usize("replays"), args.u64("seed"));
+    print!("{}", ucurve::render_table(&points));
+    println!("{}", ucurve::render_plot(&points, 14));
+    ucurve::verify(&points).map_err(|e| anyhow::anyhow!(e))?;
+    println!("OK");
+    Ok(())
+}
+
+fn cmd_regression(argv: &[String]) -> anyhow::Result<()> {
+    let args = parse(
+        cli::Parser::new("§5.3 regression sweep")
+            .opt("replays", "201", "replays per cell")
+            .opt("seed", "24147", "noise seed"),
+        argv,
+    );
+    let cells = regression::run(&Simulator::h100(), args.usize("replays"), args.u64("seed"));
+    print!("{}", regression::render(&cells));
+    regression::verify(&cells).map_err(|e| anyhow::anyhow!(e))?;
+    println!("OK");
+    Ok(())
+}
+
+fn cmd_evolve(argv: &[String]) -> anyhow::Result<()> {
+    let args = parse(
+        cli::Parser::new("§3 evolutionary heuristic search")
+            .opt("generations", "30", "EA generations")
+            .opt("population", "48", "population size")
+            .opt("seed", "58113", "search seed"),
+        argv,
+    );
+    let cfg = SearchConfig {
+        seed: args.u64("seed"),
+        population: args.usize("population"),
+        generations: args.usize("generations"),
+        ..Default::default()
+    };
+    let report = Search::new(cfg, Simulator::h100()).run(|g| {
+        println!(
+            "gen {:>3}: best {:.3} µs, mean(valid) {:.3} µs, rejected {}",
+            g.generation, g.best_tpot_us, g.mean_valid_tpot_us, g.rejected
+        );
+    });
+    println!("\nspeedup over upstream: {:.3}x\n", report.speedup());
+    println!("{}", report.best.render_python());
+    Ok(())
+}
+
+fn cmd_decide(argv: &[String]) -> anyhow::Result<()> {
+    let args = parse(
+        cli::Parser::new("show both policies' decision for one decode shape")
+            .opt("batch", "1", "batch size")
+            .opt("lk", "512", "sequence length L_K")
+            .opt("hkv", "1", "KV heads (H_Q = 8*H_KV)")
+            .opt("d", "128", "head dim"),
+        argv,
+    );
+    let shape = DecodeShape::decode(
+        args.usize("batch"),
+        args.usize("lk"),
+        8 * args.usize("hkv"),
+        args.usize("hkv"),
+        args.usize("d"),
+    );
+    let sim = Simulator::h100();
+    println!(
+        "shape: B={} L_K={} H_Q={} H_KV={} D={} -> nblk={}, tiles={}",
+        shape.batch,
+        shape.l_k,
+        shape.h_q,
+        shape.h_kv,
+        shape.d,
+        shape.nblk(),
+        shape.total_mblocks(true)
+    );
+    for (name, md) in [
+        ("standard", StandardPolicy.metadata(&shape, 0, true)),
+        ("sequence-aware", SequenceAwarePolicy.metadata(&shape, 0, true)),
+    ] {
+        let t = sim.kernel(&md);
+        println!(
+            "  {name:<15} s={:<3} ctas={:<4} occupancy={:>5.1}%  sim latency {:.2} µs",
+            md.num_splits,
+            t.active_ctas,
+            t.occupancy * 100.0,
+            t.total_us
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let reg = Registry::open(&dir)?;
+    let m = &reg.manifest;
+    println!("artifacts dir: {}", dir.display());
+    println!("{} artifacts:", m.entries.len());
+    for e in &m.entries {
+        println!(
+            "  [{:?}] {} ({} inputs, {} outputs)",
+            e.kind,
+            e.name,
+            e.inputs.len(),
+            e.outputs.len()
+        );
+    }
+    if let Some(model) = &m.model {
+        let c = &model.config;
+        println!(
+            "model: preset '{}' — {} layers, d_model {}, H_Q {}, H_KV {}, D {}, vocab {}, {:.1}M params",
+            model.preset,
+            c.n_layers,
+            c.d_model,
+            c.n_heads_q,
+            c.n_heads_kv,
+            c.head_dim,
+            c.vocab,
+            c.n_params as f64 / 1e6
+        );
+    }
+    Ok(())
+}

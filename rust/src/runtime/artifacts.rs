@@ -1,0 +1,455 @@
+//! Artifact manifest: the contract written by python/compile/aot.py.
+//!
+//! `artifacts/manifest.json` indexes every AOT-lowered HLO module with its
+//! full input/output signature plus the model's parameter table (the
+//! positional weights ABI). This module parses and validates it; it does
+//! not touch PJRT (that's [`super::registry`]).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::DType;
+
+/// Manifest schema version this runtime understands.
+pub const SUPPORTED_VERSION: i64 = 2;
+
+/// What a compiled artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Standalone decode-attention kernel: `(q, k, v, kv_lens) -> out`.
+    Kernel,
+    /// Model decode step:
+    /// `(tokens, positions, kv_k, kv_v, *params) -> (logits, kv_k, kv_v)`.
+    Decode,
+    /// Model prefill:
+    /// `(tokens, kv_lens, kv_k, kv_v, *params) -> (logits, kv_k, kv_v)`.
+    Prefill,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        match s {
+            "kernel" => Ok(ArtifactKind::Kernel),
+            "decode" => Ok(ArtifactKind::Decode),
+            "prefill" => Ok(ArtifactKind::Prefill),
+            other => bail!("unknown artifact kind '{other}'"),
+        }
+    }
+}
+
+/// Shape + dtype of one input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    fn parse(j: &Json) -> Result<TensorSig> {
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|d| d.as_usize().context("non-integer dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSig { shape, dtype: DType::parse(j.req_str("dtype")?)? })
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Metadata of one artifact (kernel shape parameters or model buckets).
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactMeta {
+    pub batch: Option<usize>,
+    pub l_k: Option<usize>,
+    pub h_q: Option<usize>,
+    pub h_kv: Option<usize>,
+    pub d: Option<usize>,
+    pub num_splits: Option<usize>,
+    pub prompt_len: Option<usize>,
+    pub max_seq: Option<usize>,
+    pub group: Option<String>,
+}
+
+impl ArtifactMeta {
+    fn parse(j: &Json) -> ArtifactMeta {
+        let u = |k: &str| j.get(k).as_usize();
+        ArtifactMeta {
+            batch: u("batch"),
+            l_k: u("l_k"),
+            h_q: u("h_q"),
+            h_kv: u("h_kv"),
+            d: u("d"),
+            num_splits: u("num_splits"),
+            prompt_len: u("prompt_len"),
+            max_seq: u("max_seq"),
+            group: j.get("group").as_str().map(|s| s.to_string()),
+        }
+    }
+}
+
+/// One compiled-artifact description.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub hlo_path: PathBuf,
+    pub meta: ArtifactMeta,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// One model parameter in weights.bin.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub size_bytes: usize,
+}
+
+/// Model architecture constants baked into the artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads_q: usize,
+    pub n_heads_kv: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub n_params: usize,
+}
+
+/// The manifest's `model` block: weights ABI + architecture.
+#[derive(Debug, Clone)]
+pub struct ModelBlock {
+    pub preset: String,
+    pub config: ModelConfig,
+    pub weights_path: PathBuf,
+    pub params: Vec<ParamSpec>,
+}
+
+/// Parsed and validated manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+    pub model: Option<ModelBlock>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`, validating structure and that every
+    /// referenced file exists.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let version = root.get("version").as_i64().context("missing version")?;
+        if version != SUPPORTED_VERSION {
+            bail!("manifest version {version} != supported {SUPPORTED_VERSION}");
+        }
+
+        let mut entries = Vec::new();
+        let mut by_name = HashMap::new();
+        for e in root.req_arr("entries")? {
+            let name = e.req_str("name")?.to_string();
+            let hlo_path = dir.join(e.req_str("hlo")?);
+            if !hlo_path.exists() {
+                bail!("artifact '{name}' references missing file {}", hlo_path.display());
+            }
+            let entry = ArtifactEntry {
+                kind: ArtifactKind::parse(e.req_str("kind")?)?,
+                hlo_path,
+                meta: ArtifactMeta::parse(e.get("meta")),
+                inputs: e.req_arr("inputs")?.iter().map(TensorSig::parse).collect::<Result<_>>()?,
+                outputs: e.req_arr("outputs")?.iter().map(TensorSig::parse).collect::<Result<_>>()?,
+                name: name.clone(),
+            };
+            if by_name.insert(name.clone(), entries.len()).is_some() {
+                bail!("duplicate artifact name '{name}'");
+            }
+            entries.push(entry);
+        }
+
+        let model = match root.get("model") {
+            Json::Null => None,
+            m => Some(Self::parse_model(m, dir)?),
+        };
+
+        Ok(Manifest { dir: dir.to_path_buf(), entries, model, by_name })
+    }
+
+    fn parse_model(m: &Json, dir: &Path) -> Result<ModelBlock> {
+        let c = m.get("config");
+        let config = ModelConfig {
+            n_layers: c.req_usize("n_layers")?,
+            d_model: c.req_usize("d_model")?,
+            n_heads_q: c.req_usize("n_heads_q")?,
+            n_heads_kv: c.req_usize("n_heads_kv")?,
+            head_dim: c.req_usize("head_dim")?,
+            vocab: c.req_usize("vocab")?,
+            max_seq: c.req_usize("max_seq")?,
+            n_params: c.req_usize("n_params")?,
+        };
+        let weights_path = dir.join(m.req_str("weights")?);
+        if !weights_path.exists() {
+            bail!("weights file missing: {}", weights_path.display());
+        }
+        let mut params = Vec::new();
+        let mut expected_offset = 0usize;
+        for p in m.req_arr("params")? {
+            let spec = ParamSpec {
+                name: p.req_str("name")?.to_string(),
+                shape: p
+                    .req_arr("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+                offset_bytes: p.req_usize("offset_bytes")?,
+                size_bytes: p.req_usize("size_bytes")?,
+            };
+            if spec.offset_bytes != expected_offset {
+                bail!("param '{}' offset {} != expected {}", spec.name, spec.offset_bytes, expected_offset);
+            }
+            let n: usize = spec.shape.iter().product();
+            if spec.size_bytes != 4 * n {
+                bail!("param '{}' size {} != 4*{}", spec.name, spec.size_bytes, n);
+            }
+            expected_offset += spec.size_bytes;
+            params.push(spec);
+        }
+        let file_len = std::fs::metadata(&weights_path)?.len() as usize;
+        if file_len != expected_offset {
+            bail!("weights.bin is {file_len} bytes, manifest expects {expected_offset}");
+        }
+        Ok(ModelBlock { preset: m.req_str("preset")?.to_string(), config, weights_path, params })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.by_name.get(name).map(|&i| &self.entries[i])
+    }
+
+    pub fn kernels(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.entries.iter().filter(|e| e.kind == ArtifactKind::Kernel)
+    }
+
+    /// Find the attention-kernel artifact for an exact launch shape + split.
+    pub fn find_kernel(
+        &self,
+        batch: usize,
+        l_k: usize,
+        h_kv: usize,
+        num_splits: usize,
+    ) -> Option<&ArtifactEntry> {
+        self.kernels().find(|e| {
+            e.meta.batch == Some(batch)
+                && e.meta.l_k == Some(l_k)
+                && e.meta.h_kv == Some(h_kv)
+                && e.meta.num_splits == Some(num_splits)
+        })
+    }
+
+    /// Smallest decode bucket that fits `batch` with the requested splits.
+    pub fn find_decode_bucket(&self, batch: usize, num_splits: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.kind == ArtifactKind::Decode
+                    && e.meta.num_splits == Some(num_splits)
+                    && e.meta.batch.is_some_and(|b| b >= batch)
+            })
+            .min_by_key(|e| e.meta.batch.unwrap())
+    }
+
+    /// Smallest prefill bucket fitting `batch` rows of `prompt_len` tokens.
+    pub fn find_prefill_bucket(&self, batch: usize, prompt_len: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.kind == ArtifactKind::Prefill
+                    && e.meta.batch.is_some_and(|b| b >= batch)
+                    && e.meta.prompt_len.is_some_and(|p| p >= prompt_len)
+            })
+            .min_by_key(|e| (e.meta.batch.unwrap(), e.meta.prompt_len.unwrap()))
+    }
+
+    /// Load one parameter's data from weights.bin.
+    pub fn load_param(&self, spec: &ParamSpec) -> Result<super::HostTensor> {
+        let model = self.model.as_ref().context("manifest has no model block")?;
+        let file = std::fs::File::open(&model.weights_path)?;
+        use std::io::{Read, Seek, SeekFrom};
+        let mut reader = std::io::BufReader::new(file);
+        reader.seek(SeekFrom::Start(spec.offset_bytes as u64))?;
+        let mut bytes = vec![0u8; spec.size_bytes];
+        reader.read_exact(&mut bytes)?;
+        super::HostTensor::f32_from_le_bytes(&spec.shape, &bytes)
+    }
+
+    /// Load every parameter in ABI order (one pass over weights.bin).
+    pub fn load_all_params(&self) -> Result<Vec<super::HostTensor>> {
+        let model = self.model.as_ref().context("manifest has no model block")?;
+        let bytes = std::fs::read(&model.weights_path)?;
+        model
+            .params
+            .iter()
+            .map(|p| {
+                super::HostTensor::f32_from_le_bytes(
+                    &p.shape,
+                    &bytes[p.offset_bytes..p.offset_bytes + p.size_bytes],
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fa3_manifest_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    const MINI: &str = r#"{
+      "version": 2,
+      "entries": [
+        {"name": "attn_x", "kind": "kernel", "hlo": "attn_x.hlo.txt",
+         "meta": {"batch": 1, "l_k": 512, "h_q": 8, "h_kv": 1, "d": 128, "num_splits": 3},
+         "inputs": [{"shape": [1,8,128], "dtype": "f32"}],
+         "outputs": [{"shape": [1,8,128], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn loads_minimal_manifest() {
+        let dir = tmpdir("ok");
+        write_manifest(&dir, MINI);
+        std::fs::write(dir.join("attn_x.hlo.txt"), "HloModule x").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.get("attn_x").unwrap();
+        assert_eq!(e.kind, ArtifactKind::Kernel);
+        assert_eq!(e.meta.l_k, Some(512));
+        assert_eq!(e.inputs[0].num_elements(), 8 * 128);
+        assert!(m.find_kernel(1, 512, 1, 3).is_some());
+        assert!(m.find_kernel(1, 512, 1, 4).is_none());
+        assert!(m.model.is_none());
+    }
+
+    #[test]
+    fn missing_hlo_file_rejected() {
+        let dir = tmpdir("missing");
+        write_manifest(&dir, MINI);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let dir = tmpdir("ver");
+        write_manifest(&dir, &MINI.replace("\"version\": 2", "\"version\": 99"));
+        std::fs::write(dir.join("attn_x.hlo.txt"), "HloModule x").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn model_block_offset_validation() {
+        let dir = tmpdir("model");
+        std::fs::write(dir.join("k.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(dir.join("weights.bin"), vec![0u8; 24]).unwrap();
+        let manifest = r#"{
+          "version": 2,
+          "entries": [{"name": "k", "kind": "decode", "hlo": "k.hlo.txt", "meta": {"batch": 1, "num_splits": 1},
+                       "inputs": [], "outputs": []}],
+          "model": {
+            "preset": "tiny",
+            "config": {"n_layers": 1, "d_model": 2, "n_heads_q": 1, "n_heads_kv": 1,
+                       "head_dim": 2, "vocab": 3, "max_seq": 4, "n_params": 6},
+            "weights": "weights.bin",
+            "params": [
+              {"name": "a", "shape": [2, 2], "offset_bytes": 0, "size_bytes": 16},
+              {"name": "b", "shape": [2], "offset_bytes": 16, "size_bytes": 8}
+            ]
+          }
+        }"#;
+        write_manifest(&dir, manifest);
+        let m = Manifest::load(&dir).unwrap();
+        let model = m.model.as_ref().unwrap();
+        assert_eq!(model.params.len(), 2);
+        let t = m.load_param(&model.params[1]).unwrap();
+        assert_eq!(t.shape(), &[2]);
+        let all = m.load_all_params().unwrap();
+        assert_eq!(all.len(), 2);
+
+        // Corrupt offset must be rejected.
+        write_manifest(&dir, &manifest.replace("\"offset_bytes\": 16", "\"offset_bytes\": 20"));
+        assert!(Manifest::load(&dir).is_err());
+        // Wrong total size must be rejected.
+        std::fs::write(dir.join("weights.bin"), vec![0u8; 25]).unwrap();
+        write_manifest(&dir, manifest);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn bucket_routing_picks_smallest_fit() {
+        let dir = tmpdir("bucket");
+        for n in ["d1", "d4", "p1"] {
+            std::fs::write(dir.join(format!("{n}.hlo.txt")), "HloModule x").unwrap();
+        }
+        write_manifest(
+            &dir,
+            r#"{
+          "version": 2,
+          "entries": [
+            {"name": "d1", "kind": "decode", "hlo": "d1.hlo.txt",
+             "meta": {"batch": 1, "num_splits": 3}, "inputs": [], "outputs": []},
+            {"name": "d4", "kind": "decode", "hlo": "d4.hlo.txt",
+             "meta": {"batch": 4, "num_splits": 3}, "inputs": [], "outputs": []},
+            {"name": "p1", "kind": "prefill", "hlo": "p1.hlo.txt",
+             "meta": {"batch": 4, "prompt_len": 128}, "inputs": [], "outputs": []}
+          ]
+        }"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.find_decode_bucket(1, 3).unwrap().name, "d1");
+        assert_eq!(m.find_decode_bucket(2, 3).unwrap().name, "d4");
+        assert_eq!(m.find_decode_bucket(4, 3).unwrap().name, "d4");
+        assert!(m.find_decode_bucket(5, 3).is_none());
+        assert!(m.find_decode_bucket(1, 2).is_none());
+        assert_eq!(m.find_prefill_bucket(2, 100).unwrap().name, "p1");
+        assert!(m.find_prefill_bucket(2, 200).is_none());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let dir = tmpdir("dup");
+        std::fs::write(dir.join("attn_x.hlo.txt"), "HloModule x").unwrap();
+        let dup = MINI.replace(
+            "]\n    }",
+            r#", {"name": "attn_x", "kind": "kernel", "hlo": "attn_x.hlo.txt",
+                "meta": {}, "inputs": [], "outputs": []}]
+    }"#,
+        );
+        write_manifest(&dir, &dup);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

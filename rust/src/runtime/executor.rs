@@ -1,0 +1,118 @@
+//! One compiled executable with typed execute wrappers.
+//!
+//! All artifacts are lowered with `return_tuple=True`, so PJRT returns a
+//! single tuple buffer; [`Executor::execute`] untuples it back into host
+//! tensors. For the serving hot path, [`Executor::execute_buffers`] accepts
+//! device-resident buffers (persistent weights) so the ~200 MB parameter
+//! set is uploaded once, not per step.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::ArtifactEntry;
+use super::tensor::HostTensor;
+
+/// A compiled artifact bound to a PJRT client.
+pub struct Executor {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executor {
+    /// Compile `entry`'s HLO text on `client`.
+    pub fn compile(client: &xla::PjRtClient, entry: &ArtifactEntry) -> Result<Executor> {
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", entry.hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling '{}': {e:?}", entry.name))?;
+        Ok(Executor { entry: entry.clone(), exe })
+    }
+
+    /// Validate `args` against the manifest signature.
+    fn check_args(&self, args: &[HostTensor]) -> Result<()> {
+        if args.len() != self.entry.inputs.len() {
+            bail!(
+                "'{}' expects {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                args.len()
+            );
+        }
+        for (i, (arg, sig)) in args.iter().zip(&self.entry.inputs).enumerate() {
+            if arg.shape() != sig.shape.as_slice() || arg.dtype() != sig.dtype {
+                bail!(
+                    "'{}' input {i}: got {:?}/{}, manifest says {:?}/{}",
+                    self.entry.name,
+                    arg.shape(),
+                    arg.dtype().name(),
+                    sig.shape,
+                    sig.dtype.name()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors (copies in, copies out). Returns the
+    /// untupled outputs in manifest order.
+    pub fn execute(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_args(args)?;
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing '{}': {e:?}", self.entry.name))?;
+        self.untuple(outs)
+    }
+
+    /// Execute with pre-uploaded device buffers (zero host->device copies
+    /// for persistent args like model weights).
+    pub fn execute_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        if args.len() != self.entry.inputs.len() {
+            bail!(
+                "'{}' expects {} inputs, got {} buffers",
+                self.entry.name,
+                self.entry.inputs.len(),
+                args.len()
+            );
+        }
+        let outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow!("executing '{}' (buffers): {e:?}", self.entry.name))?;
+        self.untuple(outs)
+    }
+
+    fn untuple(&self, outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+        let buf = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("'{}' produced no output buffer", self.entry.name))?;
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("downloading output of '{}': {e:?}", self.entry.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling output of '{}': {e:?}", self.entry.name))?;
+        if parts.len() != self.entry.outputs.len() {
+            bail!(
+                "'{}' returned {} outputs, manifest says {}",
+                self.entry.name,
+                parts.len(),
+                self.entry.outputs.len()
+            );
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+// PJRT executables are internally synchronized; the CPU client supports
+// concurrent execute calls. The raw pointers inside the xla wrappers are
+// not marked Send/Sync, so we assert it for our usage pattern (one logical
+// owner, engine worker threads).
+unsafe impl Send for Executor {}
+unsafe impl Sync for Executor {}

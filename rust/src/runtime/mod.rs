@@ -1,0 +1,22 @@
+//! PJRT runtime: load AOT artifacts and execute them from the rust hot path.
+//!
+//! The compile path (`make artifacts`) is Python/JAX; the request path is
+//! this module: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (see python/compile/aot.py for why).
+//!
+//! * [`tensor`]    — host-side tensors and literal marshalling,
+//! * [`artifacts`] — manifest.json parsing and artifact descriptions,
+//! * [`executor`]  — one compiled executable + typed execute wrappers,
+//! * [`registry`]  — lazy-compiling artifact registry with shape-bucket
+//!                   routing and persistent device-resident weights.
+
+pub mod artifacts;
+pub mod executor;
+pub mod registry;
+pub mod tensor;
+
+pub use artifacts::{ArtifactEntry, ArtifactKind, Manifest, ModelBlock, TensorSig};
+pub use executor::Executor;
+pub use registry::Registry;
+pub use tensor::{DType, HostTensor};

@@ -1,0 +1,143 @@
+//! Lazy-compiling artifact registry: the runtime facade the coordinator
+//! and benches use.
+//!
+//! Owns the PJRT client, compiles artifacts on first use (compilation is
+//! seconds; serving steady-state never recompiles), keeps the model
+//! weights device-resident, and routes (batch, splits) requests to the
+//! right shape bucket — the CUDA-Graph-style static-shape routing vLLM
+//! does on real hardware.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{ArtifactEntry, Manifest};
+use super::executor::Executor;
+use super::tensor::HostTensor;
+
+/// Artifact registry + PJRT client + persistent weights.
+pub struct Registry {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: Mutex<HashMap<String, std::sync::Arc<Executor>>>,
+    /// Device-resident model parameters in ABI order (uploaded once).
+    weights: Mutex<Option<std::sync::Arc<Vec<xla::PjRtBuffer>>>>,
+}
+
+// See executor.rs for the Send/Sync rationale.
+unsafe impl Send for Registry {}
+unsafe impl Sync for Registry {}
+
+impl Registry {
+    /// Open `artifacts_dir` on a CPU PJRT client.
+    pub fn open(artifacts_dir: &Path) -> Result<Registry> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Registry {
+            manifest,
+            client,
+            compiled: Mutex::new(HashMap::new()),
+            weights: Mutex::new(None),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Get (compiling if needed) the executor for a named artifact.
+    pub fn executor(&self, name: &str) -> Result<std::sync::Arc<Executor>> {
+        {
+            let cache = self.compiled.lock().unwrap();
+            if let Some(exe) = cache.get(name) {
+                return Ok(exe.clone());
+            }
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("no artifact named '{name}' in manifest"))?
+            .clone();
+        // Compile outside the lock (it takes seconds); racing compiles of
+        // the same artifact are wasteful but harmless.
+        let exe = std::sync::Arc::new(Executor::compile(&self.client, &entry)?);
+        self.compiled.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn executor_for(&self, entry: &ArtifactEntry) -> Result<std::sync::Arc<Executor>> {
+        self.executor(&entry.name)
+    }
+
+    /// Eagerly compile every artifact whose name passes `filter`.
+    pub fn warmup<F: Fn(&ArtifactEntry) -> bool>(&self, filter: F) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| filter(e))
+            .map(|e| e.name.clone())
+            .collect();
+        for name in &names {
+            self.executor(name)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Device-resident weights in ABI order, uploading on first call.
+    pub fn weights(&self) -> Result<std::sync::Arc<Vec<xla::PjRtBuffer>>> {
+        {
+            let w = self.weights.lock().unwrap();
+            if let Some(w) = w.as_ref() {
+                return Ok(w.clone());
+            }
+        }
+        let host = self.manifest.load_all_params()?;
+        let bufs: Vec<xla::PjRtBuffer> =
+            host.iter().map(|t| t.to_buffer(&self.client)).collect::<Result<_>>()?;
+        let arc = std::sync::Arc::new(bufs);
+        *self.weights.lock().unwrap() = Some(arc.clone());
+        Ok(arc)
+    }
+
+    /// Execute a model artifact whose trailing inputs are the weights:
+    /// uploads `dynamic` args, reuses the persistent weight buffers.
+    pub fn execute_model(
+        &self,
+        entry_name: &str,
+        dynamic: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let exe = self.executor(entry_name)?;
+        let weights = self.weights()?;
+        let expected = exe.entry.inputs.len();
+        if dynamic.len() + weights.len() != expected {
+            anyhow::bail!(
+                "'{entry_name}': {} dynamic + {} weights != {} manifest inputs",
+                dynamic.len(),
+                weights.len(),
+                expected
+            );
+        }
+        // Validate dynamic shapes against the signature prefix.
+        for (i, (arg, sig)) in dynamic.iter().zip(&exe.entry.inputs).enumerate() {
+            if arg.shape() != sig.shape.as_slice() || arg.dtype() != sig.dtype {
+                anyhow::bail!(
+                    "'{entry_name}' dynamic input {i}: got {:?}/{}, manifest says {:?}/{}",
+                    arg.shape(),
+                    arg.dtype().name(),
+                    sig.shape,
+                    sig.dtype.name()
+                );
+            }
+        }
+        let dyn_bufs: Vec<xla::PjRtBuffer> =
+            dynamic.iter().map(|t| t.to_buffer(&self.client)).collect::<Result<_>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(expected);
+        args.extend(dyn_bufs.iter());
+        args.extend(weights.iter());
+        exe.execute_buffers(&args)
+    }
+}

@@ -1,0 +1,223 @@
+//! Host-side tensors and PJRT literal marshalling.
+//!
+//! The runtime only traffics in the two dtypes the artifacts use: `f32`
+//! (activations, caches, weights) and `s32` (tokens, positions, lengths).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element type of a [`HostTensor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "s32" => Ok(DType::S32),
+            other => bail!("unsupported dtype '{other}' (artifacts use f32/s32)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::S32 => "s32",
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+
+    fn element_type(&self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::S32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// A host tensor: shape + typed data.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    S32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor::F32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn s32(shape: &[usize], data: Vec<i32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor::S32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> HostTensor {
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::S32 { .. } => DType::S32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::S32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::S32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not s32")),
+        }
+    }
+
+    fn raw_bytes(&self) -> &[u8] {
+        match self {
+            HostTensor::F32 { data, .. } => unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            },
+            HostTensor::S32 { data, .. } => unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            },
+        }
+    }
+
+    /// Convert to an XLA literal (host copy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype().element_type(),
+            self.shape(),
+            self.raw_bytes(),
+        )
+        .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+    }
+
+    /// Upload directly to a device-resident buffer.
+    ///
+    /// Uses the typed `buffer_from_host_buffer` path: the crate's
+    /// `buffer_from_host_raw_bytes` passes `ElementType` discriminants where
+    /// the C API expects `PrimitiveType` numbering, silently mistyping the
+    /// buffer (S32 ⇒ S16).
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match self {
+            HostTensor::F32 { shape, data } => client
+                .buffer_from_host_buffer::<f32>(data, shape, None)
+                .map_err(|e| anyhow!("buffer upload failed: {e:?}")),
+            HostTensor::S32 { shape, data } => client
+                .buffer_from_host_buffer::<i32>(data, shape, None)
+                .map_err(|e| anyhow!("buffer upload failed: {e:?}")),
+        }
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+                HostTensor::f32(&dims, data)
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec s32: {e:?}"))?;
+                HostTensor::s32(&dims, data)
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Load a contiguous f32 slice from raw little-endian bytes
+    /// (the weights.bin ABI).
+    pub fn f32_from_le_bytes(shape: &[usize], bytes: &[u8]) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("shape {shape:?} wants {} bytes, got {}", n * 4, bytes.len());
+        }
+        let mut data = Vec::with_capacity(n);
+        for chunk in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes(chunk.try_into().context("chunk")?));
+        }
+        HostTensor::f32(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_validates_shape() {
+        assert!(HostTensor::f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(HostTensor::s32(&[4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn accessors() {
+        let t = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(t.as_s32().is_err());
+    }
+
+    #[test]
+    fn zeros() {
+        let t = HostTensor::zeros_f32(&[3, 5]);
+        assert_eq!(t.len(), 15);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let vals = [1.5f32, -2.25, 0.0, 3.0e9];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let t = HostTensor::f32_from_le_bytes(&[4], &bytes).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &vals);
+        assert!(HostTensor::f32_from_le_bytes(&[5], &bytes).is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("s32").unwrap(), DType::S32);
+        assert!(DType::parse("bf16").is_err());
+        assert_eq!(DType::F32.name(), "f32");
+    }
+
+    // Literal round-trips require a PJRT client and are covered by the
+    // integration tests in rust/tests/runtime_integration.rs.
+}

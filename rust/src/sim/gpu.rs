@@ -1,0 +1,58 @@
+//! GPU device descriptions for the simulator.
+
+/// Static description of the accelerator the kernel is dispatched onto.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Streaming multiprocessors available to compute grids.
+    pub num_sms: usize,
+    /// Peak HBM bandwidth, GB/s (context for roofline notes; the calibrated
+    /// per-CTA streaming constant already embeds achieved bandwidth).
+    pub hbm_bw_gbps: f64,
+    /// L2 capacity in bytes.
+    pub l2_bytes: usize,
+}
+
+impl GpuSpec {
+    /// NVIDIA H100 SXM5 — the paper's testbed: 132 SMs, HBM3 ~3.35 TB/s.
+    pub fn h100_sxm() -> GpuSpec {
+        GpuSpec { name: "H100-SXM5", num_sms: 132, hbm_bw_gbps: 3350.0, l2_bytes: 50 * 1024 * 1024 }
+    }
+
+    /// H100 PCIe variant (114 SMs) — used by the ablation benches to show
+    /// the heuristic's SM-count sensitivity.
+    pub fn h100_pcie() -> GpuSpec {
+        GpuSpec { name: "H100-PCIe", num_sms: 114, hbm_bw_gbps: 2000.0, l2_bytes: 50 * 1024 * 1024 }
+    }
+
+    /// A100 SXM (108 SMs) — the prior generation the upstream heuristic was
+    /// tuned on; included for the "hardware scale" ablation (§2.2 argues the
+    /// static threshold overlooks the *scale* of H100).
+    pub fn a100_sxm() -> GpuSpec {
+        GpuSpec { name: "A100-SXM4", num_sms: 108, hbm_bw_gbps: 2039.0, l2_bytes: 40 * 1024 * 1024 }
+    }
+
+    /// SMs available once `sm_margin` is reserved for the combine scheduler.
+    pub fn sms_with_margin(&self, sm_margin: usize) -> usize {
+        self.num_sms.saturating_sub(sm_margin).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_matches_paper_constants() {
+        let g = GpuSpec::h100_sxm();
+        assert_eq!(g.num_sms, 132); // §2.1
+    }
+
+    #[test]
+    fn margin_clamps() {
+        let g = GpuSpec::h100_sxm();
+        assert_eq!(g.sms_with_margin(0), 132);
+        assert_eq!(g.sms_with_margin(32), 100);
+        assert_eq!(g.sms_with_margin(1000), 1);
+    }
+}

@@ -1,0 +1,27 @@
+//! H100 SM-level latency simulator for the FA3 decode kernel.
+//!
+//! The paper's effect is *occupancy arithmetic* on a 132-SM Hopper part:
+//! tiles = Batch x H_KV work units, split s ways, wave-quantized onto SMs,
+//! paying a split-combine reduction when s > 1. None of that is ISA-level —
+//! so a calibrated analytical SM/wave model reproduces the paper's
+//! who-wins/by-how-much/where-crossovers-fall on hardware we don't have
+//! (DESIGN.md §Substitutions). Kernel *numerics* run for real through the
+//! Pallas-lowered HLO on the CPU PJRT backend (`runtime/`); this module is
+//! the *latency* oracle for benches, the serving simulator mode, and the
+//! evolutionary search's fitness function.
+//!
+//! Modules:
+//! * [`gpu`]          — device descriptions (H100 SXM5 and variants),
+//! * [`calibration`]  — cost-model constants fitted to the paper's anchors,
+//! * [`kernel_model`] — the launch-latency model itself,
+//! * [`trace`]        — multi-step decode traces and TPOT aggregation.
+
+pub mod calibration;
+pub mod gpu;
+pub mod kernel_model;
+pub mod trace;
+
+pub use calibration::Calibration;
+pub use gpu::GpuSpec;
+pub use kernel_model::{simulate_kernel, KernelTiming, Simulator};
+pub use trace::{DecodeTrace, TraceSummary};

@@ -1,0 +1,132 @@
+//! Decode traces: latency over a multi-step generation, aggregated to the
+//! metric the evolutionary search optimizes — TPOT (Time per Output Token,
+//! §3.1) — and to serving-style summaries.
+
+use crate::heuristics::tiles::DecodeShape;
+use crate::heuristics::{SchedulerMetadata, SplitPolicy};
+use crate::util::stats::Summary;
+
+use super::kernel_model::Simulator;
+
+/// One simulated autoregressive generation: decode `n_tokens` steps with a
+/// KV cache growing from `prompt_len`.
+#[derive(Debug, Clone)]
+pub struct DecodeTrace {
+    pub batch: usize,
+    pub h_q: usize,
+    pub h_kv: usize,
+    pub d: usize,
+    pub prompt_len: usize,
+    pub n_tokens: usize,
+}
+
+/// Aggregate of a simulated trace.
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    /// Attention-kernel time per output token, µs (the TPOT component the
+    /// paper's search minimized; framework overhead is policy-invariant).
+    pub tpot_us: f64,
+    pub total_us: f64,
+    pub per_step: Summary,
+}
+
+impl DecodeTrace {
+    /// The paper's §3.1 target workload: Llama-70B/TP-8-shaped chat decode,
+    /// Batch = 1, short prompts.
+    pub fn chat(prompt_len: usize, n_tokens: usize) -> DecodeTrace {
+        DecodeTrace { batch: 1, h_q: 8, h_kv: 1, d: 128, prompt_len, n_tokens }
+    }
+
+    /// Run the trace under `policy` on `sim`, rebuilding scheduler metadata
+    /// every step as the context grows (exactly what the serving scheduler
+    /// does per decode step).
+    pub fn run<P: SplitPolicy + ?Sized>(
+        &self,
+        sim: &Simulator,
+        policy: &P,
+        sm_margin: usize,
+        pack_gqa: bool,
+    ) -> TraceSummary {
+        assert!(self.n_tokens > 0, "empty trace");
+        let mut samples = Vec::with_capacity(self.n_tokens);
+        let mut total = 0.0;
+        for step in 0..self.n_tokens {
+            let l_k = self.prompt_len + step + 1; // attend over cache incl. new token
+            let shape = DecodeShape::decode(self.batch, l_k, self.h_q, self.h_kv, self.d);
+            let md = policy.metadata(&shape, sm_margin, pack_gqa);
+            let t = sim.kernel_us(&md);
+            samples.push(t);
+            total += t;
+        }
+        TraceSummary {
+            tpot_us: total / self.n_tokens as f64,
+            total_us: total,
+            per_step: Summary::of(&samples),
+        }
+    }
+
+    /// Run with an externally-forced split count each step (sweep harness).
+    pub fn run_forced(&self, sim: &Simulator, num_splits: usize) -> TraceSummary {
+        let mut samples = Vec::with_capacity(self.n_tokens);
+        let mut total = 0.0;
+        for step in 0..self.n_tokens {
+            let l_k = self.prompt_len + step + 1;
+            let shape = DecodeShape::decode(self.batch, l_k, self.h_q, self.h_kv, self.d);
+            let md = SchedulerMetadata::forced(shape, num_splits);
+            let t = sim.kernel_us(&md);
+            samples.push(t);
+            total += t;
+        }
+        TraceSummary {
+            tpot_us: total / self.n_tokens as f64,
+            total_us: total,
+            per_step: Summary::of(&samples),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::heuristics::{SequenceAwarePolicy, StandardPolicy};
+
+    #[test]
+    fn patched_policy_improves_chat_tpot() {
+        // A chat trace that decodes across the L_K = 385..512 boundary
+        // bucket must get faster under the sequence-aware policy.
+        let sim = Simulator::h100();
+        let trace = DecodeTrace::chat(384, 128); // steps cover 385..512
+        let std = trace.run(&sim, &StandardPolicy, 0, true);
+        let pat = trace.run(&sim, &SequenceAwarePolicy, 0, true);
+        let speedup = std.tpot_us / pat.tpot_us;
+        assert!(speedup > 1.15, "speedup {speedup:.3}");
+    }
+
+    #[test]
+    fn outside_bucket_identical() {
+        let sim = Simulator::h100();
+        let trace = DecodeTrace::chat(64, 64); // stays under L_K = 129..384
+        let std = trace.run(&sim, &StandardPolicy, 0, true);
+        let pat = trace.run(&sim, &SequenceAwarePolicy, 0, true);
+        assert_eq!(std.tpot_us, pat.tpot_us);
+    }
+
+    #[test]
+    fn tpot_is_mean_of_steps() {
+        let sim = Simulator::h100();
+        let trace = DecodeTrace::chat(100, 10);
+        let s = trace.run(&sim, &StandardPolicy, 0, true);
+        assert!((s.tpot_us - s.total_us / 10.0).abs() < 1e-9);
+        assert_eq!(s.per_step.n, 10);
+    }
+
+    #[test]
+    fn forced_split_sweep_consistent_with_policy() {
+        let sim = Simulator::h100();
+        let trace = DecodeTrace::chat(448, 32); // inside the nblk=4 bucket
+        let forced3 = trace.run_forced(&sim, 3);
+        let pat = trace.run(&sim, &SequenceAwarePolicy, 0, true);
+        // The patched policy IS s=3 in this bucket.
+        assert!((forced3.tpot_us - pat.tpot_us).abs() < 1e-9);
+    }
+}

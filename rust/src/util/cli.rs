@@ -1,0 +1,250 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and a generated usage string. Each
+//! binary declares its options up front so `--help` is accurate.
+
+use std::collections::BTreeMap;
+
+/// Declared option for usage/help rendering and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+pub struct Parser {
+    about: &'static str,
+    specs: Vec<OptSpec>,
+}
+
+impl Parser {
+    pub fn new(about: &'static str) -> Parser {
+        Parser { about, specs: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Parser {
+        self.specs.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Parser {
+        self.specs.push(OptSpec { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Parser {
+        self.specs.push(OptSpec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    /// Parse from process args; prints usage and exits on `--help` / error.
+    pub fn parse(self) -> Args {
+        let argv: Vec<String> = std::env::args().collect();
+        match self.parse_from(&argv) {
+            Ok(args) => args,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn parse_from(self, argv: &[String]) -> Result<Args, String> {
+        let program = argv.first().cloned().unwrap_or_default();
+        let mut args = Args {
+            program,
+            about: self.about,
+            specs: self.specs,
+            values: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(args.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = args
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", args.usage()))?
+                    .clone();
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    args.values.insert(name, value);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn usage(&self) -> String {
+        let mut out = format!("{}\n\nUsage: {} [options] [args]\n\nOptions:\n", self.about, self.program);
+        for s in &self.specs {
+            let left = if s.takes_value {
+                format!("  --{} <value>", s.name)
+            } else {
+                format!("  --{}", s.name)
+            };
+            let default = s
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("{left:28} {}{default}\n", s.help));
+        }
+        out
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .or_else(|| self.spec_default(name))
+    }
+
+    fn spec_default(&self, name: &str) -> Option<&'static str> {
+        self.specs.iter().find(|s| s.name == name).and_then(|s| s.default)
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name)
+            .unwrap_or_else(|| panic!("missing required option --{name}"))
+            .to_string()
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        let v = self.str(name);
+        v.parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        let v = self.str(name);
+        v.parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        let v = self.str(name);
+        v.parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(s.iter().map(|x| x.to_string()))
+            .collect()
+    }
+
+    fn parser() -> Parser {
+        Parser::new("test tool")
+            .flag("verbose", "talk more")
+            .opt("steps", "100", "how many steps")
+            .opt_req("name", "required name")
+    }
+
+    #[test]
+    fn parses_flags_and_values() {
+        let a = parser()
+            .parse_from(&argv(&["--verbose", "--steps", "5", "--name=x", "pos1"]))
+            .unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.usize("steps"), 5);
+        assert_eq!(a.str("name"), "x");
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parser().parse_from(&argv(&["--name", "y"])).unwrap();
+        assert_eq!(a.usize("steps"), 100);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parser().parse_from(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parser().parse_from(&argv(&["--steps"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parser().parse_from(&argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = parser().parse_from(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--steps"));
+        assert!(err.contains("default: 100"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn missing_required_panics_on_access() {
+        let a = parser().parse_from(&argv(&[])).unwrap();
+        a.str("name");
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parser().parse_from(&argv(&["--steps=42", "--name=n"])).unwrap();
+        assert_eq!(a.usize("steps"), 42);
+    }
+}

@@ -1,0 +1,151 @@
+//! Minimal INI/TOML-subset config loader (toml/serde unavailable offline).
+//!
+//! Supports `[section]` headers, `key = value` lines, `#`/`;` comments,
+//! and typed accessors. Used to load alternate simulator calibrations and
+//! engine settings without recompiling (`--config` flags).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed config: section -> key -> raw value string.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{line}'", lineno + 1);
+            };
+            let value = value.trim().trim_matches('"').to_string();
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, section: &str, key: &str) -> Result<f64> {
+        let v = self
+            .get(section, key)
+            .with_context(|| format!("missing [{section}] {key}"))?;
+        v.parse().with_context(|| format!("[{section}] {key} = '{v}' is not a number"))
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("[{section}] {key} = '{v}' is not a number")),
+        }
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("[{section}] {key} = '{v}' is not an integer")),
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+/// Load a [`crate::sim::Calibration`] from a `[calibration]` section,
+/// falling back to the paper fit for unspecified keys.
+pub fn calibration_from(cfg: &Config) -> Result<crate::sim::Calibration> {
+    let base = crate::sim::Calibration::paper_h100();
+    let s = "calibration";
+    Ok(crate::sim::Calibration {
+        t_launch_us: cfg.f64_or(s, "t_launch_us", base.t_launch_us)?,
+        t_setup_us: cfg.f64_or(s, "t_setup_us", base.t_setup_us)?,
+        t_block_us: cfg.f64_or(s, "t_block_us", base.t_block_us)?,
+        combine_base_us: cfg.f64_or(s, "combine_base_us", base.combine_base_us)?,
+        combine_near_us: cfg.f64_or(s, "combine_near_us", base.combine_near_us)?,
+        combine_far_us: cfg.f64_or(s, "combine_far_us", base.combine_far_us)?,
+        combine_slot_us: cfg.f64_or(s, "combine_slot_us", base.combine_slot_us)?,
+        combine_atomic_us: cfg.f64_or(s, "combine_atomic_us", base.combine_atomic_us)?,
+        internal_path_loss: cfg.f64_or(s, "internal_path_loss", base.internal_path_loss)?,
+        noise_rel_std: cfg.f64_or(s, "noise_rel_std", base.noise_rel_std)?,
+        ref_block_bytes: cfg.f64_or(s, "ref_block_bytes", base.ref_block_bytes)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# simulator calibration overrides
+[calibration]
+t_launch_us = 7.0
+noise_rel_std = 0.01
+
+[engine]
+max_batch = 8
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("calibration", "t_launch_us"), Some("7.0"));
+        assert_eq!(c.usize_or("engine", "max_batch", 4).unwrap(), 8);
+        assert_eq!(c.usize_or("engine", "missing", 4).unwrap(), 4);
+        assert!(c.f64("nope", "x").is_err());
+        assert_eq!(c.sections().count(), 2);
+    }
+
+    #[test]
+    fn calibration_overlay_keeps_defaults() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let cal = calibration_from(&c).unwrap();
+        assert_eq!(cal.t_launch_us, 7.0);
+        assert_eq!(cal.noise_rel_std, 0.01);
+        // Unspecified keys keep the paper fit.
+        let base = crate::sim::Calibration::paper_h100();
+        assert_eq!(cal.t_block_us, base.t_block_us);
+        assert_eq!(cal.combine_atomic_us, base.combine_atomic_us);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("key_without_equals").is_err());
+        assert!(Config::parse("[ok]\nx = 1").is_ok());
+        assert!(Config::parse("# only comments\n\n").is_ok());
+    }
+
+    #[test]
+    fn quoted_values_unquoted() {
+        let c = Config::parse("[s]\nname = \"H100\"").unwrap();
+        assert_eq!(c.get("s", "name"), Some("H100"));
+    }
+}

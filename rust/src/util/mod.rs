@@ -1,0 +1,15 @@
+//! Self-contained utility substrates.
+//!
+//! The offline build environment only carries the `xla` crate's dependency
+//! closure, so the conveniences a networked project would pull from
+//! crates.io (serde, clap, rand, criterion, proptest) are implemented here
+//! from scratch (DESIGN.md system inventory #19–#23). Each module is small,
+//! fully tested, and exactly as featureful as this repo needs.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod prng;
+pub mod proptest_lite;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,138 @@
+//! Summary statistics for latency samples (mean, percentiles, CI).
+//!
+//! Used by the bench harness (criterion substitute), the serving metrics,
+//! and the A/B comparisons in the paper-table reproductions.
+
+/// Summary of a sample of observations (e.g. per-iteration latencies in µs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std_dev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample");
+        let n = samples.len();
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Summary {
+            n,
+            mean,
+            std_dev: var.sqrt(),
+            min: sorted[0],
+            p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
+            p99: percentile_sorted(&sorted, 99.0),
+            max: sorted[n - 1],
+        }
+    }
+
+    /// Half-width of the ~95% confidence interval on the mean
+    /// (normal approximation; fine for the n >= 30 we use).
+    pub fn ci95_half_width(&self) -> f64 {
+        1.96 * self.std_dev / (self.n as f64).sqrt()
+    }
+}
+
+/// Linear-interpolation percentile on a pre-sorted slice, `p` in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Robust central estimate for A/B timing: the median is what the paper's
+/// CUDA-Graph-replay methodology effectively reports (it interleaves and
+/// discards outliers).
+pub fn median(samples: &[f64]) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("NaN"));
+    percentile_sorted(&s, 50.0)
+}
+
+/// Geometric mean of ratios (the right average for speedups).
+pub fn geomean(ratios: &[f64]) -> f64 {
+    assert!(!ratios.is_empty());
+    let log_sum: f64 = ratios.iter().map(|r| r.ln()).sum();
+    (log_sum / ratios.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert!((s.std_dev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.p50, 7.0);
+        assert_eq!(s.p99, 7.0);
+        assert_eq!(s.std_dev, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&sorted, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&sorted, 100.0), 10.0);
+        let sorted = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile_sorted(&sorted, 90.0) - 3.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_unsorted_input() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let g = geomean(&[1.21, 1.24, 1.0]);
+        assert!((g - (1.21f64 * 1.24 * 1.0).powf(1.0 / 3.0)).abs() < 1e-12);
+        assert_eq!(geomean(&[2.0]), 2.0);
+    }
+
+    #[test]
+    fn ordering_insensitive() {
+        let a = Summary::of(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        let b = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_sample_panics() {
+        Summary::of(&[]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Synthetic chat traffic.
+//!
+//! §3.1 describes the target workload: "standard chat interactions …
+//! Llama-3.1-70B-Instruct with short prompts (L_K <= 512, Batch = 1)".
+//! This generator produces deterministic request streams with that shape:
+//! prompt lengths from a truncated log-normal (chat prompts cluster short
+//! with a long tail), output lengths geometric-ish, Poisson arrivals.
+
+use crate::coordinator::Request;
+use crate::util::prng::Rng;
+
+/// A generated request plus its arrival offset.
+#[derive(Debug, Clone)]
+pub struct GeneratedRequest {
+    pub request: Request,
+    /// Arrival offset from stream start, µs.
+    pub arrival_offset_us: u64,
+}
+
+/// Chat workload parameters.
+#[derive(Debug, Clone)]
+pub struct ChatWorkload {
+    pub seed: u64,
+    pub n_requests: usize,
+    /// Median prompt length (tokens).
+    pub prompt_median: usize,
+    /// Hard cap on prompt length (the paper's L_K <= 512 regime).
+    pub prompt_cap: usize,
+    /// Mean output length (tokens).
+    pub output_mean: usize,
+    pub output_cap: usize,
+    /// Mean inter-arrival gap, µs (0 = all at once / closed loop).
+    pub mean_gap_us: u64,
+    pub vocab: usize,
+}
+
+impl Default for ChatWorkload {
+    fn default() -> Self {
+        ChatWorkload {
+            seed: 0xC4A7,
+            n_requests: 16,
+            prompt_median: 200,
+            prompt_cap: 512,
+            output_mean: 64,
+            output_cap: 256,
+            mean_gap_us: 0,
+            vocab: 4096,
+        }
+    }
+}
+
+impl ChatWorkload {
+    /// Generate the stream (deterministic in `seed`).
+    pub fn generate(&self) -> Vec<GeneratedRequest> {
+        assert!(self.n_requests > 0 && self.prompt_cap >= 1 && self.vocab >= 2);
+        let mut rng = Rng::new(self.seed);
+        let mut out = Vec::with_capacity(self.n_requests);
+        let mut clock = 0u64;
+        for id in 0..self.n_requests {
+            let prompt_len = self.sample_prompt_len(&mut rng);
+            let out_len = self.sample_output_len(&mut rng);
+            let prompt: Vec<i32> =
+                (0..prompt_len).map(|_| rng.range(1, self.vocab - 1) as i32).collect();
+            if self.mean_gap_us > 0 {
+                // Exponential inter-arrival (Poisson process).
+                let u = rng.f64().max(1e-12);
+                clock += (-(u.ln()) * self.mean_gap_us as f64) as u64;
+            }
+            out.push(GeneratedRequest {
+                request: Request::new(id as u64, prompt, out_len),
+                arrival_offset_us: clock,
+            });
+        }
+        out
+    }
+
+    fn sample_prompt_len(&self, rng: &mut Rng) -> usize {
+        // Log-normal around the median, truncated to [1, cap].
+        let sigma = 0.6;
+        let ln = (self.prompt_median as f64).ln() + sigma * rng.normal();
+        (ln.exp() as usize).clamp(1, self.prompt_cap)
+    }
+
+    fn sample_output_len(&self, rng: &mut Rng) -> usize {
+        // Geometric with the requested mean, truncated.
+        let p = 1.0 / self.output_mean as f64;
+        let u = rng.f64().max(1e-12);
+        (((1.0 - u).ln() / (1.0 - p).ln()).ceil() as usize).clamp(1, self.output_cap)
+    }
+
+    /// The §3 fitness workload: a fixed panel of short-prompt, Batch = 1
+    /// chat generations crossing the heuristic's decision boundaries.
+    pub fn evolution_panel() -> Vec<(usize, usize)> {
+        // (prompt_len, n_tokens) pairs; chosen to cover every nblk bucket
+        // the search can influence (1..4) plus a just-beyond control.
+        vec![(64, 64), (192, 64), (320, 64), (384, 128), (440, 72), (576, 64)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_bounds() {
+        let w = ChatWorkload { n_requests: 64, ..Default::default() };
+        let a = w.generate();
+        let b = w.generate();
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.prompt, y.request.prompt);
+            assert_eq!(x.arrival_offset_us, y.arrival_offset_us);
+        }
+        for g in &a {
+            assert!((1..=512).contains(&g.request.prompt.len()));
+            assert!((1..=256).contains(&g.request.max_new_tokens));
+            assert!(g.request.prompt.iter().all(|&t| t >= 1 && (t as usize) < 4096));
+        }
+    }
+
+    #[test]
+    fn prompt_distribution_clusters_short() {
+        let w = ChatWorkload { n_requests: 500, ..Default::default() };
+        let reqs = w.generate();
+        let med = {
+            let mut lens: Vec<usize> = reqs.iter().map(|r| r.request.prompt.len()).collect();
+            lens.sort_unstable();
+            lens[lens.len() / 2]
+        };
+        assert!((100..=380).contains(&med), "median prompt {med}");
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone() {
+        let w = ChatWorkload { mean_gap_us: 1000, n_requests: 50, ..Default::default() };
+        let reqs = w.generate();
+        let mut last = 0;
+        for g in &reqs {
+            assert!(g.arrival_offset_us >= last);
+            last = g.arrival_offset_us;
+        }
+        assert!(last > 0);
+    }
+
+    #[test]
+    fn closed_loop_has_zero_offsets() {
+        let w = ChatWorkload::default();
+        assert!(w.generate().iter().all(|g| g.arrival_offset_us == 0));
+    }
+
+    #[test]
+    fn panel_covers_boundary() {
+        let panel = ChatWorkload::evolution_panel();
+        // At least one generation crosses into the 385..512 bucket.
+        assert!(panel.iter().any(|&(p, n)| p + n > 384 && p < 512));
+        // And one control beyond it.
+        assert!(panel.iter().any(|&(p, _)| p > 512));
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload generators: the shapes and request streams the paper evaluates.
+//!
+//! * [`shapes`]  — the exact Table-1 / §5.3 shape grids,
+//! * [`chatgen`] — synthetic chat traffic (§3.1's "standard chat
+//!   interactions": short prompts, Batch = 1) for the serving benches and
+//!   the evolutionary search's fitness workload.
+
+pub mod chatgen;
+pub mod shapes;
+
+pub use chatgen::{ChatWorkload, GeneratedRequest};
+pub use shapes::{regression_grid, table1_grid, Table1Row};

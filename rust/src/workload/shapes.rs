@@ -1,0 +1,101 @@
+//! The paper's evaluation shape grids.
+
+use crate::heuristics::tiles::DecodeShape;
+
+/// One Table-1 configuration (Batch = 1, D = 128, H_Q = 8·H_KV).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Table1Row {
+    pub l_k: usize,
+    pub h_kv: usize,
+    /// Reported upstream latency, µs (for the paper-vs-measured column).
+    pub paper_standard_us: f64,
+    /// Reported patched latency, µs.
+    pub paper_patched_us: f64,
+}
+
+impl Table1Row {
+    pub fn shape(&self) -> DecodeShape {
+        DecodeShape::decode(1, self.l_k, 8 * self.h_kv, self.h_kv, 128)
+    }
+
+    pub fn paper_speedup(&self) -> f64 {
+        self.paper_standard_us / self.paper_patched_us
+    }
+}
+
+/// Table 1 of the paper, verbatim.
+pub fn table1_grid() -> Vec<Table1Row> {
+    let rows = [
+        (128, 1, 9.56, 9.56),
+        (128, 2, 9.45, 9.45),
+        (128, 8, 9.46, 9.46),
+        (256, 1, 11.57, 11.57),
+        (256, 2, 11.58, 11.58),
+        (256, 8, 11.60, 11.60),
+        (384, 1, 13.60, 13.60),
+        (384, 2, 13.57, 13.57),
+        (384, 8, 13.55, 13.55),
+        (512, 1, 13.72, 11.37),
+        (512, 2, 13.52, 10.93),
+        (512, 8, 13.56, 13.56),
+        (2048, 1, 11.99, 11.99),
+        (2048, 2, 12.66, 12.66),
+        (2048, 8, 12.73, 12.73),
+        (4096, 1, 13.88, 13.88),
+        (4096, 2, 13.53, 13.53),
+        (4096, 8, 15.05, 15.05),
+    ];
+    rows.into_iter()
+        .map(|(l_k, h_kv, s, p)| Table1Row {
+            l_k,
+            h_kv,
+            paper_standard_us: s,
+            paper_patched_us: p,
+        })
+        .collect()
+}
+
+/// §5.3's 160-configuration regression grid:
+/// Batch ∈ {1,2,4,8} × L_K ∈ {128,…,8192} × H_KV ∈ {1,2,4,8,32}.
+pub fn regression_grid() -> Vec<DecodeShape> {
+    let batches = [1usize, 2, 4, 8];
+    let l_ks = [128usize, 256, 384, 512, 1024, 2048, 4096, 8192];
+    let h_kvs = [1usize, 2, 4, 8, 32];
+    let mut out = Vec::with_capacity(batches.len() * l_ks.len() * h_kvs.len());
+    for &b in &batches {
+        for &l_k in &l_ks {
+            for &h_kv in &h_kvs {
+                out.push(DecodeShape::decode(b, l_k, 8 * h_kv, h_kv, 128));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_eighteen_rows() {
+        let g = table1_grid();
+        assert_eq!(g.len(), 18);
+        // The winning cells.
+        let w1 = g.iter().find(|r| r.l_k == 512 && r.h_kv == 1).unwrap();
+        assert!((w1.paper_speedup() - 1.2067).abs() < 1e-3);
+        let w2 = g.iter().find(|r| r.l_k == 512 && r.h_kv == 2).unwrap();
+        assert!((w2.paper_speedup() - 1.2369).abs() < 1e-3);
+        // Everything else is 1.00x.
+        let controls = g.iter().filter(|r| !(r.l_k == 512 && r.h_kv <= 2));
+        for c in controls {
+            assert!((c.paper_speedup() - 1.0).abs() < 1e-9, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn regression_grid_is_160() {
+        let g = regression_grid();
+        assert_eq!(g.len(), 160); // 4 x 8 x 5, §5.3
+        assert!(g.iter().all(|s| s.h_q == 8 * s.h_kv && s.d == 128 && s.l_q == 1));
+    }
+}

@@ -1,0 +1,152 @@
+//! Property tests over the split heuristics (proptest_lite).
+//!
+//! The paper's safety story rests on structural properties of the policy
+//! pair, not on the 160 sampled configs alone — these check them across
+//! randomized shape space.
+
+use fa3_split::heuristics::sequence_aware::{BOUNDARY_SPLIT, LOW_TILE_THRESHOLD};
+use fa3_split::heuristics::tiles::{DecodeShape, SplitGeometry, KV_BLOCK};
+use fa3_split::heuristics::{
+    SchedulerMetadata, SequenceAwarePolicy, SplitPolicy, StandardPolicy, H100_NUM_SMS,
+};
+use fa3_split::util::proptest_lite::{check, Domain};
+
+fn shape_from(case: &[u64]) -> DecodeShape {
+    let batch = case[0] as usize;
+    let l_k = case[1] as usize;
+    let h_kv = case[2] as usize;
+    DecodeShape::decode(batch, l_k, 8 * h_kv, h_kv, 128)
+}
+
+const SHAPE_DOMAINS: [Domain; 3] = [
+    Domain { lo: 1, hi: 16 },    // batch
+    Domain { lo: 1, hi: 9000 },  // l_k
+    Domain { lo: 1, hi: 32 },    // h_kv
+];
+
+#[test]
+fn policies_differ_only_in_the_boundary_bucket() {
+    check("policy-delta-surface", &SHAPE_DOMAINS, |case| {
+        let shape = shape_from(case);
+        let s_std = StandardPolicy.num_splits(&shape, H100_NUM_SMS, true);
+        let s_pat = SequenceAwarePolicy.num_splits(&shape, H100_NUM_SMS, true);
+        if s_std == s_pat {
+            return Ok(());
+        }
+        // Any difference must be exactly the paper's override.
+        if shape.nblk() != 4 {
+            return Err(format!("diff outside nblk=4: nblk={}", shape.nblk()));
+        }
+        if shape.total_mblocks(true) >= LOW_TILE_THRESHOLD {
+            return Err(format!("diff with tiles={}", shape.total_mblocks(true)));
+        }
+        if s_std != 1 || s_pat != BOUNDARY_SPLIT {
+            return Err(format!("unexpected values {s_std} -> {s_pat}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn patched_never_splits_saturated_grids() {
+    check("saturated-stays-unsplit", &SHAPE_DOMAINS, |case| {
+        let shape = shape_from(case);
+        let tiles = shape.total_mblocks(true);
+        let s = SequenceAwarePolicy.num_splits(&shape, H100_NUM_SMS, true);
+        if tiles as f32 >= 0.8 * H100_NUM_SMS as f32 && s != 1 {
+            return Err(format!("saturated grid split: tiles={tiles} s={s}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn split_counts_bounded_by_caps() {
+    check("split-caps", &SHAPE_DOMAINS, |case| {
+        let shape = shape_from(case);
+        for (name, s) in [
+            ("std", StandardPolicy.num_splits(&shape, H100_NUM_SMS, true)),
+            ("pat", SequenceAwarePolicy.num_splits(&shape, H100_NUM_SMS, true)),
+        ] {
+            if s < 1 || s > 128 || s > H100_NUM_SMS.max(shape.nblk()).max(3) {
+                return Err(format!("{name}: s={s} out of bounds (nblk={})", shape.nblk()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn geometry_invariants() {
+    check(
+        "split-geometry",
+        &[Domain::new(1, 20_000), Domain::new(1, 128)],
+        |case| {
+            let (l_k, s) = (case[0] as usize, case[1] as usize);
+            let g = SplitGeometry::of(l_k, s);
+            if g.padded_len < l_k {
+                return Err("padding lost tokens".into());
+            }
+            if g.split_len != g.blocks_per_split * KV_BLOCK {
+                return Err("split_len not block aligned".into());
+            }
+            let eff = SplitGeometry::effective_splits(l_k, s);
+            if eff > s || eff > g.nblk || eff == 0 {
+                return Err(format!("effective splits {eff} out of range"));
+            }
+            // Work conservation: the effective splits cover all blocks.
+            if eff * g.blocks_per_split < g.nblk {
+                return Err("blocks dropped".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn metadata_occupancy_and_ctas_consistent() {
+    check("metadata-consistency", &SHAPE_DOMAINS, |case| {
+        let shape = shape_from(case);
+        let md = SequenceAwarePolicy.metadata(&shape, 0, true);
+        let occ = md.occupancy();
+        if !(0.0..=1.0).contains(&occ) {
+            return Err(format!("occupancy {occ}"));
+        }
+        if md.grid_ctas() == 0 {
+            return Err("zero CTAs".into());
+        }
+        let forced = SchedulerMetadata::forced(shape, md.num_splits);
+        if forced.grid_ctas() != md.grid_ctas() {
+            return Err("forced metadata disagrees with policy metadata".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn guard_region_is_sm_budget_independent() {
+    // Across SM budgets (sm_margin sweep): decisions stay bounded and the
+    // short-context guard holds regardless of the SM count.
+    check(
+        "sm-budget",
+        &[Domain::new(1, 8), Domain::new(1, 4096), Domain::new(1, 8), Domain::new(0, 100)],
+        |case| {
+            let shape = DecodeShape::decode(
+                case[0] as usize,
+                case[1] as usize,
+                8 * case[2] as usize,
+                case[2] as usize,
+                128,
+            );
+            let sms = H100_NUM_SMS - case[3] as usize;
+            let s = SequenceAwarePolicy.num_splits(&shape, sms, true);
+            if shape.nblk() <= 3 && s != 1 {
+                return Err(format!("guard 1 violated at sms={sms}: s={s}"));
+            }
+            if s > sms.max(BOUNDARY_SPLIT) {
+                return Err(format!("s={s} exceeds SM budget {sms}"));
+            }
+            Ok(())
+        },
+    );
+}

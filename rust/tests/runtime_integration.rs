@@ -1,0 +1,270 @@
+//! Integration: the rust runtime executes the real AOT artifacts.
+//!
+//! Requires `make artifacts` to have been run (skipped with a message
+//! otherwise, so `cargo test` stays green on a fresh checkout).
+
+use fa3_split::runtime::{HostTensor, Registry};
+use fa3_split::util::prng::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn rand_f32(rng: &mut Rng, shape: &[usize]) -> HostTensor {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    HostTensor::f32(shape, data).unwrap()
+}
+
+/// Host reference decode attention (mirrors python/compile/kernels/ref.py).
+fn ref_attention(
+    q: &HostTensor,
+    k: &HostTensor,
+    v: &HostTensor,
+    kv_lens: &[i32],
+) -> Vec<f32> {
+    let (b, h_q, d) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    let (l_k, h_kv) = (k.shape()[1], k.shape()[2]);
+    let g = h_q / h_kv;
+    let scale = 1.0 / (d as f32).sqrt();
+    let qd = q.as_f32().unwrap();
+    let kd = k.as_f32().unwrap();
+    let vd = v.as_f32().unwrap();
+    let mut out = vec![0f32; b * h_q * d];
+    for bi in 0..b {
+        for hq in 0..h_q {
+            let hk = hq / g;
+            let len = kv_lens[bi] as usize;
+            let qv = &qd[(bi * h_q + hq) * d..(bi * h_q + hq + 1) * d];
+            let mut scores = vec![0f32; len];
+            for t in 0..len {
+                let kv = &kd[((bi * l_k + t) * h_kv + hk) * d..((bi * l_k + t) * h_kv + hk) * d + d];
+                scores[t] = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+            let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = scores.iter().map(|s| (s - m).exp()).collect();
+            let denom: f32 = exps.iter().sum();
+            for t in 0..len {
+                let w = exps[t] / denom;
+                let vv = &vd[((bi * l_k + t) * h_kv + hk) * d..((bi * l_k + t) * h_kv + hk) * d + d];
+                for di in 0..d {
+                    out[(bi * h_q + hq) * d + di] += w * vv[di];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn kernel_artifact_matches_host_reference() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let reg = Registry::open(&dir).unwrap();
+    let mut rng = Rng::new(42);
+
+    // The paper's winning shape: B=1, L_K=512, H_KV=1, s=3, vs s=1 —
+    // both must agree with the host oracle and with each other.
+    let mut outputs = Vec::new();
+    let q = rand_f32(&mut rng, &[1, 8, 128]);
+    let k = rand_f32(&mut rng, &[1, 512, 1, 128]);
+    let v = rand_f32(&mut rng, &[1, 512, 1, 128]);
+    let lens = HostTensor::s32(&[1], vec![512]).unwrap();
+    for s in [1usize, 3] {
+        let entry = reg
+            .manifest
+            .find_kernel(1, 512, 1, s)
+            .expect("kernel artifact missing — rebuild artifacts");
+        let exe = reg.executor_for(entry).unwrap();
+        let out = exe
+            .execute(&[q.clone(), k.clone(), v.clone(), lens.clone()])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[1, 8, 128]);
+        outputs.push(out[0].as_f32().unwrap().to_vec());
+    }
+    // Split invariance on the real execution path.
+    for (a, b) in outputs[0].iter().zip(&outputs[1]) {
+        assert!((a - b).abs() < 1e-4, "split changed the math: {a} vs {b}");
+    }
+    // Against the host oracle.
+    let expect = ref_attention(&q, &k, &v, &[512]);
+    for (got, want) in outputs[1].iter().zip(&expect) {
+        assert!((got - want).abs() < 1e-3, "kernel vs oracle: {got} vs {want}");
+    }
+}
+
+#[test]
+fn kernel_artifact_respects_kv_lens() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let reg = Registry::open(&dir).unwrap();
+    let mut rng = Rng::new(7);
+    let q = rand_f32(&mut rng, &[1, 8, 128]);
+    let k = rand_f32(&mut rng, &[1, 512, 1, 128]);
+    let v = rand_f32(&mut rng, &[1, 512, 1, 128]);
+    let entry = reg.manifest.find_kernel(1, 512, 1, 3).unwrap();
+    let exe = reg.executor_for(entry).unwrap();
+    let lens = HostTensor::s32(&[1], vec![200]).unwrap();
+    let out = exe.execute(&[q.clone(), k.clone(), v.clone(), lens]).unwrap();
+    let expect = ref_attention(&q, &k, &v, &[200]);
+    for (got, want) in out[0].as_f32().unwrap().iter().zip(&expect) {
+        assert!((got - want).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn executor_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let reg = Registry::open(&dir).unwrap();
+    let entry = reg.manifest.find_kernel(1, 512, 1, 1).unwrap();
+    let exe = reg.executor_for(entry).unwrap();
+    let bad = HostTensor::zeros_f32(&[1, 8, 64]); // wrong D
+    let k = HostTensor::zeros_f32(&[1, 512, 1, 128]);
+    let v = HostTensor::zeros_f32(&[1, 512, 1, 128]);
+    let lens = HostTensor::s32(&[1], vec![512]).unwrap();
+    assert!(exe.execute(&[bad, k, v, lens]).is_err());
+    // Wrong arity.
+    assert!(exe.execute(&[]).is_err());
+}
+
+#[test]
+fn model_decode_step_runs_and_chains() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let reg = Registry::open(&dir).unwrap();
+    let Some(model) = reg.manifest.model.clone() else {
+        eprintln!("SKIP: no model block in manifest");
+        return;
+    };
+    let cfg = &model.config;
+    let entry = reg.manifest.find_decode_bucket(1, 1).expect("decode bucket b1 s1");
+    let b = entry.meta.batch.unwrap();
+    let cache_shape = [cfg.n_layers, b, cfg.max_seq, cfg.n_heads_kv, cfg.head_dim];
+
+    let tokens = HostTensor::s32(&[b], vec![1; b]).unwrap();
+    let positions = HostTensor::s32(&[b], vec![0; b]).unwrap();
+    let kv_k = HostTensor::zeros_f32(&cache_shape);
+    let kv_v = HostTensor::zeros_f32(&cache_shape);
+
+    let out = reg
+        .execute_model(&entry.name, &[tokens, positions, kv_k, kv_v])
+        .unwrap();
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].shape(), &[b, cfg.vocab]);
+    let logits = out[0].as_f32().unwrap();
+    assert!(logits.iter().all(|x| x.is_finite()), "non-finite logits");
+
+    // Chain a second step on the updated caches: greedy-decode token.
+    let next: i32 = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as i32;
+    let tokens2 = HostTensor::s32(&[b], vec![next; b]).unwrap();
+    let positions2 = HostTensor::s32(&[b], vec![1; b]).unwrap();
+    let out2 = reg
+        .execute_model(&entry.name, &[tokens2, positions2, out[1].clone(), out[2].clone()])
+        .unwrap();
+    assert!(out2[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+
+    // Split invariance at the model level on the real path: the s=3
+    // artifact must produce identical logits for identical state.
+    if let Some(entry_s3) = reg.manifest.find_decode_bucket(1, 3) {
+        let tokens = HostTensor::s32(&[b], vec![1; b]).unwrap();
+        let positions = HostTensor::s32(&[b], vec![0; b]).unwrap();
+        let kv_k = HostTensor::zeros_f32(&cache_shape);
+        let kv_v = HostTensor::zeros_f32(&cache_shape);
+        let out_s3 = reg
+            .execute_model(&entry_s3.name, &[tokens, positions, kv_k, kv_v])
+            .unwrap();
+        for (a, c) in out[0].as_f32().unwrap().iter().zip(out_s3[0].as_f32().unwrap()) {
+            assert!((a - c).abs() < 1e-3, "decode split changed logits: {a} vs {c}");
+        }
+    }
+}
+
+#[test]
+fn prefill_then_decode_consistency() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let reg = Registry::open(&dir).unwrap();
+    let Some(model) = reg.manifest.model.clone() else {
+        return;
+    };
+    let cfg = &model.config;
+    let Some(prefill) = reg.manifest.find_prefill_bucket(1, 8) else {
+        eprintln!("SKIP: no prefill bucket");
+        return;
+    };
+    let b = prefill.meta.batch.unwrap();
+    let p_len = prefill.meta.prompt_len.unwrap();
+    let cache_shape = [cfg.n_layers, b, cfg.max_seq, cfg.n_heads_kv, cfg.head_dim];
+
+    let mut prompt = vec![0i32; b * p_len];
+    let mut rng = Rng::new(3);
+    let true_len = 8usize;
+    for r in 0..b {
+        for t in 0..true_len {
+            prompt[r * p_len + t] = rng.range(0, cfg.vocab - 1) as i32;
+        }
+    }
+    let tokens = HostTensor::s32(&[b, p_len], prompt.clone()).unwrap();
+    let lens = HostTensor::s32(&[b], vec![true_len as i32; b]).unwrap();
+    let out_p = reg
+        .execute_model(
+            &prefill.name,
+            &[tokens, lens, HostTensor::zeros_f32(&cache_shape), HostTensor::zeros_f32(&cache_shape)],
+        )
+        .unwrap();
+
+    // Decode the same prompt token-by-token through the decode bucket of the
+    // same batch size; final logits must agree with prefill's.
+    let decode = reg
+        .manifest
+        .entries
+        .iter()
+        .find(|e| {
+            e.kind == fa3_split::runtime::ArtifactKind::Decode
+                && e.meta.batch == Some(b)
+                && e.meta.num_splits == Some(1)
+        })
+        .expect("matching decode bucket");
+    let mut kv_k = HostTensor::zeros_f32(&cache_shape);
+    let mut kv_v = HostTensor::zeros_f32(&cache_shape);
+    let mut logits = Vec::new();
+    for t in 0..true_len {
+        let toks: Vec<i32> = (0..b).map(|r| prompt[r * p_len + t]).collect();
+        let out = reg
+            .execute_model(
+                &decode.name,
+                &[
+                    HostTensor::s32(&[b], toks).unwrap(),
+                    HostTensor::s32(&[b], vec![t as i32; b]).unwrap(),
+                    kv_k,
+                    kv_v,
+                ],
+            )
+            .unwrap();
+        logits = out[0].as_f32().unwrap().to_vec();
+        kv_k = out[1].clone();
+        kv_v = out[2].clone();
+    }
+    for (a, c) in out_p[0].as_f32().unwrap().iter().zip(&logits) {
+        assert!((a - c).abs() < 2e-2, "prefill vs decode-loop logits: {a} vs {c}");
+    }
+}
