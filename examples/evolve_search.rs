@@ -11,7 +11,7 @@
 
 use fa3_split::evolve::{Genome, Search, SearchConfig};
 use fa3_split::heuristics::tiles::DecodeShape;
-use fa3_split::heuristics::{SequenceAwarePolicy, SplitPolicy};
+use fa3_split::planner::{Planner, PlannerBuilder};
 use fa3_split::sim::Simulator;
 use fa3_split::util::cli;
 
@@ -46,8 +46,10 @@ fn main() {
     println!("{}", report.best.render_python());
 
     // The §3.3 dissection: what does the winner do at the boundary shape?
+    // The genome runs through the same planner façade the engine deploys.
     let boundary = DecodeShape::llama70b_tp8(1, 512);
-    let md = report.best.decide(&boundary);
+    let mut best_planner = PlannerBuilder::genome(report.best.clone()).build();
+    let md = best_planner.plan(&boundary).metadata;
     println!(
         "at the boundary shape (B=1, L_K=512, H_KV=1): evolved s = {}, pack_gqa = {}, sm_margin = {}",
         md.num_splits, md.pack_gqa, md.sm_margin
@@ -58,13 +60,13 @@ fn main() {
     let eval = search.evaluator();
     let fig1_tpot = eval.panel_tpot_us(&Genome::figure1());
     println!("\npaper's Figure-1 candidate TPOT : {:.3} µs", fig1_tpot);
-    let policy = SequenceAwarePolicy;
+    let mut distilled = Planner::sequence_aware();
     let mut total = 0.0;
     let mut steps = 0usize;
     for &(prompt, n) in &fa3_split::workload::ChatWorkload::evolution_panel() {
         for step in 0..n {
             let shape = DecodeShape::llama70b_tp8(1, prompt + step + 1);
-            total += sim.kernel_us(&policy.metadata(&shape, 0, true));
+            total += sim.kernel_us(&distilled.plan(&shape).metadata);
             steps += 1;
         }
     }

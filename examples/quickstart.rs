@@ -9,7 +9,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use fa3_split::heuristics::tiles::DecodeShape;
-use fa3_split::heuristics::{SequenceAwarePolicy, SplitPolicy, StandardPolicy};
+use fa3_split::planner::PolicyRegistry;
 use fa3_split::runtime::{HostTensor, Registry};
 use fa3_split::sim::Simulator;
 use fa3_split::util::prng::Rng;
@@ -18,23 +18,30 @@ use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
     // --- 1. The decision the paper changes -------------------------------
+    // One planner per policy, configured once (H100 defaults); every plan
+    // below comes from the same façade the serving engine uses.
+    let registry = PolicyRegistry::builtin();
+    let mut std_planner = registry.planner("standard").map_err(|e| anyhow::anyhow!(e))?;
+    let mut pat_planner = registry.planner("sequence-aware").map_err(|e| anyhow::anyhow!(e))?;
+
     let shape = DecodeShape::llama70b_tp8(1, 512); // Llama-70B/TP-8 decode
-    let md_std = StandardPolicy.metadata(&shape, 0, true);
-    let md_pat = SequenceAwarePolicy.metadata(&shape, 0, true);
+    let plan_std = std_planner.plan(&shape);
+    let plan_pat = pat_planner.plan(&shape);
 
     println!("Shape: Batch=1, L_K=512, H_Q=8, H_KV=1, D=128 (Llama-3.1-70B under TP-8)");
     println!("  nblk = {} KV blocks, work tiles = {}", shape.nblk(), shape.total_mblocks(true));
     println!(
-        "  standard heuristic:      s = {} -> {} CTA(s), {:.1}% of 132 SMs occupied",
-        md_std.num_splits,
-        md_std.grid_ctas(),
-        md_std.occupancy() * 100.0
+        "  standard heuristic:      s = {} -> {} CTA(s), {:.1}% of {} SMs occupied",
+        plan_std.num_splits(),
+        plan_std.grid_ctas,
+        plan_std.occupancy * 100.0,
+        std_planner.device().num_sms
     );
     println!(
         "  sequence-aware (paper):  s = {} -> {} CTAs, {:.1}% occupied",
-        md_pat.num_splits,
-        md_pat.grid_ctas(),
-        md_pat.occupancy() * 100.0
+        plan_pat.num_splits(),
+        plan_pat.grid_ctas,
+        plan_pat.occupancy * 100.0
     );
 
     // --- 2. The headline cells on the simulated H100 ---------------------
@@ -43,8 +50,8 @@ fn main() -> anyhow::Result<()> {
         .align(&[Align::Right; 5]);
     for (l_k, h_kv) in [(384, 1), (512, 1), (512, 2), (512, 8), (2048, 1)] {
         let s = DecodeShape::decode(1, l_k, 8 * h_kv, h_kv, 128);
-        let a = sim.kernel_us(&StandardPolicy.metadata(&s, 0, true));
-        let b = sim.kernel_us(&SequenceAwarePolicy.metadata(&s, 0, true));
+        let a = sim.kernel_us(&std_planner.plan(&s).metadata);
+        let b = sim.kernel_us(&pat_planner.plan(&s).metadata);
         t.row(&[
             l_k.to_string(),
             h_kv.to_string(),

@@ -17,26 +17,19 @@ use std::sync::Arc;
 
 use fa3_split::coordinator::scheduler::AttnGeometry;
 use fa3_split::coordinator::{Engine, EngineConfig, Request};
-use fa3_split::heuristics::{SequenceAwarePolicy, SplitPolicy, StandardPolicy};
+use fa3_split::planner::PolicyRegistry;
 use fa3_split::runtime::Registry;
 use fa3_split::sim::Simulator;
 use fa3_split::util::cli;
 use fa3_split::workload::ChatWorkload;
 
-fn policy_by_name(name: &str) -> Box<dyn SplitPolicy> {
-    match name {
-        "standard" => Box::new(StandardPolicy),
-        "patched" | "sequence-aware" => Box::new(SequenceAwarePolicy),
-        other => panic!("unknown policy '{other}' (use standard|patched)"),
-    }
-}
-
 fn main() -> anyhow::Result<()> {
+    let policies = PolicyRegistry::builtin();
     let args = cli::Parser::new("End-to-end serving over the AOT artifacts")
         .opt("requests", "8", "number of chat requests")
         .opt("tokens", "48", "max new tokens per request")
         .opt("prompt-median", "200", "median prompt length")
-        .opt("policy", "patched", "split policy: standard|patched")
+        .opt("policy", "sequence-aware", format!("split policy: {}", policies.help_line()))
         .opt("seed", "7", "workload seed")
         .parse();
 
@@ -79,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     );
     let mut engine = Engine::with_pjrt(
         registry.clone(),
-        policy_by_name(&args.str("policy")),
+        policies.planner(&args.str("policy")).map_err(|e| anyhow::anyhow!(e))?,
         EngineConfig::default(),
     )?;
     println!(
@@ -126,10 +119,10 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let mut results = Vec::new();
-    for policy_name in ["standard", "patched"] {
+    for policy_name in ["standard", "sequence-aware"] {
         let mut sim_engine = Engine::with_simulator(
             Simulator::h100(),
-            policy_by_name(policy_name),
+            policies.planner(policy_name).map_err(|e| anyhow::anyhow!(e))?,
             geometry,
             vec![1, 3],
             EngineConfig {

@@ -9,9 +9,9 @@ use fa3_split::bench_harness::Bencher;
 use fa3_split::coordinator::{
     BlockManager, BlockManagerConfig, Engine, EngineConfig, Request,
 };
-use fa3_split::coordinator::scheduler::AttnGeometry;
+use fa3_split::coordinator::scheduler::{AttnGeometry, DecodeScheduler};
 use fa3_split::heuristics::tiles::DecodeShape;
-use fa3_split::heuristics::{SchedulerMetadata, SequenceAwarePolicy};
+use fa3_split::planner::Planner;
 use fa3_split::sim::Simulator;
 
 fn main() {
@@ -20,9 +20,20 @@ fn main() {
 
     // 1. Simulator kernel eval (the EA fitness inner loop).
     let sim = Simulator::h100();
-    let md = SchedulerMetadata::forced(DecodeShape::llama70b_tp8(1, 512), 3);
+    let md = Planner::standard()
+        .plan_forced(&DecodeShape::llama70b_tp8(1, 512), 3)
+        .metadata;
     let r_sim = b.run("sim.kernel_us        (one launch eval)", || sim.kernel_us(&md));
     let evals_per_s = 1e9 / r_sim.mean_ns();
+
+    // 1b. The scheduler's batched per-step decision (planner-cached).
+    let geometry_for_batch = AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 8192 };
+    let mut sched =
+        DecodeScheduler::new(Planner::sequence_aware(), geometry_for_batch, vec![1, 3]);
+    let buckets = [(1usize, 512usize), (2, 512), (4, 1024), (8, 2048)];
+    b.run("scheduler.decide_batch (4 buckets, cached)", || {
+        sched.decide_batch(&buckets).unwrap()
+    });
 
     // 2. Block manager admit/release cycle.
     let mut mgr = BlockManager::new(BlockManagerConfig::default());
@@ -40,7 +51,7 @@ fn main() {
     let r_engine = heavy.run("engine.run           (sim backend, 16 reqs x 32 tok)", || {
         let mut e = Engine::with_simulator(
             Simulator::h100(),
-            Box::new(SequenceAwarePolicy),
+            Planner::sequence_aware(),
             geometry,
             vec![1, 3],
             EngineConfig::default(),

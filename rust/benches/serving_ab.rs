@@ -6,16 +6,16 @@
 
 use fa3_split::coordinator::scheduler::AttnGeometry;
 use fa3_split::coordinator::{BatcherConfig, Engine, EngineConfig};
-use fa3_split::heuristics::{SequenceAwarePolicy, SplitPolicy, StandardPolicy};
+use fa3_split::planner::Planner;
 use fa3_split::sim::Simulator;
 use fa3_split::util::table::{speedup, us, Align, Table};
 use fa3_split::workload::ChatWorkload;
 
-fn run(policy: Box<dyn SplitPolicy>, workload: &ChatWorkload, max_batch: usize) -> f64 {
+fn run(planner: Planner, workload: &ChatWorkload, max_batch: usize) -> f64 {
     let buckets: Vec<usize> = [1usize, 2, 4, 8].into_iter().filter(|&b| b <= max_batch).collect();
     let mut engine = Engine::with_simulator(
         Simulator::h100(),
-        policy,
+        planner,
         AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 },
         vec![1, 3],
         EngineConfig {
@@ -74,8 +74,8 @@ fn main() {
     let mut t = Table::new(&["Workload", "Std TPOT (µs)", "Patched TPOT (µs)", "Speedup"])
         .align(&[Align::Left, Align::Right, Align::Right, Align::Right]);
     for (name, workload, max_batch) in regimes {
-        let a = run(Box::new(StandardPolicy), &workload, max_batch);
-        let b = run(Box::new(SequenceAwarePolicy), &workload, max_batch);
+        let a = run(Planner::standard(), &workload, max_batch);
+        let b = run(Planner::sequence_aware(), &workload, max_batch);
         t.row(&[name.to_string(), us(a), us(b), speedup(a / b)]);
     }
     t.print();

@@ -43,13 +43,15 @@ pub fn median_us(sim: &Simulator, md: &SchedulerMetadata, replays: usize, rng: &
 mod tests {
     use super::*;
     use crate::heuristics::tiles::DecodeShape;
+    use crate::planner::Planner;
 
     #[test]
     fn medians_converge_to_model() {
         let sim = Simulator::h100();
+        let planner = Planner::standard();
         let shape = DecodeShape::llama70b_tp8(1, 512);
-        let a = SchedulerMetadata::forced(shape, 1);
-        let b = SchedulerMetadata::forced(shape, 3);
+        let a = planner.plan_forced(&shape, 1).metadata;
+        let b = planner.plan_forced(&shape, 3).metadata;
         let mut rng = Rng::new(1);
         let (ma, mb) = ab_median_us(&sim, &a, &b, 201, &mut rng);
         let clean_a = sim.kernel_us(&a);
@@ -62,7 +64,9 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let sim = Simulator::h100();
-        let md = SchedulerMetadata::forced(DecodeShape::llama70b_tp8(1, 256), 1);
+        let md = Planner::standard()
+            .plan_forced(&DecodeShape::llama70b_tp8(1, 256), 1)
+            .metadata;
         let x = median_us(&sim, &md, 51, &mut Rng::new(9));
         let y = median_us(&sim, &md, 51, &mut Rng::new(9));
         assert_eq!(x, y);

@@ -1,8 +1,8 @@
 //! Ablation studies for the design choices DESIGN.md calls out.
 //!
 //! A1 — **Hardware scale** (§2.2: "This static threshold overlooks the
-//!      hardware scale of H100"): the same A/B on A100 (108 SMs), H100
-//!      PCIe (114), H100 SXM (132) — the win exists wherever the grid
+//!      hardware scale of H100"): the same A/B across device profiles
+//!      (A100, H100 PCIe, H100 SXM) — the win exists wherever the grid
 //!      underfills the part, and grows with SM count.
 //! A2 — **Boundary sweep** (§4.1): L_K ∈ {128..640} × policy, showing
 //!      unchanged behavior below the bucket, the win inside it, and the
@@ -13,14 +13,17 @@
 //!      shape, showing why the search settled on margin 0.
 //! A5 — **Policy ladder** (§4.1/§5.2 future work): standard → conservative
 //!      patch → learned table → evolved genome, TPOT on the chat panel.
+//!
+//! Every launch here is planned through [`crate::planner`]: device
+//! profiles come from `DeviceProfile` presets and knob sweeps are planner
+//! configurations, not hand-assembled metadata.
 
 use crate::evolve::{Evaluator, Genome};
-use crate::heuristics::extended::TuneConfig;
+use crate::heuristics::extended::{ExtendedPolicy, TuneConfig};
 use crate::heuristics::tiles::DecodeShape;
-use crate::heuristics::{
-    ExtendedPolicy, SchedulerMetadata, SequenceAwarePolicy, SplitPolicy, StandardPolicy,
-};
-use crate::sim::{Calibration, GpuSpec, Simulator};
+use crate::heuristics::{SequenceAwarePolicy, StandardPolicy};
+use crate::planner::{DeviceProfile, Planner, PlannerBuilder};
+use crate::sim::Simulator;
 use crate::util::table::{speedup, us, Align, Table};
 
 /// A1: boundary-cell speedup across GPU generations.
@@ -28,19 +31,19 @@ pub fn hardware_scale() -> Table {
     let shape = DecodeShape::llama70b_tp8(1, 512);
     let mut t = Table::new(&["GPU", "SMs", "Std (µs)", "Patched (µs)", "Speedup", "Occupancy s=1"])
         .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
-    for gpu in [GpuSpec::a100_sxm(), GpuSpec::h100_pcie(), GpuSpec::h100_sxm()] {
-        let sim = Simulator::new(gpu.clone(), Calibration::paper_h100());
-        let md_std = StandardPolicy.metadata(&shape, 0, true);
-        let md_pat = SequenceAwarePolicy.metadata(&shape, 0, true);
-        let a = sim.kernel_us(&md_std);
-        let b = sim.kernel_us(&md_pat);
+    for device in [DeviceProfile::A100_SXM, DeviceProfile::H100_PCIE, DeviceProfile::H100_SXM] {
+        let sim = Simulator::for_profile(&device);
+        let mut std_p = PlannerBuilder::policy(StandardPolicy).device(device).build();
+        let mut pat_p = PlannerBuilder::policy(SequenceAwarePolicy).device(device).build();
+        let a = sim.kernel_us(&std_p.plan(&shape).metadata);
+        let b = sim.kernel_us(&pat_p.plan(&shape).metadata);
         t.row(&[
-            gpu.name.to_string(),
-            gpu.num_sms.to_string(),
+            device.name.to_string(),
+            device.num_sms.to_string(),
             us(a),
             us(b),
             speedup(a / b),
-            format!("{:.1}%", 100.0 / gpu.num_sms as f64),
+            format!("{:.1}%", 100.0 / device.num_sms as f64),
         ]);
     }
     t
@@ -48,12 +51,14 @@ pub fn hardware_scale() -> Table {
 
 /// A2: the §4.1 boundary sweep (which L_K change behavior, and how).
 pub fn boundary_sweep(sim: &Simulator) -> Table {
+    let mut std_p = Planner::standard();
+    let mut pat_p = Planner::sequence_aware();
     let mut t = Table::new(&["L_K", "nblk", "s std", "s pat", "Std (µs)", "Patched (µs)", "Speedup"])
         .align(&[Align::Right; 7]);
     for l_k in [128usize, 256, 384, 448, 512, 576, 640, 1024] {
         let shape = DecodeShape::llama70b_tp8(1, l_k);
-        let md_std = StandardPolicy.metadata(&shape, 0, true);
-        let md_pat = SequenceAwarePolicy.metadata(&shape, 0, true);
+        let md_std = std_p.plan(&shape).metadata;
+        let md_pat = pat_p.plan(&shape).metadata;
         let a = sim.kernel_us(&md_std);
         let b = sim.kernel_us(&md_pat);
         t.row(&[
@@ -71,20 +76,14 @@ pub fn boundary_sweep(sim: &Simulator) -> Table {
 
 /// A3: pack_gqa on/off across H_KV at the boundary length.
 pub fn pack_gqa_ablation(sim: &Simulator) -> Table {
+    let mut packed = PlannerBuilder::policy(SequenceAwarePolicy).pack_gqa(true).build();
+    let mut unpacked = PlannerBuilder::policy(SequenceAwarePolicy).pack_gqa(false).build();
     let mut t = Table::new(&["H_KV", "tiles packed", "tiles unpacked", "Packed (µs)", "Unpacked (µs)", "Packed win"])
         .align(&[Align::Right; 6]);
     for h_kv in [1usize, 2, 4, 8] {
         let shape = DecodeShape::decode(1, 512, 8 * h_kv, h_kv, 128);
-        let s_packed = SequenceAwarePolicy.num_splits(&shape, 132, true);
-        let s_unpacked = SequenceAwarePolicy.num_splits(&shape, 132, false);
-        let md_p = SchedulerMetadata {
-            shape,
-            num_splits: s_packed,
-            pack_gqa: true,
-            sm_margin: 0,
-            path: crate::heuristics::DispatchPath::PrecomputedMetadata,
-        };
-        let md_u = SchedulerMetadata { pack_gqa: false, num_splits: s_unpacked, ..md_p };
+        let md_p = packed.plan(&shape).metadata;
+        let md_u = unpacked.plan(&shape).metadata;
         let a = sim.kernel_us(&md_p);
         let b = sim.kernel_us(&md_u);
         t.row(&[
@@ -110,17 +109,12 @@ pub fn sm_margin_ablation(sim: &Simulator) -> Table {
     let mut t = Table::new(&["sm_margin", "SMs left", "Boundary 2-CTA (µs)", "Dense 128-CTA (µs)"])
         .align(&[Align::Right; 4]);
     for margin in [0usize, 4, 8, 16, 32, 64] {
-        let md_b = SequenceAwarePolicy.metadata(&boundary, margin, true);
-        let md_d = SchedulerMetadata {
-            shape: dense,
-            num_splits: 8,
-            pack_gqa: true,
-            sm_margin: margin,
-            path: crate::heuristics::DispatchPath::PrecomputedMetadata,
-        };
+        let mut planner = PlannerBuilder::policy(SequenceAwarePolicy).sm_margin(margin).build();
+        let md_b = planner.plan(&boundary).metadata;
+        let md_d = planner.plan_forced(&dense, 8).metadata;
         t.row(&[
             margin.to_string(),
-            sim.gpu.sms_with_margin(margin).to_string(),
+            planner.device().sm_budget(margin).to_string(),
             us(sim.kernel_us(&md_b)),
             us(sim.kernel_us(&md_d)),
         ]);
@@ -133,24 +127,26 @@ pub fn policy_ladder(sim: &Simulator) -> Table {
     let evaluator = Evaluator::new(sim.clone());
     let upstream = evaluator.panel_tpot_us(&Genome::upstream());
 
-    let panel_tpot = |policy: &dyn SplitPolicy| {
+    let panel_tpot = |planner: &mut Planner| {
         let mut total = 0.0;
         let mut steps = 0usize;
         for &(prompt, n) in &crate::workload::ChatWorkload::evolution_panel() {
             for step in 0..n {
                 let shape = DecodeShape::llama70b_tp8(1, prompt + step + 1);
-                total += sim.kernel_us(&policy.metadata(&shape, 0, true));
+                total += sim.kernel_us(&planner.plan(&shape).metadata);
                 steps += 1;
             }
         }
         total / steps as f64
     };
 
-    let t_pat = panel_tpot(&SequenceAwarePolicy);
+    let t_pat = panel_tpot(&mut Planner::sequence_aware());
+    let probe = Planner::standard();
     let table_policy = ExtendedPolicy::tune(&TuneConfig::default(), |shape, s| {
-        sim.kernel_us(&SchedulerMetadata::forced(*shape, s))
+        sim.kernel_us(&probe.plan_forced(shape, s).metadata)
     });
-    let t_ext = panel_tpot(&table_policy);
+    let n_buckets = table_policy.len();
+    let t_ext = panel_tpot(&mut PlannerBuilder::policy(table_policy).build());
     let t_fig1 = evaluator.panel_tpot_us(&Genome::figure1());
 
     let mut t = Table::new(&["Policy", "Chat-panel TPOT (µs)", "vs upstream"])
@@ -158,7 +154,7 @@ pub fn policy_ladder(sim: &Simulator) -> Table {
     t.row(&["upstream (premature guard)".into(), us(upstream), speedup(1.0)]);
     t.row(&["paper patch (Fig 2, conservative)".into(), us(t_pat), speedup(upstream / t_pat)]);
     t.row(&[
-        format!("learned table ({} buckets, future work)", table_policy.len()),
+        format!("learned table ({n_buckets} buckets, future work)"),
         us(t_ext),
         speedup(upstream / t_ext),
     ]);

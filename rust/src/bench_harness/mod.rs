@@ -20,4 +20,4 @@ pub mod timer;
 pub mod ucurve;
 
 pub use ab::ab_median_us;
-pub use timer::Bencher;
+pub use timer::{BenchResult, Bencher};

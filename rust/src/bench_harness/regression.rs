@@ -5,7 +5,7 @@
 //! 0.99x, wins only at L_K = 512 with H_KV ∈ {1, 2} (low-tile cells).
 
 use crate::heuristics::tiles::DecodeShape;
-use crate::heuristics::{SequenceAwarePolicy, SplitPolicy, StandardPolicy};
+use crate::planner::Planner;
 use crate::sim::Simulator;
 use crate::util::prng::Rng;
 use crate::util::table::{speedup, us, Align, Table};
@@ -40,11 +40,13 @@ pub struct RegressionSummary {
 
 pub fn run(sim: &Simulator, replays: usize, seed: u64) -> Vec<RegressionCell> {
     let mut rng = Rng::new(seed);
+    let mut std_planner = Planner::standard();
+    let mut pat_planner = Planner::sequence_aware();
     regression_grid()
         .into_iter()
         .map(|shape| {
-            let md_std = StandardPolicy.metadata(&shape, 0, true);
-            let md_pat = SequenceAwarePolicy.metadata(&shape, 0, true);
+            let md_std = std_planner.plan(&shape).metadata;
+            let md_pat = pat_planner.plan(&shape).metadata;
             let (standard_us, patched_us) = ab_median_us(sim, &md_std, &md_pat, replays, &mut rng);
             RegressionCell { shape, standard_us, patched_us }
         })

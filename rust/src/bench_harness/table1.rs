@@ -2,7 +2,8 @@
 //! the Batch = 1 shape grid, on the metadata-enabled path — plus the §5.1
 //! contrast column for the internal-heuristic (no metadata) path.
 
-use crate::heuristics::{DispatchPath, SequenceAwarePolicy, SplitPolicy, StandardPolicy};
+use crate::heuristics::DispatchPath;
+use crate::planner::Planner;
 use crate::sim::Simulator;
 use crate::util::prng::Rng;
 use crate::util::table::{speedup, us, Align, Table};
@@ -38,11 +39,13 @@ impl Table1Cell {
 /// Run the full Table-1 A/B on the simulator.
 pub fn run(sim: &Simulator, replays: usize, seed: u64) -> Vec<Table1Cell> {
     let mut rng = Rng::new(seed);
+    let mut std_planner = Planner::standard();
+    let mut pat_planner = Planner::sequence_aware();
     let mut cells = Vec::new();
     for row in table1_grid() {
         let shape = row.shape();
-        let md_std = StandardPolicy.metadata(&shape, 0, true);
-        let md_pat = SequenceAwarePolicy.metadata(&shape, 0, true);
+        let md_std = std_planner.plan(&shape).metadata;
+        let md_pat = pat_planner.plan(&shape).metadata;
         let (standard_us, patched_us) = ab_median_us(sim, &md_std, &md_pat, replays, &mut rng);
         // §5.1: without precomputed metadata the same policies only yield
         // ~1.00-1.05x — re-run the A/B with both sides on the internal

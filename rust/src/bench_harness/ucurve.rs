@@ -3,7 +3,7 @@
 //! scheduler metadata, plus an ASCII rendering of the curve.
 
 use crate::heuristics::tiles::DecodeShape;
-use crate::heuristics::SchedulerMetadata;
+use crate::planner::Planner;
 use crate::sim::Simulator;
 use crate::util::prng::Rng;
 use crate::util::table::{us, Align, Table};
@@ -25,11 +25,12 @@ pub struct UcurvePoint {
 /// Run the sweep on the simulator.
 pub fn run(sim: &Simulator, replays: usize, seed: u64) -> Vec<UcurvePoint> {
     let shape = DecodeShape::llama70b_tp8(1, 512);
+    let planner = Planner::standard(); // forced plans: policy is bypassed
     let mut rng = Rng::new(seed);
     SWEEP_SPLITS
         .iter()
         .map(|&s| {
-            let md = SchedulerMetadata::forced(shape, s);
+            let md = planner.plan_forced(&shape, s).metadata;
             let timing = sim.kernel(&md);
             UcurvePoint {
                 num_splits: s,

@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::heuristics::SplitPolicy;
+use crate::planner::Planner;
 use crate::runtime::{HostTensor, Registry};
 use crate::sim::Simulator;
 
@@ -172,10 +172,10 @@ impl Engine {
     /// Real-execution engine over loaded artifacts.
     pub fn with_pjrt(
         registry: Arc<Registry>,
-        policy: Box<dyn SplitPolicy>,
+        planner: Planner,
         cfg: EngineConfig,
     ) -> Result<Engine> {
-        let scheduler = scheduler_from_manifest(&registry.manifest, policy)?;
+        let scheduler = scheduler_from_manifest(&registry.manifest, planner)?;
         let model = registry.manifest.model.as_ref().context("no model block")?;
         let g = scheduler.geometry();
         let cache = CacheStore::new(
@@ -207,12 +207,12 @@ impl Engine {
     /// Simulated engine: H100 latency model, synthetic tokens.
     pub fn with_simulator(
         sim: Simulator,
-        policy: Box<dyn SplitPolicy>,
+        planner: Planner,
         geometry: AttnGeometry,
         available_splits: Vec<usize>,
         cfg: EngineConfig,
     ) -> Engine {
-        let scheduler = DecodeScheduler::new(policy, geometry, available_splits);
+        let scheduler = DecodeScheduler::new(planner, geometry, available_splits);
         let mut blocks_cfg = cfg.blocks.clone();
         blocks_cfg.max_seq = blocks_cfg.max_seq.min(geometry.max_seq);
         Engine {
@@ -473,7 +473,7 @@ impl Engine {
             .max()
             .unwrap_or(1);
         let decision = self.scheduler.decide(slots.len(), max_kv)?;
-        self.metrics.record_split(decision.metadata.num_splits);
+        self.metrics.record_split(decision.plan.metadata.num_splits);
 
         match &self.backend {
             EngineBackend::Pjrt(reg) => {
@@ -481,7 +481,7 @@ impl Engine {
                 self.decode_pjrt(&reg, slots, bucket, decision.artifact_splits)
             }
             EngineBackend::Simulated(sim) => {
-                let kernel_us = sim.kernel_us(&decision.metadata);
+                let kernel_us = sim.kernel_us(&decision.plan.metadata);
                 // One attention launch per layer; use 1 layer as the unit
                 // (policy comparisons are ratios, layers scale both sides).
                 let step_us = kernel_us + self.sim_overhead_us;
@@ -678,12 +678,11 @@ impl EngineHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::heuristics::{SequenceAwarePolicy, StandardPolicy};
 
-    fn sim_engine(policy: Box<dyn SplitPolicy>) -> Engine {
+    fn sim_engine(planner: Planner) -> Engine {
         Engine::with_simulator(
             Simulator::h100(),
-            policy,
+            planner,
             AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 },
             vec![1, 3],
             EngineConfig::default(),
@@ -692,7 +691,7 @@ mod tests {
 
     #[test]
     fn simulated_generation_completes() {
-        let mut e = sim_engine(Box::new(SequenceAwarePolicy));
+        let mut e = sim_engine(Planner::sequence_aware());
         e.submit(Request::new(1, vec![7; 100], 20));
         let done = e.run_until_idle().unwrap();
         assert_eq!(done.len(), 1);
@@ -706,14 +705,14 @@ mod tests {
     #[test]
     fn patched_policy_faster_through_boundary_bucket() {
         // Decode from KV 400 to 512: inside nblk=4 bucket, tiles=1.
-        let run = |policy: Box<dyn SplitPolicy>| {
-            let mut e = sim_engine(policy);
+        let run = |planner: Planner| {
+            let mut e = sim_engine(planner);
             e.submit(Request::new(1, vec![1; 400], 112));
             let done = e.run_until_idle().unwrap();
             (done[0].timing.tpot_us(), e.metrics.split_histogram.clone())
         };
-        let (tpot_std, hist_std) = run(Box::new(StandardPolicy));
-        let (tpot_pat, hist_pat) = run(Box::new(SequenceAwarePolicy));
+        let (tpot_std, hist_std) = run(Planner::standard());
+        let (tpot_pat, hist_pat) = run(Planner::sequence_aware());
         assert!(tpot_std / tpot_pat > 1.1, "std {tpot_std:.1} vs pat {tpot_pat:.1}");
         // Standard never splits here; patched uses s=3 throughout.
         assert!(hist_std.get(3).copied().unwrap_or(0) == 0);
@@ -722,7 +721,7 @@ mod tests {
 
     #[test]
     fn batched_requests_share_steps() {
-        let mut e = sim_engine(Box::new(StandardPolicy));
+        let mut e = sim_engine(Planner::standard());
         for id in 0..4 {
             e.submit(Request::new(id, vec![1; 50], 10));
         }
@@ -734,7 +733,7 @@ mod tests {
 
     #[test]
     fn queueing_beyond_batch_capacity() {
-        let mut e = sim_engine(Box::new(StandardPolicy));
+        let mut e = sim_engine(Planner::standard());
         for id in 0..9 {
             e.submit(Request::new(id, vec![1; 10], 5));
         }
@@ -747,7 +746,7 @@ mod tests {
 
     #[test]
     fn open_loop_arrivals_respect_virtual_time() {
-        let mut e = sim_engine(Box::new(SequenceAwarePolicy));
+        let mut e = sim_engine(Planner::sequence_aware());
         // Three arrivals spaced 10 ms apart on the virtual clock.
         for (i, t) in [0u64, 10_000, 20_000].iter().enumerate() {
             e.submit_at(Request::new(i as u64, vec![1; 40], 8), *t);
@@ -768,7 +767,7 @@ mod tests {
 
     #[test]
     fn abort_all_releases_everything() {
-        let mut e = sim_engine(Box::new(StandardPolicy));
+        let mut e = sim_engine(Planner::standard());
         for id in 0..6 {
             e.submit(Request::new(id, vec![1; 50], 1000));
         }
@@ -786,7 +785,7 @@ mod tests {
 
     #[test]
     fn threaded_handle_round_trip() {
-        let e = sim_engine(Box::new(SequenceAwarePolicy));
+        let e = sim_engine(Planner::sequence_aware());
         let handle = EngineHandle::spawn(e);
         for id in 0..3 {
             handle.submit(Request::new(id, vec![2; 64], 8)).unwrap();

@@ -3,9 +3,9 @@
 //! The paper's improvement only materializes on the *precomputed scheduler
 //! metadata* path (§5.1) — the path where an inference stack decides
 //! `num_splits` before launch. This module is that stack: a continuous-
-//! batching decode engine whose per-step scheduler builds
-//! [`crate::heuristics::SchedulerMetadata`] from the live batch shape and
-//! routes each step to the matching AOT artifact.
+//! batching decode engine whose per-step scheduler asks the configured
+//! [`crate::planner::Planner`] for a (cached) launch plan derived from the
+//! live batch shape and routes each step to the matching AOT artifact.
 //!
 //! * [`request`]  — request/response types and lifecycle timing,
 //! * [`kv_cache`] — paged KV block manager (admission + capacity),

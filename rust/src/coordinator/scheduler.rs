@@ -2,14 +2,16 @@
 //!
 //! Each decode step, the scheduler derives the live attention shape from
 //! the running batch (max KV length across rows, bucketed to the artifact
-//! grid), asks the configured [`SplitPolicy`] for scheduler metadata —
-//! exactly FA3's `get_scheduler_metadata()` deployment path — and routes
-//! to the AOT artifact compiled for that (bucket, num_splits).
+//! grid), asks the configured [`Planner`] for a launch plan — exactly
+//! FA3's `get_scheduler_metadata()` deployment path, now cached per shape
+//! bucket so consecutive steps reuse the decision — and routes to the AOT
+//! artifact compiled for that (bucket, num_splits).
 
 use anyhow::{Context, Result};
 
 use crate::heuristics::tiles::DecodeShape;
-use crate::heuristics::{SchedulerMetadata, SplitPolicy};
+use crate::heuristics::SchedulerMetadata;
+use crate::planner::{LaunchPlan, Planner};
 
 /// Model attention geometry the scheduler needs (from the manifest).
 #[derive(Debug, Clone, Copy)]
@@ -21,50 +23,85 @@ pub struct AttnGeometry {
 }
 
 /// The split decision for one engine step.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct StepDecision {
-    /// Metadata handed to the launch (the paper's precomputed-metadata path).
-    pub metadata: SchedulerMetadata,
+    /// The planner's launch plan (the paper's precomputed-metadata path).
+    pub plan: LaunchPlan,
     /// Split count actually requested from the artifact registry (the
-    /// metadata's num_splits snapped onto the compiled split variants).
+    /// plan's num_splits snapped onto the compiled split variants).
     pub artifact_splits: usize,
+}
+
+impl StepDecision {
+    /// Metadata handed to the launch.
+    pub fn metadata(&self) -> &SchedulerMetadata {
+        &self.plan.metadata
+    }
 }
 
 /// Per-step split scheduler.
 pub struct DecodeScheduler {
-    policy: Box<dyn SplitPolicy>,
+    planner: Planner,
     geometry: AttnGeometry,
     /// Split variants the artifact set was compiled with (ascending).
     available_splits: Vec<usize>,
-    pub sm_margin: usize,
-    pub pack_gqa: bool,
 }
 
 impl DecodeScheduler {
     pub fn new(
-        policy: Box<dyn SplitPolicy>,
+        planner: Planner,
         geometry: AttnGeometry,
         mut available_splits: Vec<usize>,
     ) -> DecodeScheduler {
         assert!(!available_splits.is_empty(), "no split variants available");
         available_splits.sort_unstable();
         assert_eq!(available_splits[0], 1, "s = 1 variant must exist");
-        DecodeScheduler { policy, geometry, available_splits, sm_margin: 0, pack_gqa: true }
+        DecodeScheduler { planner, geometry, available_splits }
     }
 
     pub fn policy_name(&self) -> &'static str {
-        self.policy.name()
+        self.planner.name()
+    }
+
+    pub fn planner(&self) -> &Planner {
+        &self.planner
     }
 
     /// Decide the split schedule for a decode step over `batch` rows whose
     /// longest row attends over `max_kv_len` cache entries.
-    pub fn decide(&self, batch: usize, max_kv_len: usize) -> Result<StepDecision> {
+    pub fn decide(&mut self, batch: usize, max_kv_len: usize) -> Result<StepDecision> {
+        let shape = self.step_shape(batch, max_kv_len);
+        let plan = self.planner.plan(&shape);
+        let artifact_splits = self.snap_splits(plan.metadata.num_splits);
+        Ok(StepDecision { plan, artifact_splits })
+    }
+
+    /// Batched variant: one entry per (batch, max_kv_len) bucket,
+    /// element-wise identical to calling [`DecodeScheduler::decide`] per
+    /// bucket (the planner guarantees `plan_batch` ≡ per-shape `plan`).
+    /// The built-in engine forms a single bucket per step and uses
+    /// `decide`; this is the entry point for schedulers that plan several
+    /// buckets at once (multi-queue/disaggregated serving, and the
+    /// `scheduler_throughput` bench).
+    pub fn decide_batch(&mut self, buckets: &[(usize, usize)]) -> Result<Vec<StepDecision>> {
+        let shapes: Vec<DecodeShape> = buckets
+            .iter()
+            .map(|&(batch, max_kv)| self.step_shape(batch, max_kv))
+            .collect();
+        Ok(self
+            .planner
+            .plan_batch(&shapes)
+            .into_iter()
+            .map(|plan| {
+                let artifact_splits = self.snap_splits(plan.metadata.num_splits);
+                StepDecision { plan, artifact_splits }
+            })
+            .collect())
+    }
+
+    fn step_shape(&self, batch: usize, max_kv_len: usize) -> DecodeShape {
         let l_k = max_kv_len.min(self.geometry.max_seq).max(1);
-        let shape =
-            DecodeShape::decode(batch, l_k, self.geometry.h_q, self.geometry.h_kv, self.geometry.d);
-        let metadata = self.policy.metadata(&shape, self.sm_margin, self.pack_gqa);
-        let artifact_splits = self.snap_splits(metadata.num_splits);
-        Ok(StepDecision { metadata, artifact_splits })
+        DecodeShape::decode(batch, l_k, self.geometry.h_q, self.geometry.h_kv, self.geometry.d)
     }
 
     /// Snap the policy's split count onto the compiled variants: the
@@ -92,7 +129,7 @@ impl DecodeScheduler {
 impl std::fmt::Debug for DecodeScheduler {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("DecodeScheduler")
-            .field("policy", &self.policy.name())
+            .field("planner", &self.planner)
             .field("geometry", &self.geometry)
             .field("available_splits", &self.available_splits)
             .finish()
@@ -103,7 +140,7 @@ impl std::fmt::Debug for DecodeScheduler {
 /// come from the artifacts themselves, so engine and artifacts can't skew).
 pub fn scheduler_from_manifest(
     manifest: &crate::runtime::Manifest,
-    policy: Box<dyn SplitPolicy>,
+    planner: Planner,
 ) -> Result<DecodeScheduler> {
     let model = manifest.model.as_ref().context("manifest has no model block")?;
     let geometry = AttnGeometry {
@@ -120,13 +157,13 @@ pub fn scheduler_from_manifest(
         .collect();
     splits.sort_unstable();
     splits.dedup();
-    Ok(DecodeScheduler::new(policy, geometry, splits))
+    Ok(DecodeScheduler::new(planner, geometry, splits))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::heuristics::{SequenceAwarePolicy, StandardPolicy};
+    use crate::planner::Planner;
 
     fn geom() -> AttnGeometry {
         AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 }
@@ -134,19 +171,19 @@ mod tests {
 
     #[test]
     fn patched_policy_splits_in_boundary_bucket() {
-        let s = DecodeScheduler::new(Box::new(SequenceAwarePolicy), geom(), vec![1, 3]);
+        let mut s = DecodeScheduler::new(Planner::sequence_aware(), geom(), vec![1, 3]);
         let d = s.decide(1, 512).unwrap();
-        assert_eq!(d.metadata.num_splits, 3);
+        assert_eq!(d.plan.metadata.num_splits, 3);
         assert_eq!(d.artifact_splits, 3);
         // Short context: unchanged.
         let d = s.decide(1, 384).unwrap();
-        assert_eq!(d.metadata.num_splits, 1);
+        assert_eq!(d.plan.metadata.num_splits, 1);
         assert_eq!(d.artifact_splits, 1);
     }
 
     #[test]
     fn standard_policy_never_splits_short() {
-        let s = DecodeScheduler::new(Box::new(StandardPolicy), geom(), vec![1, 3]);
+        let mut s = DecodeScheduler::new(Planner::standard(), geom(), vec![1, 3]);
         for kv in [64, 128, 384, 512] {
             let d = s.decide(1, kv).unwrap();
             assert_eq!(d.artifact_splits, 1, "kv={kv}");
@@ -157,24 +194,48 @@ mod tests {
     fn snapping_caps_to_available_variants() {
         // Long context: the efficiency loop may ask for s = 8; with only
         // {1, 3} compiled, snap down to 3.
-        let s = DecodeScheduler::new(Box::new(StandardPolicy), geom(), vec![1, 3]);
+        let mut s = DecodeScheduler::new(Planner::standard(), geom(), vec![1, 3]);
         let d = s.decide(1, 1024).unwrap(); // nblk = 8 > 4: loop engages
-        assert!(d.metadata.num_splits > 1);
+        assert!(d.plan.metadata.num_splits > 1);
         assert_eq!(d.artifact_splits, 3);
     }
 
     #[test]
     fn kv_len_clamped_to_max_seq() {
-        let s = DecodeScheduler::new(Box::new(SequenceAwarePolicy), geom(), vec![1, 3]);
+        let mut s = DecodeScheduler::new(Planner::sequence_aware(), geom(), vec![1, 3]);
         let d = s.decide(1, 4096).unwrap();
-        assert_eq!(d.metadata.shape.l_k, 1024);
+        assert_eq!(d.plan.metadata.shape.l_k, 1024);
         let d0 = s.decide(1, 0).unwrap();
-        assert_eq!(d0.metadata.shape.l_k, 1);
+        assert_eq!(d0.plan.metadata.shape.l_k, 1);
+    }
+
+    #[test]
+    fn repeated_steps_hit_the_plan_cache() {
+        let mut s = DecodeScheduler::new(Planner::sequence_aware(), geom(), vec![1, 3]);
+        for kv in 400..=512 {
+            s.decide(1, kv).unwrap();
+        }
+        let stats = s.planner().cache_stats();
+        assert_eq!(stats.misses, 1, "{stats:?}"); // all inside nblk = 4
+        assert_eq!(stats.hits, 112, "{stats:?}");
+    }
+
+    #[test]
+    fn decide_batch_matches_decide() {
+        let buckets = [(1usize, 512usize), (2, 512), (1, 1024), (1, 512)];
+        let mut a = DecodeScheduler::new(Planner::sequence_aware(), geom(), vec![1, 3]);
+        let batch = a.decide_batch(&buckets).unwrap();
+        let mut b = DecodeScheduler::new(Planner::sequence_aware(), geom(), vec![1, 3]);
+        for (i, &(n, kv)) in buckets.iter().enumerate() {
+            let single = b.decide(n, kv).unwrap();
+            assert_eq!(batch[i].plan, single.plan, "bucket {i}");
+            assert_eq!(batch[i].artifact_splits, single.artifact_splits);
+        }
     }
 
     #[test]
     #[should_panic]
     fn requires_split_one_variant() {
-        DecodeScheduler::new(Box::new(StandardPolicy), geom(), vec![3]);
+        DecodeScheduler::new(Planner::standard(), geom(), vec![3]);
     }
 }

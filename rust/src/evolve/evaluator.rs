@@ -18,6 +18,7 @@
 //! pressure toward a small upstreamable rule).
 
 use crate::heuristics::tiles::DecodeShape;
+use crate::planner::{DeviceProfile, Planner, PlannerBuilder};
 use crate::sim::Simulator;
 use crate::workload::chatgen::ChatWorkload;
 
@@ -43,6 +44,8 @@ impl EvalResult {
 /// The evaluator: simulator + panels.
 pub struct Evaluator {
     sim: Simulator,
+    /// Device profile the candidate planners target.
+    device: DeviceProfile,
     /// (prompt_len, n_tokens) fitness generations (Batch = 1 chat).
     fitness_panel: Vec<(usize, usize)>,
     /// Safety shapes that must not regress vs upstream.
@@ -57,6 +60,7 @@ impl Evaluator {
     pub fn new(sim: Simulator) -> Evaluator {
         Evaluator {
             sim,
+            device: DeviceProfile::H100_SXM,
             fitness_panel: ChatWorkload::evolution_panel(),
             safety_panel: crate::workload::shapes::regression_grid(),
             tolerance: 0.15,
@@ -64,16 +68,24 @@ impl Evaluator {
         }
     }
 
+    /// The planner a candidate genome is evaluated through — the same
+    /// façade the serving stack uses, so fitness measures deployable
+    /// behavior (rule knobs, device split cap, upstream fallback included).
+    fn planner_for(&self, genome: &Genome) -> Planner {
+        PlannerBuilder::genome(genome.clone()).device(self.device).build()
+    }
+
     /// Mean attention TPOT of `genome` over the fitness panel.
     pub fn panel_tpot_us(&self, genome: &Genome) -> f64 {
+        let mut planner = self.planner_for(genome);
         let mut total = 0.0;
         let mut steps = 0usize;
         for &(prompt, n_tokens) in &self.fitness_panel {
             for step in 0..n_tokens {
                 let l_k = prompt + step + 1;
                 let shape = DecodeShape::llama70b_tp8(1, l_k);
-                let md = genome.decide(&shape);
-                total += self.sim.kernel_us(&md);
+                let plan = planner.plan(&shape);
+                total += self.sim.kernel_us(&plan.metadata);
                 steps += 1;
             }
         }
@@ -83,10 +95,11 @@ impl Evaluator {
     /// Full evaluation: fitness + safety rejection.
     pub fn evaluate(&self, genome: &Genome) -> EvalResult {
         // Safety: compare against upstream on the §5.3 grid.
-        let upstream = Genome::upstream();
+        let mut upstream = self.planner_for(&Genome::upstream());
+        let mut candidate = self.planner_for(genome);
         for shape in &self.safety_panel {
-            let t_up = self.sim.kernel_us(&upstream.decide(shape));
-            let t_ge = self.sim.kernel_us(&genome.decide(shape));
+            let t_up = self.sim.kernel_us(&upstream.plan(shape).metadata);
+            let t_ge = self.sim.kernel_us(&candidate.plan(shape).metadata);
             if t_ge > t_up * (1.0 + self.tolerance) {
                 return EvalResult {
                     tpot_us: f64::INFINITY,

@@ -7,10 +7,13 @@
 //! fall through to the upstream C++ heuristic, so a genome is always a
 //! *delta* against upstream — the same property that made the paper's
 //! final patch upstreamable.
+//!
+//! A genome is pure data: to turn it into launch schedules, build a
+//! planner over it (`planner::PlannerBuilder::genome(genome)`) — the
+//! planner applies the rules, the device's split cap, and the upstream
+//! fallback, and is the only component that constructs scheduler metadata.
 
-use crate::heuristics::standard::num_splits_heuristic_upstream;
 use crate::heuristics::tiles::DecodeShape;
-use crate::heuristics::{DispatchPath, SchedulerMetadata, H100_NUM_SMS, MAX_SPLITS};
 
 /// One condition→action rule.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -77,37 +80,6 @@ impl Genome {
         }
     }
 
-    /// Decide the launch schedule for `shape`.
-    pub fn decide(&self, shape: &DecodeShape) -> SchedulerMetadata {
-        for rule in &self.rules {
-            if rule.matches(shape) {
-                let num_sm = H100_NUM_SMS.saturating_sub(rule.sm_margin).max(1);
-                let _ = num_sm;
-                return SchedulerMetadata {
-                    shape: *shape,
-                    num_splits: rule.num_splits.clamp(1, MAX_SPLITS),
-                    pack_gqa: rule.pack_gqa,
-                    sm_margin: rule.sm_margin,
-                    path: DispatchPath::PrecomputedMetadata,
-                };
-            }
-        }
-        // Upstream fallback (pack_gqa on, no margin — upstream defaults).
-        let splits = num_splits_heuristic_upstream(
-            shape.total_mblocks(true),
-            H100_NUM_SMS,
-            shape.nblk(),
-            MAX_SPLITS,
-        );
-        SchedulerMetadata {
-            shape: *shape,
-            num_splits: splits,
-            pack_gqa: true,
-            sm_margin: 0,
-            path: DispatchPath::PrecomputedMetadata,
-        }
-    }
-
     /// Structural complexity (parsimony pressure in the fitness).
     pub fn complexity(&self) -> usize {
         self.rules.len()
@@ -157,36 +129,33 @@ impl Genome {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::planner::{DeviceProfile, Planner, PlannerBuilder};
+
+    fn decide(g: &Genome, shape: &DecodeShape) -> usize {
+        PlannerBuilder::genome(g.clone()).build().plan(shape).num_splits()
+    }
 
     #[test]
     fn empty_genome_is_upstream() {
         let g = Genome::upstream();
-        let shape = DecodeShape::llama70b_tp8(1, 512);
-        let md = g.decide(&shape);
-        assert_eq!(md.num_splits, 1); // premature guard
-        let long = DecodeShape::llama70b_tp8(1, 2048);
-        assert!(g.decide(&long).num_splits > 1); // efficiency loop
+        assert_eq!(decide(&g, &DecodeShape::llama70b_tp8(1, 512)), 1); // premature guard
+        assert!(decide(&g, &DecodeShape::llama70b_tp8(1, 2048)) > 1); // efficiency loop
     }
 
     #[test]
     fn first_matching_rule_wins() {
         let g = Genome::figure1();
         // L_K = 200 matches the seqlen<256 rule first: s = 16.
-        assert_eq!(g.decide(&DecodeShape::llama70b_tp8(1, 200)).num_splits, 16);
+        assert_eq!(decide(&g, &DecodeShape::llama70b_tp8(1, 200)), 16);
         // L_K = 400 falls to the second rule: s = 12.
-        assert_eq!(g.decide(&DecodeShape::llama70b_tp8(1, 400)).num_splits, 12);
+        assert_eq!(decide(&g, &DecodeShape::llama70b_tp8(1, 400)), 12);
         // Batch 2 matches nothing: upstream (guard ⇒ 1).
-        assert_eq!(g.decide(&DecodeShape::llama70b_tp8(2, 400)).num_splits, 1);
+        assert_eq!(decide(&g, &DecodeShape::llama70b_tp8(2, 400)), 1);
         // Beyond 512 matches nothing: falls through to upstream, which is
         // past the guard there (nblk = 5 ⇒ efficiency loop).
         let beyond = DecodeShape::llama70b_tp8(1, 513);
-        let up = crate::heuristics::standard::num_splits_heuristic_upstream(
-            beyond.total_mblocks(true),
-            H100_NUM_SMS,
-            beyond.nblk(),
-            MAX_SPLITS,
-        );
-        assert_eq!(g.decide(&beyond).num_splits, up);
+        let up = Planner::standard().plan(&beyond).num_splits();
+        assert_eq!(decide(&g, &beyond), up);
         assert!(up > 1, "nblk=5 engages the efficiency loop");
     }
 
@@ -203,7 +172,10 @@ mod tests {
                 sm_margin: 0,
             }],
         };
-        assert_eq!(g.decide(&DecodeShape::llama70b_tp8(1, 512)).num_splits, MAX_SPLITS);
+        assert_eq!(
+            decide(&g, &DecodeShape::llama70b_tp8(1, 512)),
+            DeviceProfile::H100_SXM.max_splits
+        );
     }
 
     #[test]

@@ -15,6 +15,10 @@
 //! * [`evaluator`] — fitness (panel TPOT) + the invalid-candidate rejector
 //!                   (the paper's subprocess evaluator),
 //! * [`search`]    — the generational loop.
+//!
+//! Genomes are executed through [`crate::planner::Planner`]
+//! (`PlannerBuilder::genome(..)`), so candidates are scored on exactly the
+//! launch path the serving stack deploys.
 
 pub mod evaluator;
 pub mod genome;

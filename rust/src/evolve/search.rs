@@ -176,8 +176,9 @@ mod tests {
             report.upstream_tpot_us
         );
         // The winning genome must split the boundary-bucket shape.
-        let md = report.best.decide(&DecodeShape::llama70b_tp8(1, 512));
-        assert!(md.num_splits > 1, "best genome: {:?}", report.best);
+        let mut planner = crate::planner::PlannerBuilder::genome(report.best.clone()).build();
+        let plan = planner.plan(&DecodeShape::llama70b_tp8(1, 512));
+        assert!(plan.num_splits() > 1, "best genome: {:?}", report.best);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use std::collections::HashMap;
 use super::metadata::SplitPolicy;
 use super::standard::num_splits_heuristic_upstream;
 use super::tiles::DecodeShape;
-use super::{MAX_SPLITS};
+use super::UPSTREAM_MAX_SPLITS;
 
 /// Key: (nblk bucket, work-tile count) — the two quantities heuristics.h
 /// already has in scope, so the table is exactly as upstreamable as the
@@ -45,6 +45,9 @@ pub struct TuneConfig {
     /// Required relative win over upstream before an entry is accepted
     /// (keeps the table regression-free by construction).
     pub min_win: f64,
+    /// SM budget the upstream baseline is evaluated against (take it from
+    /// the target `planner::DeviceProfile`).
+    pub num_sm: usize,
 }
 
 impl Default for TuneConfig {
@@ -54,6 +57,7 @@ impl Default for TuneConfig {
             max_tiles: 16,
             candidate_splits: vec![2, 3, 4, 6, 8, 12, 16],
             min_win: 0.03,
+            num_sm: crate::planner::DeviceProfile::H100_SXM.num_sms,
         }
     }
 }
@@ -78,9 +82,9 @@ impl ExtendedPolicy {
                 let shape = DecodeShape::decode(tiles, l_k, 8, 1, 128);
                 let upstream = num_splits_heuristic_upstream(
                     shape.total_mblocks(true),
-                    super::H100_NUM_SMS,
+                    cfg.num_sm,
                     shape.nblk(),
-                    MAX_SPLITS,
+                    UPSTREAM_MAX_SPLITS,
                 );
                 let t_up = latency(&shape, upstream);
                 let mut best: Option<(usize, f64)> = None;
@@ -146,21 +150,24 @@ impl SplitPolicy for ExtendedPolicy {
         if let Some(s) = self.lookup(shape.nblk(), tiles) {
             return s;
         }
-        num_splits_heuristic_upstream(tiles, num_sm, shape.nblk(), MAX_SPLITS)
+        num_splits_heuristic_upstream(tiles, num_sm, shape.nblk(), UPSTREAM_MAX_SPLITS)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::heuristics::{SequenceAwarePolicy, StandardPolicy, H100_NUM_SMS};
+    use crate::heuristics::StandardPolicy;
+    use crate::planner::{DeviceProfile, Planner, PlannerBuilder};
     use crate::sim::Simulator;
-    use crate::heuristics::SchedulerMetadata;
+
+    const H100_SMS: usize = DeviceProfile::H100_SXM.num_sms;
 
     fn tuned() -> ExtendedPolicy {
         let sim = Simulator::h100();
+        let probe = Planner::standard();
         ExtendedPolicy::tune(&TuneConfig::default(), |shape, s| {
-            sim.kernel_us(&SchedulerMetadata::forced(*shape, s))
+            sim.kernel_us(&probe.plan_forced(shape, s).metadata)
         })
     }
 
@@ -183,14 +190,16 @@ mod tests {
     #[test]
     fn never_loses_to_standard_or_conservative_patch() {
         let sim = Simulator::h100();
-        let p = tuned();
+        let mut ext = PlannerBuilder::policy(tuned()).build();
+        let mut std_p = Planner::standard();
+        let mut pat_p = Planner::sequence_aware();
         for batch in [1usize, 2, 4, 8] {
             for l_k in (64..=4096).step_by(64) {
                 for h_kv in [1usize, 2, 4, 8] {
                     let shape = DecodeShape::decode(batch, l_k, 8 * h_kv, h_kv, 128);
-                    let t_ext = sim.kernel_us(&p.metadata(&shape, 0, true));
-                    let t_std = sim.kernel_us(&StandardPolicy.metadata(&shape, 0, true));
-                    let t_pat = sim.kernel_us(&SequenceAwarePolicy.metadata(&shape, 0, true));
+                    let t_ext = sim.kernel_us(&ext.plan(&shape).metadata);
+                    let t_std = sim.kernel_us(&std_p.plan(&shape).metadata);
+                    let t_pat = sim.kernel_us(&pat_p.plan(&shape).metadata);
                     assert!(
                         t_ext <= t_std * 1.0000001 && t_ext <= t_pat * 1.0000001,
                         "extended regressed at B={batch} L_K={l_k} H_KV={h_kv}: \
@@ -206,10 +215,9 @@ mod tests {
         // The whole point of the extension: wins at L_K <= 384 that the
         // conservative rule leaves on the table.
         let sim = Simulator::h100();
-        let p = tuned();
         let shape = DecodeShape::llama70b_tp8(1, 384);
-        let t_ext = sim.kernel_us(&p.metadata(&shape, 0, true));
-        let t_pat = sim.kernel_us(&SequenceAwarePolicy.metadata(&shape, 0, true));
+        let t_ext = sim.kernel_us(&PlannerBuilder::policy(tuned()).build().plan(&shape).metadata);
+        let t_pat = sim.kernel_us(&Planner::sequence_aware().plan(&shape).metadata);
         assert!(
             t_ext < t_pat * 0.95,
             "extended {t_ext:.2} should beat conservative {t_pat:.2} at L_K=384"
@@ -220,7 +228,7 @@ mod tests {
     fn saturated_grids_untouched() {
         let p = tuned();
         let dense = DecodeShape::decode(16, 512, 256, 32, 128); // 512 tiles
-        assert_eq!(p.num_splits(&dense, H100_NUM_SMS, true), 1);
+        assert_eq!(p.num_splits(&dense, H100_SMS, true), 1);
     }
 
     #[test]
@@ -237,8 +245,8 @@ mod tests {
         for l_k in [128usize, 512, 2048] {
             let shape = DecodeShape::llama70b_tp8(1, l_k);
             assert_eq!(
-                p.num_splits(&shape, H100_NUM_SMS, true),
-                StandardPolicy.num_splits(&shape, H100_NUM_SMS, true)
+                p.num_splits(&shape, H100_SMS, true),
+                StandardPolicy.num_splits(&shape, H100_SMS, true)
             );
         }
     }

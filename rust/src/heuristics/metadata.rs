@@ -7,11 +7,18 @@
 //!   `num_splits`, the vLLM path): the serving engine decides the split
 //!   count *before* launch and passes it explicitly. The full 21–24%
 //!   improvement applies here — and this is exactly what our rust
-//!   coordinator does (`coordinator/scheduler.rs` builds a
-//!   [`SchedulerMetadata`] per decode step).
+//!   coordinator does (its per-step scheduler asks the
+//!   [`crate::planner::Planner`] for a plan each decode step).
 //! * **Internal heuristic** (no metadata): the kernel's own dispatch picks
 //!   the split late, yielding only ~1.00–1.05x. The simulator models this
 //!   as retaining part of the setup overhead (see `sim/kernel_model.rs`).
+//!
+//! Construction discipline: [`SchedulerMetadata`] is only built by
+//! [`crate::planner::Planner`] (and by its own combinator methods below).
+//! Call sites that used to assemble it by hand — benches, sweeps, the
+//! evolved-genome path — now go through `Planner::plan` /
+//! `Planner::plan_forced`, so the device's SM budget travels with the
+//! metadata instead of living in a global constant.
 
 use super::tiles::DecodeShape;
 
@@ -27,25 +34,23 @@ pub enum DispatchPath {
 }
 
 /// A split-selection policy: standard upstream or the paper's patch (or an
-/// evolved candidate from `evolve/`).
+/// auto-tuned table from `extended`). This stays the *inner* decision
+/// trait; the outward-facing contract is [`crate::planner::Planner`].
 pub trait SplitPolicy: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Decide `num_splits` for one launch. `num_sm` is the SM budget
-    /// (132 - sm_margin on H100); `pack_gqa` selects the GQA layout.
+    /// Decide `num_splits` for one launch. `num_sm` is the SM budget the
+    /// planner computed from its [`crate::planner::DeviceProfile`] and
+    /// `sm_margin`; `pack_gqa` selects the GQA layout.
     fn num_splits(&self, shape: &DecodeShape, num_sm: usize, pack_gqa: bool) -> usize;
 
-    /// Produce the full launch metadata (the `get_scheduler_metadata()`
-    /// analog).
-    fn metadata(&self, shape: &DecodeShape, sm_margin: usize, pack_gqa: bool) -> SchedulerMetadata {
-        let num_sm = super::H100_NUM_SMS.saturating_sub(sm_margin).max(1);
-        SchedulerMetadata {
-            shape: *shape,
-            num_splits: self.num_splits(shape, num_sm, pack_gqa),
-            pack_gqa,
-            sm_margin,
-            path: DispatchPath::PrecomputedMetadata,
-        }
+    /// Cache contract for the planner's shape-bucket plan cache: return
+    /// true (the default) iff `num_splits` depends on `shape` only through
+    /// `shape.nblk()` and `shape.total_mblocks(pack_gqa)`. Every built-in
+    /// policy satisfies this; a policy keying off exact `L_K` or `D` must
+    /// override to false so the planner falls back to exact-shape keys.
+    fn shape_bucket_pure(&self) -> bool {
+        true
     }
 }
 
@@ -59,22 +64,21 @@ pub struct SchedulerMetadata {
     pub pack_gqa: bool,
     /// SMs reserved for the combine-scheduler CTA (§3.1's `sm_margin` knob).
     pub sm_margin: usize,
+    /// Total SMs of the device this schedule targets (before the margin).
+    /// Stamped by the planner from its device profile so occupancy math
+    /// never consults a global constant.
+    pub num_sms: usize,
     pub path: DispatchPath,
 }
 
 impl SchedulerMetadata {
-    /// Metadata for a manually-forced split count (the A/B benches and the
-    /// Figure 3 sweep pass explicit `num_splits` exactly like the paper's
-    /// harness does through the Python bindings).
-    pub fn forced(shape: DecodeShape, num_splits: usize) -> SchedulerMetadata {
+    /// Same schedule with a different split count (keeps shape, layout,
+    /// margin, and device budget). Used by the simulator to price the
+    /// unsplit baseline of the internal-heuristic path.
+    pub fn with_splits(mut self, num_splits: usize) -> SchedulerMetadata {
         assert!(num_splits >= 1);
-        SchedulerMetadata {
-            shape,
-            num_splits,
-            pack_gqa: true,
-            sm_margin: 0,
-            path: DispatchPath::PrecomputedMetadata,
-        }
+        self.num_splits = num_splits;
+        self
     }
 
     pub fn with_path(mut self, path: DispatchPath) -> SchedulerMetadata {
@@ -89,9 +93,12 @@ impl SchedulerMetadata {
     }
 
     /// SM occupancy fraction this grid achieves in its first wave —
-    /// the quantity §2.1 shows collapsing to ~6%.
+    /// the quantity §2.1 shows collapsing to ~6%. Saturating: a margin
+    /// larger than the device degrades to a 1-SM budget (the seed
+    /// underflowed and panicked in debug builds when `sm_margin` exceeded
+    /// the SM count).
     pub fn occupancy(&self) -> f64 {
-        let sms = (super::H100_NUM_SMS - self.sm_margin).max(1) as f64;
+        let sms = self.num_sms.saturating_sub(self.sm_margin).max(1) as f64;
         (self.grid_ctas() as f64 / sms).min(1.0)
     }
 }
@@ -99,6 +106,7 @@ impl SchedulerMetadata {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::planner::{DeviceProfile, Planner, PlannerBuilder};
     use crate::heuristics::{SequenceAwarePolicy, StandardPolicy};
 
     #[test]
@@ -106,9 +114,10 @@ mod tests {
         // §2.1: "operating on 8 tiles without sequence splitting translates
         // to an occupancy of ~6%". 8 tiles = e.g. batch 1, H_KV 8.
         let shape = DecodeShape::decode(1, 512, 64, 8, 128);
-        let md = StandardPolicy.metadata(&shape, 0, true);
+        let md = Planner::standard().plan(&shape).metadata;
         assert_eq!(md.num_splits, 1);
         assert_eq!(md.grid_ctas(), 8);
+        assert_eq!(md.num_sms, DeviceProfile::H100_SXM.num_sms);
         let occ = md.occupancy();
         assert!((0.05..0.07).contains(&occ), "occupancy {occ} should be ~6%");
     }
@@ -116,8 +125,8 @@ mod tests {
     #[test]
     fn patched_metadata_raises_ctas_in_target_regime() {
         let shape = DecodeShape::llama70b_tp8(1, 512);
-        let std_md = StandardPolicy.metadata(&shape, 0, true);
-        let pat_md = SequenceAwarePolicy.metadata(&shape, 0, true);
+        let std_md = Planner::standard().plan(&shape).metadata;
+        let pat_md = Planner::sequence_aware().plan(&shape).metadata;
         assert_eq!(std_md.grid_ctas(), 1);
         assert!(pat_md.grid_ctas() > std_md.grid_ctas());
         assert!(pat_md.occupancy() > std_md.occupancy());
@@ -126,23 +135,43 @@ mod tests {
     #[test]
     fn forced_metadata_for_sweeps() {
         let shape = DecodeShape::llama70b_tp8(1, 512);
-        let md = SchedulerMetadata::forced(shape, 64);
+        let md = Planner::standard().plan_forced(&shape, 64).metadata;
         assert_eq!(md.num_splits, 64);
         // Over-split: effective splits cap at nblk = 4 CTAs.
         assert_eq!(md.grid_ctas(), 4);
         assert_eq!(md.path, DispatchPath::PrecomputedMetadata);
         let md2 = md.with_path(DispatchPath::InternalHeuristic);
         assert_eq!(md2.path, DispatchPath::InternalHeuristic);
+        let md1 = md.with_splits(1);
+        assert_eq!(md1.num_splits, 1);
+        assert_eq!(md1.shape, md.shape);
     }
 
     #[test]
     fn sm_margin_reduces_budget() {
         let shape = DecodeShape::llama70b_tp8(1, 2048);
-        let a = StandardPolicy.metadata(&shape, 0, true);
-        let b = StandardPolicy.metadata(&shape, 100, true);
+        let a = Planner::standard().plan(&shape).metadata;
+        let b = PlannerBuilder::policy(StandardPolicy)
+            .sm_margin(100)
+            .build()
+            .plan(&shape)
+            .metadata;
         assert_eq!(a.sm_margin, 0);
         assert_eq!(b.sm_margin, 100);
         // Fewer SMs available can only lower (or keep) the chosen splits.
         assert!(b.num_splits <= a.num_splits.max(32));
+    }
+
+    #[test]
+    fn occupancy_saturates_on_oversized_margin() {
+        // The satellite fix: sm_margin > num_sms must not underflow.
+        let md = PlannerBuilder::policy(SequenceAwarePolicy)
+            .sm_margin(1_000)
+            .build()
+            .plan(&DecodeShape::llama70b_tp8(1, 512))
+            .metadata;
+        assert_eq!(md.sm_margin, 1_000);
+        let occ = md.occupancy(); // would panic on the seed's subtraction
+        assert!((0.0..=1.0).contains(&occ));
     }
 }

@@ -3,7 +3,8 @@
 //! FlashAttention-3's Hopper dispatch logic decides, per kernel launch, how
 //! many *sequence splits* (`num_splits`, the paper's `s`) to carve the KV
 //! reduction into. More splits ⇒ more CTAs ⇒ better SM occupancy, at the
-//! cost of a final split-combine reduction. This module contains:
+//! cost of a final split-combine reduction. This module contains the
+//! *decision functions* only:
 //!
 //! * [`tiles`]           — the tile/shape arithmetic shared by everything
 //!                         (`nblk`, `total_mblocks`, split geometry),
@@ -11,8 +12,17 @@
 //!                         decision function, including the premature
 //!                         `L_K <= 512` guard the paper diagnoses (§2.2),
 //! * [`sequence_aware`]  — the paper's conservative patch (Figure 2),
-//! * [`metadata`]        — the precomputed-scheduler-metadata launch path
-//!                         (vLLM-style, §5.1) and the policy trait.
+//! * [`extended`]        — the learned (nblk, tiles) table (§5.2 future
+//!                         work),
+//! * [`metadata`]        — the [`SchedulerMetadata`] launch contract and
+//!                         the [`SplitPolicy`] trait.
+//!
+//! Everything *outward-facing* lives in [`crate::planner`]: policies here
+//! answer "how many splits for this shape on this SM budget", while the
+//! planner owns device profiles ([`crate::planner::DeviceProfile`] — the
+//! successor of the `H100_NUM_SMS` constant that used to live in this
+//! module), launch-knob configuration, plan caching, and the only code
+//! path that constructs [`SchedulerMetadata`].
 
 pub mod extended;
 pub mod metadata;
@@ -26,9 +36,8 @@ pub use sequence_aware::SequenceAwarePolicy;
 pub use standard::StandardPolicy;
 pub use tiles::{DecodeShape, SplitGeometry};
 
-/// H100 SXM5 streaming-multiprocessor count — the hardware constant the
-/// whole occupancy argument revolves around (§2.1).
-pub const H100_NUM_SMS: usize = 132;
-
-/// Upstream FA3 cap on split counts.
-pub const MAX_SPLITS: usize = 128;
+/// Upstream FA3 cap on split counts — an algorithmic constant of the
+/// ported `heuristics.h` decision functions. The *device-facing* cap lives
+/// in [`crate::planner::DeviceProfile::max_splits`]; the planner clamps
+/// every plan against it.
+pub(crate) const UPSTREAM_MAX_SPLITS: usize = 128;

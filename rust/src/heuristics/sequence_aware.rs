@@ -72,7 +72,7 @@ impl SplitPolicy for SequenceAwarePolicy {
             shape.total_mblocks(pack_gqa),
             num_sm,
             shape.nblk(),
-            super::MAX_SPLITS,
+            super::UPSTREAM_MAX_SPLITS,
         )
     }
 }
@@ -80,16 +80,19 @@ impl SplitPolicy for SequenceAwarePolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::heuristics::{SplitPolicy, StandardPolicy, H100_NUM_SMS};
+    use crate::heuristics::{SplitPolicy, StandardPolicy};
+    use crate::planner::DeviceProfile;
+
+    const H100_SMS: usize = DeviceProfile::H100_SXM.num_sms;
 
     fn patched(b: usize, l_k: usize, h_kv: usize) -> usize {
         let shape = DecodeShape::decode(b, l_k, 8 * h_kv, h_kv, 128);
-        SequenceAwarePolicy.num_splits(&shape, H100_NUM_SMS, true)
+        SequenceAwarePolicy.num_splits(&shape, H100_SMS, true)
     }
 
     fn standard(b: usize, l_k: usize, h_kv: usize) -> usize {
         let shape = DecodeShape::decode(b, l_k, 8 * h_kv, h_kv, 128);
-        StandardPolicy.num_splits(&shape, H100_NUM_SMS, true)
+        StandardPolicy.num_splits(&shape, H100_SMS, true)
     }
 
     #[test]

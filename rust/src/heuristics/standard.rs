@@ -90,7 +90,7 @@ impl SplitPolicy for StandardPolicy {
             shape.total_mblocks(pack_gqa),
             num_sm,
             shape.nblk(),
-            super::MAX_SPLITS,
+            super::UPSTREAM_MAX_SPLITS,
         )
     }
 }
@@ -98,11 +98,14 @@ impl SplitPolicy for StandardPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::heuristics::{SplitPolicy, H100_NUM_SMS};
+    use crate::heuristics::SplitPolicy;
+    use crate::planner::DeviceProfile;
+
+    const H100_SMS: usize = DeviceProfile::H100_SXM.num_sms;
 
     fn splits(b: usize, l_k: usize, h_kv: usize) -> usize {
         let shape = DecodeShape::decode(b, l_k, 8 * h_kv, h_kv, 128);
-        StandardPolicy.num_splits(&shape, H100_NUM_SMS, true)
+        StandardPolicy.num_splits(&shape, H100_SMS, true)
     }
 
     #[test]
@@ -136,7 +139,7 @@ mod tests {
     fn efficiency_loop_eligibility() {
         // nblk = 16, 1 tile: eligible split counts change ceil(16/s).
         // The loop returns the smallest split within 85% of max efficiency.
-        let s = efficiency_loop(1, H100_NUM_SMS, 16, 128);
+        let s = efficiency_loop(1, H100_SMS, 16, 128);
         assert!(s >= 1 && s <= 16);
         // With one tile and <= 132 SMs, more splits strictly help wave
         // efficiency; the best eligible value is 16 (one block per split).

@@ -7,9 +7,34 @@
 //! coordinator that loads AOT-compiled JAX/Pallas artifacts via PJRT and
 //! makes the paper's split-scheduling decision on the request path, plus
 //! the substrates the reproduction needs — a calibrated H100 SM-level
-//! latency simulator, both split heuristics, an evolutionary-search
+//! latency simulator, the split heuristics, an evolutionary-search
 //! harness (the OpenEvolve analog of §3), workload generators, and the
 //! bench harnesses that regenerate every table and figure in the paper.
+//!
+//! ## Split planning: one façade
+//!
+//! All split planning flows through [`planner`] — the analog of FA3's
+//! single `get_scheduler_metadata()` contract:
+//!
+//! ```
+//! use fa3_split::heuristics::tiles::DecodeShape;
+//! use fa3_split::planner::{DeviceProfile, PolicyRegistry};
+//!
+//! // Configure once: policy + device + launch knobs.
+//! let mut planner = PolicyRegistry::builtin()
+//!     .builder("sequence-aware").unwrap()
+//!     .device(DeviceProfile::H100_SXM)
+//!     .sm_margin(0)
+//!     .build();
+//! // Query per decode step (LRU shape-bucket cached).
+//! let plan = planner.plan(&DecodeShape::llama70b_tp8(1, 512));
+//! assert_eq!(plan.num_splits(), 3); // the paper's boundary override
+//! ```
+//!
+//! [`heuristics`] keeps the pure decision functions (`SplitPolicy` and
+//! the ported upstream/patched heuristics); [`coordinator`], [`sim`],
+//! [`evolve`], the benches, and the CLI all consume plans from
+//! [`planner::Planner`] — nothing else constructs scheduler metadata.
 //!
 //! Python never runs at request time: `make artifacts` lowers the model
 //! and kernels once, and everything here is self-contained after that.
@@ -18,6 +43,7 @@ pub mod bench_harness;
 pub mod coordinator;
 pub mod evolve;
 pub mod heuristics;
+pub mod planner;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -6,8 +6,13 @@
 //!   ucurve      reproduce Figure 3 (split sweep s = 1..64)
 //!   regression  reproduce §5.3 (160-config safety sweep)
 //!   evolve      reproduce §3 (evolutionary search, OpenEvolve analog)
-//!   decide      print both heuristics' decisions for one shape
+//!   decide      print every registered policy's decision for one shape
+//!   policies    list the policies in the planner registry
 //!   info        artifact/manifest inventory
+//!
+//! All split planning goes through `planner::PolicyRegistry` /
+//! `planner::Planner`; the `--policy` and `--device` options accept any
+//! registered policy name and device-profile preset.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -16,7 +21,7 @@ use fa3_split::bench_harness::{regression, table1, ucurve};
 use fa3_split::coordinator::{Engine, EngineConfig};
 use fa3_split::evolve::{Search, SearchConfig};
 use fa3_split::heuristics::tiles::DecodeShape;
-use fa3_split::heuristics::{SequenceAwarePolicy, SplitPolicy, StandardPolicy};
+use fa3_split::planner::{DeviceProfile, Planner, PolicyRegistry};
 use fa3_split::runtime::Registry;
 use fa3_split::sim::Simulator;
 use fa3_split::util::cli;
@@ -32,7 +37,8 @@ Commands:
   ucurve       reproduce Figure 3 (split sweep s=1..64)
   regression   reproduce §5.3 (160-config regression sweep)
   evolve       reproduce §3 (evolutionary heuristic search)
-  decide       show both policies' split decision for a shape
+  decide       show every registered policy's split decision for a shape
+  policies     list registered split policies
   info         list artifacts and model config
 
 Run `fa3-split <command> --help` for per-command options.";
@@ -60,6 +66,7 @@ fn main() -> anyhow::Result<()> {
         "regression" => cmd_regression(&sub_argv),
         "evolve" => cmd_evolve(&sub_argv),
         "decide" => cmd_decide(&sub_argv),
+        "policies" => cmd_policies(),
         "info" => cmd_info(),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");
@@ -82,34 +89,44 @@ fn parse(p: cli::Parser, argv: &[String]) -> cli::Args {
     }
 }
 
-fn policy_by_name(name: &str) -> Box<dyn SplitPolicy> {
-    match name {
-        "standard" => Box::new(StandardPolicy),
-        "patched" | "sequence-aware" => Box::new(SequenceAwarePolicy),
-        other => {
-            eprintln!("unknown policy '{other}' (use standard|patched)");
+/// Resolve `--policy` / `--device` / `--sm-margin` into a configured
+/// planner via the registry (exits with the registry's name listing on an
+/// unknown policy or device).
+fn planner_from_args(registry: &PolicyRegistry, args: &cli::Args) -> Planner {
+    let device_name = args.str("device");
+    let Some(device) = DeviceProfile::by_name(&device_name) else {
+        eprintln!(
+            "unknown device '{device_name}' (known: {})",
+            DeviceProfile::presets().map(|p| p.name).join(", ")
+        );
+        std::process::exit(2);
+    };
+    match registry.builder_for(&args.str("policy"), &device) {
+        Ok(builder) => builder.sm_margin(args.usize("sm-margin")).build(),
+        Err(msg) => {
+            eprintln!("{msg}");
             std::process::exit(2);
         }
     }
 }
 
 fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
+    let registry = PolicyRegistry::builtin();
     let args = parse(
         cli::Parser::new("serve a synthetic chat workload over the AOT artifacts")
             .opt("requests", "8", "number of requests")
             .opt("tokens", "32", "max new tokens per request")
-            .opt("policy", "patched", "split policy: standard|patched")
+            .opt("policy", "sequence-aware", format!("split policy: {}", registry.help_line()))
+            .opt("device", "h100-sxm", "device profile: h100-sxm|h100-pcie|a100|h200")
+            .opt("sm-margin", "0", "SMs reserved for the combine scheduler")
             .opt("seed", "7", "workload seed"),
         argv,
     );
     let dir = artifacts_dir();
     anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
-    let registry = Arc::new(Registry::open(&dir)?);
-    let mut engine = Engine::with_pjrt(
-        registry,
-        policy_by_name(&args.str("policy")),
-        EngineConfig::default(),
-    )?;
+    let planner = planner_from_args(&registry, &args);
+    let pjrt = Arc::new(Registry::open(&dir)?);
+    let mut engine = Engine::with_pjrt(pjrt, planner, EngineConfig::default())?;
     let workload = ChatWorkload {
         seed: args.u64("seed"),
         n_requests: args.usize("requests"),
@@ -204,12 +221,15 @@ fn cmd_evolve(argv: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_decide(argv: &[String]) -> anyhow::Result<()> {
+    let registry = PolicyRegistry::builtin();
     let args = parse(
-        cli::Parser::new("show both policies' decision for one decode shape")
+        cli::Parser::new("show every registered policy's decision for one decode shape")
             .opt("batch", "1", "batch size")
             .opt("lk", "512", "sequence length L_K")
             .opt("hkv", "1", "KV heads (H_Q = 8*H_KV)")
-            .opt("d", "128", "head dim"),
+            .opt("d", "128", "head dim")
+            .opt("device", "h100-sxm", "device profile: h100-sxm|h100-pcie|a100|h200")
+            .opt("sm-margin", "0", "SMs reserved for the combine scheduler"),
         argv,
     );
     let shape = DecodeShape::decode(
@@ -219,28 +239,53 @@ fn cmd_decide(argv: &[String]) -> anyhow::Result<()> {
         args.usize("hkv"),
         args.usize("d"),
     );
-    let sim = Simulator::h100();
+    let device_name = args.str("device");
+    let device = DeviceProfile::by_name(&device_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown device '{device_name}'"))?;
+    let sim = Simulator::for_profile(&device);
     println!(
-        "shape: B={} L_K={} H_Q={} H_KV={} D={} -> nblk={}, tiles={}",
+        "shape: B={} L_K={} H_Q={} H_KV={} D={} -> nblk={}, tiles={}  (device: {}, {} SMs)",
         shape.batch,
         shape.l_k,
         shape.h_q,
         shape.h_kv,
         shape.d,
         shape.nblk(),
-        shape.total_mblocks(true)
+        shape.total_mblocks(true),
+        device.name,
+        device.num_sms,
     );
-    for (name, md) in [
-        ("standard", StandardPolicy.metadata(&shape, 0, true)),
-        ("sequence-aware", SequenceAwarePolicy.metadata(&shape, 0, true)),
-    ] {
-        let t = sim.kernel(&md);
+    let mut names = registry.names();
+    names.reverse(); // ladder order: standard first
+    for name in names {
+        let mut planner = registry
+            .builder_for(name, &device)
+            .map_err(|e| anyhow::anyhow!(e))?
+            .sm_margin(args.usize("sm-margin"))
+            .build();
+        let plan = planner.plan(&shape);
+        let t = sim.kernel(&plan.metadata);
         println!(
-            "  {name:<15} s={:<3} ctas={:<4} occupancy={:>5.1}%  sim latency {:.2} µs",
-            md.num_splits,
-            t.active_ctas,
-            t.occupancy * 100.0,
+            "  {name:<15} s={:<3} ctas={:<4} occupancy={:>5.1}%  \
+             est.combine {:>4.2} µs  sim latency {:.2} µs",
+            plan.num_splits(),
+            plan.grid_ctas,
+            plan.occupancy * 100.0,
+            plan.combine_estimate_us,
             t.total_us
+        );
+    }
+    Ok(())
+}
+
+fn cmd_policies() -> anyhow::Result<()> {
+    let registry = PolicyRegistry::builtin();
+    println!("registered split policies:\n{}", registry.describe());
+    println!("device profiles:");
+    for p in DeviceProfile::presets() {
+        println!(
+            "  {:<12} {} SMs, {:.0} GB/s HBM, split cap {}",
+            p.name, p.num_sms, p.hbm_bw_gbps, p.max_splits
         );
     }
     Ok(())

@@ -1,0 +1,273 @@
+//! The plan cache: a small LRU keyed by shape bucket.
+//!
+//! The serving scheduler re-plans *every decode step* while the KV length
+//! grows by one token per step — but every built-in policy's decision only
+//! depends on the shape through `nblk = ceil(L_K / 128)` and the work-tile
+//! count, so 128 consecutive steps share one decision. The cache exploits
+//! that: keys hold the nblk bucket (or the exact `L_K` for sources that
+//! are not bucket-pure, e.g. evolved genomes with arbitrary `L_K` ranges),
+//! and a one-entry fast path keeps the steady-state hit at a handful of
+//! field compares — cheaper than re-running even the guard path of the
+//! heuristic, and far cheaper than the allocating efficiency loop.
+//!
+//! Eviction is exact LRU via a monotonic tick with an O(capacity) scan on
+//! overflow; capacities are small (default 512) and overflow is rare in
+//! steady state, so the simple scan beats a linked-list LRU's constant
+//! overhead on the hit path.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Cache key: every field of the decode shape that can influence a plan.
+/// `lk_key` is the nblk bucket for bucket-pure sources, the exact `L_K`
+/// otherwise (a single planner never mixes the two interpretations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) struct PlanKey {
+    pub batch: usize,
+    pub l_q: usize,
+    pub h_q: usize,
+    pub h_kv: usize,
+    pub d: usize,
+    pub lk_key: usize,
+}
+
+/// The shape-bucket-invariant part of a plan (everything except the exact
+/// shape, which is re-attached on materialization).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct CachedDecision {
+    pub num_splits: usize,
+    pub pack_gqa: bool,
+    pub sm_margin: usize,
+    pub effective_splits: usize,
+    pub grid_ctas: usize,
+    pub waves: usize,
+    pub occupancy: f64,
+    pub combine_estimate_us: f64,
+}
+
+/// Counters exposed through `Planner::cache_stats`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// FxHash-style multiply-xor hasher: the SipHash default costs more than
+/// the whole cached decision is worth on a 6-word key.
+#[derive(Default)]
+pub(crate) struct FxHasher {
+    hash: u64,
+}
+
+const FX_SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl Hasher for FxHasher {
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.add(b as u64);
+        }
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, v: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ v).wrapping_mul(FX_SEED);
+    }
+}
+
+type FxBuild = BuildHasherDefault<FxHasher>;
+
+struct Slot {
+    decision: CachedDecision,
+    tick: u64,
+}
+
+/// The LRU itself. Not thread-safe by design: the planner owns it behind
+/// `&mut self`, which keeps the steady-state hit lock-free.
+pub(crate) struct PlanCache {
+    map: HashMap<PlanKey, Slot, FxBuild>,
+    /// One-entry fast path for the decode-loop steady state.
+    last: Option<(PlanKey, CachedDecision)>,
+    tick: u64,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> PlanCache {
+        assert!(capacity > 0, "use Option<PlanCache>::None to disable caching");
+        PlanCache {
+            map: HashMap::with_capacity_and_hasher(capacity.min(1024), FxBuild::default()),
+            last: None,
+            tick: 0,
+            capacity,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    #[inline]
+    pub fn get(&mut self, key: &PlanKey) -> Option<CachedDecision> {
+        if let Some((k, d)) = &self.last {
+            if k == key {
+                self.hits += 1;
+                return Some(*d);
+            }
+        }
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some(slot) => {
+                slot.tick = self.tick;
+                let d = slot.decision;
+                self.last = Some((*key, d));
+                self.hits += 1;
+                Some(d)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, key: PlanKey, decision: CachedDecision) {
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            // The one-entry fast path serves hits without touching the
+            // map's ticks; fold that recency back in before choosing a
+            // victim, or the hottest entry would look least-recently-used.
+            if let Some((last_key, _)) = self.last {
+                self.tick += 1;
+                if let Some(slot) = self.map.get_mut(&last_key) {
+                    slot.tick = self.tick;
+                }
+            }
+            // Evict the least-recently-used entry (O(capacity) scan). Bind
+            // the owned key first so the map iteration borrow has ended
+            // before `remove` mutates the map.
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, slot)| slot.tick)
+                .map(|(k, _)| *k);
+            if let Some(oldest) = oldest {
+                self.map.remove(&oldest);
+            }
+        }
+        self.tick += 1;
+        self.map.insert(key, Slot { decision, tick: self.tick });
+        self.last = Some((key, decision));
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            entries: self.map.len(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(lk_key: usize) -> PlanKey {
+        PlanKey { batch: 1, l_q: 1, h_q: 8, h_kv: 1, d: 128, lk_key }
+    }
+
+    fn decision(s: usize) -> CachedDecision {
+        CachedDecision {
+            num_splits: s,
+            pack_gqa: true,
+            sm_margin: 0,
+            effective_splits: s,
+            grid_ctas: s,
+            waves: 1,
+            occupancy: s as f64 / 132.0,
+            combine_estimate_us: 0.0,
+        }
+    }
+
+    #[test]
+    fn hit_after_insert_and_last_slot() {
+        let mut c = PlanCache::new(8);
+        assert_eq!(c.get(&key(4)), None);
+        c.insert(key(4), decision(3));
+        assert_eq!(c.get(&key(4)).unwrap().num_splits, 3);
+        assert_eq!(c.get(&key(4)).unwrap().num_splits, 3); // last-slot path
+        let s = c.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 2);
+        assert!(s.hit_rate() > 0.6);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = PlanCache::new(2);
+        c.insert(key(1), decision(1));
+        c.insert(key(2), decision(2));
+        // Touch key(1) so key(2) becomes the LRU.
+        assert!(c.get(&key(1)).is_some());
+        c.insert(key(3), decision(3));
+        assert_eq!(c.stats().entries, 2);
+        assert!(c.get(&key(2)).is_none(), "LRU entry should be evicted");
+        assert!(c.get(&key(1)).is_some());
+        assert!(c.get(&key(3)).is_some());
+    }
+
+    #[test]
+    fn reinsert_same_key_does_not_evict() {
+        let mut c = PlanCache::new(2);
+        c.insert(key(1), decision(1));
+        c.insert(key(2), decision(2));
+        c.insert(key(2), decision(4)); // overwrite, no eviction
+        assert_eq!(c.stats().entries, 2);
+        assert_eq!(c.get(&key(2)).unwrap().num_splits, 4);
+        assert!(c.get(&key(1)).is_some());
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let mut c = PlanCache::new(64);
+        for lk in 1..=32 {
+            c.insert(key(lk), decision(lk));
+        }
+        for lk in 1..=32 {
+            assert_eq!(c.get(&key(lk)).unwrap().num_splits, lk, "lk_key={lk}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        PlanCache::new(0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Device profiles: the accelerator facts split planning depends on.
+//!
+//! The seed hardcoded `H100_NUM_SMS = 132` into the heuristics module —
+//! §2.2's own critique ("the static threshold overlooks the hardware scale
+//! of H100") applied to us. A [`DeviceProfile`] carries the SM count, the
+//! per-SM CTA budget for this kernel family, the upstream split cap, and a
+//! coarse combine-overhead model, so the same policies plan correctly for
+//! any part. The measurement-grade latency model stays in
+//! [`crate::sim::Calibration`]; the profile's [`CombineModel`] is only the
+//! planner-side estimate used for plan diagnostics.
+
+/// Coarse per-device estimate of the split-combine reduction cost. The
+/// paper's trade-off (§5.3): more splits ⇒ more partials to combine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CombineModel {
+    /// Fixed cost of launching the combine kernel at all (s > 1), µs.
+    pub base_us: f64,
+    /// Marginal cost per non-empty partial, µs.
+    pub per_partial_us: f64,
+}
+
+impl CombineModel {
+    /// Estimated combine cost for `effective_splits` non-empty partials.
+    pub fn estimate_us(&self, effective_splits: usize) -> f64 {
+        if effective_splits <= 1 {
+            return 0.0;
+        }
+        self.base_us + self.per_partial_us * (effective_splits - 1) as f64
+    }
+}
+
+/// Static description of the accelerator the planner targets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Streaming multiprocessors available to compute grids.
+    pub num_sms: usize,
+    /// CTAs of this kernel family that fit per SM per wave. The FA3 decode
+    /// kernel is register/SMEM-bound enough that one CTA owns an SM, so
+    /// every current preset uses 1; a lighter kernel would raise it and
+    /// the planner's wave math follows.
+    pub max_ctas_per_sm: usize,
+    /// Cap on `num_splits` (the upstream FA3 launch-grid limit).
+    pub max_splits: usize,
+    /// Peak HBM bandwidth, GB/s (arithmetic-intensity context; feeds the
+    /// simulator's [`crate::sim::GpuSpec`] conversion).
+    pub hbm_bw_gbps: f64,
+    /// L2 capacity in bytes.
+    pub l2_bytes: usize,
+    /// Planner-side combine-overhead estimate.
+    pub combine: CombineModel,
+}
+
+impl DeviceProfile {
+    /// NVIDIA H100 SXM5 — the paper's testbed (§2.1: 132 SMs).
+    pub const H100_SXM: DeviceProfile = DeviceProfile {
+        name: "H100-SXM5",
+        num_sms: 132,
+        max_ctas_per_sm: 1,
+        max_splits: 128,
+        hbm_bw_gbps: 3350.0,
+        l2_bytes: 50 * 1024 * 1024,
+        combine: CombineModel { base_us: 0.40, per_partial_us: 0.30 },
+    };
+
+    /// H100 PCIe variant: fewer SMs, lower bandwidth.
+    pub const H100_PCIE: DeviceProfile = DeviceProfile {
+        name: "H100-PCIe",
+        num_sms: 114,
+        max_ctas_per_sm: 1,
+        max_splits: 128,
+        hbm_bw_gbps: 2000.0,
+        l2_bytes: 50 * 1024 * 1024,
+        combine: CombineModel { base_us: 0.40, per_partial_us: 0.30 },
+    };
+
+    /// A100 SXM4 — the generation the upstream heuristic was tuned on.
+    pub const A100_SXM: DeviceProfile = DeviceProfile {
+        name: "A100-SXM4",
+        num_sms: 108,
+        max_ctas_per_sm: 1,
+        max_splits: 128,
+        hbm_bw_gbps: 2039.0,
+        l2_bytes: 40 * 1024 * 1024,
+        // Older atomics/reduction path: slightly pricier per partial.
+        combine: CombineModel { base_us: 0.45, per_partial_us: 0.35 },
+    };
+
+    /// H200 SXM — same GH100 compute die as H100 SXM (132 SMs), HBM3e.
+    pub const H200_SXM: DeviceProfile = DeviceProfile {
+        name: "H200-SXM",
+        num_sms: 132,
+        max_ctas_per_sm: 1,
+        max_splits: 128,
+        hbm_bw_gbps: 4800.0,
+        l2_bytes: 50 * 1024 * 1024,
+        combine: CombineModel { base_us: 0.40, per_partial_us: 0.30 },
+    };
+
+    /// All built-in presets.
+    pub fn presets() -> [DeviceProfile; 4] {
+        [Self::H100_SXM, Self::H100_PCIE, Self::A100_SXM, Self::H200_SXM]
+    }
+
+    /// Look up a preset by CLI-friendly name (`h100-sxm`, `h100`, `h100-pcie`,
+    /// `a100`, `a100-sxm`, `h200`, `h200-sxm`, or the display name).
+    pub fn by_name(name: &str) -> Option<DeviceProfile> {
+        let lower = name.to_ascii_lowercase();
+        match lower.as_str() {
+            "h100" | "h100-sxm" | "h100-sxm5" => Some(Self::H100_SXM),
+            "h100-pcie" => Some(Self::H100_PCIE),
+            "a100" | "a100-sxm" | "a100-sxm4" => Some(Self::A100_SXM),
+            "h200" | "h200-sxm" => Some(Self::H200_SXM),
+            _ => Self::presets()
+                .into_iter()
+                .find(|p| p.name.eq_ignore_ascii_case(&lower)),
+        }
+    }
+
+    /// SMs available to the grid once `sm_margin` is reserved for the
+    /// combine scheduler (§3.1 knob). Saturating: an over-large margin
+    /// degrades to a single-SM budget instead of panicking.
+    pub fn sm_budget(&self, sm_margin: usize) -> usize {
+        self.num_sms.saturating_sub(sm_margin).max(1)
+    }
+
+    /// CTAs one wave can retire under `sm_margin`.
+    pub fn wave_capacity(&self, sm_margin: usize) -> usize {
+        self.sm_budget(sm_margin) * self.max_ctas_per_sm.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_matches_paper_constants() {
+        assert_eq!(DeviceProfile::H100_SXM.num_sms, 132); // §2.1
+        assert_eq!(DeviceProfile::H100_SXM.max_splits, 128);
+    }
+
+    #[test]
+    fn budget_saturates() {
+        let p = DeviceProfile::H100_SXM;
+        assert_eq!(p.sm_budget(0), 132);
+        assert_eq!(p.sm_budget(32), 100);
+        assert_eq!(p.sm_budget(10_000), 1);
+        assert_eq!(p.wave_capacity(0), 132);
+    }
+
+    #[test]
+    fn name_lookup() {
+        assert_eq!(DeviceProfile::by_name("h100").unwrap().num_sms, 132);
+        assert_eq!(DeviceProfile::by_name("H100-PCIe").unwrap().num_sms, 114);
+        assert_eq!(DeviceProfile::by_name("a100").unwrap().num_sms, 108);
+        assert_eq!(DeviceProfile::by_name("h200").unwrap().hbm_bw_gbps, 4800.0);
+        assert!(DeviceProfile::by_name("tpu-v5").is_none());
+    }
+
+    #[test]
+    fn combine_estimate_shape() {
+        let c = DeviceProfile::H100_SXM.combine;
+        assert_eq!(c.estimate_us(1), 0.0);
+        assert!(c.estimate_us(3) > c.estimate_us(2));
+        // A100's combine is never cheaper than H100's at equal partials.
+        assert!(
+            DeviceProfile::A100_SXM.combine.estimate_us(4) >= c.estimate_us(4)
+        );
+    }
+}

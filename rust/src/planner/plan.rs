@@ -1,0 +1,37 @@
+//! [`LaunchPlan`]: the planner's output — launch metadata plus the derived
+//! occupancy facts every consumer used to recompute for itself.
+
+use crate::heuristics::SchedulerMetadata;
+
+/// One planned decode-attention launch.
+///
+/// `metadata` is the exact [`SchedulerMetadata`] the kernel launch (or the
+/// simulator) consumes — the `get_scheduler_metadata()` analog. The rest
+/// are derived quantities (CTA grid, wave count, first-wave occupancy, the
+/// device-profile combine estimate) so call sites stop doing their own
+/// occupancy arithmetic against hardcoded SM counts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaunchPlan {
+    pub metadata: SchedulerMetadata,
+    /// Splits that actually receive work (`min`-saturated at `nblk`).
+    pub effective_splits: usize,
+    /// Active CTAs this launch puts on the device.
+    pub grid_ctas: usize,
+    /// Wave count after quantization onto the device's wave capacity.
+    pub waves: usize,
+    /// First-wave SM occupancy fraction (the §2.1 headline quantity).
+    pub occupancy: f64,
+    /// Device-profile estimate of the split-combine overhead, µs. Coarse —
+    /// the simulator's calibration remains the measurement-grade model.
+    pub combine_estimate_us: f64,
+}
+
+impl LaunchPlan {
+    pub fn num_splits(&self) -> usize {
+        self.metadata.num_splits
+    }
+
+    pub fn shape(&self) -> &crate::heuristics::tiles::DecodeShape {
+        &self.metadata.shape
+    }
+}

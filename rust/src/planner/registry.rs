@@ -1,0 +1,247 @@
+//! String-keyed policy registry: one place that maps policy names to plan
+//! sources, so the CLI, the evaluator, the examples, and the bench
+//! harnesses stop pattern-matching name strings independently (the seed
+//! had three divergent copies of that `match`).
+
+use crate::evolve::genome::Genome;
+use crate::heuristics::extended::{ExtendedPolicy, TuneConfig};
+use crate::heuristics::{SequenceAwarePolicy, StandardPolicy};
+use crate::sim::Simulator;
+
+use super::{DeviceProfile, PlanSource, Planner, PlannerBuilder};
+
+/// Factories receive the target device so device-dependent construction
+/// (the auto-tuned `extended` table) tunes against the right part.
+type SourceFactory = Box<dyn Fn(&DeviceProfile) -> PlanSource + Send + Sync>;
+
+struct PolicyEntry {
+    name: String,
+    aliases: Vec<String>,
+    help: String,
+    factory: SourceFactory,
+}
+
+/// Registry of named split policies.
+pub struct PolicyRegistry {
+    entries: Vec<PolicyEntry>,
+}
+
+impl PolicyRegistry {
+    /// An empty registry (register your own entries).
+    pub fn new() -> PolicyRegistry {
+        PolicyRegistry { entries: Vec::new() }
+    }
+
+    /// The built-in ladder: standard → sequence-aware → extended →
+    /// evolved-genome (§4.1/§5.2's progression from upstream to learned).
+    pub fn builtin() -> PolicyRegistry {
+        let mut reg = PolicyRegistry::new();
+        reg.register(
+            "standard",
+            &[],
+            "upstream FA3 heuristic, premature L_K <= 512 guard included (§2.2)",
+            |_| PlanSource::policy(StandardPolicy),
+        );
+        reg.register(
+            "sequence-aware",
+            &["patched"],
+            "the paper's conservative Figure-2 patch (boundary-bucket override)",
+            |_| PlanSource::policy(SequenceAwarePolicy),
+        );
+        reg.register(
+            "extended",
+            &["extended-table"],
+            "learned (nblk, tiles) split table auto-tuned against the target device (§5.2)",
+            |device| {
+                // Tune against the target device's simulator and SM budget
+                // so the table's regression-free-by-construction guarantee
+                // holds on the part it will actually plan for; the probe
+                // planner supplies forced-split metadata for the oracle.
+                let sim = Simulator::for_profile(device);
+                let probe = PlannerBuilder::policy(StandardPolicy).device(*device).build();
+                let cfg = TuneConfig { num_sm: device.num_sms, ..TuneConfig::default() };
+                PlanSource::policy(ExtendedPolicy::tune(&cfg, |shape, s| {
+                    sim.kernel_us(&probe.plan_forced(shape, s).metadata)
+                }))
+            },
+        );
+        reg.register(
+            "evolved-genome",
+            &["genome", "figure1"],
+            "the paper's Figure-1 evolved candidate (aggressive, rule-DSL genome)",
+            |_| PlanSource::Genome(Genome::figure1()),
+        );
+        reg
+    }
+
+    /// Register a policy under `name` (plus aliases). Later registrations
+    /// shadow earlier ones, so callers can override built-ins. The factory
+    /// receives the target [`DeviceProfile`] (ignore it for
+    /// device-independent policies).
+    pub fn register(
+        &mut self,
+        name: impl Into<String>,
+        aliases: &[&str],
+        help: impl Into<String>,
+        factory: impl Fn(&DeviceProfile) -> PlanSource + Send + Sync + 'static,
+    ) {
+        self.entries.insert(
+            0,
+            PolicyEntry {
+                name: name.into(),
+                aliases: aliases.iter().map(|s| s.to_string()).collect(),
+                help: help.into(),
+                factory: Box::new(factory),
+            },
+        );
+    }
+
+    /// Canonical names, registration order (most recent first).
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// `standard|sequence-aware|extended|evolved-genome` — for CLI help.
+    pub fn help_line(&self) -> String {
+        let mut names: Vec<&str> = self.names();
+        names.reverse(); // builtin ladder order reads better
+        names.join("|")
+    }
+
+    /// One help bullet per policy.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        for e in self.entries.iter().rev() {
+            out.push_str(&format!("  {:<16} {}\n", e.name, e.help));
+        }
+        out
+    }
+
+    fn entry(&self, name: &str) -> Option<&PolicyEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name || e.aliases.iter().any(|a| a == name))
+    }
+
+    /// Instantiate the named plan source for a specific device.
+    pub fn source_for(&self, name: &str, device: &DeviceProfile) -> Result<PlanSource, String> {
+        match self.entry(name) {
+            Some(e) => Ok((e.factory)(device)),
+            None => Err(format!(
+                "unknown policy '{name}' (known: {})",
+                self.help_line()
+            )),
+        }
+    }
+
+    /// Instantiate the named plan source on the H100 default device.
+    pub fn source(&self, name: &str) -> Result<PlanSource, String> {
+        self.source_for(name, &DeviceProfile::H100_SXM)
+    }
+
+    /// A [`PlannerBuilder`] for the named policy targeting `device`. Use
+    /// this (not `builder` + `.device(..)`) when the device differs from
+    /// H100, so device-dependent sources are constructed for the right
+    /// part.
+    pub fn builder_for(
+        &self,
+        name: &str,
+        device: &DeviceProfile,
+    ) -> Result<PlannerBuilder, String> {
+        self.source_for(name, device)
+            .map(|src| PlannerBuilder::source(src).device(*device))
+    }
+
+    /// A [`PlannerBuilder`] for the named policy (H100 defaults; customize
+    /// knobs before building).
+    pub fn builder(&self, name: &str) -> Result<PlannerBuilder, String> {
+        self.builder_for(name, &DeviceProfile::H100_SXM)
+    }
+
+    /// A ready [`Planner`] on H100 defaults for the named policy.
+    pub fn planner(&self, name: &str) -> Result<Planner, String> {
+        self.builder(name).map(PlannerBuilder::build)
+    }
+}
+
+impl Default for PolicyRegistry {
+    fn default() -> Self {
+        PolicyRegistry::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::heuristics::sequence_aware::BOUNDARY_SPLIT;
+    use crate::heuristics::tiles::DecodeShape;
+
+    #[test]
+    fn builtin_names_and_aliases() {
+        let reg = PolicyRegistry::builtin();
+        let mut names = reg.names();
+        names.sort_unstable();
+        assert_eq!(names, vec!["evolved-genome", "extended", "sequence-aware", "standard"]);
+        // Alias resolution (the seed accepted "patched" on the CLI).
+        assert_eq!(reg.planner("patched").unwrap().name(), "sequence-aware");
+        assert_eq!(reg.planner("figure1").unwrap().name(), "evolved-genome");
+        assert!(reg.help_line().starts_with("standard"));
+        assert!(reg.describe().contains("sequence-aware"));
+    }
+
+    #[test]
+    fn unknown_name_lists_known_policies() {
+        let reg = PolicyRegistry::builtin();
+        let err = reg.planner("nope").unwrap_err();
+        assert!(err.contains("unknown policy 'nope'"));
+        assert!(err.contains("sequence-aware"));
+    }
+
+    #[test]
+    fn builtins_decide_the_boundary_shape_as_documented() {
+        let reg = PolicyRegistry::builtin();
+        let boundary = DecodeShape::llama70b_tp8(1, 512);
+        assert_eq!(reg.planner("standard").unwrap().plan(&boundary).num_splits(), 1);
+        assert_eq!(
+            reg.planner("sequence-aware").unwrap().plan(&boundary).num_splits(),
+            BOUNDARY_SPLIT
+        );
+        // The tuned table and the evolved genome both split here too.
+        assert!(reg.planner("extended").unwrap().plan(&boundary).num_splits() > 1);
+        assert!(reg.planner("evolved-genome").unwrap().plan(&boundary).num_splits() > 1);
+    }
+
+    #[test]
+    fn registration_shadows_builtins() {
+        let mut reg = PolicyRegistry::builtin();
+        reg.register("standard", &[], "custom override", |_| {
+            PlanSource::policy(SequenceAwarePolicy)
+        });
+        let mut p = reg.planner("standard").unwrap();
+        assert_eq!(p.plan(&DecodeShape::llama70b_tp8(1, 512)).num_splits(), BOUNDARY_SPLIT);
+    }
+
+    #[test]
+    fn extended_is_tuned_for_the_requested_device() {
+        // builder_for must construct the table against the target part:
+        // the planner it yields carries that device, and its table entries
+        // must not regress vs upstream *on that device's model*.
+        let reg = PolicyRegistry::builtin();
+        let device = DeviceProfile::A100_SXM;
+        let mut ext = reg.builder_for("extended", &device).unwrap().build();
+        assert_eq!(ext.device().name, device.name);
+        let mut std_p = PlannerBuilder::policy(StandardPolicy).device(device).build();
+        let sim = Simulator::for_profile(&device);
+        for l_k in (64..=2048usize).step_by(64) {
+            for batch in [1usize, 2, 4] {
+                let shape = DecodeShape::decode(batch, l_k, 8, 1, 128);
+                let t_ext = sim.kernel_us(&ext.plan(&shape).metadata);
+                let t_std = sim.kernel_us(&std_p.plan(&shape).metadata);
+                assert!(
+                    t_ext <= t_std * 1.0000001,
+                    "A100-tuned table regressed at B={batch} L_K={l_k}: {t_ext:.3} vs {t_std:.3}"
+                );
+            }
+        }
+    }
+}

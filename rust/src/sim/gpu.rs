@@ -36,6 +36,17 @@ impl GpuSpec {
     pub fn sms_with_margin(&self, sm_margin: usize) -> usize {
         self.num_sms.saturating_sub(sm_margin).max(1)
     }
+
+    /// Build the simulator-facing spec from a planner device profile, so
+    /// planning and simulation agree on the hardware by construction.
+    pub fn from_profile(profile: &crate::planner::DeviceProfile) -> GpuSpec {
+        GpuSpec {
+            name: profile.name,
+            num_sms: profile.num_sms,
+            hbm_bw_gbps: profile.hbm_bw_gbps,
+            l2_bytes: profile.l2_bytes,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -54,5 +65,14 @@ mod tests {
         assert_eq!(g.sms_with_margin(0), 132);
         assert_eq!(g.sms_with_margin(32), 100);
         assert_eq!(g.sms_with_margin(1000), 1);
+    }
+
+    #[test]
+    fn profile_conversion_agrees_with_presets() {
+        use crate::planner::DeviceProfile;
+        assert_eq!(GpuSpec::from_profile(&DeviceProfile::H100_SXM), GpuSpec::h100_sxm());
+        assert_eq!(GpuSpec::from_profile(&DeviceProfile::H100_PCIE), GpuSpec::h100_pcie());
+        assert_eq!(GpuSpec::from_profile(&DeviceProfile::A100_SXM), GpuSpec::a100_sxm());
+        assert_eq!(GpuSpec::from_profile(&DeviceProfile::H200_SXM).num_sms, 132);
     }
 }

@@ -62,8 +62,7 @@ pub fn simulate_kernel(md: &SchedulerMetadata, gpu: &GpuSpec, cal: &Calibration)
 
     if md.path == DispatchPath::InternalHeuristic && s > 1 {
         // Late split decision: most of the benefit over s = 1 is lost.
-        let unsplit = SchedulerMetadata { num_splits: 1, ..*md }
-            .with_path(DispatchPath::PrecomputedMetadata);
+        let unsplit = md.with_splits(1).with_path(DispatchPath::PrecomputedMetadata);
         let t1 = simulate_kernel(&unsplit, gpu, cal).total_us;
         if t1 > total_us {
             total_us += cal.internal_path_loss * (t1 - total_us);
@@ -95,6 +94,12 @@ impl Simulator {
         Simulator { gpu: GpuSpec::h100_sxm(), cal: Calibration::paper_h100() }
     }
 
+    /// Simulator for any planner device profile (the calibration constants
+    /// were fitted on H100; other parts inherit them as an approximation).
+    pub fn for_profile(profile: &crate::planner::DeviceProfile) -> Simulator {
+        Simulator { gpu: GpuSpec::from_profile(profile), cal: Calibration::paper_h100() }
+    }
+
     pub fn new(gpu: GpuSpec, cal: Calibration) -> Simulator {
         Simulator { gpu, cal }
     }
@@ -120,14 +125,22 @@ impl Simulator {
 mod tests {
     use super::*;
     use crate::heuristics::tiles::DecodeShape;
-    use crate::heuristics::{SequenceAwarePolicy, SplitPolicy, StandardPolicy};
+    use crate::heuristics::{SequenceAwarePolicy, StandardPolicy};
+    use crate::planner::{Planner, PlannerBuilder};
 
     fn sim() -> Simulator {
         Simulator::h100()
     }
 
     fn forced(l_k: usize, h_kv: usize, s: usize) -> SchedulerMetadata {
-        SchedulerMetadata::forced(DecodeShape::decode(1, l_k, 8 * h_kv, h_kv, 128), s)
+        Planner::standard()
+            .plan_forced(&DecodeShape::decode(1, l_k, 8 * h_kv, h_kv, 128), s)
+            .metadata
+    }
+
+    fn policy_md(std: bool, shape: &DecodeShape) -> SchedulerMetadata {
+        let mut p = if std { Planner::standard() } else { Planner::sequence_aware() };
+        p.plan(shape).metadata
     }
 
     /// The paper's Table-1 anchor latencies, within 11% absolute.
@@ -155,8 +168,8 @@ mod tests {
         let sim = sim();
         for h_kv in [1, 2] {
             let shape = DecodeShape::decode(1, 512, 8 * h_kv, h_kv, 128);
-            let t_std = sim.kernel_us(&StandardPolicy.metadata(&shape, 0, true));
-            let t_pat = sim.kernel_us(&SequenceAwarePolicy.metadata(&shape, 0, true));
+            let t_std = sim.kernel_us(&policy_md(true, &shape));
+            let t_pat = sim.kernel_us(&policy_md(false, &shape));
             let speedup = t_std / t_pat;
             assert!(
                 (1.15..=1.30).contains(&speedup),
@@ -174,8 +187,8 @@ mod tests {
             [(128, 1), (128, 2), (128, 8), (256, 1), (384, 8), (512, 8), (2048, 1), (2048, 2), (2048, 8), (4096, 1), (4096, 8)]
         {
             let shape = DecodeShape::decode(1, l_k, 8 * h_kv, h_kv, 128);
-            let t_std = sim.kernel_us(&StandardPolicy.metadata(&shape, 0, true));
-            let t_pat = sim.kernel_us(&SequenceAwarePolicy.metadata(&shape, 0, true));
+            let t_std = sim.kernel_us(&policy_md(true, &shape));
+            let t_pat = sim.kernel_us(&policy_md(false, &shape));
             assert_eq!(t_std, t_pat, "l_k={l_k} h_kv={h_kv}");
         }
     }
@@ -205,7 +218,7 @@ mod tests {
         let sim = sim();
         for (l_k, h_kv, paper_us) in [(2048, 1, 11.99), (2048, 8, 12.73), (4096, 1, 13.88), (4096, 8, 15.05)] {
             let shape = DecodeShape::decode(1, l_k, 8 * h_kv, h_kv, 128);
-            let md = StandardPolicy.metadata(&shape, 0, true);
+            let md = policy_md(true, &shape);
             let got = sim.kernel_us(&md);
             let rel = (got - paper_us).abs() / paper_us;
             assert!(rel < 0.15, "l_k={l_k} h_kv={h_kv}: got {got:.2} vs paper {paper_us} ({rel:.3})");
@@ -217,10 +230,12 @@ mod tests {
     fn internal_path_modest_gains() {
         let sim = sim();
         let shape = DecodeShape::llama70b_tp8(1, 512);
-        let t_std = sim.kernel_us(&StandardPolicy.metadata(&shape, 0, true));
-        let md_int = SequenceAwarePolicy
-            .metadata(&shape, 0, true)
-            .with_path(DispatchPath::InternalHeuristic);
+        let t_std = sim.kernel_us(&policy_md(true, &shape));
+        let md_int = PlannerBuilder::policy(SequenceAwarePolicy)
+            .dispatch_path(DispatchPath::InternalHeuristic)
+            .build()
+            .plan(&shape)
+            .metadata;
         let speedup = t_std / sim.kernel_us(&md_int);
         assert!((1.0..=1.07).contains(&speedup), "internal-path speedup {speedup:.3}");
     }
@@ -229,12 +244,14 @@ mod tests {
     #[test]
     fn wave_quantization() {
         let sim = sim();
+        let planner = Planner::standard();
         // 256 tiles at s=1 ⇒ 2 waves.
         let shape = DecodeShape::decode(8, 512, 256, 32, 128);
-        let t = sim.kernel(&SchedulerMetadata::forced(shape, 1));
+        let t = sim.kernel(&planner.plan_forced(&shape, 1).metadata);
         assert_eq!(t.active_ctas, 256);
         assert_eq!(t.waves, 2);
-        let one_wave = sim.kernel(&SchedulerMetadata::forced(DecodeShape::decode(4, 512, 256, 32, 128), 1));
+        let one_wave =
+            sim.kernel(&planner.plan_forced(&DecodeShape::decode(4, 512, 256, 32, 128), 1).metadata);
         assert_eq!(one_wave.waves, 1);
         assert!(t.total_us > one_wave.total_us);
     }
@@ -265,8 +282,13 @@ mod tests {
     fn sm_margin_shrinks_budget_and_can_add_waves() {
         let sim = sim();
         let shape = DecodeShape::decode(4, 512, 256, 32, 128); // 128 tiles
-        let t0 = sim.kernel(&SchedulerMetadata { sm_margin: 0, ..SchedulerMetadata::forced(shape, 1) });
-        let t_margin = sim.kernel(&SchedulerMetadata { sm_margin: 30, ..SchedulerMetadata::forced(shape, 1) });
+        let t0 = sim.kernel(&Planner::standard().plan_forced(&shape, 1).metadata);
+        let with_margin = PlannerBuilder::policy(StandardPolicy)
+            .sm_margin(30)
+            .build()
+            .plan_forced(&shape, 1)
+            .metadata;
+        let t_margin = sim.kernel(&with_margin);
         assert_eq!(t0.waves, 1);
         assert_eq!(t_margin.waves, 2); // 128 CTAs on 102 SMs
         assert!(t_margin.total_us > t0.total_us);

@@ -3,7 +3,7 @@
 //! §3.1) — and to serving-style summaries.
 
 use crate::heuristics::tiles::DecodeShape;
-use crate::heuristics::{SchedulerMetadata, SplitPolicy};
+use crate::planner::Planner;
 use crate::util::stats::Summary;
 
 use super::kernel_model::Simulator;
@@ -37,24 +37,19 @@ impl DecodeTrace {
         DecodeTrace { batch: 1, h_q: 8, h_kv: 1, d: 128, prompt_len, n_tokens }
     }
 
-    /// Run the trace under `policy` on `sim`, rebuilding scheduler metadata
-    /// every step as the context grows (exactly what the serving scheduler
-    /// does per decode step).
-    pub fn run<P: SplitPolicy + ?Sized>(
-        &self,
-        sim: &Simulator,
-        policy: &P,
-        sm_margin: usize,
-        pack_gqa: bool,
-    ) -> TraceSummary {
+    /// Run the trace through `planner` on `sim`, re-planning every step as
+    /// the context grows — exactly what the serving scheduler does per
+    /// decode step (and where the planner's shape-bucket cache earns its
+    /// keep: 128 consecutive steps share one decision).
+    pub fn run(&self, sim: &Simulator, planner: &mut Planner) -> TraceSummary {
         assert!(self.n_tokens > 0, "empty trace");
         let mut samples = Vec::with_capacity(self.n_tokens);
         let mut total = 0.0;
         for step in 0..self.n_tokens {
             let l_k = self.prompt_len + step + 1; // attend over cache incl. new token
             let shape = DecodeShape::decode(self.batch, l_k, self.h_q, self.h_kv, self.d);
-            let md = policy.metadata(&shape, sm_margin, pack_gqa);
-            let t = sim.kernel_us(&md);
+            let plan = planner.plan(&shape);
+            let t = sim.kernel_us(&plan.metadata);
             samples.push(t);
             total += t;
         }
@@ -67,13 +62,14 @@ impl DecodeTrace {
 
     /// Run with an externally-forced split count each step (sweep harness).
     pub fn run_forced(&self, sim: &Simulator, num_splits: usize) -> TraceSummary {
+        let planner = Planner::standard(); // knobs only; the policy is bypassed
         let mut samples = Vec::with_capacity(self.n_tokens);
         let mut total = 0.0;
         for step in 0..self.n_tokens {
             let l_k = self.prompt_len + step + 1;
             let shape = DecodeShape::decode(self.batch, l_k, self.h_q, self.h_kv, self.d);
-            let md = SchedulerMetadata::forced(shape, num_splits);
-            let t = sim.kernel_us(&md);
+            let plan = planner.plan_forced(&shape, num_splits);
+            let t = sim.kernel_us(&plan.metadata);
             samples.push(t);
             total += t;
         }
@@ -88,7 +84,6 @@ impl DecodeTrace {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::heuristics::{SequenceAwarePolicy, StandardPolicy};
 
     #[test]
     fn patched_policy_improves_chat_tpot() {
@@ -96,8 +91,8 @@ mod tests {
         // bucket must get faster under the sequence-aware policy.
         let sim = Simulator::h100();
         let trace = DecodeTrace::chat(384, 128); // steps cover 385..512
-        let std = trace.run(&sim, &StandardPolicy, 0, true);
-        let pat = trace.run(&sim, &SequenceAwarePolicy, 0, true);
+        let std = trace.run(&sim, &mut Planner::standard());
+        let pat = trace.run(&sim, &mut Planner::sequence_aware());
         let speedup = std.tpot_us / pat.tpot_us;
         assert!(speedup > 1.15, "speedup {speedup:.3}");
     }
@@ -106,8 +101,8 @@ mod tests {
     fn outside_bucket_identical() {
         let sim = Simulator::h100();
         let trace = DecodeTrace::chat(64, 64); // stays under L_K = 129..384
-        let std = trace.run(&sim, &StandardPolicy, 0, true);
-        let pat = trace.run(&sim, &SequenceAwarePolicy, 0, true);
+        let std = trace.run(&sim, &mut Planner::standard());
+        let pat = trace.run(&sim, &mut Planner::sequence_aware());
         assert_eq!(std.tpot_us, pat.tpot_us);
     }
 
@@ -115,7 +110,7 @@ mod tests {
     fn tpot_is_mean_of_steps() {
         let sim = Simulator::h100();
         let trace = DecodeTrace::chat(100, 10);
-        let s = trace.run(&sim, &StandardPolicy, 0, true);
+        let s = trace.run(&sim, &mut Planner::standard());
         assert!((s.tpot_us - s.total_us / 10.0).abs() < 1e-9);
         assert_eq!(s.per_step.n, 10);
     }
@@ -125,8 +120,19 @@ mod tests {
         let sim = Simulator::h100();
         let trace = DecodeTrace::chat(448, 32); // inside the nblk=4 bucket
         let forced3 = trace.run_forced(&sim, 3);
-        let pat = trace.run(&sim, &SequenceAwarePolicy, 0, true);
+        let pat = trace.run(&sim, &mut Planner::sequence_aware());
         // The patched policy IS s=3 in this bucket.
         assert!((forced3.tpot_us - pat.tpot_us).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cache_is_exercised_by_growing_contexts() {
+        let sim = Simulator::h100();
+        let trace = DecodeTrace::chat(0, 512); // crosses 4 nblk buckets
+        let mut planner = Planner::sequence_aware();
+        trace.run(&sim, &mut planner);
+        let stats = planner.cache_stats();
+        assert_eq!(stats.misses, 4, "{stats:?}"); // one per nblk bucket
+        assert_eq!(stats.hits, 508, "{stats:?}");
     }
 }

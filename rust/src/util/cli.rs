@@ -2,7 +2,10 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, and positional
 //! arguments, with typed accessors and a generated usage string. Each
-//! binary declares its options up front so `--help` is accurate.
+//! binary declares its options up front so `--help` is accurate. Help and
+//! default strings are owned (`Into<String>`), so callers can compose them
+//! at runtime — e.g. `--policy` help listing the names registered in
+//! `planner::PolicyRegistry` instead of a hardcoded copy.
 
 use std::collections::BTreeMap;
 
@@ -10,9 +13,9 @@ use std::collections::BTreeMap;
 #[derive(Debug, Clone)]
 pub struct OptSpec {
     pub name: &'static str,
-    pub help: &'static str,
+    pub help: String,
     pub takes_value: bool,
-    pub default: Option<&'static str>,
+    pub default: Option<String>,
 }
 
 /// Parsed arguments.
@@ -36,18 +39,28 @@ impl Parser {
         Parser { about, specs: Vec::new() }
     }
 
-    pub fn flag(mut self, name: &'static str, help: &'static str) -> Parser {
-        self.specs.push(OptSpec { name, help, takes_value: false, default: None });
+    pub fn flag(mut self, name: &'static str, help: impl Into<String>) -> Parser {
+        self.specs.push(OptSpec { name, help: help.into(), takes_value: false, default: None });
         self
     }
 
-    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Parser {
-        self.specs.push(OptSpec { name, help, takes_value: true, default: Some(default) });
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: impl Into<String>,
+        help: impl Into<String>,
+    ) -> Parser {
+        self.specs.push(OptSpec {
+            name,
+            help: help.into(),
+            takes_value: true,
+            default: Some(default.into()),
+        });
         self
     }
 
-    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Parser {
-        self.specs.push(OptSpec { name, help, takes_value: true, default: None });
+    pub fn opt_req(mut self, name: &'static str, help: impl Into<String>) -> Parser {
+        self.specs.push(OptSpec { name, help: help.into(), takes_value: true, default: None });
         self
     }
 
@@ -127,6 +140,7 @@ impl Args {
             };
             let default = s
                 .default
+                .as_ref()
                 .map(|d| format!(" [default: {d}]"))
                 .unwrap_or_default();
             out.push_str(&format!("{left:28} {}{default}\n", s.help));
@@ -145,8 +159,8 @@ impl Args {
             .or_else(|| self.spec_default(name))
     }
 
-    fn spec_default(&self, name: &str) -> Option<&'static str> {
-        self.specs.iter().find(|s| s.name == name).and_then(|s| s.default)
+    fn spec_default(&self, name: &str) -> Option<&str> {
+        self.specs.iter().find(|s| s.name == name).and_then(|s| s.default.as_deref())
     }
 
     pub fn str(&self, name: &str) -> String {
@@ -246,5 +260,15 @@ mod tests {
     fn equals_syntax() {
         let a = parser().parse_from(&argv(&["--steps=42", "--name=n"])).unwrap();
         assert_eq!(a.usize("steps"), 42);
+    }
+
+    #[test]
+    fn runtime_composed_help() {
+        // Owned help strings let callers inject runtime-registered values
+        // (the policy registry's names) into usage text.
+        let names = ["standard", "sequence-aware"].join("|");
+        let p = Parser::new("tool").opt("policy", "standard", format!("split policy: {names}"));
+        let err = p.parse_from(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("split policy: standard|sequence-aware"));
     }
 }

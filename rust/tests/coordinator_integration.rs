@@ -6,7 +6,7 @@ use fa3_split::coordinator::scheduler::AttnGeometry;
 use fa3_split::coordinator::{
     BlockManager, BlockManagerConfig, Engine, EngineConfig, FinishReason, Request,
 };
-use fa3_split::heuristics::{SequenceAwarePolicy, StandardPolicy};
+use fa3_split::planner::Planner;
 use fa3_split::sim::Simulator;
 use fa3_split::util::prng::Rng;
 use fa3_split::util::proptest_lite::{check, Domain};
@@ -17,7 +17,7 @@ fn sim_engine(policy_patched: bool, max_batch: usize) -> Engine {
     let max_batch = *buckets.last().unwrap(); // largest bucket IS the cap
     Engine::with_simulator(
         Simulator::h100(),
-        if policy_patched { Box::new(SequenceAwarePolicy) } else { Box::new(StandardPolicy) },
+        if policy_patched { Planner::sequence_aware() } else { Planner::standard() },
         AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 },
         vec![1, 3],
         EngineConfig {

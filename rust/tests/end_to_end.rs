@@ -11,7 +11,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use fa3_split::coordinator::{Engine, EngineConfig, FinishReason, Request};
-use fa3_split::heuristics::{SequenceAwarePolicy, SplitPolicy, StandardPolicy};
+use fa3_split::planner::Planner;
 use fa3_split::runtime::Registry;
 use fa3_split::workload::ChatWorkload;
 
@@ -22,10 +22,10 @@ fn artifacts_dir() -> Option<PathBuf> {
 
 fn serve(
     registry: Arc<Registry>,
-    policy: Box<dyn SplitPolicy>,
+    planner: Planner,
     requests: &[Request],
 ) -> Vec<(u64, Vec<i32>)> {
-    let mut engine = Engine::with_pjrt(registry, policy, EngineConfig::default()).unwrap();
+    let mut engine = Engine::with_pjrt(registry, planner, EngineConfig::default()).unwrap();
     for r in requests {
         engine.submit(r.clone());
     }
@@ -72,15 +72,15 @@ fn served_generations_identical_across_policies() {
         })
         .collect();
 
-    let out_std = serve(registry.clone(), Box::new(StandardPolicy), &requests);
-    let out_pat = serve(registry.clone(), Box::new(SequenceAwarePolicy), &requests);
+    let out_std = serve(registry.clone(), Planner::standard(), &requests);
+    let out_pat = serve(registry.clone(), Planner::sequence_aware(), &requests);
     assert_eq!(
         out_std, out_pat,
         "split policy changed generated tokens — scheduling leaked into math"
     );
 
     // Determinism: a re-run reproduces bit-identical generations.
-    let out_again = serve(registry, Box::new(StandardPolicy), &requests);
+    let out_again = serve(registry, Planner::standard(), &requests);
     assert_eq!(out_std, out_again);
 }
 
@@ -95,8 +95,7 @@ fn serving_batches_multiple_requests() {
         return;
     }
     let mut engine =
-        Engine::with_pjrt(registry, Box::new(SequenceAwarePolicy), EngineConfig::default())
-            .unwrap();
+        Engine::with_pjrt(registry, Planner::sequence_aware(), EngineConfig::default()).unwrap();
     for id in 0..3 {
         engine.submit(Request::new(id, vec![(id as i32) + 5; 8], 4));
     }

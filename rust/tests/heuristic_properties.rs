@@ -6,10 +6,11 @@
 
 use fa3_split::heuristics::sequence_aware::{BOUNDARY_SPLIT, LOW_TILE_THRESHOLD};
 use fa3_split::heuristics::tiles::{DecodeShape, SplitGeometry, KV_BLOCK};
-use fa3_split::heuristics::{
-    SchedulerMetadata, SequenceAwarePolicy, SplitPolicy, StandardPolicy, H100_NUM_SMS,
-};
+use fa3_split::heuristics::{SequenceAwarePolicy, SplitPolicy, StandardPolicy};
+use fa3_split::planner::{DeviceProfile, Planner};
 use fa3_split::util::proptest_lite::{check, Domain};
+
+const H100_SMS: usize = DeviceProfile::H100_SXM.num_sms;
 
 fn shape_from(case: &[u64]) -> DecodeShape {
     let batch = case[0] as usize;
@@ -28,8 +29,8 @@ const SHAPE_DOMAINS: [Domain; 3] = [
 fn policies_differ_only_in_the_boundary_bucket() {
     check("policy-delta-surface", &SHAPE_DOMAINS, |case| {
         let shape = shape_from(case);
-        let s_std = StandardPolicy.num_splits(&shape, H100_NUM_SMS, true);
-        let s_pat = SequenceAwarePolicy.num_splits(&shape, H100_NUM_SMS, true);
+        let s_std = StandardPolicy.num_splits(&shape, H100_SMS, true);
+        let s_pat = SequenceAwarePolicy.num_splits(&shape, H100_SMS, true);
         if s_std == s_pat {
             return Ok(());
         }
@@ -52,8 +53,8 @@ fn patched_never_splits_saturated_grids() {
     check("saturated-stays-unsplit", &SHAPE_DOMAINS, |case| {
         let shape = shape_from(case);
         let tiles = shape.total_mblocks(true);
-        let s = SequenceAwarePolicy.num_splits(&shape, H100_NUM_SMS, true);
-        if tiles as f32 >= 0.8 * H100_NUM_SMS as f32 && s != 1 {
+        let s = SequenceAwarePolicy.num_splits(&shape, H100_SMS, true);
+        if tiles as f32 >= 0.8 * H100_SMS as f32 && s != 1 {
             return Err(format!("saturated grid split: tiles={tiles} s={s}"));
         }
         Ok(())
@@ -65,10 +66,10 @@ fn split_counts_bounded_by_caps() {
     check("split-caps", &SHAPE_DOMAINS, |case| {
         let shape = shape_from(case);
         for (name, s) in [
-            ("std", StandardPolicy.num_splits(&shape, H100_NUM_SMS, true)),
-            ("pat", SequenceAwarePolicy.num_splits(&shape, H100_NUM_SMS, true)),
+            ("std", StandardPolicy.num_splits(&shape, H100_SMS, true)),
+            ("pat", SequenceAwarePolicy.num_splits(&shape, H100_SMS, true)),
         ] {
-            if s < 1 || s > 128 || s > H100_NUM_SMS.max(shape.nblk()).max(3) {
+            if s < 1 || s > 128 || s > H100_SMS.max(shape.nblk()).max(3) {
                 return Err(format!("{name}: s={s} out of bounds (nblk={})", shape.nblk()));
             }
         }
@@ -107,15 +108,22 @@ fn geometry_invariants() {
 fn metadata_occupancy_and_ctas_consistent() {
     check("metadata-consistency", &SHAPE_DOMAINS, |case| {
         let shape = shape_from(case);
-        let md = SequenceAwarePolicy.metadata(&shape, 0, true);
+        let plan = Planner::sequence_aware().plan(&shape);
+        let md = plan.metadata;
         let occ = md.occupancy();
         if !(0.0..=1.0).contains(&occ) {
             return Err(format!("occupancy {occ}"));
         }
+        if (occ - plan.occupancy).abs() > 1e-12 {
+            return Err(format!("plan occupancy {} != metadata {occ}", plan.occupancy));
+        }
         if md.grid_ctas() == 0 {
             return Err("zero CTAs".into());
         }
-        let forced = SchedulerMetadata::forced(shape, md.num_splits);
+        if plan.grid_ctas != md.grid_ctas() {
+            return Err("plan CTA count disagrees with metadata".into());
+        }
+        let forced = Planner::standard().plan_forced(&shape, md.num_splits).metadata;
         if forced.grid_ctas() != md.grid_ctas() {
             return Err("forced metadata disagrees with policy metadata".into());
         }
@@ -138,7 +146,7 @@ fn guard_region_is_sm_budget_independent() {
                 case[2] as usize,
                 128,
             );
-            let sms = H100_NUM_SMS - case[3] as usize;
+            let sms = H100_SMS - case[3] as usize;
             let s = SequenceAwarePolicy.num_splits(&shape, sms, true);
             if shape.nblk() <= 3 && s != 1 {
                 return Err(format!("guard 1 violated at sms={sms}: s={s}"));

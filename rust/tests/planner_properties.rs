@@ -1,0 +1,217 @@
+//! Property tests over the planner façade (proptest_lite).
+//!
+//! The planner's core guarantees, checked across randomized shape space:
+//!
+//! * **Cache transparency** — a cached planner returns plans identical to
+//!   an uncached one, for every registered policy and for genome sources
+//!   (the shape-bucket key is only sound because policies are
+//!   bucket-pure; this test is what keeps that contract honest).
+//! * **Batch equivalence** — `plan_batch` equals element-wise per-shape
+//!   `plan`.
+//! * **Eviction safety** — a capacity-starved LRU still returns correct
+//!   plans (eviction can only cost speed, never correctness).
+//! * **Knob safety** — oversized `sm_margin` saturates instead of
+//!   panicking, and every derived quantity stays in range.
+
+use std::cell::RefCell;
+
+use fa3_split::evolve::Genome;
+use fa3_split::heuristics::tiles::DecodeShape;
+use fa3_split::planner::{DeviceProfile, Planner, PlannerBuilder, PolicyRegistry};
+use fa3_split::util::proptest_lite::{check, check_with, Config, Domain};
+
+fn shape_from(case: &[u64]) -> DecodeShape {
+    DecodeShape::decode(
+        case[0] as usize,
+        case[1] as usize,
+        8 * case[2] as usize,
+        case[2] as usize,
+        128,
+    )
+}
+
+const SHAPE_DOMAINS: [Domain; 3] = [
+    Domain { lo: 1, hi: 16 },   // batch
+    Domain { lo: 1, hi: 9000 }, // l_k
+    Domain { lo: 1, hi: 32 },   // h_kv
+];
+
+#[test]
+fn cached_plans_equal_uncached_for_every_registered_policy() {
+    let registry = PolicyRegistry::builtin();
+    for name in ["standard", "sequence-aware", "extended", "evolved-genome"] {
+        // Tune/construct once per policy (the extended table is expensive);
+        // RefCell because proptest_lite closures are `Fn`.
+        let cached = RefCell::new(registry.planner(name).unwrap());
+        let uncached = RefCell::new(registry.builder(name).unwrap().cache_capacity(0).build());
+        check_with(
+            Config { cases: 600, ..Default::default() },
+            &format!("cache-transparent-{name}"),
+            &SHAPE_DOMAINS,
+            |case| {
+                let shape = shape_from(case);
+                let a = cached.borrow_mut().plan(&shape);
+                let b = uncached.borrow_mut().plan(&shape);
+                if a != b {
+                    return Err(format!("cached {a:?} != uncached {b:?}"));
+                }
+                Ok(())
+            },
+        );
+        let stats = cached.borrow().cache_stats();
+        assert!(stats.hits + stats.misses >= 600, "{name}: cache untouched? {stats:?}");
+    }
+}
+
+#[test]
+fn genome_planner_cache_is_transparent_for_figure1() {
+    // Genome sources key by exact L_K (rules carry arbitrary ranges);
+    // transparency must hold there too.
+    let cached = RefCell::new(PlannerBuilder::genome(Genome::figure1()).build());
+    let uncached =
+        RefCell::new(PlannerBuilder::genome(Genome::figure1()).cache_capacity(0).build());
+    check("cache-transparent-genome", &SHAPE_DOMAINS, |case| {
+        let shape = shape_from(case);
+        let a = cached.borrow_mut().plan(&shape);
+        let b = uncached.borrow_mut().plan(&shape);
+        if a != b {
+            return Err(format!("cached {a:?} != uncached {b:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_batch_equals_per_shape_plan() {
+    // Random batches of 1..=8 shapes, derived deterministically from the
+    // sampled case: plan_batch must agree element-wise with plan() on a
+    // fresh planner.
+    let domains = [
+        Domain { lo: 1, hi: 8 },    // batch-of-shapes size
+        Domain { lo: 1, hi: 9000 }, // base l_k
+        Domain { lo: 1, hi: 8 },    // h_kv
+        Domain { lo: 1, hi: 16 },   // batch dim
+    ];
+    check("plan-batch-equivalence", &domains, |case| {
+        let n = case[0] as usize;
+        let shapes: Vec<DecodeShape> = (0..n)
+            .map(|i| {
+                // Spread the l_k values so batches cross bucket boundaries.
+                let l_k = ((case[1] as usize + i * 97 - 1) % 9000) + 1;
+                DecodeShape::decode(
+                    case[3] as usize,
+                    l_k,
+                    8 * case[2] as usize,
+                    case[2] as usize,
+                    128,
+                )
+            })
+            .collect();
+        let batch = PlannerBuilder::policy(fa3_split::heuristics::SequenceAwarePolicy)
+            .build()
+            .plan_batch(&shapes);
+        let mut single = Planner::sequence_aware();
+        for (i, shape) in shapes.iter().enumerate() {
+            let expect = single.plan(shape);
+            if batch[i] != expect {
+                return Err(format!("index {i}: batch {:?} != single {expect:?}", batch[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tiny_cache_capacity_only_costs_speed_never_correctness() {
+    // Capacity 2 with shapes cycling through 4+ buckets: constant
+    // eviction, same answers.
+    let tiny = RefCell::new(
+        PlannerBuilder::policy(fa3_split::heuristics::SequenceAwarePolicy)
+            .cache_capacity(2)
+            .build(),
+    );
+    check("lru-eviction-correct", &SHAPE_DOMAINS, |case| {
+        let shape = shape_from(case);
+        let a = tiny.borrow_mut().plan(&shape);
+        let b = Planner::sequence_aware().plan(&shape);
+        if a != b {
+            return Err(format!("evicting cache diverged: {a:?} != {b:?}"));
+        }
+        Ok(())
+    });
+    let stats = tiny.borrow().cache_stats();
+    assert!(stats.entries <= 2, "{stats:?}");
+}
+
+#[test]
+fn derived_plan_quantities_stay_in_range() {
+    let domains = [
+        Domain { lo: 1, hi: 16 },
+        Domain { lo: 1, hi: 9000 },
+        Domain { lo: 1, hi: 32 },
+        Domain { lo: 0, hi: 300 }, // sm_margin, intentionally > 132 sometimes
+    ];
+    check("plan-ranges", &domains, |case| {
+        let shape = shape_from(case);
+        let mut planner = PlannerBuilder::policy(fa3_split::heuristics::SequenceAwarePolicy)
+            .sm_margin(case[3] as usize)
+            .build();
+        let plan = planner.plan(&shape);
+        if !(0.0..=1.0).contains(&plan.occupancy) {
+            return Err(format!("occupancy {} out of range", plan.occupancy));
+        }
+        if plan.num_splits() < 1 || plan.num_splits() > DeviceProfile::H100_SXM.max_splits {
+            return Err(format!("num_splits {} out of range", plan.num_splits()));
+        }
+        if plan.effective_splits > plan.num_splits() || plan.effective_splits == 0 {
+            return Err(format!("effective splits {} out of range", plan.effective_splits));
+        }
+        if plan.grid_ctas == 0 || plan.waves == 0 {
+            return Err("degenerate grid".into());
+        }
+        if plan.combine_estimate_us < 0.0 {
+            return Err("negative combine estimate".into());
+        }
+        // The metadata-side occupancy helper must agree and must not
+        // panic for oversized margins (the seed's underflow bug).
+        let occ = plan.metadata.occupancy();
+        if (occ - plan.occupancy).abs() > 1e-12 {
+            return Err(format!("metadata occupancy {occ} != plan {}", plan.occupancy));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn device_profiles_share_the_decision_structure() {
+    // On any preset, a saturated grid stays unsplit and the boundary
+    // override stays within the device's split cap.
+    for device in DeviceProfile::presets() {
+        let sat = RefCell::new(
+            PlannerBuilder::policy(fa3_split::heuristics::SequenceAwarePolicy)
+                .device(device)
+                .build(),
+        );
+        check_with(
+            Config { cases: 300, ..Default::default() },
+            &format!("profile-sanity-{}", device.name),
+            &SHAPE_DOMAINS,
+            |case| {
+                let shape = shape_from(case);
+                let plan = sat.borrow_mut().plan(&shape);
+                let tiles = shape.total_mblocks(true);
+                if tiles as f32 >= 0.8 * device.num_sms as f32 && plan.num_splits() != 1 {
+                    return Err(format!(
+                        "saturated grid split on {}: tiles={tiles} s={}",
+                        device.name,
+                        plan.num_splits()
+                    ));
+                }
+                if plan.num_splits() > device.max_splits {
+                    return Err(format!("split cap violated on {}", device.name));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -3,12 +3,12 @@
 //! The regression claim (§5.3) generalized: across randomized shape space
 //! the sequence-aware policy never loses to the standard one on the
 //! simulator, latencies decompose consistently, and the model behaves
-//! monotonically where physics says it must.
+//! monotonically where physics says it must. All launch schedules come
+//! from the planner façade (plan / plan_forced), never hand-built.
 
 use fa3_split::heuristics::tiles::DecodeShape;
-use fa3_split::heuristics::{
-    DispatchPath, SchedulerMetadata, SequenceAwarePolicy, SplitPolicy, StandardPolicy,
-};
+use fa3_split::heuristics::DispatchPath;
+use fa3_split::planner::Planner;
 use fa3_split::sim::Simulator;
 use fa3_split::util::proptest_lite::{check, check_with, Config, Domain};
 
@@ -37,8 +37,8 @@ fn patched_policy_never_regresses_anywhere() {
     check_with(cfg, "no-regression-anywhere", &SHAPE_DOMAINS, |case| {
         let sim = Simulator::h100();
         let shape = shape_from(case);
-        let t_std = sim.kernel_us(&StandardPolicy.metadata(&shape, 0, true));
-        let t_pat = sim.kernel_us(&SequenceAwarePolicy.metadata(&shape, 0, true));
+        let t_std = sim.kernel_us(&Planner::standard().plan(&shape).metadata);
+        let t_pat = sim.kernel_us(&Planner::sequence_aware().plan(&shape).metadata);
         if t_pat > t_std * 1.0000001 {
             return Err(format!(
                 "regression at B={} L_K={} H_KV={}: {t_pat:.3} > {t_std:.3}",
@@ -54,7 +54,7 @@ fn latency_decomposition_adds_up() {
     check("timing-decomposition", &SHAPE_DOMAINS, |case| {
         let sim = Simulator::h100();
         let shape = shape_from(case);
-        let md = SequenceAwarePolicy.metadata(&shape, 0, true);
+        let md = Planner::sequence_aware().plan(&shape).metadata;
         let t = sim.kernel(&md);
         let sum = t.launch_us + t.body_us + t.combine_us;
         if (t.total_us - sum).abs() > 1e-9 {
@@ -82,15 +82,16 @@ fn longer_context_never_faster_unsplit() {
         &[Domain::new(1, 4), Domain::new(1, 4000), Domain::new(1, 8)],
         |case| {
             let sim = Simulator::h100();
+            let planner = Planner::standard();
             let (b, l_k, h_kv) = (case[0] as usize, case[1] as usize, case[2] as usize);
-            let t1 = sim.kernel_us(&SchedulerMetadata::forced(
-                DecodeShape::decode(b, l_k, 8 * h_kv, h_kv, 128),
-                1,
-            ));
-            let t2 = sim.kernel_us(&SchedulerMetadata::forced(
-                DecodeShape::decode(b, l_k + 512, 8 * h_kv, h_kv, 128),
-                1,
-            ));
+            let t1 = sim.kernel_us(
+                &planner.plan_forced(&DecodeShape::decode(b, l_k, 8 * h_kv, h_kv, 128), 1).metadata,
+            );
+            let t2 = sim.kernel_us(
+                &planner
+                    .plan_forced(&DecodeShape::decode(b, l_k + 512, 8 * h_kv, h_kv, 128), 1)
+                    .metadata,
+            );
             if t2 + 1e-9 < t1 {
                 return Err(format!("longer context faster: {t2:.3} < {t1:.3}"));
             }
@@ -107,15 +108,16 @@ fn wave_quantization_monotone_in_batch() {
         &[Domain::new(1, 12), Domain::new(1, 4000), Domain::new(1, 32)],
         |case| {
             let sim = Simulator::h100();
+            let planner = Planner::standard();
             let (b, l_k, h_kv) = (case[0] as usize, case[1] as usize, case[2] as usize);
-            let t1 = sim.kernel_us(&SchedulerMetadata::forced(
-                DecodeShape::decode(b, l_k, 8 * h_kv, h_kv, 128),
-                1,
-            ));
-            let t2 = sim.kernel_us(&SchedulerMetadata::forced(
-                DecodeShape::decode(b * 2, l_k, 8 * h_kv, h_kv, 128),
-                1,
-            ));
+            let t1 = sim.kernel_us(
+                &planner.plan_forced(&DecodeShape::decode(b, l_k, 8 * h_kv, h_kv, 128), 1).metadata,
+            );
+            let t2 = sim.kernel_us(
+                &planner
+                    .plan_forced(&DecodeShape::decode(b * 2, l_k, 8 * h_kv, h_kv, 128), 1)
+                    .metadata,
+            );
             if t2 + 1e-9 < t1 {
                 return Err(format!("doubling batch got faster: {t2:.3} < {t1:.3}"));
             }
@@ -129,7 +131,7 @@ fn internal_path_never_beats_metadata_path() {
     check("internal-path-penalty", &SHAPE_DOMAINS, |case| {
         let sim = Simulator::h100();
         let shape = shape_from(case);
-        let md = SequenceAwarePolicy.metadata(&shape, 0, true);
+        let md = Planner::sequence_aware().plan(&shape).metadata;
         let t_meta = sim.kernel_us(&md);
         let t_int = sim.kernel_us(&md.with_path(DispatchPath::InternalHeuristic));
         if t_int + 1e-9 < t_meta {
@@ -154,7 +156,8 @@ fn oversplit_never_starves_work() {
                 case[2] as usize,
                 128,
             );
-            let t = sim.kernel(&SchedulerMetadata::forced(shape, case[3] as usize));
+            let md = Planner::standard().plan_forced(&shape, case[3] as usize).metadata;
+            let t = sim.kernel(&md);
             if !t.total_us.is_finite() || t.total_us <= 0.0 {
                 return Err(format!("bad latency {:?}", t.total_us));
             }

@@ -1,0 +1,249 @@
+//! Offline shim for the `anyhow` crate.
+//!
+//! The build container has no crates.io access, so this vendored crate
+//! provides exactly the subset of anyhow's API the workspace uses:
+//!
+//! * [`Error`] — a message-chain error type (`Display`, `{:#}` alternate
+//!   formatting that joins the context chain, `Debug` with `Caused by:`),
+//! * [`Result`] — `Result<T, Error>` with the same defaulted type param,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Mirroring the real crate, [`Error`] intentionally does NOT implement
+//! `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+//! conversion coherent with the reflexive `From<Error>` the `?` operator
+//! uses. Swap this shim for the real `anyhow = "1"` by editing
+//! `rust/Cargo.toml` if a networked build is ever available — no source
+//! changes required.
+
+use std::fmt;
+
+/// Chain-of-messages error. `chain[0]` is the outermost context, the last
+/// element is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (what `.context(..)` attaches).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, "outer: inner: root".
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — plain `Result` with the error defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+// Mirrors anyhow's `ext::StdError` trick: a private conversion trait with
+// a blanket impl for real std errors plus a concrete impl for `Error`
+// itself, so one `Context` impl covers both `Result<T, io::Error>` and
+// `Result<T, anyhow::Error>`. The impls are disjoint because `Error` does
+// not implement `std::error::Error` (same coherence argument the real
+// crate relies on).
+mod ext {
+    use super::Error;
+
+    pub trait IntoError {
+        fn into_anyhow(self) -> Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_anyhow(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_anyhow(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_anyhow().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an [`Error`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = Error::from(io_err()).context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("missing file"));
+    }
+
+    #[test]
+    fn option_and_result_context() {
+        let none: Option<u32> = None;
+        let e = none.context("absent").unwrap_err();
+        assert_eq!(format!("{e}"), "absent");
+
+        let r: Result<u32, std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 3: missing file");
+
+        // Stacking context on an anyhow::Result.
+        let r2: Result<u32> = Err(anyhow!("inner"));
+        let e2 = r2.context("outer").unwrap_err();
+        assert_eq!(format!("{e2:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn macros() {
+        fn fails(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(fails(3).unwrap(), 3);
+        assert_eq!(format!("{}", fails(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", fails(7).unwrap_err()), "unlucky 7");
+        let from_string = anyhow!(String::from("owned"));
+        assert_eq!(format!("{from_string}"), "owned");
+    }
+
+    #[test]
+    fn question_mark_conversion() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+}

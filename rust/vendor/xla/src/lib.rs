@@ -1,0 +1,215 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The runtime layer (`fa3_split::runtime`) is written against the real
+//! XLA PJRT bindings, but this build environment has neither crates.io
+//! access nor the native XLA libraries. This crate provides the exact API
+//! surface the runtime uses so everything *compiles* unchanged; every
+//! entry point that would touch PJRT returns an [`Error`] at runtime
+//! (`PjRtClient::cpu()` fails first, so nothing downstream is reachable).
+//!
+//! The integration tests and benches that need real execution already
+//! skip when `artifacts/manifest.json` is absent, so `cargo test` stays
+//! green with this stub. To run the real path, replace this vendored crate
+//! with the actual bindings in `rust/Cargo.toml` — no source changes are
+//! needed in `fa3_split`.
+
+use std::fmt;
+
+/// Error type standing in for the bindings' status/error enum.
+#[derive(Debug, Clone)]
+pub struct Error {
+    pub msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error {
+        msg: "XLA/PJRT is unavailable in this build (offline stub — see rust/vendor/xla); \
+              run `make artifacts` against a real xla crate to execute artifacts"
+            .to_string(),
+    }
+}
+
+/// Element types of XLA literals (subset ordering is irrelevant here; the
+/// runtime only constructs F32 and S32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Host-native element types accepted by the typed buffer/literal APIs.
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+}
+
+/// Host-side literal (unconstructible through the stub).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+}
+
+/// Array shape of a literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Device-resident buffer (unconstructible through the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// In the real bindings this creates the CPU PJRT client; the stub
+    /// always fails, which is the single choke point keeping the rest of
+    /// the stub unreachable.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation built from a proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.msg.contains("offline stub"));
+        assert!(format!("{err:?}").contains("offline stub"));
+    }
+
+    #[test]
+    fn computation_construction_is_possible() {
+        // `XlaComputation::from_proto` is infallible in the real API, so the
+        // stub must mirror that even though no proto can be loaded.
+        assert!(HloModuleProto::from_text_file("/nonexistent").is_err());
+    }
+}
