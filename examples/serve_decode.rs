@@ -1,43 +1,39 @@
 //! End-to-end serving driver (the repo's E2E validation run).
 //!
-//! Loads the AOT-compiled synthetic GQA model (the per-device shape of
-//! Llama-70B/TP-8), starts the continuous-batching engine on the real PJRT
-//! runtime, and serves a synthetic chat workload — batched prefill +
-//! decode with the split decision made per step from scheduler metadata.
-//! Reports TTFT / TPOT / throughput and the split histogram, then repeats
-//! the same workload on the simulated-H100 backend under BOTH policies to
-//! project the paper's serving-level effect.
+//! Builds the continuous-batching engine over an [`ExecutionBackend`] and
+//! serves a synthetic chat workload through the streaming request
+//! lifecycle: every `submit` returns a `RequestHandle` whose tokens arrive
+//! as they decode, with per-request cancellation and deadlines.
+//!
+//! With `make artifacts` built, part 1 runs the real PJRT backend (true
+//! logits, wall-clock timing); otherwise it is skipped and the example
+//! still completes on the simulated backend (what the CI smoke job runs).
+//! Part 2 projects the paper's serving-level effect by replaying the same
+//! boundary-bucket workload on the simulated H100 under BOTH policies,
+//! and demonstrates cancellation + deadlines on the virtual clock.
 //!
 //! Run: `cargo run --release --example serve_decode -- [--requests 8]
-//!       [--tokens 48] [--policy patched|standard]`
-//! Requires `make artifacts`.
+//!       [--tokens 48] [--policy sequence-aware|standard]`
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use fa3_split::coordinator::scheduler::AttnGeometry;
-use fa3_split::coordinator::{Engine, EngineConfig, Request};
+use fa3_split::backend::{AttnGeometry, PjrtBackend, SimBackend};
+use fa3_split::coordinator::{Engine, EngineConfig, Request, StreamEvent, SubmitOptions};
 use fa3_split::planner::PolicyRegistry;
 use fa3_split::runtime::Registry;
-use fa3_split::sim::Simulator;
 use fa3_split::util::cli;
 use fa3_split::workload::ChatWorkload;
 
 fn main() -> anyhow::Result<()> {
     let policies = PolicyRegistry::builtin();
-    let args = cli::Parser::new("End-to-end serving over the AOT artifacts")
+    let args = cli::Parser::new("End-to-end serving over the execution-backend API")
         .opt("requests", "8", "number of chat requests")
         .opt("tokens", "48", "max new tokens per request")
         .opt("prompt-median", "200", "median prompt length")
         .opt("policy", "sequence-aware", format!("split policy: {}", policies.help_line()))
         .opt("seed", "7", "workload seed")
         .parse();
-
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    anyhow::ensure!(
-        dir.join("manifest.json").exists(),
-        "artifacts/ missing — run `make artifacts` first"
-    );
 
     let workload = ChatWorkload {
         seed: args.u64("seed"),
@@ -57,59 +53,74 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    // ---------------- Real PJRT serving ----------------------------------
-    println!("== Real serving over PJRT (CPU backend) ==");
-    let registry = Arc::new(Registry::open(&dir)?);
-    let model = registry.manifest.model.as_ref().unwrap();
-    println!(
-        "model: preset '{}', {} layers, H_Q={} H_KV={} D={} ({:.1}M params)",
-        model.preset,
-        model.config.n_layers,
-        model.config.n_heads_q,
-        model.config.n_heads_kv,
-        model.config.head_dim,
-        model.config.n_params as f64 / 1e6
-    );
-    let mut engine = Engine::with_pjrt(
-        registry.clone(),
-        policies.planner(&args.str("policy")).map_err(|e| anyhow::anyhow!(e))?,
-        EngineConfig::default(),
-    )?;
-    println!(
-        "engine: policy '{}', serving {} requests x {} tokens\n",
-        engine.policy_name(),
-        requests.len(),
-        args.usize("tokens")
-    );
-    let t0 = std::time::Instant::now();
-    for r in requests.clone() {
-        engine.submit(r);
-    }
-    let finished = engine.run_until_idle()?;
-    let wall = t0.elapsed();
-    engine.metrics.wall_us = wall.as_micros() as u64;
+    // ---------------- Real PJRT serving (if artifacts exist) -------------
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut geometry = AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 };
+    if dir.join("manifest.json").exists() {
+        println!("== Real serving over PJRT (CPU backend) ==");
+        let registry = Arc::new(Registry::open(&dir)?);
+        let model = registry.manifest.model.as_ref().unwrap();
+        println!(
+            "model: preset '{}', {} layers, H_Q={} H_KV={} D={} ({:.1}M params)",
+            model.preset,
+            model.config.n_layers,
+            model.config.n_heads_q,
+            model.config.n_heads_kv,
+            model.config.head_dim,
+            model.config.n_params as f64 / 1e6
+        );
+        let cfg = EngineConfig::default();
+        let backend = PjrtBackend::new(registry.clone(), cfg.batcher.max_batch)?;
+        let mut engine = Engine::builder(Box::new(backend))
+            .planner(policies.planner(&args.str("policy")).map_err(|e| anyhow::anyhow!(e))?)
+            .config(cfg)
+            .build()?;
+        geometry = AttnGeometry {
+            h_q: model.config.n_heads_q,
+            h_kv: model.config.n_heads_kv,
+            d: model.config.head_dim,
+            max_seq: model.config.max_seq,
+        };
+        println!(
+            "engine: policy '{}', serving {} requests x {} tokens\n",
+            engine.policy_name(),
+            requests.len(),
+            args.usize("tokens")
+        );
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for r in requests.clone() {
+            handles.push(engine.submit(r).map_err(|e| anyhow::anyhow!("refused: {e}"))?);
+        }
+        let finished = engine.run_until_idle()?;
+        let wall = t0.elapsed();
+        engine.metrics.wall_us = wall.as_micros() as u64;
 
-    println!("served {} requests in {:.2}s", finished.len(), wall.as_secs_f64());
-    print!("{}", engine.metrics.report());
-    let sample = &finished[0];
-    println!(
-        "sample generation (req {}): prompt {} tokens -> {:?}...\n",
-        sample.id,
-        sample.prompt_len,
-        &sample.tokens[..sample.tokens.len().min(8)]
-    );
+        println!("served {} requests in {:.2}s", finished.len(), wall.as_secs_f64());
+        print!("{}", engine.metrics.report());
+        // Consume one stream to show the handle-side view.
+        let sample = handles.remove(0);
+        let id = sample.id();
+        let streamed: Vec<i32> = std::iter::from_fn(|| sample.try_event())
+            .filter_map(|ev| match ev {
+                StreamEvent::Token { token, .. } => Some(token),
+                _ => None,
+            })
+            .collect();
+        println!(
+            "sample stream (req {id}): {:?}... ({} tokens)\n",
+            &streamed[..streamed.len().min(8)],
+            streamed.len()
+        );
+    } else {
+        println!("== PJRT serving skipped (artifacts/ not built — run `make artifacts`) ==\n");
+    }
 
     // ---------------- Simulated H100 projection, both policies -----------
     // The paper's target regime is Batch = 1 (per-device Llama-70B/TP-8
     // chat): run the projection with a single-slot engine and prompts that
     // decode across the L_K = 385..512 boundary bucket.
     println!("== Simulated-H100 serving projection (Batch=1 chat regime, A/B) ==");
-    let geometry = AttnGeometry {
-        h_q: model.config.n_heads_q,
-        h_kv: model.config.n_heads_kv,
-        d: model.config.head_dim,
-        max_seq: model.config.max_seq,
-    };
     let boundary_workload = ChatWorkload {
         seed: args.u64("seed"),
         n_requests: args.usize("requests"),
@@ -120,28 +131,27 @@ fn main() -> anyhow::Result<()> {
     };
     let mut results = Vec::new();
     for policy_name in ["standard", "sequence-aware"] {
-        let mut sim_engine = Engine::with_simulator(
-            Simulator::h100(),
-            policies.planner(policy_name).map_err(|e| anyhow::anyhow!(e))?,
-            geometry,
-            vec![1, 3],
-            EngineConfig {
+        let mut sim_engine = Engine::builder(Box::new(SimBackend::h100()))
+            .planner(policies.planner(policy_name).map_err(|e| anyhow::anyhow!(e))?)
+            .geometry(geometry)
+            .available_splits(vec![1, 3])
+            .config(EngineConfig {
                 batcher: fa3_split::coordinator::BatcherConfig {
                     max_batch: 1,
                     batch_buckets: vec![1],
                 },
                 ..Default::default()
-            },
-        );
+            })
+            .build()?;
         for g in boundary_workload.generate() {
             let mut r = g.request;
             r.max_new_tokens = 96;
-            sim_engine.submit(r);
+            sim_engine.submit(r).map_err(|e| anyhow::anyhow!("refused: {e}"))?;
         }
         let done = sim_engine.run_until_idle()?;
         let tpot = sim_engine.metrics.tpot().map(|s| s.mean).unwrap_or(0.0);
         println!(
-            "  {policy_name:<9} attention-TPOT {:.2} µs/token ({} requests, splits {:?})",
+            "  {policy_name:<14} attention-TPOT {:.2} µs/token ({} requests, splits {:?})",
             tpot,
             done.len(),
             sim_engine
@@ -161,5 +171,37 @@ fn main() -> anyhow::Result<()> {
             results[0] / results[1]
         );
     }
+
+    // ---------------- Lifecycle demo: cancellation + deadline ------------
+    println!("\n== Request lifecycle (virtual clock) ==");
+    let mut engine = Engine::builder(Box::new(SimBackend::h100()))
+        .planner(policies.planner("sequence-aware").map_err(|e| anyhow::anyhow!(e))?)
+        .geometry(geometry)
+        .available_splits(vec![1, 3])
+        .build()?;
+    let cancelled = engine.submit(Request::new(100, vec![1; 200], 500)).unwrap();
+    let deadlined = engine
+        .submit_with(
+            Request::new(101, vec![1; 200], 500),
+            SubmitOptions::default().deadline_us(1_000),
+        )
+        .unwrap();
+    let normal = engine.submit(Request::new(102, vec![1; 200], 32)).unwrap();
+    // A few steps in, the client changes its mind.
+    for _ in 0..10 {
+        engine.step()?;
+    }
+    cancelled.cancel();
+    engine.run_until_idle()?;
+    for (name, h) in [("cancelled", cancelled), ("deadlined", deadlined), ("normal", normal)] {
+        let fin = h.wait().finished().expect("terminal event");
+        println!(
+            "  {name:<10} -> {:?} after {} tokens",
+            fin.reason,
+            fin.tokens.len()
+        );
+    }
+    assert_eq!(engine.block_manager().num_seqs(), 0, "all KV blocks released");
+    println!("  all KV blocks released; admission stats: {:?}", engine.admission_stats());
     Ok(())
 }

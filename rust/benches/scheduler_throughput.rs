@@ -5,11 +5,10 @@
 //!
 //! Run: `cargo bench --bench scheduler_throughput`
 
+use fa3_split::backend::SimBackend;
 use fa3_split::bench_harness::Bencher;
-use fa3_split::coordinator::{
-    BlockManager, BlockManagerConfig, Engine, EngineConfig, Request,
-};
 use fa3_split::coordinator::scheduler::{AttnGeometry, DecodeScheduler};
+use fa3_split::coordinator::{BlockManager, BlockManagerConfig, Engine, Request};
 use fa3_split::heuristics::tiles::DecodeShape;
 use fa3_split::planner::Planner;
 use fa3_split::sim::Simulator;
@@ -49,15 +48,14 @@ fn main() {
     let geometry = AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 };
     let heavy = Bencher { warmup_iters: 1, samples: 15, batch_iters: 1 };
     let r_engine = heavy.run("engine.run           (sim backend, 16 reqs x 32 tok)", || {
-        let mut e = Engine::with_simulator(
-            Simulator::h100(),
-            Planner::sequence_aware(),
-            geometry,
-            vec![1, 3],
-            EngineConfig::default(),
-        );
+        let mut e = Engine::builder(Box::new(SimBackend::h100()))
+            .planner(Planner::sequence_aware())
+            .geometry(geometry)
+            .available_splits(vec![1, 3])
+            .build()
+            .unwrap();
         for i in 0..16u64 {
-            e.submit(Request::new(i, vec![1; 100], 32));
+            e.submit(Request::new(i, vec![1; 100], 32)).unwrap();
         }
         e.run_until_idle().unwrap().len()
     });

@@ -1,38 +1,115 @@
 //! Bench: serving-level A/B on the simulated H100 — the paper's kernel
-//! effect projected through the full coordinator (continuous batching,
-//! prefill, scheduling) under three workload regimes.
+//! effect projected through the full serving stack (admission, continuous
+//! batching, prefill, split scheduling, streaming lifecycle) under four
+//! workload regimes, including an open-loop Poisson soak.
 //!
-//! Run: `cargo bench --bench serving_ab`
+//! Both policies drive the same `ExecutionBackend` API end-to-end: every
+//! request is submitted through `Engine::submit`/`submit_at`, streamed
+//! through its `RequestHandle`, and measured by `coordinator/metrics.rs`
+//! (TTFT/TPOT p50/p99 on the virtual clock).
+//!
+//! Run: `cargo bench --bench serving_ab [-- --json PATH]`
+//! `--json` writes the machine-readable report (the committed
+//! `BENCH_serving_ab.json` is regenerated this way).
 
-use fa3_split::coordinator::scheduler::AttnGeometry;
-use fa3_split::coordinator::{BatcherConfig, Engine, EngineConfig};
+use fa3_split::backend::{AttnGeometry, SimBackend};
+use fa3_split::coordinator::{Engine, RequestHandle, StreamEvent};
+use fa3_split::coordinator::{BatcherConfig, EngineConfig};
 use fa3_split::planner::Planner;
-use fa3_split::sim::Simulator;
+use fa3_split::util::json::Json;
+use fa3_split::util::stats::Summary;
 use fa3_split::util::table::{speedup, us, Align, Table};
 use fa3_split::workload::ChatWorkload;
 
-fn run(planner: Planner, workload: &ChatWorkload, max_batch: usize) -> f64 {
+struct RunResult {
+    ttft: Option<Summary>,
+    tpot: Option<Summary>,
+    throughput_tok_s: f64,
+    finished: usize,
+    streamed_tokens: usize,
+}
+
+fn run(planner: Planner, workload: &ChatWorkload, max_batch: usize, open_loop: bool) -> RunResult {
     let buckets: Vec<usize> = [1usize, 2, 4, 8].into_iter().filter(|&b| b <= max_batch).collect();
-    let mut engine = Engine::with_simulator(
-        Simulator::h100(),
-        planner,
-        AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 },
-        vec![1, 3],
-        EngineConfig {
+    let mut engine = Engine::builder(Box::new(SimBackend::h100()))
+        .planner(planner)
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+        .available_splits(vec![1, 3])
+        .config(EngineConfig {
             batcher: BatcherConfig { max_batch: *buckets.last().unwrap(), batch_buckets: buckets },
             ..Default::default()
-        },
-    );
+        })
+        .build()
+        .unwrap();
+    let mut handles: Vec<RequestHandle> = Vec::new();
     for g in workload.generate() {
-        engine.submit(g.request);
+        let res = if open_loop {
+            engine.submit_at(g.request, g.arrival_offset_us)
+        } else {
+            engine.submit(g.request)
+        };
+        handles.push(res.expect("workload fits the engine"));
     }
-    engine.run_until_idle().unwrap();
-    engine.metrics.tpot().map(|s| s.mean).unwrap_or(0.0)
+    let done = engine.run_until_idle().unwrap();
+    // Streaming consumption: every generated token went out on a handle.
+    let streamed_tokens = handles
+        .iter()
+        .map(|h| {
+            std::iter::from_fn(|| h.try_event())
+                .filter(|ev| matches!(ev, StreamEvent::Token { .. }))
+                .count()
+        })
+        .sum();
+    assert_eq!(streamed_tokens, engine.metrics.tokens_generated, "stream/result skew");
+    RunResult {
+        ttft: engine.metrics.ttft(),
+        tpot: engine.metrics.tpot(),
+        throughput_tok_s: engine.metrics.throughput_tok_s(),
+        finished: done.len(),
+        streamed_tokens,
+    }
+}
+
+fn summary_json(s: &Option<Summary>) -> Json {
+    match s {
+        Some(s) => Json::obj(vec![
+            ("mean_us", Json::num(s.mean)),
+            ("p50_us", Json::num(s.p50)),
+            ("p99_us", Json::num(s.p99)),
+        ]),
+        None => Json::Null,
+    }
+}
+
+fn result_json(name: &str, std: &RunResult, pat: &RunResult) -> Json {
+    let speedup_mean = match (&std.tpot, &pat.tpot) {
+        (Some(a), Some(b)) if b.mean > 0.0 => Json::num(a.mean / b.mean),
+        _ => Json::Null,
+    };
+    Json::obj(vec![
+        ("regime", Json::str(name)),
+        ("standard_ttft", summary_json(&std.ttft)),
+        ("standard_tpot", summary_json(&std.tpot)),
+        ("standard_throughput_tok_s", Json::num(std.throughput_tok_s)),
+        ("sequence_aware_ttft", summary_json(&pat.ttft)),
+        ("sequence_aware_tpot", summary_json(&pat.tpot)),
+        ("sequence_aware_throughput_tok_s", Json::num(pat.throughput_tok_s)),
+        ("tpot_speedup_mean", speedup_mean),
+        ("finished", Json::int(std.finished.min(pat.finished) as i64)),
+        ("streamed_tokens", Json::int((std.streamed_tokens + pat.streamed_tokens) as i64)),
+    ])
 }
 
 fn main() {
-    println!("== Serving-level A/B (simulated H100; attention TPOT per request) ==\n");
-    let regimes = [
+    let json_path = {
+        let args: Vec<String> = std::env::args().collect();
+        args.iter()
+            .position(|a| a == "--json")
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+
+    println!("== Serving-level A/B (simulated H100; streaming lifecycle end-to-end) ==\n");
+    let regimes: Vec<(&str, ChatWorkload, usize, bool)> = vec![
         (
             "paper regime: B=1 chat, prompts ~400",
             ChatWorkload {
@@ -43,7 +120,8 @@ fn main() {
                 seed: 0xAB,
                 ..Default::default()
             },
-            1usize,
+            1,
+            false,
         ),
         (
             "short chat: B=1, prompts ~150",
@@ -55,7 +133,8 @@ fn main() {
                 seed: 0xAC,
                 ..Default::default()
             },
-            1usize,
+            1,
+            false,
         ),
         (
             "batched: up to B=4, prompts ~400",
@@ -67,21 +146,79 @@ fn main() {
                 seed: 0xAD,
                 ..Default::default()
             },
-            4usize,
+            4,
+            false,
+        ),
+        (
+            "open-loop soak: Poisson arrivals, B=1, prompts ~400",
+            ChatWorkload {
+                n_requests: 48,
+                prompt_median: 400,
+                output_mean: 96,
+                output_cap: 96,
+                mean_gap_us: 1_500,
+                seed: 0xAE,
+                ..Default::default()
+            },
+            1,
+            true,
         ),
     ];
 
-    let mut t = Table::new(&["Workload", "Std TPOT (µs)", "Patched TPOT (µs)", "Speedup"])
-        .align(&[Align::Left, Align::Right, Align::Right, Align::Right]);
-    for (name, workload, max_batch) in regimes {
-        let a = run(Planner::standard(), &workload, max_batch);
-        let b = run(Planner::sequence_aware(), &workload, max_batch);
-        t.row(&[name.to_string(), us(a), us(b), speedup(a / b)]);
+    let mut t = Table::new(&[
+        "Workload",
+        "Std TPOT p50",
+        "Pat TPOT p50",
+        "TPOT speedup",
+        "Std TTFT p99",
+        "Pat TTFT p99",
+    ])
+    .align(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let mut rows = Vec::new();
+    for (name, workload, max_batch, open_loop) in &regimes {
+        let a = run(Planner::standard(), workload, *max_batch, *open_loop);
+        let b = run(Planner::sequence_aware(), workload, *max_batch, *open_loop);
+        let (a_tpot, b_tpot) = (
+            a.tpot.as_ref().map(|s| s.p50).unwrap_or(0.0),
+            b.tpot.as_ref().map(|s| s.p50).unwrap_or(0.0),
+        );
+        let mean_ratio = match (&a.tpot, &b.tpot) {
+            (Some(x), Some(y)) if y.mean > 0.0 => x.mean / y.mean,
+            _ => 0.0,
+        };
+        t.row(&[
+            name.to_string(),
+            us(a_tpot),
+            us(b_tpot),
+            speedup(mean_ratio),
+            us(a.ttft.as_ref().map(|s| s.p99).unwrap_or(0.0)),
+            us(b.ttft.as_ref().map(|s| s.p99).unwrap_or(0.0)),
+        ]);
+        rows.push(result_json(name, &a, &b));
     }
     t.print();
     println!(
-        "\nExpected shape: a clear win in the paper regime (requests crossing the\n\
-         L_K=385..512 bucket at B=1), ~1.00x for short chat (guard 1 region) and\n\
-         for batch-4 (tiles >= 4 — saturated boundary, Guard 2)."
+        "\nExpected shape: a clear TPOT win in the paper regime (requests crossing\n\
+         the L_K=385..512 bucket at B=1), ~1.00x for short chat (Guard 1 region)\n\
+         and for batch-4 (tiles >= 4 — saturated boundary, Guard 2); the open-loop\n\
+         soak shows the win surviving queueing + admission on Poisson traffic."
     );
+
+    if let Some(path) = json_path {
+        let report = Json::obj(vec![
+            ("bench", Json::str("serving_ab")),
+            ("generated_by", Json::str("cargo bench --bench serving_ab -- --json <path>")),
+            ("measured", Json::Bool(true)),
+            ("rows", Json::arr(rows)),
+        ]);
+        std::fs::write(&path, report.to_string()).expect("write json report");
+        println!("\nwrote {path}");
+    }
 }

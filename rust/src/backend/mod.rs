@@ -1,0 +1,298 @@
+//! Execution backends: the contract between the serving engine and
+//! whatever actually runs (or models) a decode step.
+//!
+//! Before this module the engine matched on a two-variant `EngineBackend`
+//! enum (`Pjrt` | `Simulated`) at every call site — adding a backend meant
+//! editing the step loop, and nothing could be tested against a fake. The
+//! [`ExecutionBackend`] trait inverts that: the engine builds a
+//! backend-agnostic [`StepBatch`] each step, asks the backend to
+//! [`ExecutionBackend::prepare`] it against the planner's
+//! [`LaunchPlan`], then [`ExecutionBackend::execute`]s the prepared step
+//! and applies the [`StepOutcome`] (tokens, prompt-ingestion progress,
+//! elapsed time) to its own request state. No module outside `backend/`
+//! knows which backend is running.
+//!
+//! Three implementations:
+//!
+//! * [`SimBackend`]    — the calibrated H100 latency model on a virtual
+//!                       clock; synthetic tokens, faithful timing,
+//! * [`PjrtBackend`]   — real execution of the AOT artifacts on the CPU
+//!                       PJRT client; true logits, wall-clock timing,
+//! * [`ReplayBackend`] — records another backend's step outcomes into a
+//!                       [`replay::StepTrace`] and replays them
+//!                       deterministically (tests, soak benches).
+//!
+//! Invariants every backend upholds (see DESIGN.md §Serving engine):
+//!
+//! 1. `prepare` is pure with respect to backend state: it validates the
+//!    batch against [`BackendCaps`] and snaps the plan onto what the
+//!    backend can actually launch, but performs no KV-cache mutation.
+//! 2. `execute` consumes exactly the [`PreparedStep`] it is given and
+//!    reports `elapsed_us` on its own clock domain
+//!    ([`BackendCaps::virtual_clock`] tells the engine which).
+//! 3. Per-slot KV state is dropped on [`ExecutionBackend::release_slot`],
+//!    which the engine calls for every retirement *and* cancellation.
+
+pub mod pjrt;
+pub mod replay;
+pub mod sim;
+
+pub use pjrt::PjrtBackend;
+pub use replay::{ReplayBackend, StepTrace};
+pub use sim::SimBackend;
+
+use anyhow::{bail, Result};
+
+use crate::planner::LaunchPlan;
+
+/// Model attention geometry a serving engine needs. Lives here (not in the
+/// coordinator) because backends that own artifacts derive it themselves
+/// and hand it up through [`BackendTopology`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnGeometry {
+    pub h_q: usize,
+    pub h_kv: usize,
+    pub d: usize,
+    pub max_seq: usize,
+}
+
+/// Capability flags a backend advertises. The engine adapts to these
+/// instead of matching on the backend's type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendCaps {
+    pub name: &'static str,
+    /// Whether the backend can realize the packed-GQA tile layout.
+    pub supports_pack_gqa: bool,
+    /// Whether the backend accepts precomputed scheduler metadata (the
+    /// paper's §5.1 deployment path). All built-ins do; a backend that
+    /// doesn't would fall back to kernel-internal dispatch.
+    pub supports_metadata_path: bool,
+    /// True when `elapsed_us` is modeled (virtual) time the engine should
+    /// integrate into its own clock; false when it is wall time.
+    pub virtual_clock: bool,
+}
+
+/// What a backend knows about its own model/artifacts, if anything. A
+/// backend bound to compiled artifacts (PJRT) derives this from its
+/// manifest so the engine and the artifacts can't skew; model-free
+/// backends (sim) return `None` and the engine's builder must supply the
+/// geometry instead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackendTopology {
+    pub geometry: AttnGeometry,
+    /// Split variants the backend can actually launch (ascending, always
+    /// containing 1). Empty means "any split count".
+    pub available_splits: Vec<usize>,
+    pub vocab: usize,
+}
+
+/// What kind of work a step carries. One step is homogeneous: the batcher
+/// finishes prompt ingestion before a request joins the decode batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    Prefill,
+    Decode,
+}
+
+/// One request row inside a step, described in backend-neutral terms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepRow {
+    /// KV-cache row (assigned at admission, stable for the request's life).
+    pub slot: usize,
+    /// Decode: the token fed to the model this step.
+    pub input_token: i32,
+    /// Decode: cache position the new token is written to (== current KV
+    /// length). Prefill: tokens already ingested (resume point).
+    pub position: usize,
+    /// Current KV length of the row.
+    pub kv_len: usize,
+    /// Prefill rows carry the full prompt; decode rows leave this empty.
+    pub prompt: Vec<i32>,
+}
+
+/// The engine's per-step work description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepBatch {
+    pub kind: StepKind,
+    pub rows: Vec<StepRow>,
+    /// Artifact batch bucket the rows are packed into (>= rows.len()).
+    /// Prefill steps ingest per-request and use the bucket only as a hint.
+    pub bucket: usize,
+}
+
+/// A validated, backend-accepted step: what `prepare` hands to `execute`.
+/// Also the unit the replay backend digests, so it carries everything that
+/// determines the launch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PreparedStep {
+    pub kind: StepKind,
+    pub rows: Vec<StepRow>,
+    pub bucket: usize,
+    /// The planner's launch plan (decode steps on the metadata path).
+    pub plan: Option<LaunchPlan>,
+    /// The plan's split count snapped onto what this backend can launch
+    /// (static artifact grids can't realize arbitrary `s`).
+    pub artifact_splits: usize,
+}
+
+/// What a step produced.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepOutcome {
+    /// `(slot, token)` for every row that emitted a token this step.
+    pub tokens: Vec<(usize, i32)>,
+    /// `(slot, prefilled)` for rows whose prompt-ingestion progressed.
+    pub prefilled: Vec<(usize, usize)>,
+    /// Time the step consumed on the backend's clock domain, µs.
+    pub elapsed_us: f64,
+    /// Model invocations performed for prompt ingestion this step.
+    pub prefill_calls: usize,
+}
+
+/// The execution contract. `Send` because the engine (and therefore its
+/// backend) moves onto a worker thread under `EngineHandle::spawn`.
+pub trait ExecutionBackend: Send {
+    fn caps(&self) -> BackendCaps;
+
+    /// Model facts the backend derives from its own artifacts, if any.
+    fn topology(&self) -> Option<BackendTopology> {
+        None
+    }
+
+    /// Validate `batch` against this backend's capabilities and bind it to
+    /// a launchable configuration, taking ownership (the engine builds one
+    /// batch per step and never reuses it — backends move the rows into
+    /// the `PreparedStep` instead of copying). Decode steps carry the
+    /// planner's `plan`; prefill steps pass `None` (prefill latency is
+    /// policy-invariant).
+    fn prepare(&mut self, batch: StepBatch, plan: Option<&LaunchPlan>) -> Result<PreparedStep>;
+
+    /// Run one prepared step.
+    fn execute(&mut self, step: PreparedStep) -> Result<StepOutcome>;
+
+    /// Drop per-slot KV state (request retired or cancelled).
+    fn release_slot(&mut self, slot: usize) -> Result<()>;
+}
+
+/// Shared `prepare` validation: capability and shape checks every backend
+/// applies before binding a step.
+pub(crate) fn validate_batch(
+    caps: &BackendCaps,
+    batch: &StepBatch,
+    plan: Option<&LaunchPlan>,
+) -> Result<()> {
+    if batch.rows.is_empty() {
+        bail!("backend '{}': empty step batch", caps.name);
+    }
+    if batch.rows.len() > batch.bucket {
+        bail!(
+            "backend '{}': {} rows exceed bucket {}",
+            caps.name,
+            batch.rows.len(),
+            batch.bucket
+        );
+    }
+    match batch.kind {
+        StepKind::Decode => {
+            let Some(plan) = plan else {
+                bail!("backend '{}': decode step without a launch plan", caps.name)
+            };
+            if plan.metadata.pack_gqa && !caps.supports_pack_gqa {
+                bail!("backend '{}' does not support the packed-GQA layout", caps.name);
+            }
+        }
+        StepKind::Prefill => {
+            if plan.is_some() {
+                bail!("backend '{}': prefill steps are plan-free", caps.name);
+            }
+            if batch.rows.iter().any(|r| r.prompt.is_empty()) {
+                bail!("backend '{}': prefill row without a prompt", caps.name);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Snap a requested split count onto the compiled variants: the largest
+/// available split <= requested, falling back to 1 (same constraint as
+/// CUDA-Graph-captured kernels in vLLM). An empty variant list means the
+/// backend can realize any split count.
+pub(crate) fn snap_splits(available: &[usize], requested: usize) -> usize {
+    if available.is_empty() {
+        return requested.max(1);
+    }
+    available.iter().copied().filter(|&s| s <= requested).next_back().unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::Planner;
+
+    fn caps() -> BackendCaps {
+        BackendCaps {
+            name: "test",
+            supports_pack_gqa: true,
+            supports_metadata_path: true,
+            virtual_clock: true,
+        }
+    }
+
+    fn decode_row(slot: usize) -> StepRow {
+        StepRow { slot, input_token: 1, position: 10, kv_len: 10, prompt: Vec::new() }
+    }
+
+    #[test]
+    fn snap_picks_largest_at_or_below() {
+        assert_eq!(snap_splits(&[1, 3], 2), 1);
+        assert_eq!(snap_splits(&[1, 3], 3), 3);
+        assert_eq!(snap_splits(&[1, 3], 8), 3);
+        assert_eq!(snap_splits(&[], 8), 8);
+        assert_eq!(snap_splits(&[], 0), 1);
+    }
+
+    #[test]
+    fn decode_requires_plan() {
+        let batch =
+            StepBatch { kind: StepKind::Decode, rows: vec![decode_row(0)], bucket: 1 };
+        assert!(validate_batch(&caps(), &batch, None).is_err());
+        let plan = Planner::sequence_aware()
+            .plan(&crate::heuristics::tiles::DecodeShape::llama70b_tp8(1, 512));
+        assert!(validate_batch(&caps(), &batch, Some(&plan)).is_ok());
+    }
+
+    #[test]
+    fn pack_gqa_capability_enforced() {
+        let mut c = caps();
+        c.supports_pack_gqa = false;
+        let batch =
+            StepBatch { kind: StepKind::Decode, rows: vec![decode_row(0)], bucket: 1 };
+        // Built-in planners use pack_gqa=true, which this backend refuses.
+        let plan = Planner::standard()
+            .plan(&crate::heuristics::tiles::DecodeShape::llama70b_tp8(1, 512));
+        assert!(validate_batch(&c, &batch, Some(&plan)).is_err());
+    }
+
+    #[test]
+    fn prefill_rows_need_prompts_and_no_plan() {
+        let row = StepRow { slot: 0, input_token: 0, position: 0, kv_len: 0, prompt: vec![1, 2] };
+        let ok = StepBatch { kind: StepKind::Prefill, rows: vec![row.clone()], bucket: 1 };
+        assert!(validate_batch(&caps(), &ok, None).is_ok());
+        let bad = StepBatch { kind: StepKind::Prefill, rows: vec![decode_row(0)], bucket: 1 };
+        assert!(validate_batch(&caps(), &bad, None).is_err());
+        let plan = Planner::standard()
+            .plan(&crate::heuristics::tiles::DecodeShape::llama70b_tp8(1, 512));
+        assert!(validate_batch(&caps(), &ok, Some(&plan)).is_err());
+    }
+
+    #[test]
+    fn bucket_must_cover_rows() {
+        let batch = StepBatch {
+            kind: StepKind::Decode,
+            rows: vec![decode_row(0), decode_row(1)],
+            bucket: 1,
+        };
+        let plan = Planner::standard()
+            .plan(&crate::heuristics::tiles::DecodeShape::llama70b_tp8(1, 512));
+        assert!(validate_batch(&caps(), &batch, Some(&plan)).is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! [`ReplayBackend`]: record another backend's step outcomes and replay
+//! them deterministically.
+//!
+//! Two modes:
+//!
+//! * **Record** — wraps an inner [`ExecutionBackend`], passes every call
+//!   through, and appends a `(digest, outcome)` pair per executed step to
+//!   a shared [`StepTrace`].
+//! * **Replay** — serves recorded outcomes in order. Each `execute`
+//!   digests the incoming [`PreparedStep`] and verifies it matches what
+//!   was recorded; any divergence (different batch composition, split
+//!   decision, or step order) fails loudly instead of silently replaying
+//!   the wrong timing.
+//!
+//! Replay always reports a virtual clock (the recorded `elapsed_us` *is*
+//! the time), so a trace recorded against the wall-clock PJRT backend
+//! replays deterministically — the property the lifecycle test suite and
+//! the serving soak gate are built on: same trace ⇒ identical
+//! `EngineMetrics`.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::planner::LaunchPlan;
+
+use super::{
+    BackendCaps, BackendTopology, ExecutionBackend, PreparedStep, StepBatch, StepKind,
+    StepOutcome,
+};
+
+/// The identity of one prepared step — everything that determines the
+/// launch, cheap to compare.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepDigest {
+    pub kind: StepKind,
+    pub bucket: usize,
+    pub artifact_splits: usize,
+    /// The plan's requested split count (decode steps).
+    pub num_splits: Option<usize>,
+    /// Per row: (slot, input_token, position, kv_len, prompt_len).
+    pub rows: Vec<(usize, i32, usize, usize, usize)>,
+}
+
+impl StepDigest {
+    pub fn of(step: &PreparedStep) -> StepDigest {
+        StepDigest {
+            kind: step.kind,
+            bucket: step.bucket,
+            artifact_splits: step.artifact_splits,
+            num_splits: step.plan.as_ref().map(|p| p.metadata.num_splits),
+            rows: step
+                .rows
+                .iter()
+                .map(|r| (r.slot, r.input_token, r.position, r.kv_len, r.prompt.len()))
+                .collect(),
+        }
+    }
+}
+
+/// One recorded step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepRecord {
+    pub digest: StepDigest,
+    pub outcome: StepOutcome,
+    /// Slots released between this step and the next.
+    pub released: Vec<usize>,
+}
+
+/// A recorded run: the backend's identity plus every executed step.
+#[derive(Debug, Clone, Default)]
+pub struct StepTrace {
+    pub source: Option<&'static str>,
+    pub topology: Option<BackendTopology>,
+    pub records: Vec<StepRecord>,
+}
+
+impl StepTrace {
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+enum Mode {
+    Record { inner: Box<dyn ExecutionBackend>, trace: Arc<Mutex<StepTrace>> },
+    Replay { trace: StepTrace, cursor: usize },
+}
+
+/// Record/replay execution backend.
+pub struct ReplayBackend {
+    mode: Mode,
+}
+
+impl ReplayBackend {
+    /// Wrap `inner`, recording every executed step into the returned
+    /// shared trace handle (lock it after the run to clone the trace out —
+    /// the engine owns the backend box, so the trace must be shared).
+    pub fn recorder(inner: Box<dyn ExecutionBackend>) -> (ReplayBackend, Arc<Mutex<StepTrace>>) {
+        let trace = Arc::new(Mutex::new(StepTrace {
+            source: Some(inner.caps().name),
+            topology: inner.topology(),
+            records: Vec::new(),
+        }));
+        (ReplayBackend { mode: Mode::Record { inner, trace: trace.clone() } }, trace)
+    }
+
+    /// Replay a recorded trace from the start.
+    pub fn replay(trace: StepTrace) -> ReplayBackend {
+        ReplayBackend { mode: Mode::Replay { trace, cursor: 0 } }
+    }
+
+    /// Steps consumed so far (replay mode).
+    pub fn cursor(&self) -> usize {
+        match &self.mode {
+            Mode::Record { trace, .. } => trace.lock().unwrap().records.len(),
+            Mode::Replay { cursor, .. } => *cursor,
+        }
+    }
+}
+
+impl ExecutionBackend for ReplayBackend {
+    fn caps(&self) -> BackendCaps {
+        match &self.mode {
+            // Pass the inner backend's capabilities through so recording
+            // doesn't change engine behavior.
+            Mode::Record { inner, .. } => BackendCaps { name: "replay-rec", ..inner.caps() },
+            // Replay owns time: the recorded elapsed_us is authoritative.
+            Mode::Replay { .. } => BackendCaps {
+                name: "replay",
+                supports_pack_gqa: true,
+                supports_metadata_path: true,
+                virtual_clock: true,
+            },
+        }
+    }
+
+    fn topology(&self) -> Option<BackendTopology> {
+        match &self.mode {
+            Mode::Record { inner, .. } => inner.topology(),
+            Mode::Replay { trace, .. } => trace.topology.clone(),
+        }
+    }
+
+    fn prepare(&mut self, batch: StepBatch, plan: Option<&LaunchPlan>) -> Result<PreparedStep> {
+        let caps = self.caps();
+        match &mut self.mode {
+            Mode::Record { inner, .. } => inner.prepare(batch, plan),
+            Mode::Replay { trace, cursor } => {
+                // Bind the step exactly as recorded so digests line up even
+                // if the replay engine snaps splits differently.
+                super::validate_batch(&caps, &batch, plan)?;
+                let artifact_splits = trace
+                    .records
+                    .get(*cursor)
+                    .map(|r| r.digest.artifact_splits)
+                    .context("replay trace exhausted")?;
+                Ok(PreparedStep {
+                    kind: batch.kind,
+                    rows: batch.rows,
+                    bucket: batch.bucket,
+                    plan: plan.copied(),
+                    artifact_splits,
+                })
+            }
+        }
+    }
+
+    fn execute(&mut self, step: PreparedStep) -> Result<StepOutcome> {
+        match &mut self.mode {
+            Mode::Record { inner, trace } => {
+                let digest = StepDigest::of(&step);
+                let outcome = inner.execute(step)?;
+                trace.lock().unwrap().records.push(StepRecord {
+                    digest,
+                    outcome: outcome.clone(),
+                    released: Vec::new(),
+                });
+                Ok(outcome)
+            }
+            Mode::Replay { trace, cursor } => {
+                let Some(record) = trace.records.get(*cursor) else {
+                    bail!("replay trace exhausted after {} steps", trace.records.len())
+                };
+                let got = StepDigest::of(&step);
+                if got != record.digest {
+                    bail!(
+                        "replay divergence at step {}: recorded {:?}, engine prepared {:?}",
+                        *cursor,
+                        record.digest,
+                        got
+                    );
+                }
+                *cursor += 1;
+                Ok(record.outcome.clone())
+            }
+        }
+    }
+
+    fn release_slot(&mut self, slot: usize) -> Result<()> {
+        match &mut self.mode {
+            Mode::Record { inner, trace } => {
+                inner.release_slot(slot)?;
+                if let Some(last) = trace.lock().unwrap().records.last_mut() {
+                    last.released.push(slot);
+                }
+                Ok(())
+            }
+            Mode::Replay { .. } => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{SimBackend, StepRow};
+    use crate::heuristics::tiles::DecodeShape;
+    use crate::planner::Planner;
+
+    fn decode_batch(position: usize) -> StepBatch {
+        StepBatch {
+            kind: StepKind::Decode,
+            rows: vec![StepRow {
+                slot: 0,
+                input_token: 9,
+                position,
+                kv_len: position,
+                prompt: Vec::new(),
+            }],
+            bucket: 1,
+        }
+    }
+
+    #[test]
+    fn record_then_replay_reproduces_outcomes() {
+        let (mut rec, trace) = ReplayBackend::recorder(Box::new(SimBackend::h100()));
+        let plan = Planner::sequence_aware().plan(&DecodeShape::llama70b_tp8(1, 512));
+        let mut recorded = Vec::new();
+        for pos in [500usize, 501, 502] {
+            let p = rec.prepare(decode_batch(pos), Some(&plan)).unwrap();
+            recorded.push(rec.execute(p).unwrap());
+        }
+        rec.release_slot(0).unwrap();
+        let trace = trace.lock().unwrap().clone();
+        assert_eq!(trace.len(), 3);
+        assert_eq!(trace.records[2].released, vec![0]);
+
+        let mut rep = ReplayBackend::replay(trace);
+        for (i, pos) in [500usize, 501, 502].iter().enumerate() {
+            let p = rep.prepare(decode_batch(*pos), Some(&plan)).unwrap();
+            let out = rep.execute(p).unwrap();
+            assert_eq!(out, recorded[i]);
+        }
+        assert_eq!(rep.cursor(), 3);
+    }
+
+    #[test]
+    fn divergence_is_detected() {
+        let (mut rec, trace) = ReplayBackend::recorder(Box::new(SimBackend::h100()));
+        let plan = Planner::standard().plan(&DecodeShape::llama70b_tp8(1, 512));
+        let p = rec.prepare(decode_batch(100), Some(&plan)).unwrap();
+        rec.execute(p).unwrap();
+        let trace = trace.lock().unwrap().clone();
+
+        let mut rep = ReplayBackend::replay(trace);
+        // Different position => different digest => divergence error.
+        let p = rep.prepare(decode_batch(101), Some(&plan)).unwrap();
+        let err = rep.execute(p).unwrap_err();
+        assert!(format!("{err:#}").contains("divergence"), "{err:#}");
+    }
+
+    #[test]
+    fn exhausted_trace_errors() {
+        let mut rep = ReplayBackend::replay(StepTrace::default());
+        let plan = Planner::standard().plan(&DecodeShape::llama70b_tp8(1, 512));
+        assert!(rep.prepare(decode_batch(1), Some(&plan)).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! [`SimBackend`]: the calibrated H100 latency model behind the
+//! [`ExecutionBackend`] contract.
+//!
+//! No numerics run — tokens are synthetic but deterministic (a pure
+//! function of the cache position, so both policies produce identical
+//! streams and A/B comparisons isolate *timing*). Latency is the
+//! `sim::Simulator` kernel model evaluated on the plan's scheduler
+//! metadata, plus a per-step framework overhead; prompt ingestion uses the
+//! policy-invariant bulk-prefill model ([`Simulator::prefill_us`]). The
+//! engine integrates `elapsed_us` into its virtual clock
+//! ([`BackendCaps::virtual_clock`]).
+
+use anyhow::{Context, Result};
+
+use crate::planner::LaunchPlan;
+use crate::sim::Simulator;
+
+use super::{
+    snap_splits, validate_batch, BackendCaps, ExecutionBackend, PreparedStep, StepBatch,
+    StepKind, StepOutcome,
+};
+
+/// Default per-step framework overhead, µs (sampler, scheduler, the
+/// python-free launch path — small by construction).
+pub const DEFAULT_FRAMEWORK_OVERHEAD_US: f64 = 2.0;
+
+/// Simulated execution: virtual clock, synthetic tokens, faithful timing.
+pub struct SimBackend {
+    sim: Simulator,
+    overhead_us: f64,
+}
+
+impl SimBackend {
+    pub fn new(sim: Simulator) -> SimBackend {
+        SimBackend { sim, overhead_us: DEFAULT_FRAMEWORK_OVERHEAD_US }
+    }
+
+    /// The default H100 SXM5 model.
+    pub fn h100() -> SimBackend {
+        SimBackend::new(Simulator::h100())
+    }
+
+    /// Override the per-step framework overhead.
+    pub fn framework_overhead_us(mut self, us: f64) -> SimBackend {
+        self.overhead_us = us;
+        self
+    }
+
+    /// Deterministic synthetic token for a cache position (shared with the
+    /// replay digest tests).
+    pub fn synthetic_token(position: usize) -> i32 {
+        (position % 1000) as i32
+    }
+}
+
+impl ExecutionBackend for SimBackend {
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            name: "sim",
+            supports_pack_gqa: true,
+            supports_metadata_path: true,
+            virtual_clock: true,
+        }
+    }
+
+    fn prepare(&mut self, batch: StepBatch, plan: Option<&LaunchPlan>) -> Result<PreparedStep> {
+        validate_batch(&self.caps(), &batch, plan)?;
+        // The simulator can price any split count: no artifact grid to
+        // snap onto.
+        let artifact_splits =
+            plan.map(|p| snap_splits(&[], p.metadata.num_splits)).unwrap_or(1);
+        Ok(PreparedStep {
+            kind: batch.kind,
+            rows: batch.rows,
+            bucket: batch.bucket,
+            plan: plan.copied(),
+            artifact_splits,
+        })
+    }
+
+    fn execute(&mut self, step: PreparedStep) -> Result<StepOutcome> {
+        match step.kind {
+            StepKind::Prefill => {
+                // Prefill latency is policy-invariant (the paper's change
+                // is decode-only): one bulk ingest per request.
+                let mut elapsed = 0.0;
+                let mut prefilled = Vec::with_capacity(step.rows.len());
+                for row in &step.rows {
+                    elapsed += self.sim.prefill_us(row.prompt.len());
+                    prefilled.push((row.slot, row.prompt.len()));
+                }
+                Ok(StepOutcome {
+                    tokens: Vec::new(),
+                    prefill_calls: prefilled.len(),
+                    prefilled,
+                    elapsed_us: elapsed,
+                })
+            }
+            StepKind::Decode => {
+                let plan = step.plan.context("decode step lost its plan")?;
+                // One attention launch per layer; 1 layer is the unit
+                // (policy comparisons are ratios, layers scale both sides).
+                let elapsed = self.sim.kernel_us(&plan.metadata) + self.overhead_us;
+                let tokens = step
+                    .rows
+                    .iter()
+                    .map(|r| (r.slot, SimBackend::synthetic_token(r.position)))
+                    .collect();
+                Ok(StepOutcome {
+                    tokens,
+                    prefilled: Vec::new(),
+                    elapsed_us: elapsed,
+                    prefill_calls: 0,
+                })
+            }
+        }
+    }
+
+    fn release_slot(&mut self, _slot: usize) -> Result<()> {
+        Ok(()) // no per-slot state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::heuristics::tiles::DecodeShape;
+    use crate::planner::Planner;
+    use crate::backend::StepRow;
+
+    fn decode_batch(n: usize, position: usize) -> StepBatch {
+        StepBatch {
+            kind: StepKind::Decode,
+            rows: (0..n)
+                .map(|slot| StepRow {
+                    slot,
+                    input_token: 5,
+                    position,
+                    kv_len: position,
+                    prompt: Vec::new(),
+                })
+                .collect(),
+            bucket: n,
+        }
+    }
+
+    #[test]
+    fn decode_prices_the_plan_and_emits_synthetic_tokens() {
+        let mut b = SimBackend::h100();
+        let plan = Planner::sequence_aware().plan(&DecodeShape::llama70b_tp8(1, 512));
+        let batch = decode_batch(2, 511);
+        let prepared = b.prepare(batch, Some(&plan)).unwrap();
+        assert_eq!(prepared.artifact_splits, plan.metadata.num_splits);
+        let out = b.execute(prepared).unwrap();
+        assert_eq!(out.tokens, vec![(0, 511), (1, 511)]);
+        assert!(out.elapsed_us > DEFAULT_FRAMEWORK_OVERHEAD_US);
+        assert!(out.prefilled.is_empty());
+    }
+
+    #[test]
+    fn split_choice_moves_time_not_tokens() {
+        let mut b = SimBackend::h100();
+        let shape = DecodeShape::llama70b_tp8(1, 512);
+        let run = |b: &mut SimBackend, plan: &crate::planner::LaunchPlan| {
+            let prepared = b.prepare(decode_batch(1, 511), Some(plan)).unwrap();
+            b.execute(prepared).unwrap()
+        };
+        let std_out = run(&mut b, &Planner::standard().plan(&shape));
+        let pat_out = run(&mut b, &Planner::sequence_aware().plan(&shape));
+        assert_eq!(std_out.tokens, pat_out.tokens);
+        assert!(std_out.elapsed_us > pat_out.elapsed_us, "patched should be faster here");
+    }
+
+    #[test]
+    fn prefill_is_bulk_per_request() {
+        let mut b = SimBackend::h100();
+        let batch = StepBatch {
+            kind: StepKind::Prefill,
+            rows: vec![
+                StepRow { slot: 0, input_token: 0, position: 0, kv_len: 0, prompt: vec![1; 100] },
+                StepRow { slot: 3, input_token: 0, position: 0, kv_len: 0, prompt: vec![2; 50] },
+            ],
+            bucket: 4,
+        };
+        let prepared = b.prepare(batch, None).unwrap();
+        let out = b.execute(prepared).unwrap();
+        assert_eq!(out.prefilled, vec![(0, 100), (3, 50)]);
+        assert_eq!(out.prefill_calls, 2);
+        assert!(out.tokens.is_empty());
+        assert!(out.elapsed_us > 100.0); // two bulk ingests' base cost
+    }
+}

@@ -1,0 +1,372 @@
+//! Admission control: bounded priority queues in front of the running set.
+//!
+//! Semantics (DESIGN.md §Serving engine):
+//!
+//! * **Bounded queues** — each priority class holds at most
+//!   [`AdmissionConfig::queue_capacity`] waiting requests; a full queue
+//!   rejects the submission with an explicit [`Backpressure`] outcome
+//!   instead of queueing unboundedly (shed load at the front door, not by
+//!   OOM).
+//! * **Strict priority, FIFO within a class** — classes drain in
+//!   [`Priority`] order; inside a class, admission order equals submission
+//!   order. A class head that doesn't fit the KV-block budget blocks all
+//!   lower classes too (head-of-line blocking is the no-starvation
+//!   trade: a cheap Batch request must not leapfrog a starved
+//!   Interactive one).
+//! * **Worst-case KV reservation** — a request is admitted only when
+//!   `prompt + max_new_tokens` fits the block budget *now*
+//!   ([`BlockManager::can_admit`]); requests that could never fit
+//!   ([`BlockManager::can_ever_admit`]) are rejected at submission with
+//!   [`SubmitError::Unschedulable`] rather than wedging the queue head
+//!   forever.
+//! * **Cancellation while queued** — cancelled/deadline-expired waiters
+//!   are reaped before each admission pass; they hold no blocks, so
+//!   reaping is pure queue surgery.
+
+use std::collections::VecDeque;
+
+use super::batcher::Batcher;
+use super::kv_cache::BlockManager;
+use super::lifecycle::{CancelKind, Priority, TrackedRequest, PRIORITY_CLASSES};
+use super::request::{RequestId, RunningRequest};
+
+/// Admission configuration.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Waiting-queue capacity per priority class.
+    pub queue_capacity: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { queue_capacity: 1024 }
+    }
+}
+
+/// The explicit rejection outcome of a bounded queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Backpressure {
+    pub priority: Priority,
+    /// Waiting requests in that class when the submission arrived.
+    pub queue_depth: usize,
+    pub capacity: usize,
+}
+
+impl std::fmt::Display for Backpressure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "backpressure: '{}' queue full ({}/{})",
+            self.priority.name(),
+            self.queue_depth,
+            self.capacity
+        )
+    }
+}
+
+/// Why a submission was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The class queue is full — retry later or shed.
+    Backpressure(Backpressure),
+    /// The request can never fit this engine's KV budget.
+    Unschedulable { required_tokens: usize, max_seq: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Backpressure(bp) => write!(f, "{bp}"),
+            SubmitError::Unschedulable { required_tokens, max_seq } => write!(
+                f,
+                "unschedulable: {required_tokens} tokens can never fit (max_seq {max_seq})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Admission counters (surfaced through `EngineMetrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionStats {
+    pub rejected_backpressure: usize,
+    pub rejected_unschedulable: usize,
+    pub cancelled_while_queued: usize,
+    pub admitted: usize,
+}
+
+/// The admission controller: bounded waiting queues, one per class.
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    queues: [VecDeque<TrackedRequest>; PRIORITY_CLASSES],
+    pub stats: AdmissionStats,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionController {
+        assert!(cfg.queue_capacity > 0, "queue capacity must be positive");
+        AdmissionController {
+            cfg,
+            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            stats: AdmissionStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn waiting_in(&self, priority: Priority) -> usize {
+        self.queues[priority.index()].len()
+    }
+
+    /// The shared never-fits check (used by `offer` and by the engine's
+    /// open-loop `submit_at` path, so the stats stay the single source of
+    /// truth for rejections).
+    pub fn check_schedulable(
+        &mut self,
+        prompt_len: usize,
+        max_new: usize,
+        blocks: &BlockManager,
+    ) -> Result<(), SubmitError> {
+        if !blocks.can_ever_admit(prompt_len, max_new) {
+            self.stats.rejected_unschedulable += 1;
+            return Err(SubmitError::Unschedulable {
+                required_tokens: prompt_len + max_new,
+                max_seq: blocks.config().max_seq,
+            });
+        }
+        Ok(())
+    }
+
+    /// Enqueue a submission, or refuse it. Refused requests are returned
+    /// to the caller inside the error path untouched — the engine emits
+    /// the rejection on the request's stream.
+    pub fn offer(
+        &mut self,
+        tracked: TrackedRequest,
+        blocks: &BlockManager,
+    ) -> Result<(), (TrackedRequest, SubmitError)> {
+        if let Err(err) =
+            self.check_schedulable(tracked.req.prompt.len(), tracked.req.max_new_tokens, blocks)
+        {
+            return Err((tracked, err));
+        }
+        let q = &mut self.queues[tracked.priority().index()];
+        if q.len() >= self.cfg.queue_capacity {
+            self.stats.rejected_backpressure += 1;
+            let bp = Backpressure {
+                priority: tracked.priority(),
+                queue_depth: q.len(),
+                capacity: self.cfg.queue_capacity,
+            };
+            return Err((tracked, SubmitError::Backpressure(bp)));
+        }
+        q.push_back(tracked);
+        Ok(())
+    }
+
+    /// Remove queued requests that were cancelled or whose deadline passed
+    /// (stamping the deadline cause). They hold no blocks; the engine
+    /// finishes their streams. Runs every engine step, so the common
+    /// nothing-to-reap case is a scan with no moves or allocation.
+    pub fn reap_cancelled(&mut self, now_us: u64) -> Vec<TrackedRequest> {
+        let needs_reap = self.queues.iter().flatten().any(|t| {
+            t.ticket.past_deadline(now_us) || t.ticket.cancel.is_cancelled()
+        });
+        if !needs_reap {
+            return Vec::new();
+        }
+        let mut reaped = Vec::new();
+        for q in &mut self.queues {
+            let mut keep = VecDeque::with_capacity(q.len());
+            while let Some(t) = q.pop_front() {
+                if t.ticket.past_deadline(now_us) {
+                    t.ticket.cancel.cancel(CancelKind::Deadline);
+                }
+                if t.ticket.cancel.is_cancelled() {
+                    self.stats.cancelled_while_queued += 1;
+                    reaped.push(t);
+                } else {
+                    keep.push_back(t);
+                }
+            }
+            *q = keep;
+        }
+        reaped
+    }
+
+    /// Admit waiting requests into free batcher slots while the block
+    /// manager accepts them. Strict priority across classes, FIFO within;
+    /// the first head that doesn't fit stops the whole pass.
+    pub fn admit(
+        &mut self,
+        batcher: &mut Batcher,
+        blocks: &mut BlockManager,
+        now_us: u64,
+    ) -> Vec<RequestId> {
+        let mut admitted = Vec::new();
+        'classes: for priority in Priority::all() {
+            let q = &mut self.queues[priority.index()];
+            while let Some(front) = q.front() {
+                let Some(slot) = batcher.free_slot() else { break 'classes };
+                if !blocks.can_admit(front.req.prompt.len(), front.req.max_new_tokens) {
+                    // Head-of-line: a blocked head blocks lower classes too.
+                    break 'classes;
+                }
+                let t = q.pop_front().unwrap();
+                blocks
+                    .admit(t.req.id, t.req.prompt.len(), t.req.max_new_tokens)
+                    .expect("can_admit checked");
+                admitted.push(t.req.id);
+                self.stats.admitted += 1;
+                batcher.install(RunningRequest::new(t.req, t.ticket, slot, now_us));
+            }
+        }
+        admitted
+    }
+
+    /// Cancel a queued request by id (running requests are the engine's
+    /// responsibility). Returns whether it was found waiting.
+    pub fn cancel(&mut self, id: RequestId, kind: CancelKind) -> bool {
+        for q in &self.queues {
+            if let Some(t) = q.iter().find(|t| t.req.id == id) {
+                t.ticket.cancel.cancel(kind);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Mark every waiting request cancelled (engine shutdown).
+    pub fn cancel_all(&mut self, kind: CancelKind) {
+        for q in &self.queues {
+            for t in q {
+                t.ticket.cancel.cancel(kind);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::kv_cache::BlockManagerConfig;
+    use crate::coordinator::lifecycle::{handle_pair, SubmitOptions};
+    use crate::coordinator::request::Request;
+
+    fn tracked(id: u64, prompt_len: usize, max_new: usize, opts: SubmitOptions) -> TrackedRequest {
+        let (_handle, ticket) = handle_pair(id, &opts);
+        TrackedRequest { req: Request::new(id, vec![1; prompt_len], max_new), ticket }
+    }
+
+    fn setup(max_batch: usize, num_blocks: usize) -> (AdmissionController, Batcher, BlockManager) {
+        let buckets: Vec<usize> = [1, 2, 4, 8].into_iter().filter(|&b| b <= max_batch).collect();
+        (
+            AdmissionController::new(AdmissionConfig { queue_capacity: 4 }),
+            Batcher::new(BatcherConfig { max_batch, batch_buckets: buckets }),
+            BlockManager::new(BlockManagerConfig { block_size: 16, num_blocks, max_seq: 1024 }),
+        )
+    }
+
+    #[test]
+    fn fifo_admission_respects_batch_and_blocks() {
+        let (mut adm, mut b, mut m) = setup(2, 8); // 128-token budget
+        for id in 1..=3 {
+            adm.offer(tracked(id, 32, 16, SubmitOptions::default()), &m).unwrap(); // 3 blocks each
+        }
+        let admitted = adm.admit(&mut b, &mut m, 0);
+        assert_eq!(admitted, vec![1, 2]); // #3 blocked: 8 - 6 = 2 < 3 blocks
+        assert_eq!(b.running_len(), 2);
+        assert_eq!(adm.waiting_len(), 1);
+        // Slot freed => next admit picks up request 3.
+        let r = b.take(0).unwrap();
+        m.release(r.req.id).unwrap();
+        assert_eq!(adm.admit(&mut b, &mut m, 1), vec![3]);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_with_backpressure() {
+        let (mut adm, _b, m) = setup(2, 1024);
+        for id in 0..4 {
+            adm.offer(tracked(id, 8, 8, SubmitOptions::default()), &m).unwrap();
+        }
+        let (_t, err) = adm.offer(tracked(9, 8, 8, SubmitOptions::default()), &m).unwrap_err();
+        match err {
+            SubmitError::Backpressure(bp) => {
+                assert_eq!(bp.queue_depth, 4);
+                assert_eq!(bp.capacity, 4);
+                assert_eq!(bp.priority, Priority::Standard);
+            }
+            other => panic!("expected backpressure, got {other:?}"),
+        }
+        // Other classes are unaffected by a full Standard queue.
+        adm.offer(tracked(10, 8, 8, SubmitOptions::default().priority(Priority::Batch)), &m)
+            .unwrap();
+        assert_eq!(adm.stats.rejected_backpressure, 1);
+    }
+
+    #[test]
+    fn unschedulable_rejected_at_offer() {
+        let (mut adm, _b, m) = setup(2, 1024); // max_seq 1024
+        let (_t, err) = adm.offer(tracked(1, 1000, 500, SubmitOptions::default()), &m).unwrap_err();
+        assert!(matches!(err, SubmitError::Unschedulable { required_tokens: 1500, .. }));
+        assert_eq!(adm.waiting_len(), 0);
+    }
+
+    #[test]
+    fn strict_priority_across_classes_fifo_within() {
+        let (mut adm, mut b, mut m) = setup(8, 1024);
+        adm.offer(tracked(1, 8, 8, SubmitOptions::default().priority(Priority::Batch)), &m)
+            .unwrap();
+        adm.offer(tracked(2, 8, 8, SubmitOptions::default()), &m).unwrap();
+        adm.offer(tracked(3, 8, 8, SubmitOptions::default().priority(Priority::Interactive)), &m)
+            .unwrap();
+        adm.offer(tracked(4, 8, 8, SubmitOptions::default().priority(Priority::Interactive)), &m)
+            .unwrap();
+        let admitted = adm.admit(&mut b, &mut m, 0);
+        assert_eq!(admitted, vec![3, 4, 2, 1]);
+    }
+
+    #[test]
+    fn blocked_head_blocks_lower_classes_too() {
+        let (mut adm, mut b, mut m) = setup(4, 4); // tiny: 64 tokens
+        adm.offer(tracked(1, 60, 4, SubmitOptions::default()), &m).unwrap(); // 4 blocks — fits alone
+        adm.offer(tracked(2, 8, 8, SubmitOptions::default().priority(Priority::Batch)), &m)
+            .unwrap(); // 1 block — would fit, but must NOT leapfrog
+        assert_eq!(adm.admit(&mut b, &mut m, 0), vec![1]);
+        assert_eq!(adm.admit(&mut b, &mut m, 0), Vec::<u64>::new());
+        assert_eq!(adm.waiting_len(), 1);
+    }
+
+    #[test]
+    fn reap_removes_cancelled_and_expired_waiters() {
+        let (mut adm, _b, m) = setup(2, 1024);
+        let t1 = tracked(1, 8, 8, SubmitOptions::default());
+        t1.ticket.cancel.cancel(CancelKind::User);
+        adm.offer(t1, &m).unwrap();
+        adm.offer(tracked(2, 8, 8, SubmitOptions::default().deadline_us(100)), &m).unwrap();
+        adm.offer(tracked(3, 8, 8, SubmitOptions::default()), &m).unwrap();
+        let reaped = adm.reap_cancelled(150);
+        let ids: Vec<u64> = reaped.iter().map(|t| t.req.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(reaped[1].ticket.cancel.get(), Some(CancelKind::Deadline));
+        assert_eq!(adm.waiting_len(), 1);
+        assert_eq!(adm.stats.cancelled_while_queued, 2);
+    }
+
+    #[test]
+    fn cancel_by_id_marks_waiting_request() {
+        let (mut adm, _b, m) = setup(2, 1024);
+        adm.offer(tracked(5, 8, 8, SubmitOptions::default()), &m).unwrap();
+        assert!(adm.cancel(5, CancelKind::User));
+        assert!(!adm.cancel(99, CancelKind::User));
+        assert_eq!(adm.reap_cancelled(0).len(), 1);
+    }
+}

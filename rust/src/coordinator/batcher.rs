@@ -1,11 +1,14 @@
-//! Continuous batcher: FCFS admission into a bounded running set, with
-//! per-step plans that pack the running set into the artifact batch
-//! buckets (static-shape routing).
+//! Continuous batcher: the bounded running set and its per-step plans.
+//!
+//! Since the admission redesign the batcher no longer owns a waiting
+//! queue — [`super::admission::AdmissionController`] holds the bounded
+//! priority queues and calls [`Batcher::install`] when a request clears
+//! the KV-budget check. The batcher's job is slots and step shape: which
+//! rows still need prompt ingestion, which rows decode this step, and
+//! which artifact batch bucket the decode call packs into (static-shape
+//! routing).
 
-use std::collections::VecDeque;
-
-use super::kv_cache::BlockManager;
-use super::request::{Request, RequestId, RunningRequest};
+use super::request::{RequestId, RunningRequest};
 
 /// Batcher configuration.
 #[derive(Debug, Clone)]
@@ -33,10 +36,9 @@ pub struct StepPlan {
     pub decode_bucket: Option<usize>,
 }
 
-/// The continuous batcher. Owns the waiting queue and running set.
+/// The running set. Owns the slots; admission owns the queue.
 pub struct Batcher {
     cfg: BatcherConfig,
-    waiting: VecDeque<Request>,
     running: Vec<Option<RunningRequest>>, // indexed by slot
 }
 
@@ -46,48 +48,40 @@ impl Batcher {
         assert!(cfg.batch_buckets.windows(2).all(|w| w[0] < w[1]), "buckets must ascend");
         assert_eq!(*cfg.batch_buckets.last().unwrap(), cfg.max_batch);
         let running = (0..cfg.max_batch).map(|_| None).collect();
-        Batcher { cfg, waiting: VecDeque::new(), running }
+        Batcher { cfg, running }
     }
 
-    pub fn submit(&mut self, req: Request) {
-        self.waiting.push_back(req);
-    }
-
-    pub fn waiting_len(&self) -> usize {
-        self.waiting.len()
+    pub fn max_batch(&self) -> usize {
+        self.cfg.max_batch
     }
 
     pub fn running_len(&self) -> usize {
         self.running.iter().filter(|r| r.is_some()).count()
     }
 
-    pub fn is_idle(&self) -> bool {
-        self.waiting.is_empty() && self.running_len() == 0
+    pub fn is_empty(&self) -> bool {
+        self.running_len() == 0
     }
 
-    /// Admit waiting requests into free slots while the block manager
-    /// accepts them (FCFS — head-of-line blocking is intentional, matching
-    /// vLLM's default scheduler).
-    pub fn admit(&mut self, blocks: &mut BlockManager, now_us: u64) -> Vec<RequestId> {
-        let mut admitted = Vec::new();
-        while self.running_len() < self.cfg.max_batch {
-            let Some(front) = self.waiting.front() else { break };
-            if !blocks.can_admit(front.prompt.len(), front.max_new_tokens) {
-                break;
-            }
-            let req = self.waiting.pop_front().unwrap();
-            blocks
-                .admit(req.id, req.prompt.len(), req.max_new_tokens)
-                .expect("can_admit checked");
-            let slot = self
-                .running
-                .iter()
-                .position(|r| r.is_none())
-                .expect("running_len < max_batch implies a free slot");
-            admitted.push(req.id);
-            self.running[slot] = Some(RunningRequest::new(req, slot, now_us));
-        }
-        admitted
+    /// Lowest free slot, if any.
+    pub fn free_slot(&self) -> Option<usize> {
+        self.running.iter().position(|r| r.is_none())
+    }
+
+    /// Install an admitted request into its (pre-assigned) slot.
+    pub(crate) fn install(&mut self, r: RunningRequest) {
+        assert!(self.running[r.slot].is_none(), "slot {} already occupied", r.slot);
+        let slot = r.slot;
+        self.running[slot] = Some(r);
+    }
+
+    /// Occupied slots, ascending (cancellation sweeps).
+    pub(crate) fn occupied_slots(&self) -> Vec<usize> {
+        self.running
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.as_ref().map(|_| i))
+            .collect()
     }
 
     /// Build the step plan: prefill-first (prompt ingestion finishes before
@@ -127,69 +121,58 @@ impl Batcher {
         self.running.get_mut(slot).and_then(|r| r.take())
     }
 
-    /// Drain every request (engine shutdown).
-    pub(crate) fn drain(&mut self) -> (Vec<Request>, Vec<RunningRequest>) {
-        let waiting = self.waiting.drain(..).collect();
-        let running = self.running.iter_mut().filter_map(|r| r.take()).collect();
-        (waiting, running)
+    /// Slot of a running request by id.
+    pub(crate) fn slot_of(&self, id: RequestId) -> Option<usize> {
+        self.running
+            .iter()
+            .flatten()
+            .find(|r| r.req.id == id)
+            .map(|r| r.slot)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::kv_cache::BlockManagerConfig;
+    use crate::coordinator::lifecycle::{SubmitOptions, Ticket};
+    use crate::coordinator::request::Request;
 
-    fn setup(max_batch: usize, num_blocks: usize) -> (Batcher, BlockManager) {
+    fn batcher(max_batch: usize) -> Batcher {
         let buckets: Vec<usize> = [1, 2, 4, 8].into_iter().filter(|&b| b <= max_batch).collect();
-        let b = Batcher::new(BatcherConfig { max_batch, batch_buckets: buckets });
-        let m = BlockManager::new(BlockManagerConfig {
-            block_size: 16,
-            num_blocks,
-            max_seq: 1024,
-        });
-        (b, m)
+        Batcher::new(BatcherConfig { max_batch, batch_buckets: buckets })
     }
 
-    fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
-        Request::new(id, vec![1; prompt_len], max_new)
+    fn install(b: &mut Batcher, id: u64, prompt_len: usize, max_new: usize) -> usize {
+        let slot = b.free_slot().expect("free slot");
+        b.install(RunningRequest::new(
+            Request::new(id, vec![1; prompt_len], max_new),
+            Ticket::detached(&SubmitOptions::default()),
+            slot,
+            0,
+        ));
+        slot
     }
 
     #[test]
-    fn fcfs_admission_respects_batch_and_blocks() {
-        let (mut b, mut m) = setup(2, 8); // 128-token budget
-        b.submit(req(1, 32, 16)); // 3 blocks
-        b.submit(req(2, 32, 16)); // 3 blocks
-        b.submit(req(3, 32, 16)); // would fit blocks (2 left? 8-6=2 < 3) -> no
-        let admitted = b.admit(&mut m, 0);
-        assert_eq!(admitted, vec![1, 2]);
+    fn slots_fill_lowest_first_and_recycle() {
+        let mut b = batcher(2);
+        assert_eq!(install(&mut b, 1, 4, 4), 0);
+        assert_eq!(install(&mut b, 2, 4, 4), 1);
+        assert_eq!(b.free_slot(), None);
         assert_eq!(b.running_len(), 2);
-        assert_eq!(b.waiting_len(), 1);
-        // Slot freed => next admit picks up request 3.
         let r = b.take(0).unwrap();
-        m.release(r.req.id).unwrap();
-        let admitted = b.admit(&mut m, 1);
-        assert_eq!(admitted, vec![3]);
-    }
-
-    #[test]
-    fn head_of_line_blocking_is_fcfs() {
-        let (mut b, mut m) = setup(4, 4); // tiny: 64 tokens
-        b.submit(req(1, 60, 4)); // 4 blocks — fits alone
-        b.submit(req(2, 8, 8));  // 1 block — would fit, but behind #1
-        let admitted = b.admit(&mut m, 0);
-        assert_eq!(admitted, vec![1]);
-        // #2 must NOT leapfrog even though it fits.
-        assert_eq!(b.admit(&mut m, 0), Vec::<u64>::new());
-        assert_eq!(b.waiting_len(), 1);
+        assert_eq!(r.req.id, 1);
+        assert_eq!(b.free_slot(), Some(0));
+        assert_eq!(install(&mut b, 3, 4, 4), 0);
+        assert_eq!(b.slot_of(3), Some(0));
+        assert_eq!(b.slot_of(1), None);
     }
 
     #[test]
     fn plan_separates_prefill_and_decode() {
-        let (mut b, mut m) = setup(4, 64);
-        b.submit(req(1, 4, 4));
-        b.submit(req(2, 4, 4));
-        b.admit(&mut m, 0);
+        let mut b = batcher(4);
+        install(&mut b, 1, 4, 4);
+        install(&mut b, 2, 4, 4);
         // Initially both need prefill.
         let p = b.plan();
         assert_eq!(p.prefill_slots.len(), 2);
@@ -205,11 +188,10 @@ mod tests {
 
     #[test]
     fn decode_bucket_is_smallest_fit() {
-        let (mut b, mut m) = setup(4, 64);
+        let mut b = batcher(4);
         for id in 1..=3 {
-            b.submit(req(id, 2, 4));
+            install(&mut b, id, 2, 4);
         }
-        b.admit(&mut m, 0);
         for slot in 0..3 {
             b.running_mut(slot).unwrap().prefilled = 2;
         }
@@ -219,15 +201,33 @@ mod tests {
     }
 
     #[test]
-    fn drain_empties_everything() {
-        let (mut b, mut m) = setup(2, 64);
-        b.submit(req(1, 2, 2));
-        b.submit(req(2, 2, 2));
-        b.submit(req(3, 2, 2));
-        b.admit(&mut m, 0);
-        let (waiting, running) = b.drain();
-        assert_eq!(waiting.len(), 1);
-        assert_eq!(running.len(), 2);
-        assert!(b.is_idle());
+    fn occupied_slots_track_the_running_set() {
+        let mut b = batcher(4);
+        install(&mut b, 1, 2, 2);
+        install(&mut b, 2, 2, 2);
+        install(&mut b, 3, 2, 2);
+        b.take(1);
+        assert_eq!(b.occupied_slots(), vec![0, 2]);
+        assert!(!b.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_install_in_one_slot_panics() {
+        let mut b = batcher(2);
+        let r1 = RunningRequest::new(
+            Request::new(1, vec![1; 2], 2),
+            Ticket::detached(&SubmitOptions::default()),
+            0,
+            0,
+        );
+        let r2 = RunningRequest::new(
+            Request::new(2, vec![1; 2], 2),
+            Ticket::detached(&SubmitOptions::default()),
+            0,
+            0,
+        );
+        b.install(r1);
+        b.install(r2);
     }
 }

@@ -1,233 +1,150 @@
-//! The serving engine: continuous-batching decode loop over a backend.
+//! The serving engine: a continuous-batching step loop over any
+//! [`ExecutionBackend`].
 //!
-//! Two backends share the same scheduler/batcher/cache machinery:
+//! The engine owns the *request* side of serving — admission
+//! ([`super::admission`]), lifecycle ([`super::lifecycle`]), slot
+//! management ([`super::batcher`]), KV budgeting ([`super::kv_cache`]),
+//! split planning ([`super::scheduler`]), and metrics — and delegates the
+//! *execution* side entirely to the backend behind the trait. The per-step
+//! flow is the vLLM shape:
 //!
-//! * **Pjrt** — real execution of the AOT artifacts on the CPU PJRT
-//!   client: true logits, true KV caches, wall-clock timing. This is the
-//!   end-to-end path (examples/serve_decode.rs).
-//! * **Simulated** — the H100 latency model with a virtual clock: no
-//!   numerics, but faithful *timing* under each split policy. This is how
-//!   serving-level results are projected onto the paper's hardware
-//!   (DESIGN.md §Substitutions), and it's what the A/B serving bench uses.
+//! ```text
+//! ingest arrivals → reap cancellations/deadlines → admit →
+//!   prefill one batch | decode one batch (planner metadata) →
+//!   stream tokens → retire
+//! ```
 //!
-//! Either way the per-step flow is the vLLM shape: admit → prefill →
-//! decode(batch bucket, split metadata) → sample → retire.
+//! Engines are built only through [`EngineBuilder`]
+//! (`Engine::builder(Box<dyn ExecutionBackend>)`); nothing here knows sim
+//! from PJRT — backend differences are capability flags
+//! ([`crate::backend::BackendCaps`]), most importantly `virtual_clock`,
+//! which selects between integrating the backend's modeled time and
+//! reading the wall clock.
 
 use std::sync::mpsc;
-use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
+use crate::backend::{AttnGeometry, BackendCaps, ExecutionBackend, StepBatch, StepKind, StepOutcome, StepRow};
 use crate::planner::Planner;
-use crate::runtime::{HostTensor, Registry};
-use crate::sim::Simulator;
 
+use super::admission::{AdmissionConfig, AdmissionController, AdmissionStats, SubmitError};
 use super::batcher::{Batcher, BatcherConfig};
 use super::kv_cache::{BlockManager, BlockManagerConfig};
+use super::lifecycle::{
+    handle_pair, CancelKind, RequestHandle, StreamEvent, SubmitOptions, TrackedRequest,
+};
 use super::metrics::{EngineMetrics, RequestTiming};
-use super::request::{FinishReason, FinishedRequest, Request, RunningRequest};
-use super::scheduler::{scheduler_from_manifest, AttnGeometry, DecodeScheduler};
-
-/// Execution backend.
-pub enum EngineBackend {
-    /// Real PJRT execution of the AOT artifacts.
-    Pjrt(Arc<Registry>),
-    /// H100 latency simulation (virtual clock, synthetic tokens).
-    Simulated(Simulator),
-}
+use super::request::{FinishReason, FinishedRequest, Request, RequestId};
+use super::scheduler::DecodeScheduler;
 
 /// Engine configuration.
+#[derive(Debug, Clone, Default)]
 pub struct EngineConfig {
     pub batcher: BatcherConfig,
     pub blocks: BlockManagerConfig,
-    /// Per-step framework overhead added in simulated mode, µs (sampler,
-    /// scheduler, python-free launch path — small by construction).
-    pub sim_framework_overhead_us: f64,
+    pub admission: AdmissionConfig,
 }
 
-impl Default for EngineConfig {
-    fn default() -> Self {
-        EngineConfig {
-            batcher: BatcherConfig::default(),
-            blocks: BlockManagerConfig::default(),
-            sim_framework_overhead_us: 2.0,
-        }
-    }
+/// Builder: the only way to construct an [`Engine`]. The backend is
+/// mandatory; geometry and split variants come from the backend's
+/// topology when it has one (PJRT derives them from its manifest) and
+/// must be supplied explicitly otherwise (sim).
+pub struct EngineBuilder {
+    backend: Box<dyn ExecutionBackend>,
+    planner: Option<Planner>,
+    geometry: Option<AttnGeometry>,
+    available_splits: Option<Vec<usize>>,
+    cfg: EngineConfig,
 }
 
-/// Dense KV cache pair sized for the largest batch bucket.
-struct CacheStore {
-    n_layers: usize,
-    max_batch: usize,
-    max_seq: usize,
-    h_kv: usize,
-    d: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
-}
-
-impl CacheStore {
-    fn new(n_layers: usize, max_batch: usize, max_seq: usize, h_kv: usize, d: usize) -> CacheStore {
-        let n = n_layers * max_batch * max_seq * h_kv * d;
-        CacheStore { n_layers, max_batch, max_seq, h_kv, d, k: vec![0.0; n], v: vec![0.0; n] }
+impl EngineBuilder {
+    pub fn planner(mut self, planner: Planner) -> EngineBuilder {
+        self.planner = Some(planner);
+        self
     }
 
-    fn row_elems(&self) -> usize {
-        self.max_seq * self.h_kv * self.d
+    /// Attention geometry (required unless the backend's topology has it).
+    pub fn geometry(mut self, geometry: AttnGeometry) -> EngineBuilder {
+        self.geometry = Some(geometry);
+        self
     }
 
-    fn layer_stride(&self) -> usize {
-        self.max_batch * self.row_elems()
+    /// Split variants the scheduler may request (must contain 1).
+    /// Overrides the backend topology's variants.
+    pub fn available_splits(mut self, splits: Vec<usize>) -> EngineBuilder {
+        self.available_splits = Some(splits);
+        self
     }
 
-    /// True when `slots` are exactly rows 0..len in order AND the bucket
-    /// width matches the store: gather/scatter degenerate to one straight
-    /// memcpy of the whole store (§Perf opt-2 — the steady-state case for
-    /// a full batch, which is when the copies are largest).
-    fn contiguous_full(&self, slots: &[usize], bucket: usize) -> bool {
-        bucket == self.max_batch && slots.len() == bucket
-            && slots.iter().enumerate().all(|(i, &s)| i == s)
+    pub fn config(mut self, cfg: EngineConfig) -> EngineBuilder {
+        self.cfg = cfg;
+        self
     }
 
-    /// Gather `slots` rows into bucket-shaped tensors (L, b, S, H, D).
-    fn gather(&self, slots: &[usize], bucket: usize) -> (HostTensor, HostTensor) {
-        assert!(slots.len() <= bucket);
-        let shape = [self.n_layers, bucket, self.max_seq, self.h_kv, self.d];
-        if self.contiguous_full(slots, bucket) {
-            return (
-                HostTensor::f32(&shape, self.k.clone()).unwrap(),
-                HostTensor::f32(&shape, self.v.clone()).unwrap(),
-            );
-        }
-        let row = self.row_elems();
-        let mut k = vec![0.0f32; shape.iter().product()];
-        let mut v = vec![0.0f32; shape.iter().product()];
-        for l in 0..self.n_layers {
-            for (bi, &slot) in slots.iter().enumerate() {
-                let src = l * self.layer_stride() + slot * row;
-                let dst = (l * bucket + bi) * row;
-                k[dst..dst + row].copy_from_slice(&self.k[src..src + row]);
-                v[dst..dst + row].copy_from_slice(&self.v[src..src + row]);
-            }
-        }
-        (
-            HostTensor::f32(&shape, k).unwrap(),
-            HostTensor::f32(&shape, v).unwrap(),
-        )
-    }
-
-    /// Scatter bucket-shaped tensors back into `slots` rows. For the
-    /// contiguous-full case the returned tensors REPLACE the store's
-    /// backing vectors (move, no copy).
-    fn scatter(&mut self, slots: &[usize], k: &HostTensor, v: &HostTensor) {
-        let bucket = k.shape()[1];
-        let kd = k.as_f32().unwrap();
-        let vd = v.as_f32().unwrap();
-        if self.contiguous_full(slots, bucket) {
-            self.k.copy_from_slice(kd);
-            self.v.copy_from_slice(vd);
-            return;
-        }
-        let row = self.row_elems();
-        for l in 0..self.n_layers {
-            for (bi, &slot) in slots.iter().enumerate() {
-                let dst = l * self.layer_stride() + slot * row;
-                let src = (l * bucket + bi) * row;
-                self.k[dst..dst + row].copy_from_slice(&kd[src..src + row]);
-                self.v[dst..dst + row].copy_from_slice(&vd[src..src + row]);
-            }
-        }
-    }
-
-    fn clear_row(&mut self, slot: usize) {
-        let row = self.row_elems();
-        for l in 0..self.n_layers {
-            let at = l * self.layer_stride() + slot * row;
-            self.k[at..at + row].fill(0.0);
-            self.v[at..at + row].fill(0.0);
-        }
+    pub fn build(self) -> Result<Engine> {
+        let topology = self.backend.topology();
+        let geometry = self
+            .geometry
+            .or_else(|| topology.as_ref().map(|t| t.geometry))
+            .context("no geometry: the backend has no topology and none was supplied")?;
+        let available_splits = self
+            .available_splits
+            .or_else(|| {
+                topology
+                    .as_ref()
+                    .map(|t| t.available_splits.clone())
+                    .filter(|s| !s.is_empty())
+            })
+            .unwrap_or_else(|| vec![1]);
+        let planner = self.planner.unwrap_or_else(Planner::sequence_aware);
+        let scheduler = DecodeScheduler::new(planner, geometry, available_splits);
+        let mut blocks_cfg = self.cfg.blocks.clone();
+        blocks_cfg.max_seq = blocks_cfg.max_seq.min(geometry.max_seq);
+        let caps = self.backend.caps();
+        Ok(Engine {
+            backend: self.backend,
+            caps,
+            scheduler,
+            batcher: Batcher::new(self.cfg.batcher.clone()),
+            admission: AdmissionController::new(self.cfg.admission.clone()),
+            blocks: BlockManager::new(blocks_cfg),
+            metrics: EngineMetrics::default(),
+            started: Instant::now(),
+            clock_us: 0.0,
+            pending_arrivals: Vec::new(),
+            finished: Vec::new(),
+        })
     }
 }
 
 /// The engine.
 pub struct Engine {
-    backend: EngineBackend,
+    backend: Box<dyn ExecutionBackend>,
+    caps: BackendCaps,
     scheduler: DecodeScheduler,
     batcher: Batcher,
+    admission: AdmissionController,
     blocks: BlockManager,
     pub metrics: EngineMetrics,
-    cache: Option<CacheStore>,
-    vocab: usize,
     started: Instant,
-    /// Virtual clock (µs) for the simulated backend.
-    sim_clock_us: f64,
-    sim_overhead_us: f64,
-    /// Open-loop arrivals not yet due (simulated backend): sorted by time.
-    pending_arrivals: Vec<(u64, Request)>,
+    /// Virtual clock (µs) for virtual-clock backends.
+    clock_us: f64,
+    /// Open-loop arrivals not yet due (virtual clock): sorted by time.
+    pending_arrivals: Vec<(u64, TrackedRequest)>,
     finished: Vec<FinishedRequest>,
 }
 
 impl Engine {
-    /// Real-execution engine over loaded artifacts.
-    pub fn with_pjrt(
-        registry: Arc<Registry>,
-        planner: Planner,
-        cfg: EngineConfig,
-    ) -> Result<Engine> {
-        let scheduler = scheduler_from_manifest(&registry.manifest, planner)?;
-        let model = registry.manifest.model.as_ref().context("no model block")?;
-        let g = scheduler.geometry();
-        let cache = CacheStore::new(
-            model.config.n_layers,
-            cfg.batcher.max_batch,
-            g.max_seq,
-            g.h_kv,
-            g.d,
-        );
-        let vocab = model.config.vocab;
-        let mut blocks_cfg = cfg.blocks.clone();
-        blocks_cfg.max_seq = blocks_cfg.max_seq.min(g.max_seq);
-        Ok(Engine {
-            backend: EngineBackend::Pjrt(registry),
-            scheduler,
-            batcher: Batcher::new(cfg.batcher.clone()),
-            blocks: BlockManager::new(blocks_cfg),
-            metrics: EngineMetrics::default(),
-            cache: Some(cache),
-            vocab,
-            started: Instant::now(),
-            sim_clock_us: 0.0,
-            sim_overhead_us: cfg.sim_framework_overhead_us,
-            pending_arrivals: Vec::new(),
-            finished: Vec::new(),
-        })
-    }
-
-    /// Simulated engine: H100 latency model, synthetic tokens.
-    pub fn with_simulator(
-        sim: Simulator,
-        planner: Planner,
-        geometry: AttnGeometry,
-        available_splits: Vec<usize>,
-        cfg: EngineConfig,
-    ) -> Engine {
-        let scheduler = DecodeScheduler::new(planner, geometry, available_splits);
-        let mut blocks_cfg = cfg.blocks.clone();
-        blocks_cfg.max_seq = blocks_cfg.max_seq.min(geometry.max_seq);
-        Engine {
-            backend: EngineBackend::Simulated(sim),
-            scheduler,
-            batcher: Batcher::new(cfg.batcher.clone()),
-            blocks: BlockManager::new(blocks_cfg),
-            metrics: EngineMetrics::default(),
-            cache: None,
-            vocab: 1 << 15,
-            started: Instant::now(),
-            sim_clock_us: 0.0,
-            sim_overhead_us: cfg.sim_framework_overhead_us,
-            pending_arrivals: Vec::new(),
-            finished: Vec::new(),
+    /// Start building an engine over an execution backend.
+    pub fn builder(backend: Box<dyn ExecutionBackend>) -> EngineBuilder {
+        EngineBuilder {
+            backend,
+            planner: None,
+            geometry: None,
+            available_splits: None,
+            cfg: EngineConfig::default(),
         }
     }
 
@@ -235,45 +152,135 @@ impl Engine {
         self.scheduler.policy_name()
     }
 
+    pub fn backend_caps(&self) -> BackendCaps {
+        self.caps
+    }
+
+    pub fn block_manager(&self) -> &BlockManager {
+        &self.blocks
+    }
+
+    pub fn admission_stats(&self) -> AdmissionStats {
+        self.admission.stats
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.admission.waiting_len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.batcher.running_len()
+    }
+
     fn now_us(&self) -> u64 {
-        match self.backend {
-            EngineBackend::Pjrt(_) => self.started.elapsed().as_micros() as u64,
-            EngineBackend::Simulated(_) => self.sim_clock_us as u64,
+        if self.caps.virtual_clock {
+            self.clock_us as u64
+        } else {
+            self.started.elapsed().as_micros() as u64
         }
     }
 
-    /// Submit a request (timestamps it on arrival).
-    pub fn submit(&mut self, mut req: Request) {
-        req.arrival_us = self.now_us();
-        self.batcher.submit(req);
+    // ------------------------------------------------------------------
+    // Submission + lifecycle
+    // ------------------------------------------------------------------
+
+    /// Submit a request under default options ([`SubmitOptions`]).
+    /// Returns a [`RequestHandle`] for streaming consumption and
+    /// cancellation, or the explicit refusal
+    /// ([`SubmitError::Backpressure`] when the class queue is full).
+    pub fn submit(&mut self, req: Request) -> Result<RequestHandle, SubmitError> {
+        self.submit_with(req, SubmitOptions::default())
     }
 
-    /// Open-loop arrival (simulated backend): the request becomes visible
-    /// to the batcher once the virtual clock reaches `arrival_us`. This is
-    /// the trace-replay path for load testing under Poisson traffic
-    /// (workload::ChatWorkload::generate's arrival offsets).
-    pub fn submit_at(&mut self, mut req: Request, arrival_us: u64) {
+    /// Submit with a priority class and/or deadline.
+    pub fn submit_with(
+        &mut self,
+        req: Request,
+        opts: SubmitOptions,
+    ) -> Result<RequestHandle, SubmitError> {
+        let (handle, ticket) = handle_pair(req.id, &opts);
+        self.submit_tracked(TrackedRequest { req, ticket })?;
+        Ok(handle)
+    }
+
+    /// Internal submission path shared by the sync API and the engine
+    /// thread: stamps arrival, offers to admission, and on refusal emits
+    /// the rejection on the request's stream before returning it.
+    pub(crate) fn submit_tracked(&mut self, mut t: TrackedRequest) -> Result<(), SubmitError> {
+        t.req.arrival_us = self.now_us();
+        self.offer_tracked(t)
+    }
+
+    /// Offer without restamping `arrival_us` (open-loop arrivals keep the
+    /// timestamp `submit_at` gave them).
+    fn offer_tracked(&mut self, t: TrackedRequest) -> Result<(), SubmitError> {
+        match self.admission.offer(t, &self.blocks) {
+            Ok(()) => Ok(()),
+            Err((t, err)) => {
+                self.sync_rejection_counters();
+                t.ticket.sink.send(StreamEvent::Rejected(err));
+                Err(err)
+            }
+        }
+    }
+
+    /// The admission controller's stats are the single source of truth for
+    /// rejections; the engine-level metrics mirror them by copy (never by
+    /// independent increments), so the two surfaces cannot skew.
+    fn sync_rejection_counters(&mut self) {
+        self.metrics.rejected_backpressure = self.admission.stats.rejected_backpressure;
+        self.metrics.rejected_unschedulable = self.admission.stats.rejected_unschedulable;
+    }
+
+    /// Open-loop arrival (virtual-clock backends): the request becomes
+    /// visible to admission once the virtual clock reaches `arrival_us`.
+    /// This is the trace-replay path for load testing under Poisson
+    /// traffic (workload::ChatWorkload::generate's arrival offsets).
+    pub fn submit_at(
+        &mut self,
+        req: Request,
+        arrival_us: u64,
+    ) -> Result<RequestHandle, SubmitError> {
+        self.submit_at_with(req, arrival_us, SubmitOptions::default())
+    }
+
+    pub fn submit_at_with(
+        &mut self,
+        mut req: Request,
+        arrival_us: u64,
+        opts: SubmitOptions,
+    ) -> Result<RequestHandle, SubmitError> {
         assert!(
-            matches!(self.backend, EngineBackend::Simulated(_)),
-            "submit_at is a virtual-clock (simulated backend) feature"
+            self.caps.virtual_clock,
+            "submit_at is a virtual-clock (simulated/replay backend) feature"
         );
+        // Never-fitting requests are refused up front (through the
+        // admission controller, so its stats stay authoritative); queue
+        // capacity is checked when the arrival becomes due (the rejection
+        // then arrives as a `StreamEvent::Rejected`).
+        if let Err(err) =
+            self.admission.check_schedulable(req.prompt.len(), req.max_new_tokens, &self.blocks)
+        {
+            self.sync_rejection_counters();
+            return Err(err);
+        }
         req.arrival_us = arrival_us;
-        let pos = self
-            .pending_arrivals
-            .partition_point(|(t, _)| *t <= arrival_us);
-        self.pending_arrivals.insert(pos, (arrival_us, req));
+        let (handle, ticket) = handle_pair(req.id, &opts);
+        let pos = self.pending_arrivals.partition_point(|(t, _)| *t <= arrival_us);
+        self.pending_arrivals.insert(pos, (arrival_us, TrackedRequest { req, ticket }));
+        Ok(handle)
     }
 
-    /// Move due open-loop arrivals into the batcher; if the engine is
+    /// Move due open-loop arrivals into admission; if the engine is
     /// otherwise idle, fast-forward the virtual clock to the next arrival.
     fn ingest_arrivals(&mut self) {
         if self.pending_arrivals.is_empty() {
             return;
         }
-        if self.batcher.is_idle() {
+        if self.batcher.is_empty() && self.admission.waiting_len() == 0 {
             let next = self.pending_arrivals[0].0;
-            if (self.sim_clock_us as u64) < next {
-                self.sim_clock_us = next as f64;
+            if (self.clock_us as u64) < next {
+                self.clock_us = next as f64;
             }
         }
         let now = self.now_us();
@@ -281,50 +288,114 @@ impl Engine {
             if *t > now {
                 break;
             }
-            let (_, req) = self.pending_arrivals.remove(0);
-            self.batcher.submit(req);
+            let (_, tracked) = self.pending_arrivals.remove(0);
+            // Ignore the error: the rejection already went out on the
+            // request's stream and into the counters.
+            let _ = self.offer_tracked(tracked);
         }
+    }
+
+    /// Cancel one request wherever it currently is (pending arrival,
+    /// queued, or running). Takes effect at the next step boundary.
+    /// Returns whether the request was found live.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(slot) = self.batcher.slot_of(id) {
+            let r = self.batcher.running(slot).expect("slot_of said so");
+            r.ticket.cancel.cancel(CancelKind::User);
+            return true;
+        }
+        if self.admission.cancel(id, CancelKind::User) {
+            return true;
+        }
+        if let Some((_, t)) = self.pending_arrivals.iter().find(|(_, t)| t.req.id == id) {
+            t.ticket.cancel.cancel(CancelKind::User);
+            return true;
+        }
+        false
     }
 
     pub fn is_idle(&self) -> bool {
-        self.batcher.is_idle() && self.pending_arrivals.is_empty()
+        self.admission.waiting_len() == 0
+            && self.batcher.is_empty()
+            && self.pending_arrivals.is_empty()
     }
 
-    /// Abort everything queued or running (engine shutdown): releases all
-    /// blocks and emits `FinishReason::Aborted` results.
+    /// Abort everything pending, queued, or running — a thin wrapper over
+    /// the per-request cancellation primitive: every live request is
+    /// marked with [`CancelKind::Shutdown`] and reaped through the same
+    /// path a client cancel takes (blocks released, KV rows cleared,
+    /// streams closed with `FinishReason::Aborted`). Returns the requests
+    /// aborted by this call.
     pub fn abort_all(&mut self) -> Result<Vec<FinishedRequest>> {
-        let now = self.now_us();
-        let (waiting, running) = self.batcher.drain();
-        let mut aborted = Vec::new();
-        for req in waiting {
-            aborted.push(FinishedRequest {
-                id: req.id,
-                prompt_len: req.prompt.len(),
-                tokens: Vec::new(),
-                reason: FinishReason::Aborted,
-                timing: RequestTiming { arrival_us: req.arrival_us, ..Default::default() },
-            });
+        for (_, t) in &self.pending_arrivals {
+            t.ticket.cancel.cancel(CancelKind::Shutdown);
         }
-        for r in running {
-            self.blocks.release(r.req.id)?;
-            if let Some(cache) = self.cache.as_mut() {
-                cache.clear_row(r.slot);
+        self.admission.cancel_all(CancelKind::Shutdown);
+        for slot in self.batcher.occupied_slots() {
+            if let Some(r) = self.batcher.running(slot) {
+                r.ticket.cancel.cancel(CancelKind::Shutdown);
             }
-            aborted.push(FinishedRequest {
-                id: r.req.id,
-                prompt_len: r.req.prompt.len(),
-                tokens: r.generated,
-                reason: FinishReason::Aborted,
-                timing: RequestTiming {
-                    arrival_us: r.req.arrival_us,
-                    scheduled_us: r.scheduled_us,
-                    first_token_us: r.first_token_us.unwrap_or(now),
-                    finished_us: now,
-                    n_generated: 0,
-                },
-            });
         }
-        Ok(aborted)
+        let before = self.finished.len();
+        self.reap_cancellations()?;
+        Ok(self.finished.split_off(before))
+    }
+
+    /// Retire cancelled/deadline-expired requests from every stage.
+    fn reap_cancellations(&mut self) -> Result<()> {
+        let now = self.now_us();
+        // Pending open-loop arrivals (not yet offered).
+        let mut i = 0;
+        while i < self.pending_arrivals.len() {
+            let (_, t) = &self.pending_arrivals[i];
+            if t.ticket.past_deadline(now) {
+                t.ticket.cancel.cancel(CancelKind::Deadline);
+            }
+            if t.ticket.cancel.is_cancelled() {
+                let (_, t) = self.pending_arrivals.remove(i);
+                self.finish_unstarted(t, now);
+            } else {
+                i += 1;
+            }
+        }
+        // Queued.
+        for t in self.admission.reap_cancelled(now) {
+            self.finish_unstarted(t, now);
+        }
+        // Running.
+        for slot in self.batcher.occupied_slots() {
+            let kind = {
+                let r = self.batcher.running(slot).expect("occupied");
+                if r.ticket.past_deadline(now) {
+                    r.ticket.cancel.cancel(CancelKind::Deadline);
+                }
+                r.ticket.cancel.get()
+            };
+            if let Some(kind) = kind {
+                self.retire(slot, kind.finish_reason())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Finish a request that never reached the running set.
+    fn finish_unstarted(&mut self, t: TrackedRequest, now: u64) {
+        let reason =
+            t.ticket.cancel.get().map(CancelKind::finish_reason).unwrap_or(FinishReason::Aborted);
+        self.metrics.record_cancelled(reason == FinishReason::DeadlineExceeded);
+        let fin = FinishedRequest {
+            id: t.req.id,
+            prompt_len: t.req.prompt.len(),
+            tokens: Vec::new(),
+            reason,
+            timing: RequestTiming {
+                arrival_us: t.req.arrival_us,
+                finished_us: now,
+                ..Default::default()
+            },
+        };
+        t.ticket.sink.send(StreamEvent::Finished(fin.clone()));
+        self.finished.push(fin);
     }
 
     /// Run until every submitted request completes; returns them in
@@ -337,244 +408,151 @@ impl Engine {
         Ok(std::mem::take(&mut self.finished))
     }
 
-    /// One engine step: admit → prefill one batch → decode one batch.
+    /// Drain and return whatever finished since the last call.
+    pub fn take_finished(&mut self) -> Vec<FinishedRequest> {
+        std::mem::take(&mut self.finished)
+    }
+
+    // ------------------------------------------------------------------
+    // The step loop
+    // ------------------------------------------------------------------
+
+    /// One engine step: ingest → reap → admit → prefill one batch or
+    /// decode one batch → stream/retire.
     pub fn step(&mut self) -> Result<()> {
-        self.ingest_arrivals();
+        if self.caps.virtual_clock {
+            self.ingest_arrivals();
+        }
+        self.reap_cancellations()?;
         let now = self.now_us();
-        self.batcher.admit(&mut self.blocks, now);
+        let admitted = self.admission.admit(&mut self.batcher, &mut self.blocks, now);
+        // Degenerate requests that are already complete on admission
+        // (empty prompt + max_new_tokens = 0) appear in neither the
+        // prefill nor the decode set — retire them now or they'd pin
+        // their slot forever. Only freshly admitted rows can be trivially
+        // done, so this costs nothing on ordinary steps.
+        for id in admitted {
+            if let Some(slot) = self.batcher.slot_of(id) {
+                if self.batcher.running(slot).is_some_and(|r| r.done()) {
+                    self.retire(slot, FinishReason::Length)?;
+                }
+            }
+        }
         let plan = self.batcher.plan();
-        let t0 = Instant::now();
-        let mut decoded = 0;
 
         if !plan.prefill_slots.is_empty() {
-            self.prefill(&plan.prefill_slots)?;
+            let batch = self.prefill_batch(&plan.prefill_slots)?;
+            let prepared = self.backend.prepare(batch, None)?;
+            let outcome = self.backend.execute(prepared)?;
+            self.apply_outcome(outcome)?;
         } else if !plan.decode_slots.is_empty() {
-            decoded = self.decode(&plan.decode_slots, plan.decode_bucket.context("no bucket")?)?;
-        }
-
-        let step_us = match &self.backend {
-            EngineBackend::Pjrt(_) => t0.elapsed().as_micros() as f64,
-            EngineBackend::Simulated(_) => 0.0, // accounted inside prefill/decode
-        };
-        if matches!(self.backend, EngineBackend::Pjrt(_)) {
-            self.metrics.record_step(step_us, decoded);
-        }
-        Ok(())
-    }
-
-    // ------------------------------------------------------------------
-    // Prefill
-    // ------------------------------------------------------------------
-
-    fn prefill(&mut self, slots: &[usize]) -> Result<()> {
-        match &self.backend {
-            EngineBackend::Pjrt(reg) => {
-                let reg = reg.clone();
-                for &slot in slots {
-                    self.prefill_one_pjrt(&reg, slot)?;
-                }
-            }
-            EngineBackend::Simulated(_) => {
-                // Prefill latency is policy-invariant (the paper's change is
-                // decode-only); model it as one bulk step per request.
-                for &slot in slots {
-                    let r = self.batcher.running_mut(slot).context("slot")?;
-                    r.prefilled = r.req.prompt.len();
-                    let prompt_us = 50.0 + 0.05 * r.req.prompt.len() as f64;
-                    self.sim_clock_us += prompt_us;
-                    self.metrics.prefill_calls += 1;
-                    self.metrics.record_step(prompt_us, 0);
-                }
-            }
+            let bucket = plan.decode_bucket.context("decode slots without a bucket")?;
+            // The scheduler sees the live batch shape: the longest row's KV
+            // length (including the token being written this step).
+            let max_kv = plan
+                .decode_slots
+                .iter()
+                .map(|&s| self.batcher.running(s).map(|r| r.kv_len() + 1).unwrap_or(1))
+                .max()
+                .unwrap_or(1);
+            let decision = self.scheduler.decide(plan.decode_slots.len(), max_kv)?;
+            self.metrics.record_split(decision.plan.metadata.num_splits);
+            let batch = self.decode_batch(&plan.decode_slots, bucket)?;
+            let prepared = self.backend.prepare(batch, Some(&decision.plan))?;
+            let outcome = self.backend.execute(prepared)?;
+            self.apply_outcome(outcome)?;
         }
         Ok(())
     }
 
-    fn prefill_one_pjrt(&mut self, reg: &Registry, slot: usize) -> Result<()> {
-        let (id, prompt) = {
-            let r = self.batcher.running(slot).context("slot")?;
-            (r.req.id, r.req.prompt.clone())
-        };
-        let _ = id;
-        let p_len = prompt.len();
-        let entry = reg
-            .manifest
-            .find_prefill_bucket(1, p_len)
-            .map(|e| e.clone());
-        if let Some(entry) = entry {
-            let b = entry.meta.batch.unwrap();
-            let bucket_p = entry.meta.prompt_len.unwrap();
-            let cache = self.cache.as_ref().context("cache")?;
-            let (kv_k, kv_v) = cache.gather(&[slot], b);
-            let mut tokens = vec![0i32; b * bucket_p];
-            tokens[..p_len].copy_from_slice(&prompt);
-            let mut lens = vec![1i32; b]; // padded rows: 1 token, ignored
-            lens[0] = p_len as i32;
-            let out = reg.execute_model(
-                &entry.name,
-                &[
-                    HostTensor::s32(&[b, bucket_p], tokens)?,
-                    HostTensor::s32(&[b], lens)?,
-                    kv_k,
-                    kv_v,
-                ],
-            )?;
-            self.cache.as_mut().unwrap().scatter(&[slot], &out[1], &out[2]);
-            let r = self.batcher.running_mut(slot).context("slot")?;
-            r.prefilled = p_len;
-            self.metrics.prefill_calls += 1;
-        } else {
-            // No prefill bucket fits: ingest via the decode path token by
-            // token (slow path; exercised by tests with tiny buckets).
-            self.prefill_via_decode(reg, slot)?;
-        }
-        Ok(())
-    }
-
-    fn prefill_via_decode(&mut self, reg: &Registry, slot: usize) -> Result<()> {
-        let prompt = self.batcher.running(slot).context("slot")?.req.prompt.clone();
-        let already = self.batcher.running(slot).context("slot")?.prefilled;
-        for (t, &tok) in prompt.iter().enumerate().skip(already) {
-            let decision = self.scheduler.decide(1, t + 1)?;
-            let entry = reg
-                .manifest
-                .find_decode_bucket(1, decision.artifact_splits)
-                .context("no decode bucket for prefill-via-decode")?
-                .clone();
-            let b = entry.meta.batch.unwrap();
-            let cache = self.cache.as_ref().context("cache")?;
-            let (kv_k, kv_v) = cache.gather(&[slot], b);
-            let mut toks = vec![0i32; b];
-            toks[0] = tok;
-            let mut pos = vec![0i32; b];
-            pos[0] = t as i32;
-            let out = reg.execute_model(
-                &entry.name,
-                &[HostTensor::s32(&[b], toks)?, HostTensor::s32(&[b], pos)?, kv_k, kv_v],
-            )?;
-            self.cache.as_mut().unwrap().scatter(&[slot], &out[1], &out[2]);
-        }
-        let r = self.batcher.running_mut(slot).context("slot")?;
-        r.prefilled = prompt.len();
-        self.metrics.prefill_calls += 1;
-        Ok(())
-    }
-
-    // ------------------------------------------------------------------
-    // Decode
-    // ------------------------------------------------------------------
-
-    fn decode(&mut self, slots: &[usize], bucket: usize) -> Result<usize> {
-        // The scheduler sees the live batch shape: the longest row's KV
-        // length (including the token being written this step).
-        let max_kv = slots
+    fn prefill_batch(&self, slots: &[usize]) -> Result<StepBatch> {
+        let rows = slots
             .iter()
-            .map(|&s| self.batcher.running(s).map(|r| r.kv_len() + 1).unwrap_or(1))
-            .max()
-            .unwrap_or(1);
-        let decision = self.scheduler.decide(slots.len(), max_kv)?;
-        self.metrics.record_split(decision.plan.metadata.num_splits);
-
-        match &self.backend {
-            EngineBackend::Pjrt(reg) => {
-                let reg = reg.clone();
-                self.decode_pjrt(&reg, slots, bucket, decision.artifact_splits)
-            }
-            EngineBackend::Simulated(sim) => {
-                let kernel_us = sim.kernel_us(&decision.plan.metadata);
-                // One attention launch per layer; use 1 layer as the unit
-                // (policy comparisons are ratios, layers scale both sides).
-                let step_us = kernel_us + self.sim_overhead_us;
-                self.sim_clock_us += step_us;
-                self.metrics.record_step(step_us, slots.len());
-                let now = self.now_us();
-                let mut finished = Vec::new();
-                for &slot in slots {
-                    let r = self.batcher.running_mut(slot).context("slot")?;
-                    let synth = (r.kv_len() % 1000) as i32;
-                    r.generated.push(synth);
-                    r.first_token_us.get_or_insert(now);
-                    if r.done() {
-                        finished.push((slot, FinishReason::Length));
-                    }
-                }
-                for (slot, reason) in finished {
-                    self.retire(slot, reason)?;
-                }
-                Ok(slots.len())
-            }
-        }
+            .map(|&slot| {
+                let r = self.batcher.running(slot).context("prefill slot")?;
+                Ok(StepRow {
+                    slot,
+                    input_token: 0,
+                    position: r.prefilled,
+                    kv_len: r.kv_len(),
+                    prompt: r.req.prompt.clone(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StepBatch { kind: StepKind::Prefill, rows, bucket: self.batcher.max_batch() })
     }
 
-    fn decode_pjrt(
-        &mut self,
-        reg: &Registry,
-        slots: &[usize],
-        bucket: usize,
-        artifact_splits: usize,
-    ) -> Result<usize> {
-        let entry = reg
-            .manifest
-            .find_decode_bucket(bucket, artifact_splits)
-            .or_else(|| reg.manifest.find_decode_bucket(bucket, 1))
-            .with_context(|| format!("no decode bucket for b={bucket}"))?
-            .clone();
-        let b = entry.meta.batch.unwrap();
-        if slots.len() > b {
-            bail!("bucket {b} smaller than batch {}", slots.len());
-        }
+    fn decode_batch(&self, slots: &[usize], bucket: usize) -> Result<StepBatch> {
+        let rows = slots
+            .iter()
+            .map(|&slot| {
+                let r = self.batcher.running(slot).context("decode slot")?;
+                // Next input token: last generated, or last prompt token
+                // when none generated yet (the full prompt is ingested, so
+                // continue from its final token).
+                let input_token =
+                    *r.generated.last().unwrap_or(r.req.prompt.last().unwrap_or(&0));
+                Ok(StepRow {
+                    slot,
+                    input_token,
+                    position: r.kv_len(),
+                    kv_len: r.kv_len(),
+                    prompt: Vec::new(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StepBatch { kind: StepKind::Decode, rows, bucket })
+    }
 
-        let mut tokens = vec![0i32; b];
-        let mut positions = vec![0i32; b];
-        for (bi, &slot) in slots.iter().enumerate() {
-            let r = self.batcher.running(slot).context("slot")?;
-            // Next input token: last generated, or last prompt token when
-            // none generated yet (the prefill consumed prompt[..len-1]...
-            // here: full prompt ingested, so feed the last generated or a
-            // BOS-continuation of the prompt).
-            tokens[bi] = *r.generated.last().unwrap_or(r.req.prompt.last().unwrap_or(&0));
-            positions[bi] = r.kv_len() as i32;
+    /// Fold a step outcome back into request state: advance the clock,
+    /// record prompt-ingestion progress, stream freshly decoded tokens,
+    /// and retire rows that completed.
+    fn apply_outcome(&mut self, outcome: StepOutcome) -> Result<()> {
+        if self.caps.virtual_clock {
+            self.clock_us += outcome.elapsed_us;
         }
-        let cache = self.cache.as_ref().context("cache")?;
-        let (kv_k, kv_v) = cache.gather(slots, b);
-        let out = reg.execute_model(
-            &entry.name,
-            &[
-                HostTensor::s32(&[b], tokens)?,
-                HostTensor::s32(&[b], positions)?,
-                kv_k,
-                kv_v,
-            ],
-        )?;
-        self.cache.as_mut().unwrap().scatter(slots, &out[1], &out[2]);
-
-        let logits = out[0].as_f32()?;
+        self.metrics.record_step(outcome.elapsed_us, outcome.tokens.len());
+        self.metrics.prefill_calls += outcome.prefill_calls;
         let now = self.now_us();
-        let mut finished = Vec::new();
-        for (bi, &slot) in slots.iter().enumerate() {
-            let row = &logits[bi * self.vocab..(bi + 1) * self.vocab];
-            let tok = argmax(row) as i32;
-            let r = self.batcher.running_mut(slot).context("slot")?;
-            r.generated.push(tok);
-            r.first_token_us.get_or_insert(now);
+
+        let mut to_retire: Vec<(usize, FinishReason)> = Vec::new();
+        for &(slot, prefilled) in &outcome.prefilled {
+            let r = self.batcher.running_mut(slot).context("prefilled slot")?;
+            r.prefilled = prefilled;
             if r.done() {
-                finished.push((slot, FinishReason::Length));
-            } else if r.kv_len() + 1 > self.scheduler.geometry().max_seq {
-                finished.push((slot, FinishReason::CacheFull));
+                // Degenerate max_new_tokens = 0: nothing to decode.
+                to_retire.push((slot, FinishReason::Length));
             }
         }
-        for (slot, reason) in finished {
+        let max_seq = self.scheduler.geometry().max_seq;
+        for &(slot, token) in &outcome.tokens {
+            let r = self.batcher.running_mut(slot).context("decoded slot")?;
+            r.generated.push(token);
+            r.first_token_us.get_or_insert(now);
+            r.ticket.sink.send(StreamEvent::Token {
+                token,
+                index: r.generated.len() - 1,
+                emitted_us: now,
+            });
+            if r.done() {
+                to_retire.push((slot, FinishReason::Length));
+            } else if r.kv_len() + 1 > max_seq {
+                to_retire.push((slot, FinishReason::CacheFull));
+            }
+        }
+        for (slot, reason) in to_retire {
             self.retire(slot, reason)?;
         }
-        Ok(slots.len())
+        Ok(())
     }
 
+    /// Remove a request from its slot: release blocks, clear the backend's
+    /// KV row, close the stream, account. Shared by natural completion and
+    /// cancellation (the reason's `is_natural` picks the accounting).
     fn retire(&mut self, slot: usize, reason: FinishReason) -> Result<()> {
-        let r: RunningRequest = self.batcher.take(slot).context("retire empty slot")?;
+        let r = self.batcher.take(slot).context("retire empty slot")?;
         self.blocks.release(r.req.id)?;
-        if let Some(cache) = self.cache.as_mut() {
-            cache.clear_row(slot);
-        }
+        self.backend.release_slot(slot)?;
         let now = self.now_us();
         let timing = RequestTiming {
             arrival_us: r.req.arrival_us,
@@ -583,55 +561,77 @@ impl Engine {
             finished_us: now,
             n_generated: r.generated.len(),
         };
-        self.metrics.record_finished(&timing);
-        self.finished.push(FinishedRequest {
+        if reason.is_natural() {
+            self.metrics.record_finished(&timing);
+        } else {
+            self.metrics.record_cancelled(reason == FinishReason::DeadlineExceeded);
+        }
+        let fin = FinishedRequest {
             id: r.req.id,
             prompt_len: r.req.prompt.len(),
             tokens: r.generated,
             reason,
             timing,
-        });
+        };
+        r.ticket.sink.send(StreamEvent::Finished(fin.clone()));
+        self.finished.push(fin);
         Ok(())
     }
-}
-
-fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    let mut best_v = f32::NEG_INFINITY;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > best_v {
-            best_v = x;
-            best = i;
-        }
-    }
-    best
 }
 
 // ----------------------------------------------------------------------
 // Threaded server facade
 // ----------------------------------------------------------------------
 
+enum EngineMsg {
+    Submit(TrackedRequest),
+    Cancel(RequestId),
+    AbortAll,
+}
+
 /// Handle to an engine running on its own thread (tokio is unavailable
 /// offline; a dedicated thread + channels is the same architecture).
+/// `submit` returns the same [`RequestHandle`] the synchronous API does;
+/// [`EngineHandle::shutdown`] closes the submit side and *drains* every
+/// in-flight request before returning, while [`EngineHandle::abort`]
+/// cancels them all through the per-request primitive.
 pub struct EngineHandle {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::Sender<EngineMsg>,
+    /// Completion firehose (every finished request, any origin), kept
+    /// alongside the per-request streams for engine-wide consumers.
     pub results: mpsc::Receiver<FinishedRequest>,
     join: Option<std::thread::JoinHandle<EngineMetrics>>,
 }
 
 impl EngineHandle {
     /// Spawn `engine` on a worker thread. The engine drains its queue,
-    /// sleeping briefly when idle, until the sender is dropped.
+    /// blocking when idle, until the sender is dropped.
     pub fn spawn(mut engine: Engine) -> EngineHandle {
-        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx, rx) = mpsc::channel::<EngineMsg>();
         let (out_tx, out_rx) = mpsc::channel::<FinishedRequest>();
         let join = std::thread::spawn(move || {
+            let handle_msg = |engine: &mut Engine, msg: EngineMsg,
+                              out: &mpsc::Sender<FinishedRequest>| {
+                match msg {
+                    // Rejections already went out on the request's stream.
+                    EngineMsg::Submit(t) => drop(engine.submit_tracked(t)),
+                    EngineMsg::Cancel(id) => drop(engine.cancel(id)),
+                    EngineMsg::AbortAll => match engine.abort_all() {
+                        Ok(aborted) => {
+                            for fin in aborted {
+                                let _ = out.send(fin);
+                            }
+                        }
+                        Err(e) => eprintln!("engine abort failed: {e:#}"),
+                    },
+                }
+            };
             loop {
                 // Pull everything currently queued.
                 let mut disconnected = false;
                 loop {
                     match rx.try_recv() {
-                        Ok(req) => engine.submit(req),
+                        Ok(msg) => handle_msg(&mut engine, msg, &out_tx),
                         Err(mpsc::TryRecvError::Empty) => break,
                         Err(mpsc::TryRecvError::Disconnected) => {
                             disconnected = true;
@@ -643,17 +643,19 @@ impl EngineHandle {
                     if disconnected {
                         break;
                     }
-                    // Block for the next request to avoid spinning.
+                    // Block for the next message to avoid spinning.
                     match rx.recv() {
-                        Ok(req) => engine.submit(req),
+                        Ok(msg) => handle_msg(&mut engine, msg, &out_tx),
                         Err(_) => break,
                     }
                 }
-                if let Err(e) = engine.step() {
-                    eprintln!("engine step failed: {e:#}");
-                    break;
+                if !engine.is_idle() {
+                    if let Err(e) = engine.step() {
+                        eprintln!("engine step failed: {e:#}");
+                        break;
+                    }
                 }
-                for fin in std::mem::take(&mut engine.finished) {
+                for fin in engine.take_finished() {
                     let _ = out_tx.send(fin);
                 }
             }
@@ -663,12 +665,36 @@ impl EngineHandle {
         EngineHandle { tx, results: out_rx, join: Some(join) }
     }
 
-    pub fn submit(&self, req: Request) -> Result<()> {
-        self.tx.send(req).map_err(|_| anyhow::anyhow!("engine thread gone"))
+    /// Submit a request; the returned handle streams its tokens.
+    pub fn submit(&self, req: Request) -> Result<RequestHandle> {
+        self.submit_with(req, SubmitOptions::default())
     }
 
-    /// Close the submit side and wait for the engine to drain.
+    pub fn submit_with(&self, req: Request, opts: SubmitOptions) -> Result<RequestHandle> {
+        let (handle, ticket) = handle_pair(req.id, &opts);
+        self.tx
+            .send(EngineMsg::Submit(TrackedRequest { req, ticket }))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok(handle)
+    }
+
+    /// Cancel by id (equivalent to `RequestHandle::cancel`, for consumers
+    /// that only kept the id).
+    pub fn cancel(&self, id: RequestId) -> Result<()> {
+        self.tx.send(EngineMsg::Cancel(id)).map_err(|_| anyhow::anyhow!("engine thread gone"))
+    }
+
+    /// Close the submit side and wait for the engine to DRAIN every
+    /// in-flight request (graceful shutdown).
     pub fn shutdown(mut self) -> EngineMetrics {
+        let EngineHandle { tx, join, .. } = &mut self;
+        drop(std::mem::replace(tx, mpsc::channel().0));
+        join.take().expect("joined once").join().expect("engine thread panicked")
+    }
+
+    /// Cancel everything in flight, then shut down.
+    pub fn abort(mut self) -> EngineMetrics {
+        let _ = self.tx.send(EngineMsg::AbortAll);
         let EngineHandle { tx, join, .. } = &mut self;
         drop(std::mem::replace(tx, mpsc::channel().0));
         join.take().expect("joined once").join().expect("engine thread panicked")
@@ -678,28 +704,31 @@ impl EngineHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::SimBackend;
+    use crate::coordinator::lifecycle::Priority;
 
     fn sim_engine(planner: Planner) -> Engine {
-        Engine::with_simulator(
-            Simulator::h100(),
-            planner,
-            AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 },
-            vec![1, 3],
-            EngineConfig::default(),
-        )
+        Engine::builder(Box::new(SimBackend::h100()))
+            .planner(planner)
+            .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+            .available_splits(vec![1, 3])
+            .build()
+            .unwrap()
     }
 
     #[test]
     fn simulated_generation_completes() {
         let mut e = sim_engine(Planner::sequence_aware());
-        e.submit(Request::new(1, vec![7; 100], 20));
+        let handle = e.submit(Request::new(1, vec![7; 100], 20)).unwrap();
         let done = e.run_until_idle().unwrap();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].tokens.len(), 20);
         assert_eq!(done[0].reason, FinishReason::Length);
         assert!(e.metrics.tokens_generated >= 20);
-        assert!(e.blocks.check_invariants().is_ok());
-        assert_eq!(e.blocks.num_seqs(), 0, "all blocks released");
+        assert!(e.block_manager().check_invariants().is_ok());
+        assert_eq!(e.block_manager().num_seqs(), 0, "all blocks released");
+        // The handle streamed the same tokens the result carries.
+        assert_eq!(handle.drain_tokens(), done[0].tokens);
     }
 
     #[test]
@@ -707,7 +736,7 @@ mod tests {
         // Decode from KV 400 to 512: inside nblk=4 bucket, tiles=1.
         let run = |planner: Planner| {
             let mut e = sim_engine(planner);
-            e.submit(Request::new(1, vec![1; 400], 112));
+            e.submit(Request::new(1, vec![1; 400], 112)).unwrap();
             let done = e.run_until_idle().unwrap();
             (done[0].timing.tpot_us(), e.metrics.split_histogram.clone())
         };
@@ -723,7 +752,7 @@ mod tests {
     fn batched_requests_share_steps() {
         let mut e = sim_engine(Planner::standard());
         for id in 0..4 {
-            e.submit(Request::new(id, vec![1; 50], 10));
+            e.submit(Request::new(id, vec![1; 50], 10)).unwrap();
         }
         let done = e.run_until_idle().unwrap();
         assert_eq!(done.len(), 4);
@@ -735,7 +764,7 @@ mod tests {
     fn queueing_beyond_batch_capacity() {
         let mut e = sim_engine(Planner::standard());
         for id in 0..9 {
-            e.submit(Request::new(id, vec![1; 10], 5));
+            e.submit(Request::new(id, vec![1; 10], 5)).unwrap();
         }
         let done = e.run_until_idle().unwrap();
         assert_eq!(done.len(), 9);
@@ -749,7 +778,7 @@ mod tests {
         let mut e = sim_engine(Planner::sequence_aware());
         // Three arrivals spaced 10 ms apart on the virtual clock.
         for (i, t) in [0u64, 10_000, 20_000].iter().enumerate() {
-            e.submit_at(Request::new(i as u64, vec![1; 40], 8), *t);
+            e.submit_at(Request::new(i as u64, vec![1; 40], 8), *t).unwrap();
         }
         let done = e.run_until_idle().unwrap();
         assert_eq!(done.len(), 3);
@@ -769,7 +798,7 @@ mod tests {
     fn abort_all_releases_everything() {
         let mut e = sim_engine(Planner::standard());
         for id in 0..6 {
-            e.submit(Request::new(id, vec![1; 50], 1000));
+            e.submit(Request::new(id, vec![1; 50], 900)).unwrap();
         }
         // Run a few steps so some requests are mid-flight.
         for _ in 0..5 {
@@ -779,16 +808,114 @@ mod tests {
         assert_eq!(aborted.len(), 6);
         assert!(aborted.iter().all(|f| f.reason == FinishReason::Aborted));
         assert!(e.is_idle());
-        assert!(e.blocks.check_invariants().is_ok());
-        assert_eq!(e.blocks.num_seqs(), 0);
+        assert!(e.block_manager().check_invariants().is_ok());
+        assert_eq!(e.block_manager().num_seqs(), 0);
+        assert_eq!(e.metrics.requests_cancelled, 6);
+    }
+
+    #[test]
+    fn cancel_mid_flight_frees_the_slot() {
+        let mut e = sim_engine(Planner::standard());
+        let victim = e.submit(Request::new(1, vec![1; 50], 900)).unwrap();
+        e.submit(Request::new(2, vec![1; 50], 8)).unwrap();
+        for _ in 0..5 {
+            e.step().unwrap();
+        }
+        victim.cancel();
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done.len(), 2);
+        let v = done.iter().find(|f| f.id == 1).unwrap();
+        assert_eq!(v.reason, FinishReason::Cancelled);
+        let other = done.iter().find(|f| f.id == 2).unwrap();
+        assert_eq!(other.reason, FinishReason::Length);
+        assert_eq!(e.block_manager().num_seqs(), 0);
+        // The victim's stream ended with the terminal event.
+        assert!(matches!(victim.wait().finished(), Some(f) if f.reason == FinishReason::Cancelled));
+    }
+
+    #[test]
+    fn deadline_cuts_a_request_short() {
+        let mut e = sim_engine(Planner::standard());
+        // 1 ms deadline on the virtual clock, but the request wants 800
+        // tokens — it must come back DeadlineExceeded with partial output.
+        let h = e
+            .submit_with(
+                Request::new(1, vec![1; 100], 800),
+                SubmitOptions::default().deadline_us(1_000),
+            )
+            .unwrap();
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].reason, FinishReason::DeadlineExceeded);
+        assert!(done[0].tokens.len() < 800);
+        assert_eq!(e.metrics.deadline_misses, 1);
+        drop(h);
+    }
+
+    #[test]
+    fn degenerate_already_done_request_retires_immediately() {
+        // Empty prompt + max_new_tokens = 0 is complete the moment it is
+        // admitted: it must retire (Length) instead of pinning its slot
+        // and spinning run_until_idle forever.
+        let mut e = sim_engine(Planner::standard());
+        e.submit(Request::new(1, Vec::new(), 0)).unwrap();
+        e.submit(Request::new(2, vec![1; 10], 3)).unwrap();
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done.len(), 2);
+        let degenerate = done.iter().find(|f| f.id == 1).unwrap();
+        assert_eq!(degenerate.reason, FinishReason::Length);
+        assert!(degenerate.tokens.is_empty());
+        assert_eq!(e.block_manager().num_seqs(), 0);
+    }
+
+    #[test]
+    fn oversized_request_rejected_up_front() {
+        let mut e = sim_engine(Planner::sequence_aware());
+        // max_seq is 1024: this can never be admitted — explicit refusal
+        // instead of wedging the queue head (the seed's behavior).
+        let err = e.submit(Request::new(0, vec![1; 1000], 500)).unwrap_err();
+        assert!(matches!(err, SubmitError::Unschedulable { .. }));
+        // The engine stays serviceable.
+        e.submit(Request::new(1, vec![1; 10], 4)).unwrap();
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(e.metrics.rejected_unschedulable, 1);
+    }
+
+    #[test]
+    fn backpressure_when_the_class_queue_is_full() {
+        let mut cfg = EngineConfig::default();
+        cfg.admission.queue_capacity = 2;
+        let mut e = Engine::builder(Box::new(SimBackend::h100()))
+            .planner(Planner::standard())
+            .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+            .available_splits(vec![1, 3])
+            .config(cfg)
+            .build()
+            .unwrap();
+        for id in 0..2 {
+            e.submit(Request::new(id, vec![1; 10], 4)).unwrap();
+        }
+        let err = e.submit(Request::new(9, vec![1; 10], 4)).unwrap_err();
+        match err {
+            SubmitError::Backpressure(bp) => {
+                assert_eq!(bp.capacity, 2);
+                assert_eq!(bp.priority, Priority::Standard);
+            }
+            other => panic!("expected backpressure, got {other:?}"),
+        }
+        assert_eq!(e.metrics.rejected_backpressure, 1);
+        // The queued ones still complete.
+        assert_eq!(e.run_until_idle().unwrap().len(), 2);
     }
 
     #[test]
     fn threaded_handle_round_trip() {
         let e = sim_engine(Planner::sequence_aware());
         let handle = EngineHandle::spawn(e);
+        let mut request_handles = Vec::new();
         for id in 0..3 {
-            handle.submit(Request::new(id, vec![2; 64], 8)).unwrap();
+            request_handles.push(handle.submit(Request::new(id, vec![2; 64], 8)).unwrap());
         }
         let mut got = 0;
         while got < 3 {
@@ -798,7 +925,44 @@ mod tests {
                 panic!("timed out waiting for results");
             }
         }
+        // Each per-request stream carries its 8 tokens + terminal event.
+        for h in request_handles {
+            let fin = h.wait().finished().expect("stream finished");
+            assert_eq!(fin.tokens.len(), 8);
+        }
         let metrics = handle.shutdown();
         assert_eq!(metrics.requests_finished, 3);
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_requests() {
+        let e = sim_engine(Planner::standard());
+        let handle = EngineHandle::spawn(e);
+        let hs: Vec<_> = (0..4)
+            .map(|id| handle.submit(Request::new(id, vec![1; 40], 16)).unwrap())
+            .collect();
+        // Shut down immediately: the engine must finish all 4, not drop them.
+        let metrics = handle.shutdown();
+        assert_eq!(metrics.requests_finished, 4);
+        assert_eq!(metrics.requests_cancelled, 0);
+        for h in hs {
+            let fin = h.wait().finished().expect("drained to completion");
+            assert_eq!(fin.reason, FinishReason::Length);
+        }
+    }
+
+    #[test]
+    fn abort_cancels_in_flight_requests() {
+        let e = sim_engine(Planner::standard());
+        let handle = EngineHandle::spawn(e);
+        let hs: Vec<_> = (0..4)
+            .map(|id| handle.submit(Request::new(id, vec![1; 40], 900)).unwrap())
+            .collect();
+        let metrics = handle.abort();
+        assert_eq!(metrics.requests_finished + metrics.requests_cancelled, 4);
+        assert!(metrics.requests_cancelled >= 1, "abort should cut long requests short");
+        for h in hs {
+            assert!(h.wait().finished().is_some(), "every stream gets a terminal event");
+        }
     }
 }

@@ -82,6 +82,16 @@ impl BlockManager {
         total <= self.cfg.max_seq && self.blocks_for(total) <= self.free_blocks
     }
 
+    /// Could this request be admitted on an *empty* manager? False means
+    /// it can never run here (too long for `max_seq` or bigger than the
+    /// whole block budget) — the admission controller rejects such
+    /// requests at submission instead of letting them wedge a queue head
+    /// forever.
+    pub fn can_ever_admit(&self, prompt_len: usize, max_new: usize) -> bool {
+        let total = prompt_len + max_new;
+        total <= self.cfg.max_seq && self.blocks_for(total) <= self.cfg.num_blocks
+    }
+
     /// Reserve blocks for a new sequence.
     pub fn admit(&mut self, id: RequestId, prompt_len: usize, max_new: usize) -> Result<()> {
         if self.seqs.contains_key(&id) {
@@ -173,6 +183,16 @@ mod tests {
         assert!(!m.can_admit(1000, 100));
         assert!(m.admit(1, 1000, 100).is_err());
         assert!(m.can_admit(1000, 24));
+    }
+
+    #[test]
+    fn can_ever_admit_ignores_current_occupancy() {
+        let mut m = mgr(4); // 64-token budget
+        m.admit(1, 48, 16).unwrap(); // full
+        assert!(!m.can_admit(16, 0));
+        assert!(m.can_ever_admit(16, 0)); // would fit an empty manager
+        assert!(!m.can_ever_admit(1000, 100)); // over max_seq: never
+        assert!(!m.can_ever_admit(64, 16)); // over the whole budget: never
     }
 
     #[test]

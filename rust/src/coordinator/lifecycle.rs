@@ -1,0 +1,385 @@
+//! Request lifecycle: streaming handles, per-request cancellation, and
+//! deadlines.
+//!
+//! The lifecycle state machine (DESIGN.md §Serving engine):
+//!
+//! ```text
+//! submit ──► Queued ──admit──► Running ──last token──► Finished(Length)
+//!    │          │                 │  │
+//!    │          │                 │  └─cache full────► Finished(CacheFull)
+//!    │          └─cancel/deadline─┴────────────────► Finished(Cancelled |
+//!    │                                                DeadlineExceeded |
+//!    │                                                Aborted)
+//!    └─queue full──────────────────────────────────► Rejected(Backpressure)
+//! ```
+//!
+//! Every `submit` mints a ([`RequestHandle`], [`Ticket`]) pair sharing a
+//! [`CancelCell`] and an event channel. The handle is the client side:
+//! consume [`StreamEvent`]s as they arrive, call
+//! [`RequestHandle::cancel`] at any point. The ticket travels with the
+//! request through admission and the running set; the engine pushes
+//! tokens into it as they decode and observes the cancel cell between
+//! steps. Dropping a handle only discards the stream — the request still
+//! runs to completion (results remain available from
+//! `Engine::run_until_idle`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::admission::SubmitError;
+use super::request::{FinishReason, FinishedRequest, Request, RequestId};
+
+/// Admission priority class. Lower index = served first; FIFO within a
+/// class. Strict priority: a blocked higher class is never leapfrogged
+/// (no priority inversion under KV-budget pressure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Latency-sensitive chat traffic.
+    Interactive = 0,
+    /// The default class.
+    #[default]
+    Standard = 1,
+    /// Throughput traffic (batch jobs, evals).
+    Batch = 2,
+}
+
+/// Number of priority classes (queue array size).
+pub const PRIORITY_CLASSES: usize = 3;
+
+impl Priority {
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn all() -> [Priority; PRIORITY_CLASSES] {
+        [Priority::Interactive, Priority::Standard, Priority::Batch]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Why a request was cancelled. First cause wins; later cancels are no-ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelKind {
+    /// Client-side `RequestHandle::cancel` (or `Engine::cancel`).
+    User,
+    /// The request's deadline elapsed before completion.
+    Deadline,
+    /// Engine shutdown (`abort_all`).
+    Shutdown,
+}
+
+impl CancelKind {
+    pub fn finish_reason(self) -> FinishReason {
+        match self {
+            CancelKind::User => FinishReason::Cancelled,
+            CancelKind::Deadline => FinishReason::DeadlineExceeded,
+            CancelKind::Shutdown => FinishReason::Aborted,
+        }
+    }
+}
+
+/// Shared cancellation flag. Lock-free: the client thread sets it, the
+/// engine observes it between steps.
+#[derive(Debug, Default)]
+pub struct CancelCell {
+    // 0 = live, 1..=3 = CancelKind + 1.
+    state: AtomicU8,
+}
+
+impl CancelCell {
+    /// Request cancellation. The first cause sticks; returns whether this
+    /// call was the one that cancelled.
+    pub fn cancel(&self, kind: CancelKind) -> bool {
+        let code = match kind {
+            CancelKind::User => 1,
+            CancelKind::Deadline => 2,
+            CancelKind::Shutdown => 3,
+        };
+        self.state.compare_exchange(0, code, Ordering::AcqRel, Ordering::Acquire).is_ok()
+    }
+
+    pub fn get(&self) -> Option<CancelKind> {
+        match self.state.load(Ordering::Acquire) {
+            1 => Some(CancelKind::User),
+            2 => Some(CancelKind::Deadline),
+            3 => Some(CancelKind::Shutdown),
+            _ => None,
+        }
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.get().is_some()
+    }
+}
+
+/// One event on a request's stream.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// A decoded token, in order. `index` counts from 0; `emitted_us` is
+    /// the engine clock when it decoded.
+    Token { token: i32, index: usize, emitted_us: u64 },
+    /// The request never entered the queue (bounded-queue backpressure or
+    /// an unschedulable shape).
+    Rejected(SubmitError),
+    /// Terminal event: the request left the engine. Always last.
+    Finished(FinishedRequest),
+}
+
+/// Terminal outcome of [`RequestHandle::wait`]: completion, an admission
+/// rejection, and a dead engine are three different things.
+#[derive(Debug, Clone)]
+pub enum WaitOutcome {
+    Finished(FinishedRequest),
+    Rejected(SubmitError),
+    /// The engine dropped the ticket without a terminal event.
+    Disconnected,
+}
+
+impl WaitOutcome {
+    pub fn finished(self) -> Option<FinishedRequest> {
+        match self {
+            WaitOutcome::Finished(f) => Some(f),
+            _ => None,
+        }
+    }
+}
+
+/// Client side of a submitted request.
+pub struct RequestHandle {
+    id: RequestId,
+    events: mpsc::Receiver<StreamEvent>,
+    cancel: Arc<CancelCell>,
+}
+
+impl RequestHandle {
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Ask the engine to stop this request. Takes effect at the next step
+    /// boundary; the stream then ends with
+    /// `Finished(reason = Cancelled)` carrying the tokens generated so far.
+    pub fn cancel(&self) {
+        self.cancel.cancel(CancelKind::User);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// Non-blocking: the next queued event, if any.
+    pub fn try_event(&self) -> Option<StreamEvent> {
+        self.events.try_recv().ok()
+    }
+
+    /// Block up to `timeout` for the next event (threaded engines).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<StreamEvent> {
+        self.events.recv_timeout(timeout).ok()
+    }
+
+    /// Drain the stream until a terminal outcome: the finished request, an
+    /// admission rejection, or disconnection (the engine dropped the
+    /// ticket without finishing — engine thread died). Blocks if the
+    /// engine is still producing — on a threaded engine this waits for
+    /// completion; on a synchronous engine call it after `run_until_idle`.
+    pub fn wait(self) -> WaitOutcome {
+        loop {
+            match self.events.recv() {
+                Ok(StreamEvent::Finished(f)) => return WaitOutcome::Finished(f),
+                Ok(StreamEvent::Rejected(err)) => return WaitOutcome::Rejected(err),
+                Ok(StreamEvent::Token { .. }) => continue,
+                Err(_) => return WaitOutcome::Disconnected,
+            }
+        }
+    }
+
+    /// Convenience: drain whatever tokens are currently queued.
+    pub fn drain_tokens(&self) -> Vec<i32> {
+        let mut out = Vec::new();
+        while let Ok(ev) = self.events.try_recv() {
+            if let StreamEvent::Token { token, .. } = ev {
+                out.push(token);
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for RequestHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RequestHandle")
+            .field("id", &self.id)
+            .field("cancelled", &self.cancel.is_cancelled())
+            .finish()
+    }
+}
+
+/// Engine side of a request's stream: send-only, best-effort (a dropped
+/// handle must not wedge the engine).
+pub(crate) struct StreamSink {
+    tx: mpsc::Sender<StreamEvent>,
+}
+
+impl StreamSink {
+    pub(crate) fn send(&self, ev: StreamEvent) {
+        let _ = self.tx.send(ev);
+    }
+}
+
+/// Per-request serving metadata that travels with the request through
+/// admission and the running set.
+pub struct Ticket {
+    pub(crate) sink: StreamSink,
+    pub(crate) cancel: Arc<CancelCell>,
+    /// Absolute engine-clock deadline, µs. The engine cancels the request
+    /// (queued or running) once `now_us` passes it.
+    pub deadline_us: Option<u64>,
+    pub priority: Priority,
+}
+
+impl Ticket {
+    /// A ticket with no listening handle (internal/synthetic requests).
+    pub(crate) fn detached(opts: &SubmitOptions) -> Ticket {
+        let (tx, _rx) = mpsc::channel();
+        Ticket {
+            sink: StreamSink { tx },
+            cancel: Arc::new(CancelCell::default()),
+            deadline_us: opts.deadline_us,
+            priority: opts.priority,
+        }
+    }
+
+    /// Deadline check against the engine clock.
+    pub(crate) fn past_deadline(&self, now_us: u64) -> bool {
+        self.deadline_us.is_some_and(|d| now_us >= d)
+    }
+}
+
+impl std::fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ticket")
+            .field("priority", &self.priority)
+            .field("deadline_us", &self.deadline_us)
+            .field("cancelled", &self.cancel.is_cancelled())
+            .finish()
+    }
+}
+
+/// Submission options. `Default` is an interactive-tier-free request: the
+/// `Standard` class, no deadline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    pub priority: Priority,
+    /// Absolute engine-clock deadline, µs since engine start.
+    pub deadline_us: Option<u64>,
+}
+
+impl SubmitOptions {
+    pub fn priority(mut self, priority: Priority) -> SubmitOptions {
+        self.priority = priority;
+        self
+    }
+
+    pub fn deadline_us(mut self, deadline_us: u64) -> SubmitOptions {
+        self.deadline_us = Some(deadline_us);
+        self
+    }
+}
+
+/// A request plus its lifecycle ticket (what flows through admission).
+#[derive(Debug)]
+pub struct TrackedRequest {
+    pub req: Request,
+    pub(crate) ticket: Ticket,
+}
+
+impl TrackedRequest {
+    pub fn id(&self) -> RequestId {
+        self.req.id
+    }
+
+    pub fn priority(&self) -> Priority {
+        self.ticket.priority
+    }
+}
+
+/// Mint the (handle, ticket) pair for a submission.
+pub(crate) fn handle_pair(id: RequestId, opts: &SubmitOptions) -> (RequestHandle, Ticket) {
+    let (tx, rx) = mpsc::channel();
+    let cancel = Arc::new(CancelCell::default());
+    (
+        RequestHandle { id, events: rx, cancel: cancel.clone() },
+        Ticket {
+            sink: StreamSink { tx },
+            cancel,
+            deadline_us: opts.deadline_us,
+            priority: opts.priority,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_cancel_cause_wins() {
+        let cell = CancelCell::default();
+        assert!(!cell.is_cancelled());
+        assert!(cell.cancel(CancelKind::Deadline));
+        assert!(!cell.cancel(CancelKind::User));
+        assert_eq!(cell.get(), Some(CancelKind::Deadline));
+        assert_eq!(cell.get().unwrap().finish_reason(), FinishReason::DeadlineExceeded);
+    }
+
+    #[test]
+    fn handle_streams_tokens_then_finish() {
+        let (handle, ticket) = handle_pair(7, &SubmitOptions::default());
+        assert_eq!(handle.id(), 7);
+        ticket.sink.send(StreamEvent::Token { token: 11, index: 0, emitted_us: 5 });
+        ticket.sink.send(StreamEvent::Token { token: 12, index: 1, emitted_us: 9 });
+        assert_eq!(handle.drain_tokens(), vec![11, 12]);
+        ticket.sink.send(StreamEvent::Finished(FinishedRequest {
+            id: 7,
+            prompt_len: 3,
+            tokens: vec![11, 12],
+            reason: FinishReason::Length,
+            timing: Default::default(),
+        }));
+        drop(ticket);
+        let fin = handle.wait().finished().expect("finished event");
+        assert_eq!(fin.tokens, vec![11, 12]);
+    }
+
+    #[test]
+    fn cancel_flows_from_handle_to_ticket() {
+        let (handle, ticket) = handle_pair(1, &SubmitOptions::default());
+        handle.cancel();
+        assert_eq!(ticket.cancel.get(), Some(CancelKind::User));
+    }
+
+    #[test]
+    fn dropped_handle_does_not_wedge_the_sink() {
+        let (handle, ticket) = handle_pair(1, &SubmitOptions::default());
+        drop(handle);
+        ticket.sink.send(StreamEvent::Token { token: 1, index: 0, emitted_us: 0 });
+    }
+
+    #[test]
+    fn deadline_applies_to_ticket() {
+        let opts = SubmitOptions::default().deadline_us(100).priority(Priority::Interactive);
+        let (_h, ticket) = handle_pair(1, &opts);
+        assert_eq!(ticket.priority, Priority::Interactive);
+        assert!(!ticket.past_deadline(99));
+        assert!(ticket.past_deadline(100));
+    }
+}

@@ -46,6 +46,15 @@ pub struct EngineMetrics {
     pub prefill_calls: usize,
     pub tokens_generated: usize,
     pub requests_finished: usize,
+    /// Requests cut short by cancellation, deadline, or shutdown (not
+    /// counted in `requests_finished` and excluded from TTFT/TPOT).
+    pub requests_cancelled: usize,
+    /// Of the cancelled, those whose cause was a missed deadline.
+    pub deadline_misses: usize,
+    /// Submissions refused by the bounded admission queues.
+    pub rejected_backpressure: usize,
+    /// Submissions refused because they can never fit the KV budget.
+    pub rejected_unschedulable: usize,
     step_latencies_us: Vec<f64>,
     tpots_us: Vec<f64>,
     ttfts_us: Vec<f64>,
@@ -79,6 +88,13 @@ impl EngineMetrics {
         self.ttfts_us.push(timing.ttft_us() as f64);
     }
 
+    pub fn record_cancelled(&mut self, deadline_miss: bool) {
+        self.requests_cancelled += 1;
+        if deadline_miss {
+            self.deadline_misses += 1;
+        }
+    }
+
     pub fn step_latency(&self) -> Option<Summary> {
         (!self.step_latencies_us.is_empty()).then(|| Summary::of(&self.step_latencies_us))
     }
@@ -105,6 +121,15 @@ impl EngineMetrics {
             "steps={} (decode={} prefill_calls={}) tokens={} finished={}\n",
             self.steps, self.decode_steps, self.prefill_calls, self.tokens_generated, self.requests_finished
         ));
+        if self.requests_cancelled + self.rejected_backpressure + self.rejected_unschedulable > 0 {
+            out.push_str(&format!(
+                "cancelled={} (deadline={}) rejected: backpressure={} unschedulable={}\n",
+                self.requests_cancelled,
+                self.deadline_misses,
+                self.rejected_backpressure,
+                self.rejected_unschedulable
+            ));
+        }
         if let Some(s) = self.step_latency() {
             out.push_str(&format!(
                 "step latency µs: mean={:.1} p50={:.1} p99={:.1}\n",

@@ -5,26 +5,34 @@
 //! `num_splits` before launch. This module is that stack: a continuous-
 //! batching decode engine whose per-step scheduler asks the configured
 //! [`crate::planner::Planner`] for a (cached) launch plan derived from the
-//! live batch shape and routes each step to the matching AOT artifact.
+//! live batch shape, and whose execution is delegated entirely to a
+//! [`crate::backend::ExecutionBackend`] (sim, PJRT, or replay — the
+//! coordinator never knows which).
 //!
 //! * [`request`]  — request/response types and lifecycle timing,
-//! * [`kv_cache`] — paged KV block manager (admission + capacity),
-//! * [`batcher`]  — continuous batcher (FCFS admission, bucket packing),
-//! * [`scheduler`]— per-step split decision + artifact routing,
-//! * [`engine`]   — the serving loop over the PJRT runtime or the H100
-//!                  simulator backend,
-//! * [`metrics`]  — TTFT/TPOT/throughput accounting.
+//! * [`lifecycle`]— streaming [`RequestHandle`]s, per-request cancellation,
+//!                  deadlines, priority classes,
+//! * [`admission`]— bounded priority queues with explicit [`Backpressure`],
+//! * [`kv_cache`] — paged KV block manager (budget + capacity),
+//! * [`batcher`]  — the running set (slots, bucket packing),
+//! * [`scheduler`]— per-step split decision (planner metadata path),
+//! * [`engine`]   — the step loop over the execution backend,
+//! * [`metrics`]  — TTFT/TPOT/throughput/cancellation accounting.
 
+pub mod admission;
 pub mod batcher;
 pub mod engine;
 pub mod kv_cache;
+pub mod lifecycle;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
 
+pub use admission::{AdmissionConfig, AdmissionController, AdmissionStats, Backpressure, SubmitError};
 pub use batcher::{Batcher, BatcherConfig, StepPlan};
-pub use engine::{Engine, EngineBackend, EngineConfig};
+pub use engine::{Engine, EngineBuilder, EngineConfig, EngineHandle};
 pub use kv_cache::{BlockManager, BlockManagerConfig};
+pub use lifecycle::{CancelKind, Priority, RequestHandle, StreamEvent, SubmitOptions, WaitOutcome};
 pub use metrics::{EngineMetrics, RequestTiming};
 pub use request::{FinishReason, FinishedRequest, Request, RequestId};
-pub use scheduler::{DecodeScheduler, StepDecision};
+pub use scheduler::{AttnGeometry, DecodeScheduler, StepDecision};

@@ -1,5 +1,7 @@
 //! Request/response types for the decode engine.
 
+use super::lifecycle::Ticket;
+
 /// Engine-assigned request identifier.
 pub type RequestId = u64;
 
@@ -27,8 +29,19 @@ pub enum FinishReason {
     Length,
     /// KV cache would exceed the model's max_seq.
     CacheFull,
-    /// Engine shutdown before completion.
+    /// Cancelled through its `RequestHandle` (or `Engine::cancel`).
+    Cancelled,
+    /// The request's deadline elapsed before completion.
+    DeadlineExceeded,
+    /// Engine shutdown (`abort_all`) before completion.
     Aborted,
+}
+
+impl FinishReason {
+    /// Did the request run to a natural completion (vs being cut short)?
+    pub fn is_natural(self) -> bool {
+        matches!(self, FinishReason::Length | FinishReason::CacheFull)
+    }
 }
 
 /// A completed request with its generation and timing.
@@ -42,14 +55,16 @@ pub struct FinishedRequest {
 }
 
 /// Internal per-request state while scheduled.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub(crate) struct RunningRequest {
     pub req: Request,
+    /// Lifecycle ticket: stream sink, cancel cell, deadline, priority.
+    pub ticket: Ticket,
     /// Generated tokens so far.
     pub generated: Vec<i32>,
     /// Tokens of the prompt already ingested into the KV cache.
     pub prefilled: usize,
-    /// Row in the engine's KV cache tensor.
+    /// Row in the backend's KV cache store.
     pub slot: usize,
     /// µs timestamp of first generated token (TTFT), if any.
     pub first_token_us: Option<u64>,
@@ -58,9 +73,10 @@ pub(crate) struct RunningRequest {
 }
 
 impl RunningRequest {
-    pub fn new(req: Request, slot: usize, now_us: u64) -> RunningRequest {
+    pub fn new(req: Request, ticket: Ticket, slot: usize, now_us: u64) -> RunningRequest {
         RunningRequest {
             req,
+            ticket,
             generated: Vec::new(),
             prefilled: 0,
             slot,
@@ -86,11 +102,13 @@ impl RunningRequest {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::lifecycle::SubmitOptions;
 
     #[test]
     fn lifecycle_counters() {
         let req = Request::new(1, vec![5, 6, 7], 2);
-        let mut run = RunningRequest::new(req, 0, 100);
+        let ticket = Ticket::detached(&SubmitOptions::default());
+        let mut run = RunningRequest::new(req, ticket, 0, 100);
         assert_eq!(run.kv_len(), 0);
         assert!(!run.prompt_done());
         run.prefilled = 3;
@@ -100,5 +118,14 @@ mod tests {
         run.generated.push(10);
         assert!(run.done());
         assert_eq!(run.kv_len(), 5);
+    }
+
+    #[test]
+    fn natural_vs_cut_short() {
+        assert!(FinishReason::Length.is_natural());
+        assert!(FinishReason::CacheFull.is_natural());
+        assert!(!FinishReason::Cancelled.is_natural());
+        assert!(!FinishReason::DeadlineExceeded.is_natural());
+        assert!(!FinishReason::Aborted.is_natural());
     }
 }

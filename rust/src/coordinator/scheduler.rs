@@ -7,28 +7,28 @@
 //! bucket so consecutive steps reuse the decision — and routes to the AOT
 //! artifact compiled for that (bucket, num_splits).
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::heuristics::tiles::DecodeShape;
 use crate::heuristics::SchedulerMetadata;
 use crate::planner::{LaunchPlan, Planner};
 
-/// Model attention geometry the scheduler needs (from the manifest).
-#[derive(Debug, Clone, Copy)]
-pub struct AttnGeometry {
-    pub h_q: usize,
-    pub h_kv: usize,
-    pub d: usize,
-    pub max_seq: usize,
-}
+// The geometry now lives with the execution backends (a PJRT backend
+// derives it from its own manifest and hands it up through
+// `BackendTopology`); re-exported here because the scheduler is its main
+// consumer.
+pub use crate::backend::AttnGeometry;
 
 /// The split decision for one engine step.
 #[derive(Debug, Clone, Copy)]
 pub struct StepDecision {
     /// The planner's launch plan (the paper's precomputed-metadata path).
     pub plan: LaunchPlan,
-    /// Split count actually requested from the artifact registry (the
-    /// plan's num_splits snapped onto the compiled split variants).
+    /// The plan's num_splits snapped onto this scheduler's configured
+    /// split variants — advisory, for consumers that inspect routing
+    /// (benches, multi-queue schedulers). The engine ignores it: the
+    /// execution backend re-snaps against its OWN compiled variants in
+    /// `prepare`, which is the authoritative routing decision.
     pub artifact_splits: usize,
 }
 
@@ -134,30 +134,6 @@ impl std::fmt::Debug for DecodeScheduler {
             .field("available_splits", &self.available_splits)
             .finish()
     }
-}
-
-/// Build the scheduler from a loaded manifest (geometry + split variants
-/// come from the artifacts themselves, so engine and artifacts can't skew).
-pub fn scheduler_from_manifest(
-    manifest: &crate::runtime::Manifest,
-    planner: Planner,
-) -> Result<DecodeScheduler> {
-    let model = manifest.model.as_ref().context("manifest has no model block")?;
-    let geometry = AttnGeometry {
-        h_q: model.config.n_heads_q,
-        h_kv: model.config.n_heads_kv,
-        d: model.config.head_dim,
-        max_seq: model.config.max_seq,
-    };
-    let mut splits: Vec<usize> = manifest
-        .entries
-        .iter()
-        .filter(|e| e.kind == crate::runtime::ArtifactKind::Decode)
-        .filter_map(|e| e.meta.num_splits)
-        .collect();
-    splits.sort_unstable();
-    splits.dedup();
-    Ok(DecodeScheduler::new(planner, geometry, splits))
 }
 
 #[cfg(test)]

@@ -36,9 +36,46 @@
 //! [`evolve`], the benches, and the CLI all consume plans from
 //! [`planner::Planner`] — nothing else constructs scheduler metadata.
 //!
+//! ## Serving: one execution contract
+//!
+//! Execution mirrors planning: all serving flows through the
+//! [`backend::ExecutionBackend`] trait ([`backend::SimBackend`],
+//! [`backend::PjrtBackend`], [`backend::ReplayBackend`]) — no module
+//! outside [`backend`] knows sim from PJRT. The engine is built via
+//! `Engine::builder(Box<dyn ExecutionBackend>)`, and
+//! `Engine::submit` returns a [`coordinator::RequestHandle`] carrying a
+//! streaming token channel with per-request cancellation and deadlines;
+//! admission runs behind a bounded-queue
+//! [`coordinator::AdmissionController`] with priority classes and an
+//! explicit [`coordinator::Backpressure`] rejection outcome
+//! (DESIGN.md §Serving engine).
+//!
+//! ```
+//! use fa3_split::backend::{AttnGeometry, SimBackend};
+//! use fa3_split::coordinator::{Engine, Request, StreamEvent};
+//! use fa3_split::planner::Planner;
+//!
+//! let mut engine = Engine::builder(Box::new(SimBackend::h100()))
+//!     .planner(Planner::sequence_aware())
+//!     .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+//!     .available_splits(vec![1, 3])
+//!     .build()
+//!     .unwrap();
+//! let handle = engine.submit(Request::new(1, vec![7; 100], 4)).unwrap();
+//! engine.run_until_idle().unwrap();
+//! let tokens: Vec<i32> = std::iter::from_fn(|| handle.try_event())
+//!     .filter_map(|ev| match ev {
+//!         StreamEvent::Token { token, .. } => Some(token),
+//!         _ => None,
+//!     })
+//!     .collect();
+//! assert_eq!(tokens.len(), 4);
+//! ```
+//!
 //! Python never runs at request time: `make artifacts` lowers the model
 //! and kernels once, and everything here is self-contained after that.
 
+pub mod backend;
 pub mod bench_harness;
 pub mod coordinator;
 pub mod evolve;

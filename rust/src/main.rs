@@ -1,7 +1,7 @@
 //! fa3-split CLI — leader entrypoint for the reproduction stack.
 //!
 //! Subcommands:
-//!   serve       end-to-end serving over the AOT artifacts (PJRT CPU)
+//!   serve       end-to-end serving over an ExecutionBackend (pjrt|sim)
 //!   table1      reproduce Table 1 (kernel A/B on the simulated H100)
 //!   ucurve      reproduce Figure 3 (split sweep s = 1..64)
 //!   regression  reproduce §5.3 (160-config safety sweep)
@@ -17,8 +17,9 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use fa3_split::backend::{AttnGeometry, ExecutionBackend, PjrtBackend, SimBackend};
 use fa3_split::bench_harness::{regression, table1, ucurve};
-use fa3_split::coordinator::{Engine, EngineConfig};
+use fa3_split::coordinator::{Engine, EngineConfig, StreamEvent};
 use fa3_split::evolve::{Search, SearchConfig};
 use fa3_split::heuristics::tiles::DecodeShape;
 use fa3_split::planner::{DeviceProfile, Planner, PolicyRegistry};
@@ -32,7 +33,7 @@ const USAGE: &str = "fa3-split — sequence-aware split heuristic reproduction
 Usage: fa3-split <command> [options]
 
 Commands:
-  serve        serve a synthetic chat workload over the AOT artifacts
+  serve        serve a synthetic chat workload (--backend pjrt|sim)
   table1       reproduce Table 1 (A/B kernel test, simulated H100)
   ucurve       reproduce Figure 3 (split sweep s=1..64)
   regression   reproduce §5.3 (160-config regression sweep)
@@ -113,7 +114,8 @@ fn planner_from_args(registry: &PolicyRegistry, args: &cli::Args) -> Planner {
 fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let registry = PolicyRegistry::builtin();
     let args = parse(
-        cli::Parser::new("serve a synthetic chat workload over the AOT artifacts")
+        cli::Parser::new("serve a synthetic chat workload over an execution backend")
+            .opt("backend", "pjrt", "execution backend: pjrt (AOT artifacts) | sim (H100 model)")
             .opt("requests", "8", "number of requests")
             .opt("tokens", "32", "max new tokens per request")
             .opt("policy", "sequence-aware", format!("split policy: {}", registry.help_line()))
@@ -122,11 +124,32 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             .opt("seed", "7", "workload seed"),
         argv,
     );
-    let dir = artifacts_dir();
-    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
     let planner = planner_from_args(&registry, &args);
-    let pjrt = Arc::new(Registry::open(&dir)?);
-    let mut engine = Engine::with_pjrt(pjrt, planner, EngineConfig::default())?;
+    let cfg = EngineConfig::default();
+
+    // Resolve the backend behind the trait: nothing below this point
+    // branches on sim vs PJRT.
+    let backend_name = args.str("backend");
+    let mut builder = match backend_name.as_str() {
+        "pjrt" => {
+            let dir = artifacts_dir();
+            anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+            let pjrt = Arc::new(Registry::open(&dir)?);
+            let backend: Box<dyn ExecutionBackend> =
+                Box::new(PjrtBackend::new(pjrt, cfg.batcher.max_batch)?);
+            Engine::builder(backend)
+        }
+        "sim" => Engine::builder(Box::new(SimBackend::h100()))
+            .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+            .available_splits(vec![1, 3]),
+        other => {
+            eprintln!("unknown backend '{other}' (known: pjrt, sim)");
+            std::process::exit(2);
+        }
+    };
+    builder = builder.planner(planner).config(cfg);
+    let mut engine = builder.build()?;
+
     let workload = ChatWorkload {
         seed: args.u64("seed"),
         n_requests: args.usize("requests"),
@@ -135,20 +158,37 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
     for g in workload.generate() {
         let mut r = g.request;
         r.max_new_tokens = args.usize("tokens");
-        engine.submit(r);
+        match engine.submit(r) {
+            Ok(h) => handles.push(h),
+            Err(e) => eprintln!("request refused: {e}"),
+        }
     }
     let done = engine.run_until_idle()?;
-    engine.metrics.wall_us = t0.elapsed().as_micros() as u64;
+    if !engine.backend_caps().virtual_clock {
+        engine.metrics.wall_us = t0.elapsed().as_micros() as u64;
+    }
     println!(
-        "policy '{}': served {} requests in {:.2}s",
+        "policy '{}' on '{}': served {} requests in {:.2}s",
         engine.policy_name(),
+        engine.backend_caps().name,
         done.len(),
         t0.elapsed().as_secs_f64()
     );
     print!("{}", engine.metrics.report());
+    // Each handle streamed its tokens as they decoded.
+    let streamed: usize = handles
+        .iter()
+        .map(|h| {
+            std::iter::from_fn(|| h.try_event())
+                .filter(|ev| matches!(ev, StreamEvent::Token { .. }))
+                .count()
+        })
+        .sum();
+    println!("streamed {streamed} tokens across {} request handles", handles.len());
     Ok(())
 }
 

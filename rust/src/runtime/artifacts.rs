@@ -271,6 +271,22 @@ impl Manifest {
             .min_by_key(|e| e.meta.batch.unwrap())
     }
 
+    /// Split variants the decode artifact set was compiled with
+    /// (ascending, deduplicated). The execution backend advertises these
+    /// through its topology so the engine's scheduler and the artifacts
+    /// can't skew.
+    pub fn decode_split_variants(&self) -> Vec<usize> {
+        let mut splits: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Decode)
+            .filter_map(|e| e.meta.num_splits)
+            .collect();
+        splits.sort_unstable();
+        splits.dedup();
+        splits
+    }
+
     /// Smallest prefill bucket fitting `batch` rows of `prompt_len` tokens.
     pub fn find_prefill_bucket(&self, batch: usize, prompt_len: usize) -> Option<&ArtifactEntry> {
         self.entries

@@ -119,6 +119,15 @@ impl Simulator {
         let t = self.kernel_us(md);
         t * (1.0 + self.cal.noise_rel_std * rng.normal())
     }
+
+    /// Bulk prompt-ingestion latency for one request, µs. Prefill is
+    /// policy-invariant (the paper's change is decode-only), so a coarse
+    /// affine model — launch overhead plus a per-token compute/IO slope —
+    /// is enough for serving-level projections. Used by the sim execution
+    /// backend.
+    pub fn prefill_us(&self, prompt_len: usize) -> f64 {
+        50.0 + 0.05 * prompt_len as f64
+    }
 }
 
 #[cfg(test)]

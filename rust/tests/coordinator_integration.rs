@@ -2,12 +2,11 @@
 //! op sequences, end-to-end completion under random workloads (simulated
 //! backend), FCFS fairness, and failure injection.
 
-use fa3_split::coordinator::scheduler::AttnGeometry;
+use fa3_split::backend::{AttnGeometry, SimBackend};
 use fa3_split::coordinator::{
-    BlockManager, BlockManagerConfig, Engine, EngineConfig, FinishReason, Request,
+    BlockManager, BlockManagerConfig, Engine, EngineConfig, FinishReason, Request, SubmitError,
 };
 use fa3_split::planner::Planner;
-use fa3_split::sim::Simulator;
 use fa3_split::util::prng::Rng;
 use fa3_split::util::proptest_lite::{check, Domain};
 use fa3_split::workload::ChatWorkload;
@@ -15,16 +14,16 @@ use fa3_split::workload::ChatWorkload;
 fn sim_engine(policy_patched: bool, max_batch: usize) -> Engine {
     let buckets: Vec<usize> = [1, 2, 4, 8].into_iter().filter(|&b| b <= max_batch).collect();
     let max_batch = *buckets.last().unwrap(); // largest bucket IS the cap
-    Engine::with_simulator(
-        Simulator::h100(),
-        if policy_patched { Planner::sequence_aware() } else { Planner::standard() },
-        AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 },
-        vec![1, 3],
-        EngineConfig {
+    Engine::builder(Box::new(SimBackend::h100()))
+        .planner(if policy_patched { Planner::sequence_aware() } else { Planner::standard() })
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+        .available_splits(vec![1, 3])
+        .config(EngineConfig {
             batcher: fa3_split::coordinator::BatcherConfig { max_batch, batch_buckets: buckets },
             ..Default::default()
-        },
-    )
+        })
+        .build()
+        .unwrap()
 }
 
 #[test]
@@ -90,7 +89,7 @@ fn random_workloads_always_complete() {
             };
             let mut engine = sim_engine(true, max_batch);
             for g in workload.generate() {
-                engine.submit(g.request);
+                engine.submit(g.request).map_err(|e| format!("refused: {e}"))?;
             }
             let done = engine.run_until_idle().map_err(|e| format!("{e:#}"))?;
             if done.len() != n_requests {
@@ -120,7 +119,7 @@ fn fcfs_scheduling_order() {
     // With a single slot, completion order must equal submission order.
     let mut engine = sim_engine(false, 1);
     for id in 0..6 {
-        engine.submit(Request::new(id, vec![1; 20], 4));
+        engine.submit(Request::new(id, vec![1; 20], 4)).unwrap();
     }
     let done = engine.run_until_idle().unwrap();
     let order: Vec<u64> = done.iter().map(|f| f.id).collect();
@@ -129,25 +128,21 @@ fn fcfs_scheduling_order() {
 
 #[test]
 fn oversized_request_rejected_not_stuck() {
-    // A request that can never fit must not wedge the engine: it is
-    // worst-case-reserved, so admission fails forever — the engine must
-    // surface that rather than loop. We check that a too-long request
-    // leaves the queue non-drainable and smaller ones behind it are the
-    // head-of-line cost (documented FCFS behavior), by capping steps.
+    // A request that can never fit is refused at submission with an
+    // explicit outcome (the seed let it wedge the FCFS queue head forever;
+    // the admission controller rejects it up front), and the engine stays
+    // serviceable for everything behind it.
     let mut engine = sim_engine(true, 2);
     // max_seq is 1024: this can never be admitted.
-    engine.submit(Request::new(0, vec![1; 1000], 500));
-    engine.submit(Request::new(1, vec![1; 10], 4));
-    for _ in 0..50 {
-        if engine.step().is_err() {
-            break;
-        }
-    }
-    // Neither finished: request 0 is unschedulable, request 1 FCFS-blocked.
-    assert!(!engine.is_idle());
-    let aborted = engine.abort_all().unwrap();
-    assert_eq!(aborted.len(), 2);
-    assert!(aborted.iter().all(|f| f.reason == FinishReason::Aborted));
+    let err = engine.submit(Request::new(0, vec![1; 1000], 500)).unwrap_err();
+    assert!(matches!(err, SubmitError::Unschedulable { .. }));
+    engine.submit(Request::new(1, vec![1; 10], 4)).unwrap();
+    let done = engine.run_until_idle().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].id, 1);
+    assert_eq!(done[0].reason, FinishReason::Length);
+    assert_eq!(engine.metrics.rejected_unschedulable, 1);
+    assert!(engine.is_idle());
 }
 
 #[test]
@@ -159,7 +154,7 @@ fn policy_choice_changes_only_latency_not_results() {
     let run = |patched: bool| {
         let mut e = sim_engine(patched, 4);
         for g in workload.generate() {
-            e.submit(g.request);
+            e.submit(g.request).unwrap();
         }
         let mut done = e.run_until_idle().unwrap();
         done.sort_by_key(|f| f.id);
@@ -179,7 +174,7 @@ fn metrics_are_internally_consistent() {
     let mut engine = sim_engine(true, 4);
     let workload = ChatWorkload { n_requests: 10, seed: 5, output_mean: 16, output_cap: 16, ..Default::default() };
     for g in workload.generate() {
-        engine.submit(g.request);
+        engine.submit(g.request).unwrap();
     }
     let done = engine.run_until_idle().unwrap();
     let m = &engine.metrics;

@@ -10,6 +10,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use fa3_split::backend::PjrtBackend;
 use fa3_split::coordinator::{Engine, EngineConfig, FinishReason, Request};
 use fa3_split::planner::Planner;
 use fa3_split::runtime::Registry;
@@ -20,14 +21,20 @@ fn artifacts_dir() -> Option<PathBuf> {
     dir.join("manifest.json").exists().then_some(dir)
 }
 
+fn pjrt_engine(registry: Arc<Registry>, planner: Planner) -> Engine {
+    let cfg = EngineConfig::default();
+    let backend = PjrtBackend::new(registry, cfg.batcher.max_batch).unwrap();
+    Engine::builder(Box::new(backend)).planner(planner).config(cfg).build().unwrap()
+}
+
 fn serve(
     registry: Arc<Registry>,
     planner: Planner,
     requests: &[Request],
 ) -> Vec<(u64, Vec<i32>)> {
-    let mut engine = Engine::with_pjrt(registry, planner, EngineConfig::default()).unwrap();
+    let mut engine = pjrt_engine(registry, planner);
     for r in requests {
-        engine.submit(r.clone());
+        engine.submit(r.clone()).unwrap();
     }
     let mut done = engine.run_until_idle().unwrap();
     assert_eq!(done.len(), requests.len());
@@ -94,10 +101,9 @@ fn serving_batches_multiple_requests() {
     if registry.manifest.model.is_none() {
         return;
     }
-    let mut engine =
-        Engine::with_pjrt(registry, Planner::sequence_aware(), EngineConfig::default()).unwrap();
+    let mut engine = pjrt_engine(registry, Planner::sequence_aware());
     for id in 0..3 {
-        engine.submit(Request::new(id, vec![(id as i32) + 5; 8], 4));
+        engine.submit(Request::new(id, vec![(id as i32) + 5; 8], 4)).unwrap();
     }
     let done = engine.run_until_idle().unwrap();
     assert_eq!(done.len(), 3);

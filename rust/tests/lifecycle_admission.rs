@@ -1,0 +1,365 @@
+//! Property-style tests (util::proptest_lite) for the request-lifecycle +
+//! admission-controller invariants:
+//!
+//! * the KV-block budget is never exceeded, under any interleaving of
+//!   submissions, cancellations, and steps,
+//! * FIFO within a priority class (and strict priority across classes),
+//! * cancelled requests free their blocks (and KV rows) promptly,
+//! * bounded queues reject with an explicit `Backpressure` outcome,
+//! * deadlines cut requests short with `DeadlineExceeded`,
+//! * the streaming handle sees exactly the tokens the result carries.
+
+use fa3_split::backend::{AttnGeometry, SimBackend};
+use fa3_split::coordinator::{
+    BatcherConfig, BlockManagerConfig, Engine, EngineConfig, FinishReason, Priority, Request,
+    StreamEvent, SubmitError, SubmitOptions,
+};
+use fa3_split::planner::Planner;
+use fa3_split::util::prng::Rng;
+use fa3_split::util::proptest_lite::{check, Config, Domain};
+use fa3_split::workload::ChatWorkload;
+
+fn engine(max_batch: usize, num_blocks: usize, queue_capacity: usize) -> Engine {
+    let buckets: Vec<usize> = [1, 2, 4, 8].into_iter().filter(|&b| b <= max_batch).collect();
+    let mut cfg = EngineConfig {
+        batcher: BatcherConfig { max_batch: *buckets.last().unwrap(), batch_buckets: buckets },
+        blocks: BlockManagerConfig { block_size: 16, num_blocks, max_seq: 1024 },
+        ..Default::default()
+    };
+    cfg.admission.queue_capacity = queue_capacity;
+    Engine::builder(Box::new(SimBackend::h100()))
+        .planner(Planner::sequence_aware())
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+        .available_splits(vec![1, 3])
+        .config(cfg)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn kv_budget_never_exceeded_under_random_lifecycles() {
+    // Random interleavings of submit / cancel / step: block accounting
+    // must balance and stay within budget at EVERY step boundary.
+    check(
+        "kv-budget",
+        &[Domain::new(2, 16), Domain::new(4, 64), Domain::new(0, u64::MAX)],
+        |case| {
+            let max_batch = case[0] as usize; // engine() snaps to the bucket grid
+            let num_blocks = case[1] as usize;
+            let mut rng = Rng::new(case[2]);
+            let mut e = engine(max_batch, num_blocks, 64);
+            let budget = num_blocks;
+            let mut handles = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..120 {
+                match rng.range(0, 2) {
+                    0 => {
+                        let prompt = rng.range(1, 200);
+                        let max_new = rng.range(1, 64);
+                        if let Ok(h) = e.submit(Request::new(next_id, vec![1; prompt], max_new)) {
+                            handles.push(h);
+                        }
+                        next_id += 1;
+                    }
+                    1 => {
+                        if !handles.is_empty() {
+                            let idx = rng.range(0, handles.len() - 1);
+                            handles[idx].cancel();
+                        }
+                    }
+                    _ => {
+                        e.step().map_err(|err| format!("step: {err:#}"))?;
+                    }
+                }
+                let blocks = e.block_manager();
+                blocks.check_invariants().map_err(|err| format!("{err:#}"))?;
+                if blocks.used_blocks() > budget {
+                    return Err(format!(
+                        "{} blocks in use, budget {}",
+                        blocks.used_blocks(),
+                        budget
+                    ));
+                }
+            }
+            let _ = e.run_until_idle().map_err(|err| format!("drain: {err:#}"))?;
+            if e.block_manager().num_seqs() != 0 {
+                return Err("blocks leaked after drain".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fifo_within_each_priority_class() {
+    // Single-slot engine: completion order == admission order. Restricted
+    // to any one priority class, that order must equal submission order,
+    // whatever the interleaving of classes.
+    check(
+        "class-fifo",
+        &[Domain::new(2, 20), Domain::new(0, u64::MAX)],
+        |case| {
+            let n = case[0] as usize;
+            let mut rng = Rng::new(case[1]);
+            let mut e = engine(1, 256, 64);
+            let mut class_of = Vec::new();
+            for id in 0..n as u64 {
+                let priority = match rng.range(0, 2) {
+                    0 => Priority::Interactive,
+                    1 => Priority::Standard,
+                    _ => Priority::Batch,
+                };
+                class_of.push(priority);
+                e.submit_with(
+                    Request::new(id, vec![1; 10], 3),
+                    SubmitOptions::default().priority(priority),
+                )
+                .map_err(|err| format!("refused: {err}"))?;
+            }
+            let done = e.run_until_idle().map_err(|err| format!("{err:#}"))?;
+            if done.len() != n {
+                return Err(format!("{} of {n} finished", done.len()));
+            }
+            for class in Priority::all() {
+                let completed: Vec<u64> = done
+                    .iter()
+                    .filter(|f| class_of[f.id as usize] == class)
+                    .map(|f| f.id)
+                    .collect();
+                let mut sorted = completed.clone();
+                sorted.sort_unstable();
+                if completed != sorted {
+                    return Err(format!("class {class:?} completed out of order: {completed:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cancelled_requests_free_blocks() {
+    // Cancel a random subset mid-flight: every cancelled request must
+    // release its blocks, every survivor must still finish Length, and the
+    // manager must end empty.
+    check(
+        "cancel-frees-blocks",
+        &[Domain::new(2, 12), Domain::new(1, 10), Domain::new(0, u64::MAX)],
+        |case| {
+            let n = case[0] as usize;
+            let steps_before_cancel = case[1] as usize;
+            let mut rng = Rng::new(case[2]);
+            let mut e = engine(4, 256, 64);
+            let mut handles = Vec::new();
+            for id in 0..n as u64 {
+                handles.push(
+                    e.submit(Request::new(id, vec![1; 50], 200))
+                        .map_err(|err| format!("refused: {err}"))?,
+                );
+            }
+            for _ in 0..steps_before_cancel {
+                e.step().map_err(|err| format!("{err:#}"))?;
+            }
+            let mut cancelled_ids = Vec::new();
+            for (id, h) in handles.iter().enumerate() {
+                if rng.chance(0.5) {
+                    h.cancel();
+                    cancelled_ids.push(id as u64);
+                }
+            }
+            let done = e.run_until_idle().map_err(|err| format!("{err:#}"))?;
+            if done.len() != n {
+                return Err(format!("{} of {n} finished", done.len()));
+            }
+            for f in &done {
+                let was_cancelled = cancelled_ids.contains(&f.id);
+                match (was_cancelled, f.reason) {
+                    (true, FinishReason::Cancelled) => {}
+                    // A cancel can race natural completion: Length is legal
+                    // for a cancelled id, but not the reverse.
+                    (true, FinishReason::Length) => {}
+                    (false, FinishReason::Length) => {}
+                    (c, r) => return Err(format!("req {} cancelled={c} reason={r:?}", f.id)),
+                }
+            }
+            e.block_manager().check_invariants().map_err(|err| format!("{err:#}"))?;
+            if e.block_manager().num_seqs() != 0 {
+                return Err("cancelled requests leaked blocks".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bounded_queue_backpressure_is_exact() {
+    // With a single slot and tiny queues, exactly (capacity + running)
+    // submissions can be in flight; the rest must come back Backpressure
+    // and the admitted ones must all finish.
+    check(
+        "backpressure",
+        &[Domain::new(1, 6), Domain::new(2, 24)],
+        |case| {
+            let capacity = case[0] as usize;
+            let n = case[1] as usize;
+            let mut e = engine(1, 256, capacity);
+            let mut accepted = 0usize;
+            let mut rejected = 0usize;
+            for id in 0..n as u64 {
+                match e.submit(Request::new(id, vec![1; 10], 2)) {
+                    Ok(_) => accepted += 1,
+                    Err(SubmitError::Backpressure(bp)) => {
+                        if bp.capacity != capacity {
+                            return Err(format!("capacity {} != {capacity}", bp.capacity));
+                        }
+                        rejected += 1;
+                    }
+                    Err(other) => return Err(format!("unexpected refusal: {other}")),
+                }
+            }
+            if accepted != n.min(capacity) {
+                return Err(format!("accepted {accepted}, expected {}", n.min(capacity)));
+            }
+            if accepted + rejected != n {
+                return Err("accounting broken".into());
+            }
+            let done = e.run_until_idle().map_err(|err| format!("{err:#}"))?;
+            if done.len() != accepted {
+                return Err(format!("{} finished, {accepted} accepted", done.len()));
+            }
+            if e.metrics.rejected_backpressure != rejected {
+                return Err("metrics disagree with rejections".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn deadlines_cut_requests_short_exactly_once_past_the_clock() {
+    check(
+        "deadline",
+        &[Domain::new(1, 40), Domain::new(0, u64::MAX)],
+        |case| {
+            let deadline_us = case[0] * 250; // 250 µs .. 10 ms, virtual
+            let mut rng = Rng::new(case[1]);
+            let mut e = engine(2, 256, 64);
+            let n = 4u64;
+            for id in 0..n {
+                let max_new = rng.range(4, 400);
+                e.submit_with(
+                    Request::new(id, vec![1; 50], max_new),
+                    SubmitOptions::default().deadline_us(deadline_us),
+                )
+                .map_err(|err| format!("refused: {err}"))?;
+            }
+            let done = e.run_until_idle().map_err(|err| format!("{err:#}"))?;
+            if done.len() != n as usize {
+                return Err(format!("{} of {n} finished", done.len()));
+            }
+            for f in &done {
+                match f.reason {
+                    FinishReason::Length => {
+                        // Finished before its deadline hit. Nothing to check:
+                        // completion timestamps are step-quantized.
+                    }
+                    FinishReason::DeadlineExceeded => {
+                        if f.timing.finished_us < deadline_us {
+                            return Err(format!(
+                                "req {} reaped at {} before deadline {deadline_us}",
+                                f.id, f.timing.finished_us
+                            ));
+                        }
+                    }
+                    other => return Err(format!("req {}: unexpected {other:?}", f.id)),
+                }
+            }
+            e.block_manager().check_invariants().map_err(|err| format!("{err:#}"))?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn streams_carry_exactly_the_resulting_tokens() {
+    // For every request in a random workload, the handle's token stream
+    // must equal the tokens in its FinishedRequest, in order, ending with
+    // the terminal event.
+    check(
+        "stream-equivalence",
+        &[Domain::new(1, 16), Domain::new(0, u64::MAX)],
+        |case| {
+            let n = case[0] as usize;
+            let workload = ChatWorkload {
+                seed: case[1],
+                n_requests: n,
+                prompt_median: 80,
+                output_mean: 10,
+                output_cap: 24,
+                ..Default::default()
+            };
+            let mut e = engine(4, 512, 64);
+            let mut handles = Vec::new();
+            for g in workload.generate() {
+                handles.push(e.submit(g.request).map_err(|err| format!("refused: {err}"))?);
+            }
+            let mut done = e.run_until_idle().map_err(|err| format!("{err:#}"))?;
+            done.sort_by_key(|f| f.id);
+            for (f, h) in done.iter().zip(handles.iter()) {
+                let mut streamed = Vec::new();
+                let mut finished = None;
+                while let Some(ev) = h.try_event() {
+                    match ev {
+                        StreamEvent::Token { token, index, .. } => {
+                            if index != streamed.len() {
+                                return Err(format!("req {}: token index gap", f.id));
+                            }
+                            streamed.push(token);
+                        }
+                        StreamEvent::Finished(fin) => finished = Some(fin),
+                        StreamEvent::Rejected(err) => {
+                            return Err(format!("req {}: spurious rejection {err}", f.id))
+                        }
+                    }
+                }
+                if streamed != f.tokens {
+                    return Err(format!("req {}: stream != result tokens", f.id));
+                }
+                let fin = finished.ok_or_else(|| format!("req {}: no terminal event", f.id))?;
+                if fin.tokens != f.tokens || fin.reason != f.reason {
+                    return Err(format!("req {}: terminal event disagrees", f.id));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn strict_priority_serves_interactive_first() {
+    // Not a property test: a deterministic check that with everything
+    // submitted up front, Interactive requests complete before Standard
+    // before Batch on a single slot.
+    let mut e = engine(1, 256, 64);
+    for (id, priority) in [
+        (0u64, Priority::Batch),
+        (1, Priority::Standard),
+        (2, Priority::Interactive),
+        (3, Priority::Batch),
+        (4, Priority::Interactive),
+    ] {
+        e.submit_with(Request::new(id, vec![1; 10], 2), SubmitOptions::default().priority(priority))
+            .unwrap();
+    }
+    let done = e.run_until_idle().unwrap();
+    let order: Vec<u64> = done.iter().map(|f| f.id).collect();
+    assert_eq!(order, vec![2, 4, 1, 0, 3]);
+}
+
+#[test]
+fn proptest_config_is_replayable() {
+    // The lifecycle suites honor FA3_PROPTEST_SEED (documented replay
+    // path); just assert the plumbing exists.
+    let cfg = Config::default();
+    assert!(cfg.cases >= 1);
+}

@@ -1,0 +1,132 @@
+//! ReplayBackend determinism: a recorded step trace replayed through a
+//! fresh engine must reproduce the run exactly — same tokens, same
+//! timings, identical `EngineMetrics` — and any divergence between the
+//! replaying engine and the trace must fail loudly.
+//!
+//! The `soak` test is `#[ignore]`d for normal runs and executed by the CI
+//! replay gate (`cargo test --release --test replay_determinism --
+//! --include-ignored`).
+
+use fa3_split::backend::{AttnGeometry, ExecutionBackend, ReplayBackend, SimBackend, StepTrace};
+use fa3_split::coordinator::{Engine, EngineConfig, EngineMetrics, FinishedRequest};
+use fa3_split::planner::Planner;
+use fa3_split::workload::ChatWorkload;
+
+fn build_engine(backend: Box<dyn ExecutionBackend>) -> Engine {
+    Engine::builder(backend)
+        .planner(Planner::sequence_aware())
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+        .available_splits(vec![1, 3])
+        .config(EngineConfig::default())
+        .build()
+        .unwrap()
+}
+
+fn workload(n: usize, seed: u64) -> ChatWorkload {
+    ChatWorkload {
+        seed,
+        n_requests: n,
+        prompt_median: 300,
+        output_mean: 24,
+        output_cap: 48,
+        ..Default::default()
+    }
+}
+
+/// Everything that must be bit-identical across record and replay.
+fn snapshot(m: &EngineMetrics, done: &[FinishedRequest]) -> String {
+    let mut requests: Vec<String> = done
+        .iter()
+        .map(|f| {
+            format!(
+                "{}:{:?}:{:?}:{}:{}:{}",
+                f.id, f.reason, f.tokens, f.timing.ttft_us(), f.timing.finished_us,
+                f.timing.n_generated
+            )
+        })
+        .collect();
+    requests.sort();
+    format!(
+        "steps={} decode={} prefill={} tokens={} finished={} hist={:?} wall={} \
+         tpot={:?} ttft={:?}\n{}",
+        m.steps,
+        m.decode_steps,
+        m.prefill_calls,
+        m.tokens_generated,
+        m.requests_finished,
+        m.split_histogram,
+        m.wall_us,
+        m.tpot(),
+        m.ttft(),
+        requests.join("\n")
+    )
+}
+
+fn record_run(n: usize, seed: u64) -> (String, StepTrace) {
+    let (backend, trace) = ReplayBackend::recorder(Box::new(SimBackend::h100()));
+    let mut engine = build_engine(Box::new(backend));
+    for g in workload(n, seed).generate() {
+        engine.submit(g.request).unwrap();
+    }
+    let done = engine.run_until_idle().unwrap();
+    let snap = snapshot(&engine.metrics, &done);
+    let trace = trace.lock().unwrap().clone();
+    (snap, trace)
+}
+
+fn replay_run(trace: StepTrace, n: usize, seed: u64) -> anyhow::Result<String> {
+    let mut engine = build_engine(Box::new(ReplayBackend::replay(trace)));
+    for g in workload(n, seed).generate() {
+        engine
+            .submit(g.request)
+            .map_err(|e| anyhow::anyhow!("refused: {e}"))?;
+    }
+    let done = engine.run_until_idle()?;
+    Ok(snapshot(&engine.metrics, &done))
+}
+
+#[test]
+fn same_trace_means_identical_engine_metrics() {
+    let (recorded, trace) = record_run(6, 0xD1CE);
+    let replayed = replay_run(trace.clone(), 6, 0xD1CE).unwrap();
+    assert_eq!(recorded, replayed, "replay diverged from the recorded run");
+    // Replaying twice is just as deterministic.
+    let replayed_again = replay_run(trace, 6, 0xD1CE).unwrap();
+    assert_eq!(recorded, replayed_again);
+}
+
+#[test]
+fn replay_detects_a_different_workload() {
+    let (_, trace) = record_run(6, 0xD1CE);
+    // Different seed => different prompts => the engine prepares different
+    // steps than the trace recorded: must error, not silently replay.
+    let err = replay_run(trace, 6, 0xBEEF).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("divergence") || msg.contains("exhausted"),
+        "unexpected error: {msg}"
+    );
+}
+
+#[test]
+fn replay_detects_a_truncated_trace() {
+    let (_, mut trace) = record_run(4, 7);
+    assert!(trace.len() > 4);
+    trace.records.truncate(trace.len() / 2);
+    let err = replay_run(trace, 4, 7).unwrap_err();
+    assert!(format!("{err:#}").contains("exhausted"), "{err:#}");
+}
+
+/// CI soak gate: a larger open-loop-style run recorded once and replayed
+/// repeatedly; every replay must be bit-identical. `#[ignore]` keeps it
+/// out of the default `cargo test` wall time.
+#[test]
+#[ignore]
+fn soak_record_replay_stays_identical() {
+    let (recorded, trace) = record_run(64, 0x50AC);
+    assert!(trace.len() > 300, "soak should cover many steps, got {}", trace.len());
+    for round in 0..5 {
+        let replayed = replay_run(trace.clone(), 64, 0x50AC).unwrap();
+        assert_eq!(recorded, replayed, "replay round {round} diverged");
+    }
+}
