@@ -1,0 +1,334 @@
+//! Bench: cluster-scale TP sweep — the occupancy gap widening as tensor
+//! parallelism shrinks per-shard head count.
+//!
+//! The paper measures a single device; this harness measures the *cluster
+//! decision that produces the paper's regime*. A fixed 8-KV-head GQA model
+//! (Llama-3.1-70B attention shape) is served by a fleet at tp ∈ {1,2,4,8}:
+//! per-shard `H_KV = 8/tp`, so the B=1 decode tile count walks 8 → 1 and
+//! crosses the sequence-aware policy's `tiles < 4` window between tp=2 and
+//! tp=4. Expected shape (deterministic sim):
+//!
+//! * tp=1, tp=2 — tiles ≥ 4: both policies plan identically, speedup 1.00x,
+//! * tp=4, tp=8 — tiles < 4 in the L_K=385..512 bucket: the override fires,
+//!   TPOT speedup ~1.15–1.25x, per-replica occupancy roughly doubles,
+//! * batched sweep (max_batch=4) — the window additionally depends on the
+//!   live batch (`tiles = B × H_KV_shard`), so the advantage grows
+//!   *strictly* from tp=4 (fires only at B=1) to tp=8 (fires at B ≤ 3).
+//!
+//! A router comparison at tp=8 closes the loop: session-affinity keeps
+//! every session single-replica, least-loaded minimizes imbalance.
+//!
+//! Run: `cargo bench --bench cluster_scale [-- --json PATH]`
+//! (`BENCH_cluster_scale.json` is regenerated with `--json`.)
+
+use fa3_split::backend::AttnGeometry;
+use fa3_split::cluster::{
+    router, ClusterTopology, Fleet, FleetConfig, FleetReport, Router, TpConfig,
+};
+use fa3_split::coordinator::{BatcherConfig, EngineConfig};
+use fa3_split::planner::DeviceProfile;
+use fa3_split::util::json::Json;
+use fa3_split::util::table::{speedup, us, Align, Table};
+use fa3_split::workload::ChatWorkload;
+
+/// Full-model attention geometry (Llama-3.1-70B: 64 Q heads, 8 KV heads).
+const MODEL: AttnGeometry = AttnGeometry { h_q: 64, h_kv: 8, d: 128, max_seq: 1024 };
+const TP_DEGREES: [usize; 4] = [1, 2, 4, 8];
+const REPLICAS: usize = 2;
+
+/// Heavy-decode chat: the shared boundary-bucket regime (prompts pinned
+/// to [385, 448] so every decode trajectory traverses the L_K=385..512
+/// bucket; trajectories still spill beyond 512 into control territory).
+fn heavy_decode(seed: u64, n_requests: usize) -> ChatWorkload {
+    ChatWorkload::boundary_bucket(seed, n_requests, 96)
+}
+
+fn engine_cfg(max_batch: usize) -> EngineConfig {
+    EngineConfig { batcher: BatcherConfig::for_max_batch(max_batch), ..Default::default() }
+}
+
+fn run_fleet(
+    tp: usize,
+    policy: &str,
+    router: Box<dyn Router>,
+    workload: &ChatWorkload,
+    replicas: usize,
+    max_batch: usize,
+) -> FleetReport {
+    let topology = ClusterTopology::builder(MODEL)
+        .tp(TpConfig::new(tp))
+        .replicas(replicas, DeviceProfile::H100_SXM)
+        .build()
+        .expect("valid sweep topology");
+    let mut fleet = Fleet::new(
+        topology,
+        router,
+        FleetConfig::default().policy(policy).engine(engine_cfg(max_batch)),
+    )
+    .expect("fleet builds");
+    fleet.run(&workload.generate()).expect("fleet run completes")
+}
+
+/// One TP point: the same workload under both policies.
+struct SweepRow {
+    tp: usize,
+    shard_h_kv: usize,
+    std: FleetReport,
+    seq: FleetReport,
+}
+
+impl SweepRow {
+    fn tpot_mean(report: &FleetReport) -> f64 {
+        report.tpot.as_ref().map(|s| s.mean).unwrap_or(0.0)
+    }
+
+    /// Sequence-aware advantage: standard-TPOT / sequence-aware-TPOT.
+    fn advantage(&self) -> f64 {
+        let (a, b) = (Self::tpot_mean(&self.std), Self::tpot_mean(&self.seq));
+        if b > 0.0 {
+            a / b
+        } else {
+            0.0
+        }
+    }
+}
+
+fn sweep(max_batch: usize, n_requests: usize, seed: u64) -> Vec<SweepRow> {
+    TP_DEGREES
+        .iter()
+        .map(|&tp| {
+            let workload = heavy_decode(seed, n_requests);
+            let std = run_fleet(
+                tp,
+                "standard",
+                Box::new(router::RoundRobin::new()),
+                &workload,
+                REPLICAS,
+                max_batch,
+            );
+            let seq = run_fleet(
+                tp,
+                "sequence-aware",
+                Box::new(router::RoundRobin::new()),
+                &workload,
+                REPLICAS,
+                max_batch,
+            );
+            SweepRow { tp, shard_h_kv: MODEL.h_kv / tp, std, seq }
+        })
+        .collect()
+}
+
+/// Router comparison at the sharpest point (tp=8, sequence-aware): Poisson
+/// traffic in multi-turn sessions across 4 replicas.
+fn router_comparison() -> Vec<FleetReport> {
+    ["round-robin", "least-loaded", "session-affinity"]
+        .into_iter()
+        .map(|name| {
+            let workload = ChatWorkload {
+                mean_gap_us: 1_200,
+                turns_per_session: 4,
+                ..heavy_decode(0xC3, 32)
+            };
+            run_fleet(8, "sequence-aware", router::by_name(name).expect("known"), &workload, 4, 2)
+        })
+        .collect()
+}
+
+/// The acceptance gate (also mirrored in tests/cluster_fleet.rs): the
+/// sequence-aware advantage must never regress and must widen as sharding
+/// shrinks head count.
+fn verify(b1: &[SweepRow], batched: &[SweepRow], routers: &[FleetReport]) -> Result<(), String> {
+    for rows in [b1, batched] {
+        for r in rows {
+            if r.advantage() < 0.999 {
+                return Err(format!("tp={}: sequence-aware regressed ({:.3}x)", r.tp, r.advantage()));
+            }
+            if r.std.finished.len() != r.seq.finished.len() {
+                return Err(format!("tp={}: A/B served different request counts", r.tp));
+            }
+        }
+        for w in rows.windows(2) {
+            if w[1].advantage() < w[0].advantage() - 0.01 {
+                return Err(format!(
+                    "advantage shrank from tp={} ({:.3}x) to tp={} ({:.3}x)",
+                    w[0].tp,
+                    w[0].advantage(),
+                    w[1].tp,
+                    w[1].advantage()
+                ));
+            }
+        }
+    }
+    let b1_tp8 = b1.last().expect("tp=8 row");
+    if b1_tp8.advantage() < 1.05 {
+        return Err(format!("tp=8 B=1 advantage too small: {:.3}x", b1_tp8.advantage()));
+    }
+    // Occupancy: sharding starves the standard policy; the sequence-aware
+    // policy recovers a chunk of it at tp=8.
+    let occ = |r: &FleetReport| r.mean_occupancy();
+    if occ(&b1.last().unwrap().std) >= occ(&b1.first().unwrap().std) {
+        return Err("standard occupancy should collapse as tp grows".into());
+    }
+    if occ(&b1_tp8.seq) <= occ(&b1_tp8.std) {
+        return Err("sequence-aware should lift tp=8 occupancy".into());
+    }
+    // Router invariants at tp=8.
+    let affinity = routers.iter().find(|r| r.router == "session-affinity").expect("ran");
+    if affinity.affinity_violations() != 0 {
+        return Err(format!("session-affinity violated {} sessions", affinity.affinity_violations()));
+    }
+    for r in routers {
+        let lost = r.rejected + r.rejected_backpressure();
+        if lost != 0 {
+            return Err(format!("router '{}' run lost {lost} requests to rejection", r.router));
+        }
+    }
+    Ok(())
+}
+
+fn occupancy_json(report: &FleetReport) -> Json {
+    // Null = the replica ran no decode steps (not a measured 0%).
+    Json::arr(
+        report
+            .replicas
+            .iter()
+            .map(|r| r.mean_occupancy.map(Json::num).unwrap_or(Json::Null)),
+    )
+}
+
+fn sweep_json(rows: &[SweepRow]) -> Json {
+    Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("tp_degree", Json::int(r.tp as i64)),
+            ("shard_h_kv", Json::int(r.shard_h_kv as i64)),
+            ("b1_tiles", Json::int(r.shard_h_kv as i64)),
+            (
+                "standard_tpot_mean_us",
+                Json::num(SweepRow::tpot_mean(&r.std)),
+            ),
+            (
+                "sequence_aware_tpot_mean_us",
+                Json::num(SweepRow::tpot_mean(&r.seq)),
+            ),
+            ("tpot_speedup", Json::num(r.advantage())),
+            ("standard_per_replica_occupancy", occupancy_json(&r.std)),
+            ("sequence_aware_per_replica_occupancy", occupancy_json(&r.seq)),
+            ("aggregate_tok_s_standard", Json::num(r.std.aggregate_tok_s)),
+            ("aggregate_tok_s_sequence_aware", Json::num(r.seq.aggregate_tok_s)),
+        ])
+    }))
+}
+
+fn routers_json(routers: &[FleetReport]) -> Json {
+    Json::arr(routers.iter().map(|r| {
+        Json::obj(vec![
+            ("router", Json::str(r.router)),
+            ("imbalance", Json::num(r.imbalance())),
+            ("affinity_violations", Json::int(r.affinity_violations() as i64)),
+            ("aggregate_tok_s", Json::num(r.aggregate_tok_s)),
+            (
+                "ttft_p99_us",
+                r.ttft.as_ref().map(|s| Json::num(s.p99)).unwrap_or(Json::Null),
+            ),
+            ("rejected", Json::int(r.rejected as i64)),
+            ("rejected_backpressure", Json::int(r.rejected_backpressure() as i64)),
+        ])
+    }))
+}
+
+fn print_sweep(title: &str, rows: &[SweepRow]) {
+    println!("\n== {title} ==");
+    let mut t = Table::new(&[
+        "tp",
+        "H_KV/shard",
+        "Std TPOT",
+        "Seq TPOT",
+        "Advantage",
+        "Std occ",
+        "Seq occ",
+    ])
+    .align(&[
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for r in rows {
+        t.row(&[
+            r.tp.to_string(),
+            r.shard_h_kv.to_string(),
+            us(SweepRow::tpot_mean(&r.std)),
+            us(SweepRow::tpot_mean(&r.seq)),
+            speedup(r.advantage()),
+            format!("{:.1}%", r.std.mean_occupancy() * 100.0),
+            format!("{:.1}%", r.seq.mean_occupancy() * 100.0),
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    let json_path = {
+        let args: Vec<String> = std::env::args().collect();
+        args.iter().position(|a| a == "--json").and_then(|i| args.get(i + 1).cloned())
+    };
+
+    println!("== Cluster scale: TP sweep over the 8-KV-head model (2x H100 fleet) ==");
+    let b1 = sweep(1, 16, 0xC1);
+    print_sweep("B=1 (paper regime; per-shard tiles = 8/tp)", &b1);
+    let batched = sweep(4, 24, 0xC2);
+    print_sweep("max_batch=4 (tiles = B x 8/tp; window depends on live batch)", &batched);
+
+    println!("\n== Routers at tp=8, sequence-aware, 4 replicas, Poisson multi-turn ==");
+    let routers = router_comparison();
+    let mut t = Table::new(&["Router", "Imbalance", "Affinity viol.", "TTFT p99", "tok/s"])
+        .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for r in &routers {
+        t.row(&[
+            r.router.to_string(),
+            format!("{:.3}", r.imbalance()),
+            r.affinity_violations().to_string(),
+            us(r.ttft.as_ref().map(|s| s.p99).unwrap_or(0.0)),
+            format!("{:.0}", r.aggregate_tok_s),
+        ]);
+    }
+    t.print();
+
+    let verdict = verify(&b1, &batched, &routers);
+    if let Some(path) = &json_path {
+        let report = Json::obj(vec![
+            ("bench", Json::str("cluster_scale")),
+            (
+                "regenerate_with",
+                Json::str("cargo bench --bench cluster_scale -- --json BENCH_cluster_scale.json"),
+            ),
+            ("measured", Json::Bool(true)),
+            (
+                "model",
+                Json::obj(vec![
+                    ("h_q", Json::int(MODEL.h_q as i64)),
+                    ("h_kv", Json::int(MODEL.h_kv as i64)),
+                    ("d", Json::int(MODEL.d as i64)),
+                ]),
+            ),
+            ("replicas_per_sweep_point", Json::int(REPLICAS as i64)),
+            ("tp_sweep_b1", sweep_json(&b1)),
+            ("tp_sweep_batched", sweep_json(&batched)),
+            ("router_comparison", routers_json(&routers)),
+            ("passed", Json::Bool(verdict.is_ok())),
+        ]);
+        std::fs::write(path, report.to_string_pretty()).expect("write json report");
+        println!("\nwrote {path}");
+    }
+    match verdict {
+        Ok(()) => println!("\nOK: advantage widens with tp, routers uphold their invariants"),
+        Err(msg) => {
+            eprintln!("\nFAILED: {msg}");
+            std::process::exit(1);
+        }
+    }
+}

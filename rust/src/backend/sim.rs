@@ -40,6 +40,13 @@ impl SimBackend {
         SimBackend::new(Simulator::h100())
     }
 
+    /// A backend modeling any planner device profile — how the cluster
+    /// fleet constructs per-replica backends (heterogeneous fleets mix
+    /// profiles; planning and simulated timing agree by construction).
+    pub fn for_profile(profile: &crate::planner::DeviceProfile) -> SimBackend {
+        SimBackend::new(Simulator::for_profile(profile))
+    }
+
     /// Override the per-step framework overhead.
     pub fn framework_overhead_us(mut self, us: f64) -> SimBackend {
         self.overhead_us = us;

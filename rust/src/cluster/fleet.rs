@@ -1,0 +1,601 @@
+//! The fleet driver: fan a chat stream across replicas on the simulated
+//! virtual clock and aggregate fleet-level metrics.
+//!
+//! Data flow (DESIGN.md §Cluster):
+//!
+//! ```text
+//! ClusterTopology ──derives──► per-shard AttnGeometry
+//!        │                            │
+//!        ▼                            ▼
+//! Fleet::new ── per replica: PolicyRegistry planner(device) + SimBackend(device)
+//!        │
+//! Fleet::run(stream):
+//!   for each arrival (time-ordered):
+//!     advance every replica's virtual clock to the arrival instant
+//!     snapshot replicas ──► Router::route ──► Replica::submit_at
+//!   drain all replicas ──► FleetReport (per-replica + pooled metrics)
+//! ```
+//!
+//! Routing therefore happens **before** each replica's admission
+//! controller: the router picks placement from live load snapshots, the
+//! replica's bounded queues still decide acceptance, and rejected
+//! submissions are counted, never retried elsewhere (a retry would make
+//! the A/B benches sensitive to rejection order; explicit is better).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{EngineConfig, FinishedRequest, RequestId};
+use crate::planner::PolicyRegistry;
+use crate::util::stats::Summary;
+use crate::util::table::{Align, Table};
+use crate::workload::GeneratedRequest;
+
+use super::replica::Replica;
+use super::router::{RouteError, Router};
+use super::topology::ClusterTopology;
+
+/// Fleet-wide configuration.
+pub struct FleetConfig {
+    /// Split-policy name resolved through the [`PolicyRegistry`] for each
+    /// replica's device (so device-dependent policies tune per replica).
+    pub policy: String,
+    /// Default engine configuration (replica specs may override).
+    pub engine: EngineConfig,
+    /// Registry the policy is resolved from.
+    pub registry: PolicyRegistry,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            policy: "sequence-aware".to_string(),
+            engine: EngineConfig::default(),
+            registry: PolicyRegistry::builtin(),
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn policy(mut self, name: impl Into<String>) -> FleetConfig {
+        self.policy = name.into();
+        self
+    }
+
+    pub fn engine(mut self, cfg: EngineConfig) -> FleetConfig {
+        self.engine = cfg;
+        self
+    }
+}
+
+/// One routing decision, recorded for affinity/balance assertions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub request: RequestId,
+    pub session: u64,
+    pub replica: usize,
+}
+
+/// The fleet: replicas + router + recorded assignments.
+pub struct Fleet {
+    topology: ClusterTopology,
+    replicas: Vec<Replica>,
+    router: Box<dyn Router>,
+    policy: String,
+    assignments: Vec<Assignment>,
+    rejected: usize,
+    /// Latest arrival placed so far — `submit_at` enforces monotone
+    /// arrivals (an out-of-order arrival would race replicas whose
+    /// virtual clocks already fast-forwarded past it).
+    last_arrival_us: u64,
+    /// `run` is one-shot: per-replica engine metrics accumulate for the
+    /// fleet's lifetime, so a second run would report contaminated
+    /// aggregates. Enforced, not just documented.
+    ran: bool,
+}
+
+impl Fleet {
+    /// Build every replica: a planner for the replica's device (via the
+    /// registry, so e.g. `extended` tunes against the right part) over a
+    /// `SimBackend` of the same profile, all planning the topology's
+    /// sharded geometry.
+    pub fn new(
+        topology: ClusterTopology,
+        router: Box<dyn Router>,
+        cfg: FleetConfig,
+    ) -> Result<Fleet> {
+        let shard = topology.shard_geometry();
+        let mut replicas = Vec::with_capacity(topology.num_replicas());
+        for (index, spec) in topology.replicas().iter().enumerate() {
+            let planner = cfg
+                .registry
+                .builder_for(&cfg.policy, &spec.device)
+                .map_err(|e| anyhow!(e))?
+                .build();
+            replicas.push(Replica::new(index, spec, shard, planner, &cfg.engine)?);
+        }
+        Ok(Fleet {
+            topology,
+            replicas,
+            router,
+            policy: cfg.policy,
+            assignments: Vec::new(),
+            rejected: 0,
+            last_arrival_us: 0,
+            ran: false,
+        })
+    }
+
+    pub fn topology(&self) -> &ClusterTopology {
+        &self.topology
+    }
+
+    pub fn replicas(&self) -> &[Replica] {
+        &self.replicas
+    }
+
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
+    pub fn policy_name(&self) -> &str {
+        &self.policy
+    }
+
+    pub fn assignments(&self) -> &[Assignment] {
+        &self.assignments
+    }
+
+    /// Route and place one arrival at `arrival_us` on the fleet timeline.
+    /// Every replica is first advanced to the arrival instant so the
+    /// router sees true load. Arrivals must be monotone: replica clocks
+    /// only move forward, so a past-dated arrival would be served out of
+    /// order against requests the fleet already placed.
+    ///
+    /// Returns `Ok(Some(replica))` when placed, `Ok(None)` when the
+    /// request was *refused* (unroutable, or the replica rejected the
+    /// submission) — refusals are counted in the report, never fatal: one
+    /// impossible request must not discard every already-served result of
+    /// a one-shot run. `Err` is reserved for real failures (ordering
+    /// violations, router contract breaches, engine errors).
+    pub fn submit_at(&mut self, g: &GeneratedRequest, arrival_us: u64) -> Result<Option<usize>> {
+        if arrival_us < self.last_arrival_us {
+            bail!(
+                "arrivals must be time-ordered: request {} at {arrival_us}µs after one at {}µs",
+                g.request.id,
+                self.last_arrival_us
+            );
+        }
+        self.last_arrival_us = arrival_us;
+        for r in &mut self.replicas {
+            r.advance_to(arrival_us)?;
+        }
+        let (prompt_len, max_new) = (g.request.prompt.len(), g.request.max_new_tokens);
+        let snaps: Vec<_> =
+            self.replicas.iter().map(|r| r.snapshot_for(prompt_len, max_new)).collect();
+        let idx = match self.router.route(&g.request, g.session, &snaps) {
+            Ok(idx) => idx,
+            Err(RouteError::Unroutable { .. }) => {
+                self.rejected += 1;
+                return Ok(None);
+            }
+            Err(e @ RouteError::NoReplicas) => return Err(e.into()),
+        };
+        // Router contract (DESIGN.md §Cluster invariant 1). `get` rather
+        // than indexing: a misbehaving custom Router returning an
+        // out-of-range replica hits this error path, not a panic.
+        let eligible = snaps.get(idx).is_some_and(|s| s.can_ever_admit);
+        if !eligible {
+            bail!(
+                "router '{}' violated its contract: replica {idx} {} request {}",
+                self.router.name(),
+                if idx < snaps.len() { "can never admit" } else { "does not exist for" },
+                g.request.id
+            );
+        }
+        match self.replicas[idx].submit_at(g.request.clone(), arrival_us) {
+            Ok(()) => {
+                self.assignments.push(Assignment {
+                    request: g.request.id,
+                    session: g.session,
+                    replica: idx,
+                });
+                Ok(Some(idx))
+            }
+            Err(_refused) => {
+                self.rejected += 1;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Fan a generated stream (time-ordered, as `ChatWorkload::generate`
+    /// produces) across the fleet, drain every replica, and report.
+    /// One-shot: build a fresh fleet per run (engine metrics and routing
+    /// state accumulate for the fleet's lifetime).
+    pub fn run(&mut self, stream: &[GeneratedRequest]) -> Result<FleetReport> {
+        if self.ran {
+            bail!("Fleet::run is one-shot (aggregates would mix runs); build a new Fleet");
+        }
+        self.ran = true;
+        // Arrival ordering is enforced per submission by `submit_at`
+        // (`ChatWorkload::generate` produces ordered streams by
+        // construction).
+        for g in stream {
+            self.submit_at(g, g.arrival_offset_us)?;
+        }
+        let mut finished: Vec<Vec<FinishedRequest>> = Vec::with_capacity(self.replicas.len());
+        for r in &mut self.replicas {
+            finished.push(r.run_until_idle()?);
+        }
+        Ok(self.report(finished))
+    }
+
+    fn report(&self, finished: Vec<Vec<FinishedRequest>>) -> FleetReport {
+        let mut replica_reports = Vec::with_capacity(self.replicas.len());
+        let mut ttfts: Vec<f64> = Vec::new();
+        let mut tpots: Vec<f64> = Vec::new();
+        for (r, fin) in self.replicas.iter().zip(&finished) {
+            let m = r.metrics();
+            for f in fin {
+                if f.reason.is_natural() {
+                    ttfts.push(f.timing.ttft_us() as f64);
+                    if f.timing.n_generated >= 2 {
+                        tpots.push(f.timing.tpot_us());
+                    }
+                }
+            }
+            replica_reports.push(ReplicaReport {
+                index: r.index(),
+                device: r.device_name(),
+                requests_assigned: r.assigned(),
+                requests_finished: m.requests_finished,
+                tokens_generated: m.tokens_generated,
+                mean_occupancy: m.mean_occupancy(),
+                tpot: m.tpot(),
+                ttft: m.ttft(),
+                throughput_tok_s: m.throughput_tok_s(),
+                wall_us: m.wall_us,
+                rejected_backpressure: m.rejected_backpressure,
+            });
+        }
+        let total_tokens: usize = replica_reports.iter().map(|r| r.tokens_generated).sum();
+        // Replicas run concurrently in a real deployment: fleet wall time
+        // is the slowest replica's, and aggregate throughput follows.
+        let wall_us = replica_reports.iter().map(|r| r.wall_us).max().unwrap_or(0);
+        let aggregate_tok_s =
+            if wall_us == 0 { 0.0 } else { total_tokens as f64 / (wall_us as f64 / 1e6) };
+        FleetReport {
+            policy: self.policy.clone(),
+            router: self.router.name(),
+            tp_degree: self.topology.tp().degree,
+            shard_h_q: self.topology.shard_geometry().h_q,
+            shard_h_kv: self.topology.shard_geometry().h_kv,
+            replicas: replica_reports,
+            assignments: self.assignments.clone(),
+            finished: finished.into_iter().flatten().collect(),
+            ttft: (!ttfts.is_empty()).then(|| Summary::of(&ttfts)),
+            tpot: (!tpots.is_empty()).then(|| Summary::of(&tpots)),
+            total_tokens,
+            wall_us,
+            aggregate_tok_s,
+            rejected: self.rejected,
+        }
+    }
+}
+
+/// Per-replica slice of a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub index: usize,
+    pub device: &'static str,
+    pub requests_assigned: usize,
+    pub requests_finished: usize,
+    pub tokens_generated: usize,
+    /// Mean planned first-wave SM occupancy over decode steps — the §2.1
+    /// quantity TP sharding collapses. `None` when the replica ran no
+    /// decode steps (an idle replica is not a measured 0%).
+    pub mean_occupancy: Option<f64>,
+    pub tpot: Option<Summary>,
+    pub ttft: Option<Summary>,
+    pub throughput_tok_s: f64,
+    pub wall_us: u64,
+    /// Assigned arrivals the replica's bounded admission queue refused
+    /// when they came due (they were routed but never served — without
+    /// this counter they would silently vanish from the report).
+    pub rejected_backpressure: usize,
+}
+
+/// What a fleet run produced.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub policy: String,
+    pub router: &'static str,
+    pub tp_degree: usize,
+    pub shard_h_q: usize,
+    pub shard_h_kv: usize,
+    pub replicas: Vec<ReplicaReport>,
+    pub assignments: Vec<Assignment>,
+    pub finished: Vec<FinishedRequest>,
+    /// Pooled across replicas, naturally-finished requests only.
+    pub ttft: Option<Summary>,
+    pub tpot: Option<Summary>,
+    pub total_tokens: usize,
+    /// Slowest replica's clock (replicas run concurrently).
+    pub wall_us: u64,
+    pub aggregate_tok_s: f64,
+    /// Requests refused at routing time: unroutable (no eligible replica,
+    /// or a pinned replica that can't take the turn) plus never-fits
+    /// shapes the chosen replica refused at submission.
+    pub rejected: usize,
+}
+
+impl FleetReport {
+    /// Routed arrivals later refused by a replica's bounded queue
+    /// (summed over replicas). `rejected + rejected_backpressure()` is
+    /// the full count of requests that entered the fleet but were never
+    /// served.
+    pub fn rejected_backpressure(&self) -> usize {
+        self.replicas.iter().map(|r| r.rejected_backpressure).sum()
+    }
+}
+
+impl FleetReport {
+    /// Load-imbalance coefficient: coefficient of variation (std/mean) of
+    /// per-replica generated tokens. 0 = perfectly balanced.
+    pub fn imbalance(&self) -> f64 {
+        let n = self.replicas.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let tokens: Vec<f64> = self.replicas.iter().map(|r| r.tokens_generated as f64).collect();
+        let mean = tokens.iter().sum::<f64>() / n as f64;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = tokens.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / n as f64;
+        var.sqrt() / mean
+    }
+
+    /// Sessions whose requests landed on more than one replica (must be 0
+    /// under [`super::SessionAffinity`]). Counts *sessions*, not replica
+    /// switches: an A→B→A session is one violation.
+    pub fn affinity_violations(&self) -> usize {
+        use std::collections::{HashMap, HashSet};
+        let mut first: HashMap<u64, usize> = HashMap::new();
+        let mut violators: HashSet<u64> = HashSet::new();
+        for a in &self.assignments {
+            match first.insert(a.session, a.replica) {
+                Some(prev) if prev != a.replica => {
+                    violators.insert(a.session);
+                }
+                _ => {}
+            }
+        }
+        violators.len()
+    }
+
+    /// Mean per-replica occupancy across replicas that actually decoded
+    /// (idle replicas carry no sample and must not dilute the mean).
+    pub fn mean_occupancy(&self) -> f64 {
+        let samples: Vec<f64> = self.replicas.iter().filter_map(|r| r.mean_occupancy).collect();
+        if samples.is_empty() {
+            return 0.0;
+        }
+        samples.iter().sum::<f64>() / samples.len() as f64
+    }
+
+    /// ASCII rendering for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "fleet: {} replicas, tp={} (shard H_Q={} H_KV={}), policy '{}', router '{}'\n",
+            self.replicas.len(),
+            self.tp_degree,
+            self.shard_h_q,
+            self.shard_h_kv,
+            self.policy,
+            self.router
+        );
+        let mut t = Table::new(&[
+            "Replica",
+            "Device",
+            "Assigned",
+            "Finished",
+            "Tokens",
+            "Occupancy",
+            "TPOT p50",
+            "TTFT p99",
+            "tok/s",
+        ])
+        .align(&[
+            Align::Right,
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+        for r in &self.replicas {
+            t.row(&[
+                r.index.to_string(),
+                r.device.to_string(),
+                r.requests_assigned.to_string(),
+                r.requests_finished.to_string(),
+                r.tokens_generated.to_string(),
+                r.mean_occupancy
+                    .map(|o| format!("{:.1}%", o * 100.0))
+                    .unwrap_or_else(|| "-".into()),
+                r.tpot.as_ref().map(|s| format!("{:.1}", s.p50)).unwrap_or_else(|| "-".into()),
+                r.ttft.as_ref().map(|s| format!("{:.1}", s.p99)).unwrap_or_else(|| "-".into()),
+                format!("{:.0}", r.throughput_tok_s),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push_str(&format!(
+            "aggregate: {} tokens, {:.0} tok/s, imbalance {:.3}, affinity violations {}, \
+             rejected {} (+{} backpressure)\n",
+            self.total_tokens,
+            self.aggregate_tok_s,
+            self.imbalance(),
+            self.affinity_violations(),
+            self.rejected,
+            self.rejected_backpressure()
+        ));
+        if let Some(s) = &self.tpot {
+            out.push_str(&format!(
+                "fleet TPOT µs: mean={:.1} p50={:.1} p99={:.1}\n",
+                s.mean, s.p50, s.p99
+            ));
+        }
+        if let Some(s) = &self.ttft {
+            out.push_str(&format!(
+                "fleet TTFT µs: mean={:.1} p50={:.1} p99={:.1}\n",
+                s.mean, s.p50, s.p99
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::AttnGeometry;
+    use crate::cluster::router::{RoundRobin, SessionAffinity};
+    use crate::cluster::topology::TpConfig;
+    use crate::planner::DeviceProfile;
+    use crate::workload::ChatWorkload;
+
+    fn fleet(n: usize, tp: usize, router: Box<dyn Router>, policy: &str) -> Fleet {
+        let topo = ClusterTopology::builder(AttnGeometry {
+            h_q: 64,
+            h_kv: 8,
+            d: 128,
+            max_seq: 1024,
+        })
+        .tp(TpConfig::new(tp))
+        .replicas(n, DeviceProfile::H100_SXM)
+        .build()
+        .unwrap();
+        Fleet::new(topo, router, FleetConfig::default().policy(policy)).unwrap()
+    }
+
+    #[test]
+    fn closed_loop_stream_completes_and_balances() {
+        let mut f = fleet(2, 8, Box::new(RoundRobin::new()), "sequence-aware");
+        let stream = ChatWorkload { n_requests: 8, ..Default::default() }.generate();
+        let report = f.run(&stream).unwrap();
+        assert_eq!(report.finished.len(), 8);
+        assert_eq!(report.rejected, 0);
+        let assigned: Vec<usize> = report.replicas.iter().map(|r| r.requests_assigned).collect();
+        assert_eq!(assigned, vec![4, 4], "round-robin splits evenly");
+        assert!(report.total_tokens > 0);
+        assert!(report.aggregate_tok_s > 0.0);
+        assert!(report.mean_occupancy() > 0.0);
+        assert!(report.render().contains("fleet TPOT"));
+    }
+
+    #[test]
+    fn open_loop_arrivals_advance_replica_clocks() {
+        let mut f = fleet(2, 8, Box::new(SessionAffinity::new()), "sequence-aware");
+        let stream = ChatWorkload {
+            n_requests: 12,
+            mean_gap_us: 2_000,
+            turns_per_session: 3,
+            ..Default::default()
+        }
+        .generate();
+        let report = f.run(&stream).unwrap();
+        assert_eq!(report.finished.len(), 12);
+        assert_eq!(report.affinity_violations(), 0);
+        // Arrivals span the timeline, so the fleet wall covers them.
+        let last = stream.last().unwrap().arrival_offset_us;
+        assert!(report.wall_us >= last);
+    }
+
+    #[test]
+    fn imbalance_is_zero_when_even_and_positive_when_skewed() {
+        let even = FleetReport {
+            policy: "p".into(),
+            router: "r",
+            tp_degree: 1,
+            shard_h_q: 8,
+            shard_h_kv: 1,
+            replicas: vec![
+                ReplicaReport {
+                    index: 0,
+                    device: "a",
+                    requests_assigned: 1,
+                    requests_finished: 1,
+                    tokens_generated: 100,
+                    mean_occupancy: None,
+                    tpot: None,
+                    ttft: None,
+                    throughput_tok_s: 0.0,
+                    wall_us: 0,
+                    rejected_backpressure: 0,
+                },
+                ReplicaReport {
+                    index: 1,
+                    device: "a",
+                    requests_assigned: 1,
+                    requests_finished: 1,
+                    tokens_generated: 100,
+                    mean_occupancy: None,
+                    tpot: None,
+                    ttft: None,
+                    throughput_tok_s: 0.0,
+                    wall_us: 0,
+                    rejected_backpressure: 0,
+                },
+            ],
+            assignments: Vec::new(),
+            finished: Vec::new(),
+            ttft: None,
+            tpot: None,
+            total_tokens: 200,
+            wall_us: 0,
+            aggregate_tok_s: 0.0,
+            rejected: 0,
+        };
+        assert_eq!(even.imbalance(), 0.0);
+        let mut skewed = even.clone();
+        skewed.replicas[1].tokens_generated = 0;
+        assert!(skewed.imbalance() > 0.9, "{}", skewed.imbalance());
+
+        // Affinity accounting counts violating SESSIONS, not switches:
+        // session 1 ping-pongs A→B→A (one violation), session 2 is whole.
+        let mut pingpong = even;
+        pingpong.assignments = vec![
+            Assignment { request: 0, session: 1, replica: 0 },
+            Assignment { request: 1, session: 1, replica: 1 },
+            Assignment { request: 2, session: 1, replica: 0 },
+            Assignment { request: 3, session: 2, replica: 1 },
+        ];
+        assert_eq!(pingpong.affinity_violations(), 1);
+        assert_eq!(pingpong.rejected_backpressure(), 0);
+    }
+
+    #[test]
+    fn unknown_policy_surfaces_registry_error() {
+        let topo = ClusterTopology::builder(AttnGeometry {
+            h_q: 64,
+            h_kv: 8,
+            d: 128,
+            max_seq: 1024,
+        })
+        .tp(TpConfig::new(8))
+        .replicas(1, DeviceProfile::H100_SXM)
+        .build()
+        .unwrap();
+        let err = Fleet::new(
+            topo,
+            Box::new(RoundRobin::new()),
+            FleetConfig::default().policy("nope"),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown policy 'nope'"));
+    }
+}

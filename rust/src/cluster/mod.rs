@@ -1,0 +1,46 @@
+//! The cluster subsystem: tensor-parallel head sharding + multi-replica
+//! fleet routing over the planner/backend stack.
+//!
+//! The paper's premise is that low head count starves Hopper SMs — and the
+//! most common way production deployments *enter* that regime is tensor
+//! parallelism, which divides KV heads across GPUs: a TP-8 shard of an
+//! 8-KV-head GQA model decodes with one KV head per device, exactly the
+//! `Batch × H_KV < 4` tile counts where the sequence-aware policy's 21–24%
+//! window opens. This module models the cluster level where that per-shard
+//! head count is *decided*:
+//!
+//! * [`topology`] — [`ClusterTopology`] + [`TpConfig`]: derives the
+//!   per-shard [`crate::backend::AttnGeometry`] (head divisibility and
+//!   PackGqa packing validated at build time) so each replica's
+//!   [`crate::planner::Planner`] plans the **sharded** shape,
+//! * [`router`]   — the [`Router`] contract with [`RoundRobin`],
+//!   [`LeastLoaded`] (queue depth + KV-block pressure), and
+//!   [`SessionAffinity`] (sticky: a session's KV stays on its replica)
+//!   policies, placed in front of each replica's admission controller,
+//! * [`replica`]  — one TP group as a full [`crate::coordinator::Engine`]
+//!   over its own [`crate::backend::SimBackend`] (heterogeneous device
+//!   profiles allowed),
+//! * [`fleet`]    — the driver that fans a
+//!   [`crate::workload::ChatWorkload`] stream across replicas on the
+//!   simulated virtual clock and aggregates [`FleetReport`] metrics
+//!   (per-replica SM occupancy, pooled TTFT/TPOT, load imbalance,
+//!   aggregate tokens/s).
+//!
+//! Surfaces: the `fa3-split cluster` CLI subcommand, the
+//! `benches/cluster_scale.rs` sweep (`BENCH_cluster_scale.json` — the
+//! occupancy gap widening as sharding shrinks head count), and the
+//! `rust/tests/cluster_fleet.rs` suite.
+
+pub mod fleet;
+pub mod replica;
+pub mod router;
+pub mod topology;
+
+pub use fleet::{Assignment, Fleet, FleetConfig, FleetReport, ReplicaReport};
+pub use replica::Replica;
+pub use router::{
+    LeastLoaded, ReplicaSnapshot, RouteError, Router, RoundRobin, SessionAffinity, ROUTER_NAMES,
+};
+pub use topology::{
+    ClusterTopology, ClusterTopologyBuilder, ReplicaSpec, TopologyError, TpConfig,
+};

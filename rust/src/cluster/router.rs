@@ -1,0 +1,391 @@
+//! Fleet routing: which replica serves which request.
+//!
+//! The router sits **in front of** each replica's admission controller —
+//! it decides *placement*, the replica's bounded queues still decide
+//! *acceptance*. Routers see a per-replica [`ReplicaSnapshot`] (queue
+//! depth, running set, KV-block pressure from the replica's
+//! `BlockManager`) taken at the request's arrival instant on the fleet's
+//! virtual clock.
+//!
+//! Invariants every router upholds (asserted by the fleet, tested in
+//! `rust/tests/cluster_fleet.rs`):
+//!
+//! 1. **Never route to a replica that can never admit** — a request whose
+//!    worst-case KV demand exceeds a replica's entire block budget
+//!    (`can_ever_admit == false`) must not be placed there; it would be
+//!    refused at submission. [`LeastLoaded`] and [`RoundRobin`] skip such
+//!    replicas; if none qualifies the route fails explicitly
+//!    ([`RouteError::Unroutable`]) instead of wedging a queue.
+//! 2. **Session stickiness is absolute** — once [`SessionAffinity`] pins a
+//!    session, every later turn routes to the same replica (its KV history
+//!    lives there; moving mid-session would imply a cache migration this
+//!    stack doesn't model). A pinned replica that cannot take the next
+//!    turn is an explicit [`RouteError::Unroutable`], never a silent
+//!    re-pin.
+//! 3. **Determinism** — same snapshots, same state, same decision (ties
+//!    break toward the lowest replica index), so fleet runs are exactly
+//!    reproducible.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::coordinator::Request;
+
+/// Per-replica load facts the fleet snapshots before each routing
+/// decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaSnapshot {
+    pub index: usize,
+    /// Waiting in admission + open-loop arrivals not yet due.
+    pub queue_depth: usize,
+    /// Requests in the running set.
+    pub running: usize,
+    /// Free KV blocks in the replica's `BlockManager`.
+    pub free_blocks: usize,
+    pub total_blocks: usize,
+    /// Whether the replica's `BlockManager` could admit this request right
+    /// now (spare blocks at this instant).
+    pub can_admit_now: bool,
+    /// Whether it could EVER admit it (fits `max_seq` and the whole block
+    /// budget on an empty manager). `false` means routing there is a
+    /// guaranteed refusal.
+    pub can_ever_admit: bool,
+}
+
+impl ReplicaSnapshot {
+    /// KV-block pressure in `[0, 1]`.
+    pub fn kv_pressure(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 1.0;
+        }
+        1.0 - self.free_blocks as f64 / self.total_blocks as f64
+    }
+
+    /// The [`LeastLoaded`] score: outstanding requests weighted with KV
+    /// pressure (pressure breaks ties between equally-queued replicas and
+    /// dominates once a replica's cache is nearly full).
+    pub fn load_score(&self) -> f64 {
+        (self.queue_depth + self.running) as f64 + self.kv_pressure()
+    }
+}
+
+/// Why a request could not be placed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteError {
+    /// The fleet has no replicas (snapshot list was empty).
+    NoReplicas,
+    /// No eligible replica: every candidate can never admit the request,
+    /// or the session's pinned replica can't take it.
+    Unroutable { request: u64, reason: String },
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::NoReplicas => write!(f, "no replicas to route to"),
+            RouteError::Unroutable { request, reason } => {
+                write!(f, "request {request} unroutable: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// The routing policy contract. `&mut self` because policies carry state
+/// (round-robin cursor, affinity map); `Send` so a fleet can move onto a
+/// worker thread like an engine can.
+pub trait Router: Send {
+    fn name(&self) -> &'static str;
+
+    /// Choose a replica index for `req` (belonging to chat `session`)
+    /// among `replicas`. Must uphold the module-level invariants.
+    fn route(
+        &mut self,
+        req: &Request,
+        session: u64,
+        replicas: &[ReplicaSnapshot],
+    ) -> Result<usize, RouteError>;
+}
+
+fn no_eligible(req: &Request) -> RouteError {
+    RouteError::Unroutable {
+        request: req.id,
+        reason: format!(
+            "no replica can ever admit {} tokens (prompt {} + max_new {})",
+            req.prompt.len() + req.max_new_tokens,
+            req.prompt.len(),
+            req.max_new_tokens
+        ),
+    }
+}
+
+/// Cycle through replicas in index order, skipping ones that can never
+/// admit the request.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl Router for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(
+        &mut self,
+        req: &Request,
+        _session: u64,
+        replicas: &[ReplicaSnapshot],
+    ) -> Result<usize, RouteError> {
+        if replicas.is_empty() {
+            return Err(RouteError::NoReplicas);
+        }
+        let n = replicas.len();
+        for off in 0..n {
+            let i = (self.next + off) % n;
+            if replicas[i].can_ever_admit {
+                self.next = (i + 1) % n;
+                return Ok(i);
+            }
+        }
+        Err(no_eligible(req))
+    }
+}
+
+/// Route to the eligible replica with the lowest [`ReplicaSnapshot::
+/// load_score`] (queue depth + running + KV pressure); ties break toward
+/// the lowest index.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl LeastLoaded {
+    pub fn new() -> LeastLoaded {
+        LeastLoaded
+    }
+}
+
+impl Router for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(
+        &mut self,
+        req: &Request,
+        _session: u64,
+        replicas: &[ReplicaSnapshot],
+    ) -> Result<usize, RouteError> {
+        if replicas.is_empty() {
+            return Err(RouteError::NoReplicas);
+        }
+        replicas
+            .iter()
+            .filter(|s| s.can_ever_admit)
+            .min_by(|a, b| {
+                a.load_score()
+                    .partial_cmp(&b.load_score())
+                    .expect("load scores are finite")
+                    .then(a.index.cmp(&b.index))
+            })
+            .map(|s| s.index)
+            .ok_or_else(|| no_eligible(req))
+    }
+}
+
+/// Sticky session routing: the first turn of a session places it via the
+/// inner router; every later turn goes to the same replica, where the
+/// session's KV history lives.
+pub struct SessionAffinity {
+    inner: Box<dyn Router>,
+    pinned: HashMap<u64, usize>,
+}
+
+impl SessionAffinity {
+    /// Affinity over [`LeastLoaded`] first-turn placement (the default).
+    pub fn new() -> SessionAffinity {
+        SessionAffinity::over(Box::new(LeastLoaded::new()))
+    }
+
+    /// Affinity over any first-turn placement policy.
+    pub fn over(inner: Box<dyn Router>) -> SessionAffinity {
+        SessionAffinity { inner, pinned: HashMap::new() }
+    }
+
+    /// The replica a session is pinned to, if it has been seen.
+    pub fn pin_of(&self, session: u64) -> Option<usize> {
+        self.pinned.get(&session).copied()
+    }
+}
+
+impl Default for SessionAffinity {
+    fn default() -> Self {
+        SessionAffinity::new()
+    }
+}
+
+impl Router for SessionAffinity {
+    fn name(&self) -> &'static str {
+        "session-affinity"
+    }
+
+    fn route(
+        &mut self,
+        req: &Request,
+        session: u64,
+        replicas: &[ReplicaSnapshot],
+    ) -> Result<usize, RouteError> {
+        if replicas.is_empty() {
+            return Err(RouteError::NoReplicas);
+        }
+        if let Some(&idx) = self.pinned.get(&session) {
+            let snap = replicas.get(idx).ok_or_else(|| RouteError::Unroutable {
+                request: req.id,
+                reason: format!("session {session} pinned to missing replica {idx}"),
+            })?;
+            if !snap.can_ever_admit {
+                // Stickiness is absolute: refusing is correct, re-pinning
+                // would orphan the session's KV (invariant 2).
+                return Err(RouteError::Unroutable {
+                    request: req.id,
+                    reason: format!(
+                        "session {session} is pinned to replica {idx}, which can never admit \
+                         this turn"
+                    ),
+                });
+            }
+            return Ok(idx);
+        }
+        let idx = self.inner.route(req, session, replicas)?;
+        self.pinned.insert(session, idx);
+        Ok(idx)
+    }
+}
+
+/// Router names accepted by [`by_name`] — the single source the CLI help
+/// and unknown-value errors are generated from.
+pub const ROUTER_NAMES: [&str; 3] = ["round-robin", "least-loaded", "session-affinity"];
+
+/// `round-robin|least-loaded|session-affinity` — for CLI help.
+pub fn help_line() -> String {
+    ROUTER_NAMES.join("|")
+}
+
+/// Construct a router by CLI-friendly name.
+pub fn by_name(name: &str) -> Option<Box<dyn Router>> {
+    match name {
+        "round-robin" | "rr" => Some(Box::new(RoundRobin::new())),
+        "least-loaded" | "ll" => Some(Box::new(LeastLoaded::new())),
+        "session-affinity" | "sticky" => Some(Box::new(SessionAffinity::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(index: usize, queue: usize, running: usize, free: usize) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            index,
+            queue_depth: queue,
+            running,
+            free_blocks: free,
+            total_blocks: 100,
+            can_admit_now: free > 0,
+            can_ever_admit: true,
+        }
+    }
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1; 64], 32)
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_ineligible() {
+        let mut rr = RoundRobin::new();
+        let mut snaps = vec![snap(0, 0, 0, 100), snap(1, 0, 0, 100), snap(2, 0, 0, 100)];
+        let picks: Vec<usize> =
+            (0..6).map(|i| rr.route(&req(i), i, &snaps).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        // Replica 1 drops out: the cycle skips it without stalling.
+        snaps[1].can_ever_admit = false;
+        let picks: Vec<usize> =
+            (0..4).map(|i| rr.route(&req(i), i, &snaps).unwrap()).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_low_score_and_breaks_ties_low_index() {
+        let mut ll = LeastLoaded::new();
+        let snaps = vec![snap(0, 3, 2, 50), snap(1, 0, 1, 80), snap(2, 0, 1, 80)];
+        assert_eq!(ll.route(&req(1), 1, &snaps).unwrap(), 1, "tie → lowest index");
+        // KV pressure separates equally-queued replicas.
+        let snaps = vec![snap(0, 1, 1, 10), snap(1, 1, 1, 90)];
+        assert_eq!(ll.route(&req(2), 2, &snaps).unwrap(), 1);
+    }
+
+    #[test]
+    fn routers_never_pick_never_admit_replicas() {
+        let mut full = snap(0, 0, 0, 100);
+        full.can_ever_admit = false;
+        let ok = snap(1, 9, 9, 1); // heavily loaded but eligible
+        let mut routers: Vec<Box<dyn Router>> =
+            vec![Box::new(RoundRobin::new()), Box::new(LeastLoaded::new())];
+        for router in &mut routers {
+            assert_eq!(router.route(&req(7), 7, &[full, ok]).unwrap(), 1);
+        }
+        // Nobody eligible: explicit error naming the demand.
+        let mut also_full = ok;
+        also_full.can_ever_admit = false;
+        let mut ll = LeastLoaded::new();
+        let err = ll.route(&req(7), 7, &[full, also_full]).unwrap_err();
+        assert!(matches!(err, RouteError::Unroutable { request: 7, .. }), "{err}");
+        assert!(err.to_string().contains("96 tokens"));
+    }
+
+    #[test]
+    fn session_affinity_pins_and_stays_pinned() {
+        let mut sa = SessionAffinity::new();
+        let mut snaps = vec![snap(0, 5, 4, 10), snap(1, 0, 0, 100)];
+        // First turn: least-loaded picks replica 1 and pins the session.
+        assert_eq!(sa.route(&req(0), 42, &snaps).unwrap(), 1);
+        assert_eq!(sa.pin_of(42), Some(1));
+        // Later turns stay put even when the load picture inverts.
+        snaps[1] = snap(1, 9, 4, 2);
+        snaps[0] = snap(0, 0, 0, 100);
+        assert_eq!(sa.route(&req(1), 42, &snaps).unwrap(), 1);
+        // A different session is free to go elsewhere.
+        assert_eq!(sa.route(&req(2), 43, &snaps).unwrap(), 0);
+    }
+
+    #[test]
+    fn session_affinity_refuses_rather_than_repins() {
+        let mut sa = SessionAffinity::new();
+        let mut snaps = vec![snap(0, 0, 0, 100), snap(1, 0, 0, 100)];
+        assert_eq!(sa.route(&req(0), 5, &snaps).unwrap(), 0);
+        snaps[0].can_ever_admit = false;
+        let err = sa.route(&req(1), 5, &snaps).unwrap_err();
+        assert!(err.to_string().contains("pinned to replica 0"), "{err}");
+        assert_eq!(sa.pin_of(5), Some(0), "the pin survives the refusal");
+    }
+
+    #[test]
+    fn name_registry_round_trips() {
+        for name in ROUTER_NAMES {
+            assert_eq!(by_name(name).unwrap().name(), name);
+        }
+        assert_eq!(by_name("rr").unwrap().name(), "round-robin");
+        assert_eq!(by_name("sticky").unwrap().name(), "session-affinity");
+        assert!(by_name("random").is_none());
+        for name in ROUTER_NAMES {
+            assert!(help_line().contains(name));
+        }
+    }
+}

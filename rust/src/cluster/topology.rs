@@ -1,0 +1,306 @@
+//! Cluster topology: the fleet shape and the tensor-parallel shard-geometry
+//! derivation.
+//!
+//! Tensor parallelism is how production deployments *enter* the paper's
+//! low-head-count regime: TP divides KV heads across devices, so a TP-8
+//! shard of an 8-KV-head GQA model decodes with `H_KV = 1` per device —
+//! exactly the `Batch × H_KV < 4` tile counts where the sequence-aware
+//! policy's 21–24% window opens (§2.1). The topology is therefore the
+//! *planner-facing* object: each replica's [`crate::planner::Planner`]
+//! plans the **sharded** [`crate::backend::AttnGeometry`] this module
+//! derives, never the full-model one.
+//!
+//! Derivation rule (validated at build time, [`TpConfig::shard_geometry`]):
+//!
+//! ```text
+//! H_Q_shard  = H_Q  / tp_degree      (must divide evenly)
+//! H_KV_shard = H_KV / tp_degree      (must divide evenly; covers degree > H_KV)
+//! D, max_seq replicated; group = H_Q/H_KV preserved on every shard
+//! ```
+//!
+//! The PackGqa interaction check: with `pack_gqa` the query group rides the
+//! M dimension, so per-shard tiles are `Batch × H_KV_shard` **only while
+//! the group fits one `Q_BLOCK` M-block**. Sharding preserves the group
+//! (both head counts divide by the same degree), and the topology verifies
+//! that invariant, but it *rejects* models whose group already spills
+//! (`group > Q_BLOCK`): their tile arithmetic — and the fleet's occupancy
+//! accounting built on it — would silently change meaning.
+
+use std::fmt;
+
+use crate::backend::AttnGeometry;
+use crate::coordinator::EngineConfig;
+use crate::heuristics::tiles::{DecodeShape, Q_BLOCK};
+use crate::planner::DeviceProfile;
+
+/// Tensor-parallel configuration of every replica in a fleet (each replica
+/// models one TP group's single shard — the devices inside a group run in
+/// lockstep, so one shard's plan is the group's plan).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TpConfig {
+    /// Ways the attention heads are divided (1 = no sharding).
+    pub degree: usize,
+}
+
+impl TpConfig {
+    pub fn new(degree: usize) -> TpConfig {
+        TpConfig { degree }
+    }
+
+    /// Derive the per-shard geometry from the full model's, validating
+    /// head divisibility and the PackGqa packing invariant.
+    pub fn shard_geometry(&self, model: &AttnGeometry) -> Result<AttnGeometry, TopologyError> {
+        if self.degree == 0 {
+            return Err(TopologyError::ZeroDegree);
+        }
+        if model.h_kv == 0 || model.h_q % model.h_kv != 0 {
+            return Err(TopologyError::GroupMismatch { h_q: model.h_q, h_kv: model.h_kv });
+        }
+        let probe = DecodeShape::decode(1, 1, model.h_q, model.h_kv, model.d);
+        let Some(shard) = probe.shard(self.degree) else {
+            return Err(TopologyError::IndivisibleHeads {
+                h_q: model.h_q,
+                h_kv: model.h_kv,
+                degree: self.degree,
+            });
+        };
+        // PackGqa interaction: a group wider than one M-block means per-
+        // shard tiles stop being Batch × H_KV_shard — refuse rather than
+        // let the fleet's occupancy accounting drift (see module docs).
+        if shard.group_size() > Q_BLOCK {
+            return Err(TopologyError::PackGqaSpill {
+                group: shard.group_size(),
+                q_block: Q_BLOCK,
+            });
+        }
+        debug_assert_eq!(
+            shard.m_blocks(true),
+            probe.m_blocks(true),
+            "sharding must not change packed M-block count"
+        );
+        Ok(AttnGeometry { h_q: shard.h_q, h_kv: shard.h_kv, d: model.d, max_seq: model.max_seq })
+    }
+}
+
+/// Why a topology failed to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyError {
+    ZeroDegree,
+    /// `H_Q` is not a multiple of `H_KV` — no valid GQA grouping.
+    GroupMismatch { h_q: usize, h_kv: usize },
+    /// Heads don't divide evenly across shards (includes `degree > H_KV`).
+    IndivisibleHeads { h_q: usize, h_kv: usize, degree: usize },
+    /// The packed query group exceeds one M-block (`Q_BLOCK` rows).
+    PackGqaSpill { group: usize, q_block: usize },
+    /// A fleet needs at least one replica.
+    NoReplicas,
+}
+
+impl fmt::Display for TopologyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TopologyError::ZeroDegree => write!(f, "tp degree must be >= 1"),
+            TopologyError::GroupMismatch { h_q, h_kv } => {
+                write!(f, "H_Q={h_q} is not a multiple of H_KV={h_kv}")
+            }
+            TopologyError::IndivisibleHeads { h_q, h_kv, degree } => write!(
+                f,
+                "cannot shard H_Q={h_q}/H_KV={h_kv} across tp={degree} shards \
+                 (both head counts must divide evenly)"
+            ),
+            TopologyError::PackGqaSpill { group, q_block } => write!(
+                f,
+                "query group of {group} spills past one {q_block}-row M-block under pack_gqa; \
+                 per-shard tile accounting would change meaning"
+            ),
+            TopologyError::NoReplicas => write!(f, "a fleet needs at least one replica"),
+        }
+    }
+}
+
+impl std::error::Error for TopologyError {}
+
+/// One replica's hardware + engine configuration. Heterogeneous fleets mix
+/// specs (different device profiles, different KV budgets).
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    pub device: DeviceProfile,
+    /// Engine-config override; `None` inherits the fleet default.
+    pub engine: Option<EngineConfig>,
+}
+
+impl ReplicaSpec {
+    pub fn new(device: DeviceProfile) -> ReplicaSpec {
+        ReplicaSpec { device, engine: None }
+    }
+
+    pub fn engine(mut self, cfg: EngineConfig) -> ReplicaSpec {
+        self.engine = Some(cfg);
+        self
+    }
+}
+
+/// The validated fleet shape: full-model geometry, TP configuration, the
+/// derived per-shard geometry, and one spec per replica.
+#[derive(Debug, Clone)]
+pub struct ClusterTopology {
+    model: AttnGeometry,
+    tp: TpConfig,
+    shard: AttnGeometry,
+    replicas: Vec<ReplicaSpec>,
+}
+
+impl ClusterTopology {
+    pub fn builder(model: AttnGeometry) -> ClusterTopologyBuilder {
+        ClusterTopologyBuilder { model, tp: TpConfig::new(1), replicas: Vec::new() }
+    }
+
+    /// The full (unsharded) model geometry.
+    pub fn model(&self) -> AttnGeometry {
+        self.model
+    }
+
+    pub fn tp(&self) -> TpConfig {
+        self.tp
+    }
+
+    /// The per-shard geometry every replica's planner plans against.
+    pub fn shard_geometry(&self) -> AttnGeometry {
+        self.shard
+    }
+
+    pub fn replicas(&self) -> &[ReplicaSpec] {
+        &self.replicas
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The sharded decode shape one replica launches for a live batch —
+    /// what its planner sees each step (the step's `l_k` clamp happens in
+    /// the scheduler as usual).
+    pub fn shard_shape(&self, batch: usize, l_k: usize) -> DecodeShape {
+        DecodeShape::decode(batch, l_k, self.shard.h_q, self.shard.h_kv, self.shard.d)
+    }
+
+    /// Per-shard work tiles for a decode batch under pack_gqa — the §2.1
+    /// quantity TP shrinks (`Batch × H_KV / tp_degree`).
+    pub fn shard_tiles(&self, batch: usize) -> usize {
+        batch * self.shard.h_kv
+    }
+}
+
+/// Builder for [`ClusterTopology`]; all validation happens in `build`.
+pub struct ClusterTopologyBuilder {
+    model: AttnGeometry,
+    tp: TpConfig,
+    replicas: Vec<ReplicaSpec>,
+}
+
+impl ClusterTopologyBuilder {
+    pub fn tp(mut self, tp: TpConfig) -> ClusterTopologyBuilder {
+        self.tp = tp;
+        self
+    }
+
+    /// Add one replica.
+    pub fn replica(mut self, spec: ReplicaSpec) -> ClusterTopologyBuilder {
+        self.replicas.push(spec);
+        self
+    }
+
+    /// Add `n` identical replicas on `device`.
+    pub fn replicas(mut self, n: usize, device: DeviceProfile) -> ClusterTopologyBuilder {
+        self.replicas.extend((0..n).map(|_| ReplicaSpec::new(device)));
+        self
+    }
+
+    pub fn build(self) -> Result<ClusterTopology, TopologyError> {
+        if self.replicas.is_empty() {
+            return Err(TopologyError::NoReplicas);
+        }
+        let shard = self.tp.shard_geometry(&self.model)?;
+        Ok(ClusterTopology { model: self.model, tp: self.tp, shard, replicas: self.replicas })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn llama70b() -> AttnGeometry {
+        AttnGeometry { h_q: 64, h_kv: 8, d: 128, max_seq: 1024 }
+    }
+
+    #[test]
+    fn tp8_derives_the_paper_shape() {
+        let shard = TpConfig::new(8).shard_geometry(&llama70b()).unwrap();
+        assert_eq!(shard, AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 });
+        // tp = 1 is the identity.
+        assert_eq!(TpConfig::new(1).shard_geometry(&llama70b()).unwrap(), llama70b());
+    }
+
+    #[test]
+    fn tile_count_shrinks_by_degree() {
+        for degree in [1usize, 2, 4, 8] {
+            let topo = ClusterTopology::builder(llama70b())
+                .tp(TpConfig::new(degree))
+                .replicas(2, DeviceProfile::H100_SXM)
+                .build()
+                .unwrap();
+            assert_eq!(topo.shard_tiles(1), 8 / degree);
+            assert_eq!(topo.shard_shape(1, 512).total_mblocks(true), 8 / degree);
+        }
+    }
+
+    #[test]
+    fn divisibility_rejected_at_build() {
+        let err = TpConfig::new(3).shard_geometry(&llama70b()).unwrap_err();
+        assert!(matches!(err, TopologyError::IndivisibleHeads { degree: 3, .. }));
+        // More shards than KV heads: same rejection.
+        let err = TpConfig::new(16).shard_geometry(&llama70b()).unwrap_err();
+        assert!(matches!(err, TopologyError::IndivisibleHeads { .. }));
+        assert!(matches!(
+            TpConfig::new(0).shard_geometry(&llama70b()),
+            Err(TopologyError::ZeroDegree)
+        ));
+        // The builder surfaces the same error.
+        let err = ClusterTopology::builder(llama70b())
+            .tp(TpConfig::new(5))
+            .replicas(1, DeviceProfile::H100_SXM)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("tp=5"));
+    }
+
+    #[test]
+    fn group_mismatch_and_pack_gqa_spill_rejected() {
+        let bad_group = AttnGeometry { h_q: 10, h_kv: 4, d: 128, max_seq: 1024 };
+        assert!(matches!(
+            TpConfig::new(2).shard_geometry(&bad_group),
+            Err(TopologyError::GroupMismatch { .. })
+        ));
+        // A 128-wide query group spills past one 64-row M-block.
+        let wide = AttnGeometry { h_q: 256, h_kv: 2, d: 128, max_seq: 1024 };
+        let err = TpConfig::new(2).shard_geometry(&wide).unwrap_err();
+        assert!(matches!(err, TopologyError::PackGqaSpill { group: 128, .. }), "{err}");
+    }
+
+    #[test]
+    fn builder_requires_replicas_and_keeps_specs() {
+        assert!(matches!(
+            ClusterTopology::builder(llama70b()).build(),
+            Err(TopologyError::NoReplicas)
+        ));
+        let topo = ClusterTopology::builder(llama70b())
+            .tp(TpConfig::new(4))
+            .replicas(2, DeviceProfile::H100_SXM)
+            .replica(ReplicaSpec::new(DeviceProfile::A100_SXM))
+            .build()
+            .unwrap();
+        assert_eq!(topo.num_replicas(), 3);
+        assert_eq!(topo.replicas()[2].device.name, "A100-SXM4");
+        assert_eq!(topo.shard_geometry().h_kv, 2);
+    }
+}

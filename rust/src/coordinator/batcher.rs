@@ -25,6 +25,21 @@ impl Default for BatcherConfig {
     }
 }
 
+impl BatcherConfig {
+    /// Power-of-two bucket ladder capped by `max_batch` (which is always
+    /// the final bucket). The shared constructor for every surface that
+    /// exposes a `--max-batch`-style knob — one derivation, not N copies.
+    pub fn for_max_batch(max_batch: usize) -> BatcherConfig {
+        let max_batch = max_batch.max(1);
+        let mut buckets: Vec<usize> =
+            std::iter::successors(Some(1usize), |b| b.checked_mul(2))
+                .take_while(|&b| b < max_batch)
+                .collect();
+        buckets.push(max_batch);
+        BatcherConfig { max_batch, batch_buckets: buckets }
+    }
+}
+
 /// What the engine should do this step.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StepPlan {
@@ -151,6 +166,20 @@ mod tests {
             0,
         ));
         slot
+    }
+
+    #[test]
+    fn for_max_batch_ladder_is_valid() {
+        for max in [1usize, 2, 3, 4, 7, 8, 16, 33] {
+            let cfg = BatcherConfig::for_max_batch(max);
+            assert_eq!(*cfg.batch_buckets.last().unwrap(), max);
+            assert!(cfg.batch_buckets.windows(2).all(|w| w[0] < w[1]), "max={max}");
+            // Must satisfy the Batcher constructor's own asserts.
+            Batcher::new(cfg);
+        }
+        assert_eq!(BatcherConfig::for_max_batch(8).batch_buckets, vec![1, 2, 4, 8]);
+        assert_eq!(BatcherConfig::for_max_batch(3).batch_buckets, vec![1, 2, 3]);
+        assert_eq!(BatcherConfig::for_max_batch(0).batch_buckets, vec![1]);
     }
 
     #[test]

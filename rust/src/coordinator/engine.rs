@@ -172,12 +172,21 @@ impl Engine {
         self.batcher.running_len()
     }
 
-    fn now_us(&self) -> u64 {
+    /// The engine clock: virtual µs for virtual-clock backends, wall µs
+    /// since engine start otherwise. Public so external drivers (the
+    /// cluster fleet) can interleave several engines on a shared timeline.
+    pub fn now_us(&self) -> u64 {
         if self.caps.virtual_clock {
             self.clock_us as u64
         } else {
             self.started.elapsed().as_micros() as u64
         }
+    }
+
+    /// Open-loop arrivals submitted but not yet due on the virtual clock
+    /// (part of a replica's queue depth from a router's point of view).
+    pub fn pending_len(&self) -> usize {
+        self.pending_arrivals.len()
     }
 
     // ------------------------------------------------------------------
@@ -457,6 +466,7 @@ impl Engine {
                 .unwrap_or(1);
             let decision = self.scheduler.decide(plan.decode_slots.len(), max_kv)?;
             self.metrics.record_split(decision.plan.metadata.num_splits);
+            self.metrics.record_decode_occupancy(decision.plan.occupancy);
             let batch = self.decode_batch(&plan.decode_slots, bucket)?;
             let prepared = self.backend.prepare(batch, Some(&decision.plan))?;
             let outcome = self.backend.execute(prepared)?;

@@ -60,6 +60,11 @@ pub struct EngineMetrics {
     ttfts_us: Vec<f64>,
     /// Histogram of split counts chosen by the scheduler (index = splits).
     pub split_histogram: Vec<usize>,
+    /// Sum of planned first-wave SM occupancy over decode steps (the §2.1
+    /// quantity; divide by `decode_steps` for the mean). Per-replica
+    /// occupancy is what the cluster fleet aggregates to show TP sharding
+    /// entering the paper's starved regime.
+    decode_occupancy_sum: f64,
     pub wall_us: u64,
 }
 
@@ -78,6 +83,16 @@ impl EngineMetrics {
             self.split_histogram.resize(num_splits + 1, 0);
         }
         self.split_histogram[num_splits] += 1;
+    }
+
+    /// Record the planned first-wave occupancy of one decode launch.
+    pub fn record_decode_occupancy(&mut self, occupancy: f64) {
+        self.decode_occupancy_sum += occupancy;
+    }
+
+    /// Mean planned SM occupancy across decode steps, if any ran.
+    pub fn mean_occupancy(&self) -> Option<f64> {
+        (self.decode_steps > 0).then(|| self.decode_occupancy_sum / self.decode_steps as f64)
     }
 
     pub fn record_finished(&mut self, timing: &RequestTiming) {
@@ -143,6 +158,9 @@ impl EngineMetrics {
             out.push_str(&format!("TTFT µs: mean={:.1} p50={:.1} p99={:.1}\n", s.mean, s.p50, s.p99));
         }
         out.push_str(&format!("throughput: {:.1} tok/s\n", self.throughput_tok_s()));
+        if let Some(occ) = self.mean_occupancy() {
+            out.push_str(&format!("mean decode SM occupancy: {:.1}%\n", occ * 100.0));
+        }
         let hist: Vec<String> = self
             .split_histogram
             .iter()
@@ -180,6 +198,20 @@ mod tests {
     fn tpot_needs_two_tokens() {
         let t = RequestTiming { n_generated: 1, ..Default::default() };
         assert_eq!(t.tpot_us(), 0.0);
+    }
+
+    #[test]
+    fn occupancy_mean_over_decode_steps() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.mean_occupancy(), None);
+        m.record_step(10.0, 1); // decode step
+        m.record_decode_occupancy(0.02);
+        m.record_step(12.0, 1);
+        m.record_decode_occupancy(0.04);
+        m.record_step(500.0, 0); // prefill step: no occupancy sample
+        let occ = m.mean_occupancy().unwrap();
+        assert!((occ - 0.03).abs() < 1e-12, "occ={occ}");
+        assert!(m.report().contains("mean decode SM occupancy"));
     }
 
     #[test]

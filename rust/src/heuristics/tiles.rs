@@ -77,6 +77,20 @@ impl DecodeShape {
     pub fn size_one_kv_head_bytes(&self, dtype_bytes: usize) -> usize {
         2 * self.l_k * self.d * dtype_bytes
     }
+
+    /// The per-device shape under `degree`-way tensor-parallel head
+    /// sharding (Megatron-style: Q and KV heads divided evenly across
+    /// shards; batch, sequence, and head dim are replicated). This is how
+    /// production deployments *enter* the paper's low-head-count regime:
+    /// a TP-8 shard of an 8-KV-head model runs `H_KV = 1` per device.
+    /// Returns `None` when the heads don't divide evenly — the cluster
+    /// topology surfaces that as a build-time error.
+    pub fn shard(&self, degree: usize) -> Option<DecodeShape> {
+        if degree == 0 || self.h_q % degree != 0 || self.h_kv % degree != 0 {
+            return None;
+        }
+        Some(DecodeShape { h_q: self.h_q / degree, h_kv: self.h_kv / degree, ..*self })
+    }
 }
 
 /// Static split geometry (mirrors the Python `split_geometry`).
@@ -186,5 +200,32 @@ mod tests {
     #[should_panic]
     fn indivisible_heads_panic() {
         DecodeShape::decode(1, 128, 8, 3, 64).group_size();
+    }
+
+    #[test]
+    fn tp_sharding_divides_heads() {
+        // Llama-3.1-70B full model: H_Q = 64, H_KV = 8. TP-8 yields the
+        // paper's running per-device shape (H_Q = 8, H_KV = 1).
+        let full = DecodeShape::decode(1, 512, 64, 8, 128);
+        let tp8 = full.shard(8).unwrap();
+        assert_eq!(tp8, DecodeShape::llama70b_tp8(1, 512));
+        // Group size (and hence pack_gqa M-block packing) is preserved.
+        assert_eq!(tp8.group_size(), full.group_size());
+        assert_eq!(tp8.m_blocks(true), full.m_blocks(true));
+        // Tiles shrink by exactly the TP degree — the regime shift.
+        assert_eq!(full.total_mblocks(true), 8);
+        assert_eq!(tp8.total_mblocks(true), 1);
+        // Identity shard.
+        assert_eq!(full.shard(1), Some(full));
+    }
+
+    #[test]
+    fn tp_sharding_rejects_indivisible() {
+        let full = DecodeShape::decode(1, 512, 64, 8, 128);
+        assert_eq!(full.shard(0), None);
+        assert_eq!(full.shard(3), None); // 8 % 3 != 0
+        assert_eq!(full.shard(16), None); // fewer KV heads than shards
+        // H_Q divisible but H_KV not: rejected.
+        assert_eq!(DecodeShape::decode(1, 512, 64, 4, 128).shard(8), None);
     }
 }

@@ -72,11 +72,41 @@
 //! assert_eq!(tokens.len(), 4);
 //! ```
 //!
+//! ## Cluster: TP sharding + fleet routing
+//!
+//! The level above one engine lives in [`cluster`]: a
+//! [`cluster::ClusterTopology`] derives the per-shard geometry from a
+//! tensor-parallel degree (TP is how production serving *enters* the
+//! paper's low-head-count regime — a TP-8 shard of an 8-KV-head model
+//! decodes with `H_KV = 1` per device), and a [`cluster::Fleet`] fans a
+//! chat stream across replicas behind a [`cluster::Router`]
+//! (round-robin / least-loaded / session-affinity):
+//!
+//! ```
+//! use fa3_split::backend::AttnGeometry;
+//! use fa3_split::cluster::{ClusterTopology, Fleet, FleetConfig, RoundRobin, TpConfig};
+//! use fa3_split::planner::DeviceProfile;
+//! use fa3_split::workload::ChatWorkload;
+//!
+//! let topology =
+//!     ClusterTopology::builder(AttnGeometry { h_q: 64, h_kv: 8, d: 128, max_seq: 1024 })
+//!         .tp(TpConfig::new(8)) // per-shard H_KV = 1: the paper's regime
+//!         .replicas(2, DeviceProfile::H100_SXM)
+//!         .build()
+//!         .unwrap();
+//! let mut fleet =
+//!     Fleet::new(topology, Box::new(RoundRobin::new()), FleetConfig::default()).unwrap();
+//! let stream = ChatWorkload { n_requests: 4, ..Default::default() }.generate();
+//! let report = fleet.run(&stream).unwrap();
+//! assert_eq!(report.finished.len(), 4);
+//! ```
+//!
 //! Python never runs at request time: `make artifacts` lowers the model
 //! and kernels once, and everything here is self-contained after that.
 
 pub mod backend;
 pub mod bench_harness;
+pub mod cluster;
 pub mod coordinator;
 pub mod evolve;
 pub mod heuristics;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   serve       end-to-end serving over an ExecutionBackend (pjrt|sim)
+//!   cluster     multi-replica, tensor-parallel fleet on the sim clock
 //!   table1      reproduce Table 1 (kernel A/B on the simulated H100)
 //!   ucurve      reproduce Figure 3 (split sweep s = 1..64)
 //!   regression  reproduce §5.3 (160-config safety sweep)
@@ -11,15 +12,18 @@
 //!   info        artifact/manifest inventory
 //!
 //! All split planning goes through `planner::PolicyRegistry` /
-//! `planner::Planner`; the `--policy` and `--device` options accept any
-//! registered policy name and device-profile preset.
+//! `planner::Planner`; the `--policy`, `--device`, and `--router` options
+//! accept any registered policy name, device-profile preset, and cluster
+//! routing policy — unknown values fail with the full list of valid names
+//! (driven from the registries, never hardcoded).
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use fa3_split::backend::{AttnGeometry, ExecutionBackend, PjrtBackend, SimBackend};
 use fa3_split::bench_harness::{regression, table1, ucurve};
-use fa3_split::coordinator::{Engine, EngineConfig, StreamEvent};
+use fa3_split::cluster::{self, ClusterTopology, Fleet, FleetConfig, TpConfig};
+use fa3_split::coordinator::{BatcherConfig, Engine, EngineConfig, StreamEvent};
 use fa3_split::evolve::{Search, SearchConfig};
 use fa3_split::heuristics::tiles::DecodeShape;
 use fa3_split::planner::{DeviceProfile, Planner, PolicyRegistry};
@@ -34,6 +38,7 @@ Usage: fa3-split <command> [options]
 
 Commands:
   serve        serve a synthetic chat workload (--backend pjrt|sim)
+  cluster      simulate a multi-replica tensor-parallel serving fleet
   table1       reproduce Table 1 (A/B kernel test, simulated H100)
   ucurve       reproduce Figure 3 (split sweep s=1..64)
   regression   reproduce §5.3 (160-config regression sweep)
@@ -62,6 +67,7 @@ fn main() -> anyhow::Result<()> {
 
     match command.as_str() {
         "serve" => cmd_serve(&sub_argv),
+        "cluster" => cmd_cluster(&sub_argv),
         "table1" => cmd_table1(&sub_argv),
         "ucurve" => cmd_ucurve(&sub_argv),
         "regression" => cmd_regression(&sub_argv),
@@ -90,18 +96,24 @@ fn parse(p: cli::Parser, argv: &[String]) -> cli::Args {
     }
 }
 
+/// Resolve `--device` against the preset table, exiting with the full
+/// preset listing on an unknown name.
+fn device_from_args(args: &cli::Args) -> DeviceProfile {
+    let device_name = args.str("device");
+    match DeviceProfile::by_name(&device_name) {
+        Some(device) => device,
+        None => {
+            eprintln!("unknown device '{device_name}' (known: {})", DeviceProfile::help_line());
+            std::process::exit(2);
+        }
+    }
+}
+
 /// Resolve `--policy` / `--device` / `--sm-margin` into a configured
 /// planner via the registry (exits with the registry's name listing on an
 /// unknown policy or device).
 fn planner_from_args(registry: &PolicyRegistry, args: &cli::Args) -> Planner {
-    let device_name = args.str("device");
-    let Some(device) = DeviceProfile::by_name(&device_name) else {
-        eprintln!(
-            "unknown device '{device_name}' (known: {})",
-            DeviceProfile::presets().map(|p| p.name).join(", ")
-        );
-        std::process::exit(2);
-    };
+    let device = device_from_args(args);
     match registry.builder_for(&args.str("policy"), &device) {
         Ok(builder) => builder.sm_margin(args.usize("sm-margin")).build(),
         Err(msg) => {
@@ -119,7 +131,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             .opt("requests", "8", "number of requests")
             .opt("tokens", "32", "max new tokens per request")
             .opt("policy", "sequence-aware", format!("split policy: {}", registry.help_line()))
-            .opt("device", "h100-sxm", "device profile: h100-sxm|h100-pcie|a100|h200")
+            .opt("device", "h100-sxm", format!("device profile: {}", DeviceProfile::help_line()))
             .opt("sm-margin", "0", "SMs reserved for the combine scheduler")
             .opt("seed", "7", "workload seed"),
         argv,
@@ -189,6 +201,77 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         })
         .sum();
     println!("streamed {streamed} tokens across {} request handles", handles.len());
+    Ok(())
+}
+
+fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
+    let registry = PolicyRegistry::builtin();
+    let args = parse(
+        cli::Parser::new(
+            "simulate a multi-replica tensor-parallel fleet (each replica = one TP group \
+             planning the sharded shape)",
+        )
+        .opt("replicas", "2", "fleet size (number of TP groups)")
+        .opt("tp", "8", "tensor-parallel degree (must divide the model's head counts)")
+        .opt("hkv", "8", "full-model KV heads (H_Q = 8*H_KV, Llama-70B-style GQA)")
+        .opt("device", "h100-sxm", format!("device profile: {}", DeviceProfile::help_line()))
+        .opt("router", "least-loaded", format!("routing policy: {}", cluster::router::help_line()))
+        .opt("policy", "sequence-aware", format!("split policy: {}", registry.help_line()))
+        .opt("requests", "16", "number of requests")
+        .opt("tokens", "64", "max new tokens per request")
+        .opt("prompt-median", "420", "median prompt length (the paper's heavy-decode regime)")
+        .opt("turns", "1", "requests per chat session (the session-affinity unit)")
+        .opt("gap-us", "0", "mean Poisson inter-arrival gap, µs (0 = closed loop)")
+        .opt("max-batch", "2", "per-replica max running batch")
+        .opt("seed", "7", "workload seed"),
+        argv,
+    );
+    let device = device_from_args(&args);
+    let router_name = args.str("router");
+    let Some(router) = cluster::router::by_name(&router_name) else {
+        eprintln!(
+            "unknown router '{router_name}' (known: {})",
+            cluster::router::help_line()
+        );
+        std::process::exit(2);
+    };
+    // Resolve the policy up front so an unknown name fails with the
+    // registry's listing before any replica is built.
+    if let Err(msg) = registry.source_for(&args.str("policy"), &device) {
+        eprintln!("{msg}");
+        std::process::exit(2);
+    }
+
+    let h_kv = args.usize("hkv");
+    let model = AttnGeometry { h_q: 8 * h_kv, h_kv, d: 128, max_seq: 1024 };
+    let topology = ClusterTopology::builder(model)
+        .tp(TpConfig::new(args.usize("tp")))
+        .replicas(args.usize("replicas"), device)
+        .build()
+        .map_err(|e| anyhow::anyhow!("invalid topology: {e}"))?;
+
+    let engine_cfg = EngineConfig {
+        batcher: BatcherConfig::for_max_batch(args.usize("max-batch")),
+        ..Default::default()
+    };
+    let mut fleet = Fleet::new(
+        topology,
+        router,
+        FleetConfig::default().policy(args.str("policy")).engine(engine_cfg),
+    )?;
+
+    let workload = ChatWorkload {
+        seed: args.u64("seed"),
+        n_requests: args.usize("requests"),
+        prompt_median: args.usize("prompt-median"),
+        output_mean: args.usize("tokens"),
+        output_cap: args.usize("tokens"),
+        mean_gap_us: args.u64("gap-us"),
+        turns_per_session: args.usize("turns").max(1),
+        ..Default::default()
+    };
+    let report = fleet.run(&workload.generate())?;
+    print!("{}", report.render());
     Ok(())
 }
 
@@ -268,7 +351,7 @@ fn cmd_decide(argv: &[String]) -> anyhow::Result<()> {
             .opt("lk", "512", "sequence length L_K")
             .opt("hkv", "1", "KV heads (H_Q = 8*H_KV)")
             .opt("d", "128", "head dim")
-            .opt("device", "h100-sxm", "device profile: h100-sxm|h100-pcie|a100|h200")
+            .opt("device", "h100-sxm", format!("device profile: {}", DeviceProfile::help_line()))
             .opt("sm-margin", "0", "SMs reserved for the combine scheduler"),
         argv,
     );
@@ -279,9 +362,7 @@ fn cmd_decide(argv: &[String]) -> anyhow::Result<()> {
         args.usize("hkv"),
         args.usize("d"),
     );
-    let device_name = args.str("device");
-    let device = DeviceProfile::by_name(&device_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown device '{device_name}'"))?;
+    let device = device_from_args(&args);
     let sim = Simulator::for_profile(&device);
     println!(
         "shape: B={} L_K={} H_Q={} H_KV={} D={} -> nblk={}, tiles={}  (device: {}, {} SMs)",
@@ -328,6 +409,7 @@ fn cmd_policies() -> anyhow::Result<()> {
             p.name, p.num_sms, p.hbm_bw_gbps, p.max_splits
         );
     }
+    println!("cluster routers: {}", cluster::router::help_line());
     Ok(())
 }
 

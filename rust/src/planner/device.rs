@@ -102,6 +102,12 @@ impl DeviceProfile {
         [Self::H100_SXM, Self::H100_PCIE, Self::A100_SXM, Self::H200_SXM]
     }
 
+    /// `H100-SXM5|H100-PCIe|…` — CLI help/error listing derived from the
+    /// presets, so new profiles appear everywhere automatically.
+    pub fn help_line() -> String {
+        Self::presets().map(|p| p.name.to_string()).join("|")
+    }
+
     /// Look up a preset by CLI-friendly name (`h100-sxm`, `h100`, `h100-pcie`,
     /// `a100`, `a100-sxm`, `h200`, `h200-sxm`, or the display name).
     pub fn by_name(name: &str) -> Option<DeviceProfile> {
@@ -156,6 +162,16 @@ mod tests {
         assert_eq!(DeviceProfile::by_name("a100").unwrap().num_sms, 108);
         assert_eq!(DeviceProfile::by_name("h200").unwrap().hbm_bw_gbps, 4800.0);
         assert!(DeviceProfile::by_name("tpu-v5").is_none());
+    }
+
+    #[test]
+    fn help_line_lists_every_preset() {
+        let help = DeviceProfile::help_line();
+        for p in DeviceProfile::presets() {
+            assert!(help.contains(p.name), "{help}");
+            // Every listed name round-trips through the lookup.
+            assert_eq!(DeviceProfile::by_name(p.name).unwrap().name, p.name);
+        }
     }
 
     #[test]

@@ -9,12 +9,19 @@
 use crate::coordinator::Request;
 use crate::util::prng::Rng;
 
-/// A generated request plus its arrival offset.
+/// A generated request plus its arrival offset and chat-session identity.
 #[derive(Debug, Clone)]
 pub struct GeneratedRequest {
     pub request: Request,
     /// Arrival offset from stream start, µs.
     pub arrival_offset_us: u64,
+    /// Chat session the request belongs to. Consecutive requests share a
+    /// session when [`ChatWorkload::turns_per_session`] > 1 — the unit a
+    /// session-affinity router must keep on one replica (its KV lives
+    /// there).
+    pub session: u64,
+    /// Turn index within the session (0-based).
+    pub turn: usize,
 }
 
 /// Chat workload parameters.
@@ -24,6 +31,10 @@ pub struct ChatWorkload {
     pub n_requests: usize,
     /// Median prompt length (tokens).
     pub prompt_median: usize,
+    /// Floor on prompt length (1 = unconstrained). Heavy-decode benches
+    /// pin it to the boundary bucket's lower edge so the regime under
+    /// test actually dominates the trace.
+    pub prompt_min: usize,
     /// Hard cap on prompt length (the paper's L_K <= 512 regime).
     pub prompt_cap: usize,
     /// Mean output length (tokens).
@@ -32,6 +43,9 @@ pub struct ChatWorkload {
     /// Mean inter-arrival gap, µs (0 = all at once / closed loop).
     pub mean_gap_us: u64,
     pub vocab: usize,
+    /// Requests per chat session (multi-turn conversations). 1 = every
+    /// request is its own session.
+    pub turns_per_session: usize,
 }
 
 impl Default for ChatWorkload {
@@ -40,19 +54,60 @@ impl Default for ChatWorkload {
             seed: 0xC4A7,
             n_requests: 16,
             prompt_median: 200,
+            prompt_min: 1,
             prompt_cap: 512,
             output_mean: 64,
             output_cap: 256,
             mean_gap_us: 0,
             vocab: 4096,
+            turns_per_session: 1,
         }
     }
 }
 
 impl ChatWorkload {
+    /// This workload with a different seed (same shape parameters) — the
+    /// explicit reseeding knob for A/B pairs that must replay one stream.
+    pub fn with_seed(mut self, seed: u64) -> ChatWorkload {
+        self.seed = seed;
+        self
+    }
+
+    /// This workload reseeded for one replica's independent stream —
+    /// distinct, deterministic, run-to-run reproducible seeds per replica
+    /// index (SplitMix-style decorrelation so adjacent indices don't share
+    /// low-bit structure). For replica-local drivers that bypass the fleet
+    /// router and saturate each replica with its own traffic
+    /// (`tests/cluster_fleet.rs` exercises the reproducibility contract).
+    pub fn stream_for_replica(&self, replica: usize) -> ChatWorkload {
+        let mixed = self.seed ^ (replica as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        self.clone().with_seed(Rng::new(mixed).next_u64())
+    }
+
+    /// The paper's heavy-decode regime: prompts pinned to [385, 448]
+    /// (median 420) so every decode trajectory traverses the
+    /// `L_K = 385..512` boundary bucket where the sequence-aware override
+    /// fires, with fixed-length outputs. The one definition shared by the
+    /// cluster bench and the fleet test suite — the regime window lives
+    /// here, not in N copies.
+    pub fn boundary_bucket(seed: u64, n_requests: usize, output: usize) -> ChatWorkload {
+        ChatWorkload {
+            seed,
+            n_requests,
+            prompt_median: 420,
+            prompt_min: 385,
+            prompt_cap: 448,
+            output_mean: output,
+            output_cap: output,
+            ..Default::default()
+        }
+    }
+
     /// Generate the stream (deterministic in `seed`).
     pub fn generate(&self) -> Vec<GeneratedRequest> {
         assert!(self.n_requests > 0 && self.prompt_cap >= 1 && self.vocab >= 2);
+        assert!(self.turns_per_session >= 1, "turns_per_session must be >= 1");
+        assert!(self.prompt_min <= self.prompt_cap, "prompt_min exceeds prompt_cap");
         let mut rng = Rng::new(self.seed);
         let mut out = Vec::with_capacity(self.n_requests);
         let mut clock = 0u64;
@@ -69,16 +124,18 @@ impl ChatWorkload {
             out.push(GeneratedRequest {
                 request: Request::new(id as u64, prompt, out_len),
                 arrival_offset_us: clock,
+                session: (id / self.turns_per_session) as u64,
+                turn: id % self.turns_per_session,
             });
         }
         out
     }
 
     fn sample_prompt_len(&self, rng: &mut Rng) -> usize {
-        // Log-normal around the median, truncated to [1, cap].
+        // Log-normal around the median, truncated to [prompt_min, cap].
         let sigma = 0.6;
         let ln = (self.prompt_median as f64).ln() + sigma * rng.normal();
-        (ln.exp() as usize).clamp(1, self.prompt_cap)
+        (ln.exp() as usize).clamp(self.prompt_min.max(1), self.prompt_cap)
     }
 
     fn sample_output_len(&self, rng: &mut Rng) -> usize {
@@ -131,6 +188,29 @@ mod tests {
     }
 
     #[test]
+    fn prompt_floor_pins_the_regime() {
+        let w = ChatWorkload { n_requests: 100, prompt_min: 385, ..Default::default() };
+        // Median 200 < floor 385: everything clamps into [385, 512].
+        assert!(w
+            .generate()
+            .iter()
+            .all(|g| (385..=512).contains(&g.request.prompt.len())));
+    }
+
+    #[test]
+    fn boundary_bucket_stays_inside_the_window() {
+        let reqs = ChatWorkload::boundary_bucket(3, 50, 64).generate();
+        assert_eq!(reqs.len(), 50);
+        for g in &reqs {
+            let p = g.request.prompt.len();
+            assert!((385..=448).contains(&p), "prompt {p} outside [385, 448]");
+            assert_eq!(g.request.max_new_tokens, 64);
+            // Every decode step's L_K stays <= 512: nblk = 4 throughout.
+            assert!(p + 64 <= 512);
+        }
+    }
+
+    #[test]
     fn poisson_arrivals_monotone() {
         let w = ChatWorkload { mean_gap_us: 1000, n_requests: 50, ..Default::default() };
         let reqs = w.generate();
@@ -146,6 +226,40 @@ mod tests {
     fn closed_loop_has_zero_offsets() {
         let w = ChatWorkload::default();
         assert!(w.generate().iter().all(|g| g.arrival_offset_us == 0));
+    }
+
+    #[test]
+    fn sessions_group_consecutive_turns() {
+        let w = ChatWorkload { n_requests: 10, turns_per_session: 4, ..Default::default() };
+        let reqs = w.generate();
+        let sessions: Vec<u64> = reqs.iter().map(|g| g.session).collect();
+        assert_eq!(sessions, vec![0, 0, 0, 0, 1, 1, 1, 1, 2, 2]);
+        let turns: Vec<usize> = reqs.iter().map(|g| g.turn).collect();
+        assert_eq!(turns, vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1]);
+        // Default: every request is its own session.
+        let solo = ChatWorkload { n_requests: 3, ..Default::default() }.generate();
+        assert!(solo.iter().all(|g| g.session == g.request.id && g.turn == 0));
+    }
+
+    #[test]
+    fn replica_streams_are_distinct_and_reproducible() {
+        let w = ChatWorkload { n_requests: 8, ..Default::default() };
+        let a0 = w.stream_for_replica(0).generate();
+        let a0_again = w.stream_for_replica(0).generate();
+        let a1 = w.stream_for_replica(1).generate();
+        for (x, y) in a0.iter().zip(&a0_again) {
+            assert_eq!(x.request.prompt, y.request.prompt, "same replica ⇒ same stream");
+        }
+        assert_ne!(
+            a0.iter().map(|g| g.request.prompt.len()).collect::<Vec<_>>(),
+            a1.iter().map(|g| g.request.prompt.len()).collect::<Vec<_>>(),
+            "different replicas draw different streams"
+        );
+        // with_seed is the underlying explicit knob.
+        assert_eq!(
+            w.clone().with_seed(99).generate().len(),
+            ChatWorkload { seed: 99, n_requests: 8, ..Default::default() }.generate().len()
+        );
     }
 
     #[test]

@@ -1,0 +1,382 @@
+//! Fleet-level integration tests for the cluster subsystem: TP identity,
+//! shard validation, router invariants (session stickiness, least-loaded
+//! admissibility), and the acceptance property that the sequence-aware
+//! advantage widens as TP sharding shrinks per-shard head count.
+
+use fa3_split::backend::AttnGeometry;
+use fa3_split::cluster::{
+    router, ClusterTopology, Fleet, FleetConfig, FleetReport, LeastLoaded, Replica, ReplicaSpec,
+    RoundRobin, Router, SessionAffinity, TopologyError, TpConfig,
+};
+use fa3_split::coordinator::{
+    BatcherConfig, BlockManagerConfig, Engine, EngineConfig, FinishedRequest,
+};
+use fa3_split::heuristics::tiles::DecodeShape;
+use fa3_split::planner::{DeviceProfile, PolicyRegistry};
+use fa3_split::util::proptest_lite::{check, Domain};
+use fa3_split::workload::ChatWorkload;
+
+fn llama70b() -> AttnGeometry {
+    AttnGeometry { h_q: 64, h_kv: 8, d: 128, max_seq: 1024 }
+}
+
+fn b1_engine_cfg() -> EngineConfig {
+    EngineConfig { batcher: BatcherConfig::for_max_batch(1), ..Default::default() }
+}
+
+fn build_fleet(
+    n: usize,
+    tp: usize,
+    router: Box<dyn Router>,
+    policy: &str,
+    engine: EngineConfig,
+) -> Fleet {
+    let topology = ClusterTopology::builder(llama70b())
+        .tp(TpConfig::new(tp))
+        .replicas(n, DeviceProfile::H100_SXM)
+        .build()
+        .unwrap();
+    Fleet::new(topology, router, FleetConfig::default().policy(policy).engine(engine)).unwrap()
+}
+
+fn heavy_decode(seed: u64, n_requests: usize) -> ChatWorkload {
+    // The shared boundary-bucket regime with 64-token outputs: prompts in
+    // [385, 448], so every decode step of every request lands inside the
+    // L_K=385..512 bucket and the sequence-aware advantage is fully
+    // exposed wherever tiles < 4.
+    ChatWorkload::boundary_bucket(seed, n_requests, 64)
+}
+
+// ---------------------------------------------------------------------
+// TP identity: tp_degree = 1 planning is element-wise identical to the
+// single-planner stack, and invalid head/TP combinations never build.
+// ---------------------------------------------------------------------
+
+#[test]
+fn tp1_shard_planning_is_identity_property() {
+    let topology = ClusterTopology::builder(llama70b())
+        .tp(TpConfig::new(1))
+        .replicas(1, DeviceProfile::H100_SXM)
+        .build()
+        .unwrap();
+    assert_eq!(topology.shard_geometry(), llama70b());
+    check(
+        "tp1-plan-identity",
+        &[Domain::new(1, 8), Domain::new(1, 4096)],
+        |case| {
+            let (batch, l_k) = (case[0] as usize, case[1] as usize);
+            let sharded = topology.shard_shape(batch, l_k);
+            let raw = DecodeShape::decode(batch, l_k, 64, 8, 128);
+            if sharded != raw {
+                return Err(format!("shard shape diverged: {sharded:?} vs {raw:?}"));
+            }
+            let mut fleet_planner = PolicyRegistry::builtin()
+                .builder_for("sequence-aware", &DeviceProfile::H100_SXM)
+                .unwrap()
+                .build();
+            let mut single = PolicyRegistry::builtin().planner("sequence-aware").unwrap();
+            let a = fleet_planner.plan(&sharded);
+            let b = single.plan(&raw);
+            if a != b {
+                return Err(format!("plan diverged at B={batch} L_K={l_k}: {a:?} vs {b:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tp1_single_replica_fleet_matches_bare_engine() {
+    let stream = heavy_decode(0xF1, 6).generate();
+
+    let mut fleet =
+        build_fleet(1, 1, Box::new(RoundRobin::new()), "sequence-aware", b1_engine_cfg());
+    let report = fleet.run(&stream).unwrap();
+
+    let planner = PolicyRegistry::builtin()
+        .builder_for("sequence-aware", &DeviceProfile::H100_SXM)
+        .unwrap()
+        .build();
+    let mut engine = Engine::builder(Box::new(fa3_split::backend::SimBackend::for_profile(
+        &DeviceProfile::H100_SXM,
+    )))
+    .planner(planner)
+    .geometry(llama70b())
+    .config(b1_engine_cfg())
+    .build()
+    .unwrap();
+    for g in &stream {
+        engine.submit_at(g.request.clone(), g.arrival_offset_us).unwrap();
+    }
+    let bare = engine.run_until_idle().unwrap();
+
+    let by_id = |mut v: Vec<FinishedRequest>| {
+        v.sort_by_key(|f| f.id);
+        v
+    };
+    let (a, b) = (by_id(report.finished.clone()), by_id(bare));
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tokens, y.tokens, "request {}", x.id);
+        assert_eq!(x.reason, y.reason);
+        assert_eq!(x.timing.first_token_us, y.timing.first_token_us);
+        assert_eq!(x.timing.finished_us, y.timing.finished_us);
+    }
+    assert_eq!(
+        report.replicas[0].tokens_generated,
+        engine.metrics.tokens_generated,
+        "fleet-of-one must be byte-identical serving"
+    );
+    assert_eq!(
+        fleet.replicas()[0].metrics().split_histogram,
+        engine.metrics.split_histogram
+    );
+}
+
+#[test]
+fn invalid_tp_divisibility_rejected_at_build() {
+    check("tp-divisibility", &[Domain::new(0, 16)], |case| {
+        let degree = case[0] as usize;
+        let result = ClusterTopology::builder(llama70b())
+            .tp(TpConfig::new(degree))
+            .replicas(1, DeviceProfile::H100_SXM)
+            .build();
+        let should_build = degree >= 1 && 8 % degree == 0;
+        match (should_build, result) {
+            (true, Ok(topo)) => {
+                if topo.shard_geometry().h_kv != 8 / degree {
+                    return Err(format!("tp={degree}: wrong shard h_kv"));
+                }
+                Ok(())
+            }
+            (false, Err(TopologyError::IndivisibleHeads { .. }))
+            | (false, Err(TopologyError::ZeroDegree)) => Ok(()),
+            (expected, got) => {
+                Err(format!("tp={degree}: expected buildable={expected}, got {got:?}"))
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Router invariants.
+// ---------------------------------------------------------------------
+
+#[test]
+fn session_affinity_keeps_sessions_whole() {
+    let mut fleet = build_fleet(
+        4,
+        8,
+        Box::new(SessionAffinity::new()),
+        "sequence-aware",
+        EngineConfig::default(),
+    );
+    // Tight arrivals keep replicas visibly busy, so least-loaded first-turn
+    // placement spreads sessions instead of tie-breaking to replica 0.
+    let stream = ChatWorkload {
+        mean_gap_us: 300,
+        turns_per_session: 4,
+        ..heavy_decode(0xF2, 24)
+    }
+    .generate();
+    let report = fleet.run(&stream).unwrap();
+    assert_eq!(report.finished.len(), 24, "every turn served");
+    assert_eq!(report.rejected, 0);
+    // THE affinity assertion: every request (and therefore every token)
+    // of a session stayed on one replica.
+    assert_eq!(report.affinity_violations(), 0);
+    for session in 0..6u64 {
+        let replicas: Vec<usize> = report
+            .assignments
+            .iter()
+            .filter(|a| a.session == session)
+            .map(|a| a.replica)
+            .collect();
+        assert_eq!(replicas.len(), 4, "4 turns routed for session {session}");
+        assert!(
+            replicas.windows(2).all(|w| w[0] == w[1]),
+            "session {session} split across replicas: {replicas:?}"
+        );
+    }
+    // Sessions actually spread over the fleet (stickiness ≠ single-replica
+    // collapse).
+    let used: std::collections::HashSet<usize> =
+        report.assignments.iter().map(|a| a.replica).collect();
+    assert!(used.len() > 1, "fleet-wide placement collapsed to {used:?}");
+}
+
+#[test]
+fn least_loaded_never_routes_to_unadmittable_replica() {
+    // Replica 1's KV budget (16 blocks x 16 tokens = 256) can never hold a
+    // boundary-bucket request (385..512 prompt + 64 new); LeastLoaded must
+    // send everything to replica 0 even though replica 0 is busier.
+    let starved = EngineConfig {
+        blocks: BlockManagerConfig { block_size: 16, num_blocks: 16, max_seq: 1024 },
+        ..Default::default()
+    };
+    let topology = ClusterTopology::builder(llama70b())
+        .tp(TpConfig::new(8))
+        .replica(ReplicaSpec::new(DeviceProfile::H100_SXM))
+        .replica(ReplicaSpec::new(DeviceProfile::H100_SXM).engine(starved))
+        .build()
+        .unwrap();
+    let mut fleet = Fleet::new(
+        topology,
+        Box::new(LeastLoaded::new()),
+        FleetConfig::default().policy("sequence-aware"),
+    )
+    .unwrap();
+    let report = fleet.run(&heavy_decode(0xF3, 10).generate()).unwrap();
+    assert_eq!(report.finished.len(), 10);
+    assert_eq!(report.rejected, 0, "nothing was refused at submission");
+    assert!(
+        report.assignments.iter().all(|a| a.replica == 0),
+        "a request reached the starved replica: {:?}",
+        report.assignments
+    );
+    assert_eq!(report.replicas[1].requests_assigned, 0);
+}
+
+#[test]
+fn round_robin_balances_a_homogeneous_fleet() {
+    let mut fleet =
+        build_fleet(3, 8, Box::new(RoundRobin::new()), "sequence-aware", EngineConfig::default());
+    let report = fleet.run(&heavy_decode(0xF4, 12).generate()).unwrap();
+    let assigned: Vec<usize> = report.replicas.iter().map(|r| r.requests_assigned).collect();
+    assert_eq!(assigned, vec![4, 4, 4]);
+    assert_eq!(report.finished.len(), 12);
+    // Aggregates are conserved across the per-replica split.
+    let tokens: usize = report.replicas.iter().map(|r| r.tokens_generated).sum();
+    assert_eq!(tokens, report.total_tokens);
+    let finished: usize = report.replicas.iter().map(|r| r.requests_finished).sum();
+    assert_eq!(finished, 12);
+    assert!(report.imbalance() < 0.2, "imbalance {:.3}", report.imbalance());
+    assert!(report.aggregate_tok_s > 0.0);
+}
+
+#[test]
+fn heterogeneous_fleet_serves_with_per_device_planning() {
+    let topology = ClusterTopology::builder(llama70b())
+        .tp(TpConfig::new(8))
+        .replica(ReplicaSpec::new(DeviceProfile::H100_SXM))
+        .replica(ReplicaSpec::new(DeviceProfile::A100_SXM))
+        .build()
+        .unwrap();
+    let mut fleet = Fleet::new(
+        topology,
+        Box::new(RoundRobin::new()),
+        FleetConfig::default().policy("sequence-aware"),
+    )
+    .unwrap();
+    let report = fleet.run(&heavy_decode(0xF5, 8).generate()).unwrap();
+    assert_eq!(report.finished.len(), 8);
+    assert_eq!(report.replicas[0].device, "H100-SXM5");
+    assert_eq!(report.replicas[1].device, "A100-SXM4");
+    for r in &report.replicas {
+        assert!(r.mean_occupancy.unwrap() > 0.0, "replica {} has occupancy", r.index);
+    }
+    // The A100 has fewer SMs: the same launch occupies more of it.
+    assert!(report.replicas[1].mean_occupancy.unwrap() > report.replicas[0].mean_occupancy.unwrap());
+}
+
+// ---------------------------------------------------------------------
+// The acceptance property: the sequence-aware advantage widens as TP
+// sharding shrinks per-shard head count (mirrors benches/cluster_scale).
+// ---------------------------------------------------------------------
+
+#[test]
+fn sequence_aware_advantage_widens_with_tp_degree() {
+    let run = |tp: usize, policy: &str| -> FleetReport {
+        let mut fleet =
+            build_fleet(2, tp, Box::new(RoundRobin::new()), policy, b1_engine_cfg());
+        fleet.run(&heavy_decode(0xF6, 8).generate()).unwrap()
+    };
+    let mut advantages = Vec::new();
+    for tp in [1usize, 2, 4, 8] {
+        let std = run(tp, "standard");
+        let seq = run(tp, "sequence-aware");
+        let (a, b) = (
+            std.tpot.as_ref().expect("tpot").mean,
+            seq.tpot.as_ref().expect("tpot").mean,
+        );
+        assert!(b > 0.0);
+        advantages.push((tp, a / b, std.mean_occupancy(), seq.mean_occupancy()));
+    }
+    // Never a regression; monotone non-decreasing; strictly open at tp=8.
+    for &(tp, adv, _, _) in &advantages {
+        assert!(adv >= 0.999, "tp={tp} regressed: {adv:.4}");
+    }
+    for w in advantages.windows(2) {
+        assert!(
+            w[1].1 >= w[0].1 - 1e-6,
+            "advantage shrank from tp={} ({:.4}) to tp={} ({:.4})",
+            w[0].0,
+            w[0].1,
+            w[1].0,
+            w[1].1
+        );
+    }
+    let (_, adv8, occ8_std, occ8_seq) = advantages[3];
+    let (_, adv1, occ1_std, _) = advantages[0];
+    assert!(adv8 > 1.05, "tp=8 advantage too small: {adv8:.4}");
+    assert!(adv8 > adv1 + 0.03, "no widening: tp1 {adv1:.4} vs tp8 {adv8:.4}");
+    // Occupancy: sharding starves the standard policy; the override
+    // recovers a chunk at tp=8.
+    assert!(occ8_std < occ1_std, "standard occupancy should collapse with tp");
+    assert!(occ8_seq > occ8_std, "sequence-aware should lift tp=8 occupancy");
+}
+
+#[test]
+fn per_replica_streams_are_reproducible_and_distinct() {
+    // Replica-local saturation driving (no router): each replica consumes
+    // its own derived stream. Same base seed ⇒ byte-identical outcomes
+    // run-to-run; different replica indices ⇒ distinct traffic.
+    let run_once = || {
+        let topology = ClusterTopology::builder(llama70b())
+            .tp(TpConfig::new(8))
+            .replicas(2, DeviceProfile::H100_SXM)
+            .build()
+            .unwrap();
+        let base = heavy_decode(0xF7, 6);
+        let mut outcomes = Vec::new();
+        for (i, spec) in topology.replicas().iter().enumerate() {
+            let planner = PolicyRegistry::builtin()
+                .builder_for("sequence-aware", &spec.device)
+                .unwrap()
+                .build();
+            let mut replica =
+                Replica::new(i, spec, topology.shard_geometry(), planner, &EngineConfig::default())
+                    .unwrap();
+            for g in base.stream_for_replica(i).generate() {
+                replica.submit_at(g.request, g.arrival_offset_us).unwrap();
+            }
+            let mut done = replica.run_until_idle().unwrap();
+            done.sort_by_key(|f| f.id);
+            outcomes.push(
+                done.iter()
+                    .map(|f| (f.prompt_len, f.tokens.len(), f.timing.finished_us))
+                    .collect::<Vec<_>>(),
+            );
+        }
+        outcomes
+    };
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(a, b, "same base seed ⇒ identical per-replica outcomes");
+    assert_ne!(a[0], a[1], "replica indices draw distinct streams");
+}
+
+// ---------------------------------------------------------------------
+// Router name registry drives the CLI surface.
+// ---------------------------------------------------------------------
+
+#[test]
+fn router_registry_covers_all_names() {
+    for name in fa3_split::cluster::ROUTER_NAMES {
+        let r = router::by_name(name).unwrap();
+        assert_eq!(r.name(), name);
+        assert!(router::help_line().contains(name));
+    }
+    assert!(router::by_name("does-not-exist").is_none());
+}
