@@ -3,8 +3,9 @@
 //! Before the planner façade, every decode step re-ran the policy and
 //! rebuilt scheduler metadata from scratch (`policy.num_splits(..)` +
 //! metadata construction); for long contexts that decision is the
-//! *allocating* efficiency loop. The planner's shape-bucket LRU memoizes
-//! it. This bench measures both sides:
+//! efficiency loop. The planner's shape-bucket LRU memoizes it. This
+//! bench measures both sides (the cursor layer above the LRU has its own
+//! bench, `decode_hot_path`):
 //!
 //! * `uncached` rows run the planner with the cache disabled — the exact
 //!   per-call work the seed's `SplitPolicy::metadata` did (decision +

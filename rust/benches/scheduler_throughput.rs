@@ -33,6 +33,13 @@ fn main() {
     b.run("scheduler.decide_batch (4 buckets, cached)", || {
         sched.decide_batch(&buckets).unwrap()
     });
+    // 1c. Same decision through the buffer-reusing entry point (the
+    // per-step caller shape: zero output allocation after warmup).
+    let mut decisions_scratch = Vec::new();
+    b.run("scheduler.decide_batch_into (reused buffer)", || {
+        sched.decide_batch_into(&mut decisions_scratch, &buckets).unwrap();
+        decisions_scratch.len()
+    });
 
     // 2. Block manager admit/release cycle.
     let mut mgr = BlockManager::new(BlockManagerConfig::default());

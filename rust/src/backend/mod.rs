@@ -4,13 +4,16 @@
 //! Before this module the engine matched on a two-variant `EngineBackend`
 //! enum (`Pjrt` | `Simulated`) at every call site — adding a backend meant
 //! editing the step loop, and nothing could be tested against a fake. The
-//! [`ExecutionBackend`] trait inverts that: the engine builds a
-//! backend-agnostic [`StepBatch`] each step, asks the backend to
-//! [`ExecutionBackend::prepare`] it against the planner's
-//! [`LaunchPlan`], then [`ExecutionBackend::execute`]s the prepared step
-//! and applies the [`StepOutcome`] (tokens, prompt-ingestion progress,
-//! elapsed time) to its own request state. No module outside `backend/`
-//! knows which backend is running.
+//! [`ExecutionBackend`] trait inverts that: the engine fills a
+//! backend-agnostic [`StepBatch`] each step (into a scratch buffer it
+//! reuses across steps — the zero-allocation decode hot path), asks the
+//! backend to [`ExecutionBackend::prepare`] it against the planner's
+//! [`LaunchPlan`] into a small Copy [`PreparedStep`] binding, then
+//! [`ExecutionBackend::execute`]s the step into a caller-owned
+//! [`StepOutcome`] scratch (tokens, prompt-ingestion progress, elapsed
+//! time) and applies it to its own request state. No module outside
+//! `backend/` knows which backend is running, and no buffer crosses the
+//! trait by value.
 //!
 //! Three implementations:
 //!
@@ -22,14 +25,18 @@
 //!                       [`replay::StepTrace`] and replays them
 //!                       deterministically (tests, soak benches).
 //!
-//! Invariants every backend upholds (see DESIGN.md §Serving engine):
+//! Invariants every backend upholds (see DESIGN.md §Serving engine and
+//! §Decode hot path):
 //!
-//! 1. `prepare` is pure with respect to backend state: it validates the
-//!    batch against [`BackendCaps`] and snaps the plan onto what the
-//!    backend can actually launch, but performs no KV-cache mutation.
-//! 2. `execute` consumes exactly the [`PreparedStep`] it is given and
-//!    reports `elapsed_us` on its own clock domain
-//!    ([`BackendCaps::virtual_clock`] tells the engine which).
+//! 1. `prepare` is pure with respect to backend state *and* the batch: it
+//!    validates against [`BackendCaps`] and snaps the plan onto what the
+//!    backend can actually launch, but performs no KV-cache mutation and
+//!    does not take the rows (they stay in the caller's scratch).
+//! 2. `execute` runs exactly the `(batch, prepared)` pair `prepare` bound,
+//!    resets `out` before writing, and reports `elapsed_us` on its own
+//!    clock domain ([`BackendCaps::virtual_clock`] tells the engine
+//!    which). Virtual-clock decode steps must not heap-allocate in steady
+//!    state (the allocation-guard test holds the engine to zero).
 //! 3. Per-slot KV state is dropped on [`ExecutionBackend::release_slot`],
 //!    which the engine calls for every retirement *and* cancellation.
 
@@ -110,7 +117,8 @@ pub struct StepRow {
     pub prompt: Vec<i32>,
 }
 
-/// The engine's per-step work description.
+/// The engine's per-step work description. The engine owns one as scratch
+/// and refills it in place every step; `Default` is the empty scratch.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StepBatch {
     pub kind: StepKind,
@@ -120,13 +128,19 @@ pub struct StepBatch {
     pub bucket: usize,
 }
 
-/// A validated, backend-accepted step: what `prepare` hands to `execute`.
-/// Also the unit the replay backend digests, so it carries everything that
-/// determines the launch.
-#[derive(Debug, Clone, PartialEq)]
+impl Default for StepBatch {
+    fn default() -> StepBatch {
+        StepBatch { kind: StepKind::Decode, rows: Vec::new(), bucket: 0 }
+    }
+}
+
+/// A validated, backend-accepted binding for one step: what `prepare`
+/// hands to `execute` *alongside the batch it bound*. Plain Copy data —
+/// the rows stay in the caller's [`StepBatch`] scratch, so the steady
+/// state moves no buffers across the trait.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PreparedStep {
     pub kind: StepKind,
-    pub rows: Vec<StepRow>,
     pub bucket: usize,
     /// The planner's launch plan (decode steps on the metadata path).
     pub plan: Option<LaunchPlan>,
@@ -135,8 +149,10 @@ pub struct PreparedStep {
     pub artifact_splits: usize,
 }
 
-/// What a step produced.
-#[derive(Debug, Clone, PartialEq)]
+/// What a step produced. Caller-owned scratch: backends
+/// [`StepOutcome::reset`] it and refill, so token/prefill buffers are
+/// reused across steps.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct StepOutcome {
     /// `(slot, token)` for every row that emitted a token this step.
     pub tokens: Vec<(usize, i32)>,
@@ -146,6 +162,16 @@ pub struct StepOutcome {
     pub elapsed_us: f64,
     /// Model invocations performed for prompt ingestion this step.
     pub prefill_calls: usize,
+}
+
+impl StepOutcome {
+    /// Clear for reuse (keeps buffer capacity).
+    pub fn reset(&mut self) {
+        self.tokens.clear();
+        self.prefilled.clear();
+        self.elapsed_us = 0.0;
+        self.prefill_calls = 0;
+    }
 }
 
 /// The execution contract. `Send` because the engine (and therefore its
@@ -159,15 +185,21 @@ pub trait ExecutionBackend: Send {
     }
 
     /// Validate `batch` against this backend's capabilities and bind it to
-    /// a launchable configuration, taking ownership (the engine builds one
-    /// batch per step and never reuses it — backends move the rows into
-    /// the `PreparedStep` instead of copying). Decode steps carry the
-    /// planner's `plan`; prefill steps pass `None` (prefill latency is
-    /// policy-invariant).
-    fn prepare(&mut self, batch: StepBatch, plan: Option<&LaunchPlan>) -> Result<PreparedStep>;
+    /// a launchable configuration. Read-only over the batch — the rows
+    /// stay in the caller's scratch buffer, which it reuses across steps.
+    /// Decode steps carry the planner's `plan`; prefill steps pass `None`
+    /// (prefill latency is policy-invariant).
+    fn prepare(&mut self, batch: &StepBatch, plan: Option<&LaunchPlan>) -> Result<PreparedStep>;
 
-    /// Run one prepared step.
-    fn execute(&mut self, step: PreparedStep) -> Result<StepOutcome>;
+    /// Run one prepared step over `batch` (the same batch `prepare`
+    /// bound), writing results into `out` (reset first; buffers are
+    /// caller-owned scratch reused across steps).
+    fn execute(
+        &mut self,
+        batch: &StepBatch,
+        step: &PreparedStep,
+        out: &mut StepOutcome,
+    ) -> Result<()>;
 
     /// Drop per-slot KV state (request retired or cancelled).
     fn release_slot(&mut self, slot: usize) -> Result<()>;

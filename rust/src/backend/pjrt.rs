@@ -201,7 +201,16 @@ impl PjrtBackend {
         Ok(calls)
     }
 
-    fn decode_batch(&mut self, step: &PreparedStep) -> Result<Vec<(usize, i32)>> {
+    /// Decode one batch, pushing `(slot, token)` pairs into `emitted`
+    /// (already reset by `execute`). Rows come from the caller's batch
+    /// scratch; this backend allocates per call regardless (host tensors,
+    /// gather/scatter) — it is the wall-clock path, not the modeled one.
+    fn decode_batch(
+        &mut self,
+        batch: &StepBatch,
+        step: &PreparedStep,
+        emitted: &mut Vec<(usize, i32)>,
+    ) -> Result<()> {
         let entry = self
             .registry
             .manifest
@@ -210,13 +219,13 @@ impl PjrtBackend {
             .with_context(|| format!("no decode bucket for b={}", step.bucket))?
             .clone();
         let b = entry.meta.batch.unwrap();
-        if step.rows.len() > b {
-            bail!("bucket {b} smaller than batch {}", step.rows.len());
+        if batch.rows.len() > b {
+            bail!("bucket {b} smaller than batch {}", batch.rows.len());
         }
         let mut tokens = vec![0i32; b];
         let mut positions = vec![0i32; b];
-        let slots: Vec<usize> = step.rows.iter().map(|r| r.slot).collect();
-        for (bi, row) in step.rows.iter().enumerate() {
+        let slots: Vec<usize> = batch.rows.iter().map(|r| r.slot).collect();
+        for (bi, row) in batch.rows.iter().enumerate() {
             tokens[bi] = row.input_token;
             positions[bi] = row.position as i32;
         }
@@ -227,12 +236,12 @@ impl PjrtBackend {
         )?;
         self.cache.scatter(&slots, &out[1], &out[2]);
         let logits = out[0].as_f32()?;
-        let mut emitted = Vec::with_capacity(step.rows.len());
-        for (bi, row) in step.rows.iter().enumerate() {
+        emitted.reserve(batch.rows.len());
+        for (bi, row) in batch.rows.iter().enumerate() {
             let dist = &logits[bi * self.vocab..(bi + 1) * self.vocab];
             emitted.push((row.slot, argmax(dist) as i32));
         }
-        Ok(emitted)
+        Ok(())
     }
 }
 
@@ -254,8 +263,8 @@ impl ExecutionBackend for PjrtBackend {
         })
     }
 
-    fn prepare(&mut self, batch: StepBatch, plan: Option<&LaunchPlan>) -> Result<PreparedStep> {
-        validate_batch(&self.caps(), &batch, plan)?;
+    fn prepare(&mut self, batch: &StepBatch, plan: Option<&LaunchPlan>) -> Result<PreparedStep> {
+        validate_batch(&self.caps(), batch, plan)?;
         let artifact_splits =
             plan.map(|p| snap_splits(&self.splits, p.metadata.num_splits)).unwrap_or(1);
         if batch.rows.iter().any(|r| r.slot >= self.cache.max_batch) {
@@ -263,40 +272,35 @@ impl ExecutionBackend for PjrtBackend {
         }
         Ok(PreparedStep {
             kind: batch.kind,
-            rows: batch.rows,
             bucket: batch.bucket,
             plan: plan.copied(),
             artifact_splits,
         })
     }
 
-    fn execute(&mut self, step: PreparedStep) -> Result<StepOutcome> {
+    fn execute(
+        &mut self,
+        batch: &StepBatch,
+        step: &PreparedStep,
+        out: &mut StepOutcome,
+    ) -> Result<()> {
+        out.reset();
         let t0 = Instant::now();
         match step.kind {
             StepKind::Prefill => {
-                let mut prefilled = Vec::with_capacity(step.rows.len());
                 let mut calls = 0;
-                for row in &step.rows {
+                for row in &batch.rows {
                     calls += self.prefill_one(row)?;
-                    prefilled.push((row.slot, row.prompt.len()));
+                    out.prefilled.push((row.slot, row.prompt.len()));
                 }
-                Ok(StepOutcome {
-                    tokens: Vec::new(),
-                    prefilled,
-                    elapsed_us: t0.elapsed().as_micros() as f64,
-                    prefill_calls: calls,
-                })
+                out.prefill_calls = calls;
             }
             StepKind::Decode => {
-                let tokens = self.decode_batch(&step)?;
-                Ok(StepOutcome {
-                    tokens,
-                    prefilled: Vec::new(),
-                    elapsed_us: t0.elapsed().as_micros() as f64,
-                    prefill_calls: 0,
-                })
+                self.decode_batch(batch, step, &mut out.tokens)?;
             }
         }
+        out.elapsed_us = t0.elapsed().as_micros() as f64;
+        Ok(())
     }
 
     fn release_slot(&mut self, slot: usize) -> Result<()> {

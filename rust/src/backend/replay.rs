@@ -7,10 +7,10 @@
 //!   through, and appends a `(digest, outcome)` pair per executed step to
 //!   a shared [`StepTrace`].
 //! * **Replay** — serves recorded outcomes in order. Each `execute`
-//!   digests the incoming [`PreparedStep`] and verifies it matches what
-//!   was recorded; any divergence (different batch composition, split
-//!   decision, or step order) fails loudly instead of silently replaying
-//!   the wrong timing.
+//!   digests the incoming `(StepBatch, PreparedStep)` pair and verifies it
+//!   matches what was recorded; any divergence (different batch
+//!   composition, split decision, or step order) fails loudly instead of
+//!   silently replaying the wrong timing.
 //!
 //! Replay always reports a virtual clock (the recorded `elapsed_us` *is*
 //! the time), so a trace recorded against the wall-clock PJRT backend
@@ -43,13 +43,15 @@ pub struct StepDigest {
 }
 
 impl StepDigest {
-    pub fn of(step: &PreparedStep) -> StepDigest {
+    /// Digest the `(batch, prepared)` pair an `execute` call receives —
+    /// rows live in the batch, launch binding in the prepared step.
+    pub fn of(batch: &StepBatch, step: &PreparedStep) -> StepDigest {
         StepDigest {
             kind: step.kind,
             bucket: step.bucket,
             artifact_splits: step.artifact_splits,
             num_splits: step.plan.as_ref().map(|p| p.metadata.num_splits),
-            rows: step
+            rows: batch
                 .rows
                 .iter()
                 .map(|r| (r.slot, r.input_token, r.position, r.kv_len, r.prompt.len()))
@@ -145,14 +147,14 @@ impl ExecutionBackend for ReplayBackend {
         }
     }
 
-    fn prepare(&mut self, batch: StepBatch, plan: Option<&LaunchPlan>) -> Result<PreparedStep> {
+    fn prepare(&mut self, batch: &StepBatch, plan: Option<&LaunchPlan>) -> Result<PreparedStep> {
         let caps = self.caps();
         match &mut self.mode {
             Mode::Record { inner, .. } => inner.prepare(batch, plan),
             Mode::Replay { trace, cursor } => {
                 // Bind the step exactly as recorded so digests line up even
                 // if the replay engine snaps splits differently.
-                super::validate_batch(&caps, &batch, plan)?;
+                super::validate_batch(&caps, batch, plan)?;
                 let artifact_splits = trace
                     .records
                     .get(*cursor)
@@ -160,7 +162,6 @@ impl ExecutionBackend for ReplayBackend {
                     .context("replay trace exhausted")?;
                 Ok(PreparedStep {
                     kind: batch.kind,
-                    rows: batch.rows,
                     bucket: batch.bucket,
                     plan: plan.copied(),
                     artifact_splits,
@@ -169,23 +170,28 @@ impl ExecutionBackend for ReplayBackend {
         }
     }
 
-    fn execute(&mut self, step: PreparedStep) -> Result<StepOutcome> {
+    fn execute(
+        &mut self,
+        batch: &StepBatch,
+        step: &PreparedStep,
+        out: &mut StepOutcome,
+    ) -> Result<()> {
         match &mut self.mode {
             Mode::Record { inner, trace } => {
-                let digest = StepDigest::of(&step);
-                let outcome = inner.execute(step)?;
+                let digest = StepDigest::of(batch, step);
+                inner.execute(batch, step, out)?;
                 trace.lock().unwrap().records.push(StepRecord {
                     digest,
-                    outcome: outcome.clone(),
+                    outcome: out.clone(),
                     released: Vec::new(),
                 });
-                Ok(outcome)
+                Ok(())
             }
             Mode::Replay { trace, cursor } => {
                 let Some(record) = trace.records.get(*cursor) else {
                     bail!("replay trace exhausted after {} steps", trace.records.len())
                 };
-                let got = StepDigest::of(&step);
+                let got = StepDigest::of(batch, step);
                 if got != record.digest {
                     bail!(
                         "replay divergence at step {}: recorded {:?}, engine prepared {:?}",
@@ -195,7 +201,15 @@ impl ExecutionBackend for ReplayBackend {
                     );
                 }
                 *cursor += 1;
-                Ok(record.outcome.clone())
+                // Copy the recorded outcome into the caller's scratch
+                // (extend into the reused buffers rather than cloning
+                // fresh Vecs).
+                out.reset();
+                out.tokens.extend_from_slice(&record.outcome.tokens);
+                out.prefilled.extend_from_slice(&record.outcome.prefilled);
+                out.elapsed_us = record.outcome.elapsed_us;
+                out.prefill_calls = record.outcome.prefill_calls;
+                Ok(())
             }
         }
     }
@@ -240,9 +254,12 @@ mod tests {
         let (mut rec, trace) = ReplayBackend::recorder(Box::new(SimBackend::h100()));
         let plan = Planner::sequence_aware().plan(&DecodeShape::llama70b_tp8(1, 512));
         let mut recorded = Vec::new();
+        let mut out = StepOutcome::default();
         for pos in [500usize, 501, 502] {
-            let p = rec.prepare(decode_batch(pos), Some(&plan)).unwrap();
-            recorded.push(rec.execute(p).unwrap());
+            let batch = decode_batch(pos);
+            let p = rec.prepare(&batch, Some(&plan)).unwrap();
+            rec.execute(&batch, &p, &mut out).unwrap();
+            recorded.push(out.clone());
         }
         rec.release_slot(0).unwrap();
         let trace = trace.lock().unwrap().clone();
@@ -251,8 +268,9 @@ mod tests {
 
         let mut rep = ReplayBackend::replay(trace);
         for (i, pos) in [500usize, 501, 502].iter().enumerate() {
-            let p = rep.prepare(decode_batch(*pos), Some(&plan)).unwrap();
-            let out = rep.execute(p).unwrap();
+            let batch = decode_batch(*pos);
+            let p = rep.prepare(&batch, Some(&plan)).unwrap();
+            rep.execute(&batch, &p, &mut out).unwrap();
             assert_eq!(out, recorded[i]);
         }
         assert_eq!(rep.cursor(), 3);
@@ -262,14 +280,17 @@ mod tests {
     fn divergence_is_detected() {
         let (mut rec, trace) = ReplayBackend::recorder(Box::new(SimBackend::h100()));
         let plan = Planner::standard().plan(&DecodeShape::llama70b_tp8(1, 512));
-        let p = rec.prepare(decode_batch(100), Some(&plan)).unwrap();
-        rec.execute(p).unwrap();
+        let batch = decode_batch(100);
+        let p = rec.prepare(&batch, Some(&plan)).unwrap();
+        let mut out = StepOutcome::default();
+        rec.execute(&batch, &p, &mut out).unwrap();
         let trace = trace.lock().unwrap().clone();
 
         let mut rep = ReplayBackend::replay(trace);
         // Different position => different digest => divergence error.
-        let p = rep.prepare(decode_batch(101), Some(&plan)).unwrap();
-        let err = rep.execute(p).unwrap_err();
+        let batch = decode_batch(101);
+        let p = rep.prepare(&batch, Some(&plan)).unwrap();
+        let err = rep.execute(&batch, &p, &mut out).unwrap_err();
         assert!(format!("{err:#}").contains("divergence"), "{err:#}");
     }
 
@@ -277,6 +298,6 @@ mod tests {
     fn exhausted_trace_errors() {
         let mut rep = ReplayBackend::replay(StepTrace::default());
         let plan = Planner::standard().plan(&DecodeShape::llama70b_tp8(1, 512));
-        assert!(rep.prepare(decode_batch(1), Some(&plan)).is_err());
+        assert!(rep.prepare(&decode_batch(1), Some(&plan)).is_err());
     }
 }

@@ -70,57 +70,51 @@ impl ExecutionBackend for SimBackend {
         }
     }
 
-    fn prepare(&mut self, batch: StepBatch, plan: Option<&LaunchPlan>) -> Result<PreparedStep> {
-        validate_batch(&self.caps(), &batch, plan)?;
+    fn prepare(&mut self, batch: &StepBatch, plan: Option<&LaunchPlan>) -> Result<PreparedStep> {
+        validate_batch(&self.caps(), batch, plan)?;
         // The simulator can price any split count: no artifact grid to
         // snap onto.
         let artifact_splits =
             plan.map(|p| snap_splits(&[], p.metadata.num_splits)).unwrap_or(1);
         Ok(PreparedStep {
             kind: batch.kind,
-            rows: batch.rows,
             bucket: batch.bucket,
             plan: plan.copied(),
             artifact_splits,
         })
     }
 
-    fn execute(&mut self, step: PreparedStep) -> Result<StepOutcome> {
+    /// Allocation-free on the decode path: the kernel model is scalar
+    /// math and tokens land in the caller's reused `out.tokens` buffer —
+    /// what keeps the engine's steady-state step at zero heap traffic.
+    fn execute(
+        &mut self,
+        batch: &StepBatch,
+        step: &PreparedStep,
+        out: &mut StepOutcome,
+    ) -> Result<()> {
+        out.reset();
         match step.kind {
             StepKind::Prefill => {
                 // Prefill latency is policy-invariant (the paper's change
                 // is decode-only): one bulk ingest per request.
-                let mut elapsed = 0.0;
-                let mut prefilled = Vec::with_capacity(step.rows.len());
-                for row in &step.rows {
-                    elapsed += self.sim.prefill_us(row.prompt.len());
-                    prefilled.push((row.slot, row.prompt.len()));
+                for row in &batch.rows {
+                    out.elapsed_us += self.sim.prefill_us(row.prompt.len());
+                    out.prefilled.push((row.slot, row.prompt.len()));
                 }
-                Ok(StepOutcome {
-                    tokens: Vec::new(),
-                    prefill_calls: prefilled.len(),
-                    prefilled,
-                    elapsed_us: elapsed,
-                })
+                out.prefill_calls = out.prefilled.len();
             }
             StepKind::Decode => {
-                let plan = step.plan.context("decode step lost its plan")?;
+                let plan = step.plan.as_ref().context("decode step lost its plan")?;
                 // One attention launch per layer; 1 layer is the unit
                 // (policy comparisons are ratios, layers scale both sides).
-                let elapsed = self.sim.kernel_us(&plan.metadata) + self.overhead_us;
-                let tokens = step
-                    .rows
-                    .iter()
-                    .map(|r| (r.slot, SimBackend::synthetic_token(r.position)))
-                    .collect();
-                Ok(StepOutcome {
-                    tokens,
-                    prefilled: Vec::new(),
-                    elapsed_us: elapsed,
-                    prefill_calls: 0,
-                })
+                out.elapsed_us = self.sim.kernel_us(&plan.metadata) + self.overhead_us;
+                for r in &batch.rows {
+                    out.tokens.push((r.slot, SimBackend::synthetic_token(r.position)));
+                }
             }
         }
+        Ok(())
     }
 
     fn release_slot(&mut self, _slot: usize) -> Result<()> {
@@ -156,9 +150,10 @@ mod tests {
         let mut b = SimBackend::h100();
         let plan = Planner::sequence_aware().plan(&DecodeShape::llama70b_tp8(1, 512));
         let batch = decode_batch(2, 511);
-        let prepared = b.prepare(batch, Some(&plan)).unwrap();
+        let prepared = b.prepare(&batch, Some(&plan)).unwrap();
         assert_eq!(prepared.artifact_splits, plan.metadata.num_splits);
-        let out = b.execute(prepared).unwrap();
+        let mut out = StepOutcome::default();
+        b.execute(&batch, &prepared, &mut out).unwrap();
         assert_eq!(out.tokens, vec![(0, 511), (1, 511)]);
         assert!(out.elapsed_us > DEFAULT_FRAMEWORK_OVERHEAD_US);
         assert!(out.prefilled.is_empty());
@@ -169,13 +164,41 @@ mod tests {
         let mut b = SimBackend::h100();
         let shape = DecodeShape::llama70b_tp8(1, 512);
         let run = |b: &mut SimBackend, plan: &crate::planner::LaunchPlan| {
-            let prepared = b.prepare(decode_batch(1, 511), Some(plan)).unwrap();
-            b.execute(prepared).unwrap()
+            let batch = decode_batch(1, 511);
+            let prepared = b.prepare(&batch, Some(plan)).unwrap();
+            let mut out = StepOutcome::default();
+            b.execute(&batch, &prepared, &mut out).unwrap();
+            out
         };
         let std_out = run(&mut b, &Planner::standard().plan(&shape));
         let pat_out = run(&mut b, &Planner::sequence_aware().plan(&shape));
         assert_eq!(std_out.tokens, pat_out.tokens);
         assert!(std_out.elapsed_us > pat_out.elapsed_us, "patched should be faster here");
+    }
+
+    #[test]
+    fn outcome_scratch_is_reset_between_steps() {
+        // A stale outcome (previous step's tokens/prefills) must be fully
+        // overwritten, not appended to — the engine reuses one buffer.
+        let mut b = SimBackend::h100();
+        let plan = Planner::sequence_aware().plan(&DecodeShape::llama70b_tp8(1, 512));
+        let batch = decode_batch(1, 400);
+        let prepared = b.prepare(&batch, Some(&plan)).unwrap();
+        let mut out = StepOutcome {
+            tokens: vec![(9, 9), (8, 8)],
+            prefilled: vec![(7, 7)],
+            elapsed_us: 123.0,
+            prefill_calls: 5,
+        };
+        // The one new token fits the existing capacity (2), so a reusing
+        // execute must write into the SAME allocation — pointer identity,
+        // not a capacity bound a fresh Vec could also satisfy.
+        let ptr = out.tokens.as_ptr();
+        b.execute(&batch, &prepared, &mut out).unwrap();
+        assert_eq!(out.tokens, vec![(0, 400)]);
+        assert!(out.prefilled.is_empty());
+        assert_eq!(out.prefill_calls, 0);
+        assert_eq!(out.tokens.as_ptr(), ptr, "scratch buffer must be reused, not replaced");
     }
 
     #[test]
@@ -189,8 +212,9 @@ mod tests {
             ],
             bucket: 4,
         };
-        let prepared = b.prepare(batch, None).unwrap();
-        let out = b.execute(prepared).unwrap();
+        let prepared = b.prepare(&batch, None).unwrap();
+        let mut out = StepOutcome::default();
+        b.execute(&batch, &prepared, &mut out).unwrap();
         assert_eq!(out.prefilled, vec![(0, 100), (3, 50)]);
         assert_eq!(out.prefill_calls, 2);
         assert!(out.tokens.is_empty());

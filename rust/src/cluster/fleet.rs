@@ -31,7 +31,7 @@ use crate::util::table::{Align, Table};
 use crate::workload::GeneratedRequest;
 
 use super::replica::Replica;
-use super::router::{RouteError, Router};
+use super::router::{ReplicaSnapshot, RouteError, Router};
 use super::topology::ClusterTopology;
 
 /// Fleet-wide configuration.
@@ -91,6 +91,11 @@ pub struct Fleet {
     /// fleet's lifetime, so a second run would report contaminated
     /// aggregates. Enforced, not just documented.
     ran: bool,
+    /// Routing scratch: per-arrival load snapshots, reused across the
+    /// whole stream (with every replica's step loop now allocation-free
+    /// in steady state, a fresh Vec per arrival would be the fleet tick's
+    /// only remaining heap traffic).
+    snaps: Vec<ReplicaSnapshot>,
 }
 
 impl Fleet {
@@ -113,6 +118,7 @@ impl Fleet {
                 .build();
             replicas.push(Replica::new(index, spec, shard, planner, &cfg.engine)?);
         }
+        let num_replicas = replicas.len();
         Ok(Fleet {
             topology,
             replicas,
@@ -122,6 +128,7 @@ impl Fleet {
             rejected: 0,
             last_arrival_us: 0,
             ran: false,
+            snaps: Vec::with_capacity(num_replicas),
         })
     }
 
@@ -170,9 +177,12 @@ impl Fleet {
             r.advance_to(arrival_us)?;
         }
         let (prompt_len, max_new) = (g.request.prompt.len(), g.request.max_new_tokens);
-        let snaps: Vec<_> =
-            self.replicas.iter().map(|r| r.snapshot_for(prompt_len, max_new)).collect();
-        let idx = match self.router.route(&g.request, g.session, &snaps) {
+        // Refill the reused snapshot scratch (ReplicaSnapshot is Copy).
+        self.snaps.clear();
+        for r in &self.replicas {
+            self.snaps.push(r.snapshot_for(prompt_len, max_new));
+        }
+        let idx = match self.router.route(&g.request, g.session, &self.snaps) {
             Ok(idx) => idx,
             Err(RouteError::Unroutable { .. }) => {
                 self.rejected += 1;
@@ -183,12 +193,12 @@ impl Fleet {
         // Router contract (DESIGN.md §Cluster invariant 1). `get` rather
         // than indexing: a misbehaving custom Router returning an
         // out-of-range replica hits this error path, not a panic.
-        let eligible = snaps.get(idx).is_some_and(|s| s.can_ever_admit);
+        let eligible = self.snaps.get(idx).is_some_and(|s| s.can_ever_admit);
         if !eligible {
             bail!(
                 "router '{}' violated its contract: replica {idx} {} request {}",
                 self.router.name(),
-                if idx < snaps.len() { "can never admit" } else { "does not exist for" },
+                if idx < self.snaps.len() { "can never admit" } else { "does not exist for" },
                 g.request.id
             );
         }

@@ -110,6 +110,11 @@ impl Replica {
 
     /// Step the engine until its virtual clock reaches `t_us` or it goes
     /// idle — how the fleet interleaves replicas on a shared timeline.
+    /// This loop runs for every replica at every fleet arrival, so it
+    /// inherits the engine's zero-allocation steady-state step: advancing
+    /// N replicas across a tick reuses each engine's scratch and plan
+    /// cursor rather than multiplying per-step allocations by the fleet
+    /// size.
     pub fn advance_to(&mut self, t_us: u64) -> Result<()> {
         while !self.engine.is_idle() && self.engine.now_us() < t_us {
             self.engine.step()?;

@@ -40,8 +40,10 @@ impl BatcherConfig {
     }
 }
 
-/// What the engine should do this step.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// What the engine should do this step. The engine owns one as scratch
+/// and refills it via [`Batcher::plan_into`] every step; `Default` is the
+/// empty scratch.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct StepPlan {
     /// Requests (by slot) that still need prompt ingestion.
     pub prefill_slots: Vec<usize>,
@@ -68,6 +70,13 @@ impl Batcher {
 
     pub fn max_batch(&self) -> usize {
         self.cfg.max_batch
+    }
+
+    /// Number of slots (== `max_batch`): the engine's per-step sweeps scan
+    /// `0..num_slots()` directly instead of collecting an occupied-slot
+    /// Vec on the hot path.
+    pub fn num_slots(&self) -> usize {
+        self.running.len()
     }
 
     pub fn running_len(&self) -> usize {
@@ -99,29 +108,38 @@ impl Batcher {
             .collect()
     }
 
-    /// Build the step plan: prefill-first (prompt ingestion finishes before
-    /// a request joins the decode batch), then one decode call for every
-    /// prompt-complete request, packed into the smallest bucket that fits.
-    pub fn plan(&self) -> StepPlan {
-        let mut prefill_slots = Vec::new();
-        let mut decode_slots = Vec::new();
+    /// Build the step plan into caller-owned scratch (cleared first):
+    /// prefill-first (prompt ingestion finishes before a request joins the
+    /// decode batch), then one decode call for every prompt-complete
+    /// request, packed into the smallest bucket that fits. The engine
+    /// reuses one `StepPlan` across steps, so the steady state fills
+    /// existing capacity without allocating.
+    pub fn plan_into(&self, plan: &mut StepPlan) {
+        plan.prefill_slots.clear();
+        plan.decode_slots.clear();
+        plan.decode_bucket = None;
         for r in self.running.iter().flatten() {
             if !r.prompt_done() {
-                prefill_slots.push(r.slot);
+                plan.prefill_slots.push(r.slot);
             } else if !r.done() {
-                decode_slots.push(r.slot);
+                plan.decode_slots.push(r.slot);
             }
         }
-        let decode_bucket = if decode_slots.is_empty() {
-            None
-        } else {
-            self.cfg
+        if !plan.decode_slots.is_empty() {
+            plan.decode_bucket = self
+                .cfg
                 .batch_buckets
                 .iter()
                 .copied()
-                .find(|&b| b >= decode_slots.len())
-        };
-        StepPlan { prefill_slots, decode_slots, decode_bucket }
+                .find(|&b| b >= plan.decode_slots.len());
+        }
+    }
+
+    /// Allocating convenience over [`Batcher::plan_into`].
+    pub fn plan(&self) -> StepPlan {
+        let mut plan = StepPlan::default();
+        self.plan_into(&mut plan);
+        plan
     }
 
     pub(crate) fn running(&self, slot: usize) -> Option<&RunningRequest> {
@@ -227,6 +245,24 @@ mod tests {
         let p = b.plan();
         assert_eq!(p.decode_slots.len(), 3);
         assert_eq!(p.decode_bucket, Some(4)); // buckets are 1,2,4
+    }
+
+    #[test]
+    fn plan_into_reuses_scratch_and_matches_plan() {
+        let mut b = batcher(4);
+        install(&mut b, 1, 4, 4);
+        install(&mut b, 2, 4, 4);
+        b.running_mut(0).unwrap().prefilled = 4;
+        let mut scratch = StepPlan::default();
+        b.plan_into(&mut scratch);
+        assert_eq!(scratch, b.plan());
+        let (cap_p, cap_d) = (scratch.prefill_slots.capacity(), scratch.decode_slots.capacity());
+        // Refill into the same scratch: identical result, same buffers.
+        b.plan_into(&mut scratch);
+        assert_eq!(scratch, b.plan());
+        assert_eq!(scratch.prefill_slots.capacity(), cap_p);
+        assert_eq!(scratch.decode_slots.capacity(), cap_d);
+        assert_eq!(b.num_slots(), 4);
     }
 
     #[test]

@@ -20,17 +20,27 @@
 //! ([`crate::backend::BackendCaps`]), most importantly `virtual_clock`,
 //! which selects between integrating the backend's modeled time and
 //! reading the wall clock.
+//!
+//! The step loop is the serving hot path, and it is **zero-allocation in
+//! steady state** (DESIGN.md §Decode hot path): the per-step `StepPlan`,
+//! `StepBatch`, `StepOutcome`, and retirement list live in a
+//! [`StepScratch`] reused across steps; the split decision rides the
+//! scheduler's `PlanCursor`; and per-request buffers are pre-sized at
+//! admission. `tests/alloc_guard.rs` holds a warmed-up decode step to
+//! exactly zero heap allocations under a counting global allocator.
 
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::backend::{AttnGeometry, BackendCaps, ExecutionBackend, StepBatch, StepKind, StepOutcome, StepRow};
-use crate::planner::Planner;
+use crate::backend::{
+    AttnGeometry, BackendCaps, ExecutionBackend, StepBatch, StepKind, StepOutcome, StepRow,
+};
+use crate::planner::{CursorStats, Planner};
 
 use super::admission::{AdmissionConfig, AdmissionController, AdmissionStats, SubmitError};
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{Batcher, BatcherConfig, StepPlan};
 use super::kv_cache::{BlockManager, BlockManagerConfig};
 use super::lifecycle::{
     handle_pair, CancelKind, RequestHandle, StreamEvent, SubmitOptions, TrackedRequest,
@@ -115,8 +125,21 @@ impl EngineBuilder {
             clock_us: 0.0,
             pending_arrivals: Vec::new(),
             finished: Vec::new(),
+            scratch: StepScratch::default(),
         })
     }
+}
+
+/// Per-step scratch buffers the step loop reuses instead of reallocating
+/// (the zero-allocation decode hot path). Each is `mem::take`n for the
+/// duration of a step (an `Option`-style move, no allocation) and put
+/// back, so `&mut self` methods can run while the buffers are borrowed.
+#[derive(Default)]
+struct StepScratch {
+    plan: StepPlan,
+    batch: StepBatch,
+    outcome: StepOutcome,
+    to_retire: Vec<(usize, FinishReason)>,
 }
 
 /// The engine.
@@ -134,6 +157,7 @@ pub struct Engine {
     /// Open-loop arrivals not yet due (virtual clock): sorted by time.
     pending_arrivals: Vec<(u64, TrackedRequest)>,
     finished: Vec<FinishedRequest>,
+    scratch: StepScratch,
 }
 
 impl Engine {
@@ -162,6 +186,13 @@ impl Engine {
 
     pub fn admission_stats(&self) -> AdmissionStats {
         self.admission.stats
+    }
+
+    /// Hit/refill counters of the scheduler's plan cursors (the decode
+    /// hot-path bench and the allocation-guard test read these to prove
+    /// the steady state actually rode the cursor).
+    pub fn cursor_stats(&self) -> CursorStats {
+        self.scheduler.cursor_stats()
     }
 
     pub fn waiting_len(&self) -> usize {
@@ -371,14 +402,18 @@ impl Engine {
         for t in self.admission.reap_cancelled(now) {
             self.finish_unstarted(t, now);
         }
-        // Running.
-        for slot in self.batcher.occupied_slots() {
-            let kind = {
-                let r = self.batcher.running(slot).expect("occupied");
-                if r.ticket.past_deadline(now) {
-                    r.ticket.cancel.cancel(CancelKind::Deadline);
+        // Running: scan slots directly — this sweep runs every step, so it
+        // must not collect an occupied-slot Vec (the old per-step
+        // allocation this hot path no longer pays).
+        for slot in 0..self.batcher.num_slots() {
+            let kind = match self.batcher.running(slot) {
+                None => None,
+                Some(r) => {
+                    if r.ticket.past_deadline(now) {
+                        r.ticket.cancel.cancel(CancelKind::Deadline);
+                    }
+                    r.ticket.cancel.get()
                 }
-                r.ticket.cancel.get()
             };
             if let Some(kind) = kind {
                 self.retire(slot, kind.finish_reason())?;
@@ -427,7 +462,8 @@ impl Engine {
     // ------------------------------------------------------------------
 
     /// One engine step: ingest → reap → admit → prefill one batch or
-    /// decode one batch → stream/retire.
+    /// decode one batch → stream/retire. Steady-state decode performs no
+    /// heap allocation: every per-step buffer comes from [`StepScratch`].
     pub fn step(&mut self) -> Result<()> {
         if self.caps.virtual_clock {
             self.ingest_arrivals();
@@ -447,77 +483,109 @@ impl Engine {
                 }
             }
         }
-        let plan = self.batcher.plan();
+        // Take the plan scratch for the step (an Option-style move, no
+        // allocation), fill it from the batcher, and put it back after —
+        // `step_with_plan` needs `&mut self` while the plan is borrowed.
+        let mut plan = std::mem::take(&mut self.scratch.plan);
+        self.batcher.plan_into(&mut plan);
+        let result = self.step_with_plan(&plan);
+        self.scratch.plan = plan;
+        result
+    }
 
+    fn step_with_plan(&mut self, plan: &StepPlan) -> Result<()> {
         if !plan.prefill_slots.is_empty() {
-            let batch = self.prefill_batch(&plan.prefill_slots)?;
-            let prepared = self.backend.prepare(batch, None)?;
-            let outcome = self.backend.execute(prepared)?;
-            self.apply_outcome(outcome)?;
+            self.run_prefill(&plan.prefill_slots)
         } else if !plan.decode_slots.is_empty() {
             let bucket = plan.decode_bucket.context("decode slots without a bucket")?;
-            // The scheduler sees the live batch shape: the longest row's KV
-            // length (including the token being written this step).
-            let max_kv = plan
-                .decode_slots
-                .iter()
-                .map(|&s| self.batcher.running(s).map(|r| r.kv_len() + 1).unwrap_or(1))
-                .max()
-                .unwrap_or(1);
-            let decision = self.scheduler.decide(plan.decode_slots.len(), max_kv)?;
-            self.metrics.record_split(decision.plan.metadata.num_splits);
-            self.metrics.record_decode_occupancy(decision.plan.occupancy);
-            let batch = self.decode_batch(&plan.decode_slots, bucket)?;
-            let prepared = self.backend.prepare(batch, Some(&decision.plan))?;
-            let outcome = self.backend.execute(prepared)?;
-            self.apply_outcome(outcome)?;
+            self.run_decode(&plan.decode_slots, bucket)
+        } else {
+            Ok(())
+        }
+    }
+
+    fn run_prefill(&mut self, slots: &[usize]) -> Result<()> {
+        let mut batch = std::mem::take(&mut self.scratch.batch);
+        let mut outcome = std::mem::take(&mut self.scratch.outcome);
+        let result = (|| {
+            self.fill_prefill_batch(&mut batch, slots)?;
+            let prepared = self.backend.prepare(&batch, None)?;
+            self.backend.execute(&batch, &prepared, &mut outcome)?;
+            self.apply_outcome(&outcome)
+        })();
+        self.scratch.batch = batch;
+        self.scratch.outcome = outcome;
+        result
+    }
+
+    fn run_decode(&mut self, slots: &[usize], bucket: usize) -> Result<()> {
+        // The scheduler sees the live batch shape: the longest row's KV
+        // length (including the token being written this step).
+        let max_kv = slots
+            .iter()
+            .map(|&s| self.batcher.running(s).map(|r| r.kv_len() + 1).unwrap_or(1))
+            .max()
+            .unwrap_or(1);
+        let decision = self.scheduler.decide(slots.len(), max_kv)?;
+        self.metrics.record_split(decision.plan.metadata.num_splits);
+        self.metrics.record_decode_occupancy(decision.plan.occupancy);
+        let mut batch = std::mem::take(&mut self.scratch.batch);
+        let mut outcome = std::mem::take(&mut self.scratch.outcome);
+        let result = (|| {
+            self.fill_decode_batch(&mut batch, slots, bucket)?;
+            let prepared = self.backend.prepare(&batch, Some(&decision.plan))?;
+            self.backend.execute(&batch, &prepared, &mut outcome)?;
+            self.apply_outcome(&outcome)
+        })();
+        self.scratch.batch = batch;
+        self.scratch.outcome = outcome;
+        result
+    }
+
+    fn fill_prefill_batch(&self, batch: &mut StepBatch, slots: &[usize]) -> Result<()> {
+        batch.kind = StepKind::Prefill;
+        batch.bucket = self.batcher.max_batch();
+        batch.rows.clear();
+        for &slot in slots {
+            let r = self.batcher.running(slot).context("prefill slot")?;
+            batch.rows.push(StepRow {
+                slot,
+                input_token: 0,
+                position: r.prefilled,
+                kv_len: r.kv_len(),
+                prompt: r.req.prompt.clone(),
+            });
         }
         Ok(())
     }
 
-    fn prefill_batch(&self, slots: &[usize]) -> Result<StepBatch> {
-        let rows = slots
-            .iter()
-            .map(|&slot| {
-                let r = self.batcher.running(slot).context("prefill slot")?;
-                Ok(StepRow {
-                    slot,
-                    input_token: 0,
-                    position: r.prefilled,
-                    kv_len: r.kv_len(),
-                    prompt: r.req.prompt.clone(),
-                })
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(StepBatch { kind: StepKind::Prefill, rows, bucket: self.batcher.max_batch() })
-    }
-
-    fn decode_batch(&self, slots: &[usize], bucket: usize) -> Result<StepBatch> {
-        let rows = slots
-            .iter()
-            .map(|&slot| {
-                let r = self.batcher.running(slot).context("decode slot")?;
-                // Next input token: last generated, or last prompt token
-                // when none generated yet (the full prompt is ingested, so
-                // continue from its final token).
-                let input_token =
-                    *r.generated.last().unwrap_or(r.req.prompt.last().unwrap_or(&0));
-                Ok(StepRow {
-                    slot,
-                    input_token,
-                    position: r.kv_len(),
-                    kv_len: r.kv_len(),
-                    prompt: Vec::new(),
-                })
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(StepBatch { kind: StepKind::Decode, rows, bucket })
+    fn fill_decode_batch(&self, batch: &mut StepBatch, slots: &[usize], bucket: usize) -> Result<()> {
+        batch.kind = StepKind::Decode;
+        batch.bucket = bucket;
+        batch.rows.clear();
+        for &slot in slots {
+            let r = self.batcher.running(slot).context("decode slot")?;
+            // Next input token: last generated, or last prompt token
+            // when none generated yet (the full prompt is ingested, so
+            // continue from its final token).
+            let input_token = *r.generated.last().unwrap_or(r.req.prompt.last().unwrap_or(&0));
+            batch.rows.push(StepRow {
+                slot,
+                input_token,
+                position: r.kv_len(),
+                kv_len: r.kv_len(),
+                prompt: Vec::new(),
+            });
+        }
+        Ok(())
     }
 
     /// Fold a step outcome back into request state: advance the clock,
     /// record prompt-ingestion progress, stream freshly decoded tokens,
-    /// and retire rows that completed.
-    fn apply_outcome(&mut self, outcome: StepOutcome) -> Result<()> {
+    /// and retire rows that completed. The retirement list is scratch
+    /// (`StepScratch::to_retire`) because borrowing rows out of the
+    /// batcher and retiring them cannot overlap.
+    fn apply_outcome(&mut self, outcome: &StepOutcome) -> Result<()> {
         if self.caps.virtual_clock {
             self.clock_us += outcome.elapsed_us;
         }
@@ -525,13 +593,13 @@ impl Engine {
         self.metrics.prefill_calls += outcome.prefill_calls;
         let now = self.now_us();
 
-        let mut to_retire: Vec<(usize, FinishReason)> = Vec::new();
+        self.scratch.to_retire.clear();
         for &(slot, prefilled) in &outcome.prefilled {
             let r = self.batcher.running_mut(slot).context("prefilled slot")?;
             r.prefilled = prefilled;
             if r.done() {
                 // Degenerate max_new_tokens = 0: nothing to decode.
-                to_retire.push((slot, FinishReason::Length));
+                self.scratch.to_retire.push((slot, FinishReason::Length));
             }
         }
         let max_seq = self.scheduler.geometry().max_seq;
@@ -544,15 +612,22 @@ impl Engine {
                 index: r.generated.len() - 1,
                 emitted_us: now,
             });
-            if r.done() {
-                to_retire.push((slot, FinishReason::Length));
+            let reason = if r.done() {
+                Some(FinishReason::Length)
             } else if r.kv_len() + 1 > max_seq {
-                to_retire.push((slot, FinishReason::CacheFull));
+                Some(FinishReason::CacheFull)
+            } else {
+                None
+            };
+            if let Some(reason) = reason {
+                self.scratch.to_retire.push((slot, reason));
             }
         }
-        for (slot, reason) in to_retire {
+        for i in 0..self.scratch.to_retire.len() {
+            let (slot, reason) = self.scratch.to_retire[i];
             self.retire(slot, reason)?;
         }
+        self.scratch.to_retire.clear();
         Ok(())
     }
 

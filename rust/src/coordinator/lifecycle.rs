@@ -227,11 +227,26 @@ impl std::fmt::Debug for RequestHandle {
 /// handle must not wedge the engine).
 pub(crate) struct StreamSink {
     tx: mpsc::Sender<StreamEvent>,
+    /// Latched on the first failed send (receiver dropped). Channels are
+    /// SPSC here and disconnection is permanent, so later sends skip the
+    /// channel entirely — fire-and-forget submitters pay nothing per
+    /// token, which is what keeps the steady-state decode step
+    /// allocation-free for them.
+    dead: std::cell::Cell<bool>,
 }
 
 impl StreamSink {
+    pub(crate) fn new(tx: mpsc::Sender<StreamEvent>) -> StreamSink {
+        StreamSink { tx, dead: std::cell::Cell::new(false) }
+    }
+
     pub(crate) fn send(&self, ev: StreamEvent) {
-        let _ = self.tx.send(ev);
+        if self.dead.get() {
+            return;
+        }
+        if self.tx.send(ev).is_err() {
+            self.dead.set(true);
+        }
     }
 }
 
@@ -251,7 +266,7 @@ impl Ticket {
     pub(crate) fn detached(opts: &SubmitOptions) -> Ticket {
         let (tx, _rx) = mpsc::channel();
         Ticket {
-            sink: StreamSink { tx },
+            sink: StreamSink::new(tx),
             cancel: Arc::new(CancelCell::default()),
             deadline_us: opts.deadline_us,
             priority: opts.priority,
@@ -319,7 +334,7 @@ pub(crate) fn handle_pair(id: RequestId, opts: &SubmitOptions) -> (RequestHandle
     (
         RequestHandle { id, events: rx, cancel: cancel.clone() },
         Ticket {
-            sink: StreamSink { tx },
+            sink: StreamSink::new(tx),
             cancel,
             deadline_us: opts.deadline_us,
             priority: opts.priority,

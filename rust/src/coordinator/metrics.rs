@@ -69,6 +69,22 @@ pub struct EngineMetrics {
 }
 
 impl EngineMetrics {
+    /// Pre-reserve the aggregate sample buffers so a measured window of
+    /// `steps` steps / `requests` completions records without growing any
+    /// Vec. The allocation-guard test and the decode hot-path bench call
+    /// this between warmup and their measured window; ordinary callers
+    /// never need it (growth is amortized).
+    pub fn reserve_capacity(&mut self, steps: usize, requests: usize) {
+        self.step_latencies_us.reserve(steps);
+        self.tpots_us.reserve(requests);
+        self.ttfts_us.reserve(requests);
+        // Headroom for any split count a device can choose (caps are
+        // <= 128 on every preset), so a first-seen split mid-window
+        // resizes within capacity instead of reallocating.
+        let want = 257usize;
+        self.split_histogram.reserve(want.saturating_sub(self.split_histogram.len()));
+    }
+
     pub fn record_step(&mut self, latency_us: f64, decoded: usize) {
         self.steps += 1;
         if decoded > 0 {

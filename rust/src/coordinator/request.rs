@@ -74,10 +74,15 @@ pub(crate) struct RunningRequest {
 
 impl RunningRequest {
     pub fn new(req: Request, ticket: Ticket, slot: usize, now_us: u64) -> RunningRequest {
+        // Reserve the full generation up front (admission already
+        // reserved the worst-case KV budget, so max_new_tokens is bounded
+        // by max_seq): steady-state decode pushes never regrow this Vec —
+        // part of the zero-allocation step-loop contract.
+        let generated = Vec::with_capacity(req.max_new_tokens);
         RunningRequest {
             req,
             ticket,
-            generated: Vec::new(),
+            generated,
             prefilled: 0,
             slot,
             first_token_us: None,

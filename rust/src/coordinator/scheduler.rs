@@ -2,16 +2,20 @@
 //!
 //! Each decode step, the scheduler derives the live attention shape from
 //! the running batch (max KV length across rows, bucketed to the artifact
-//! grid), asks the configured [`Planner`] for a launch plan — exactly
-//! FA3's `get_scheduler_metadata()` deployment path, now cached per shape
-//! bucket so consecutive steps reuse the decision — and routes to the AOT
-//! artifact compiled for that (bucket, num_splits).
+//! grid), asks its [`PlanCursor`] for a launch plan — exactly FA3's
+//! `get_scheduler_metadata()` deployment path, ridden at zero cost:
+//! decode monotonicity pins the decision until `L_K` crosses a horizon,
+//! so the steady-state decide is a range check plus a metadata stamp (the
+//! configured [`Planner`]'s LRU cache is the refill source) — and routes
+//! to the AOT artifact compiled for that (bucket, num_splits). One cursor
+//! per live decode-batch size, because the batch dimension is part of the
+//! pinned shape.
 
 use anyhow::Result;
 
 use crate::heuristics::tiles::DecodeShape;
 use crate::heuristics::SchedulerMetadata;
-use crate::planner::{LaunchPlan, Planner};
+use crate::planner::{CursorStats, LaunchPlan, PlanCursor, Planner};
 
 // The geometry now lives with the execution backends (a PJRT backend
 // derives it from its own manifest and hands it up through
@@ -45,6 +49,13 @@ pub struct DecodeScheduler {
     geometry: AttnGeometry,
     /// Split variants the artifact set was compiled with (ascending).
     available_splits: Vec<usize>,
+    /// One plan cursor per live decode-batch size (looked up linearly —
+    /// engines run a handful of batch sizes). Grows once per first-seen
+    /// batch size; steady-state decide never allocates.
+    cursors: Vec<PlanCursor>,
+    /// Scratch for `decide_batch_into` (shapes + plans reused across steps).
+    shapes_scratch: Vec<DecodeShape>,
+    plans_scratch: Vec<LaunchPlan>,
 }
 
 impl DecodeScheduler {
@@ -56,7 +67,14 @@ impl DecodeScheduler {
         assert!(!available_splits.is_empty(), "no split variants available");
         available_splits.sort_unstable();
         assert_eq!(available_splits[0], 1, "s = 1 variant must exist");
-        DecodeScheduler { planner, geometry, available_splits }
+        DecodeScheduler {
+            planner,
+            geometry,
+            available_splits,
+            cursors: Vec::new(),
+            shapes_scratch: Vec::new(),
+            plans_scratch: Vec::new(),
+        }
     }
 
     pub fn policy_name(&self) -> &'static str {
@@ -68,35 +86,71 @@ impl DecodeScheduler {
     }
 
     /// Decide the split schedule for a decode step over `batch` rows whose
-    /// longest row attends over `max_kv_len` cache entries.
+    /// longest row attends over `max_kv_len` cache entries. Steady state
+    /// (same batch size, `max_kv_len` inside the cursor's horizon) costs a
+    /// range check and a metadata stamp; horizon crossings refill through
+    /// the planner's LRU. Element-wise identical to planning every step
+    /// from scratch (the cursor equivalence property).
     pub fn decide(&mut self, batch: usize, max_kv_len: usize) -> Result<StepDecision> {
         let shape = self.step_shape(batch, max_kv_len);
-        let plan = self.planner.plan(&shape);
+        // Linear cursor lookup by live batch size; a fresh cursor keys
+        // itself on its first refill inside `plan`.
+        let idx = match self.cursors.iter().position(|c| c.batch() == batch) {
+            Some(idx) => idx,
+            None => {
+                self.cursors.push(self.planner.cursor());
+                self.cursors.len() - 1
+            }
+        };
+        let plan = self.cursors[idx].plan(&mut self.planner, &shape);
         let artifact_splits = self.snap_splits(plan.metadata.num_splits);
         Ok(StepDecision { plan, artifact_splits })
     }
 
-    /// Batched variant: one entry per (batch, max_kv_len) bucket,
-    /// element-wise identical to calling [`DecodeScheduler::decide`] per
-    /// bucket (the planner guarantees `plan_batch` ≡ per-shape `plan`).
-    /// The built-in engine forms a single bucket per step and uses
-    /// `decide`; this is the entry point for schedulers that plan several
-    /// buckets at once (multi-queue/disaggregated serving, and the
-    /// `scheduler_throughput` bench).
+    /// Batched variant into caller-owned scratch (cleared first): one
+    /// entry per (batch, max_kv_len) bucket, element-wise identical to
+    /// calling [`DecodeScheduler::decide`] per bucket (the planner
+    /// guarantees batch planning ≡ per-shape `plan`, and the cursor is
+    /// plan-identical by construction). The built-in engine forms a single
+    /// bucket per step and uses `decide`; this is the entry point for
+    /// schedulers that plan several buckets at once
+    /// (multi-queue/disaggregated serving, and the `scheduler_throughput`
+    /// bench).
+    pub fn decide_batch_into(
+        &mut self,
+        out: &mut Vec<StepDecision>,
+        buckets: &[(usize, usize)],
+    ) -> Result<()> {
+        out.clear();
+        let mut shapes = std::mem::take(&mut self.shapes_scratch);
+        shapes.clear();
+        shapes.extend(buckets.iter().map(|&(batch, max_kv)| self.step_shape(batch, max_kv)));
+        let mut plans = std::mem::take(&mut self.plans_scratch);
+        self.planner.plan_batch_into(&mut plans, &shapes);
+        out.reserve(plans.len());
+        for plan in &plans {
+            let artifact_splits = self.snap_splits(plan.metadata.num_splits);
+            out.push(StepDecision { plan: *plan, artifact_splits });
+        }
+        self.shapes_scratch = shapes;
+        self.plans_scratch = plans;
+        Ok(())
+    }
+
+    /// Allocating convenience over [`DecodeScheduler::decide_batch_into`].
     pub fn decide_batch(&mut self, buckets: &[(usize, usize)]) -> Result<Vec<StepDecision>> {
-        let shapes: Vec<DecodeShape> = buckets
-            .iter()
-            .map(|&(batch, max_kv)| self.step_shape(batch, max_kv))
-            .collect();
-        Ok(self
-            .planner
-            .plan_batch(&shapes)
-            .into_iter()
-            .map(|plan| {
-                let artifact_splits = self.snap_splits(plan.metadata.num_splits);
-                StepDecision { plan, artifact_splits }
-            })
-            .collect())
+        let mut out = Vec::new();
+        self.decide_batch_into(&mut out, buckets)?;
+        Ok(out)
+    }
+
+    /// Aggregate hit/refill counters across this scheduler's cursors.
+    pub fn cursor_stats(&self) -> CursorStats {
+        let mut stats = CursorStats::default();
+        for c in &self.cursors {
+            stats.merge(c.stats());
+        }
+        stats
     }
 
     fn step_shape(&self, batch: usize, max_kv_len: usize) -> DecodeShape {
@@ -186,14 +240,37 @@ mod tests {
     }
 
     #[test]
-    fn repeated_steps_hit_the_plan_cache() {
+    fn repeated_steps_ride_the_plan_cursor() {
         let mut s = DecodeScheduler::new(Planner::sequence_aware(), geom(), vec![1, 3]);
         for kv in 400..=512 {
             s.decide(1, kv).unwrap();
         }
-        let stats = s.planner().cache_stats();
-        assert_eq!(stats.misses, 1, "{stats:?}"); // all inside nblk = 4
-        assert_eq!(stats.hits, 112, "{stats:?}");
+        // One refill at kv=400 pins the nblk=4 decision through 512; every
+        // later step is a cursor hit that never reaches the LRU.
+        let cursor = s.cursor_stats();
+        assert_eq!(cursor.refills, 1, "{cursor:?}");
+        assert_eq!(cursor.hits, 112, "{cursor:?}");
+        let cache = s.planner().cache_stats();
+        assert_eq!(cache.misses, 1, "{cache:?}"); // the refill's cold lookup
+        assert_eq!(cache.hits, 0, "cursor shields the LRU: {cache:?}");
+    }
+
+    #[test]
+    fn per_batch_cursors_do_not_thrash_each_other() {
+        // Alternating decode-batch sizes (two live buckets, the fleet
+        // steady state) must each ride their own cursor.
+        let mut s = DecodeScheduler::new(Planner::sequence_aware(), geom(), vec![1, 3]);
+        let mut oracle = Planner::sequence_aware();
+        for i in 0..64usize {
+            let batch = 1 + (i & 1);
+            let kv = 400 + i / 2;
+            let got = s.decide(batch, kv).unwrap();
+            let want = oracle.plan(&DecodeShape::decode(batch, kv, 8, 1, 128));
+            assert_eq!(got.plan, want, "i={i}");
+        }
+        let cursor = s.cursor_stats();
+        assert_eq!(cursor.refills, 2, "one per batch size: {cursor:?}");
+        assert_eq!(cursor.hits, 62, "{cursor:?}");
     }
 
     #[test]

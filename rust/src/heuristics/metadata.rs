@@ -52,6 +52,29 @@ pub trait SplitPolicy: Send + Sync {
     fn shape_bucket_pure(&self) -> bool {
         true
     }
+
+    /// Decode monotonicity contract for the planner's
+    /// [`crate::planner::PlanCursor`]: the largest `L_K` (inclusive) for
+    /// which the decision made at `shape` is still guaranteed unchanged,
+    /// holding every other shape field fixed. Autoregressive decode grows
+    /// `L_K` by exactly one per step, so the decision only needs
+    /// recomputing when `L_K` crosses this horizon.
+    ///
+    /// The default is exact for every bucket-pure policy: the decision can
+    /// only change at the next `nblk` bucket edge (`nblk * 128`), which is
+    /// also the boundary of the extended policy's learned table. Non-pure
+    /// policies fall back to `shape.l_k` — no reuse, every step recomputes
+    /// — unless they override with a tighter horizon. The planner
+    /// additionally clamps to the current nblk bucket (derived launch
+    /// geometry such as `effective_splits` is bucket-dependent even when
+    /// the split count is not).
+    fn decision_horizon(&self, shape: &DecodeShape) -> usize {
+        if self.shape_bucket_pure() {
+            shape.nblk() * super::tiles::KV_BLOCK
+        } else {
+            shape.l_k
+        }
+    }
 }
 
 /// Precomputed launch schedule for one decode-attention call — the analog
@@ -160,6 +183,33 @@ mod tests {
         assert_eq!(b.sm_margin, 100);
         // Fewer SMs available can only lower (or keep) the chosen splits.
         assert!(b.num_splits <= a.num_splits.max(32));
+    }
+
+    #[test]
+    fn decision_horizon_is_the_nblk_bucket_edge() {
+        // Bucket-pure policies (all built-ins) promise validity to the end
+        // of the current 128-token bucket — the paper's bucket boundaries.
+        for policy in [&StandardPolicy as &dyn SplitPolicy, &SequenceAwarePolicy] {
+            assert_eq!(policy.decision_horizon(&DecodeShape::llama70b_tp8(1, 1)), 128);
+            assert_eq!(policy.decision_horizon(&DecodeShape::llama70b_tp8(1, 384)), 384);
+            assert_eq!(policy.decision_horizon(&DecodeShape::llama70b_tp8(1, 385)), 512);
+            assert_eq!(policy.decision_horizon(&DecodeShape::llama70b_tp8(1, 512)), 512);
+            assert_eq!(policy.decision_horizon(&DecodeShape::llama70b_tp8(1, 513)), 640);
+        }
+        // A non-bucket-pure policy defaults to no reuse at all.
+        struct ExactLk;
+        impl SplitPolicy for ExactLk {
+            fn name(&self) -> &'static str {
+                "exact-lk"
+            }
+            fn num_splits(&self, shape: &DecodeShape, _: usize, _: bool) -> usize {
+                1 + shape.l_k % 3
+            }
+            fn shape_bucket_pure(&self) -> bool {
+                false
+            }
+        }
+        assert_eq!(ExactLk.decision_horizon(&DecodeShape::llama70b_tp8(1, 400)), 400);
     }
 
     #[test]

@@ -55,25 +55,30 @@ pub fn efficiency_loop(
     // s-1 (it only adds empty splits).
     let ceildiv = |a: usize, b: usize| a.div_ceil(b);
     let eligible = |s: usize| s == 1 || ceildiv(num_n_blocks, s) != ceildiv(num_n_blocks, s - 1);
-
-    let mut efficiency = Vec::with_capacity(max_splits);
-    let mut max_efficiency = 0.0_f32;
-    for s in 1..=max_splits {
+    let eff = |s: usize| -> f32 {
         if !eligible(s) {
-            efficiency.push(0.0);
-            continue;
+            return 0.0;
         }
         let n_waves = (total_mblocks * s) as f32 / num_sm as f32;
-        let eff = n_waves / n_waves.ceil();
-        if eff > max_efficiency {
-            max_efficiency = eff;
+        n_waves / n_waves.ceil()
+    };
+
+    // Two passes recomputing eff(s) instead of the upstream per-call
+    // efficiency Vec: eff is a handful of flops, and this decision runs on
+    // every planner cache miss and cursor refill — the hot path stays
+    // allocation-free (the upstream C++ uses a std::vector here; its cost
+    // is what the paper's §5.1 setup-overhead numbers include).
+    let mut max_efficiency = 0.0_f32;
+    for s in 1..=max_splits {
+        let e = eff(s);
+        if e > max_efficiency {
+            max_efficiency = e;
         }
-        efficiency.push(eff);
     }
     // Pick the smallest split whose wave efficiency is within 85% of the
     // best achievable.
     for s in 1..=max_splits {
-        if efficiency[s - 1] >= 0.85 * max_efficiency {
+        if eff(s) >= 0.85 * max_efficiency {
             return s;
         }
     }

@@ -8,7 +8,11 @@
 //! are not bucket-pure, e.g. evolved genomes with arbitrary `L_K` ranges),
 //! and a one-entry fast path keeps the steady-state hit at a handful of
 //! field compares — cheaper than re-running even the guard path of the
-//! heuristic, and far cheaper than the allocating efficiency loop.
+//! heuristic, and far cheaper than the long-context efficiency loop. (The
+//! true steady-state serving path is cheaper still: a
+//! [`crate::planner::PlanCursor`] pins one decision plus its `l_k`
+//! horizon and bypasses even the hash; this cache is the cursor's refill
+//! source and the cold/irregular-shape path.)
 //!
 //! Eviction is exact LRU via a monotonic tick with an O(capacity) scan on
 //! overflow; capacities are small (default 512) and overflow is rare in

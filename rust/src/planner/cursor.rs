@@ -1,0 +1,272 @@
+//! [`PlanCursor`]: the zero-allocation steady-state path for decode
+//! planning.
+//!
+//! Autoregressive decode is monotone — a request's `L_K` grows by exactly
+//! one token per step — so the split decision can only change when `L_K`
+//! crosses a *decision boundary*: the next nblk bucket edge for bucket-pure
+//! policies ([`crate::heuristics::SplitPolicy::decision_horizon`]), or the
+//! nearest genome-rule `lk_min`/`lk_max` edge for evolved sources. A
+//! cursor pins the current [`CachedDecision`] together with the inclusive
+//! `[valid_from_lk, valid_until_lk]` window it holds over, plus the fixed
+//! shape fields it was computed for. The steady-state `plan()` is then a
+//! range check and a handful of integer compares followed by an in-place
+//! metadata stamp — no hashing, no LRU traffic, no allocation. Only a
+//! horizon crossing (or a batch/geometry change) falls back to the
+//! planner, whose LRU cache remains the cold/irregular-shape path and the
+//! cursor's refill source.
+//!
+//! Soundness (property-tested in `tests/planner_properties.rs` over
+//! exhaustive `L_K` sweeps for every registry policy and the figure-1
+//! genome): `cursor.plan(planner, shape)` is byte-identical to
+//! `planner.plan(shape)` for every shape, because the window is computed
+//! by `PlanSource::validity_window` — the same source that makes the
+//! decision — and refills route through the planner's own decision path.
+
+use crate::heuristics::tiles::DecodeShape;
+
+use super::cache::CachedDecision;
+use super::{LaunchPlan, Planner};
+
+/// The shape fields a cursor's decision is pinned to (everything except
+/// `l_k`, which the validity window covers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+struct CursorKey {
+    batch: usize,
+    l_q: usize,
+    h_q: usize,
+    h_kv: usize,
+    d: usize,
+}
+
+impl CursorKey {
+    #[inline]
+    fn of(shape: &DecodeShape) -> CursorKey {
+        CursorKey {
+            batch: shape.batch,
+            l_q: shape.l_q,
+            h_q: shape.h_q,
+            h_kv: shape.h_kv,
+            d: shape.d,
+        }
+    }
+}
+
+/// Hit/refill counters for one cursor (the decode hot-path bench reports
+/// these next to the planner's `CacheStats`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CursorStats {
+    /// Steady-state plans served from the pinned decision.
+    pub hits: u64,
+    /// Horizon crossings / key changes that recomputed through the planner.
+    pub refills: u64,
+}
+
+impl CursorStats {
+    pub fn merge(&mut self, other: CursorStats) {
+        self.hits += other.hits;
+        self.refills += other.refills;
+    }
+}
+
+/// An incremental plan cursor over one decode trajectory (or one live
+/// decode bucket in a serving engine). Create via [`Planner::cursor`] or
+/// [`PlanCursor::new`]; it carries no reference to the planner, so one
+/// planner can refill any number of cursors (the engine keeps one per
+/// active decode-batch size).
+#[derive(Debug, Clone, Default)]
+pub struct PlanCursor {
+    key: CursorKey,
+    /// `None` until the first refill; the empty window below keeps the
+    /// steady-state check a plain range test either way.
+    decision: Option<CachedDecision>,
+    /// Inclusive `l_k` window the decision holds over. Starts empty
+    /// (`from > until`) so the first call always refills.
+    valid_from_lk: usize,
+    valid_until_lk: usize,
+    /// Identity of the planner that refilled the pinned decision
+    /// (`Planner::id`). Checked on the hit path: a cursor handed a
+    /// *different* planner (other policy, device, or knobs) refills
+    /// instead of silently serving the previous planner's decision.
+    planner_id: u64,
+    hits: u64,
+    refills: u64,
+}
+
+impl PlanCursor {
+    pub fn new() -> PlanCursor {
+        PlanCursor {
+            key: CursorKey::default(),
+            decision: None,
+            valid_from_lk: 1,
+            valid_until_lk: 0,
+            planner_id: 0, // no planner has id 0: first call always refills
+            hits: 0,
+            refills: 0,
+        }
+    }
+
+    /// Plan one decode launch. Steady state (the decode loop: same
+    /// planner, same batch, `l_k` inside the window) stamps the pinned
+    /// decision onto the exact shape without touching the planner;
+    /// anything else — horizon crossing, shape-key change, or a different
+    /// planner — refills through `planner` (LRU cache, then the
+    /// policy/genome).
+    ///
+    /// Guaranteed element-wise identical to [`Planner::plan`] for every
+    /// shape, including across planner switches (the pinned decision is
+    /// keyed to the refilling planner's identity).
+    #[inline]
+    pub fn plan(&mut self, planner: &mut Planner, shape: &DecodeShape) -> LaunchPlan {
+        if let Some(decision) = self.decision {
+            if shape.l_k >= self.valid_from_lk
+                && shape.l_k <= self.valid_until_lk
+                && self.planner_id == planner.id
+                && self.key == CursorKey::of(shape)
+            {
+                self.hits += 1;
+                return planner.materialize(shape, &decision);
+            }
+        }
+        self.refill(planner, shape)
+    }
+
+    #[cold]
+    fn refill(&mut self, planner: &mut Planner, shape: &DecodeShape) -> LaunchPlan {
+        let (decision, from, until) = planner.cursor_refill(shape);
+        self.key = CursorKey::of(shape);
+        self.decision = Some(decision);
+        self.valid_from_lk = from;
+        self.valid_until_lk = until;
+        self.planner_id = planner.id;
+        self.refills += 1;
+        planner.materialize(shape, &decision)
+    }
+
+    /// The batch size this cursor is currently pinned to (0 before the
+    /// first refill) — how the decode scheduler indexes its cursor set.
+    pub fn batch(&self) -> usize {
+        self.key.batch
+    }
+
+    /// The inclusive `l_k` window of the pinned decision, if any.
+    pub fn valid_window(&self) -> Option<(usize, usize)> {
+        self.decision.as_ref().map(|_| (self.valid_from_lk, self.valid_until_lk))
+    }
+
+    pub fn stats(&self) -> CursorStats {
+        CursorStats { hits: self.hits, refills: self.refills }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evolve::genome::Genome;
+    use crate::heuristics::sequence_aware::BOUNDARY_SPLIT;
+    use crate::planner::PlannerBuilder;
+
+    #[test]
+    fn steady_state_hits_inside_the_bucket() {
+        let mut planner = Planner::sequence_aware();
+        let mut cursor = planner.cursor();
+        for l_k in 385..=512usize {
+            let plan = cursor.plan(&mut planner, &DecodeShape::llama70b_tp8(1, l_k));
+            assert_eq!(plan.num_splits(), BOUNDARY_SPLIT, "l_k={l_k}");
+            assert_eq!(plan.metadata.shape.l_k, l_k, "exact shape stamped");
+        }
+        let stats = cursor.stats();
+        assert_eq!(stats.refills, 1, "{stats:?}");
+        assert_eq!(stats.hits, 127, "{stats:?}");
+        assert_eq!(cursor.valid_window(), Some((385, 512)));
+        // The cursor shields the LRU entirely after its one refill.
+        assert_eq!(planner.cache_stats().misses, 1);
+        assert_eq!(planner.cache_stats().hits, 0);
+    }
+
+    #[test]
+    fn bucket_edge_refills_and_matches_plan() {
+        let mut planner = Planner::sequence_aware();
+        let mut oracle = Planner::sequence_aware();
+        let mut cursor = planner.cursor();
+        for l_k in [384usize, 385, 512, 513, 514] {
+            let shape = DecodeShape::llama70b_tp8(1, l_k);
+            assert_eq!(cursor.plan(&mut planner, &shape), oracle.plan(&shape), "l_k={l_k}");
+        }
+        // 384 | 385..512 | 513.. are three windows: three refills.
+        assert_eq!(cursor.stats().refills, 3);
+        assert_eq!(cursor.stats().hits, 2);
+    }
+
+    #[test]
+    fn batch_change_invalidates_the_key() {
+        let mut planner = Planner::sequence_aware();
+        let mut oracle = Planner::sequence_aware();
+        let mut cursor = planner.cursor();
+        for (batch, l_k) in [(1usize, 512usize), (2, 512), (1, 512), (4, 512)] {
+            let shape = DecodeShape::llama70b_tp8(batch, l_k);
+            assert_eq!(cursor.plan(&mut planner, &shape), oracle.plan(&shape), "b={batch}");
+        }
+        // Every batch flip is a key mismatch: 4 refills, 0 hits.
+        assert_eq!(cursor.stats().refills, 4);
+    }
+
+    #[test]
+    fn non_monotone_lk_respects_the_lower_window_edge() {
+        // Jumping backwards below valid_from must refill, not serve the
+        // stale bucket's decision.
+        let mut planner = Planner::sequence_aware();
+        let mut oracle = Planner::sequence_aware();
+        let mut cursor = planner.cursor();
+        for l_k in [500usize, 384, 500, 100, 512] {
+            let shape = DecodeShape::llama70b_tp8(1, l_k);
+            assert_eq!(cursor.plan(&mut planner, &shape), oracle.plan(&shape), "l_k={l_k}");
+        }
+    }
+
+    #[test]
+    fn genome_rule_edges_bound_the_window() {
+        // figure1: seqlen<256 → s=16, else (<=512, batch 1) → s=12. The
+        // window at l_k=200 must stop at 255 even though the nblk bucket
+        // (129..256) runs to 256.
+        let mut planner = PlannerBuilder::genome(Genome::figure1()).build();
+        let mut cursor = planner.cursor();
+        assert_eq!(cursor.plan(&mut planner, &DecodeShape::llama70b_tp8(1, 200)).num_splits(), 16);
+        assert_eq!(cursor.valid_window(), Some((129, 255)));
+        assert_eq!(cursor.plan(&mut planner, &DecodeShape::llama70b_tp8(1, 255)).num_splits(), 16);
+        assert_eq!(cursor.stats().hits, 1);
+        // 256 crosses the rule edge AND the bucket edge: refill to s=12.
+        assert_eq!(cursor.plan(&mut planner, &DecodeShape::llama70b_tp8(1, 256)).num_splits(), 12);
+        assert_eq!(cursor.stats().refills, 2);
+    }
+
+    #[test]
+    fn switching_planners_refills_instead_of_serving_stale_decisions() {
+        // The same cursor driven by two different planners must never
+        // leak one planner's pinned decision to the other: the standard
+        // policy says s=1 in the boundary bucket, sequence-aware says
+        // s=3, and both windows are the identical [385, 512].
+        let mut std_p = Planner::standard();
+        let mut seq_p = Planner::sequence_aware();
+        let mut cursor = PlanCursor::new();
+        let shape = |l_k| DecodeShape::llama70b_tp8(1, l_k);
+        assert_eq!(cursor.plan(&mut std_p, &shape(400)).num_splits(), 1);
+        assert_eq!(cursor.plan(&mut seq_p, &shape(450)).num_splits(), BOUNDARY_SPLIT);
+        assert_eq!(cursor.plan(&mut std_p, &shape(460)).num_splits(), 1);
+        assert_eq!(cursor.stats().refills, 3, "every planner switch refills");
+        // Same planner again: back to steady-state hits.
+        assert_eq!(cursor.plan(&mut std_p, &shape(461)).num_splits(), 1);
+        assert_eq!(cursor.stats().hits, 1);
+        // A clone is a fresh identity (fresh cache): it also refills.
+        let mut cloned = std_p.clone();
+        assert_eq!(cursor.plan(&mut cloned, &shape(462)).num_splits(), 1);
+        assert_eq!(cursor.stats().refills, 4);
+    }
+
+    #[test]
+    fn fresh_cursor_reports_empty_window() {
+        let cursor = PlanCursor::new();
+        assert_eq!(cursor.valid_window(), None);
+        assert_eq!(cursor.batch(), 0);
+        assert_eq!(cursor.stats(), CursorStats::default());
+    }
+}

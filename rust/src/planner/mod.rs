@@ -13,9 +13,15 @@
 //!   cap, combine model) with H100/A100/H200 presets ([`device`]),
 //! * [`Planner`] — built once via [`PlannerBuilder`] (policy + device +
 //!   `sm_margin` + `pack_gqa` + [`DispatchPath`]), then queried with
-//!   [`Planner::plan`] / [`Planner::plan_batch`] / [`Planner::plan_forced`],
+//!   [`Planner::plan`] / [`Planner::plan_batch_into`] /
+//!   [`Planner::plan_forced`],
 //! * an LRU shape-bucket plan cache ([`cache`]) so the serving hot path
 //!   stops recomputing identical decisions every decode step,
+//! * [`PlanCursor`] ([`cursor`]) — the zero-allocation steady-state path:
+//!   decode monotonicity pins one decision plus its `l_k` validity window
+//!   (`SplitPolicy::decision_horizon` / genome rule edges), so the
+//!   per-token cost is a range check and an in-place metadata stamp; the
+//!   LRU stays the cold-path refill source,
 //! * [`PolicyRegistry`] — string-keyed policy construction
 //!   (standard / sequence-aware / extended / evolved-genome) shared by the
 //!   CLI, the evaluator, and the bench harnesses ([`registry`]).
@@ -24,11 +30,13 @@
 //! caller outside this module constructs [`SchedulerMetadata`] by hand.
 
 pub mod cache;
+pub mod cursor;
 pub mod device;
 pub mod plan;
 pub mod registry;
 
 pub use cache::CacheStats;
+pub use cursor::{CursorStats, PlanCursor};
 pub use device::{CombineModel, DeviceProfile};
 pub use plan::LaunchPlan;
 pub use registry::PolicyRegistry;
@@ -38,7 +46,7 @@ use std::sync::Arc;
 
 use crate::evolve::genome::Genome;
 use crate::heuristics::standard::num_splits_heuristic_upstream;
-use crate::heuristics::tiles::{DecodeShape, SplitGeometry};
+use crate::heuristics::tiles::{DecodeShape, SplitGeometry, KV_BLOCK};
 use crate::heuristics::{
     DispatchPath, SchedulerMetadata, SequenceAwarePolicy, SplitPolicy, StandardPolicy,
 };
@@ -79,6 +87,53 @@ impl PlanSource {
         match self {
             PlanSource::Policy(p) => p.shape_bucket_pure(),
             PlanSource::Genome(_) => false,
+        }
+    }
+
+    /// The inclusive `l_k` window around `shape.l_k` over which this
+    /// source's decision (and its bucket-derived launch geometry) is
+    /// constant, all other shape fields held fixed — what a [`PlanCursor`]
+    /// pins. Both edges clamp to the current nblk bucket, because the
+    /// cached [`CachedDecision`] carries `effective_splits`/`grid_ctas`/
+    /// `waves`, which change at every bucket edge even when the split
+    /// count does not.
+    ///
+    /// * Policies: `[bucket start, decision_horizon]` when bucket-pure,
+    ///   the degenerate `[l_k, decision_horizon]` otherwise.
+    /// * Genomes: the bucket intersected with the nearest rule-condition
+    ///   edges (`lk_min`/`lk_max` of every rule whose batch/h_kv guards
+    ///   can match this shape) — the set of matching rules, and hence the
+    ///   first match, is constant strictly between those edges.
+    fn validity_window(&self, shape: &DecodeShape) -> (usize, usize) {
+        let nblk = shape.nblk();
+        let bucket_start = (nblk - 1) * KV_BLOCK + 1;
+        let bucket_end = nblk * KV_BLOCK;
+        match self {
+            PlanSource::Policy(p) => {
+                let until = p.decision_horizon(shape).clamp(shape.l_k, bucket_end);
+                let from = if p.shape_bucket_pure() { bucket_start } else { shape.l_k };
+                (from, until)
+            }
+            PlanSource::Genome(g) => {
+                let mut from = bucket_start;
+                let mut until = bucket_end;
+                for r in &g.rules {
+                    if shape.batch > r.batch_max || shape.h_kv > r.hkv_max {
+                        continue; // can never match this cursor's fixed fields
+                    }
+                    if r.lk_min > shape.l_k {
+                        until = until.min(r.lk_min - 1);
+                    } else {
+                        from = from.max(r.lk_min);
+                    }
+                    if r.lk_max < shape.l_k {
+                        from = from.max(r.lk_max + 1);
+                    } else {
+                        until = until.min(r.lk_max);
+                    }
+                }
+                (from, until)
+            }
         }
     }
 }
@@ -163,6 +218,7 @@ impl PlannerBuilder {
             sm_margin: self.sm_margin,
             pack_gqa: self.pack_gqa,
             path: self.path,
+            id: next_planner_id(),
         }
     }
 }
@@ -179,6 +235,19 @@ pub struct Planner {
     bucketed: bool,
     cache: Option<PlanCache>,
     cache_capacity: usize,
+    /// Process-unique identity (fresh per build/clone). A [`PlanCursor`]
+    /// stamps it at refill and re-checks it on the hit path, so a cursor
+    /// accidentally handed a *different* planner refills instead of
+    /// silently serving the previous planner's pinned decision.
+    id: u64,
+}
+
+/// Monotonic planner-identity source (see [`Planner::id`]; relaxed is
+/// enough — only uniqueness matters, not ordering).
+fn next_planner_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
 }
 
 impl Planner {
@@ -196,31 +265,69 @@ impl Planner {
     /// bucket-pure policies, any shape in the same nblk bucket) return the
     /// memoized decision.
     pub fn plan(&mut self, shape: &DecodeShape) -> LaunchPlan {
-        if self.cache.is_some() {
-            let key = self.key_for(shape);
-            // Bind the (Copy) lookup result first: an `if let` on the
-            // `as_mut()` chain would hold the cache borrow through the body
-            // and conflict with `materialize(&self)`.
-            let hit = self.cache.as_mut().expect("checked").get(&key);
-            if let Some(decision) = hit {
-                return self.materialize(shape, &decision);
+        let decision = self.decision_for(shape);
+        self.materialize(shape, &decision)
+    }
+
+    /// The decision half of [`Planner::plan`]: LRU lookup, then the
+    /// source. The cache is moved out of its `Option` for the lookup so
+    /// the miss path can call `compute(&self)` without the borrow dance
+    /// (`Option::take`/put-back moves a struct, never allocates).
+    fn decision_for(&mut self, shape: &DecodeShape) -> CachedDecision {
+        match self.cache.take() {
+            None => self.compute(shape),
+            Some(mut cache) => {
+                let key = self.key_for(shape);
+                let decision = match cache.get(&key) {
+                    Some(hit) => hit,
+                    None => {
+                        let computed = self.compute(shape);
+                        cache.insert(key, computed);
+                        computed
+                    }
+                };
+                self.cache = Some(cache);
+                decision
             }
-            let decision = self.compute(shape);
-            self.cache.as_mut().expect("checked").insert(key, decision);
-            self.materialize(shape, &decision)
-        } else {
-            let decision = self.compute(shape);
-            self.materialize(shape, &decision)
         }
     }
 
-    /// Plan a batch of shapes in one call (one entry per decode bucket).
-    /// Guaranteed element-wise identical to calling [`Planner::plan`] per
+    /// A fresh [`PlanCursor`] for this planner: the zero-allocation
+    /// steady-state path for monotone decode (`cursor.plan(&mut planner,
+    /// &shape)`). The cursor holds no reference — one planner refills any
+    /// number of cursors.
+    pub fn cursor(&self) -> PlanCursor {
+        PlanCursor::new()
+    }
+
+    /// Cursor refill: the decision plus the inclusive `l_k` validity
+    /// window it holds over (the LRU cache is the refill source; the
+    /// window comes from the same source that made the decision).
+    pub(crate) fn cursor_refill(&mut self, shape: &DecodeShape) -> (CachedDecision, usize, usize) {
+        let decision = self.decision_for(shape);
+        let (from, until) = self.source.validity_window(shape);
+        (decision, from, until)
+    }
+
+    /// Plan a batch of shapes into a caller-owned buffer (cleared first),
+    /// so per-step batch planners reuse their output allocation across
+    /// steps. Element-wise identical to calling [`Planner::plan`] per
     /// shape; duplicate shapes within the batch hit the cache's fast path.
     /// Consumed by `DecodeScheduler::decide_batch` for schedulers that
     /// plan several buckets per step (the built-in engine plans one).
+    pub fn plan_batch_into(&mut self, out: &mut Vec<LaunchPlan>, shapes: &[DecodeShape]) {
+        out.clear();
+        out.reserve(shapes.len());
+        for shape in shapes {
+            out.push(self.plan(shape));
+        }
+    }
+
+    /// Allocating convenience over [`Planner::plan_batch_into`].
     pub fn plan_batch(&mut self, shapes: &[DecodeShape]) -> Vec<LaunchPlan> {
-        shapes.iter().map(|s| self.plan(s)).collect()
+        let mut out = Vec::new();
+        self.plan_batch_into(&mut out, shapes);
+        out
     }
 
     /// Plan with a manually-forced split count (A/B benches, the Figure 3
@@ -350,7 +457,8 @@ impl Planner {
 
 impl Clone for Planner {
     /// Clones configuration and source but starts with a fresh, empty
-    /// cache (cached decisions are re-derivable by construction).
+    /// cache and a fresh identity (cached decisions are re-derivable by
+    /// construction; cursors pinned to the original refill on the clone).
     fn clone(&self) -> Planner {
         Planner {
             source: self.source.clone(),
@@ -361,6 +469,7 @@ impl Clone for Planner {
             bucketed: self.bucketed,
             cache: (self.cache_capacity > 0).then(|| PlanCache::new(self.cache_capacity)),
             cache_capacity: self.cache_capacity,
+            id: next_planner_id(),
         }
     }
 }
@@ -508,6 +617,47 @@ mod tests {
         let mut b = Planner::sequence_aware();
         for (i, shape) in shapes.iter().enumerate() {
             assert_eq!(batch[i], b.plan(shape), "index {i}");
+        }
+    }
+
+    #[test]
+    fn plan_batch_into_reuses_the_buffer() {
+        let shapes: Vec<DecodeShape> =
+            [256usize, 512, 2048].iter().map(|&l_k| DecodeShape::llama70b_tp8(1, l_k)).collect();
+        let mut p = Planner::sequence_aware();
+        let mut out = Vec::new();
+        p.plan_batch_into(&mut out, &shapes);
+        assert_eq!(out.len(), 3);
+        let cap = out.capacity();
+        let first: Vec<LaunchPlan> = out.clone();
+        // Second fill into the same buffer: same plans, no regrowth.
+        p.plan_batch_into(&mut out, &shapes);
+        assert_eq!(out, first);
+        assert_eq!(out.capacity(), cap, "buffer must be reused, not reallocated");
+        // plan_batch delegates to plan_batch_into.
+        assert_eq!(p.plan_batch(&shapes), first);
+    }
+
+    #[test]
+    fn validity_window_clamps_to_the_bucket() {
+        // Policy sources: the window is exactly the nblk bucket.
+        let policy = PlanSource::policy(SequenceAwarePolicy);
+        assert_eq!(policy.validity_window(&DecodeShape::llama70b_tp8(1, 1)), (1, 128));
+        assert_eq!(policy.validity_window(&DecodeShape::llama70b_tp8(1, 385)), (385, 512));
+        assert_eq!(policy.validity_window(&DecodeShape::llama70b_tp8(1, 512)), (385, 512));
+        // Genome sources: rule edges cut the bucket. figure1's seqlen<256
+        // rule splits the 129..=256 bucket at 255/256.
+        let genome = PlanSource::Genome(Genome::figure1());
+        assert_eq!(genome.validity_window(&DecodeShape::llama70b_tp8(1, 200)), (129, 255));
+        assert_eq!(genome.validity_window(&DecodeShape::llama70b_tp8(1, 256)), (256, 256));
+        assert_eq!(genome.validity_window(&DecodeShape::llama70b_tp8(1, 400)), (385, 512));
+        // Rules whose batch guard can't match this shape are ignored:
+        // batch 2 matches nothing in figure1, so the window is the bucket.
+        assert_eq!(genome.validity_window(&DecodeShape::llama70b_tp8(2, 200)), (129, 256));
+        // The window always contains l_k itself.
+        for l_k in 1..=1024usize {
+            let (from, until) = genome.validity_window(&DecodeShape::llama70b_tp8(1, l_k));
+            assert!(from <= l_k && l_k <= until, "l_k={l_k} window=({from},{until})");
         }
     }
 

@@ -3,7 +3,7 @@
 //! §3.1) — and to serving-style summaries.
 
 use crate::heuristics::tiles::DecodeShape;
-use crate::planner::Planner;
+use crate::planner::{PlanCursor, Planner};
 use crate::util::stats::Summary;
 
 use super::kernel_model::Simulator;
@@ -39,16 +39,34 @@ impl DecodeTrace {
 
     /// Run the trace through `planner` on `sim`, re-planning every step as
     /// the context grows — exactly what the serving scheduler does per
-    /// decode step (and where the planner's shape-bucket cache earns its
-    /// keep: 128 consecutive steps share one decision).
+    /// decode step. The per-step decision rides a [`PlanCursor`] (decode
+    /// is monotone, so 128 consecutive steps share one pinned decision;
+    /// the planner's LRU is only touched at bucket crossings) — the same
+    /// hot path the engine uses, which is what makes the evolutionary
+    /// evaluator's millions of trace steps cheap.
     pub fn run(&self, sim: &Simulator, planner: &mut Planner) -> TraceSummary {
+        let mut samples = Vec::new();
+        self.run_with(sim, planner, &mut samples)
+    }
+
+    /// [`DecodeTrace::run`] into a caller-owned sample buffer (cleared
+    /// first), so sweep harnesses running many traces reuse one
+    /// allocation instead of a fresh Vec per trace.
+    pub fn run_with(
+        &self,
+        sim: &Simulator,
+        planner: &mut Planner,
+        samples: &mut Vec<f64>,
+    ) -> TraceSummary {
         assert!(self.n_tokens > 0, "empty trace");
-        let mut samples = Vec::with_capacity(self.n_tokens);
+        samples.clear();
+        samples.reserve(self.n_tokens);
+        let mut cursor = planner.cursor();
         let mut total = 0.0;
         for step in 0..self.n_tokens {
             let l_k = self.prompt_len + step + 1; // attend over cache incl. new token
             let shape = DecodeShape::decode(self.batch, l_k, self.h_q, self.h_kv, self.d);
-            let plan = planner.plan(&shape);
+            let plan = cursor.plan(planner, &shape);
             let t = sim.kernel_us(&plan.metadata);
             samples.push(t);
             total += t;
@@ -56,7 +74,7 @@ impl DecodeTrace {
         TraceSummary {
             tpot_us: total / self.n_tokens as f64,
             total_us: total,
-            per_step: Summary::of(&samples),
+            per_step: Summary::of(samples),
         }
     }
 
@@ -126,13 +144,30 @@ mod tests {
     }
 
     #[test]
-    fn cache_is_exercised_by_growing_contexts() {
+    fn cursor_shields_the_cache_across_growing_contexts() {
         let sim = Simulator::h100();
         let trace = DecodeTrace::chat(0, 512); // crosses 4 nblk buckets
         let mut planner = Planner::sequence_aware();
         trace.run(&sim, &mut planner);
+        // The trace's cursor refills once per bucket crossing (4 cold
+        // lookups reach the LRU and miss); the other 508 steps never touch
+        // the cache at all.
         let stats = planner.cache_stats();
         assert_eq!(stats.misses, 4, "{stats:?}"); // one per nblk bucket
-        assert_eq!(stats.hits, 508, "{stats:?}");
+        assert_eq!(stats.hits, 0, "cursor bypasses the LRU: {stats:?}");
+    }
+
+    #[test]
+    fn run_with_reuses_the_sample_buffer_and_matches_run() {
+        let sim = Simulator::h100();
+        let trace = DecodeTrace::chat(100, 32);
+        let fresh = trace.run(&sim, &mut Planner::sequence_aware());
+        let mut samples = Vec::new();
+        let with = trace.run_with(&sim, &mut Planner::sequence_aware(), &mut samples);
+        assert_eq!(with.tpot_us, fresh.tpot_us);
+        assert_eq!(samples.len(), 32);
+        let cap = samples.capacity();
+        trace.run_with(&sim, &mut Planner::sequence_aware(), &mut samples);
+        assert_eq!(samples.capacity(), cap, "sample buffer reused");
     }
 }

@@ -6,6 +6,7 @@
 //! from scratch (DESIGN.md system inventory #19–#23). Each module is small,
 //! fully tested, and exactly as featureful as this repo needs.
 
+pub mod alloc_counter;
 pub mod cli;
 pub mod config;
 pub mod json;

@@ -12,12 +12,17 @@
 //!   plans (eviction can only cost speed, never correctness).
 //! * **Knob safety** — oversized `sm_margin` saturates instead of
 //!   panicking, and every derived quantity stays in range.
+//! * **Cursor equivalence** — a `PlanCursor` is element-wise identical to
+//!   `Planner::plan` over an exhaustive `L_K` 1..=4096 sweep for every
+//!   registered policy and the figure-1 genome, and over randomized
+//!   non-monotone (batch, L_K) trajectories (horizon crossings at exact
+//!   nblk bucket edges and genome rule boundaries included).
 
 use std::cell::RefCell;
 
 use fa3_split::evolve::Genome;
 use fa3_split::heuristics::tiles::DecodeShape;
-use fa3_split::planner::{DeviceProfile, Planner, PlannerBuilder, PolicyRegistry};
+use fa3_split::planner::{DeviceProfile, PlanCursor, Planner, PlannerBuilder, PolicyRegistry};
 use fa3_split::util::proptest_lite::{check, check_with, Config, Domain};
 
 fn shape_from(case: &[u64]) -> DecodeShape {
@@ -119,6 +124,116 @@ fn plan_batch_equals_per_shape_plan() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn cursor_is_byte_identical_over_exhaustive_lk_sweeps() {
+    // The acceptance sweep: every registered policy plus the figure-1
+    // genome, every L_K in 1..=4096 (decode monotonicity — exactly the
+    // trajectory a serving request walks), for the paper's B=1 shape and
+    // a batched one. The cursor must agree with a per-step plan() on a
+    // separate planner to the bit (LaunchPlan derives PartialEq over its
+    // f64 fields; both sides run the identical derivation, so exact
+    // equality is the contract, not an approximation).
+    let registry = PolicyRegistry::builtin();
+    let sources: Vec<(&str, Box<dyn Fn() -> Planner>)> = vec![
+        ("standard", Box::new(|| PolicyRegistry::builtin().planner("standard").unwrap())),
+        ("sequence-aware", Box::new(|| {
+            PolicyRegistry::builtin().planner("sequence-aware").unwrap()
+        })),
+        ("extended", Box::new(|| PolicyRegistry::builtin().planner("extended").unwrap())),
+        ("evolved-genome", Box::new(|| PlannerBuilder::genome(Genome::figure1()).build())),
+    ];
+    assert_eq!(registry.names().len(), 4, "new policies must join this sweep");
+    for (name, make) in &sources {
+        for batch in [1usize, 2] {
+            let mut cursored = make();
+            let mut oracle = make();
+            let mut cursor = cursored.cursor();
+            let mut refills = 0;
+            for l_k in 1..=4096usize {
+                let shape = DecodeShape::llama70b_tp8(batch, l_k);
+                let before = cursor.stats().refills;
+                let got = cursor.plan(&mut cursored, &shape);
+                let want = oracle.plan(&shape);
+                assert_eq!(got, want, "{name} b={batch} l_k={l_k}");
+                refills += (cursor.stats().refills - before) as usize;
+                // A refill may only happen where a window legitimately
+                // ends: at a bucket entry (l_k ≡ 1 mod 128), a genome rule
+                // edge, or the very first step.
+                if cursor.stats().refills > before && *name != "evolved-genome" {
+                    assert!(
+                        l_k == 1 || (l_k - 1) % 128 == 0,
+                        "{name} b={batch}: unexpected refill at l_k={l_k}"
+                    );
+                }
+            }
+            // 4096 tokens = 32 nblk buckets: bucket-pure policies refill
+            // exactly once per bucket; the genome adds its rule edges
+            // (255|256 and 512|513 for figure1) but stays O(buckets).
+            assert!(
+                (32..=40).contains(&refills),
+                "{name} b={batch}: {refills} refills over 4096 steps"
+            );
+        }
+    }
+}
+
+#[test]
+fn cursor_matches_plan_on_random_trajectories() {
+    // Non-monotone L_K jumps and batch flips on a single cursor: the
+    // validity window's *lower* edge and the pinned-key check must hold,
+    // not just the decode-forward horizon. One shared planner + cursor
+    // accumulates state across cases (that persistence is the point).
+    let cursored = RefCell::new((Planner::sequence_aware(), PlanCursor::new()));
+    let oracle = RefCell::new(Planner::sequence_aware());
+    check("cursor-random-trajectories", &SHAPE_DOMAINS, |case| {
+        let shape = shape_from(case);
+        let mut guard = cursored.borrow_mut();
+        let (planner, cursor) = &mut *guard;
+        let got = cursor.plan(planner, &shape);
+        let want = oracle.borrow_mut().plan(&shape);
+        if got != want {
+            return Err(format!("cursor {got:?} != plan {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cursor_matches_genome_plan_on_random_trajectories() {
+    let cursored = RefCell::new({
+        let p = PlannerBuilder::genome(Genome::figure1()).build();
+        let c = p.cursor();
+        (p, c)
+    });
+    let oracle = RefCell::new(PlannerBuilder::genome(Genome::figure1()).build());
+    check("cursor-random-genome", &SHAPE_DOMAINS, |case| {
+        let shape = shape_from(case);
+        let mut guard = cursored.borrow_mut();
+        let (planner, cursor) = &mut *guard;
+        let got = cursor.plan(planner, &shape);
+        let want = oracle.borrow_mut().plan(&shape);
+        if got != want {
+            return Err(format!("genome cursor {got:?} != plan {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_batch_into_equals_plan_batch_and_reuses_capacity() {
+    let shapes: Vec<DecodeShape> = (0..6)
+        .map(|i| DecodeShape::llama70b_tp8(1 + i % 2, 300 + i * 97))
+        .collect();
+    let mut a = Planner::sequence_aware();
+    let mut b = Planner::sequence_aware();
+    let mut out = Vec::new();
+    a.plan_batch_into(&mut out, &shapes);
+    assert_eq!(out, b.plan_batch(&shapes));
+    let cap = out.capacity();
+    a.plan_batch_into(&mut out, &shapes);
+    assert_eq!(out.capacity(), cap, "output buffer must be reused across steps");
 }
 
 #[test]
