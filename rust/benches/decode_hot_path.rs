@@ -127,7 +127,7 @@ fn main() {
     let mut cfg = EngineConfig::default();
     // Long generations so the measured window never retires a row; the
     // default 1024-token KV cap would refuse them as unschedulable.
-    cfg.blocks = BlockManagerConfig { block_size: 16, num_blocks: 4096, max_seq: 8192 };
+    cfg.blocks = BlockManagerConfig { block_size: 16, num_blocks: 4096, max_seq: 8192, ..Default::default() };
     let mut engine = Engine::builder(Box::new(SimBackend::h100()))
         .planner(Planner::sequence_aware())
         .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 8192 })

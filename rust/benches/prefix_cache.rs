@@ -1,0 +1,295 @@
+//! Bench: the prefix-sharing paged KV cache — shared system-prompt
+//! fan-outs vs matched disjoint controls at an equal KV budget, on the
+//! simulated H100's virtual clock.
+//!
+//! Scenarios (the workload pair is an *exact* A/B: `prefix_fanout` is
+//! the only knob that moves, so lengths, suffixes, and arrivals are
+//! byte-identical across the sweep — see `ChatWorkload`):
+//!
+//! * **Fan-out sweep** — fanout ∈ {1, 2, 4, 8, 16} over a 256-token
+//!   shared system prompt, tight block budget: TTFT, drain wall,
+//!   admitted throughput, and prefix hit-rate per point.
+//! * **Disjoint identity** — random (unsharable) traffic with sharing
+//!   on vs off must produce byte-identical results and wall time: the
+//!   sharing machinery is free when nothing is shared.
+//! * **Steady-state allocations** — a warmed-up engine decoding a
+//!   shared-prefix batch under the counting allocator: the PR-4
+//!   zero-allocation decode guarantee must survive sharing (COW forks
+//!   and probes live on the admission path, not the step loop).
+//!
+//! Gates (exit nonzero on failure — the CI `prefix-cache` job):
+//!
+//! 1. shared (fanout 8) mean TTFT < disjoint (fanout 1) mean TTFT,
+//! 2. shared (fanout 8) admitted throughput > disjoint at equal budget,
+//! 3. disjoint identity holds exactly (tokens, reasons, timings, wall),
+//! 4. zero heap acquisitions per warmed-up decode step with sharing on.
+//!
+//! Run: `cargo bench --bench prefix_cache [-- --json PATH]`
+//! (`BENCH_prefix_cache.json` is regenerated this way.)
+
+use fa3_split::backend::{AttnGeometry, SimBackend};
+use fa3_split::coordinator::{
+    BatcherConfig, BlockManagerConfig, Engine, EngineConfig, FinishedRequest, PrefixCacheStats,
+    Request,
+};
+use fa3_split::planner::Planner;
+use fa3_split::util::alloc_counter::{self, CountingAllocator};
+use fa3_split::util::json::Json;
+use fa3_split::workload::ChatWorkload;
+
+#[global_allocator]
+static COUNTER: CountingAllocator = CountingAllocator;
+
+/// The sweep's serving stack: sequence-aware planner over the H100
+/// model, 8 slots, and a deliberately tight 64-block (1024-token) KV
+/// budget so admission is block-bound, not slot-bound.
+fn engine(sharing: bool) -> Engine {
+    let cfg = EngineConfig {
+        batcher: BatcherConfig::for_max_batch(8),
+        blocks: BlockManagerConfig {
+            num_blocks: 64,
+            max_seq: 1024,
+            enable_prefix_sharing: sharing,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    Engine::builder(Box::new(SimBackend::h100()))
+        .planner(Planner::sequence_aware())
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+        .available_splits(vec![1, 3])
+        .config(cfg)
+        .build()
+        .unwrap()
+}
+
+/// The sweep workload: 48 chats, a 256-token (16-block) system prompt
+/// per fan-out group, short unique suffixes, fixed 16-token outputs.
+fn sweep_workload(fanout: usize) -> ChatWorkload {
+    ChatWorkload {
+        seed: 0xBEEF,
+        n_requests: 48,
+        shared_prefix_len: 256,
+        prefix_fanout: fanout,
+        prompt_median: 48,
+        prompt_min: 32,
+        prompt_cap: 64,
+        output_mean: 16,
+        output_cap: 16,
+        ..Default::default()
+    }
+}
+
+struct SweepPoint {
+    fanout: usize,
+    mean_ttft_us: f64,
+    p99_ttft_us: f64,
+    wall_us: u64,
+    tok_s: f64,
+    stats: PrefixCacheStats,
+}
+
+fn run_sweep_point(fanout: usize) -> SweepPoint {
+    let mut e = engine(true);
+    for g in sweep_workload(fanout).generate() {
+        e.submit_at(g.request, g.arrival_offset_us).expect("sweep shapes are schedulable");
+    }
+    let done = e.run_until_idle().unwrap();
+    assert_eq!(done.len(), 48, "every request must finish");
+    let mut ttfts: Vec<f64> = done.iter().map(|f| f.timing.ttft_us() as f64).collect();
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = ttfts.iter().sum::<f64>() / ttfts.len() as f64;
+    let p99 = ttfts[(ttfts.len() * 99 / 100).min(ttfts.len() - 1)];
+    SweepPoint {
+        fanout,
+        mean_ttft_us: mean,
+        p99_ttft_us: p99,
+        wall_us: e.metrics.wall_us,
+        tok_s: e.metrics.throughput_tok_s(),
+        stats: e.metrics.prefix,
+    }
+}
+
+/// Disjoint-identity leg: random traffic, sharing on vs off.
+fn run_identity(sharing: bool) -> (Vec<FinishedRequest>, u64) {
+    let workload = ChatWorkload {
+        seed: 0xD15C0,
+        n_requests: 32,
+        prompt_median: 100,
+        output_mean: 16,
+        output_cap: 32,
+        mean_gap_us: 300,
+        ..Default::default()
+    };
+    let mut e = engine(sharing);
+    for g in workload.generate() {
+        e.submit_at(g.request, g.arrival_offset_us).expect("schedulable");
+    }
+    let mut done = e.run_until_idle().unwrap();
+    done.sort_by_key(|f| f.id);
+    (done, e.metrics.wall_us)
+}
+
+fn identical(a: &[FinishedRequest], b: &[FinishedRequest]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.id == y.id
+                && x.tokens == y.tokens
+                && x.reason == y.reason
+                && x.timing.arrival_us == y.timing.arrival_us
+                && x.timing.first_token_us == y.timing.first_token_us
+                && x.timing.finished_us == y.timing.finished_us
+        })
+}
+
+fn point_json(p: &SweepPoint) -> Json {
+    Json::obj(vec![
+        ("fanout", Json::int(p.fanout as i64)),
+        ("mean_ttft_us", Json::num(p.mean_ttft_us)),
+        ("p99_ttft_us", Json::num(p.p99_ttft_us)),
+        ("wall_us", Json::int(p.wall_us as i64)),
+        ("tok_s", Json::num(p.tok_s)),
+        ("prefix_hit_rate", Json::num(p.stats.hit_rate())),
+        ("blocks_saved", Json::int(p.stats.blocks_saved() as i64)),
+        ("tokens_cached", Json::int(p.stats.tokens_cached as i64)),
+        ("cow_forks", Json::int(p.stats.cow_forks as i64)),
+    ])
+}
+
+fn main() {
+    let json_path = {
+        let args: Vec<String> = std::env::args().collect();
+        args.iter().position(|a| a == "--json").and_then(|i| args.get(i + 1).cloned())
+    };
+
+    println!("== Prefix-sharing KV cache (shared vs disjoint at equal budget) ==\n");
+
+    // ------------------------------------------------------------------
+    // Scenario 1: fan-out sweep.
+    // ------------------------------------------------------------------
+    let points: Vec<SweepPoint> = [1usize, 2, 4, 8, 16].iter().map(|&f| run_sweep_point(f)).collect();
+    println!("fanout |  mean TTFT µs |  p99 TTFT µs |   wall µs |   tok/s | hit-rate | saved");
+    for p in &points {
+        println!(
+            "{:>6} | {:>13.1} | {:>12.1} | {:>9} | {:>7.0} | {:>7.1}% | {:>5}",
+            p.fanout,
+            p.mean_ttft_us,
+            p.p99_ttft_us,
+            p.wall_us,
+            p.tok_s,
+            p.stats.hit_rate() * 100.0,
+            p.stats.blocks_saved()
+        );
+    }
+    let disjoint = &points[0];
+    let shared = points.iter().find(|p| p.fanout == 8).unwrap();
+
+    // ------------------------------------------------------------------
+    // Scenario 2: disjoint identity (sharing must be free when unused).
+    // ------------------------------------------------------------------
+    let (with, wall_with) = run_identity(true);
+    let (without, wall_without) = run_identity(false);
+    let id_ok = identical(&with, &without) && wall_with == wall_without;
+    println!(
+        "\ndisjoint identity: sharing on vs off over {} random requests — {}",
+        with.len(),
+        if id_ok { "byte-identical" } else { "DIVERGED" }
+    );
+
+    // ------------------------------------------------------------------
+    // Scenario 3: steady-state decode allocations with sharing active.
+    // ------------------------------------------------------------------
+    let mut e = engine(true);
+    // Two requests sharing one prefix, long generations: the measured
+    // window holds a steady decode batch whose admission took the
+    // sharing path (probe, attach, COW arm + fork all happened). The
+    // second prompt stops mid-block inside the donor's full block 16,
+    // so its admission arms a copy-on-write share and its first decode
+    // token forks it — all during warmup.
+    let donor: Vec<i32> = (0..272).map(|i| 7_000 + i).collect(); // 17 full blocks
+    let tail_sharer = donor[..261].to_vec(); // 16 full + a 5-token tail
+    drop(e.submit(Request::new(0, donor, 300)).unwrap());
+    drop(e.submit(Request::new(1, tail_sharer, 300)).unwrap());
+    for _ in 0..32 {
+        e.step().unwrap(); // warmup: admission, prefill, fork, scratch sizing
+    }
+    const MEASURED_STEPS: usize = 250;
+    e.metrics.reserve_capacity(MEASURED_STEPS + 16, 16);
+    let before = alloc_counter::total_allocations();
+    for _ in 0..MEASURED_STEPS {
+        e.step().unwrap();
+    }
+    let allocs = alloc_counter::total_allocations() - before;
+    assert_eq!(e.metrics.prefix.cow_forks, 1, "the warmup fork must have fired");
+    assert_eq!(e.running_len(), 2, "the window measured steady decode, not retirement");
+    println!(
+        "steady-state with sharing: {allocs} heap acquisitions over {MEASURED_STEPS} steps \
+         (prefix {:?})",
+        e.metrics.prefix
+    );
+
+    // ------------------------------------------------------------------
+    // Gates.
+    // ------------------------------------------------------------------
+    let mut ok = true;
+
+    let g1 = shared.mean_ttft_us < disjoint.mean_ttft_us;
+    println!(
+        "\nshared TTFT vs disjoint at equal KV budget: {:.1} µs vs {:.1} µs ({})",
+        shared.mean_ttft_us,
+        disjoint.mean_ttft_us,
+        if g1 { "OK" } else { "MISS" }
+    );
+    ok &= g1;
+
+    let g2 = shared.tok_s > disjoint.tok_s;
+    println!(
+        "shared admitted throughput vs disjoint: {:.0} tok/s vs {:.0} tok/s ({})",
+        shared.tok_s,
+        disjoint.tok_s,
+        if g2 { "OK" } else { "MISS" }
+    );
+    ok &= g2;
+
+    println!("disjoint no-regression (identity): {}", if id_ok { "OK" } else { "MISS" });
+    ok &= id_ok;
+
+    let g4 = allocs == 0;
+    println!(
+        "zero-alloc decode steady state with sharing: {allocs} allocs ({})",
+        if g4 { "OK" } else { "MISS" }
+    );
+    ok &= g4;
+
+    if let Some(path) = json_path {
+        let report = Json::obj(vec![
+            ("bench", Json::str("prefix_cache")),
+            (
+                "generated_by",
+                Json::str("cargo bench --bench prefix_cache -- --json <path>"),
+            ),
+            ("measured", Json::Bool(true)),
+            ("sweep", Json::arr(points.iter().map(point_json))),
+            (
+                "gates",
+                Json::obj(vec![
+                    ("shared_ttft_us", Json::num(shared.mean_ttft_us)),
+                    ("disjoint_ttft_us", Json::num(disjoint.mean_ttft_us)),
+                    ("shared_tok_s", Json::num(shared.tok_s)),
+                    ("disjoint_tok_s", Json::num(disjoint.tok_s)),
+                    ("disjoint_identity", Json::Bool(id_ok)),
+                    ("steady_state_allocs", Json::int(allocs as i64)),
+                ]),
+            ),
+            ("passed", Json::Bool(ok)),
+        ]);
+        match std::fs::write(&path, report.to_string_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+
+    if !ok {
+        std::process::exit(1);
+    }
+}

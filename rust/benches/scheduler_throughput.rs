@@ -41,13 +41,26 @@ fn main() {
         decisions_scratch.len()
     });
 
-    // 2. Block manager admit/release cycle.
+    // 2. Block manager admit/release cycle (disjoint prompts: the
+    //    hash-chain walk runs and misses, the pre-sharing worst case).
     let mut mgr = BlockManager::new(BlockManagerConfig::default());
     let mut id = 0u64;
+    let mut prompt = vec![0i32; 200];
     b.run("block_manager        (admit+release)", || {
         id += 1;
-        mgr.admit(id, 200, 64).unwrap();
+        prompt[0] = id as i32; // unique content: no sharing
+        mgr.admit(id, &prompt, 64).unwrap();
         mgr.release(id).unwrap();
+    });
+    // 2b. The same cycle when every prompt shares one hot prefix.
+    let mut mgr_shared = BlockManager::new(BlockManagerConfig::default());
+    let shared_prompt = vec![7i32; 200];
+    mgr_shared.admit(0, &shared_prompt, 64).unwrap();
+    let mut sid = 0u64;
+    b.run("block_manager        (admit+release, shared prefix)", || {
+        sid += 1;
+        mgr_shared.admit(sid, &shared_prompt, 64).unwrap();
+        mgr_shared.release(sid).unwrap();
     });
 
     // 3. Simulated engine: full serving steps (admit→schedule→decode→

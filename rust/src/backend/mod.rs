@@ -115,6 +115,11 @@ pub struct StepRow {
     pub kv_len: usize,
     /// Prefill rows carry the full prompt; decode rows leave this empty.
     pub prompt: Vec<i32>,
+    /// Prefill: leading prompt tokens whose KV already exists (the
+    /// prefix-cache grant) — virtual-clock backends skip their ingestion
+    /// cost; physical backends may re-ingest (the dense PJRT store holds
+    /// no shared pages) without affecting correctness. Decode rows: 0.
+    pub cached_tokens: usize,
 }
 
 /// The engine's per-step work description. The engine owns one as scratch
@@ -270,7 +275,14 @@ mod tests {
     }
 
     fn decode_row(slot: usize) -> StepRow {
-        StepRow { slot, input_token: 1, position: 10, kv_len: 10, prompt: Vec::new() }
+        StepRow {
+            slot,
+            input_token: 1,
+            position: 10,
+            kv_len: 10,
+            prompt: Vec::new(),
+            cached_tokens: 0,
+        }
     }
 
     #[test]
@@ -306,7 +318,14 @@ mod tests {
 
     #[test]
     fn prefill_rows_need_prompts_and_no_plan() {
-        let row = StepRow { slot: 0, input_token: 0, position: 0, kv_len: 0, prompt: vec![1, 2] };
+        let row = StepRow {
+            slot: 0,
+            input_token: 0,
+            position: 0,
+            kv_len: 0,
+            prompt: vec![1, 2],
+            cached_tokens: 0,
+        };
         let ok = StepBatch { kind: StepKind::Prefill, rows: vec![row.clone()], bucket: 1 };
         assert!(validate_batch(&caps(), &ok, None).is_ok());
         let bad = StepBatch { kind: StepKind::Prefill, rows: vec![decode_row(0)], bucket: 1 };

@@ -288,6 +288,11 @@ impl ExecutionBackend for PjrtBackend {
         let t0 = Instant::now();
         match step.kind {
             StepKind::Prefill => {
+                // `row.cached_tokens` is deliberately ignored here: the
+                // dense per-slot KV store holds no shared pages, so a
+                // prefix-cache hit cannot skip physical ingestion —
+                // correctness over projection (the sim backend models
+                // the timing win).
                 let mut calls = 0;
                 for row in &batch.rows {
                     calls += self.prefill_one(row)?;

@@ -38,8 +38,10 @@ pub struct StepDigest {
     pub artifact_splits: usize,
     /// The plan's requested split count (decode steps).
     pub num_splits: Option<usize>,
-    /// Per row: (slot, input_token, position, kv_len, prompt_len).
-    pub rows: Vec<(usize, i32, usize, usize, usize)>,
+    /// Per row: (slot, input_token, position, kv_len, prompt_len,
+    /// cached_tokens). Cached tokens are part of the identity because a
+    /// prefix-cache hit changes a prefill step's modeled cost.
+    pub rows: Vec<(usize, i32, usize, usize, usize, usize)>,
 }
 
 impl StepDigest {
@@ -54,7 +56,9 @@ impl StepDigest {
             rows: batch
                 .rows
                 .iter()
-                .map(|r| (r.slot, r.input_token, r.position, r.kv_len, r.prompt.len()))
+                .map(|r| {
+                    (r.slot, r.input_token, r.position, r.kv_len, r.prompt.len(), r.cached_tokens)
+                })
                 .collect(),
         }
     }
@@ -78,10 +82,12 @@ pub struct StepTrace {
 }
 
 impl StepTrace {
+    /// Number of recorded steps.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// Whether the trace recorded no steps.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
@@ -244,6 +250,7 @@ mod tests {
                 position,
                 kv_len: position,
                 prompt: Vec::new(),
+                cached_tokens: 0,
             }],
             bucket: 1,
         }

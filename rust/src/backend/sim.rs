@@ -31,6 +31,7 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
+    /// Wrap a simulator as an execution backend.
     pub fn new(sim: Simulator) -> SimBackend {
         SimBackend { sim, overhead_us: DEFAULT_FRAMEWORK_OVERHEAD_US }
     }
@@ -97,9 +98,14 @@ impl ExecutionBackend for SimBackend {
         match step.kind {
             StepKind::Prefill => {
                 // Prefill latency is policy-invariant (the paper's change
-                // is decode-only): one bulk ingest per request.
+                // is decode-only): one bulk ingest per request. Tokens
+                // whose KV already exists (a prefix-cache hit) are
+                // skipped — the TTFT side of block-level sharing — while
+                // the row still reports the FULL prompt as ingested, so
+                // decode seeds at the full shared L_K.
                 for row in &batch.rows {
-                    out.elapsed_us += self.sim.prefill_us(row.prompt.len());
+                    out.elapsed_us +=
+                        self.sim.prefill_cached_us(row.prompt.len(), row.cached_tokens);
                     out.prefilled.push((row.slot, row.prompt.len()));
                 }
                 out.prefill_calls = out.prefilled.len();
@@ -139,6 +145,7 @@ mod tests {
                     position,
                     kv_len: position,
                     prompt: Vec::new(),
+                    cached_tokens: 0,
                 })
                 .collect(),
             bucket: n,
@@ -207,8 +214,22 @@ mod tests {
         let batch = StepBatch {
             kind: StepKind::Prefill,
             rows: vec![
-                StepRow { slot: 0, input_token: 0, position: 0, kv_len: 0, prompt: vec![1; 100] },
-                StepRow { slot: 3, input_token: 0, position: 0, kv_len: 0, prompt: vec![2; 50] },
+                StepRow {
+                    slot: 0,
+                    input_token: 0,
+                    position: 0,
+                    kv_len: 0,
+                    prompt: vec![1; 100],
+                    cached_tokens: 0,
+                },
+                StepRow {
+                    slot: 3,
+                    input_token: 0,
+                    position: 0,
+                    kv_len: 0,
+                    prompt: vec![2; 50],
+                    cached_tokens: 0,
+                },
             ],
             bucket: 4,
         };
@@ -219,5 +240,36 @@ mod tests {
         assert_eq!(out.prefill_calls, 2);
         assert!(out.tokens.is_empty());
         assert!(out.elapsed_us > 100.0); // two bulk ingests' base cost
+    }
+
+    #[test]
+    fn cached_prefix_tokens_cut_prefill_time_not_progress() {
+        let run = |cached: usize| {
+            let mut b = SimBackend::h100();
+            let batch = StepBatch {
+                kind: StepKind::Prefill,
+                rows: vec![StepRow {
+                    slot: 0,
+                    input_token: 0,
+                    position: 0,
+                    kv_len: 0,
+                    prompt: vec![1; 200],
+                    cached_tokens: cached,
+                }],
+                bucket: 4,
+            };
+            let prepared = b.prepare(&batch, None).unwrap();
+            let mut out = StepOutcome::default();
+            b.execute(&batch, &prepared, &mut out).unwrap();
+            out
+        };
+        let cold = run(0);
+        let warm = run(192); // 12 shared blocks of 16
+        // The hit cuts ingestion latency (TTFT), but the row still
+        // reports the full prompt ingested: decode seeds at the full
+        // shared L_K.
+        assert!(warm.elapsed_us < cold.elapsed_us);
+        assert_eq!(warm.prefilled, cold.prefilled);
+        assert_eq!(warm.prefilled, vec![(0, 200)]);
     }
 }

@@ -22,6 +22,7 @@ pub struct RegressionCell {
 }
 
 impl RegressionCell {
+    /// Upstream-over-patched latency ratio (> 1 means patched is faster).
     pub fn speedup(&self) -> f64 {
         self.standard_us / self.patched_us
     }
@@ -38,6 +39,7 @@ pub struct RegressionSummary {
     pub max_speedup: f64,
 }
 
+/// Run the §5.3 sweep: every config cell, interleaved replays.
 pub fn run(sim: &Simulator, replays: usize, seed: u64) -> Vec<RegressionCell> {
     let mut rng = Rng::new(seed);
     let mut std_planner = Planner::standard();
@@ -53,6 +55,7 @@ pub fn run(sim: &Simulator, replays: usize, seed: u64) -> Vec<RegressionCell> {
         .collect()
 }
 
+/// Collapse per-cell results into the sweep-level verdict counts.
 pub fn summarize(cells: &[RegressionCell]) -> RegressionSummary {
     let mut s = RegressionSummary {
         total: cells.len(),

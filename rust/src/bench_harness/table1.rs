@@ -26,6 +26,7 @@ pub struct Table1Cell {
 }
 
 impl Table1Cell {
+    /// Upstream-over-patched latency ratio for this cell.
     pub fn speedup(&self) -> f64 {
         self.standard_us / self.patched_us
     }

@@ -19,10 +19,12 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Mean wall time per iteration, nanoseconds.
     pub fn mean_ns(&self) -> f64 {
         self.per_iter_ns.mean
     }
 
+    /// One human-readable result row (name, per-iter stats).
     pub fn report_line(&self) -> String {
         let s = &self.per_iter_ns;
         let (scale, unit) = if s.mean >= 1e6 {

@@ -56,11 +56,13 @@ impl Default for FleetConfig {
 }
 
 impl FleetConfig {
+    /// Select the split policy every replica's planner is built with.
     pub fn policy(mut self, name: impl Into<String>) -> FleetConfig {
         self.policy = name.into();
         self
     }
 
+    /// Set the default engine configuration (replica specs may override).
     pub fn engine(mut self, cfg: EngineConfig) -> FleetConfig {
         self.engine = cfg;
         self
@@ -132,22 +134,27 @@ impl Fleet {
         })
     }
 
+    /// The topology this fleet was built from.
     pub fn topology(&self) -> &ClusterTopology {
         &self.topology
     }
 
+    /// The fleet's replicas, in index order.
     pub fn replicas(&self) -> &[Replica] {
         &self.replicas
     }
 
+    /// The routing policy's registry name.
     pub fn router_name(&self) -> &'static str {
         self.router.name()
     }
 
+    /// The split policy every replica plans with.
     pub fn policy_name(&self) -> &str {
         &self.policy
     }
 
+    /// Every routing decision made so far, in arrival order.
     pub fn assignments(&self) -> &[Assignment] {
         &self.assignments
     }
@@ -176,11 +183,13 @@ impl Fleet {
         for r in &mut self.replicas {
             r.advance_to(arrival_us)?;
         }
-        let (prompt_len, max_new) = (g.request.prompt.len(), g.request.max_new_tokens);
         // Refill the reused snapshot scratch (ReplicaSnapshot is Copy).
+        // Snapshots are prefix-aware: each replica probes the request's
+        // prompt against its own block index, so the router sees where
+        // the prefix already lives.
         self.snaps.clear();
         for r in &self.replicas {
-            self.snaps.push(r.snapshot_for(prompt_len, max_new));
+            self.snaps.push(r.snapshot_for(&g.request));
         }
         let idx = match self.router.route(&g.request, g.session, &self.snaps) {
             Ok(idx) => idx,
@@ -222,6 +231,27 @@ impl Fleet {
     /// produces) across the fleet, drain every replica, and report.
     /// One-shot: build a fresh fleet per run (engine metrics and routing
     /// state accumulate for the fleet's lifetime).
+    ///
+    /// ```
+    /// use fa3_split::backend::AttnGeometry;
+    /// use fa3_split::cluster::{ClusterTopology, Fleet, FleetConfig, SessionAffinity, TpConfig};
+    /// use fa3_split::planner::DeviceProfile;
+    /// use fa3_split::workload::ChatWorkload;
+    ///
+    /// let topology = ClusterTopology::builder(
+    ///     AttnGeometry { h_q: 64, h_kv: 8, d: 128, max_seq: 1024 },
+    /// )
+    /// .tp(TpConfig::new(8)) // per-shard H_KV = 1: the paper's regime
+    /// .replicas(2, DeviceProfile::H100_SXM)
+    /// .build()
+    /// .unwrap();
+    /// let mut fleet =
+    ///     Fleet::new(topology, Box::new(SessionAffinity::new()), FleetConfig::default()).unwrap();
+    /// let stream = ChatWorkload { n_requests: 4, turns_per_session: 2, ..Default::default() };
+    /// let report = fleet.run(&stream.generate()).unwrap();
+    /// assert_eq!(report.finished.len(), 4);
+    /// assert_eq!(report.affinity_violations(), 0);
+    /// ```
     pub fn run(&mut self, stream: &[GeneratedRequest]) -> Result<FleetReport> {
         if self.ran {
             bail!("Fleet::run is one-shot (aggregates would mix runs); build a new Fleet");

@@ -52,41 +52,55 @@ impl Replica {
         Ok(Replica { index, device_name: spec.device.name, engine, assigned: 0, rejected: 0 })
     }
 
+    /// This replica's index in the fleet.
     pub fn index(&self) -> usize {
         self.index
     }
 
+    /// The device-profile preset name this replica simulates.
     pub fn device_name(&self) -> &'static str {
         self.device_name
     }
 
+    /// The replica's serving engine (read-only).
     pub fn engine(&self) -> &Engine {
         &self.engine
     }
 
+    /// The replica engine's rolling metrics.
     pub fn metrics(&self) -> &EngineMetrics {
         &self.engine.metrics
     }
 
+    /// Requests the router has placed here.
     pub fn assigned(&self) -> usize {
         self.assigned
     }
 
+    /// Requests refused at submission (never-fits shapes).
     pub fn rejected(&self) -> usize {
         self.rejected
     }
 
-    /// The router-facing load snapshot for a prospective request.
-    pub fn snapshot_for(&self, prompt_len: usize, max_new: usize) -> ReplicaSnapshot {
+    /// The router-facing load snapshot for a prospective request. Takes
+    /// the request itself (not just its lengths) because the snapshot is
+    /// prefix-aware: it probes the replica's block manager for the
+    /// prompt's resident prefix, so routers see request-relative KV
+    /// pressure and admissibility net of sharing.
+    pub fn snapshot_for(&self, req: &Request) -> ReplicaSnapshot {
         let blocks = self.engine.block_manager();
+        let probe = blocks.probe(&req.prompt);
+        let bs = blocks.config().block_size;
         ReplicaSnapshot {
             index: self.index,
             queue_depth: self.engine.waiting_len() + self.engine.pending_len(),
             running: self.engine.running_len(),
             free_blocks: blocks.free_blocks(),
             total_blocks: blocks.config().num_blocks,
-            can_admit_now: blocks.can_admit(prompt_len, max_new),
-            can_ever_admit: blocks.can_ever_admit(prompt_len, max_new),
+            can_admit_now: blocks.can_admit_prompt(&req.prompt, req.max_new_tokens),
+            can_ever_admit: blocks.can_ever_admit(req.prompt.len(), req.max_new_tokens),
+            shared_blocks: probe.matched_blocks,
+            demand_blocks: (req.prompt.len() + req.max_new_tokens).div_ceil(bs),
         }
     }
 
@@ -194,18 +208,27 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_reflects_queue_and_blocks() {
+    fn snapshot_reflects_queue_blocks_and_resident_prefixes() {
         let mut r = replica();
-        let s0 = r.snapshot_for(100, 50);
+        let probe_req = Request::new(99, vec![5; 100], 50);
+        let s0 = r.snapshot_for(&probe_req);
         assert_eq!(s0.queue_depth + s0.running, 0);
         assert!(s0.can_admit_now && s0.can_ever_admit);
+        assert_eq!(s0.shared_blocks, 0);
+        assert_eq!(s0.demand_blocks, 10); // 150 tokens / 16 per block
         r.submit_at(Request::new(1, vec![7; 64], 10), 0).unwrap();
-        let s1 = r.snapshot_for(100, 50);
+        let s1 = r.snapshot_for(&probe_req);
         assert_eq!(s1.queue_depth, 1, "pending open-loop arrival counts as queued");
+        // Once the replica serves a request, a same-prefix probe sees
+        // its resident blocks (request-relative KV pressure).
+        r.run_until_idle().unwrap();
+        let warm = r.snapshot_for(&Request::new(3, vec![7; 64], 10));
+        assert_eq!(warm.shared_blocks, 4, "64 tokens = 4 resident blocks");
+        assert!(warm.prefix_hit_ratio() > 0.0);
         // Oversized request: refused at submission and counted.
         let err = r.submit_at(Request::new(2, vec![7; 2000], 10), 0).unwrap_err();
         assert!(matches!(err, SubmitError::Unschedulable { .. }));
         assert_eq!(r.rejected(), 1);
-        assert!(!r.snapshot_for(2000, 10).can_ever_admit);
+        assert!(!r.snapshot_for(&Request::new(4, vec![7; 2000], 10)).can_ever_admit);
     }
 }

@@ -4,8 +4,14 @@
 //! it decides *placement*, the replica's bounded queues still decide
 //! *acceptance*. Routers see a per-replica [`ReplicaSnapshot`] (queue
 //! depth, running set, KV-block pressure from the replica's
-//! `BlockManager`) taken at the request's arrival instant on the fleet's
-//! virtual clock.
+//! `BlockManager`, and the request's *prefix-cache* footprint — how many
+//! of its prompt blocks are already resident there) taken at the
+//! request's arrival instant on the fleet's virtual clock. The prefix
+//! term makes KV pressure *request-relative*: a replica already holding
+//! a chat's system prompt is cheaper for that chat than an equally
+//! loaded stranger, which is how [`LeastLoaded`] (and
+//! [`SessionAffinity`]'s first-turn placement over it) keeps fan-outs of
+//! a shared prefix co-located.
 //!
 //! Invariants every router upholds (asserted by the fleet, tested in
 //! `rust/tests/cluster_fleet.rs`):
@@ -50,6 +56,15 @@ pub struct ReplicaSnapshot {
     /// budget on an empty manager). `false` means routing there is a
     /// guaranteed refusal.
     pub can_ever_admit: bool,
+    /// Full prompt blocks of *this request* already resident on the
+    /// replica (live or evictable — the prefix-cache probe). Routing a
+    /// request to the replica that holds its prefix turns its prompt
+    /// into a cache hit: admission charges only the remainder and
+    /// prefill skips the shared tokens.
+    pub shared_blocks: usize,
+    /// Worst-case block demand of this request (`prompt + max_new`,
+    /// rounded up to blocks) — the denominator of the prefix hit ratio.
+    pub demand_blocks: usize,
 }
 
 impl ReplicaSnapshot {
@@ -61,11 +76,24 @@ impl ReplicaSnapshot {
         1.0 - self.free_blocks as f64 / self.total_blocks as f64
     }
 
+    /// Fraction of this request's block demand already resident on the
+    /// replica, in `[0, 1]`.
+    pub fn prefix_hit_ratio(&self) -> f64 {
+        if self.demand_blocks == 0 {
+            return 0.0;
+        }
+        (self.shared_blocks.min(self.demand_blocks)) as f64 / self.demand_blocks as f64
+    }
+
     /// The [`LeastLoaded`] score: outstanding requests weighted with KV
-    /// pressure (pressure breaks ties between equally-queued replicas and
-    /// dominates once a replica's cache is nearly full).
+    /// pressure, minus the prefix-affinity bonus. Pressure breaks ties
+    /// between equally-queued replicas and dominates once a replica's
+    /// cache is nearly full; the prefix term (bounded by 1, like
+    /// pressure) steers a request toward the replica already holding its
+    /// prefix — effectively the request's KV demand *as seen by that
+    /// replica* — without ever outweighing a whole queued request.
     pub fn load_score(&self) -> f64 {
-        (self.queue_depth + self.running) as f64 + self.kv_pressure()
+        (self.queue_depth + self.running) as f64 + self.kv_pressure() - self.prefix_hit_ratio()
     }
 }
 
@@ -128,6 +156,7 @@ pub struct RoundRobin {
 }
 
 impl RoundRobin {
+    /// A fresh cycle starting at replica 0.
     pub fn new() -> RoundRobin {
         RoundRobin::default()
     }
@@ -166,6 +195,7 @@ impl Router for RoundRobin {
 pub struct LeastLoaded;
 
 impl LeastLoaded {
+    /// The stateless least-loaded policy.
     pub fn new() -> LeastLoaded {
         LeastLoaded
     }
@@ -300,6 +330,8 @@ mod tests {
             total_blocks: 100,
             can_admit_now: free > 0,
             can_ever_admit: true,
+            shared_blocks: 0,
+            demand_blocks: 6,
         }
     }
 
@@ -329,6 +361,25 @@ mod tests {
         // KV pressure separates equally-queued replicas.
         let snaps = vec![snap(0, 1, 1, 10), snap(1, 1, 1, 90)];
         assert_eq!(ll.route(&req(2), 2, &snaps).unwrap(), 1);
+    }
+
+    #[test]
+    fn least_loaded_steers_toward_resident_prefixes() {
+        let mut ll = LeastLoaded::new();
+        // Equal load: the replica holding the request's prefix wins even
+        // against a lower index.
+        let mut snaps = vec![snap(0, 1, 1, 80), snap(1, 1, 1, 80)];
+        snaps[1].shared_blocks = 6; // full prefix hit (demand 6)
+        assert_eq!(ll.route(&req(1), 1, &snaps).unwrap(), 1);
+        // Bounded bonus: a whole queued request still outweighs it.
+        snaps[0] = snap(0, 0, 0, 80);
+        assert_eq!(ll.route(&req(2), 2, &snaps).unwrap(), 0, "hit never beats a 2-deep gap");
+        // Session affinity inherits the steer for first-turn placement.
+        let mut sa = SessionAffinity::new();
+        let mut snaps = vec![snap(0, 1, 1, 80), snap(1, 1, 1, 80)];
+        snaps[1].shared_blocks = 6;
+        assert_eq!(sa.route(&req(3), 9, &snaps).unwrap(), 1);
+        assert_eq!(sa.pin_of(9), Some(1));
     }
 
     #[test]

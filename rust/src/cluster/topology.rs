@@ -43,6 +43,7 @@ pub struct TpConfig {
 }
 
 impl TpConfig {
+    /// A tensor-parallel group of `degree` devices.
     pub fn new(degree: usize) -> TpConfig {
         TpConfig { degree }
     }
@@ -130,10 +131,12 @@ pub struct ReplicaSpec {
 }
 
 impl ReplicaSpec {
+    /// A replica of `device` using the fleet's default engine config.
     pub fn new(device: DeviceProfile) -> ReplicaSpec {
         ReplicaSpec { device, engine: None }
     }
 
+    /// Override the engine configuration for this replica alone.
     pub fn engine(mut self, cfg: EngineConfig) -> ReplicaSpec {
         self.engine = Some(cfg);
         self
@@ -151,6 +154,7 @@ pub struct ClusterTopology {
 }
 
 impl ClusterTopology {
+    /// Start describing a cluster around the full (unsharded) model geometry.
     pub fn builder(model: AttnGeometry) -> ClusterTopologyBuilder {
         ClusterTopologyBuilder { model, tp: TpConfig::new(1), replicas: Vec::new() }
     }
@@ -160,6 +164,7 @@ impl ClusterTopology {
         self.model
     }
 
+    /// The tensor-parallel configuration.
     pub fn tp(&self) -> TpConfig {
         self.tp
     }
@@ -169,10 +174,12 @@ impl ClusterTopology {
         self.shard
     }
 
+    /// The replica specs, in index order.
     pub fn replicas(&self) -> &[ReplicaSpec] {
         &self.replicas
     }
 
+    /// Number of replicas (TP groups).
     pub fn num_replicas(&self) -> usize {
         self.replicas.len()
     }
@@ -199,6 +206,7 @@ pub struct ClusterTopologyBuilder {
 }
 
 impl ClusterTopologyBuilder {
+    /// Set the tensor-parallel degree (validated at `build`).
     pub fn tp(mut self, tp: TpConfig) -> ClusterTopologyBuilder {
         self.tp = tp;
         self
@@ -216,6 +224,7 @@ impl ClusterTopologyBuilder {
         self
     }
 
+    /// Validate and freeze the topology (head divisibility, PackGqa packing).
     pub fn build(self) -> Result<ClusterTopology, TopologyError> {
         if self.replicas.is_empty() {
             return Err(TopologyError::NoReplicas);

@@ -13,10 +13,15 @@
 //!   lower classes too (head-of-line blocking is the no-starvation
 //!   trade: a cheap Batch request must not leapfrog a starved
 //!   Interactive one).
-//! * **Worst-case KV reservation** — a request is admitted only when
-//!   `prompt + max_new_tokens` fits the block budget *now*
-//!   ([`BlockManager::can_admit`]); requests that could never fit
-//!   ([`BlockManager::can_ever_admit`]) are rejected at submission with
+//! * **Worst-case KV reservation, charged net of sharing** — a request
+//!   is admitted only when the blocks its prompt does *not* share fit
+//!   the budget *now* ([`BlockManager::can_admit_prompt`]): a prompt
+//!   whose prefix is already resident (live or recently freed) is
+//!   charged only for its private remainder, so a shared system prompt
+//!   multiplies admission *concurrency* instead of consuming it.
+//!   Requests that could never fit ([`BlockManager::can_ever_admit`] —
+//!   deliberately prefix-blind, since sharing never shrinks a single
+//!   request's resident footprint) are rejected at submission with
 //!   [`SubmitError::Unschedulable`] rather than wedging the queue head
 //!   forever.
 //! * **Cancellation while queued** — cancelled/deadline-expired waiters
@@ -104,6 +109,7 @@ pub struct AdmissionController {
 }
 
 impl AdmissionController {
+    /// An admission controller with empty queues.
     pub fn new(cfg: AdmissionConfig) -> AdmissionController {
         assert!(cfg.queue_capacity > 0, "queue capacity must be positive");
         AdmissionController {
@@ -113,31 +119,38 @@ impl AdmissionController {
         }
     }
 
+    /// The configuration this controller was built with.
     pub fn config(&self) -> &AdmissionConfig {
         &self.cfg
     }
 
+    /// Waiting requests across all classes.
     pub fn waiting_len(&self) -> usize {
         self.queues.iter().map(|q| q.len()).sum()
     }
 
+    /// Waiting requests in one priority class.
     pub fn waiting_in(&self, priority: Priority) -> usize {
         self.queues[priority.index()].len()
     }
 
     /// The shared never-fits check (used by `offer` and by the engine's
     /// open-loop `submit_at` path, so the stats stay the single source of
-    /// truth for rejections).
+    /// truth for rejections). Deliberately prefix-blind — sharing can
+    /// never shrink a single request's resident footprint, only the
+    /// *new* blocks it charges, so admitting on the strength of today's
+    /// sharing would let a donor eviction wedge the queue head forever
+    /// (see [`BlockManager::can_ever_admit`]).
     pub fn check_schedulable(
         &mut self,
-        prompt_len: usize,
+        prompt: &[i32],
         max_new: usize,
         blocks: &BlockManager,
     ) -> Result<(), SubmitError> {
-        if !blocks.can_ever_admit(prompt_len, max_new) {
+        if !blocks.can_ever_admit(prompt.len(), max_new) {
             self.stats.rejected_unschedulable += 1;
             return Err(SubmitError::Unschedulable {
-                required_tokens: prompt_len + max_new,
+                required_tokens: prompt.len() + max_new,
                 max_seq: blocks.config().max_seq,
             });
         }
@@ -153,7 +166,7 @@ impl AdmissionController {
         blocks: &BlockManager,
     ) -> Result<(), (TrackedRequest, SubmitError)> {
         if let Err(err) =
-            self.check_schedulable(tracked.req.prompt.len(), tracked.req.max_new_tokens, blocks)
+            self.check_schedulable(&tracked.req.prompt, tracked.req.max_new_tokens, blocks)
         {
             return Err((tracked, err));
         }
@@ -203,7 +216,11 @@ impl AdmissionController {
 
     /// Admit waiting requests into free batcher slots while the block
     /// manager accepts them. Strict priority across classes, FIFO within;
-    /// the first head that doesn't fit stops the whole pass.
+    /// the first head that doesn't fit stops the whole pass. Admission is
+    /// sharing-aware: the head is charged only for the blocks its prompt
+    /// does not share, and the prefix-cache grant (tokens whose KV
+    /// already exists) rides into the running set so prefill can skip
+    /// them.
     pub fn admit(
         &mut self,
         batcher: &mut Batcher,
@@ -215,17 +232,27 @@ impl AdmissionController {
             let q = &mut self.queues[priority.index()];
             while let Some(front) = q.front() {
                 let Some(slot) = batcher.free_slot() else { break 'classes };
-                if !blocks.can_admit(front.req.prompt.len(), front.req.max_new_tokens) {
+                // One probe, not two: `admit` applies the same
+                // sharing-aware capacity predicate `can_admit_prompt`
+                // does and refuses gracefully BEFORE any state change,
+                // so a refusal here is exactly head-of-line blocking
+                // (queue heads already passed the shape checks at
+                // `offer`, so capacity is the only way it can fail).
+                let grant = match blocks.admit(
+                    front.req.id,
+                    &front.req.prompt,
+                    front.req.max_new_tokens,
+                ) {
+                    Ok(grant) => grant,
                     // Head-of-line: a blocked head blocks lower classes too.
-                    break 'classes;
-                }
+                    Err(_full) => break 'classes,
+                };
                 let t = q.pop_front().unwrap();
-                blocks
-                    .admit(t.req.id, t.req.prompt.len(), t.req.max_new_tokens)
-                    .expect("can_admit checked");
                 admitted.push(t.req.id);
                 self.stats.admitted += 1;
-                batcher.install(RunningRequest::new(t.req, t.ticket, slot, now_us));
+                let mut running = RunningRequest::new(t.req, t.ticket, slot, now_us);
+                running.cached_prompt_tokens = grant.cached_tokens;
+                batcher.install(running);
             }
         }
         admitted
@@ -263,7 +290,10 @@ mod tests {
 
     fn tracked(id: u64, prompt_len: usize, max_new: usize, opts: SubmitOptions) -> TrackedRequest {
         let (_handle, ticket) = handle_pair(id, &opts);
-        TrackedRequest { req: Request::new(id, vec![1; prompt_len], max_new), ticket }
+        // Content unique per id: these tests exercise the prefix-blind
+        // accounting; sharing has its own suites.
+        let prompt = (0..prompt_len).map(|i| (id as i32 + 1) * 10_000 + i as i32).collect();
+        TrackedRequest { req: Request::new(id, prompt, max_new), ticket }
     }
 
     fn setup(max_batch: usize, num_blocks: usize) -> (AdmissionController, Batcher, BlockManager) {
@@ -271,7 +301,12 @@ mod tests {
         (
             AdmissionController::new(AdmissionConfig { queue_capacity: 4 }),
             Batcher::new(BatcherConfig { max_batch, batch_buckets: buckets }),
-            BlockManager::new(BlockManagerConfig { block_size: 16, num_blocks, max_seq: 1024 }),
+            BlockManager::new(BlockManagerConfig {
+                block_size: 16,
+                num_blocks,
+                max_seq: 1024,
+                ..Default::default()
+            }),
         )
     }
 

@@ -60,6 +60,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// A batcher with every slot free.
     pub fn new(cfg: BatcherConfig) -> Batcher {
         assert!(!cfg.batch_buckets.is_empty());
         assert!(cfg.batch_buckets.windows(2).all(|w| w[0] < w[1]), "buckets must ascend");
@@ -68,6 +69,7 @@ impl Batcher {
         Batcher { cfg, running }
     }
 
+    /// Slot capacity (the largest decode bucket).
     pub fn max_batch(&self) -> usize {
         self.cfg.max_batch
     }
@@ -79,10 +81,12 @@ impl Batcher {
         self.running.len()
     }
 
+    /// Occupied slots.
     pub fn running_len(&self) -> usize {
         self.running.iter().filter(|r| r.is_some()).count()
     }
 
+    /// Whether no request is running.
     pub fn is_empty(&self) -> bool {
         self.running_len() == 0
     }

@@ -70,6 +70,7 @@ pub struct EngineBuilder {
 }
 
 impl EngineBuilder {
+    /// Select the split planner (default: sequence-aware on H100).
     pub fn planner(mut self, planner: Planner) -> EngineBuilder {
         self.planner = Some(planner);
         self
@@ -88,11 +89,13 @@ impl EngineBuilder {
         self
     }
 
+    /// Set batcher, block-manager, and admission configuration.
     pub fn config(mut self, cfg: EngineConfig) -> EngineBuilder {
         self.cfg = cfg;
         self
     }
 
+    /// Build the engine, deriving geometry/splits from the backend's topology when present.
     pub fn build(self) -> Result<Engine> {
         let topology = self.backend.topology();
         let geometry = self
@@ -161,7 +164,25 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Start building an engine over an execution backend.
+    /// Start building an engine over an execution backend — the only
+    /// constructor.
+    ///
+    /// ```
+    /// use fa3_split::backend::{AttnGeometry, SimBackend};
+    /// use fa3_split::coordinator::{Engine, Request};
+    /// use fa3_split::planner::Planner;
+    ///
+    /// let mut engine = Engine::builder(Box::new(SimBackend::h100()))
+    ///     .planner(Planner::sequence_aware())
+    ///     .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+    ///     .available_splits(vec![1, 3])
+    ///     .build()
+    ///     .unwrap();
+    /// let handle = engine.submit(Request::new(1, vec![7; 64], 4)).unwrap();
+    /// let done = engine.run_until_idle().unwrap();
+    /// assert_eq!(done[0].tokens.len(), 4);
+    /// assert_eq!(handle.drain_tokens(), done[0].tokens);
+    /// ```
     pub fn builder(backend: Box<dyn ExecutionBackend>) -> EngineBuilder {
         EngineBuilder {
             backend,
@@ -172,18 +193,22 @@ impl Engine {
         }
     }
 
+    /// The split policy the scheduler plans with.
     pub fn policy_name(&self) -> &'static str {
         self.scheduler.policy_name()
     }
 
+    /// The backend's capability flags.
     pub fn backend_caps(&self) -> BackendCaps {
         self.caps
     }
 
+    /// The prefix-sharing KV block manager (read-only).
     pub fn block_manager(&self) -> &BlockManager {
         &self.blocks
     }
 
+    /// Admission counters (accepted, rejected, reaped).
     pub fn admission_stats(&self) -> AdmissionStats {
         self.admission.stats
     }
@@ -195,10 +220,12 @@ impl Engine {
         self.scheduler.cursor_stats()
     }
 
+    /// Requests waiting in admission.
     pub fn waiting_len(&self) -> usize {
         self.admission.waiting_len()
     }
 
+    /// Requests in the running set.
     pub fn running_len(&self) -> usize {
         self.batcher.running_len()
     }
@@ -284,6 +311,7 @@ impl Engine {
         self.submit_at_with(req, arrival_us, SubmitOptions::default())
     }
 
+    /// Open-loop arrival with a priority class and/or deadline.
     pub fn submit_at_with(
         &mut self,
         mut req: Request,
@@ -299,7 +327,7 @@ impl Engine {
         // capacity is checked when the arrival becomes due (the rejection
         // then arrives as a `StreamEvent::Rejected`).
         if let Err(err) =
-            self.admission.check_schedulable(req.prompt.len(), req.max_new_tokens, &self.blocks)
+            self.admission.check_schedulable(&req.prompt, req.max_new_tokens, &self.blocks)
         {
             self.sync_rejection_counters();
             return Err(err);
@@ -354,6 +382,7 @@ impl Engine {
         false
     }
 
+    /// Whether nothing is waiting, running, or pending arrival.
     pub fn is_idle(&self) -> bool {
         self.admission.waiting_len() == 0
             && self.batcher.is_empty()
@@ -490,6 +519,11 @@ impl Engine {
         self.batcher.plan_into(&mut plan);
         let result = self.step_with_plan(&plan);
         self.scratch.plan = plan;
+        // The block manager's prefix-cache counters are the single source
+        // of truth; the metrics mirror them by copy (a Copy struct — no
+        // allocation on the hot path), same discipline as the rejection
+        // counters.
+        self.metrics.prefix = self.blocks.prefix_stats();
         result
     }
 
@@ -554,6 +588,7 @@ impl Engine {
                 position: r.prefilled,
                 kv_len: r.kv_len(),
                 prompt: r.req.prompt.clone(),
+                cached_tokens: r.cached_prompt_tokens,
             });
         }
         Ok(())
@@ -575,6 +610,7 @@ impl Engine {
                 position: r.kv_len(),
                 kv_len: r.kv_len(),
                 prompt: Vec::new(),
+                cached_tokens: 0,
             });
         }
         Ok(())
@@ -619,6 +655,17 @@ impl Engine {
             } else {
                 None
             };
+            // A request whose admission armed a copy-on-write tail share
+            // writes into the shared block at its FIRST generated token:
+            // fork now (copy, never mutate — DESIGN.md §Prefix sharing).
+            // One branch per token; the fork itself runs once per request
+            // and only when a tail was actually shared, so the
+            // steady-state decode step stays allocation-free.
+            let fork = r.generated.len() == 1;
+            let id = r.req.id;
+            if fork {
+                self.blocks.cow_fork(id)?;
+            }
             if let Some(reason) = reason {
                 self.scratch.to_retire.push((slot, reason));
             }
@@ -755,6 +802,7 @@ impl EngineHandle {
         self.submit_with(req, SubmitOptions::default())
     }
 
+    /// Submit with a priority class and/or deadline.
     pub fn submit_with(&self, req: Request, opts: SubmitOptions) -> Result<RequestHandle> {
         let (handle, ticket) = handle_pair(req.id, &opts);
         self.tx
@@ -831,6 +879,34 @@ mod tests {
         // Standard never splits here; patched uses s=3 throughout.
         assert!(hist_std.get(3).copied().unwrap_or(0) == 0);
         assert!(hist_pat[3] > 100);
+    }
+
+    #[test]
+    fn shared_prefix_cuts_ttft_and_seeds_decode_at_full_lk() {
+        let mut e = sim_engine(Planner::sequence_aware());
+        let prompt = vec![7; 400]; // 25 full blocks, no tail
+        e.submit(Request::new(1, prompt.clone(), 20)).unwrap();
+        let first = e.run_until_idle().unwrap();
+        // Identical prompt: the second request revives the freed prefix.
+        e.submit(Request::new(2, prompt, 20)).unwrap();
+        let second = e.run_until_idle().unwrap();
+        assert_eq!(e.metrics.prefix.hits, 25, "{:?}", e.metrics.prefix);
+        assert_eq!(e.metrics.prefix.tokens_cached, 400);
+        // Prefill skipped the shared 400 tokens: strictly lower TTFT.
+        assert!(
+            second[0].timing.ttft_us() < first[0].timing.ttft_us(),
+            "warm {} vs cold {}",
+            second[0].timing.ttft_us(),
+            first[0].timing.ttft_us()
+        );
+        // Decode seeded at the FULL shared L_K (401 on the first step):
+        // the sequence-aware boundary override fires from token one, and
+        // the token stream is byte-identical to the cold run (sharing
+        // moves time, never content).
+        assert!(e.metrics.split_histogram.get(3).copied().unwrap_or(0) > 0);
+        assert_eq!(first[0].tokens, second[0].tokens);
+        assert_eq!(e.block_manager().num_seqs(), 0);
+        e.block_manager().check_invariants().unwrap();
     }
 
     #[test]

@@ -1,19 +1,64 @@
-//! Paged KV-cache block manager.
+//! Prefix-sharing paged KV-cache block manager.
 //!
-//! vLLM-style logical paging: cache capacity is tracked in fixed-size token
-//! blocks; a request is admitted only if its worst-case block demand fits.
-//! In this reproduction the *physical* cache is the dense per-bucket tensor
-//! the AOT artifacts are compiled with (static shapes — the CUDA-Graph
-//! analog), so the block manager governs admission, capacity accounting,
+//! vLLM-style logical paging, extended with content-addressed prefix
+//! reuse: cache capacity is tracked in fixed-size token blocks, and every
+//! **full prompt block** is keyed by a *rolling hash chain* — block `i`'s
+//! key is `H(key(i-1), tokens[i*bs .. (i+1)*bs])` — so a key identifies
+//! not just a block's content but the entire prefix leading to it. On
+//! [`BlockManager::admit`] the chain is matched block-by-block against
+//! live *and* recently-freed blocks; every match attaches by refcount
+//! increment instead of allocating, which is what turns a shared system
+//! prompt into one physical prefix serving a whole fan-out of requests.
+//!
+//! Production chat traffic is dominated by exactly that shape (system
+//! prompts, few-shot templates), and prefix reuse is what pushes decode
+//! into the long-`L_K`, low-head-count regime where the paper's
+//! sequence-aware split policy wins: a request that reuses a long prefix
+//! starts decoding at the *full* shared `L_K` from its first token.
+//!
+//! The sharing rules (DESIGN.md §Prefix sharing):
+//!
+//! * **Hash-chain rule** — only full blocks of the *prompt* are hashed;
+//!   a block's key covers the whole prefix through it, so matching is
+//!   consecutive from block 0 and a single diverging token ends the
+//!   match. Content is verified on every hash hit (collisions can alias
+//!   keys, never blocks).
+//! * **Copy-on-write invariant** — a partial prompt tail may share a
+//!   donor's full block when the tail equals the donor block's first
+//!   tokens (same chain position). The first decode write lands inside
+//!   that block, so admission reserves a private *spare* up front and
+//!   [`BlockManager::cow_fork`] moves the sequence onto it at the first
+//!   generated token, copying the tail. A shared block is **never
+//!   mutated**: forks copy, refcounts gate, and the donor's content is
+//!   byte-identical before and after (property-tested in
+//!   `rust/tests/prefix_cache.rs`).
+//! * **Eviction policy** — releasing a sequence decrements refcounts;
+//!   blocks that drop to zero *and* carry a hash move to an LRU
+//!   evictable list (deepest chain first, so prefix roots outlive their
+//!   leaves) instead of the plain free pool. They still count as free
+//!   capacity — a fresh allocation recycles the LRU victim and drops its
+//!   hash — but until recycled they match new prompts and revive with a
+//!   refcount, which is how "recently-freed" prefixes keep their hits.
+//!
+//! The *physical* cache remains the dense per-bucket tensor the AOT
+//! artifacts are compiled with (static shapes — the CUDA-Graph analog),
+//! so the block manager governs admission, capacity accounting, sharing,
 //! and slot assignment rather than physical page indirection; the
-//! invariants (no over-allocation, no leaked blocks, no double-free) are
-//! exactly vLLM's and are property-tested in rust/tests/.
+//! invariants (no over-allocation, no leaked or double-freed block, no
+//! refcount skew, COW immutability) are vLLM's and are property-tested
+//! in `rust/tests/`. Setting
+//! [`BlockManagerConfig::enable_prefix_sharing`] to `false` restores the
+//! pre-sharing allocator exactly (no hashing, no content retention) —
+//! the byte-identity baseline the `prefix_cache` bench gates against.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
 use super::request::RequestId;
+
+/// Index of a block in the manager's slab.
+pub type BlockId = usize;
 
 /// Block-manager configuration.
 #[derive(Debug, Clone)]
@@ -24,62 +69,319 @@ pub struct BlockManagerConfig {
     pub num_blocks: usize,
     /// Hard per-sequence token cap (the artifacts' max_seq).
     pub max_seq: usize,
+    /// Content-hash full prompt blocks and share them across requests
+    /// (refcounted, copy-on-write). `false` restores the pre-sharing
+    /// allocator byte-for-byte: every admission allocates fresh blocks
+    /// and no content is retained.
+    pub enable_prefix_sharing: bool,
 }
 
 impl Default for BlockManagerConfig {
     fn default() -> Self {
         // 4096 blocks x 16 tokens = 64k tokens of KV budget.
-        BlockManagerConfig { block_size: 16, num_blocks: 4096, max_seq: 1024 }
+        BlockManagerConfig {
+            block_size: 16,
+            num_blocks: 4096,
+            max_seq: 1024,
+            enable_prefix_sharing: true,
+        }
     }
+}
+
+/// Prefix-cache counters ([`BlockManager::prefix_stats`]; mirrored into
+/// `EngineMetrics` so serving surfaces export hit-rate and blocks saved).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// Full prompt blocks probed across all admissions.
+    pub lookups: usize,
+    /// Of those, blocks served by an existing block (refcount reuse).
+    pub hits: usize,
+    /// Partial-tail matches that armed a copy-on-write share.
+    pub tail_hits: usize,
+    /// Prompt tokens whose prefill was skipped because their KV already
+    /// existed (full-block hits × block_size + matched tail lengths).
+    pub tokens_cached: usize,
+    /// Hits served from the evictable list (a freed prefix revived).
+    pub revived: usize,
+    /// Hashed blocks recycled (hash dropped) to satisfy fresh demand.
+    pub evictions: usize,
+    /// Copy-on-write forks performed at first divergent write.
+    pub cow_forks: usize,
+}
+
+impl PrefixCacheStats {
+    /// Fraction of probed full prompt blocks served by sharing.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups as f64
+    }
+
+    /// Block allocations avoided by sharing. Exactly the full-block hit
+    /// count — a tail share still reserves its fork spare, so it saves
+    /// prefill tokens, not blocks. Derived (not stored) so the two
+    /// counters cannot skew.
+    pub fn blocks_saved(&self) -> usize {
+        self.hits
+    }
+}
+
+/// What [`BlockManager::probe`] learned about a prompt without mutating
+/// anything — the read-only half of admission's sharing-aware checks.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixProbe {
+    /// Leading full prompt blocks an admission would share.
+    pub matched_blocks: usize,
+    /// Blocks the admission would *attach* that currently sit on the
+    /// evictable list — matched full blocks **and** the COW tail donor.
+    /// Attaching revives them, which removes them from spare capacity
+    /// without satisfying any of the request's new-block demand, so
+    /// admission subtracts this from the available pool.
+    pub matched_evictable: usize,
+    /// Whether the partial prompt tail would arm a copy-on-write share.
+    pub tail_match: bool,
+    /// Prompt tokens whose prefill the match would skip.
+    pub cached_tokens: usize,
+}
+
+/// What an admission granted ([`BlockManager::admit`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmitGrant {
+    /// Prompt tokens whose KV already exists — prefill skips them.
+    pub cached_tokens: usize,
+    /// Full prompt blocks attached by refcount instead of allocation.
+    pub shared_blocks: usize,
+    /// Blocks newly allocated (including a COW spare, when armed).
+    pub new_blocks: usize,
+    /// Whether a copy-on-write tail share is pending its first write.
+    pub cow_pending: bool,
+}
+
+/// Chain-hash seed (arbitrary odd constant).
+const HASH_SEED: u64 = 0x51f1_5eed_c0de_b10c;
+
+/// One splitmix64-style mixing step.
+fn mix(h: u64, v: u64) -> u64 {
+    let mut z = h ^ v.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Extend the rolling chain over one block's tokens. The chain key of
+/// block `i` therefore commits to every token in blocks `0..=i`.
+fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
+    let mut h = mix(prev, tokens.len() as u64);
+    for &t in tokens {
+        h = mix(h, t as u64);
+    }
+    h
+}
+
+/// One physical block's bookkeeping.
+#[derive(Debug, Clone, Default)]
+struct Block {
+    /// Sequences holding a reference. 0 = free or evictable.
+    refcount: usize,
+    /// Chain key when this is a hashed full prompt block.
+    hash: Option<u64>,
+    /// Chain key *before* this block (tail-candidate lookup).
+    prev_hash: u64,
+    /// Retained content: full prompt tokens for hashed blocks, the
+    /// copied tail for COW forks. Empty for plain generation blocks.
+    tokens: Vec<i32>,
+}
+
+/// A pending copy-on-write tail share.
+#[derive(Debug, Clone, Copy)]
+struct CowPair {
+    /// The donor's full block the tail currently reads from.
+    shared: BlockId,
+    /// The private block reserved for the fork.
+    spare: BlockId,
+    /// How many of the donor block's tokens this sequence's prompt uses.
+    tail_len: usize,
 }
 
 /// Per-sequence allocation state.
 #[derive(Debug, Clone)]
 struct SeqAlloc {
-    blocks: usize,
+    /// Worst-case token reservation (prompt + max_new).
     tokens: usize,
+    /// Prompt tokens served from shared KV.
+    cached_tokens: usize,
+    /// Every block this sequence holds a reference on (shared prefix,
+    /// COW pair, then private blocks).
+    attached: Vec<BlockId>,
+    /// Pending tail fork, if the admission armed one.
+    cow: Option<CowPair>,
 }
 
 /// The block manager.
 #[derive(Debug)]
 pub struct BlockManager {
     cfg: BlockManagerConfig,
-    free_blocks: usize,
+    blocks: Vec<Block>,
+    /// Plain free pool (unhashed, content-free). LIFO.
+    free: Vec<BlockId>,
+    /// Refcount-zero blocks still carrying a hash, oldest first —
+    /// matchable until recycled, recycled front-first. A plain Vec with
+    /// O(n) front-removal and revival scans: both run only on the
+    /// admission/release path (never the per-token step loop), and n is
+    /// bounded by the block budget. Swap for a VecDeque + per-block
+    /// position index if admission ever shows up in a profile.
+    evictable: Vec<BlockId>,
+    /// Chain key → hashed block (first writer wins; content is verified
+    /// on every hit, so a colliding key can never alias content).
+    by_hash: HashMap<u64, BlockId>,
+    /// Chain key *before* a block → that block (partial-tail candidate
+    /// lookup; first writer wins).
+    by_prev: HashMap<u64, BlockId>,
     seqs: HashMap<RequestId, SeqAlloc>,
+    stats: PrefixCacheStats,
 }
 
 impl BlockManager {
+    /// Build a manager with every block free.
     pub fn new(cfg: BlockManagerConfig) -> BlockManager {
         assert!(cfg.block_size > 0 && cfg.num_blocks > 0);
-        BlockManager { free_blocks: cfg.num_blocks, cfg, seqs: HashMap::new() }
+        BlockManager {
+            blocks: vec![Block::default(); cfg.num_blocks],
+            // Reversed so allocation hands out 0, 1, 2, … (stable,
+            // deterministic ids — fleet runs replay exactly).
+            free: (0..cfg.num_blocks).rev().collect(),
+            evictable: Vec::new(),
+            by_hash: HashMap::new(),
+            by_prev: HashMap::new(),
+            seqs: HashMap::new(),
+            stats: PrefixCacheStats::default(),
+            cfg,
+        }
     }
 
+    /// The configuration this manager was built with.
     pub fn config(&self) -> &BlockManagerConfig {
         &self.cfg
     }
 
+    /// Blocks available to fresh allocations: the plain free pool plus
+    /// the evictable list (recycling an evictable block only costs its
+    /// future match potential).
     pub fn free_blocks(&self) -> usize {
-        self.free_blocks
+        self.free.len() + self.evictable.len()
     }
 
+    /// Blocks held by live sequences (refcount ≥ 1, counted once each
+    /// however many sequences share them).
     pub fn used_blocks(&self) -> usize {
-        self.cfg.num_blocks - self.free_blocks
+        self.cfg.num_blocks - self.free_blocks()
     }
 
+    /// Blocks on the evictable list (freed but still matchable).
+    pub fn evictable_blocks(&self) -> usize {
+        self.evictable.len()
+    }
+
+    /// Live sequences.
     pub fn num_seqs(&self) -> usize {
         self.seqs.len()
+    }
+
+    /// Prefix-cache counters since construction.
+    pub fn prefix_stats(&self) -> PrefixCacheStats {
+        self.stats
     }
 
     fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.cfg.block_size)
     }
 
-    /// Can a request with `prompt_len` + `max_new` tokens be admitted now?
-    /// (Worst-case reservation: vLLM's conservative admission avoids
-    /// mid-generation eviction, which this engine doesn't implement.)
+    // ------------------------------------------------------------------
+    // Probing (read-only)
+    // ------------------------------------------------------------------
+
+    /// Walk the prompt's hash chain against the current block index
+    /// without mutating anything: how many leading full blocks (and
+    /// whether the partial tail) an admission right now would share.
+    pub fn probe(&self, prompt: &[i32]) -> PrefixProbe {
+        let mut p = PrefixProbe::default();
+        if !self.cfg.enable_prefix_sharing || prompt.is_empty() {
+            return p;
+        }
+        let bs = self.cfg.block_size;
+        let n_full = prompt.len() / bs;
+        let mut h = HASH_SEED;
+        for i in 0..n_full {
+            let chunk = &prompt[i * bs..(i + 1) * bs];
+            let key = chain_hash(h, chunk);
+            let Some(&bid) = self.by_hash.get(&key) else { break };
+            if self.blocks[bid].tokens != chunk {
+                break; // 64-bit collision: never alias content.
+            }
+            p.matched_blocks += 1;
+            if self.blocks[bid].refcount == 0 {
+                p.matched_evictable += 1;
+            }
+            h = key;
+        }
+        let tail_len = prompt.len() % bs;
+        if p.matched_blocks == n_full && tail_len > 0 {
+            if let Some(&cand) = self.by_prev.get(&h) {
+                let b = &self.blocks[cand];
+                if b.hash.is_some() && b.tokens.len() == bs
+                    && b.tokens[..tail_len] == prompt[n_full * bs..]
+                {
+                    p.tail_match = true;
+                    // An evictable donor leaves the spare pool when the
+                    // admission attaches it — charge it like an
+                    // evictable full-block match, or `can_admit_prompt`
+                    // could approve an admission whose spare allocation
+                    // then finds both pools empty.
+                    if b.refcount == 0 {
+                        p.matched_evictable += 1;
+                    }
+                }
+            }
+        }
+        p.cached_tokens = p.matched_blocks * bs + if p.tail_match { tail_len } else { 0 };
+        p
+    }
+
+    /// Fresh blocks an admission of this prompt would allocate. A tail
+    /// match saves no blocks (its COW spare is reserved up front), only
+    /// prefill tokens.
+    fn new_blocks_needed(&self, probe: &PrefixProbe, total_tokens: usize) -> usize {
+        self.blocks_for(total_tokens) - probe.matched_blocks
+    }
+
+    // ------------------------------------------------------------------
+    // Admission checks
+    // ------------------------------------------------------------------
+
+    /// Prefix-blind worst-case admission check: can a request with
+    /// `prompt_len + max_new` tokens be admitted now assuming *nothing*
+    /// is shared? (The conservative bound surfaces that want a
+    /// content-free answer — e.g. generic capacity gauges — still use.)
     pub fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
         let total = prompt_len + max_new;
-        total <= self.cfg.max_seq && self.blocks_for(total) <= self.free_blocks
+        total <= self.cfg.max_seq && self.blocks_for(total) <= self.free_blocks()
+    }
+
+    /// Sharing-aware admission check: charges only the blocks the prompt
+    /// would *not* share. This is the predicate admission pairs with
+    /// [`BlockManager::admit`] — both sides run the same probe, so a
+    /// passing check cannot be followed by a failing admit.
+    pub fn can_admit_prompt(&self, prompt: &[i32], max_new: usize) -> bool {
+        let total = prompt.len() + max_new;
+        if total > self.cfg.max_seq {
+            return false;
+        }
+        let probe = self.probe(prompt);
+        // Matched evictable blocks are revived, not allocated, but they
+        // leave the spare pool: both sides of the ledger move.
+        let available = self.free_blocks() - probe.matched_evictable;
+        self.new_blocks_needed(&probe, total) <= available
     }
 
     /// Could this request be admitted on an *empty* manager? False means
@@ -87,36 +389,160 @@ impl BlockManager {
     /// whole block budget) — the admission controller rejects such
     /// requests at submission instead of letting them wedge a queue head
     /// forever.
+    ///
+    /// Deliberately **prefix-blind**: sharing reduces a request's *new*
+    /// allocations, but the shared blocks themselves still occupy the
+    /// budget, so a request's best-case resident footprint is
+    /// `blocks_for(prompt + max_new)` with or without sharing — reuse
+    /// multiplies *concurrency*, never single-request capacity. A
+    /// sharing-aware "ever" bound would admit requests whose donors can
+    /// later be evicted, deadlocking the FIFO head (DESIGN.md §Prefix
+    /// sharing).
     pub fn can_ever_admit(&self, prompt_len: usize, max_new: usize) -> bool {
         let total = prompt_len + max_new;
         total <= self.cfg.max_seq && self.blocks_for(total) <= self.cfg.num_blocks
     }
 
-    /// Reserve blocks for a new sequence.
-    pub fn admit(&mut self, id: RequestId, prompt_len: usize, max_new: usize) -> Result<()> {
+    // ------------------------------------------------------------------
+    // Admission / release / fork
+    // ------------------------------------------------------------------
+
+    /// Reserve blocks for a new sequence, sharing every full prompt
+    /// block the hash chain matches (and arming a copy-on-write tail
+    /// share when the partial tail matches a donor block). Worst-case
+    /// reservation: the whole `prompt + max_new` footprint — including
+    /// the COW fork spare — is allocated or attached up front, vLLM's
+    /// conservative admission that avoids mid-generation eviction.
+    pub fn admit(&mut self, id: RequestId, prompt: &[i32], max_new: usize) -> Result<AdmitGrant> {
         if self.seqs.contains_key(&id) {
             bail!("sequence {id} already admitted");
         }
-        let total = prompt_len + max_new;
+        let total = prompt.len() + max_new;
         if total > self.cfg.max_seq {
             bail!("sequence {id}: {total} tokens exceeds max_seq {}", self.cfg.max_seq);
         }
-        let need = self.blocks_for(total);
-        if need > self.free_blocks {
-            bail!("sequence {id}: needs {need} blocks, only {} free", self.free_blocks);
+        let probe = self.probe(prompt);
+        let need = self.new_blocks_needed(&probe, total);
+        if need > self.free_blocks() - probe.matched_evictable {
+            bail!(
+                "sequence {id}: needs {need} new blocks, only {} free ({} shared)",
+                self.free_blocks() - probe.matched_evictable,
+                probe.matched_blocks
+            );
         }
-        self.free_blocks -= need;
-        self.seqs.insert(id, SeqAlloc { blocks: need, tokens: total });
-        Ok(())
+
+        let bs = self.cfg.block_size;
+        let n_full = prompt.len() / bs;
+        let tail_len = prompt.len() % bs;
+        let sharing = self.cfg.enable_prefix_sharing;
+        if sharing {
+            self.stats.lookups += n_full;
+            self.stats.hits += probe.matched_blocks;
+            self.stats.tokens_cached += probe.cached_tokens;
+        }
+
+        let mut attached = Vec::with_capacity(need + probe.matched_blocks + 1);
+        let mut chain = HASH_SEED;
+
+        // 1. Attach the matched shared prefix (reviving evictable hits).
+        for i in 0..probe.matched_blocks {
+            let chunk = &prompt[i * bs..(i + 1) * bs];
+            chain = chain_hash(chain, chunk);
+            let bid = *self.by_hash.get(&chain).expect("probe matched this key");
+            self.attach(bid);
+            attached.push(bid);
+        }
+
+        // 2. Arm the copy-on-write tail share, spare reserved up front.
+        let mut cow = None;
+        if probe.tail_match {
+            let donor = *self.by_prev.get(&chain).expect("probe matched this tail");
+            self.attach(donor);
+            attached.push(donor);
+            let spare = self.alloc_block()?;
+            attached.push(spare);
+            cow = Some(CowPair { shared: donor, spare, tail_len });
+            self.stats.tail_hits += 1;
+        }
+
+        // 3. Allocate the rest: unmatched full prompt blocks are hashed
+        //    and indexed immediately (content is known), so later
+        //    arrivals can share a *live* sequence's prefix; the partial
+        //    tail (when not COW-shared) and generation blocks stay
+        //    anonymous.
+        let already = attached.len() - if cow.is_some() { 1 } else { 0 }; // chain positions covered
+        for pos in already..self.blocks_for(total) {
+            let bid = self.alloc_block()?;
+            attached.push(bid);
+            if sharing && pos < n_full {
+                let chunk = &prompt[pos * bs..(pos + 1) * bs];
+                let prev = chain;
+                chain = chain_hash(chain, chunk);
+                let b = &mut self.blocks[bid];
+                b.hash = Some(chain);
+                b.prev_hash = prev;
+                b.tokens.clear();
+                b.tokens.extend_from_slice(chunk);
+                self.by_hash.entry(chain).or_insert(bid);
+                self.by_prev.entry(prev).or_insert(bid);
+            }
+        }
+
+        let grant = AdmitGrant {
+            cached_tokens: probe.cached_tokens,
+            shared_blocks: probe.matched_blocks,
+            new_blocks: need,
+            cow_pending: cow.is_some(),
+        };
+        self.seqs.insert(
+            id,
+            SeqAlloc { tokens: total, cached_tokens: probe.cached_tokens, attached, cow },
+        );
+        Ok(grant)
     }
 
-    /// Release a finished sequence's blocks.
+    /// Perform the pending copy-on-write fork for a sequence, if one was
+    /// armed at admission: the tail moves onto its reserved spare (tail
+    /// tokens copied), the donor's reference is dropped, and the donor
+    /// block is **not** touched. The engine calls this at the sequence's
+    /// first generated token — the first write that would land inside
+    /// the shared block. Returns whether a fork happened.
+    pub fn cow_fork(&mut self, id: RequestId) -> Result<bool> {
+        let Some(alloc) = self.seqs.get_mut(&id) else {
+            bail!("cow_fork for unknown sequence {id}");
+        };
+        let Some(CowPair { shared, spare, tail_len }) = alloc.cow.take() else {
+            return Ok(false);
+        };
+        // Drop the donor reference from the attachment list (one entry).
+        let pos = alloc
+            .attached
+            .iter()
+            .position(|&b| b == shared)
+            .expect("armed COW donor is attached");
+        alloc.attached.remove(pos);
+        // Copy, never mutate: the donor keeps its content and hash.
+        let tail: Vec<i32> = self.blocks[shared].tokens[..tail_len].to_vec();
+        self.blocks[spare].tokens = tail;
+        self.deref_block(shared);
+        self.stats.cow_forks += 1;
+        Ok(true)
+    }
+
+    /// Release a finished sequence's references. Private blocks return
+    /// to the free pool; hashed prompt blocks whose refcount drops to
+    /// zero join the evictable list instead (deepest chain first, so
+    /// prefix roots are the last recycled) and keep matching until a
+    /// fresh allocation recycles them.
     pub fn release(&mut self, id: RequestId) -> Result<()> {
         let Some(alloc) = self.seqs.remove(&id) else {
             bail!("release of unknown sequence {id}");
         };
-        self.free_blocks += alloc.blocks;
-        debug_assert!(self.free_blocks <= self.cfg.num_blocks);
+        // Reverse order: leaves hit the evictable list before their
+        // roots, so LRU recycling consumes chains leaf-first.
+        for &bid in alloc.attached.iter().rev() {
+            self.deref_block(bid);
+        }
         Ok(())
     }
 
@@ -125,21 +551,153 @@ impl BlockManager {
         self.seqs.get(&id).map(|a| a.tokens)
     }
 
-    /// Invariant check used by the property tests: free + Σ allocated ==
-    /// total.
+    /// Prompt tokens a sequence's admission served from shared KV.
+    pub fn cached_tokens(&self, id: RequestId) -> Option<usize> {
+        self.seqs.get(&id).map(|a| a.cached_tokens)
+    }
+
+    // ------------------------------------------------------------------
+    // Internals
+    // ------------------------------------------------------------------
+
+    /// Take a reference on a block, reviving it from the evictable list
+    /// when it was freed-but-still-hashed.
+    fn attach(&mut self, bid: BlockId) {
+        if self.blocks[bid].refcount == 0 {
+            let pos = self
+                .evictable
+                .iter()
+                .position(|&b| b == bid)
+                .expect("refcount-0 hashed block must be evictable");
+            self.evictable.remove(pos);
+            self.stats.revived += 1;
+        }
+        self.blocks[bid].refcount += 1;
+    }
+
+    /// Drop a reference; at zero the block parks on the evictable list
+    /// (hashed) or returns to the free pool (anonymous).
+    fn deref_block(&mut self, bid: BlockId) {
+        let b = &mut self.blocks[bid];
+        debug_assert!(b.refcount > 0, "deref of unreferenced block {bid}");
+        b.refcount -= 1;
+        if b.refcount == 0 {
+            if b.hash.is_some() {
+                self.evictable.push(bid);
+            } else {
+                b.tokens.clear();
+                self.free.push(bid);
+            }
+        }
+    }
+
+    /// Hand out a fresh block: plain free pool first, then recycle the
+    /// LRU evictable block (dropping its hash and index entries).
+    fn alloc_block(&mut self) -> Result<BlockId> {
+        if let Some(bid) = self.free.pop() {
+            self.blocks[bid].refcount = 1;
+            return Ok(bid);
+        }
+        if !self.evictable.is_empty() {
+            let bid = self.evictable.remove(0);
+            self.unhash(bid);
+            self.stats.evictions += 1;
+            self.blocks[bid].refcount = 1;
+            return Ok(bid);
+        }
+        bail!("no free blocks");
+    }
+
+    /// Strip a block's identity: hash, index entries, retained content.
+    fn unhash(&mut self, bid: BlockId) {
+        let (hash, prev) = {
+            let b = &mut self.blocks[bid];
+            (b.hash.take(), b.prev_hash)
+        };
+        if let Some(h) = hash {
+            if self.by_hash.get(&h) == Some(&bid) {
+                self.by_hash.remove(&h);
+            }
+        }
+        if self.by_prev.get(&prev) == Some(&bid) {
+            self.by_prev.remove(&prev);
+            // Re-point the entry at a hashed sibling holding the same
+            // chain position, if one exists (diverging continuations of
+            // one prefix share `prev`): first-writer-wins would
+            // otherwise orphan that position's tail matches for as long
+            // as the sibling stays resident. O(blocks), but only on the
+            // eviction path, which is already O(blocks).
+            let sibling = (0..self.blocks.len()).find(|&i| {
+                i != bid && self.blocks[i].hash.is_some() && self.blocks[i].prev_hash == prev
+            });
+            if let Some(sib) = sibling {
+                self.by_prev.insert(prev, sib);
+            }
+        }
+        let b = &mut self.blocks[bid];
+        b.prev_hash = 0;
+        b.tokens.clear();
+    }
+
+    /// Invariant check used by the property tests:
+    ///
+    /// * every block is in exactly one state — free (unhashed, rc 0),
+    ///   evictable (hashed, rc 0), or active (rc ≥ 1);
+    /// * free + evictable + active == total;
+    /// * Σ refcounts == Σ per-sequence attachments (no leak, no double
+    ///   count);
+    /// * every sequence holds exactly its worst-case block footprint
+    ///   (plus its COW spare while the fork is pending);
+    /// * the hash index points only at blocks carrying that hash.
     pub fn check_invariants(&self) -> Result<()> {
-        let allocated: usize = self.seqs.values().map(|a| a.blocks).sum();
-        if allocated + self.free_blocks != self.cfg.num_blocks {
+        let mut membership = vec![0usize; self.cfg.num_blocks]; // bitset: 1=free, 2=evictable
+        for &b in &self.free {
+            membership[b] += 1;
+            if self.blocks[b].refcount != 0 || self.blocks[b].hash.is_some() {
+                bail!("free block {b} has refcount/hash");
+            }
+        }
+        for &b in &self.evictable {
+            membership[b] += 2;
+            if self.blocks[b].refcount != 0 || self.blocks[b].hash.is_none() {
+                bail!("evictable block {b} must be refcount-0 and hashed");
+            }
+        }
+        let mut active = 0usize;
+        for (i, b) in self.blocks.iter().enumerate() {
+            match (b.refcount, membership[i]) {
+                (0, 1) | (0, 2) => {}
+                (r, 0) if r >= 1 => active += 1,
+                (r, m) => bail!("block {i}: refcount {r} with pool membership {m}"),
+            }
+        }
+        if active + self.free.len() + self.evictable.len() != self.cfg.num_blocks {
             bail!(
-                "block accounting broken: {} allocated + {} free != {}",
-                allocated,
-                self.free_blocks,
+                "block accounting broken: {} active + {} free + {} evictable != {}",
+                active,
+                self.free.len(),
+                self.evictable.len(),
                 self.cfg.num_blocks
             );
         }
+        let refs: usize = self.blocks.iter().map(|b| b.refcount).sum();
+        let attachments: usize = self.seqs.values().map(|a| a.attached.len()).sum();
+        if refs != attachments {
+            bail!("refcount skew: {refs} references vs {attachments} attachments");
+        }
         for (id, a) in &self.seqs {
-            if self.blocks_for(a.tokens) != a.blocks {
-                bail!("sequence {id}: {} tokens but {} blocks", a.tokens, a.blocks);
+            let want = self.blocks_for(a.tokens) + usize::from(a.cow.is_some());
+            if a.attached.len() != want {
+                bail!(
+                    "sequence {id}: {} tokens want {want} attachments, holds {}",
+                    a.tokens,
+                    a.attached.len()
+                );
+            }
+        }
+        for (h, &b) in &self.by_hash {
+            if self.blocks[b].hash != Some(*h) {
+                bail!("hash index entry {h:#x} points at block {b} without that hash");
             }
         }
         Ok(())
@@ -151,15 +709,29 @@ mod tests {
     use super::*;
 
     fn mgr(blocks: usize) -> BlockManager {
-        BlockManager::new(BlockManagerConfig { block_size: 16, num_blocks: blocks, max_seq: 1024 })
+        BlockManager::new(BlockManagerConfig {
+            block_size: 16,
+            num_blocks: blocks,
+            max_seq: 1024,
+            enable_prefix_sharing: true,
+        })
+    }
+
+    /// A prompt whose content is unique to `tag` (no accidental sharing).
+    fn prompt(tag: i32, len: usize) -> Vec<i32> {
+        (0..len).map(|i| tag * 10_000 + i as i32).collect()
     }
 
     #[test]
     fn admit_reserves_worst_case() {
         let mut m = mgr(10);
         // 100 prompt + 28 new = 128 tokens = 8 blocks.
+        let p = prompt(1, 100);
         assert!(m.can_admit(100, 28));
-        m.admit(1, 100, 28).unwrap();
+        assert!(m.can_admit_prompt(&p, 28));
+        let g = m.admit(1, &p, 28).unwrap();
+        assert_eq!(g.new_blocks, 8);
+        assert_eq!(g.shared_blocks, 0);
         assert_eq!(m.free_blocks(), 2);
         assert_eq!(m.reserved_tokens(1), Some(128));
         m.check_invariants().unwrap();
@@ -168,10 +740,10 @@ mod tests {
     #[test]
     fn admission_denied_when_full() {
         let mut m = mgr(4);
-        m.admit(1, 48, 16).unwrap(); // 64 tokens = 4 blocks
+        m.admit(1, &prompt(1, 48), 16).unwrap(); // 64 tokens = 4 blocks
         assert_eq!(m.free_blocks(), 0);
         assert!(!m.can_admit(1, 0));
-        assert!(m.admit(2, 1, 0).is_err());
+        assert!(m.admit(2, &prompt(2, 1), 0).is_err());
         m.release(1).unwrap();
         assert!(m.can_admit(1, 0));
         m.check_invariants().unwrap();
@@ -181,14 +753,14 @@ mod tests {
     fn max_seq_enforced() {
         let mut m = mgr(1000);
         assert!(!m.can_admit(1000, 100));
-        assert!(m.admit(1, 1000, 100).is_err());
+        assert!(m.admit(1, &prompt(1, 1000), 100).is_err());
         assert!(m.can_admit(1000, 24));
     }
 
     #[test]
     fn can_ever_admit_ignores_current_occupancy() {
         let mut m = mgr(4); // 64-token budget
-        m.admit(1, 48, 16).unwrap(); // full
+        m.admit(1, &prompt(1, 48), 16).unwrap(); // full
         assert!(!m.can_admit(16, 0));
         assert!(m.can_ever_admit(16, 0)); // would fit an empty manager
         assert!(!m.can_ever_admit(1000, 100)); // over max_seq: never
@@ -198,8 +770,8 @@ mod tests {
     #[test]
     fn double_admit_and_unknown_release_rejected() {
         let mut m = mgr(10);
-        m.admit(1, 16, 0).unwrap();
-        assert!(m.admit(1, 16, 0).is_err());
+        m.admit(1, &prompt(1, 16), 0).unwrap();
+        assert!(m.admit(1, &prompt(1, 16), 0).is_err());
         assert!(m.release(99).is_err());
         m.release(1).unwrap();
         assert!(m.release(1).is_err());
@@ -209,10 +781,197 @@ mod tests {
     #[test]
     fn block_rounding() {
         let mut m = mgr(10);
-        m.admit(1, 1, 0).unwrap(); // 1 token still takes a whole block
+        m.admit(1, &prompt(1, 1), 0).unwrap(); // 1 token still takes a whole block
         assert_eq!(m.free_blocks(), 9);
-        m.admit(2, 16, 1).unwrap(); // 17 tokens = 2 blocks
+        m.admit(2, &prompt(2, 16), 1).unwrap(); // 17 tokens = 2 blocks
         assert_eq!(m.free_blocks(), 7);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn identical_prompts_share_full_blocks() {
+        let mut m = mgr(32);
+        let p = prompt(7, 64); // 4 full blocks
+        let g1 = m.admit(1, &p, 16).unwrap(); // 80 tokens = 5 blocks
+        assert_eq!((g1.shared_blocks, g1.new_blocks, g1.cached_tokens), (0, 5, 0));
+        let g2 = m.admit(2, &p, 16).unwrap();
+        assert_eq!(g2.shared_blocks, 4);
+        assert_eq!(g2.new_blocks, 1); // only the generation block
+        assert_eq!(g2.cached_tokens, 64);
+        assert!(!g2.cow_pending); // prompt ends on a block boundary
+        assert_eq!(m.used_blocks(), 6); // 5 + 1, not 10
+        assert_eq!(m.prefix_stats().hits, 4);
+        assert_eq!(m.prefix_stats().blocks_saved(), 4);
+        m.check_invariants().unwrap();
+        // Release order doesn't matter: refcounts gate the free path.
+        m.release(1).unwrap();
+        m.check_invariants().unwrap();
+        assert_eq!(m.num_seqs(), 1);
+        m.release(2).unwrap();
+        m.check_invariants().unwrap();
+        assert_eq!(m.free_blocks(), 32);
+    }
+
+    #[test]
+    fn diverging_prompts_share_only_the_common_prefix() {
+        let mut m = mgr(32);
+        let mut a = prompt(3, 48); // 3 full blocks
+        m.admit(1, &a, 0).unwrap();
+        a[40] += 1; // diverge inside block 2
+        let g = m.admit(2, &a, 0).unwrap();
+        assert_eq!(g.shared_blocks, 2);
+        assert_eq!(g.new_blocks, 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn released_prefixes_stay_matchable_until_recycled() {
+        let mut m = mgr(8);
+        let p = prompt(9, 64); // 4 blocks
+        m.admit(1, &p, 0).unwrap();
+        m.release(1).unwrap();
+        assert_eq!(m.free_blocks(), 8, "evictable blocks still count as free");
+        assert_eq!(m.evictable_blocks(), 4);
+        // The freed prefix revives for a matching prompt.
+        let g = m.admit(2, &p, 16).unwrap();
+        assert_eq!(g.shared_blocks, 4);
+        assert_eq!(g.cached_tokens, 64);
+        assert_eq!(m.prefix_stats().revived, 4);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_eviction_recycles_freed_hashes_leaf_first() {
+        let mut m = mgr(4);
+        m.admit(1, &prompt(4, 64), 0).unwrap(); // all 4 blocks, hashed
+        m.release(1).unwrap();
+        assert_eq!(m.evictable_blocks(), 4);
+        // A disjoint admission must recycle evictable blocks.
+        let g = m.admit(2, &prompt(5, 32), 0).unwrap();
+        assert_eq!(g.shared_blocks, 0);
+        assert_eq!(m.prefix_stats().evictions, 2);
+        // The recycled blocks were the chain's deepest (leaf-first), so
+        // the surviving prefix root still matches a shorter prompt.
+        let g = m.admit(3, &prompt(4, 32), 0).unwrap();
+        assert_eq!(g.shared_blocks, 2, "prefix roots outlive leaves");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_tail_share_forks_without_mutating_the_donor() {
+        let mut m = mgr(16);
+        let donor = prompt(6, 32); // 2 full blocks
+        m.admit(1, &donor, 0).unwrap();
+        // 20-token prompt: block 0 matches in full, the 4-token tail
+        // matches the head of the donor's block 1.
+        let short = donor[..20].to_vec();
+        let g = m.admit(2, &short, 8).unwrap();
+        assert_eq!(g.shared_blocks, 1);
+        assert!(g.cow_pending);
+        assert_eq!(g.cached_tokens, 20, "full block + matched tail");
+        assert_eq!(g.new_blocks, 1, "the COW spare");
+        m.check_invariants().unwrap();
+        // First generated token: fork.
+        assert!(m.cow_fork(2).unwrap());
+        assert!(!m.cow_fork(2).unwrap(), "fork is one-shot");
+        assert_eq!(m.prefix_stats().cow_forks, 1);
+        m.check_invariants().unwrap();
+        // Donor's block content is untouched and still fully matchable.
+        m.release(2).unwrap();
+        let again = m.admit(3, &donor, 0).unwrap();
+        assert_eq!(again.shared_blocks, 2, "donor chain intact after fork");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evictable_tail_donor_is_charged_against_spare_capacity() {
+        // Regression: an evictable COW tail donor leaves the spare pool
+        // when attached, exactly like an evictable full-block match. If
+        // the probe failed to charge it, `can_admit_prompt` would
+        // approve an admission whose spare allocation then finds both
+        // pools empty — a panic in the admission controller and a
+        // leaked refcount.
+        let mut m = BlockManager::new(BlockManagerConfig {
+            block_size: 16,
+            num_blocks: 1,
+            max_seq: 1024,
+            ..Default::default()
+        });
+        let donor = prompt(1, 16); // exactly one full, hashed block
+        m.admit(1, &donor, 0).unwrap();
+        m.release(1).unwrap(); // the only block parks evictable
+        assert_eq!(m.free_blocks(), 1);
+        // 8-token tail of the donor + generation: tail_match fires, but
+        // the donor itself is the only "free" block — attaching it
+        // leaves nothing for the COW spare.
+        let short = donor[..8].to_vec();
+        let probe = m.probe(&short);
+        assert!(probe.tail_match);
+        assert_eq!(probe.matched_evictable, 1, "the evictable donor is charged");
+        assert!(!m.can_admit_prompt(&short, 8));
+        assert!(m.admit(2, &short, 8).is_err(), "graceful refusal, not a mid-admit panic");
+        m.check_invariants().unwrap();
+        assert_eq!(m.free_blocks(), 1, "the refused admission left no dangling refcount");
+        // With one more block of headroom the same share admits fine.
+        let mut m2 = BlockManager::new(BlockManagerConfig {
+            block_size: 16,
+            num_blocks: 2,
+            max_seq: 1024,
+            ..Default::default()
+        });
+        m2.admit(1, &donor, 0).unwrap();
+        m2.release(1).unwrap();
+        let g = m2.admit(2, &short, 8).unwrap();
+        assert!(g.cow_pending);
+        assert_eq!(g.new_blocks, 1, "the spare");
+        m2.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharing_disabled_restores_the_prefix_blind_allocator() {
+        let mut m = BlockManager::new(BlockManagerConfig {
+            enable_prefix_sharing: false,
+            num_blocks: 32,
+            ..Default::default()
+        });
+        let p = prompt(8, 64);
+        let g1 = m.admit(1, &p, 16).unwrap();
+        let g2 = m.admit(2, &p, 16).unwrap();
+        assert_eq!(g1, g2);
+        assert_eq!(g2.shared_blocks, 0);
+        assert_eq!(g2.cached_tokens, 0);
+        assert_eq!(m.used_blocks(), 10, "no sharing: 5 + 5");
+        assert_eq!(m.prefix_stats(), PrefixCacheStats::default());
+        m.release(1).unwrap();
+        assert_eq!(m.evictable_blocks(), 0, "nothing is retained");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn probe_is_read_only_and_matches_admit() {
+        let mut m = mgr(32);
+        let p = prompt(2, 80); // 5 full blocks
+        m.admit(1, &p, 0).unwrap();
+        let before = format!("{m:?}");
+        let probe = m.probe(&p);
+        assert_eq!(format!("{m:?}"), before, "probe must not mutate");
+        assert_eq!(probe.matched_blocks, 5);
+        assert_eq!(probe.cached_tokens, 80);
+        let g = m.admit(2, &p, 0).unwrap();
+        assert_eq!(g.shared_blocks, probe.matched_blocks);
+        assert_eq!(g.cached_tokens, probe.cached_tokens);
+    }
+
+    #[test]
+    fn sharing_aware_admission_admits_what_blind_check_refuses() {
+        let mut m = mgr(6);
+        let p = prompt(1, 64); // 4 blocks
+        m.admit(1, &p, 16).unwrap(); // 5 blocks: 1 free left
+        assert!(!m.can_admit(64, 16), "prefix-blind: 5 blocks never fit 1");
+        assert!(m.can_admit_prompt(&p, 16), "sharing: only the gen block is new");
+        let g = m.admit(2, &p, 16).unwrap();
+        assert_eq!(g.new_blocks, 1);
+        assert_eq!(m.free_blocks(), 0);
         m.check_invariants().unwrap();
     }
 }

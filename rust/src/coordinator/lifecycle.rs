@@ -49,14 +49,17 @@ pub enum Priority {
 pub const PRIORITY_CLASSES: usize = 3;
 
 impl Priority {
+    /// Queue-array index of this class.
     pub fn index(self) -> usize {
         self as usize
     }
 
+    /// Every class, highest priority first.
     pub fn all() -> [Priority; PRIORITY_CLASSES] {
         [Priority::Interactive, Priority::Standard, Priority::Batch]
     }
 
+    /// CLI-facing class name.
     pub fn name(self) -> &'static str {
         match self {
             Priority::Interactive => "interactive",
@@ -78,6 +81,7 @@ pub enum CancelKind {
 }
 
 impl CancelKind {
+    /// The terminal [`FinishReason`] this cancellation cause maps to.
     pub fn finish_reason(self) -> FinishReason {
         match self {
             CancelKind::User => FinishReason::Cancelled,
@@ -107,6 +111,7 @@ impl CancelCell {
         self.state.compare_exchange(0, code, Ordering::AcqRel, Ordering::Acquire).is_ok()
     }
 
+    /// The first cancellation cause, if any.
     pub fn get(&self) -> Option<CancelKind> {
         match self.state.load(Ordering::Acquire) {
             1 => Some(CancelKind::User),
@@ -116,6 +121,7 @@ impl CancelCell {
         }
     }
 
+    /// Whether any cause has cancelled this request.
     pub fn is_cancelled(&self) -> bool {
         self.get().is_some()
     }
@@ -145,6 +151,7 @@ pub enum WaitOutcome {
 }
 
 impl WaitOutcome {
+    /// The finished request, if the outcome was completion.
     pub fn finished(self) -> Option<FinishedRequest> {
         match self {
             WaitOutcome::Finished(f) => Some(f),
@@ -161,6 +168,7 @@ pub struct RequestHandle {
 }
 
 impl RequestHandle {
+    /// The submitted request's id.
     pub fn id(&self) -> RequestId {
         self.id
     }
@@ -172,6 +180,7 @@ impl RequestHandle {
         self.cancel.cancel(CancelKind::User);
     }
 
+    /// Whether this request has been cancelled (any cause).
     pub fn is_cancelled(&self) -> bool {
         self.cancel.is_cancelled()
     }
@@ -299,11 +308,13 @@ pub struct SubmitOptions {
 }
 
 impl SubmitOptions {
+    /// Select the priority class.
     pub fn priority(mut self, priority: Priority) -> SubmitOptions {
         self.priority = priority;
         self
     }
 
+    /// Set an absolute engine-clock deadline, µs.
     pub fn deadline_us(mut self, deadline_us: u64) -> SubmitOptions {
         self.deadline_us = Some(deadline_us);
         self
@@ -318,10 +329,12 @@ pub struct TrackedRequest {
 }
 
 impl TrackedRequest {
+    /// The tracked request's id.
     pub fn id(&self) -> RequestId {
         self.req.id
     }
 
+    /// The tracked request's priority class.
     pub fn priority(&self) -> Priority {
         self.ticket.priority
     }

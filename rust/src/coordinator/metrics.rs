@@ -2,6 +2,8 @@
 
 use crate::util::stats::Summary;
 
+use super::kv_cache::PrefixCacheStats;
+
 /// Timing of one completed request (all µs, relative to engine start).
 #[derive(Debug, Clone, Default)]
 pub struct RequestTiming {
@@ -33,6 +35,7 @@ impl RequestTiming {
             / (self.n_generated - 1) as f64
     }
 
+    /// End-to-end latency from arrival to completion, µs.
     pub fn e2e_us(&self) -> u64 {
         self.finished_us.saturating_sub(self.arrival_us)
     }
@@ -55,6 +58,11 @@ pub struct EngineMetrics {
     pub rejected_backpressure: usize,
     /// Submissions refused because they can never fit the KV budget.
     pub rejected_unschedulable: usize,
+    /// Prefix-cache counters, mirrored by copy from the block manager
+    /// every step (hit-rate, blocks saved, tokens whose prefill was
+    /// skipped, COW forks — the single source of truth stays
+    /// `BlockManager::prefix_stats`).
+    pub prefix: PrefixCacheStats,
     step_latencies_us: Vec<f64>,
     tpots_us: Vec<f64>,
     ttfts_us: Vec<f64>,
@@ -85,6 +93,7 @@ impl EngineMetrics {
         self.split_histogram.reserve(want.saturating_sub(self.split_histogram.len()));
     }
 
+    /// Record one engine step (`decoded` = tokens emitted).
     pub fn record_step(&mut self, latency_us: f64, decoded: usize) {
         self.steps += 1;
         if decoded > 0 {
@@ -94,6 +103,7 @@ impl EngineMetrics {
         self.step_latencies_us.push(latency_us);
     }
 
+    /// Record the scheduler's split choice for one decode step.
     pub fn record_split(&mut self, num_splits: usize) {
         if self.split_histogram.len() <= num_splits {
             self.split_histogram.resize(num_splits + 1, 0);
@@ -111,6 +121,7 @@ impl EngineMetrics {
         (self.decode_steps > 0).then(|| self.decode_occupancy_sum / self.decode_steps as f64)
     }
 
+    /// Record a naturally-finished request's timing.
     pub fn record_finished(&mut self, timing: &RequestTiming) {
         self.requests_finished += 1;
         if timing.n_generated >= 2 {
@@ -119,6 +130,7 @@ impl EngineMetrics {
         self.ttfts_us.push(timing.ttft_us() as f64);
     }
 
+    /// Record a request cut short (cancel, shutdown, or deadline).
     pub fn record_cancelled(&mut self, deadline_miss: bool) {
         self.requests_cancelled += 1;
         if deadline_miss {
@@ -126,14 +138,17 @@ impl EngineMetrics {
         }
     }
 
+    /// Step-latency distribution, if any step ran.
     pub fn step_latency(&self) -> Option<Summary> {
         (!self.step_latencies_us.is_empty()).then(|| Summary::of(&self.step_latencies_us))
     }
 
+    /// Time-per-output-token distribution over finished requests.
     pub fn tpot(&self) -> Option<Summary> {
         (!self.tpots_us.is_empty()).then(|| Summary::of(&self.tpots_us))
     }
 
+    /// Time-to-first-token distribution over finished requests.
     pub fn ttft(&self) -> Option<Summary> {
         (!self.ttfts_us.is_empty()).then(|| Summary::of(&self.ttfts_us))
     }
@@ -146,6 +161,7 @@ impl EngineMetrics {
         self.tokens_generated as f64 / (self.wall_us as f64 / 1e6)
     }
 
+    /// Multi-line human-readable report (the CLI's output).
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
@@ -174,6 +190,20 @@ impl EngineMetrics {
             out.push_str(&format!("TTFT µs: mean={:.1} p50={:.1} p99={:.1}\n", s.mean, s.p50, s.p99));
         }
         out.push_str(&format!("throughput: {:.1} tok/s\n", self.throughput_tok_s()));
+        if self.prefix.lookups > 0 {
+            out.push_str(&format!(
+                "prefix cache: hit-rate {:.1}% ({}/{} blocks), saved {} blocks / {} tokens, \
+                 cow forks {}, revived {}, evictions {}\n",
+                self.prefix.hit_rate() * 100.0,
+                self.prefix.hits,
+                self.prefix.lookups,
+                self.prefix.blocks_saved(),
+                self.prefix.tokens_cached,
+                self.prefix.cow_forks,
+                self.prefix.revived,
+                self.prefix.evictions
+            ));
+        }
         if let Some(occ) = self.mean_occupancy() {
             out.push_str(&format!("mean decode SM occupancy: {:.1}%\n", occ * 100.0));
         }

@@ -13,7 +13,9 @@
 //! * [`lifecycle`]— streaming [`RequestHandle`]s, per-request cancellation,
 //!                  deadlines, priority classes,
 //! * [`admission`]— bounded priority queues with explicit [`Backpressure`],
-//! * [`kv_cache`] — paged KV block manager (budget + capacity),
+//! * [`kv_cache`] — prefix-sharing paged KV block manager (budget +
+//!                  capacity + content-hashed block reuse with
+//!                  copy-on-write),
 //! * [`batcher`]  — the running set (slots, bucket packing),
 //! * [`scheduler`]— per-step split decision (planner metadata path),
 //! * [`engine`]   — the step loop over the execution backend,
@@ -31,7 +33,9 @@ pub mod scheduler;
 pub use admission::{AdmissionConfig, AdmissionController, AdmissionStats, Backpressure, SubmitError};
 pub use batcher::{Batcher, BatcherConfig, StepPlan};
 pub use engine::{Engine, EngineBuilder, EngineConfig, EngineHandle};
-pub use kv_cache::{BlockManager, BlockManagerConfig};
+pub use kv_cache::{
+    AdmitGrant, BlockId, BlockManager, BlockManagerConfig, PrefixCacheStats, PrefixProbe,
+};
 pub use lifecycle::{CancelKind, Priority, RequestHandle, StreamEvent, SubmitOptions, WaitOutcome};
 pub use metrics::{EngineMetrics, RequestTiming};
 pub use request::{FinishReason, FinishedRequest, Request, RequestId};

@@ -17,6 +17,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// A request with `arrival_us` unset (the engine stamps it at submit).
     pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
         Request { id, prompt, max_new_tokens, arrival_us: 0 }
     }
@@ -64,6 +65,11 @@ pub(crate) struct RunningRequest {
     pub generated: Vec<i32>,
     /// Tokens of the prompt already ingested into the KV cache.
     pub prefilled: usize,
+    /// Leading prompt tokens whose KV already existed at admission (the
+    /// prefix-cache grant): prefill charges only the remainder, and the
+    /// engine performs the pending copy-on-write fork at this request's
+    /// first generated token.
+    pub cached_prompt_tokens: usize,
     /// Row in the backend's KV cache store.
     pub slot: usize,
     /// µs timestamp of first generated token (TTFT), if any.
@@ -73,6 +79,7 @@ pub(crate) struct RunningRequest {
 }
 
 impl RunningRequest {
+    /// Install a request into `slot`, pre-sizing its token buffer.
     pub fn new(req: Request, ticket: Ticket, slot: usize, now_us: u64) -> RunningRequest {
         // Reserve the full generation up front (admission already
         // reserved the worst-case KV budget, so max_new_tokens is bounded
@@ -84,6 +91,7 @@ impl RunningRequest {
             ticket,
             generated,
             prefilled: 0,
+            cached_prompt_tokens: 0,
             slot,
             first_token_us: None,
             scheduled_us: now_us,
@@ -95,10 +103,12 @@ impl RunningRequest {
         self.prefilled + self.generated.len()
     }
 
+    /// Whether the whole prompt has been ingested.
     pub fn prompt_done(&self) -> bool {
         self.prefilled >= self.req.prompt.len()
     }
 
+    /// Whether the request has also generated all its tokens.
     pub fn done(&self) -> bool {
         self.prompt_done() && self.generated.len() >= self.req.max_new_tokens
     }

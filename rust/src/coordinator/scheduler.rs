@@ -59,6 +59,7 @@ pub struct DecodeScheduler {
 }
 
 impl DecodeScheduler {
+    /// A scheduler over `planner` for a fixed geometry and artifact split grid.
     pub fn new(
         planner: Planner,
         geometry: AttnGeometry,
@@ -77,10 +78,12 @@ impl DecodeScheduler {
         }
     }
 
+    /// The planner's policy name.
     pub fn policy_name(&self) -> &'static str {
         self.planner.name()
     }
 
+    /// The underlying planner (read-only; cache/cursor stats).
     pub fn planner(&self) -> &Planner {
         &self.planner
     }
@@ -171,10 +174,12 @@ impl DecodeScheduler {
             .unwrap_or(1)
     }
 
+    /// The attention geometry this scheduler plans.
     pub fn geometry(&self) -> AttnGeometry {
         self.geometry
     }
 
+    /// Split variants the artifact set was compiled with (ascending).
     pub fn available_splits(&self) -> &[usize] {
         &self.available_splits
     }

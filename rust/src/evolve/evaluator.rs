@@ -36,6 +36,7 @@ pub struct EvalResult {
 }
 
 impl EvalResult {
+    /// Whether the genome passed the regression gate.
     pub fn is_valid(&self) -> bool {
         self.rejected.is_none()
     }
@@ -57,6 +58,7 @@ pub struct Evaluator {
 }
 
 impl Evaluator {
+    /// An evaluator pricing genomes on `sim`.
     pub fn new(sim: Simulator) -> Evaluator {
         Evaluator {
             sim,
@@ -119,6 +121,7 @@ impl Evaluator {
         }
     }
 
+    /// The simulator fitness is priced on.
     pub fn simulator(&self) -> &Simulator {
         &self.sim
     }

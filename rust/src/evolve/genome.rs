@@ -34,6 +34,7 @@ pub struct Rule {
 }
 
 impl Rule {
+    /// Whether this rule's guards accept `shape`.
     pub fn matches(&self, shape: &DecodeShape) -> bool {
         shape.batch <= self.batch_max
             && (self.lk_min..=self.lk_max).contains(&shape.l_k)

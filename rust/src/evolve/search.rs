@@ -54,6 +54,7 @@ pub struct SearchReport {
 }
 
 impl SearchReport {
+    /// Best-genome speedup over the upstream heuristic.
     pub fn speedup(&self) -> f64 {
         self.upstream_tpot_us / self.best_tpot_us
     }
@@ -67,10 +68,12 @@ pub struct Search {
 }
 
 impl Search {
+    /// A search with population seeded from the upstream heuristic.
     pub fn new(cfg: SearchConfig, sim: Simulator) -> Search {
         Search { cfg, evaluator: Evaluator::new(sim), mutator: Mutator::default() }
     }
 
+    /// The fitness evaluator (read-only).
     pub fn evaluator(&self) -> &Evaluator {
         &self.evaluator
     }

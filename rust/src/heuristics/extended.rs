@@ -107,14 +107,17 @@ impl ExtendedPolicy {
         ExtendedPolicy { table }
     }
 
+    /// Number of learned table entries.
     pub fn len(&self) -> usize {
         self.table.len()
     }
 
+    /// Whether the table is empty (falls through to upstream everywhere).
     pub fn is_empty(&self) -> bool {
         self.table.is_empty()
     }
 
+    /// The learned split count for a `(nblk, tiles)` cell, if any.
     pub fn lookup(&self, nblk: usize, tiles: usize) -> Option<usize> {
         self.table.get(&(nblk, tiles)).copied()
     }

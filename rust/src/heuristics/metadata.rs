@@ -104,6 +104,7 @@ impl SchedulerMetadata {
         self
     }
 
+    /// This metadata re-routed onto another dispatch path.
     pub fn with_path(mut self, path: DispatchPath) -> SchedulerMetadata {
         self.path = path;
         self

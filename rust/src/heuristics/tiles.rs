@@ -36,6 +36,7 @@ impl DecodeShape {
         DecodeShape::decode(batch, l_k, 8, 1, 128)
     }
 
+    /// GQA group size `H_Q / H_KV`.
     pub fn group_size(&self) -> usize {
         assert!(
             self.h_q % self.h_kv == 0,
@@ -103,6 +104,7 @@ pub struct SplitGeometry {
 }
 
 impl SplitGeometry {
+    /// Derive the split geometry for a sequence length and split count.
     pub fn of(l_k: usize, num_splits: usize) -> SplitGeometry {
         assert!(l_k >= 1, "l_k must be >= 1");
         assert!(num_splits >= 1, "num_splits must be >= 1");

@@ -103,6 +103,24 @@
 //!
 //! Python never runs at request time: `make artifacts` lowers the model
 //! and kernels once, and everything here is self-contained after that.
+//!
+//! ## Prefix sharing
+//!
+//! The KV cache behind admission is a prefix-sharing paged block manager
+//! ([`coordinator::BlockManager`]): full prompt blocks are keyed by a
+//! rolling hash chain and shared across requests by refcount, partial
+//! tails fork copy-on-write at the first generated token, and freed
+//! prefixes stay matchable on an LRU evictable list until recycled.
+//! Shared system prompts therefore cost one physical prefix per fleet of
+//! chats — admission charges only the private remainder, prefill skips
+//! the cached tokens (TTFT), and decode seeds at the full shared `L_K`,
+//! exactly the long-context low-head-count regime the sequence-aware
+//! split policy targets. See `docs/` for the full reader-facing tour and
+//! DESIGN.md §Prefix sharing for the invariants.
+
+// The docs ARE a deliverable of this crate (the reproduction is read as
+// much as it is run): surface any public item that loses its docs.
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod bench_harness;

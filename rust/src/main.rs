@@ -133,6 +133,8 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             .opt("policy", "sequence-aware", format!("split policy: {}", registry.help_line()))
             .opt("device", "h100-sxm", format!("device profile: {}", DeviceProfile::help_line()))
             .opt("sm-margin", "0", "SMs reserved for the combine scheduler")
+            .opt("prefix", "0", "shared system-prompt length, tokens, additive to the sampled prompt (0 = off)")
+            .opt("prefix-fanout", "4", "requests per distinct system prompt (1 = disjoint)")
             .opt("seed", "7", "workload seed"),
         argv,
     );
@@ -167,6 +169,8 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         n_requests: args.usize("requests"),
         output_mean: args.usize("tokens"),
         output_cap: args.usize("tokens"),
+        shared_prefix_len: args.usize("prefix"),
+        prefix_fanout: args.usize("prefix-fanout").max(1),
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
@@ -223,6 +227,8 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
         .opt("turns", "1", "requests per chat session (the session-affinity unit)")
         .opt("gap-us", "0", "mean Poisson inter-arrival gap, µs (0 = closed loop)")
         .opt("max-batch", "2", "per-replica max running batch")
+        .opt("prefix", "0", "shared system-prompt length, tokens, additive to the sampled prompt (0 = off)")
+        .opt("prefix-fanout", "4", "requests per distinct system prompt (1 = disjoint)")
         .opt("seed", "7", "workload seed"),
         argv,
     );
@@ -268,10 +274,26 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
         output_cap: args.usize("tokens"),
         mean_gap_us: args.u64("gap-us"),
         turns_per_session: args.usize("turns").max(1),
+        shared_prefix_len: args.usize("prefix"),
+        prefix_fanout: args.usize("prefix-fanout").max(1),
         ..Default::default()
     };
     let report = fleet.run(&workload.generate())?;
     print!("{}", report.render());
+    if args.usize("prefix") > 0 {
+        for r in fleet.replicas() {
+            let p = r.metrics().prefix;
+            if p.lookups > 0 {
+                println!(
+                    "replica {} prefix cache: hit-rate {:.1}%, saved {} blocks / {} tokens",
+                    r.index(),
+                    p.hit_rate() * 100.0,
+                    p.blocks_saved(),
+                    p.tokens_cached
+                );
+            }
+        }
+    }
     Ok(())
 }
 

@@ -59,6 +59,7 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Hits over total lookups (0 when never queried).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -125,6 +126,7 @@ pub(crate) struct PlanCache {
 }
 
 impl PlanCache {
+    /// An empty cache holding at most `capacity` decisions.
     pub fn new(capacity: usize) -> PlanCache {
         assert!(capacity > 0, "use Option<PlanCache>::None to disable caching");
         PlanCache {
@@ -138,6 +140,7 @@ impl PlanCache {
     }
 
     #[inline]
+    /// Look up a decision (promotes the entry to most-recent).
     pub fn get(&mut self, key: &PlanKey) -> Option<CachedDecision> {
         if let Some((k, d)) = &self.last {
             if k == key {
@@ -161,6 +164,7 @@ impl PlanCache {
         }
     }
 
+    /// Insert a decision, evicting the least-recent entry when full.
     pub fn insert(&mut self, key: PlanKey, decision: CachedDecision) {
         if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
             // The one-entry fast path serves hits without touching the
@@ -189,6 +193,7 @@ impl PlanCache {
         self.last = Some((key, decision));
     }
 
+    /// Hit/miss/eviction counters since construction.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits,

@@ -62,6 +62,7 @@ pub struct CursorStats {
 }
 
 impl CursorStats {
+    /// Fold another cursor's counters into this one.
     pub fn merge(&mut self, other: CursorStats) {
         self.hits += other.hits;
         self.refills += other.refills;
@@ -93,6 +94,7 @@ pub struct PlanCursor {
 }
 
 impl PlanCursor {
+    /// An unpinned cursor (first `plan` refills it).
     pub fn new() -> PlanCursor {
         PlanCursor {
             key: CursorKey::default(),
@@ -153,6 +155,7 @@ impl PlanCursor {
         self.decision.as_ref().map(|_| (self.valid_from_lk, self.valid_until_lk))
     }
 
+    /// Hit/refill counters since construction.
     pub fn stats(&self) -> CursorStats {
         CursorStats { hits: self.hits, refills: self.refills }
     }

@@ -69,10 +69,12 @@ pub enum PlanSource {
 }
 
 impl PlanSource {
+    /// Wrap a [`SplitPolicy`] implementation as a plan source.
     pub fn policy<P: SplitPolicy + 'static>(policy: P) -> PlanSource {
         PlanSource::Policy(Arc::new(policy))
     }
 
+    /// The source's registry/display name.
     pub fn name(&self) -> &'static str {
         match self {
             PlanSource::Policy(p) => p.name(),
@@ -169,6 +171,7 @@ impl PlannerBuilder {
         PlannerBuilder::source(PlanSource::Genome(genome))
     }
 
+    /// Start a builder from any plan source (policy or genome).
     pub fn source(source: PlanSource) -> PlannerBuilder {
         PlannerBuilder {
             source,
@@ -180,6 +183,7 @@ impl PlannerBuilder {
         }
     }
 
+    /// Select the device profile (default: H100 SXM).
     pub fn device(mut self, device: DeviceProfile) -> PlannerBuilder {
         self.device = device;
         self
@@ -191,11 +195,13 @@ impl PlannerBuilder {
         self
     }
 
+    /// Enable/disable the packed-GQA tile layout (default: on).
     pub fn pack_gqa(mut self, pack_gqa: bool) -> PlannerBuilder {
         self.pack_gqa = pack_gqa;
         self
     }
 
+    /// Select the dispatch path stamped into metadata.
     pub fn dispatch_path(mut self, path: DispatchPath) -> PlannerBuilder {
         self.path = path;
         self
@@ -207,6 +213,7 @@ impl PlannerBuilder {
         self
     }
 
+    /// Freeze the configuration into a [`Planner`].
     pub fn build(self) -> Planner {
         let bucketed = self.source.bucket_pure();
         Planner {
@@ -226,6 +233,20 @@ impl PlannerBuilder {
 /// The planner: policy + device + launch knobs + plan cache, behind one
 /// `plan()` call. Owns its cache mutably (`&mut self`) so the steady-state
 /// cache hit needs no locking.
+///
+/// ```
+/// use fa3_split::heuristics::tiles::DecodeShape;
+/// use fa3_split::planner::Planner;
+///
+/// let mut planner = Planner::sequence_aware();
+/// let plan = planner.plan(&DecodeShape::llama70b_tp8(1, 512));
+/// assert_eq!(plan.num_splits(), 3); // the paper's boundary override
+///
+/// // Steady-state decode rides a cursor: identical plans, no allocation.
+/// let mut cursor = planner.cursor();
+/// let again = cursor.plan(&mut planner, &DecodeShape::llama70b_tp8(1, 512));
+/// assert_eq!(plan, again);
+/// ```
 pub struct Planner {
     source: PlanSource,
     device: DeviceProfile,
@@ -345,18 +366,22 @@ impl Planner {
         self.source.name()
     }
 
+    /// The device profile plans are computed against.
     pub fn device(&self) -> &DeviceProfile {
         &self.device
     }
 
+    /// SMs reserved for the combine scheduler.
     pub fn sm_margin(&self) -> usize {
         self.sm_margin
     }
 
+    /// Whether plans use the packed-GQA tile layout.
     pub fn pack_gqa(&self) -> bool {
         self.pack_gqa
     }
 
+    /// The dispatch path stamped into every plan.
     pub fn dispatch_path(&self) -> DispatchPath {
         self.path
     }

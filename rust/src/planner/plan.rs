@@ -27,10 +27,12 @@ pub struct LaunchPlan {
 }
 
 impl LaunchPlan {
+    /// The chosen split count (≥ 1).
     pub fn num_splits(&self) -> usize {
         self.metadata.num_splits
     }
 
+    /// The exact decode shape this plan was materialized for.
     pub fn shape(&self) -> &crate::heuristics::tiles::DecodeShape {
         &self.metadata.shape
     }

@@ -58,6 +58,7 @@ impl TensorSig {
         Ok(TensorSig { shape, dtype: DType::parse(j.req_str("dtype")?)? })
     }
 
+    /// Total element count of this tensor spec.
     pub fn num_elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -235,10 +236,12 @@ impl Manifest {
         Ok(ModelBlock { preset: m.req_str("preset")?.to_string(), config, weights_path, params })
     }
 
+    /// Look up an artifact entry by name.
     pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
         self.by_name.get(name).map(|&i| &self.entries[i])
     }
 
+    /// The kernel artifacts (decode split variants), in manifest order.
     pub fn kernels(&self) -> impl Iterator<Item = &ArtifactEntry> {
         self.entries.iter().filter(|e| e.kind == ArtifactKind::Kernel)
     }

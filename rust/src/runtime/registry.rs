@@ -44,6 +44,7 @@ impl Registry {
         })
     }
 
+    /// The PJRT client artifacts execute on.
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
     }
@@ -68,6 +69,7 @@ impl Registry {
         Ok(exe)
     }
 
+    /// The (cached) compiled executor for an artifact entry.
     pub fn executor_for(&self, entry: &ArtifactEntry) -> Result<std::sync::Arc<Executor>> {
         self.executor(&entry.name)
     }

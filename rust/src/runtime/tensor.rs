@@ -13,6 +13,7 @@ pub enum DType {
 }
 
 impl DType {
+    /// Parse a manifest dtype string (`f32` | `s32`).
     pub fn parse(s: &str) -> Result<DType> {
         match s {
             "f32" => Ok(DType::F32),
@@ -21,6 +22,7 @@ impl DType {
         }
     }
 
+    /// The manifest spelling of this dtype.
     pub fn name(&self) -> &'static str {
         match self {
             DType::F32 => "f32",
@@ -28,6 +30,7 @@ impl DType {
         }
     }
 
+    /// Bytes per element.
     pub fn bytes(&self) -> usize {
         4
     }
@@ -48,6 +51,7 @@ pub enum HostTensor {
 }
 
 impl HostTensor {
+    /// An f32 host tensor (shape must cover `data` exactly).
     pub fn f32(shape: &[usize], data: Vec<f32>) -> Result<HostTensor> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -56,6 +60,7 @@ impl HostTensor {
         Ok(HostTensor::F32 { shape: shape.to_vec(), data })
     }
 
+    /// An s32 host tensor (shape must cover `data` exactly).
     pub fn s32(shape: &[usize], data: Vec<i32>) -> Result<HostTensor> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -64,10 +69,12 @@ impl HostTensor {
         Ok(HostTensor::S32 { shape: shape.to_vec(), data })
     }
 
+    /// An all-zeros f32 host tensor.
     pub fn zeros_f32(shape: &[usize]) -> HostTensor {
         HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// The tensor's element dtype.
     pub fn dtype(&self) -> DType {
         match self {
             HostTensor::F32 { .. } => DType::F32,
@@ -75,20 +82,24 @@ impl HostTensor {
         }
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> &[usize] {
         match self {
             HostTensor::F32 { shape, .. } | HostTensor::S32 { shape, .. } => shape,
         }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.shape().iter().product()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The f32 data, or an error for non-f32 tensors.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             HostTensor::F32 { data, .. } => Ok(data),
@@ -96,6 +107,7 @@ impl HostTensor {
         }
     }
 
+    /// The s32 data, or an error for non-s32 tensors.
     pub fn as_s32(&self) -> Result<&[i32]> {
         match self {
             HostTensor::S32 { data, .. } => Ok(data),

@@ -90,6 +90,7 @@ pub struct Simulator {
 }
 
 impl Simulator {
+    /// The calibrated H100 SXM5 model (the paper's hardware).
     pub fn h100() -> Simulator {
         Simulator { gpu: GpuSpec::h100_sxm(), cal: Calibration::paper_h100() }
     }
@@ -100,6 +101,7 @@ impl Simulator {
         Simulator { gpu: GpuSpec::from_profile(profile), cal: Calibration::paper_h100() }
     }
 
+    /// A simulator over an explicit GPU spec and calibration.
     pub fn new(gpu: GpuSpec, cal: Calibration) -> Simulator {
         Simulator { gpu, cal }
     }
@@ -109,6 +111,7 @@ impl Simulator {
         simulate_kernel(md, &self.gpu, &self.cal)
     }
 
+    /// Noise-free latency of one launch, µs.
     pub fn kernel_us(&self, md: &SchedulerMetadata) -> f64 {
         self.kernel(md).total_us
     }
@@ -127,6 +130,15 @@ impl Simulator {
     /// backend.
     pub fn prefill_us(&self, prompt_len: usize) -> f64 {
         50.0 + 0.05 * prompt_len as f64
+    }
+
+    /// Prompt-ingestion latency when the leading `cached_tokens` of the
+    /// prompt are already resident (a prefix-cache hit): only the
+    /// remainder pays the per-token slope, the launch overhead stays.
+    /// `cached_tokens = 0` is exactly [`Simulator::prefill_us`] — the
+    /// no-sharing byte-identity the prefix-cache bench gates on.
+    pub fn prefill_cached_us(&self, prompt_len: usize, cached_tokens: usize) -> f64 {
+        self.prefill_us(prompt_len.saturating_sub(cached_tokens))
     }
 }
 

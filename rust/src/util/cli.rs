@@ -29,21 +29,25 @@ pub struct Args {
     positional: Vec<String>,
 }
 
+/// Declarative argument parser (the offline `clap` stand-in).
 pub struct Parser {
     about: &'static str,
     specs: Vec<OptSpec>,
 }
 
 impl Parser {
+    /// A parser with only `--help` registered.
     pub fn new(about: &'static str) -> Parser {
         Parser { about, specs: Vec::new() }
     }
 
+    /// Register a boolean `--name` flag.
     pub fn flag(mut self, name: &'static str, help: impl Into<String>) -> Parser {
         self.specs.push(OptSpec { name, help: help.into(), takes_value: false, default: None });
         self
     }
 
+    /// Register an optional `--name <value>` with a default.
     pub fn opt(
         mut self,
         name: &'static str,
@@ -59,6 +63,7 @@ impl Parser {
         self
     }
 
+    /// Register a required `--name <value>`.
     pub fn opt_req(mut self, name: &'static str, help: impl Into<String>) -> Parser {
         self.specs.push(OptSpec { name, help: help.into(), takes_value: true, default: None });
         self
@@ -76,6 +81,7 @@ impl Parser {
         }
     }
 
+    /// Parse an argv slice (element 0 is the program name).
     pub fn parse_from(self, argv: &[String]) -> Result<Args, String> {
         let program = argv.first().cloned().unwrap_or_default();
         let mut args = Args {
@@ -130,6 +136,7 @@ impl Parser {
 }
 
 impl Args {
+    /// The generated `--help` text.
     pub fn usage(&self) -> String {
         let mut out = format!("{}\n\nUsage: {} [options] [args]\n\nOptions:\n", self.about, self.program);
         for s in &self.specs {
@@ -148,10 +155,12 @@ impl Args {
         out
     }
 
+    /// Whether a flag was passed.
     pub fn has(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// An option's raw value, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values
             .get(name)
@@ -163,30 +172,35 @@ impl Args {
         self.specs.iter().find(|s| s.name == name).and_then(|s| s.default.as_deref())
     }
 
+    /// An option's value as a string (panics if undeclared).
     pub fn str(&self, name: &str) -> String {
         self.get(name)
             .unwrap_or_else(|| panic!("missing required option --{name}"))
             .to_string()
     }
 
+    /// An option's value parsed as `usize` (exits with a message on garbage).
     pub fn usize(&self, name: &str) -> usize {
         let v = self.str(name);
         v.parse()
             .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
     }
 
+    /// An option's value parsed as `u64` (exits with a message on garbage).
     pub fn u64(&self, name: &str) -> u64 {
         let v = self.str(name);
         v.parse()
             .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
     }
 
+    /// An option's value parsed as `f64` (exits with a message on garbage).
     pub fn f64(&self, name: &str) -> f64 {
         let v = self.str(name);
         v.parse()
             .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
     }
 
+    /// Positional (non-flag) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

@@ -15,6 +15,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// Parse INI-style text (sections, `key = value`, `#`/`;` comments).
     pub fn parse(text: &str) -> Result<Config> {
         let mut cfg = Config::default();
         let mut section = String::new();
@@ -40,16 +41,19 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Parse a config file from disk.
     pub fn load(path: &std::path::Path) -> Result<Config> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {}", path.display()))?;
         Config::parse(&text)
     }
 
+    /// A raw value, if the section and key exist.
     pub fn get(&self, section: &str, key: &str) -> Option<&str> {
         self.sections.get(section)?.get(key).map(|s| s.as_str())
     }
 
+    /// A required float value.
     pub fn f64(&self, section: &str, key: &str) -> Result<f64> {
         let v = self
             .get(section, key)
@@ -57,6 +61,7 @@ impl Config {
         v.parse().with_context(|| format!("[{section}] {key} = '{v}' is not a number"))
     }
 
+    /// A float value with a default.
     pub fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
         match self.get(section, key) {
             None => Ok(default),
@@ -66,6 +71,7 @@ impl Config {
         }
     }
 
+    /// A usize value with a default.
     pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize> {
         match self.get(section, key) {
             None => Ok(default),
@@ -75,6 +81,7 @@ impl Config {
         }
     }
 
+    /// The section names, in file order.
     pub fn sections(&self) -> impl Iterator<Item = &str> {
         self.sections.keys().map(|s| s.as_str())
     }

@@ -21,6 +21,7 @@ pub enum Json {
 }
 
 #[derive(Debug)]
+/// A parse error with line/column context.
 pub struct JsonError {
     pub msg: String,
     pub offset: usize,
@@ -35,6 +36,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a JSON document.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.ws();
@@ -48,6 +50,7 @@ impl Json {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -55,6 +58,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -62,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The numeric value as i64, if integral.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Num(n) if n.fract() == 0.0 && n.abs() < 9e15 => Some(*n as i64),
@@ -69,10 +74,12 @@ impl Json {
         }
     }
 
+    /// The numeric value as usize, if integral and non-negative.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_i64().and_then(|v| usize::try_from(v).ok())
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -80,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -87,6 +95,7 @@ impl Json {
         }
     }
 
+    /// The key-value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -111,12 +120,14 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing/invalid string field '{key}'"))
     }
 
+    /// A required usize field of an object (error with the key name).
     pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
         self.get(key)
             .as_usize()
             .ok_or_else(|| anyhow::anyhow!("missing/invalid integer field '{key}'"))
     }
 
+    /// A required array field of an object (error with the key name).
     pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.get(key)
             .as_arr()
@@ -125,34 +136,41 @@ impl Json {
 
     // -- construction helpers ----------------------------------------------
 
+    /// Build an object from key-value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array from any Json iterator.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Build a number value.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
 
+    /// Build an integer value.
     pub fn int(n: i64) -> Json {
         Json::Num(n as f64)
     }
 
     // -- serialization -----------------------------------------------------
 
+    /// Compact single-line rendering.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, None, 0);
         out
     }
 
+    /// Pretty-printed rendering (2-space indent).
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, Some(2), 0);

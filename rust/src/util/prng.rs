@@ -24,6 +24,7 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// The next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)

@@ -36,6 +36,7 @@ pub struct Domain {
 }
 
 impl Domain {
+    /// An inclusive `[lo, hi]` domain.
     pub fn new(lo: u64, hi: u64) -> Domain {
         assert!(lo <= hi);
         Domain { lo, hi }
@@ -68,6 +69,7 @@ where
     check_with(Config::default(), name, domains, prop)
 }
 
+/// Like [`check`], with an explicit configuration.
 pub fn check_with<F>(cfg: Config, name: &str, domains: &[Domain], prop: F)
 where
     F: Fn(&[u64]) -> Result<(), String>,

@@ -17,6 +17,7 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summarize a sample set (mean, percentiles, spread).
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary::of on empty sample");
         let n = samples.len();

@@ -20,6 +20,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(headers: &[&str]) -> Table {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -28,12 +29,14 @@ impl Table {
         }
     }
 
+    /// Set per-column alignment (defaults to left).
     pub fn align(mut self, aligns: &[Align]) -> Table {
         assert_eq!(aligns.len(), self.headers.len());
         self.aligns = aligns.to_vec();
         self
     }
 
+    /// Append a row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(
             cells.len(),
@@ -45,14 +48,17 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
+    /// Append a row of string slices.
     pub fn row_strs(&mut self, cells: &[&str]) {
         self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
     }
 
+    /// Whether no rows have been added.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Render the table to an ASCII string.
     pub fn render(&self) -> String {
         let ncols = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
@@ -96,6 +102,7 @@ impl Table {
         out
     }
 
+    /// Render and print to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

@@ -35,7 +35,12 @@ pub struct ChatWorkload {
     /// pin it to the boundary bucket's lower edge so the regime under
     /// test actually dominates the trace.
     pub prompt_min: usize,
-    /// Hard cap on prompt length (the paper's L_K <= 512 regime).
+    /// Hard cap on the *sampled* prompt length — the unique suffix when
+    /// [`ChatWorkload::shared_prefix_len`] > 0 (the system prefix is
+    /// additive: total prompt = `shared_prefix_len` + sampled). Keep
+    /// `shared_prefix_len + prompt_cap + output_cap` within the serving
+    /// engine's `max_seq` or the tail of the distribution is refused as
+    /// unschedulable. (The paper's regime is L_K <= 512.)
     pub prompt_cap: usize,
     /// Mean output length (tokens).
     pub output_mean: usize,
@@ -46,6 +51,18 @@ pub struct ChatWorkload {
     /// Requests per chat session (multi-turn conversations). 1 = every
     /// request is its own session.
     pub turns_per_session: usize,
+    /// Shared system-prompt length, tokens. When > 0 every prompt is
+    /// `system prefix ++ unique suffix`: requests in the same fan-out
+    /// group draw byte-identical prefixes, which is exactly what the
+    /// prefix-sharing KV cache deduplicates. **Additive** on top of the
+    /// sampled suffix length (see [`ChatWorkload::prompt_cap`]).
+    /// 0 = scenario off.
+    pub shared_prefix_len: usize,
+    /// Requests per distinct system prompt (fan-out). Group `g` holds
+    /// requests `g*fanout .. (g+1)*fanout`; `fanout = 1` gives every
+    /// request its own prefix — same lengths and arrivals as the shared
+    /// scenario, zero sharable content (the disjoint A/B control).
+    pub prefix_fanout: usize,
 }
 
 impl Default for ChatWorkload {
@@ -61,6 +78,8 @@ impl Default for ChatWorkload {
             mean_gap_us: 0,
             vocab: 4096,
             turns_per_session: 1,
+            shared_prefix_len: 0,
+            prefix_fanout: 1,
         }
     }
 }
@@ -103,19 +122,57 @@ impl ChatWorkload {
         }
     }
 
+    /// The prefix-sharing production scenario: `n_requests` chats where
+    /// every group of `fanout` consecutive requests opens with the same
+    /// `prefix_len`-token system prompt, followed by a unique chat
+    /// suffix. `fanout = 1` is the matched disjoint control (identical
+    /// suffixes, lengths, and arrivals; nothing sharable) — the A/B pair
+    /// the `prefix_cache` bench sweeps.
+    pub fn shared_system_prompt(
+        seed: u64,
+        n_requests: usize,
+        prefix_len: usize,
+        fanout: usize,
+        output: usize,
+    ) -> ChatWorkload {
+        ChatWorkload {
+            seed,
+            n_requests,
+            shared_prefix_len: prefix_len,
+            prefix_fanout: fanout.max(1),
+            output_mean: output,
+            output_cap: output,
+            ..Default::default()
+        }
+    }
+
     /// Generate the stream (deterministic in `seed`).
     pub fn generate(&self) -> Vec<GeneratedRequest> {
         assert!(self.n_requests > 0 && self.prompt_cap >= 1 && self.vocab >= 2);
         assert!(self.turns_per_session >= 1, "turns_per_session must be >= 1");
         assert!(self.prompt_min <= self.prompt_cap, "prompt_min exceeds prompt_cap");
+        assert!(self.prefix_fanout >= 1, "prefix_fanout must be >= 1");
         let mut rng = Rng::new(self.seed);
         let mut out = Vec::with_capacity(self.n_requests);
         let mut clock = 0u64;
         for id in 0..self.n_requests {
             let prompt_len = self.sample_prompt_len(&mut rng);
             let out_len = self.sample_output_len(&mut rng);
-            let prompt: Vec<i32> =
-                (0..prompt_len).map(|_| rng.range(1, self.vocab - 1) as i32).collect();
+            // The system prefix draws from a per-group stream, NOT the
+            // main one: changing `prefix_fanout` regroups the prefixes
+            // without shifting a single suffix, length, or arrival draw,
+            // so shared-vs-disjoint comparisons are exact A/B pairs.
+            let mut prompt: Vec<i32> = Vec::with_capacity(self.shared_prefix_len + prompt_len);
+            if self.shared_prefix_len > 0 {
+                let group = (id / self.prefix_fanout) as u64;
+                let mut prefix_rng =
+                    Rng::new(self.seed ^ (group + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+                prompt.extend(
+                    (0..self.shared_prefix_len)
+                        .map(|_| prefix_rng.range(1, self.vocab - 1) as i32),
+                );
+            }
+            prompt.extend((0..prompt_len).map(|_| rng.range(1, self.vocab - 1) as i32));
             if self.mean_gap_us > 0 {
                 // Exponential inter-arrival (Poisson process).
                 let u = rng.f64().max(1e-12);
@@ -260,6 +317,53 @@ mod tests {
             w.clone().with_seed(99).generate().len(),
             ChatWorkload { seed: 99, n_requests: 8, ..Default::default() }.generate().len()
         );
+    }
+
+    #[test]
+    fn shared_system_prompt_groups_share_exactly_the_prefix() {
+        let w = ChatWorkload::shared_system_prompt(11, 12, 64, 4, 16);
+        let reqs = w.generate();
+        assert_eq!(reqs.len(), 12);
+        for (i, g) in reqs.iter().enumerate() {
+            assert!(g.request.prompt.len() > 64, "prefix plus a nonempty suffix");
+            // Same group ⇒ byte-identical prefix; adjacent groups differ.
+            let group_head = &reqs[(i / 4) * 4];
+            assert_eq!(g.request.prompt[..64], group_head.request.prompt[..64]);
+        }
+        assert_ne!(
+            reqs[0].request.prompt[..64],
+            reqs[4].request.prompt[..64],
+            "distinct groups draw distinct system prompts"
+        );
+        // Suffixes stay unique even inside a group (chat turns differ).
+        assert_ne!(reqs[0].request.prompt[64..], reqs[1].request.prompt[64..]);
+    }
+
+    #[test]
+    fn prefix_fanout_is_an_exact_ab_knob() {
+        // Changing ONLY the fan-out must not move a single suffix,
+        // length, or arrival: shared vs disjoint is an exact A/B pair.
+        let shared = ChatWorkload {
+            shared_prefix_len: 128,
+            prefix_fanout: 8,
+            n_requests: 16,
+            mean_gap_us: 500,
+            ..Default::default()
+        };
+        let disjoint = ChatWorkload { prefix_fanout: 1, ..shared.clone() };
+        let a = shared.generate();
+        let b = disjoint.generate();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.prompt.len(), y.request.prompt.len());
+            assert_eq!(x.request.prompt[128..], y.request.prompt[128..], "suffixes identical");
+            assert_eq!(x.request.max_new_tokens, y.request.max_new_tokens);
+            assert_eq!(x.arrival_offset_us, y.arrival_offset_us);
+        }
+        // Disjoint control: every request has its own prefix.
+        assert_ne!(b[0].request.prompt[..128], b[1].request.prompt[..128]);
+        // Off switch: no prefix at all.
+        let off = ChatWorkload { shared_prefix_len: 0, ..shared };
+        assert_eq!(off.generate()[0].request.prompt.len(), a[0].request.prompt.len() - 128);
     }
 
     #[test]

@@ -14,10 +14,12 @@ pub struct Table1Row {
 }
 
 impl Table1Row {
+    /// The decode shape of this scenario row.
     pub fn shape(&self) -> DecodeShape {
         DecodeShape::decode(1, self.l_k, 8 * self.h_kv, self.h_kv, 128)
     }
 
+    /// The paper-reported speedup for this row.
     pub fn paper_speedup(&self) -> f64 {
         self.paper_standard_us / self.paper_patched_us
     }

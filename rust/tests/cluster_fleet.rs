@@ -212,7 +212,7 @@ fn least_loaded_never_routes_to_unadmittable_replica() {
     // boundary-bucket request (385..512 prompt + 64 new); LeastLoaded must
     // send everything to replica 0 even though replica 0 is busier.
     let starved = EngineConfig {
-        blocks: BlockManagerConfig { block_size: 16, num_blocks: 16, max_seq: 1024 },
+        blocks: BlockManagerConfig { block_size: 16, num_blocks: 16, max_seq: 1024, ..Default::default() },
         ..Default::default()
     };
     let topology = ClusterTopology::builder(llama70b())

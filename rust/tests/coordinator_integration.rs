@@ -41,16 +41,28 @@ fn block_manager_random_ops_preserve_invariants() {
                 block_size,
                 num_blocks,
                 max_seq: block_size * num_blocks,
+                ..Default::default()
             });
             let mut live: Vec<u64> = Vec::new();
             let mut next_id = 0u64;
             for _ in 0..200 {
                 if live.is_empty() || rng.chance(0.6) {
-                    let prompt = rng.range(1, block_size * 4);
+                    let prompt_len = rng.range(1, block_size * 4);
                     let max_new = rng.range(0, block_size * 2);
-                    if mgr.can_admit(prompt, max_new) {
-                        mgr.admit(next_id, prompt, max_new)
-                            .map_err(|e| format!("admit after can_admit: {e}"))?;
+                    // Half the prompts repeat content (prefix sharing
+                    // engages — tag-0 prompts are prefixes of each
+                    // other, so full-block AND tail matches occur),
+                    // half are unique. The paired predicate is the
+                    // sharing-aware `can_admit_prompt`: the blind
+                    // `can_admit` cannot promise admission when a COW
+                    // tail donor must also be attached (transient
+                    // footprint is blocks_for(total) + 1).
+                    let tag = if rng.chance(0.5) { 0 } else { next_id as i32 + 1 };
+                    let prompt: Vec<i32> =
+                        (0..prompt_len).map(|i| tag * 100_000 + i as i32).collect();
+                    if mgr.can_admit_prompt(&prompt, max_new) {
+                        mgr.admit(next_id, &prompt, max_new)
+                            .map_err(|e| format!("admit after can_admit_prompt: {e}"))?;
                         live.push(next_id);
                         next_id += 1;
                     }

@@ -23,7 +23,7 @@ fn engine(max_batch: usize, num_blocks: usize, queue_capacity: usize) -> Engine 
     let buckets: Vec<usize> = [1, 2, 4, 8].into_iter().filter(|&b| b <= max_batch).collect();
     let mut cfg = EngineConfig {
         batcher: BatcherConfig { max_batch: *buckets.last().unwrap(), batch_buckets: buckets },
-        blocks: BlockManagerConfig { block_size: 16, num_blocks, max_seq: 1024 },
+        blocks: BlockManagerConfig { block_size: 16, num_blocks, max_seq: 1024, ..Default::default() },
         ..Default::default()
     };
     cfg.admission.queue_capacity = queue_capacity;
