@@ -1,0 +1,185 @@
+//! Seeded-violation fixture corpus: the lint's own regression suite.
+//!
+//! Each fixture is a tiny in-memory source tree carrying exactly one
+//! deliberate violation; [`verify`] runs the real passes over it and
+//! demands (a) at least one finding from the expected pass whose message
+//! contains the expected fragment, and (b) zero findings from any other
+//! pass (a fixture that trips a *different* pass means a false positive
+//! crept in). A final clean fixture must produce no findings at all.
+//!
+//! `lint --fixtures` runs this corpus in CI and the integration tests
+//! reuse it verbatim, so "does each pass still fire?" is checked by the
+//! same code path everywhere.
+
+use crate::analysis::report::Finding;
+use crate::analysis::source::{bench_manifest, run_source_passes, SourceSet};
+
+/// One seeded-violation case over the source passes.
+pub struct Fixture {
+    /// Corpus-unique label, reported on failure.
+    pub name: &'static str,
+    /// The pass expected to fire (`""` for the clean fixture).
+    pub pass: &'static str,
+    /// Fragment the finding's message must contain.
+    pub expect: &'static str,
+    /// The in-memory tree: `(path, contents)`.
+    pub files: &'static [(&'static str, &'static str)],
+}
+
+/// The source-pass corpus. Kept small and surgical: one violation per
+/// fixture, everything else legal.
+pub fn corpus() -> Vec<Fixture> {
+    vec![
+        Fixture {
+            name: "layering_back_edge",
+            pass: "layering",
+            expect: "heuristics -> planner",
+            files: &[(
+                "heuristics/bad.rs",
+                "use crate::planner::DeviceProfile;\n\
+                 pub fn f() -> usize { DeviceProfile::H100_SXM.num_sms }\n",
+            )],
+        },
+        Fixture {
+            name: "facade_escape",
+            pass: "layering",
+            expect: "outside the planner facade",
+            files: &[(
+                "backend/bad.rs",
+                "fn forge() { let md = SchedulerMetadata { num_splits: 1, .. base }; }\n",
+            )],
+        },
+        Fixture {
+            name: "no_alloc_violation",
+            pass: "no_alloc",
+            expect: "allocating idiom `vec!`",
+            files: &[(
+                "coordinator/bad.rs",
+                "// pallas-lint: no_alloc\n\
+                 fn hot() { let xs = vec![1usize, 2]; drop(xs); }\n",
+            )],
+        },
+        Fixture {
+            name: "struct_ripple_mismatch",
+            pass: "struct_ripple",
+            expect: "does not match its definition",
+            files: &[
+                (
+                    "planner/def.rs",
+                    "pub struct Knobs { pub alpha: f64, pub beta: f64 }\n",
+                ),
+                (
+                    "sim/bad.rs",
+                    "fn build() -> Knobs { Knobs { alpha: 1.0 } }\n",
+                ),
+            ],
+        },
+        Fixture {
+            name: "clean_tree",
+            pass: "",
+            expect: "",
+            files: &[(
+                "planner/good.rs",
+                "use crate::heuristics::tiles::DecodeShape;\n\
+                 pub struct P { pub splits: usize }\n\
+                 // pallas-lint: no_alloc\n\
+                 pub fn hot(p: &mut P) { p.splits += 1; }\n\
+                 pub fn make() -> P { P { splits: 1 } }\n",
+            )],
+        },
+    ]
+}
+
+/// The bench-manifest seeded violation (different input shape from the
+/// source fixtures, so it gets its own constructor).
+pub fn bench_fixture() -> bench_manifest::BenchManifestInputs {
+    bench_manifest::BenchManifestInputs {
+        bench_jsons: vec![("BENCH_orphan.json".to_string(), "{\"measured\": true}".to_string())],
+        bench_sources: vec![],
+        experiments_md: String::new(),
+        ci_yaml: String::new(),
+    }
+}
+
+/// Run the whole corpus. Appends one meta-finding (pass `fixtures`) per
+/// violated expectation and returns the number of fixtures checked.
+pub fn verify(findings: &mut Vec<Finding>) -> usize {
+    let mut checked = 0usize;
+    for fx in corpus() {
+        checked += 1;
+        let set = SourceSet::from_files(fx.files);
+        let mut got = Vec::new();
+        run_source_passes(&set, &mut got);
+        check_expectation(fx.name, fx.pass, fx.expect, &got, findings);
+    }
+
+    checked += 1;
+    let mut got = Vec::new();
+    bench_manifest::check(&bench_fixture(), &mut got);
+    check_expectation(
+        "bench_manifest_orphan",
+        "bench_manifest",
+        "orphaned target file",
+        &got,
+        findings,
+    );
+    checked
+}
+
+fn check_expectation(
+    name: &str,
+    pass: &str,
+    expect: &str,
+    got: &[Finding],
+    findings: &mut Vec<Finding>,
+) {
+    let fail = |msg: String| Finding::error("fixtures", format!("fixture:{name}"), 0, msg);
+    if pass.is_empty() {
+        if !got.is_empty() {
+            findings.push(fail(format!(
+                "clean fixture produced {} finding(s), first: {}",
+                got.len(),
+                got[0].render()
+            )));
+        }
+        return;
+    }
+    let (hits, others): (Vec<&Finding>, Vec<&Finding>) =
+        got.iter().partition(|f| f.pass == pass);
+    if !hits.iter().any(|f| f.message.contains(expect)) {
+        findings.push(fail(format!(
+            "expected a `{pass}` finding containing {expect:?}; got {} finding(s) \
+             from that pass",
+            hits.len()
+        )));
+    }
+    if let Some(stray) = others.first() {
+        findings.push(fail(format!(
+            "unrelated pass fired on this fixture (false positive): {}",
+            stray.render()
+        )));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_fixture_meets_its_expectation() {
+        let mut findings = Vec::new();
+        let checked = verify(&mut findings);
+        assert_eq!(checked, corpus().len() + 1);
+        assert!(findings.is_empty(), "{findings:#?}");
+    }
+
+    #[test]
+    fn a_broken_expectation_is_reported() {
+        // Sanity for the harness itself: a clean tree checked against a
+        // wrong expectation must produce a fixtures finding.
+        let mut findings = Vec::new();
+        check_expectation("bogus", "layering", "never appears", &[], &mut findings);
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("expected a `layering` finding"));
+    }
+}

@@ -1,0 +1,88 @@
+//! pallas-lint: self-hosted static analysis + plan-space invariant
+//! verifier.
+//!
+//! The repo has accumulated invariants that rustc cannot see and that
+//! review keeps re-deriving by hand: the module layering DAG, the PR-1
+//! rule that only `planner/` constructs `SchedulerMetadata`, the PR-4
+//! zero-allocation decode hot path, the bench-manifest ↔ docs ↔ CI
+//! wiring, and the paper's own occupancy claims. This subsystem makes
+//! them machine-checked, with zero external dependencies (the offline
+//! container has no crates.io):
+//!
+//! * [`source`] — a hand-rolled lexer + module model over `rust/src/**`
+//!   feeding four passes: `layering`, `no_alloc`, `struct_ripple`,
+//!   `bench_manifest`.
+//! * [`modelcheck`] — bounded-exhaustive enumeration of the decode-shape
+//!   domain proving split-bounds, occupancy-bounds, the sequence-aware
+//!   no-regression inequality, and cursor-horizon soundness for every
+//!   registered policy on every device preset.
+//! * [`fixtures`] — seeded-violation corpus verifying each pass still
+//!   fires (and only on its own violation).
+//! * [`report`] — findings, counters, and the JSON artifact CI uploads.
+//!
+//! Entry point: `fa3-split lint` (see `main.rs`), or [`run`] from tests.
+
+pub mod fixtures;
+pub mod modelcheck;
+pub mod report;
+pub mod source;
+
+pub use modelcheck::{ModelCheckConfig, ModelCheckReport};
+pub use report::{Finding, LintReport, Severity, SourceStats};
+pub use source::SourceSet;
+
+use std::path::{Path, PathBuf};
+
+/// What a lint run should cover.
+#[derive(Debug, Clone)]
+pub struct LintOptions {
+    /// Root of the Rust source tree to scan (`rust/src`).
+    pub src_dir: PathBuf,
+    /// Repo root, for the bench-manifest pass (`BENCH_*.json`, docs, CI).
+    pub repo_root: PathBuf,
+    /// Model-checker domain; `None` skips the model checker.
+    pub modelcheck: Option<ModelCheckConfig>,
+}
+
+impl LintOptions {
+    /// Options rooted at a repo checkout, full model-check domain.
+    pub fn at_repo_root(repo_root: &Path) -> LintOptions {
+        LintOptions {
+            src_dir: repo_root.join("rust").join("src"),
+            repo_root: repo_root.to_path_buf(),
+            modelcheck: Some(ModelCheckConfig::full()),
+        }
+    }
+}
+
+/// Run every pass per `opts` and assemble the report.
+pub fn run(opts: &LintOptions) -> std::io::Result<LintReport> {
+    let mut findings = Vec::new();
+
+    let set = SourceSet::load_dir(&opts.src_dir)?;
+    let stats = source::run_source_passes(&set, &mut findings);
+
+    let inputs = source::bench_manifest::BenchManifestInputs::load(&opts.repo_root)?;
+    source::bench_manifest::check(&inputs, &mut findings);
+
+    let modelcheck = opts.modelcheck.as_ref().map(|cfg| {
+        let mc = modelcheck::check(cfg);
+        let summary = mc.domain_json(cfg);
+        findings.extend(mc.findings);
+        summary
+    });
+
+    Ok(LintReport { findings, source: stats, modelcheck })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_point_at_the_conventional_layout() {
+        let opts = LintOptions::at_repo_root(Path::new("/r"));
+        assert_eq!(opts.src_dir, Path::new("/r/rust/src"));
+        assert!(opts.modelcheck.is_some());
+    }
+}

@@ -1,0 +1,180 @@
+//! Findings: the shared currency of every pallas-lint pass.
+//!
+//! Each pass appends [`Finding`]s to a caller-owned vector; the CLI
+//! aggregates them into a [`LintReport`] whose JSON form is the
+//! `static-analysis` CI artifact. Findings are plain data — file, line,
+//! pass name, message — so the report stays diffable and greppable.
+
+use crate::util::json::Json;
+
+/// How bad a finding is. `Error` findings fail the build (non-zero CLI
+/// exit); `Warning`s are surfaced but do not gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Violation of an enforced invariant: fails `lint`.
+    Error,
+    /// Advisory (e.g. a bench manifest still carrying modeled numbers).
+    Warning,
+}
+
+impl Severity {
+    /// Lower-case label used in the JSON report.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One diagnostic from one pass, anchored to a file and line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Pass that produced it: `layering`, `no_alloc`, `struct_ripple`,
+    /// `bench_manifest`, `modelcheck`, or `directive`.
+    pub pass: &'static str,
+    /// Repo-relative path (`rust/src/...`), or a symbolic location for
+    /// model-checker findings (the offending shape, printed).
+    pub file: String,
+    /// 1-based line; 0 when the finding has no meaningful line.
+    pub line: usize,
+    /// Human-readable description of the violation.
+    pub message: String,
+    /// Gate or advisory.
+    pub severity: Severity,
+}
+
+impl Finding {
+    /// A gating finding.
+    pub fn error(pass: &'static str, file: impl Into<String>, line: usize, message: impl Into<String>) -> Finding {
+        Finding { pass, file: file.into(), line, message: message.into(), severity: Severity::Error }
+    }
+
+    /// An advisory finding.
+    pub fn warning(pass: &'static str, file: impl Into<String>, line: usize, message: impl Into<String>) -> Finding {
+        Finding { pass, file: file.into(), line, message: message.into(), severity: Severity::Warning }
+    }
+
+    /// `file:line: [pass] message` — the human-readable form.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}: {}", self.file, self.line, self.severity.label(), self.pass, self.message)
+    }
+
+    /// JSON object for the findings report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("pass", Json::str(self.pass)),
+            ("file", Json::str(&self.file)),
+            ("line", Json::int(self.line as i64)),
+            ("severity", Json::str(self.severity.label())),
+            ("message", Json::str(&self.message)),
+        ])
+    }
+}
+
+/// Scan-size counters from the source passes, reported alongside the
+/// findings so "0 findings" is distinguishable from "0 files scanned".
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SourceStats {
+    /// `.rs` files analyzed.
+    pub files_scanned: usize,
+    /// Struct definitions (incl. enum struct-variants) in the model.
+    pub struct_defs: usize,
+    /// Struct-literal / struct-pattern sites checked by struct-ripple.
+    pub literal_sites: usize,
+    /// Non-test inter-module use edges checked by layering.
+    pub use_edges: usize,
+    /// `no_alloc` regions checked.
+    pub no_alloc_regions: usize,
+    /// Findings silenced by justified `allow(...)` directives.
+    pub suppressed: usize,
+}
+
+impl SourceStats {
+    /// JSON object for the findings report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("files_scanned", Json::int(self.files_scanned as i64)),
+            ("struct_defs", Json::int(self.struct_defs as i64)),
+            ("literal_sites", Json::int(self.literal_sites as i64)),
+            ("use_edges", Json::int(self.use_edges as i64)),
+            ("no_alloc_regions", Json::int(self.no_alloc_regions as i64)),
+            ("suppressed", Json::int(self.suppressed as i64)),
+        ])
+    }
+}
+
+/// The complete lint run: source-pass findings + model-checker findings
+/// plus the counters that make the gate auditable.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    /// All findings, source passes first, model checker after.
+    pub findings: Vec<Finding>,
+    /// Source-scan counters ([`SourceStats::default`] if source passes
+    /// were skipped).
+    pub source: SourceStats,
+    /// Model-check domain summary (None when `--no-modelcheck`).
+    pub modelcheck: Option<Json>,
+}
+
+impl LintReport {
+    /// Number of gating findings.
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    /// Number of advisory findings.
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    /// Whether the tree passes the gate (zero errors; warnings allowed).
+    pub fn clean(&self) -> bool {
+        self.errors() == 0
+    }
+
+    /// The findings-report JSON (the CI artifact).
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self.findings.iter().map(Finding::to_json).collect();
+        let mut fields = vec![
+            ("errors", Json::int(self.errors() as i64)),
+            ("warnings", Json::int(self.warnings() as i64)),
+            ("findings", Json::Arr(findings)),
+            ("source", self.source.to_json()),
+        ];
+        if let Some(mc) = &self.modelcheck {
+            fields.push(("modelcheck", mc.clone()));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_json_roundtrip_the_fields() {
+        let f = Finding::error("layering", "a/b.rs", 7, "bad edge");
+        assert_eq!(f.render(), "a/b.rs:7: [error] layering: bad edge");
+        let j = f.to_json().to_string_pretty();
+        assert!(j.contains("\"pass\": \"layering\""));
+        assert!(j.contains("\"line\": 7"));
+    }
+
+    #[test]
+    fn report_counts_severities() {
+        let report = LintReport {
+            findings: vec![
+                Finding::error("layering", "x.rs", 1, "e"),
+                Finding::warning("bench_manifest", "y.json", 0, "w"),
+            ],
+            source: SourceStats::default(),
+            modelcheck: None,
+        };
+        assert_eq!(report.errors(), 1);
+        assert_eq!(report.warnings(), 1);
+        assert!(!report.clean());
+        assert!(report.to_json().to_string_pretty().contains("\"errors\": 1"));
+    }
+}

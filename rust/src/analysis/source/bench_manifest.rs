@@ -1,0 +1,237 @@
+//! Bench-manifest pass: every checked-in `BENCH_*.json` must map to a
+//! bench binary that writes it, a row in `docs/experiments.md`, and a CI
+//! job that regenerates it — and vice versa, every manifest a bench
+//! emits must be checked in.
+//!
+//! This closes the loop `docs/experiments.md` documents by hand: a bench
+//! renamed without its manifest (or a manifest committed without a CI
+//! job) is a silent drift between what the repo *claims* is measured and
+//! what CI *actually* regenerates. CI emits `.ci.json` variants next to
+//! the committed targets, so the CI check matches on the `BENCH_<stem>`
+//! prefix rather than the exact filename.
+//!
+//! Manifests still carrying `"measured": false` (targets-only, written
+//! without a toolchain) are reported as warnings, not errors: the gate
+//! must start green in the offline container, but the drift stays
+//! visible in every findings report until a real `cargo bench` run
+//! replaces them.
+
+use crate::analysis::report::Finding;
+use crate::util::json::Json;
+
+/// Pass name in findings.
+pub const PASS: &str = "bench_manifest";
+
+/// The pass inputs, decoupled from the filesystem so fixtures can seed
+/// violations ([`load`] gathers them from a real repo root).
+///
+/// [`load`]: BenchManifestInputs::load
+#[derive(Debug, Clone, Default)]
+pub struct BenchManifestInputs {
+    /// Checked-in `(file_name, contents)` of repo-root `BENCH_*.json`.
+    pub bench_jsons: Vec<(String, String)>,
+    /// `(file_name, contents)` of `rust/benches/*.rs`.
+    pub bench_sources: Vec<(String, String)>,
+    /// `docs/experiments.md` contents.
+    pub experiments_md: String,
+    /// `.github/workflows/ci.yml` contents.
+    pub ci_yaml: String,
+}
+
+impl BenchManifestInputs {
+    /// Gather the inputs from a repo root.
+    pub fn load(repo_root: &std::path::Path) -> std::io::Result<BenchManifestInputs> {
+        let mut inputs = BenchManifestInputs::default();
+        for entry in std::fs::read_dir(repo_root)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                inputs.bench_jsons.push((name, std::fs::read_to_string(&path)?));
+            }
+        }
+        let benches = repo_root.join("rust").join("benches");
+        if benches.is_dir() {
+            for entry in std::fs::read_dir(&benches)? {
+                let path = entry?.path();
+                if path.extension().is_some_and(|e| e == "rs") {
+                    let name =
+                        path.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+                    inputs.bench_sources.push((name, std::fs::read_to_string(&path)?));
+                }
+            }
+        }
+        inputs.bench_jsons.sort();
+        inputs.bench_sources.sort();
+        inputs.experiments_md =
+            std::fs::read_to_string(repo_root.join("docs").join("experiments.md"))
+                .unwrap_or_default();
+        inputs.ci_yaml = std::fs::read_to_string(
+            repo_root.join(".github").join("workflows").join("ci.yml"),
+        )
+        .unwrap_or_default();
+        Ok(inputs)
+    }
+}
+
+/// Run the pass. Returns the number of manifests examined.
+pub fn check(inputs: &BenchManifestInputs, findings: &mut Vec<Finding>) -> usize {
+    // Forward: every checked-in manifest must be written, documented, and
+    // regenerated.
+    for (name, contents) in &inputs.bench_jsons {
+        let stem = name.strip_suffix(".json").unwrap_or(name);
+        let writer = inputs.bench_sources.iter().find(|(_, src)| src.contains(name.as_str()));
+        if writer.is_none() {
+            findings.push(Finding::error(
+                PASS,
+                name.as_str(),
+                0,
+                "no bench under rust/benches/ writes this manifest (orphaned target file)",
+            ));
+        }
+        if !inputs.experiments_md.contains(stem) {
+            findings.push(Finding::error(
+                PASS,
+                name.as_str(),
+                0,
+                "manifest is not documented in docs/experiments.md",
+            ));
+        }
+        if !inputs.ci_yaml.contains(stem) {
+            findings.push(Finding::error(
+                PASS,
+                name.as_str(),
+                0,
+                "no CI job in .github/workflows/ci.yml regenerates this manifest",
+            ));
+        }
+        match Json::parse(contents) {
+            Ok(doc) => {
+                if doc.get("measured").as_bool() != Some(true) {
+                    findings.push(Finding::warning(
+                        PASS,
+                        name.as_str(),
+                        0,
+                        "manifest carries modeled targets (\"measured\" != true): \
+                         regenerate on real hardware when a toolchain is available",
+                    ));
+                }
+            }
+            Err(e) => findings.push(Finding::error(
+                PASS,
+                name.as_str(),
+                0,
+                format!("manifest is not valid JSON: {e}"),
+            )),
+        }
+    }
+    // Reverse: every manifest name a bench source mentions must exist.
+    for (src_name, src) in &inputs.bench_sources {
+        for referenced in extract_manifest_names(src) {
+            let exists = inputs.bench_jsons.iter().any(|(n, _)| *n == referenced);
+            if !exists {
+                findings.push(Finding::error(
+                    PASS,
+                    src_name.as_str(),
+                    0,
+                    format!(
+                        "bench writes `{referenced}` but no such manifest is checked in \
+                         at the repo root"
+                    ),
+                ));
+            }
+        }
+    }
+    inputs.bench_jsons.len()
+}
+
+/// All `BENCH_<stem>.json` literals in a bench source (CI `.ci.json`
+/// variants excluded — those are derived artifacts, not targets).
+fn extract_manifest_names(src: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let bytes = src.as_bytes();
+    let mut i = 0usize;
+    while let Some(pos) = src[i..].find("BENCH_") {
+        let start = i + pos;
+        let mut end = start;
+        while end < bytes.len()
+            && (bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_' || bytes[end] == b'.')
+        {
+            end += 1;
+        }
+        let cand = &src[start..end];
+        if cand.ends_with(".json") && !cand.ends_with(".ci.json") && !out.contains(&cand.to_string())
+        {
+            out.push(cand.to_string());
+        }
+        i = end.max(start + 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs() -> BenchManifestInputs {
+        BenchManifestInputs {
+            bench_jsons: vec![(
+                "BENCH_ok.json".to_string(),
+                "{\"measured\": true, \"x\": 1}".to_string(),
+            )],
+            bench_sources: vec![(
+                "ok.rs".to_string(),
+                "const OUT: &str = \"BENCH_ok.json\";".to_string(),
+            )],
+            experiments_md: "| BENCH_ok | cargo bench ok |".to_string(),
+            ci_yaml: "run: cargo bench ok # BENCH_ok.ci.json".to_string(),
+        }
+    }
+
+    #[test]
+    fn fully_wired_manifest_is_clean() {
+        let mut findings = Vec::new();
+        assert_eq!(check(&inputs(), &mut findings), 1);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn orphaned_manifest_fires_three_ways() {
+        let mut inp = inputs();
+        inp.bench_jsons.push(("BENCH_orphan.json".to_string(), "{}".to_string()));
+        let mut findings = Vec::new();
+        check(&inp, &mut findings);
+        let about_orphan: Vec<_> =
+            findings.iter().filter(|f| f.file == "BENCH_orphan.json").collect();
+        // no writer, undocumented, no CI job, plus the measured warning.
+        assert_eq!(about_orphan.len(), 4, "{about_orphan:?}");
+    }
+
+    #[test]
+    fn bench_writing_a_missing_manifest_fires() {
+        let mut inp = inputs();
+        inp.bench_sources
+            .push(("stray.rs".to_string(), "let p = \"BENCH_missing.json\";".to_string()));
+        let mut findings = Vec::new();
+        check(&inp, &mut findings);
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("BENCH_missing.json"));
+    }
+
+    #[test]
+    fn modeled_targets_warn_but_do_not_gate() {
+        let mut inp = inputs();
+        inp.bench_jsons[0].1 = "{\"measured\": false}".to_string();
+        let mut findings = Vec::new();
+        check(&inp, &mut findings);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].severity, crate::analysis::report::Severity::Warning);
+    }
+
+    #[test]
+    fn ci_json_variants_are_not_targets() {
+        assert_eq!(
+            extract_manifest_names("\"BENCH_a.json\" \"BENCH_b.ci.json\" BENCH_a.json"),
+            vec!["BENCH_a.json".to_string()]
+        );
+    }
+}

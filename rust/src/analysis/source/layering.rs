@@ -1,0 +1,205 @@
+//! Layering pass: the allowed inter-module dependency DAG, plus the PR-1
+//! façade invariant that nothing outside `planner/` constructs
+//! [`crate::heuristics::SchedulerMetadata`].
+//!
+//! The architecture stacks (DESIGN.md §Static analysis draws the full
+//! picture): `util` and `heuristics` at the bottom with no internal
+//! dependencies, `planner` above `heuristics`, `sim` above both, the
+//! serving stack (`runtime` → `backend` → `coordinator` → `workload`)
+//! above those, and `evolve` / `bench_harness` / `cluster` / `analysis`
+//! at the top. Two *documented back-edges* exist and are part of the
+//! allowed set but excluded from the acyclicity order:
+//!
+//! * `planner → sim` — the registry's `extended` factory tunes its table
+//!   against the target device's simulator.
+//! * `planner → evolve` — `PlanSource::Genome` embeds the evolved rule
+//!   DSL.
+//!
+//! Test regions (`#[cfg(test)]` / `#[test]`) are exempt: tests routinely
+//! reach across layers to assert end-to-end behavior. The façade rule has
+//! no test exemption — even tests must build `SchedulerMetadata` through
+//! a [`crate::planner::Planner`] — with the single exception of the
+//! defining file and `planner/` itself.
+
+use crate::analysis::report::Finding;
+
+use super::model::SourceSet;
+
+/// Pass name in findings.
+pub const PASS: &str = "layering";
+
+/// Modules in bottom-up order. The position is the topological rank used
+/// by the self-check: every allowed edge (minus documented back-edges)
+/// must point from a higher-ranked module to a lower-ranked one.
+pub const MODULE_ORDER: &[&str] = &[
+    "util",
+    "heuristics",
+    "planner",
+    "sim",
+    "runtime",
+    "backend",
+    "coordinator",
+    "workload",
+    "evolve",
+    "bench_harness",
+    "cluster",
+    "analysis",
+];
+
+/// Allowed dependency edges `(from, to…)`. Modules absent from the list
+/// (`lib`, `main`) are unrestricted: `lib.rs` only declares the tree and
+/// the binary crate addresses it as `fa3_split::`, not `crate::`.
+pub const ALLOWED: &[(&str, &[&str])] = &[
+    ("util", &[]),
+    ("heuristics", &[]),
+    ("runtime", &["util"]),
+    ("planner", &["heuristics", "util", "sim", "evolve"]),
+    ("sim", &["heuristics", "planner", "util"]),
+    ("evolve", &["heuristics", "planner", "sim", "util", "workload"]),
+    ("workload", &["coordinator", "heuristics", "util"]),
+    ("backend", &["heuristics", "planner", "runtime", "sim", "util"]),
+    ("coordinator", &["backend", "heuristics", "planner", "util"]),
+    ("cluster", &["backend", "coordinator", "heuristics", "planner", "util", "workload"]),
+    ("bench_harness", &["evolve", "heuristics", "planner", "sim", "util", "workload"]),
+    ("analysis", &["heuristics", "planner", "util"]),
+];
+
+/// The documented back-edges: allowed, but exempt from the topological
+/// self-check (each carries a design justification above).
+pub const BACK_EDGES: &[(&str, &str)] = &[("planner", "sim"), ("planner", "evolve")];
+
+/// The façade type and where constructing it is legal: `planner/` (the
+/// façade) and the defining file's own impl/combinators.
+const FACADE_TYPE: &str = "SchedulerMetadata";
+const FACADE_ALLOWED_PREFIX: &str = "planner/";
+const FACADE_DEFINING_FILE: &str = "heuristics/metadata.rs";
+
+fn allowed_targets(module: &str) -> Option<&'static [&'static str]> {
+    ALLOWED.iter().find(|(m, _)| *m == module).map(|(_, t)| *t)
+}
+
+/// Run the pass. Returns the number of non-test use edges examined.
+pub fn check(set: &SourceSet, findings: &mut Vec<Finding>) -> usize {
+    // Self-check: a config edit that turns the allowed set cyclic (minus
+    // documented back-edges) is itself a finding, so the DAG stays a DAG.
+    for &(from, targets) in ALLOWED {
+        for &to in targets {
+            if BACK_EDGES.contains(&(from, to)) {
+                continue;
+            }
+            let rank = |m: &str| MODULE_ORDER.iter().position(|x| *x == m);
+            match (rank(from), rank(to)) {
+                (Some(rf), Some(rt)) if rf > rt => {}
+                _ => findings.push(Finding::error(
+                    PASS,
+                    "analysis/source/layering.rs",
+                    0,
+                    format!(
+                        "allowed edge {from} -> {to} is not downward in MODULE_ORDER \
+                         (add a documented back-edge or reorder)"
+                    ),
+                )),
+            }
+        }
+    }
+
+    let mut edges = 0usize;
+    for fm in &set.files {
+        let Some(targets) = allowed_targets(&fm.module) else {
+            continue; // lib/main: unrestricted
+        };
+        for u in &fm.uses {
+            if u.in_test || u.target == fm.module {
+                continue;
+            }
+            // Only module names are layering edges; `crate::SomeItem`
+            // (a root re-export) is not a module dependency.
+            if !MODULE_ORDER.contains(&u.target.as_str()) {
+                continue;
+            }
+            edges += 1;
+            if !targets.contains(&u.target.as_str()) {
+                findings.push(Finding::error(
+                    PASS,
+                    fm.path.as_str(),
+                    u.line,
+                    format!(
+                        "dependency edge {} -> {} is not in the allowed layering DAG",
+                        fm.module, u.target
+                    ),
+                ));
+            }
+        }
+        // Façade exclusivity: SchedulerMetadata literals outside planner/.
+        for site in &fm.literal_sites {
+            let last = site.path.rsplit("::").next().unwrap_or(&site.path);
+            if last == FACADE_TYPE
+                && !fm.path.starts_with(FACADE_ALLOWED_PREFIX)
+                && fm.path != FACADE_DEFINING_FILE
+            {
+                findings.push(Finding::error(
+                    PASS,
+                    fm.path.as_str(),
+                    site.line,
+                    format!(
+                        "{FACADE_TYPE} constructed outside the planner facade \
+                         (build plans via crate::planner::Planner)"
+                    ),
+                ));
+            }
+        }
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowed_set_is_a_dag_modulo_documented_back_edges() {
+        let set = SourceSet::from_files(&[]);
+        let mut findings = Vec::new();
+        check(&set, &mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn cross_layer_edge_fires() {
+        let set = SourceSet::from_files(&[(
+            "heuristics/bad.rs",
+            "use crate::coordinator::Engine;\n",
+        )]);
+        let mut findings = Vec::new();
+        check(&set, &mut findings);
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("heuristics -> coordinator"));
+    }
+
+    #[test]
+    fn test_regions_are_exempt() {
+        let set = SourceSet::from_files(&[(
+            "heuristics/ok.rs",
+            "#[cfg(test)]\nmod tests {\n    use crate::coordinator::Engine;\n}\n",
+        )]);
+        let mut findings = Vec::new();
+        check(&set, &mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn facade_exclusivity_fires_outside_planner() {
+        let bad = "fn f() { let m = SchedulerMetadata { shape, num_splits: 1 }; }\n";
+        let set = SourceSet::from_files(&[("sim/bad.rs", bad)]);
+        let mut findings = Vec::new();
+        check(&set, &mut findings);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("facade"));
+
+        // Same construction inside planner/ is the façade's own right.
+        let set = SourceSet::from_files(&[("planner/mod.rs", bad)]);
+        let mut findings = Vec::new();
+        check(&set, &mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

@@ -1,0 +1,336 @@
+//! Hand-rolled Rust lexer for the source passes.
+//!
+//! This is not a compiler front end: it produces the *token stream the
+//! lint passes need* — identifiers, numbers, and punctuation with line
+//! numbers — with comments, string literals, char literals, and lifetimes
+//! stripped, so the passes never match text inside a comment or a string.
+//! The one thing comments carry out of the lexer is `// pallas-lint:`
+//! marker [`Directive`]s (doc comments are excluded: `///`-rendered
+//! examples must not plant live markers).
+//!
+//! Multi-character operators the passes care about (`::`, `->`, `=>`,
+//! `..`, `..=`) are fused into single tokens; everything else is emitted
+//! one character at a time. Nested block comments, raw strings
+//! (`r"…"`/`r#"…"#`/byte variants), and escaped char literals are handled;
+//! lifetimes (`'a`) are distinguished from char literals (`'a'`) by the
+//! trailing quote.
+
+/// Token class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (the passes treat keywords by name).
+    Ident,
+    /// Numeric literal (value never inspected, only skipped).
+    Num,
+    /// Punctuation: single char, or one of the fused operators.
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tok {
+    /// Class of the token.
+    pub kind: TokKind,
+    /// Exact source text.
+    pub text: String,
+    /// 1-based line number.
+    pub line: usize,
+}
+
+impl Tok {
+    /// Whether this token's text equals `s` (kind-agnostic convenience).
+    pub fn is(&self, s: &str) -> bool {
+        self.text == s
+    }
+
+    /// Whether this is an identifier token.
+    pub fn is_ident(&self) -> bool {
+        self.kind == TokKind::Ident
+    }
+
+    /// Whether this identifier starts with an uppercase letter (type-like).
+    pub fn is_type_like(&self) -> bool {
+        self.kind == TokKind::Ident
+            && self.text.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+    }
+}
+
+/// A `// pallas-lint:` comment directive (text after the colon, trimmed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Directive {
+    /// 1-based line the comment sits on.
+    pub line: usize,
+    /// Directive body, e.g. `no_alloc` or `allow(no_alloc): reason`.
+    pub text: String,
+}
+
+/// The lexer's output: the stripped token stream plus marker directives.
+#[derive(Debug, Clone, Default)]
+pub struct LexOutput {
+    /// Tokens with comments/strings/chars/lifetimes removed.
+    pub toks: Vec<Tok>,
+    /// `pallas-lint` directives harvested from ordinary `//` comments.
+    pub directives: Vec<Directive>,
+}
+
+const MARKER: &str = "pallas-lint:";
+
+/// Lex `src` into tokens + directives. Never fails: unterminated
+/// constructs are consumed to end-of-input (the passes then simply see a
+/// shorter stream; rustc owns real syntax-error reporting).
+pub fn lex(src: &str) -> LexOutput {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = LexOutput::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment (and directive harvesting).
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            let body: String = chars[start..i].iter().collect();
+            let is_doc = body.starts_with("///") || body.starts_with("//!");
+            if !is_doc {
+                if let Some(pos) = body.find(MARKER) {
+                    out.directives.push(Directive {
+                        line,
+                        text: body[pos + MARKER.len()..].trim().to_string(),
+                    });
+                }
+            }
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"…" / r#"…"# (and br variants).
+        if let Some(skip) = raw_string_open(&chars, i) {
+            let hashes = skip;
+            i += hashes + 1 + if chars[i] == 'b' { 2 } else { 1 }; // past r#*"
+            loop {
+                if i >= n {
+                    break;
+                }
+                if chars[i] == '\n' {
+                    line += 1;
+                }
+                if chars[i] == '"' && closes_raw(&chars, i, hashes) {
+                    i += 1 + hashes;
+                    break;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // Plain or byte string.
+        if c == '"' || (c == 'b' && i + 1 < n && chars[i + 1] == '"') {
+            i += if c == 'b' { 2 } else { 1 };
+            while i < n {
+                if chars[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '\n' {
+                    line += 1;
+                }
+                if chars[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // Escaped char literal: consume to closing quote.
+                i += 2;
+                while i < n && chars[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' {
+                i += 3; // 'x'
+                continue;
+            }
+            // Lifetime: consume the label, emit nothing.
+            i += 1;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: chars[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_' || chars[i] == '.') {
+                // `0..4` is a range, not part of the number.
+                if chars[i] == '.' && i + 1 < n && chars[i + 1] == '.' {
+                    break;
+                }
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Num,
+                text: chars[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Fused operators first, then single chars.
+        let mut emitted = false;
+        for op in ["::", "->", "=>", "..=", ".."] {
+            if matches_at(&chars, i, op) {
+                out.toks.push(Tok { kind: TokKind::Punct, text: op.to_string(), line });
+                i += op.len();
+                emitted = true;
+                break;
+            }
+        }
+        if !emitted {
+            out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// If position `i` opens a raw string (`r"`, `r#"`, `br#"` …), return the
+/// number of hashes; else None.
+fn raw_string_open(chars: &[char], i: usize) -> Option<usize> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// Whether the `"` at position `i` is followed by `hashes` `#` chars.
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+fn matches_at(chars: &[char], i: usize, op: &str) -> bool {
+    op.chars().enumerate().all(|(k, c)| chars.get(i + k) == Some(&c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strips_comments_strings_chars_lifetimes() {
+        let src = r##"
+// comment with Foo { bar }
+/* block /* nested */ still comment */
+let s = "string with } and \" escape";
+let r = r#"raw " string"#;
+let c = 'x'; let esc = '\n';
+fn f<'a>(x: &'a str) {}
+"##;
+        let t = texts(src);
+        assert!(!t.contains(&"Foo".to_string()), "{t:?}");
+        assert!(!t.contains(&"string".to_string()));
+        assert!(!t.contains(&"raw".to_string()));
+        assert!(!t.contains(&"a".to_string()), "lifetime label leaked: {t:?}");
+        assert!(t.contains(&"fn".to_string()));
+    }
+
+    #[test]
+    fn fuses_multichar_operators() {
+        let t = texts("a::b -> c => 0..4 ..=");
+        assert_eq!(t, vec!["a", "::", "b", "->", "c", "=>", "0", "..", "4", "..="]);
+    }
+
+    #[test]
+    fn tracks_lines_through_skipped_regions() {
+        let out = lex("let a = \"x\ny\";\n/* c\nc */ b");
+        let b = out.toks.last().unwrap();
+        assert_eq!(b.text, "b");
+        assert_eq!(b.line, 4);
+    }
+
+    #[test]
+    fn harvests_directives_but_not_from_doc_comments() {
+        let src = "\
+// pallas-lint: no_alloc
+fn hot() {}
+/// pallas-lint: no_alloc  (doc comment: inert)
+fn cold() {}
+// pallas-lint: allow(no_alloc): justified
+";
+        let out = lex(src);
+        let d: Vec<(usize, &str)> =
+            out.directives.iter().map(|d| (d.line, d.text.as_str())).collect();
+        assert_eq!(d, vec![(1, "no_alloc"), (5, "allow(no_alloc): justified")]);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges() {
+        let t = texts("for i in 1..=16 { 4.0 }");
+        assert!(t.contains(&"1".to_string()));
+        assert!(t.contains(&"..=".to_string()));
+        assert!(t.contains(&"4.0".to_string()));
+    }
+}

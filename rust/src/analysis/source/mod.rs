@@ -1,0 +1,70 @@
+//! Source half of pallas-lint: lexer → module model → four passes.
+//!
+//! * [`lexer`] — hand-rolled token stream with comments/strings stripped
+//!   and `pallas-lint` directives harvested.
+//! * [`model`] — per-file [`model::FileModel`]: use-graph edges, struct
+//!   definitions + fields, function spans, literal sites, directives.
+//! * [`layering`] — allowed inter-module dependency DAG + the
+//!   `SchedulerMetadata` façade-exclusivity rule.
+//! * [`no_alloc`] — allocating idioms denied inside marked hot regions.
+//! * [`struct_ripple`] — literal/pattern sites vs definition field lists.
+//! * [`bench_manifest`] — `BENCH_*.json` ↔ bench binary ↔ docs ↔ CI
+//!   wiring.
+//!
+//! Everything here is plain `std`: no proc macros, no syn, no external
+//! crates — the tool must run in the same offline container as the rest
+//! of the repo.
+
+pub mod bench_manifest;
+pub mod layering;
+pub mod lexer;
+pub mod model;
+pub mod no_alloc;
+pub mod struct_ripple;
+
+use crate::analysis::report::{Finding, SourceStats};
+
+pub use model::SourceSet;
+
+/// Run the three source-tree passes (layering, no-alloc, struct-ripple)
+/// over `set`, appending findings and returning scan counters. The
+/// bench-manifest pass has different inputs — run it separately via
+/// [`bench_manifest::check`].
+pub fn run_source_passes(set: &SourceSet, findings: &mut Vec<Finding>) -> SourceStats {
+    let use_edges = layering::check(set, findings);
+    let alloc = no_alloc::check(set, findings);
+    let literal_sites = struct_ripple::check(set, findings);
+    SourceStats {
+        files_scanned: set.files.len(),
+        struct_defs: set.files.iter().map(|f| f.struct_defs.len()).sum(),
+        literal_sites,
+        use_edges,
+        no_alloc_regions: alloc.regions,
+        suppressed: alloc.suppressed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_set_reports_counts_without_findings() {
+        let set = SourceSet::from_files(&[(
+            "planner/good.rs",
+            "use crate::heuristics::tiles::DecodeShape;\n\
+             pub struct P { pub a: usize }\n\
+             // pallas-lint: no_alloc\n\
+             fn hot(p: &mut P) { p.a += 1; }\n\
+             fn make() -> P { P { a: 0 } }\n",
+        )]);
+        let mut findings = Vec::new();
+        let stats = run_source_passes(&set, &mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(stats.files_scanned, 1);
+        assert_eq!(stats.struct_defs, 1);
+        assert_eq!(stats.literal_sites, 1);
+        assert_eq!(stats.use_edges, 1);
+        assert_eq!(stats.no_alloc_regions, 1);
+    }
+}

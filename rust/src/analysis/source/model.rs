@@ -1,0 +1,675 @@
+//! The module model: everything the source passes need, extracted from
+//! one lexed file.
+//!
+//! A [`FileModel`] records, per file: the top-level module it belongs to,
+//! the non-test `crate::<module>` use edges (for layering), struct/enum
+//! definitions with their field lists and struct-literal/pattern sites
+//! (for struct-ripple and the `SchedulerMetadata` exclusivity rule),
+//! function body spans (so `no_alloc` markers attach to the right
+//! region), and the raw `pallas-lint` directives.
+//!
+//! Heuristics, and why they are sound for this tree (each was debugged
+//! against all of `rust/src/**` — see `tests/static_analysis.rs` for the
+//! self-clean gate that keeps them honest):
+//!
+//! * **Test regions**: an `#[cfg(test)]` or `#[test]` attribute marks the
+//!   next item's brace-delimited body as test-only; layering ignores use
+//!   edges inside them (tests may reach across layers), while
+//!   struct-ripple still checks their literal sites.
+//! * **Struct-literal sites**: a type-like path followed by `{` is a
+//!   site, unless the token *before the whole path* (after absorbing
+//!   `&`/`mut` and lowercase path segments) is one of
+//!   `impl for dyn mod struct enum union trait -> where as use fn`, which
+//!   are type positions (`-> &crate::x::Foo {` is a return type, not a
+//!   construction). `where`-clauses suppress detection until their `{`.
+//!   Unknown type names are skipped by struct-ripple, so consts and
+//!   foreign types cannot false-positive.
+//! * **Field extraction**: at nesting depth 0 inside the braces, an
+//!   identifier followed by `:`, `,` or `}` is a field (shorthand
+//!   included); `..` marks the site non-exhaustive (membership check
+//!   only). This covers literals *and* patterns — both must name real
+//!   fields.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{lex, Directive, Tok};
+
+/// One `crate::<target>` dependency edge out of a file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UseEdge {
+    /// Top-level module the path enters (`planner` in `crate::planner::X`).
+    pub target: String,
+    /// 1-based line of the edge.
+    pub line: usize,
+    /// Whether the edge sits inside a `#[cfg(test)]` / `#[test]` region.
+    pub in_test: bool,
+}
+
+/// A struct definition (or enum struct-variant) with named fields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StructDef {
+    /// `Name` for structs, `Enum::Variant` for enum struct-variants.
+    pub name: String,
+    /// Declared field names.
+    pub fields: Vec<String>,
+    /// 1-based line of the definition.
+    pub line: usize,
+}
+
+/// A function body span in the token stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FnSpan {
+    /// Function name.
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    /// Token index of the body's opening `{`.
+    pub body_start: usize,
+    /// Token index of the matching `}`.
+    pub body_end: usize,
+}
+
+/// A struct-literal or struct-pattern site.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LiteralSite {
+    /// The path as written, segments joined with `::`.
+    pub path: String,
+    /// 1-based line of the opening `{`.
+    pub line: usize,
+    /// Field names used at the site.
+    pub fields: Vec<String>,
+    /// Whether a `..` rest/base was present (non-exhaustive site).
+    pub has_rest: bool,
+    /// Whether the site sits inside a test region.
+    pub in_test: bool,
+}
+
+/// Everything the passes need to know about one source file.
+#[derive(Debug, Clone, Default)]
+pub struct FileModel {
+    /// Path relative to the source root, e.g. `planner/cursor.rs`.
+    pub path: String,
+    /// Top-level module: first path component, or the file stem for files
+    /// directly in the root (`lib.rs` → `lib`, `main.rs` → `main`).
+    pub module: String,
+    /// Dependency edges (`use crate::…` declarations and inline paths).
+    pub uses: Vec<UseEdge>,
+    /// Struct definitions and enum struct-variants.
+    pub struct_defs: Vec<StructDef>,
+    /// Function body spans, in source order.
+    pub fn_spans: Vec<FnSpan>,
+    /// Struct-literal/pattern sites.
+    pub literal_sites: Vec<LiteralSite>,
+    /// Raw `pallas-lint` directives.
+    pub directives: Vec<Directive>,
+    /// The stripped token stream (the `no_alloc` pass re-scans fn bodies).
+    pub toks: Vec<Tok>,
+}
+
+/// The top-level module a source-root-relative path belongs to.
+pub fn module_of(path: &str) -> String {
+    match path.split_once('/') {
+        Some((first, _)) => first.to_string(),
+        None => path.strip_suffix(".rs").unwrap_or(path).to_string(),
+    }
+}
+
+/// Index of the `}` matching the `{` at `open` (or `]`/`)` via the
+/// open/close pair). Returns the last token index if unbalanced.
+pub fn find_matching(toks: &[Tok], open: usize, open_ch: &str, close_ch: &str) -> usize {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is(open_ch) {
+            depth += 1;
+        } else if t.is(close_ch) {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Build the model for one file.
+pub fn build_model(path: &str, src: &str) -> FileModel {
+    let lexed = lex(src);
+    let toks = lexed.toks;
+    let n = toks.len();
+    let mut fm = FileModel {
+        path: path.to_string(),
+        module: module_of(path),
+        directives: lexed.directives,
+        ..FileModel::default()
+    };
+
+    let test_spans = collect_test_spans(&toks);
+    let in_test = |idx: usize| test_spans.iter().any(|&(a, b)| a <= idx && idx <= b);
+
+    collect_uses(&toks, &in_test, &mut fm);
+    collect_defs(&toks, &mut fm);
+    collect_fn_spans(&toks, &mut fm);
+    collect_literal_sites(&toks, &in_test, &mut fm);
+
+    fm.toks = toks;
+    fm
+}
+
+/// Token spans of items annotated `#[cfg(test)]` or `#[test]`.
+fn collect_test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let n = toks.len();
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if toks[i].is("#") && i + 1 < n && toks[i + 1].is("[") {
+            let close = find_matching(toks, i + 1, "[", "]");
+            let attr: Vec<&str> = toks[i + 2..close].iter().map(|t| t.text.as_str()).collect();
+            let is_test_attr = attr.first() == Some(&"test")
+                || (attr.first() == Some(&"cfg") && attr.contains(&"test"));
+            if is_test_attr {
+                // Skip any further attributes, then span the item body.
+                let mut j = close + 1;
+                while j + 1 < n && toks[j].is("#") && toks[j + 1].is("[") {
+                    j = find_matching(toks, j + 1, "[", "]") + 1;
+                }
+                let mut k = j;
+                while k < n && !toks[k].is("{") && !toks[k].is(";") {
+                    k += 1;
+                }
+                if k < n && toks[k].is("{") {
+                    spans.push((i, find_matching(toks, k, "{", "}")));
+                }
+            }
+            i = close + 1;
+        } else {
+            i += 1;
+        }
+    }
+    spans
+}
+
+fn collect_uses(toks: &[Tok], in_test: &dyn Fn(usize) -> bool, fm: &mut FileModel) {
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if toks[i].is_ident() && toks[i].is("use") {
+            // Walk the whole decl (handles `use crate::{a::x, b::y};`),
+            // collecting every `crate :: <ident>` top segment within it.
+            let start = i;
+            let mut depth = 0i64;
+            let mut j = i + 1;
+            while j < n && !(toks[j].is(";") && depth == 0) {
+                if toks[j].is("{") {
+                    depth += 1;
+                }
+                if toks[j].is("}") {
+                    depth -= 1;
+                }
+                if toks[j].is("crate") && j + 2 < n && toks[j + 1].is("::") {
+                    if toks[j + 2].is_ident() {
+                        fm.uses.push(UseEdge {
+                            target: toks[j + 2].text.clone(),
+                            line: toks[j].line,
+                            in_test: in_test(start),
+                        });
+                    } else if toks[j + 2].is("{") {
+                        // `use crate::{a::X, b::Y}`: one edge per group
+                        // item's first segment.
+                        let gend = find_matching(toks, j + 2, "{", "}");
+                        let mut gdepth = 0i64;
+                        let mut head = true;
+                        for g in j + 2..gend {
+                            if toks[g].is("{") {
+                                gdepth += 1;
+                            } else if toks[g].is("}") {
+                                gdepth -= 1;
+                            } else if toks[g].is(",") && gdepth == 1 {
+                                head = true;
+                            } else if head && gdepth == 1 && toks[g].is_ident() {
+                                fm.uses.push(UseEdge {
+                                    target: toks[g].text.clone(),
+                                    line: toks[g].line,
+                                    in_test: in_test(start),
+                                });
+                                head = false;
+                            }
+                        }
+                    }
+                }
+                j += 1;
+            }
+            i = j + 1;
+            continue;
+        }
+        // Inline `crate::x` path outside a use decl (`pub(crate)` has `(`
+        // before the keyword and no `::` after, so it never matches).
+        if toks[i].is("crate") && i + 2 < n && toks[i + 1].is("::") && toks[i + 2].is_ident() {
+            fm.uses.push(UseEdge {
+                target: toks[i + 2].text.clone(),
+                line: toks[i].line,
+                in_test: in_test(i),
+            });
+        }
+        i += 1;
+    }
+}
+
+fn collect_defs(toks: &[Tok], fm: &mut FileModel) {
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        let kw_struct = toks[i].is_ident() && toks[i].is("struct");
+        let kw_enum = toks[i].is_ident() && toks[i].is("enum");
+        if (kw_struct || kw_enum) && i + 1 < n && toks[i + 1].is_ident() {
+            let name = toks[i + 1].text.clone();
+            let line = toks[i].line;
+            let mut j = skip_generics(toks, i + 2);
+            while j < n && !toks[j].is("{") && !toks[j].is("(") && !toks[j].is(";") {
+                j += 1;
+            }
+            if j < n && toks[j].is("{") {
+                let end = find_matching(toks, j, "{", "}");
+                if kw_struct {
+                    fm.struct_defs.push(StructDef {
+                        name,
+                        fields: parse_def_fields(toks, j, end),
+                        line,
+                    });
+                } else {
+                    collect_enum_variants(toks, j, end, &name, fm);
+                }
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Skip a `<…>` generic parameter list starting at `j`, if present.
+fn skip_generics(toks: &[Tok], j: usize) -> usize {
+    if j >= toks.len() || !toks[j].is("<") {
+        return j;
+    }
+    let mut depth = 0i64;
+    let mut k = j;
+    while k < toks.len() {
+        if toks[k].is("<") {
+            depth += 1;
+        }
+        if toks[k].is(">") {
+            depth -= 1;
+        }
+        k += 1;
+        if depth == 0 {
+            break;
+        }
+    }
+    k
+}
+
+fn collect_enum_variants(toks: &[Tok], open: usize, end: usize, ename: &str, fm: &mut FileModel) {
+    let mut k = open + 1;
+    while k < end {
+        if toks[k].is("#") && k + 1 < end && toks[k + 1].is("[") {
+            k = find_matching(toks, k + 1, "[", "]") + 1;
+            continue;
+        }
+        if toks[k].is_type_like() {
+            let vname = toks[k].text.clone();
+            let vline = toks[k].line;
+            if k + 1 < end && toks[k + 1].is("{") {
+                let vend = find_matching(toks, k + 1, "{", "}");
+                fm.struct_defs.push(StructDef {
+                    name: format!("{ename}::{vname}"),
+                    fields: parse_def_fields(toks, k + 1, vend),
+                    line: vline,
+                });
+                k = vend + 1;
+                continue;
+            }
+            if k + 1 < end && toks[k + 1].is("(") {
+                k = find_matching(toks, k + 1, "(", ")") + 1;
+                continue;
+            }
+        }
+        k += 1;
+    }
+}
+
+/// Field names of a struct-def body (`{` at `open`, `}` at `end`).
+fn parse_def_fields(toks: &[Tok], open: usize, end: usize) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut k = open + 1;
+    while k < end {
+        if toks[k].is("#") && k + 1 < end && toks[k + 1].is("[") {
+            k = find_matching(toks, k + 1, "[", "]") + 1;
+            continue;
+        }
+        if toks[k].is("pub") {
+            k += 1;
+            if k < end && toks[k].is("(") {
+                k = find_matching(toks, k, "(", ")") + 1;
+            }
+            continue;
+        }
+        if toks[k].is_ident() && k + 1 < end && toks[k + 1].is(":") {
+            fields.push(toks[k].text.clone());
+            // Skip the type until a top-level `,`.
+            k += 2;
+            let mut depth = 0i64;
+            while k < end {
+                let t = &toks[k];
+                if t.is("(") || t.is("[") || t.is("{") || t.is("<") {
+                    depth += 1;
+                } else if t.is(")") || t.is("]") || t.is("}") || t.is(">") {
+                    depth -= 1;
+                } else if t.is(",") && depth <= 0 {
+                    k += 1;
+                    break;
+                }
+                k += 1;
+            }
+            continue;
+        }
+        k += 1;
+    }
+    fields
+}
+
+fn collect_fn_spans(toks: &[Tok], fm: &mut FileModel) {
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if toks[i].is_ident() && toks[i].is("fn") && i + 1 < n && toks[i + 1].is_ident() {
+            let name = toks[i + 1].text.clone();
+            let line = toks[i].line;
+            // Find the body `{`: first one at paren depth 0 after the
+            // signature; a `;` first means a bodiless trait method.
+            let mut j = i + 2;
+            let mut pdepth = 0i64;
+            let mut body = None;
+            while j < n {
+                let t = &toks[j];
+                if t.is("(") {
+                    pdepth += 1;
+                } else if t.is(")") {
+                    pdepth -= 1;
+                } else if t.is(";") && pdepth == 0 {
+                    break;
+                } else if t.is("{") && pdepth == 0 {
+                    body = Some(j);
+                    break;
+                }
+                j += 1;
+            }
+            if let Some(open) = body {
+                fm.fn_spans.push(FnSpan {
+                    name,
+                    line,
+                    body_start: open,
+                    body_end: find_matching(toks, open, "{", "}"),
+                });
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Tokens that, found immediately before a type-like path + `{`, mark a
+/// type position rather than a construction/pattern site.
+const SITE_EXCLUDE_PREV: &[&str] = &[
+    "impl", "for", "dyn", "mod", "struct", "enum", "union", "trait", "->", "where", "as", "use",
+    "fn",
+];
+
+fn collect_literal_sites(toks: &[Tok], in_test: &dyn Fn(usize) -> bool, fm: &mut FileModel) {
+    let n = toks.len();
+    let mut i = 0usize;
+    let mut where_active = false;
+    while i < n {
+        let t = &toks[i];
+        if t.is_ident() && t.is("where") {
+            where_active = true;
+        } else if where_active && (t.is("{") || t.is(";")) {
+            where_active = false;
+        }
+        if where_active {
+            i += 1;
+            continue;
+        }
+        if t.is_type_like() && !t.is("Self") {
+            // Extend the path forward over `:: TypeLike` segments.
+            let mut j = i;
+            let mut path = toks[j].text.clone();
+            while j + 2 < n && toks[j + 1].is("::") && toks[j + 2].is_type_like() {
+                j += 2;
+                path.push_str("::");
+                path.push_str(&toks[j].text);
+            }
+            // Optional turbofish.
+            let mut k = j + 1;
+            if k + 1 < n && toks[k].is("::") && toks[k + 1].is("<") {
+                k = skip_generics(toks, k + 1);
+            }
+            if k < n && toks[k].is("{") && !is_type_position(toks, i) {
+                let end = find_matching(toks, k, "{", "}");
+                let (fields, has_rest) = parse_literal_fields(toks, k, end);
+                fm.literal_sites.push(LiteralSite {
+                    path,
+                    line: toks[k].line,
+                    fields,
+                    has_rest,
+                    in_test: in_test(i),
+                });
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+/// Whether the path whose first segment starts at token `i` sits in a
+/// type position: walk backward over the full path prefix (lowercase
+/// segments, `crate`/`super`/`self`) and any `&`/`mut`, then test the
+/// preceding token against [`SITE_EXCLUDE_PREV`].
+fn is_type_position(toks: &[Tok], i: usize) -> bool {
+    let mut p = i;
+    while p >= 2 && toks[p - 1].is("::") && toks[p - 2].is_ident() {
+        p -= 2;
+    }
+    while p >= 1 && (toks[p - 1].is("&") || toks[p - 1].is("mut")) {
+        p -= 1;
+    }
+    p >= 1 && SITE_EXCLUDE_PREV.contains(&toks[p - 1].text.as_str())
+}
+
+/// Field names used at a literal/pattern site (`{` at `open`).
+fn parse_literal_fields(toks: &[Tok], open: usize, end: usize) -> (Vec<String>, bool) {
+    let mut fields = Vec::new();
+    let mut has_rest = false;
+    let mut depth = 0i64;
+    let mut expect_field = true;
+    let mut k = open + 1;
+    while k < end {
+        let t = &toks[k];
+        if t.is("(") || t.is("[") || t.is("{") {
+            depth += 1;
+        } else if t.is(")") || t.is("]") || t.is("}") {
+            depth -= 1;
+        } else if depth == 0 {
+            if t.is("..") || t.is("..=") {
+                has_rest = true;
+                expect_field = false;
+            } else if t.is(",") {
+                expect_field = true;
+            } else if expect_field && t.is_ident() {
+                if t.is("ref") || t.is("mut") || t.is("box") {
+                    k += 1;
+                    continue;
+                }
+                let next = toks.get(k + 1);
+                let terminator = match next {
+                    Some(nt) => nt.is(":") || nt.is(",") || nt.is("}"),
+                    None => true,
+                };
+                if terminator {
+                    fields.push(t.text.clone());
+                }
+                expect_field = false;
+            }
+        }
+        k += 1;
+    }
+    (fields, has_rest)
+}
+
+/// A set of analyzed files plus the global definition index.
+#[derive(Debug, Default)]
+pub struct SourceSet {
+    /// Per-file models, in load order.
+    pub files: Vec<FileModel>,
+}
+
+impl SourceSet {
+    /// Build from in-memory `(path, contents)` pairs (fixtures, tests).
+    pub fn from_files(files: &[(&str, &str)]) -> SourceSet {
+        SourceSet { files: files.iter().map(|(p, s)| build_model(p, s)).collect() }
+    }
+
+    /// Walk `src_root` for `.rs` files (sorted, recursive) and build the
+    /// model for each, keyed by root-relative path.
+    pub fn load_dir(src_root: &std::path::Path) -> std::io::Result<SourceSet> {
+        let mut paths = Vec::new();
+        walk(src_root, src_root, &mut paths)?;
+        paths.sort();
+        let mut set = SourceSet::default();
+        for rel in paths {
+            let src = std::fs::read_to_string(src_root.join(&rel))?;
+            set.files.push(build_model(&rel.replace('\\', "/"), &src));
+        }
+        Ok(set)
+    }
+
+    /// Global definition index: struct name (or `Enum::Variant`) → field
+    /// lists of every definition carrying that name.
+    pub fn def_index(&self) -> BTreeMap<&str, Vec<&StructDef>> {
+        let mut idx: BTreeMap<&str, Vec<&StructDef>> = BTreeMap::new();
+        for fm in &self.files {
+            for d in &fm.struct_defs {
+                idx.entry(d.name.as_str()).or_default().push(d);
+            }
+        }
+        idx
+    }
+}
+
+fn walk(
+    root: &std::path::Path,
+    dir: &std::path::Path,
+    out: &mut Vec<String>,
+) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            if let Ok(rel) = path.strip_prefix(root) {
+                out.push(rel.to_string_lossy().to_string());
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+use crate::heuristics::tiles::DecodeShape;
+use crate::{planner::Planner, util::json::Json};
+
+pub struct Thing {
+    pub a: usize,
+    b: Vec<(usize, usize)>,
+}
+
+pub enum Kind {
+    Unit,
+    Tuple(usize),
+    Fields { x: usize, y: usize },
+}
+
+fn build(t: &Thing) -> Thing {
+    let k = Kind::Fields { x: 1, y: 2 };
+    let _ = k;
+    Thing { a: 1, ..*t }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::coordinator::Engine;
+    #[test]
+    fn t() {
+        let Thing { a, .. } = make();
+    }
+}
+"#;
+
+    #[test]
+    fn module_naming() {
+        assert_eq!(module_of("planner/cursor.rs"), "planner");
+        assert_eq!(module_of("lib.rs"), "lib");
+        assert_eq!(module_of("main.rs"), "main");
+    }
+
+    #[test]
+    fn extracts_use_edges_with_testness() {
+        let fm = build_model("planner/x.rs", SAMPLE);
+        let non_test: Vec<&str> =
+            fm.uses.iter().filter(|u| !u.in_test).map(|u| u.target.as_str()).collect();
+        assert_eq!(non_test, vec!["heuristics", "planner", "util"]);
+        let test: Vec<&str> =
+            fm.uses.iter().filter(|u| u.in_test).map(|u| u.target.as_str()).collect();
+        assert_eq!(test, vec!["coordinator"]);
+    }
+
+    #[test]
+    fn extracts_defs_including_enum_variants() {
+        let fm = build_model("planner/x.rs", SAMPLE);
+        let names: Vec<&str> = fm.struct_defs.iter().map(|d| d.name.as_str()).collect();
+        assert_eq!(names, vec!["Thing", "Kind::Fields"]);
+        assert_eq!(fm.struct_defs[0].fields, vec!["a", "b"]);
+        assert_eq!(fm.struct_defs[1].fields, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn extracts_literal_sites_and_patterns() {
+        let fm = build_model("planner/x.rs", SAMPLE);
+        let paths: Vec<(&str, bool)> =
+            fm.literal_sites.iter().map(|s| (s.path.as_str(), s.has_rest)).collect();
+        assert_eq!(
+            paths,
+            vec![("Kind::Fields", false), ("Thing", true), ("Thing", true)]
+        );
+        // The test-module pattern site is marked as test code.
+        assert!(fm.literal_sites[2].in_test);
+    }
+
+    #[test]
+    fn return_types_are_not_literal_sites() {
+        let fm = build_model("a/x.rs", "fn f() -> Foo { g() }\nfn g() -> &'static Bar { h() }");
+        assert!(fm.literal_sites.is_empty(), "{:?}", fm.literal_sites);
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies() {
+        let fm = build_model("a/x.rs", "fn one() { inner(); }\nfn two(a: usize) -> usize { a }");
+        assert_eq!(fm.fn_spans.len(), 2);
+        assert_eq!(fm.fn_spans[0].name, "one");
+        assert_eq!(fm.fn_spans[1].line, 2);
+    }
+}

@@ -1,0 +1,254 @@
+//! No-alloc pass: deny allocating idioms inside `// pallas-lint:
+//! no_alloc` regions.
+//!
+//! A `no_alloc` marker attaches to the next `fn` item at or below it; the
+//! region is that function's lexical body. The pass is the static
+//! counterpart of the runtime `tests/alloc_guard.rs` counter: the guard
+//! proves the steady-state decode loop performs zero heap allocations at
+//! run time, this pass points at the exact line that would break it at
+//! review time. Both cover the same hot path (cursor plan-hit, engine
+//! step loop, decode scheduler, sim backend execute).
+//!
+//! The deny list targets idioms that *construct or copy heap state*:
+//! fresh containers (`Vec::new`, `vec![…]`, `Box::new`, `String::new` /
+//! `from` / `with_capacity`), clones (`.clone()` / `.cloned()` /
+//! `.to_vec()` / `.to_owned()` / `.to_string()`), iterator
+//! materialization (`.collect()`), and formatting (`format!`). Amortized
+//! growth of *caller-owned reused* buffers (`push` / `extend` /
+//! `reserve` into scratch) is deliberately not denied — that is exactly
+//! the pattern the scratch discipline prescribes, and the runtime guard
+//! proves it settles to zero.
+//!
+//! Suppression: `// pallas-lint: allow(no_alloc): <justification>` on the
+//! offending line or the line above. An empty justification is itself a
+//! finding — the point is a reviewed, documented exception (the one in
+//! the tree today: a capacity-0 `Vec::new` placeholder field, which never
+//! touches the heap).
+
+use std::collections::BTreeSet;
+
+use crate::analysis::report::Finding;
+
+use super::model::{FileModel, SourceSet};
+
+/// Pass name in findings.
+pub const PASS: &str = "no_alloc";
+
+/// `Path::segment` pairs that always allocate (or signal a fresh
+/// container entering the hot path).
+const DENY_PATHS: &[(&str, &str)] = &[
+    ("Vec", "new"),
+    ("Vec", "with_capacity"),
+    ("Box", "new"),
+    ("String", "new"),
+    ("String", "from"),
+    ("String", "with_capacity"),
+];
+
+/// Macros that allocate.
+const DENY_MACROS: &[&str] = &["vec", "format"];
+
+/// Methods that allocate or clone heap state.
+const DENY_METHODS: &[&str] =
+    &["collect", "clone", "cloned", "to_string", "to_vec", "to_owned"];
+
+/// Outcome counters for the pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoAllocStats {
+    /// Marked regions checked.
+    pub regions: usize,
+    /// Findings silenced by justified suppressions.
+    pub suppressed: usize,
+}
+
+/// Run the pass over every file.
+pub fn check(set: &SourceSet, findings: &mut Vec<Finding>) -> NoAllocStats {
+    let mut stats = NoAllocStats::default();
+    for fm in &set.files {
+        check_file(fm, findings, &mut stats);
+    }
+    stats
+}
+
+fn check_file(fm: &FileModel, findings: &mut Vec<Finding>, stats: &mut NoAllocStats) {
+    // Suppressions: allow(no_alloc) with a justification covers its own
+    // line and the next one.
+    let mut suppressed_lines: BTreeSet<usize> = BTreeSet::new();
+    for d in &fm.directives {
+        if let Some(rest) = d.text.strip_prefix("allow(") {
+            let Some((pass, tail)) = rest.split_once(')') else {
+                findings.push(Finding::error(
+                    PASS,
+                    fm.path.as_str(),
+                    d.line,
+                    format!("malformed suppression directive: `{}`", d.text),
+                ));
+                continue;
+            };
+            if pass != PASS {
+                continue; // another pass's suppression
+            }
+            let justification = tail.trim_start_matches(':').trim();
+            if justification.is_empty() {
+                findings.push(Finding::error(
+                    PASS,
+                    fm.path.as_str(),
+                    d.line,
+                    "allow(no_alloc) without a justification (write \
+                     `allow(no_alloc): <reason>`)",
+                ));
+                continue;
+            }
+            suppressed_lines.insert(d.line);
+            suppressed_lines.insert(d.line + 1);
+        } else if d.text != "no_alloc" {
+            findings.push(Finding::error(
+                "directive",
+                fm.path.as_str(),
+                d.line,
+                format!("unknown pallas-lint directive: `{}`", d.text),
+            ));
+        }
+    }
+
+    for d in &fm.directives {
+        if d.text != "no_alloc" {
+            continue;
+        }
+        // Attach to the first fn whose `fn` keyword is at/after the marker.
+        let Some(span) = fm.fn_spans.iter().filter(|f| f.line >= d.line).min_by_key(|f| f.line)
+        else {
+            findings.push(Finding::error(
+                PASS,
+                fm.path.as_str(),
+                d.line,
+                "no_alloc marker with no following fn item",
+            ));
+            continue;
+        };
+        stats.regions += 1;
+        scan_region(fm, span.body_start, span.body_end, &span.name, &suppressed_lines, findings, stats);
+    }
+}
+
+fn scan_region(
+    fm: &FileModel,
+    start: usize,
+    end: usize,
+    fn_name: &str,
+    suppressed: &BTreeSet<usize>,
+    findings: &mut Vec<Finding>,
+    stats: &mut NoAllocStats,
+) {
+    let toks = &fm.toks;
+    for k in start..=end.min(toks.len().saturating_sub(1)) {
+        let t = &toks[k];
+        let mut hit: Option<String> = None;
+        if t.is_ident() && k + 2 <= end && toks[k + 1].is("::") && toks[k + 2].is_ident() {
+            let pair = (t.text.as_str(), toks[k + 2].text.as_str());
+            if DENY_PATHS.contains(&pair) {
+                hit = Some(format!("{}::{}", pair.0, pair.1));
+            }
+        }
+        if hit.is_none()
+            && t.is_ident()
+            && DENY_MACROS.contains(&t.text.as_str())
+            && k + 1 <= end
+            && toks[k + 1].is("!")
+        {
+            hit = Some(format!("{}!", t.text));
+        }
+        if hit.is_none()
+            && t.is(".")
+            && k + 1 <= end
+            && toks[k + 1].is_ident()
+            && DENY_METHODS.contains(&toks[k + 1].text.as_str())
+        {
+            hit = Some(format!(".{}()", toks[k + 1].text));
+        }
+        if let Some(idiom) = hit {
+            if suppressed.contains(&t.line) {
+                stats.suppressed += 1;
+            } else {
+                findings.push(Finding::error(
+                    PASS,
+                    fm.path.as_str(),
+                    t.line,
+                    format!("allocating idiom `{idiom}` inside no_alloc region `fn {fn_name}`"),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str) -> (Vec<Finding>, NoAllocStats) {
+        let set = SourceSet::from_files(&[("backend/hot.rs", src)]);
+        let mut findings = Vec::new();
+        let stats = check(&set, &mut findings);
+        (findings, stats)
+    }
+
+    #[test]
+    fn denied_idioms_fire_only_inside_marked_regions() {
+        let src = "\
+// pallas-lint: no_alloc
+fn hot(xs: &[usize]) {
+    let v: Vec<usize> = xs.iter().cloned().collect();
+    let s = format!(\"x\");
+}
+fn cold() { let q = vec![1]; let b = Box::new(2); }
+";
+        let (findings, stats) = run(src);
+        assert_eq!(stats.regions, 1);
+        let idioms: Vec<&str> = findings.iter().map(|f| f.message.as_str()).collect();
+        assert_eq!(findings.len(), 3, "{idioms:?}");
+        assert!(idioms.iter().any(|m| m.contains(".cloned()")));
+        assert!(idioms.iter().any(|m| m.contains(".collect()")));
+        assert!(idioms.iter().any(|m| m.contains("format!")));
+    }
+
+    #[test]
+    fn justified_suppression_silences_and_counts() {
+        let src = "\
+// pallas-lint: no_alloc
+fn hot() {
+    // pallas-lint: allow(no_alloc): capacity-0 placeholder, never allocates
+    let v: Vec<usize> = Vec::new();
+}
+";
+        let (findings, stats) = run(src);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(stats.suppressed, 1);
+    }
+
+    #[test]
+    fn unjustified_suppression_is_a_finding() {
+        let src = "\
+// pallas-lint: no_alloc
+fn hot() {
+    // pallas-lint: allow(no_alloc):
+    let v: Vec<usize> = Vec::new();
+}
+";
+        let (findings, _) = run(src);
+        // The bare allow is one finding; the Vec::new it failed to cover
+        // is another.
+        assert_eq!(findings.len(), 2, "{findings:?}");
+        assert!(findings[0].message.contains("without a justification"));
+    }
+
+    #[test]
+    fn dangling_marker_and_unknown_directive_fire() {
+        let (findings, _) = run("// pallas-lint: no_alloc\nconst X: usize = 1;\n");
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("no following fn"));
+
+        let (findings, _) = run("// pallas-lint: no_allocc\nfn f() {}\n");
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("unknown pallas-lint directive"));
+    }
+}

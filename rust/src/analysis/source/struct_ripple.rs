@@ -1,0 +1,138 @@
+//! Struct-ripple pass: every struct-literal (and struct-pattern) site is
+//! checked against the definition's field list.
+//!
+//! This automates the manual "ripple scan" from earlier PRs: when a
+//! struct gains or loses a field, every construction site must be
+//! revisited. rustc does this too, of course — but only when the
+//! toolchain runs; in the offline container this pass is the first line
+//! of defense, and it additionally covers *patterns* uniformly.
+//!
+//! Semantics, per site:
+//! * With a `..` rest/base: every named field must exist (membership
+//!   check).
+//! * Without `..`: the named fields must cover the definition exactly —
+//!   valid for literals (rustc requires exhaustive construction) and for
+//!   patterns (rustc requires `..` on non-exhaustive matches).
+//! * Unknown type names are skipped — foreign and std types are not in
+//!   the model, and skipping kills false positives (a const followed by a
+//!   block would otherwise look like a site).
+//! * If several definitions share a name, matching *any* of them passes
+//!   (module resolution is out of scope for a lexer-level model).
+
+use crate::analysis::report::Finding;
+
+use super::model::SourceSet;
+
+/// Pass name in findings.
+pub const PASS: &str = "struct_ripple";
+
+/// Run the pass. Returns the number of sites actually checked against a
+/// known definition.
+pub fn check(set: &SourceSet, findings: &mut Vec<Finding>) -> usize {
+    let defs = set.def_index();
+    let mut checked = 0usize;
+    for fm in &set.files {
+        for site in &fm.literal_sites {
+            let segs: Vec<&str> = site.path.split("::").collect();
+            let last = segs[segs.len() - 1];
+            let two = if segs.len() >= 2 {
+                Some(format!("{}::{}", segs[segs.len() - 2], last))
+            } else {
+                None
+            };
+            let candidates = two
+                .as_deref()
+                .and_then(|k| defs.get(k))
+                .or_else(|| defs.get(last));
+            let Some(candidates) = candidates else {
+                continue;
+            };
+            checked += 1;
+            let mut first_reason = String::new();
+            let ok = candidates.iter().any(|def| {
+                let unknown: Vec<&String> =
+                    site.fields.iter().filter(|f| !def.fields.contains(f)).collect();
+                let missing: Vec<&String> =
+                    def.fields.iter().filter(|f| !site.fields.contains(f)).collect();
+                let matches = if site.has_rest {
+                    unknown.is_empty()
+                } else {
+                    unknown.is_empty() && missing.is_empty()
+                };
+                if !matches && first_reason.is_empty() {
+                    first_reason = format!(
+                        "unknown fields {unknown:?}, missing fields {missing:?} \
+                         (vs `{}` defined at line {})",
+                        def.name, def.line
+                    );
+                }
+                matches
+            });
+            if !ok {
+                findings.push(Finding::error(
+                    PASS,
+                    fm.path.as_str(),
+                    site.line,
+                    format!("site `{} {{ .. }}` does not match its definition: {first_reason}", site.path),
+                ));
+            }
+        }
+    }
+    checked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DEF: &str = "pub struct Thing { pub a: usize, pub b: usize }\n";
+
+    fn run(site_src: &str) -> Vec<Finding> {
+        let set =
+            SourceSet::from_files(&[("planner/def.rs", DEF), ("planner/site.rs", site_src)]);
+        let mut findings = Vec::new();
+        check(&set, &mut findings);
+        findings
+    }
+
+    #[test]
+    fn exact_sites_pass_and_partial_sites_fail() {
+        assert!(run("fn f() { let t = Thing { a: 1, b: 2 }; }").is_empty());
+        let missing = run("fn f() { let t = Thing { a: 1 }; }");
+        assert_eq!(missing.len(), 1);
+        assert!(missing[0].message.contains("missing fields"));
+    }
+
+    #[test]
+    fn unknown_field_fails_even_with_rest() {
+        let f = run("fn f(t: Thing) { let u = Thing { c: 3, ..t }; }");
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("unknown fields"));
+        assert!(run("fn f(t: Thing) { let u = Thing { a: 3, ..t }; }").is_empty());
+    }
+
+    #[test]
+    fn patterns_are_checked_too() {
+        assert!(run("fn f(t: Thing) { let Thing { a, .. } = t; }").is_empty());
+        let bad = run("fn f(t: Thing) { let Thing { z, .. } = t; }");
+        assert_eq!(bad.len(), 1);
+    }
+
+    #[test]
+    fn unknown_types_are_skipped() {
+        assert!(run("fn f() { let m = SomeForeignType { whatever: 1 }; }").is_empty());
+    }
+
+    #[test]
+    fn enum_struct_variants_resolve_by_two_segments() {
+        let set = SourceSet::from_files(&[(
+            "planner/e.rs",
+            "pub enum Kind { Fields { x: usize } }\n\
+             fn f() { let k = Kind::Fields { x: 1 }; let b = Kind::Fields { y: 2 }; }",
+        )]);
+        let mut findings = Vec::new();
+        assert_eq!(check(&set, &mut findings), 2);
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("Kind::Fields"));
+    }
+}

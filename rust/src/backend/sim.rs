@@ -88,6 +88,7 @@ impl ExecutionBackend for SimBackend {
     /// Allocation-free on the decode path: the kernel model is scalar
     /// math and tokens land in the caller's reused `out.tokens` buffer —
     /// what keeps the engine's steady-state step at zero heap traffic.
+    // pallas-lint: no_alloc
     fn execute(
         &mut self,
         batch: &StepBatch,

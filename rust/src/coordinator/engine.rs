@@ -493,6 +493,7 @@ impl Engine {
     /// One engine step: ingest → reap → admit → prefill one batch or
     /// decode one batch → stream/retire. Steady-state decode performs no
     /// heap allocation: every per-step buffer comes from [`StepScratch`].
+    // pallas-lint: no_alloc
     pub fn step(&mut self) -> Result<()> {
         if self.caps.virtual_clock {
             self.ingest_arrivals();
@@ -552,6 +553,7 @@ impl Engine {
         result
     }
 
+    // pallas-lint: no_alloc
     fn run_decode(&mut self, slots: &[usize], bucket: usize) -> Result<()> {
         // The scheduler sees the live batch shape: the longest row's KV
         // length (including the token being written this step).
@@ -594,6 +596,7 @@ impl Engine {
         Ok(())
     }
 
+    // pallas-lint: no_alloc
     fn fill_decode_batch(&self, batch: &mut StepBatch, slots: &[usize], bucket: usize) -> Result<()> {
         batch.kind = StepKind::Decode;
         batch.bucket = bucket;
@@ -609,6 +612,7 @@ impl Engine {
                 input_token,
                 position: r.kv_len(),
                 kv_len: r.kv_len(),
+                // pallas-lint: allow(no_alloc): capacity-0 Vec::new never heap-allocates
                 prompt: Vec::new(),
                 cached_tokens: 0,
             });
@@ -621,6 +625,7 @@ impl Engine {
     /// and retire rows that completed. The retirement list is scratch
     /// (`StepScratch::to_retire`) because borrowing rows out of the
     /// batcher and retiring them cannot overlap.
+    // pallas-lint: no_alloc
     fn apply_outcome(&mut self, outcome: &StepOutcome) -> Result<()> {
         if self.caps.virtual_clock {
             self.clock_us += outcome.elapsed_us;

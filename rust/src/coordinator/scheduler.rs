@@ -94,6 +94,7 @@ impl DecodeScheduler {
     /// range check and a metadata stamp; horizon crossings refill through
     /// the planner's LRU. Element-wise identical to planning every step
     /// from scratch (the cursor equivalence property).
+    // pallas-lint: no_alloc
     pub fn decide(&mut self, batch: usize, max_kv_len: usize) -> Result<StepDecision> {
         let shape = self.step_shape(batch, max_kv_len);
         // Linear cursor lookup by live batch size; a fresh cursor keys
@@ -119,6 +120,7 @@ impl DecodeScheduler {
     /// schedulers that plan several buckets at once
     /// (multi-queue/disaggregated serving, and the `scheduler_throughput`
     /// bench).
+    // pallas-lint: no_alloc
     pub fn decide_batch_into(
         &mut self,
         out: &mut Vec<StepDecision>,

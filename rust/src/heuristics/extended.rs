@@ -57,7 +57,12 @@ impl Default for TuneConfig {
             max_tiles: 16,
             candidate_splits: vec![2, 3, 4, 6, 8, 12, 16],
             min_win: 0.03,
-            num_sm: crate::planner::DeviceProfile::H100_SXM.num_sms,
+            // H100 SXM SM count, spelled as a literal: heuristics/ sits
+            // below planner/ in the layering DAG and must not import the
+            // DeviceProfile presets. Callers tuning for another part pass
+            // `TuneConfig { num_sm: device.num_sms, .. }` (the registry
+            // factory does exactly that).
+            num_sm: 132,
         }
     }
 }

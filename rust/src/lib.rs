@@ -117,11 +117,22 @@
 //! exactly the long-context low-head-count regime the sequence-aware
 //! split policy targets. See `docs/` for the full reader-facing tour and
 //! DESIGN.md §Prefix sharing for the invariants.
+//!
+//! ## Static analysis
+//!
+//! The invariants above are machine-checked by [`analysis`] (pallas-lint,
+//! run as `fa3-split lint`): a self-hosted source linter (layering DAG,
+//! planner-façade exclusivity, `no_alloc` hot regions, struct-ripple,
+//! bench-manifest wiring) plus a plan-space model checker that
+//! exhaustively enumerates the bucketed decode-shape domain and proves,
+//! among other invariants, that sequence-aware occupancy never regresses
+//! below standard for `H_KV <= 4`. See docs/analysis.md.
 
 // The docs ARE a deliverable of this crate (the reproduction is read as
 // much as it is run): surface any public item that loses its docs.
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod backend;
 pub mod bench_harness;
 pub mod cluster;

@@ -9,6 +9,7 @@
 //!   evolve      reproduce §3 (evolutionary search, OpenEvolve analog)
 //!   decide      print every registered policy's decision for one shape
 //!   policies    list the policies in the planner registry
+//!   lint        pallas-lint: source passes + plan-space model checker
 //!   info        artifact/manifest inventory
 //!
 //! All split planning goes through `planner::PolicyRegistry` /
@@ -45,6 +46,7 @@ Commands:
   evolve       reproduce §3 (evolutionary heuristic search)
   decide       show every registered policy's split decision for a shape
   policies     list registered split policies
+  lint         static analysis + plan-space invariant verification
   info         list artifacts and model config
 
 Run `fa3-split <command> --help` for per-command options.";
@@ -73,6 +75,7 @@ fn main() -> anyhow::Result<()> {
         "regression" => cmd_regression(&sub_argv),
         "evolve" => cmd_evolve(&sub_argv),
         "decide" => cmd_decide(&sub_argv),
+        "lint" => cmd_lint(&sub_argv),
         "policies" => cmd_policies(),
         "info" => cmd_info(),
         "--help" | "-h" | "help" => {
@@ -417,6 +420,81 @@ fn cmd_decide(argv: &[String]) -> anyhow::Result<()> {
             plan.combine_estimate_us,
             t.total_us
         );
+    }
+    Ok(())
+}
+
+fn cmd_lint(argv: &[String]) -> anyhow::Result<()> {
+    use fa3_split::analysis::{self, fixtures, LintOptions, ModelCheckConfig};
+
+    let args = parse(
+        cli::Parser::new(
+            "pallas-lint: source-tree passes (layering, no_alloc, struct_ripple, \
+             bench_manifest) + plan-space model checker",
+        )
+        .flag("json", "print the findings report as JSON to stdout")
+        .flag("quick", "reduced model-check domain (seconds even in debug builds)")
+        .flag("no-modelcheck", "skip the plan-space model checker entirely")
+        .flag("fixtures", "also run the seeded-violation fixture corpus (lint self-test)")
+        .opt("out", "", "also write the JSON report to this path")
+        .opt("root", "", "repo root to lint (default: this crate's parent directory)"),
+        argv,
+    );
+
+    let root = if args.str("root").is_empty() {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."))
+    } else {
+        PathBuf::from(args.str("root"))
+    };
+    let mut opts = LintOptions::at_repo_root(&root);
+    if args.has("no-modelcheck") {
+        opts.modelcheck = None;
+    } else if args.has("quick") {
+        opts.modelcheck = Some(ModelCheckConfig::quick());
+    }
+
+    let mut report = analysis::run(&opts)?;
+    if args.has("fixtures") {
+        fixtures::verify(&mut report.findings);
+    }
+
+    let json = report.to_json().to_string_pretty();
+    let out = args.str("out");
+    if !out.is_empty() {
+        std::fs::write(&out, format!("{json}\n"))?;
+    }
+    if args.has("json") {
+        println!("{json}");
+    } else {
+        for f in &report.findings {
+            println!("{}", f.render());
+        }
+        let s = &report.source;
+        println!(
+            "scanned {} files ({} struct defs, {} literal sites, {} use edges, \
+             {} no_alloc regions, {} suppressed)",
+            s.files_scanned,
+            s.struct_defs,
+            s.literal_sites,
+            s.use_edges,
+            s.no_alloc_regions,
+            s.suppressed
+        );
+        if let Some(mc) = &report.modelcheck {
+            println!(
+                "model checker: domain {} (no-regression pairs {}), violations {}",
+                mc.get("total_domain").to_string_pretty(),
+                mc.get("no_regression_domain").to_string_pretty(),
+                mc.get("violations").to_string_pretty()
+            );
+        }
+        println!("{} error(s), {} warning(s)", report.errors(), report.warnings());
+    }
+    if !report.clean() {
+        std::process::exit(1);
     }
     Ok(())
 }

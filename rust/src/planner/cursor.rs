@@ -117,6 +117,7 @@ impl PlanCursor {
     /// Guaranteed element-wise identical to [`Planner::plan`] for every
     /// shape, including across planner switches (the pinned decision is
     /// keyed to the refilling planner's identity).
+    // pallas-lint: no_alloc
     #[inline]
     pub fn plan(&mut self, planner: &mut Planner, shape: &DecodeShape) -> LaunchPlan {
         if let Some(decision) = self.decision {

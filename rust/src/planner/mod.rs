@@ -461,6 +461,7 @@ impl Planner {
     }
 
     /// Attach the exact shape back onto a (possibly cached) decision.
+    // pallas-lint: no_alloc
     fn materialize(&self, shape: &DecodeShape, d: &CachedDecision) -> LaunchPlan {
         LaunchPlan {
             metadata: SchedulerMetadata {

@@ -108,6 +108,30 @@ impl Calibration {
             + self.combine_slot_us * commanded as f64
             + self.combine_atomic_us * excess
     }
+
+    /// Overlay a `[calibration]` config section onto the paper fit:
+    /// specified keys override, unspecified keys keep [`paper_h100`]
+    /// values. (Lives here, not in `util/config`, so the dependency edge
+    /// points downward: sim/ -> util/, never util/ -> sim/.)
+    ///
+    /// [`paper_h100`]: Calibration::paper_h100
+    pub fn from_config(cfg: &crate::util::config::Config) -> anyhow::Result<Calibration> {
+        let base = Calibration::paper_h100();
+        let s = "calibration";
+        Ok(Calibration {
+            t_launch_us: cfg.f64_or(s, "t_launch_us", base.t_launch_us)?,
+            t_setup_us: cfg.f64_or(s, "t_setup_us", base.t_setup_us)?,
+            t_block_us: cfg.f64_or(s, "t_block_us", base.t_block_us)?,
+            combine_base_us: cfg.f64_or(s, "combine_base_us", base.combine_base_us)?,
+            combine_near_us: cfg.f64_or(s, "combine_near_us", base.combine_near_us)?,
+            combine_far_us: cfg.f64_or(s, "combine_far_us", base.combine_far_us)?,
+            combine_slot_us: cfg.f64_or(s, "combine_slot_us", base.combine_slot_us)?,
+            combine_atomic_us: cfg.f64_or(s, "combine_atomic_us", base.combine_atomic_us)?,
+            internal_path_loss: cfg.f64_or(s, "internal_path_loss", base.internal_path_loss)?,
+            noise_rel_std: cfg.f64_or(s, "noise_rel_std", base.noise_rel_std)?,
+            ref_block_bytes: cfg.f64_or(s, "ref_block_bytes", base.ref_block_bytes)?,
+        })
+    }
 }
 
 impl Default for Calibration {
@@ -124,6 +148,21 @@ mod tests {
     fn overhead_matches_fit() {
         let c = Calibration::paper_h100();
         assert!((c.overhead_us() - 8.04).abs() < 1e-9);
+    }
+
+    #[test]
+    fn config_overlay_keeps_defaults() {
+        let c = crate::util::config::Config::parse(
+            "[calibration]\nt_launch_us = 7.0\nnoise_rel_std = 0.01\n",
+        )
+        .unwrap();
+        let cal = Calibration::from_config(&c).unwrap();
+        assert_eq!(cal.t_launch_us, 7.0);
+        assert_eq!(cal.noise_rel_std, 0.01);
+        // Unspecified keys keep the paper fit.
+        let base = Calibration::paper_h100();
+        assert_eq!(cal.t_block_us, base.t_block_us);
+        assert_eq!(cal.combine_atomic_us, base.combine_atomic_us);
     }
 
     #[test]

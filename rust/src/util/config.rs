@@ -87,25 +87,10 @@ impl Config {
     }
 }
 
-/// Load a [`crate::sim::Calibration`] from a `[calibration]` section,
-/// falling back to the paper fit for unspecified keys.
-pub fn calibration_from(cfg: &Config) -> Result<crate::sim::Calibration> {
-    let base = crate::sim::Calibration::paper_h100();
-    let s = "calibration";
-    Ok(crate::sim::Calibration {
-        t_launch_us: cfg.f64_or(s, "t_launch_us", base.t_launch_us)?,
-        t_setup_us: cfg.f64_or(s, "t_setup_us", base.t_setup_us)?,
-        t_block_us: cfg.f64_or(s, "t_block_us", base.t_block_us)?,
-        combine_base_us: cfg.f64_or(s, "combine_base_us", base.combine_base_us)?,
-        combine_near_us: cfg.f64_or(s, "combine_near_us", base.combine_near_us)?,
-        combine_far_us: cfg.f64_or(s, "combine_far_us", base.combine_far_us)?,
-        combine_slot_us: cfg.f64_or(s, "combine_slot_us", base.combine_slot_us)?,
-        combine_atomic_us: cfg.f64_or(s, "combine_atomic_us", base.combine_atomic_us)?,
-        internal_path_loss: cfg.f64_or(s, "internal_path_loss", base.internal_path_loss)?,
-        noise_rel_std: cfg.f64_or(s, "noise_rel_std", base.noise_rel_std)?,
-        ref_block_bytes: cfg.f64_or(s, "ref_block_bytes", base.ref_block_bytes)?,
-    })
-}
+// The `[calibration]`-section overlay loader used to live here as
+// `calibration_from`, but that gave util/ (the bottom layer) an upward
+// dependency on sim/. It is now `crate::sim::Calibration::from_config`,
+// which points the edge the right way (sim/ -> util/).
 
 #[cfg(test)]
 mod tests {
@@ -129,18 +114,6 @@ max_batch = 8
         assert_eq!(c.usize_or("engine", "missing", 4).unwrap(), 4);
         assert!(c.f64("nope", "x").is_err());
         assert_eq!(c.sections().count(), 2);
-    }
-
-    #[test]
-    fn calibration_overlay_keeps_defaults() {
-        let c = Config::parse(SAMPLE).unwrap();
-        let cal = calibration_from(&c).unwrap();
-        assert_eq!(cal.t_launch_us, 7.0);
-        assert_eq!(cal.noise_rel_std, 0.01);
-        // Unspecified keys keep the paper fit.
-        let base = crate::sim::Calibration::paper_h100();
-        assert_eq!(cal.t_block_us, base.t_block_us);
-        assert_eq!(cal.combine_atomic_us, base.combine_atomic_us);
     }
 
     #[test]

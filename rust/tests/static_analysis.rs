@@ -1,0 +1,107 @@
+//! Integration tests for pallas-lint: the fixture corpus, the real tree
+//! staying clean, and the model checker's quick domain.
+//!
+//! The full-domain model check runs in CI via `fa3-split lint`; here we
+//! use [`ModelCheckConfig::quick`] so the suite stays debug-build fast.
+
+use std::path::{Path, PathBuf};
+
+use fa3_split::analysis::source::{bench_manifest, run_source_passes, SourceSet};
+use fa3_split::analysis::{self, fixtures, modelcheck, LintOptions, ModelCheckConfig, Severity};
+use fa3_split::heuristics::tiles::DecodeShape;
+use fa3_split::planner::{DeviceProfile, PolicyRegistry};
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("crate lives under repo root").into()
+}
+
+#[test]
+fn fixture_corpus_passes() {
+    // Every seeded violation fires its pass (and only its pass), and the
+    // clean fixture stays clean — the same corpus `lint --fixtures` runs.
+    let mut findings = Vec::new();
+    let checked = fixtures::verify(&mut findings);
+    assert!(checked >= 6, "corpus unexpectedly small: {checked}");
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn real_tree_is_clean_under_source_passes() {
+    // Self-hosting: the lint runs over its own repository and finds
+    // nothing. Anything it flags is either a real architecture violation
+    // (fix the code) or a false positive (fix the lint) — both block.
+    let set = SourceSet::load_dir(&repo_root().join("rust").join("src")).expect("src tree");
+    let mut findings = Vec::new();
+    let stats = run_source_passes(&set, &mut findings);
+    assert!(findings.is_empty(), "{findings:#?}");
+    // The scan actually covered the tree (0 findings != 0 files).
+    assert!(stats.files_scanned > 60, "only {} files scanned", stats.files_scanned);
+    assert!(stats.use_edges > 50, "only {} use edges", stats.use_edges);
+    assert!(stats.literal_sites > 250, "only {} literal sites", stats.literal_sites);
+    assert!(stats.no_alloc_regions >= 8, "only {} no_alloc regions", stats.no_alloc_regions);
+    // The one reviewed exception (capacity-0 Vec::new placeholder).
+    assert_eq!(stats.suppressed, 1);
+}
+
+#[test]
+fn real_tree_bench_manifests_are_wired() {
+    let inputs = bench_manifest::BenchManifestInputs::load(&repo_root()).expect("repo root");
+    let mut findings = Vec::new();
+    let manifests = bench_manifest::check(&inputs, &mut findings);
+    assert!(manifests >= 5, "expected the checked-in BENCH_*.json set, got {manifests}");
+    // Modeled-targets warnings are expected until a real toolchain run;
+    // errors (orphaned / undocumented / un-CI'd manifests) are not.
+    let errors: Vec<_> =
+        findings.iter().filter(|f| f.severity == Severity::Error).collect();
+    assert!(errors.is_empty(), "{errors:#?}");
+}
+
+#[test]
+fn model_checker_quick_domain_holds() {
+    let cfg = ModelCheckConfig::quick();
+    let report = modelcheck::check(&cfg);
+    assert!(report.findings.is_empty(), "{:#?}", report.findings);
+    assert!(report.no_regression_domain > 500);
+    assert!(report.strict_improvements > 0, "boundary bucket never exercised");
+    assert!(report.cursor_plans > 1_000);
+}
+
+#[test]
+fn model_checker_spot_pins_known_good_triples() {
+    // Independent of the checker: pin the paper's headline cells so a
+    // substrate drift fails loudly here, not as a modelcheck violation.
+    let registry = PolicyRegistry::builtin();
+    let h100 = DeviceProfile::H100_SXM;
+    let shape = DecodeShape::llama70b_tp8(1, 512);
+
+    let mut std_p = registry.builder_for("standard", &h100).unwrap().build();
+    let std_plan = std_p.plan(&shape);
+    assert_eq!(std_plan.num_splits(), 1, "premature guard");
+    assert!((std_plan.occupancy - 1.0 / 132.0).abs() < 1e-12);
+
+    let mut seq_p = registry.builder_for("sequence-aware", &h100).unwrap().build();
+    let seq_plan = seq_p.plan(&shape);
+    assert_eq!(seq_plan.num_splits(), 3, "boundary override");
+    assert_eq!(seq_plan.effective_splits, 2);
+    assert!((seq_plan.occupancy - 2.0 / 132.0).abs() < 1e-12);
+
+    // The inequality the checker proves over the whole domain, at its
+    // motivating point: strictly better, never worse.
+    assert!(seq_plan.occupancy > std_plan.occupancy);
+}
+
+#[test]
+fn end_to_end_run_reports_domain_size() {
+    // analysis::run with the quick domain: the JSON artifact carries the
+    // enumerated domain size alongside zero violations.
+    let mut opts = LintOptions::at_repo_root(&repo_root());
+    opts.modelcheck = Some(ModelCheckConfig::quick());
+    let report = analysis::run(&opts).expect("lint run");
+    assert!(report.clean(), "{:#?}", report.findings);
+    let mc = report.modelcheck.as_ref().expect("model-check summary");
+    let json = mc.to_string_pretty();
+    assert!(json.contains("no_regression_domain"));
+    assert!(json.contains("\"violations\": 0"));
+    let full = report.to_json().to_string_pretty();
+    assert!(full.contains("\"errors\": 0"));
+}
