@@ -1,0 +1,388 @@
+//! Bench: continuous batching with chunked prefill vs run-to-completion
+//! static batching, on the simulated H100's virtual clock.
+//!
+//! Scenarios:
+//!
+//! * **Monolithic identity** — the step composer at chunk = ∞ must be
+//!   byte-identical to the legacy engine: the default schedule vs an
+//!   explicitly-constructed monolithic schedule (full identity including
+//!   timings, wall clock, and step counts — the composed plan routes
+//!   through the unchanged prefill/decode paths), and a Bounded chunk
+//!   large enough to swallow any prompt vs monolithic (token-stream and
+//!   finish-reason identity: chunking moves *when* prompt tokens are
+//!   ingested, never what gets computed).
+//! * **Mixed open-loop load** — `ChatWorkload::mixed_open_loop` (3/4
+//!   short interactive + 1/4 long-prompt batch) at an arrival rate ~4x
+//!   the service rate. Run-to-completion baseline: groups of `max_batch`
+//!   requests, each group submitted (at its TRUE arrival times) only
+//!   after the previous group fully drains — classic static batching.
+//!   Continuous chunked: every request submitted at its arrival,
+//!   per-step admission, 128-token chunks under a 512-token step budget.
+//! * **Occupancy by row kind** — the chunked run's per-wave planned SM
+//!   occupancy split into decode waves vs chunk waves (chunk waves pack
+//!   `l_q` query rows per M-block, so their occupancy sits far above
+//!   low-head-count decode).
+//!
+//! Gates (exit nonzero on failure — the CI `continuous-batching` job):
+//!
+//! 1. both identity legs hold exactly,
+//! 2. chunked p99 TTFT under mixed load strictly below run-to-completion,
+//! 3. chunked interactive-class p99 TTFT strictly below RTC's,
+//! 4. chunked throughput >= 0.97x run-to-completion (latency is not
+//!    bought with throughput),
+//! 5. decode-wave and chunk-wave mean occupancies both in (0, 1].
+//!
+//! Run: `cargo bench --bench continuous_batching [-- --json PATH]`
+//! (`BENCH_continuous_batching.json` is regenerated this way.)
+
+use fa3_split::backend::{AttnGeometry, SimBackend};
+use fa3_split::coordinator::{
+    BatcherConfig, Engine, EngineConfig, FinishedRequest, Priority, SubmitOptions,
+};
+use fa3_split::planner::Planner;
+use fa3_split::schedule::{ChunkPolicy, ScheduleConfig, TokenBudget};
+use fa3_split::util::json::Json;
+use fa3_split::workload::{ChatWorkload, GeneratedRequest};
+
+const MAX_BATCH: usize = 8;
+const CHUNK: usize = 128;
+const STEP_BUDGET: usize = 512;
+const N_REQUESTS: usize = 64;
+const MEAN_GAP_US: u64 = 100;
+
+fn engine(schedule: ScheduleConfig) -> Engine {
+    Engine::builder(Box::new(SimBackend::h100()))
+        .planner(Planner::sequence_aware())
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+        .available_splits(vec![1, 3])
+        .config(EngineConfig {
+            batcher: BatcherConfig::for_max_batch(MAX_BATCH),
+            schedule,
+            ..Default::default()
+        })
+        .build()
+        .unwrap()
+}
+
+// ----------------------------------------------------------------------
+// Identity leg.
+// ----------------------------------------------------------------------
+
+fn identity_trace() -> Vec<GeneratedRequest> {
+    ChatWorkload {
+        seed: 0x1DE7,
+        n_requests: 32,
+        prompt_median: 160,
+        output_mean: 24,
+        output_cap: 48,
+        mean_gap_us: 200,
+        ..Default::default()
+    }
+    .generate()
+}
+
+fn run_identity(schedule: ScheduleConfig) -> (Vec<FinishedRequest>, u64, usize, usize) {
+    let mut e = engine(schedule);
+    for g in identity_trace() {
+        e.submit_at(g.request, g.arrival_offset_us).expect("schedulable");
+    }
+    let mut done = e.run_until_idle().unwrap();
+    done.sort_by_key(|f| f.id);
+    (done, e.metrics.wall_us, e.metrics.steps, e.metrics.mixed_steps)
+}
+
+fn byte_identical(a: &[FinishedRequest], b: &[FinishedRequest]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.id == y.id
+                && x.tokens == y.tokens
+                && x.reason == y.reason
+                && x.timing.arrival_us == y.timing.arrival_us
+                && x.timing.scheduled_us == y.timing.scheduled_us
+                && x.timing.first_token_us == y.timing.first_token_us
+                && x.timing.finished_us == y.timing.finished_us
+        })
+}
+
+fn token_identical(a: &[FinishedRequest], b: &[FinishedRequest]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.id == y.id && x.tokens == y.tokens && x.reason == y.reason)
+}
+
+// ----------------------------------------------------------------------
+// Mixed open-loop load leg.
+// ----------------------------------------------------------------------
+
+struct LoadResult {
+    done: Vec<FinishedRequest>,
+    tok_s: f64,
+    mean_occupancy: Option<f64>,
+    mean_chunk_occupancy: Option<f64>,
+    mixed_steps: usize,
+}
+
+fn mixed_trace() -> Vec<GeneratedRequest> {
+    ChatWorkload::mixed_open_loop(0xC0117, N_REQUESTS, MEAN_GAP_US)
+}
+
+/// Continuous batching: every request enters at its true arrival time;
+/// admission happens every step.
+fn run_continuous(schedule: ScheduleConfig) -> LoadResult {
+    let mut e = engine(schedule);
+    for g in mixed_trace() {
+        e.submit_at_with(
+            g.request,
+            g.arrival_offset_us,
+            SubmitOptions::default().priority(g.priority),
+        )
+        .expect("schedulable");
+    }
+    let done = e.run_until_idle().unwrap();
+    LoadResult {
+        done,
+        tok_s: e.metrics.throughput_tok_s(),
+        mean_occupancy: e.metrics.mean_occupancy(),
+        mean_chunk_occupancy: e.metrics.mean_chunk_occupancy(),
+        mixed_steps: e.metrics.mixed_steps,
+    }
+}
+
+/// Run-to-completion static batching: the same trace in arrival order,
+/// but a group of `MAX_BATCH` requests must fully drain before the next
+/// group is admitted. TTFT is still measured from each request's TRUE
+/// arrival time (the timestamp passed to `submit_at_with`), so queueing
+/// behind earlier groups is charged to the baseline — that queueing is
+/// exactly what continuous batching removes.
+fn run_rtc() -> LoadResult {
+    let mut e = engine(ScheduleConfig::default());
+    let trace = mixed_trace();
+    let mut done = Vec::with_capacity(trace.len());
+    for group in trace.chunks(MAX_BATCH) {
+        for g in group {
+            e.submit_at_with(
+                g.request.clone(),
+                g.arrival_offset_us,
+                SubmitOptions::default().priority(g.priority),
+            )
+            .expect("schedulable");
+        }
+        done.extend(e.run_until_idle().unwrap());
+    }
+    LoadResult {
+        done,
+        tok_s: e.metrics.throughput_tok_s(),
+        mean_occupancy: e.metrics.mean_occupancy(),
+        mean_chunk_occupancy: e.metrics.mean_chunk_occupancy(),
+        mixed_steps: e.metrics.mixed_steps,
+    }
+}
+
+fn ttft_percentiles(done: &[FinishedRequest], class: Option<Priority>) -> Option<(f64, f64)> {
+    let mut ttfts: Vec<f64> = done
+        .iter()
+        .filter(|f| class.map_or(true, |c| f.priority == c))
+        .map(|f| f.timing.ttft_us() as f64)
+        .collect();
+    if ttfts.is_empty() {
+        return None;
+    }
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = ttfts.iter().sum::<f64>() / ttfts.len() as f64;
+    let p99 = ttfts[(ttfts.len() * 99 / 100).min(ttfts.len() - 1)];
+    Some((mean, p99))
+}
+
+fn main() {
+    let json_path = {
+        let args: Vec<String> = std::env::args().collect();
+        args.iter().position(|a| a == "--json").and_then(|i| args.get(i + 1).cloned())
+    };
+
+    println!("== Continuous batching: chunked prefill vs run-to-completion ==\n");
+
+    // ------------------------------------------------------------------
+    // Scenario 1: monolithic identity.
+    // ------------------------------------------------------------------
+    let (dflt, dflt_wall, dflt_steps, dflt_mixed) = run_identity(ScheduleConfig::default());
+    let (mono, mono_wall, mono_steps, mono_mixed) = run_identity(ScheduleConfig {
+        chunk: ChunkPolicy::Monolithic,
+        budget: TokenBudget::unbounded(),
+    });
+    let id_full = byte_identical(&dflt, &mono)
+        && dflt_wall == mono_wall
+        && dflt_steps == mono_steps
+        && dflt_mixed == 0
+        && mono_mixed == 0;
+    // Chunk = ∞ as a *bounded* policy: every prompt fits one chunk, so
+    // ingestion happens at the same steps — but the rows ride the mixed
+    // path. Token streams and reasons must be unchanged.
+    let (inf, _, _, inf_mixed) =
+        run_identity(ScheduleConfig::bounded(1024, TokenBudget::unbounded()));
+    let id_inf = token_identical(&dflt, &inf);
+    println!(
+        "monolithic identity: default vs explicit — {}; bounded(∞) token identity — {} \
+         ({inf_mixed} mixed steps rode the composer)",
+        if id_full { "byte-identical" } else { "DIVERGED" },
+        if id_inf { "identical" } else { "DIVERGED" },
+    );
+
+    // ------------------------------------------------------------------
+    // Scenario 2: mixed open-loop load at ~4x service rate.
+    // ------------------------------------------------------------------
+    let chunked = run_continuous(ScheduleConfig::bounded(
+        CHUNK,
+        TokenBudget::capped(STEP_BUDGET),
+    ));
+    let rtc = run_rtc();
+    assert_eq!(chunked.done.len(), N_REQUESTS, "continuous run must finish the trace");
+    assert_eq!(rtc.done.len(), N_REQUESTS, "RTC run must finish the trace");
+    assert!(chunked.mixed_steps > 0, "the chunked run must actually interleave");
+    assert_eq!(rtc.mixed_steps, 0, "the RTC baseline must stay monolithic");
+
+    println!(
+        "\nmixed load: {N_REQUESTS} requests, mean gap {MEAN_GAP_US} µs, \
+         chunk {CHUNK}, step budget {STEP_BUDGET}, {} mixed steps",
+        chunked.mixed_steps
+    );
+    println!("          class |      chunked TTFT µs |          RTC TTFT µs");
+    let mut rows: Vec<(&str, Option<Priority>)> = vec![("all", None)];
+    rows.extend(Priority::all().map(|c| (c.name(), Some(c))));
+    for (label, class) in rows {
+        let (c_mean, c_p99) = match ttft_percentiles(&chunked.done, class) {
+            Some(x) => x,
+            None => continue,
+        };
+        let (r_mean, r_p99) = ttft_percentiles(&rtc.done, class).unwrap();
+        println!(
+            "{label:>15} | mean {c_mean:>7.0} p99 {c_p99:>7.0} | mean {r_mean:>7.0} p99 {r_p99:>7.0}"
+        );
+    }
+    let (_, chunked_p99) = ttft_percentiles(&chunked.done, None).unwrap();
+    let (_, rtc_p99) = ttft_percentiles(&rtc.done, None).unwrap();
+    let (_, chunked_int_p99) =
+        ttft_percentiles(&chunked.done, Some(Priority::Interactive)).unwrap();
+    let (_, rtc_int_p99) = ttft_percentiles(&rtc.done, Some(Priority::Interactive)).unwrap();
+    println!(
+        "throughput: chunked {:.0} tok/s vs RTC {:.0} tok/s",
+        chunked.tok_s, rtc.tok_s
+    );
+
+    // ------------------------------------------------------------------
+    // Scenario 3: occupancy by row kind (from the chunked run).
+    // ------------------------------------------------------------------
+    let decode_occ = chunked.mean_occupancy.unwrap_or(0.0);
+    let chunk_occ = chunked.mean_chunk_occupancy.unwrap_or(0.0);
+    println!(
+        "occupancy by row kind: decode waves {:.1}%, chunk waves {:.1}%",
+        decode_occ * 100.0,
+        chunk_occ * 100.0
+    );
+
+    // ------------------------------------------------------------------
+    // Gates.
+    // ------------------------------------------------------------------
+    let mut ok = true;
+
+    println!("\nmonolithic identity (byte + chunk=∞ token): {}", if id_full && id_inf { "OK" } else { "MISS" });
+    ok &= id_full && id_inf;
+
+    let g2 = chunked_p99 < rtc_p99;
+    println!(
+        "chunked p99 TTFT below run-to-completion: {chunked_p99:.0} µs vs {rtc_p99:.0} µs ({})",
+        if g2 { "OK" } else { "MISS" }
+    );
+    ok &= g2;
+
+    let g3 = chunked_int_p99 < rtc_int_p99;
+    println!(
+        "interactive-class p99 TTFT: {chunked_int_p99:.0} µs vs {rtc_int_p99:.0} µs ({})",
+        if g3 { "OK" } else { "MISS" }
+    );
+    ok &= g3;
+
+    let g4 = chunked.tok_s >= 0.97 * rtc.tok_s;
+    println!(
+        "throughput held (>= 0.97x RTC): {:.0} vs {:.0} tok/s ({})",
+        chunked.tok_s,
+        rtc.tok_s,
+        if g4 { "OK" } else { "MISS" }
+    );
+    ok &= g4;
+
+    let g5 = decode_occ > 0.0 && decode_occ <= 1.0 && chunk_occ > 0.0 && chunk_occ <= 1.0;
+    println!(
+        "occupancy split sane (both row kinds in (0,1]): {}",
+        if g5 { "OK" } else { "MISS" }
+    );
+    ok &= g5;
+
+    if let Some(path) = json_path {
+        let class_json = |r: &LoadResult| {
+            Json::arr(Priority::all().iter().filter_map(|&c| {
+                let (mean, p99) = ttft_percentiles(&r.done, Some(c))?;
+                Some(Json::obj(vec![
+                    ("class", Json::str(c.name())),
+                    ("mean_ttft_us", Json::num(mean)),
+                    ("p99_ttft_us", Json::num(p99)),
+                ]))
+            }))
+        };
+        let report = Json::obj(vec![
+            ("bench", Json::str("continuous_batching")),
+            (
+                "generated_by",
+                Json::str(
+                    "cargo bench --bench continuous_batching -- --json BENCH_continuous_batching.json",
+                ),
+            ),
+            ("measured", Json::Bool(true)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("requests", Json::int(N_REQUESTS as i64)),
+                    ("mean_gap_us", Json::int(MEAN_GAP_US as i64)),
+                    ("chunk_tokens", Json::int(CHUNK as i64)),
+                    ("max_batch_tokens", Json::int(STEP_BUDGET as i64)),
+                    ("max_batch", Json::int(MAX_BATCH as i64)),
+                ]),
+            ),
+            (
+                "identity",
+                Json::obj(vec![
+                    ("default_vs_monolithic_byte", Json::Bool(id_full)),
+                    ("bounded_inf_tokens", Json::Bool(id_inf)),
+                ]),
+            ),
+            (
+                "mixed_load",
+                Json::obj(vec![
+                    ("chunked_p99_ttft_us", Json::num(chunked_p99)),
+                    ("rtc_p99_ttft_us", Json::num(rtc_p99)),
+                    ("chunked_tok_s", Json::num(chunked.tok_s)),
+                    ("rtc_tok_s", Json::num(rtc.tok_s)),
+                    ("chunked_mixed_steps", Json::int(chunked.mixed_steps as i64)),
+                    ("chunked_by_class", class_json(&chunked)),
+                    ("rtc_by_class", class_json(&rtc)),
+                ]),
+            ),
+            (
+                "occupancy",
+                Json::obj(vec![
+                    ("decode_waves", Json::num(decode_occ)),
+                    ("chunk_waves", Json::num(chunk_occ)),
+                ]),
+            ),
+            ("passed", Json::Bool(ok)),
+        ]);
+        match std::fs::write(&path, report.to_string_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+
+    if !ok {
+        std::process::exit(1);
+    }
+}

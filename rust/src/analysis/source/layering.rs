@@ -38,6 +38,7 @@ pub const MODULE_ORDER: &[&str] = &[
     "sim",
     "runtime",
     "backend",
+    "schedule",
     "coordinator",
     "workload",
     "evolve",
@@ -58,7 +59,8 @@ pub const ALLOWED: &[(&str, &[&str])] = &[
     ("evolve", &["heuristics", "planner", "sim", "util", "workload"]),
     ("workload", &["coordinator", "heuristics", "util"]),
     ("backend", &["heuristics", "planner", "runtime", "sim", "util"]),
-    ("coordinator", &["backend", "heuristics", "planner", "util"]),
+    ("schedule", &["util"]),
+    ("coordinator", &["backend", "heuristics", "planner", "schedule", "util"]),
     ("cluster", &["backend", "coordinator", "heuristics", "planner", "util", "workload"]),
     ("bench_harness", &["evolve", "heuristics", "planner", "sim", "util", "workload"]),
     ("analysis", &["heuristics", "planner", "util"]),

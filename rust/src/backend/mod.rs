@@ -93,27 +93,39 @@ pub struct BackendTopology {
     pub vocab: usize,
 }
 
-/// What kind of work a step carries. One step is homogeneous: the batcher
-/// finishes prompt ingestion before a request joins the decode batch.
+/// What kind of work a step carries. `Prefill` and `Decode` steps are
+/// homogeneous (the legacy monolithic schedule); `Mixed` steps carry
+/// bounded prefill chunks and decode rows in one wave (continuous
+/// batching with chunked prefill — see DESIGN.md §Continuous batching).
+/// Row kind inside a `Mixed` step is derived, not stored: a row with a
+/// non-empty `prompt` is a chunk, an empty one decodes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StepKind {
     Prefill,
     Decode,
+    Mixed,
 }
 
 /// One request row inside a step, described in backend-neutral terms.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// `Default` is an empty decode row — the engine pools rows across steps
+/// and refills them in place (the mixed-step zero-allocation path).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct StepRow {
     /// KV-cache row (assigned at admission, stable for the request's life).
     pub slot: usize,
     /// Decode: the token fed to the model this step.
     pub input_token: i32,
     /// Decode: cache position the new token is written to (== current KV
-    /// length). Prefill: tokens already ingested (resume point).
+    /// length). Prefill: tokens already ingested (resume point). Mixed
+    /// chunk rows: the chunk span's first prompt offset — `(position,
+    /// prompt.len())` IS the span, so step digests replay chunk schedules
+    /// deterministically with no extra fields.
     pub position: usize,
-    /// Current KV length of the row.
+    /// Current KV length of the row (for chunk rows: resident context the
+    /// chunk's queries attend over, including prefix-cache-shared blocks).
     pub kv_len: usize,
-    /// Prefill rows carry the full prompt; decode rows leave this empty.
+    /// Prefill rows carry the full prompt, mixed chunk rows exactly their
+    /// span of it; decode rows leave this empty.
     pub prompt: Vec<i32>,
     /// Prefill: leading prompt tokens whose KV already exists (the
     /// prefix-cache grant) — virtual-clock backends skip their ingestion
@@ -245,6 +257,32 @@ pub(crate) fn validate_batch(
                 bail!("backend '{}': prefill row without a prompt", caps.name);
             }
         }
+        StepKind::Mixed => {
+            // Row kind is derived: non-empty prompt = chunk, empty =
+            // decode. The plan covers exactly the decode wave.
+            let decode_rows = batch.rows.iter().filter(|r| r.prompt.is_empty()).count();
+            if decode_rows == batch.rows.len() {
+                bail!(
+                    "backend '{}': mixed step without a chunk row (use a decode step)",
+                    caps.name
+                );
+            }
+            match plan {
+                Some(_) if decode_rows == 0 => {
+                    bail!("backend '{}': chunk-only mixed steps are plan-free", caps.name);
+                }
+                None if decode_rows > 0 => {
+                    bail!(
+                        "backend '{}': mixed step's decode rows need a launch plan",
+                        caps.name
+                    );
+                }
+                Some(plan) if plan.metadata.pack_gqa && !caps.supports_pack_gqa => {
+                    bail!("backend '{}' does not support the packed-GQA layout", caps.name);
+                }
+                _ => {}
+            }
+        }
     }
     Ok(())
 }
@@ -333,6 +371,54 @@ mod tests {
         let plan = Planner::standard()
             .plan(&crate::heuristics::tiles::DecodeShape::llama70b_tp8(1, 512));
         assert!(validate_batch(&caps(), &ok, Some(&plan)).is_err());
+    }
+
+    #[test]
+    fn mixed_plan_covers_exactly_the_decode_wave() {
+        let chunk_row = StepRow {
+            slot: 1,
+            input_token: 0,
+            position: 64,
+            kv_len: 64,
+            prompt: vec![1; 32],
+            cached_tokens: 0,
+        };
+        let plan = Planner::sequence_aware()
+            .plan(&crate::heuristics::tiles::DecodeShape::llama70b_tp8(1, 512));
+        // Chunk + decode rows: the decode wave needs its plan.
+        let both = StepBatch {
+            kind: StepKind::Mixed,
+            rows: vec![decode_row(0), chunk_row.clone()],
+            bucket: 2,
+        };
+        assert!(validate_batch(&caps(), &both, Some(&plan)).is_ok());
+        assert!(validate_batch(&caps(), &both, None).is_err());
+        // Chunk-only: plan-free, like prefill.
+        let chunks_only =
+            StepBatch { kind: StepKind::Mixed, rows: vec![chunk_row], bucket: 1 };
+        assert!(validate_batch(&caps(), &chunks_only, None).is_ok());
+        assert!(validate_batch(&caps(), &chunks_only, Some(&plan)).is_err());
+        // No chunk row at all: that's a decode step, not a mixed one.
+        let no_chunks =
+            StepBatch { kind: StepKind::Mixed, rows: vec![decode_row(0)], bucket: 1 };
+        assert!(validate_batch(&caps(), &no_chunks, Some(&plan)).is_err());
+    }
+
+    #[test]
+    fn mixed_respects_pack_gqa_capability() {
+        let mut c = caps();
+        c.supports_pack_gqa = false;
+        let batch = StepBatch {
+            kind: StepKind::Mixed,
+            rows: vec![
+                decode_row(0),
+                StepRow { prompt: vec![1; 8], ..StepRow::default() },
+            ],
+            bucket: 2,
+        };
+        let plan = Planner::standard()
+            .plan(&crate::heuristics::tiles::DecodeShape::llama70b_tp8(1, 512));
+        assert!(validate_batch(&c, &batch, Some(&plan)).is_err());
     }
 
     #[test]

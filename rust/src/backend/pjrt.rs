@@ -265,6 +265,15 @@ impl ExecutionBackend for PjrtBackend {
 
     fn prepare(&mut self, batch: &StepBatch, plan: Option<&LaunchPlan>) -> Result<PreparedStep> {
         validate_batch(&self.caps(), batch, plan)?;
+        if batch.kind == StepKind::Mixed {
+            // The AOT artifact set compiles homogeneous prefill/decode
+            // entry points; a fused chunk+decode kernel doesn't exist
+            // yet. Fail at binding time, not mid-execution.
+            bail!(
+                "pjrt backend cannot launch mixed chunked-prefill steps \
+                 (no fused artifact); use the sim backend or --chunk-tokens 0"
+            );
+        }
         let artifact_splits =
             plan.map(|p| snap_splits(&self.splits, p.metadata.num_splits)).unwrap_or(1);
         if batch.rows.iter().any(|r| r.slot >= self.cache.max_batch) {
@@ -303,6 +312,9 @@ impl ExecutionBackend for PjrtBackend {
             StepKind::Decode => {
                 self.decode_batch(batch, step, &mut out.tokens)?;
             }
+            // Unreachable: `prepare` rejects mixed batches for this
+            // backend, and `execute` only runs prepared steps.
+            StepKind::Mixed => bail!("pjrt: mixed step was never prepared"),
         }
         out.elapsed_us = t0.elapsed().as_micros() as f64;
         Ok(())

@@ -40,7 +40,10 @@ pub struct StepDigest {
     pub num_splits: Option<usize>,
     /// Per row: (slot, input_token, position, kv_len, prompt_len,
     /// cached_tokens). Cached tokens are part of the identity because a
-    /// prefix-cache hit changes a prefill step's modeled cost.
+    /// prefix-cache hit changes a prefill step's modeled cost. For mixed
+    /// chunked-prefill steps, (position, prompt_len) is exactly the chunk
+    /// span, so chunk schedules replay deterministically with no extra
+    /// fields.
     pub rows: Vec<(usize, i32, usize, usize, usize, usize)>,
 }
 

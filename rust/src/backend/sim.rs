@@ -120,6 +120,36 @@ impl ExecutionBackend for SimBackend {
                     out.tokens.push((r.slot, SimBackend::synthetic_token(r.position)));
                 }
             }
+            StepKind::Mixed => {
+                // Chunked prefill interleaved with decode: decode rows
+                // (empty prompt) ride the planned wave priced exactly as
+                // a decode step; each chunk row adds its policy-invariant
+                // ingestion cost ([`Simulator::chunk_prefill_us`]) on top.
+                // Tokens stay position-pure, so chunked and monolithic
+                // schedules generate byte-identical streams.
+                let mut decode_priced = false;
+                for r in &batch.rows {
+                    if r.prompt.is_empty() {
+                        if !decode_priced {
+                            let plan = step
+                                .plan
+                                .as_ref()
+                                .context("mixed step's decode rows lost their plan")?;
+                            out.elapsed_us +=
+                                self.sim.kernel_us(&plan.metadata) + self.overhead_us;
+                            decode_priced = true;
+                        }
+                        out.tokens.push((r.slot, SimBackend::synthetic_token(r.position)));
+                    } else {
+                        // `position` is the span start; report the new
+                        // TOTAL ingested so the engine's chunk cursor
+                        // (`prefilled`) advances to the span end.
+                        out.elapsed_us += self.sim.chunk_prefill_us(r.prompt.len(), r.kv_len);
+                        out.prefilled.push((r.slot, r.position + r.prompt.len()));
+                        out.prefill_calls += 1;
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -207,6 +237,66 @@ mod tests {
         assert!(out.prefilled.is_empty());
         assert_eq!(out.prefill_calls, 0);
         assert_eq!(out.tokens.as_ptr(), ptr, "scratch buffer must be reused, not replaced");
+    }
+
+    #[test]
+    fn mixed_step_prices_decode_wave_plus_chunks() {
+        let mut b = SimBackend::h100();
+        let plan = Planner::sequence_aware().plan(&DecodeShape::llama70b_tp8(2, 512));
+        let batch = StepBatch {
+            kind: StepKind::Mixed,
+            rows: vec![
+                // Two decode rows share one wave price.
+                StepRow { slot: 0, position: 511, kv_len: 511, ..StepRow::default() },
+                StepRow { slot: 1, position: 300, kv_len: 300, ..StepRow::default() },
+                // One chunk row: 32 prompt tokens after 64 resident.
+                StepRow {
+                    slot: 2,
+                    position: 64,
+                    kv_len: 64,
+                    prompt: vec![7; 32],
+                    ..StepRow::default()
+                },
+            ],
+            bucket: 3,
+        };
+        let prepared = b.prepare(&batch, Some(&plan)).unwrap();
+        let mut out = StepOutcome::default();
+        b.execute(&batch, &prepared, &mut out).unwrap();
+        // Decode rows emit position-pure tokens; the chunk row reports its
+        // span end as the new ingestion total.
+        assert_eq!(out.tokens, vec![(0, 511), (1, 300)]);
+        assert_eq!(out.prefilled, vec![(2, 96)]);
+        assert_eq!(out.prefill_calls, 1);
+        let sim = Simulator::h100();
+        let want = sim.kernel_us(&plan.metadata)
+            + DEFAULT_FRAMEWORK_OVERHEAD_US
+            + sim.chunk_prefill_us(32, 64);
+        assert!((out.elapsed_us - want).abs() < 1e-9, "{} vs {want}", out.elapsed_us);
+    }
+
+    #[test]
+    fn chunk_only_mixed_step_is_plan_free() {
+        let mut b = SimBackend::h100();
+        let batch = StepBatch {
+            kind: StepKind::Mixed,
+            rows: vec![StepRow {
+                slot: 0,
+                position: 0,
+                kv_len: 0,
+                prompt: vec![7; 64],
+                ..StepRow::default()
+            }],
+            bucket: 1,
+        };
+        let prepared = b.prepare(&batch, None).unwrap();
+        let mut out = StepOutcome::default();
+        b.execute(&batch, &prepared, &mut out).unwrap();
+        assert!(out.tokens.is_empty());
+        assert_eq!(out.prefilled, vec![(0, 64)]);
+        // A lone full-prompt chunk with no resident context costs exactly
+        // bulk prefill: the chunk = ∞ timing identity at the backend level.
+        assert_eq!(out.elapsed_us, Simulator::h100().prefill_us(64));
     }
 
     #[test]

@@ -74,6 +74,13 @@ impl Batcher {
         self.cfg.max_batch
     }
 
+    /// Available artifact batch buckets, ascending. The step composer
+    /// picks the decode bucket from these; `plan_into` remains the
+    /// equivalent legacy derivation.
+    pub fn buckets(&self) -> &[usize] {
+        &self.cfg.batch_buckets
+    }
+
     /// Number of slots (== `max_batch`): the engine's per-step sweeps scan
     /// `0..num_slots()` directly instead of collecting an occupied-slot
     /// Vec on the hot path.
@@ -267,6 +274,43 @@ mod tests {
         assert_eq!(scratch.prefill_slots.capacity(), cap_p);
         assert_eq!(scratch.decode_slots.capacity(), cap_d);
         assert_eq!(b.num_slots(), 4);
+    }
+
+    #[test]
+    fn monolithic_composer_matches_plan_into() {
+        // The byte-identity foundation: under ChunkPolicy::Monolithic the
+        // step composer's plan is a 1:1 mapping of this batcher's own
+        // plan_into — chunks ↔ prefill_slots (whole remaining prompts),
+        // identical decode set, identical bucket choice.
+        use crate::schedule::{MixedStepPlan, ScheduleConfig, SlotView, StepComposer};
+        let mut b = batcher(4);
+        install(&mut b, 1, 8, 4);
+        install(&mut b, 2, 8, 4);
+        install(&mut b, 3, 8, 4);
+        b.running_mut(0).unwrap().prefilled = 8; // decoding
+        b.running_mut(1).unwrap().prefilled = 3; // mid-prefill
+        let composer = StepComposer::new(ScheduleConfig::default());
+        let mut mixed = MixedStepPlan::default();
+        let slots = (0..b.num_slots()).filter_map(|slot| {
+            b.running(slot).map(|r| SlotView {
+                slot,
+                prompt_len: r.req.prompt.len(),
+                prefilled: r.prefilled,
+                cached_tokens: r.cached_prompt_tokens,
+                done: r.done(),
+            })
+        });
+        composer.compose_into(slots, b.buckets(), &mut mixed);
+        let plan = b.plan();
+        let chunk_slots: Vec<usize> = mixed.chunks.iter().map(|c| c.slot).collect();
+        assert_eq!(chunk_slots, plan.prefill_slots);
+        for c in &mixed.chunks {
+            let r = b.running(c.slot).unwrap();
+            assert_eq!(c.start, r.prefilled, "span resumes where ingestion stopped");
+            assert_eq!(c.end(), r.req.prompt.len(), "monolithic spans finish the prompt");
+        }
+        assert_eq!(mixed.decode_slots, plan.decode_slots);
+        assert_eq!(mixed.decode_bucket, plan.decode_bucket);
     }
 
     #[test]

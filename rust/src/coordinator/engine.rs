@@ -21,13 +21,22 @@
 //! which selects between integrating the backend's modeled time and
 //! reading the wall clock.
 //!
+//! Step composition is delegated to [`crate::schedule::StepComposer`]
+//! (DESIGN.md §Continuous batching): each step the engine projects the
+//! running set into [`SlotView`]s and the composer picks this step's work
+//! — whole-prompt prefill under the default monolithic policy (the legacy
+//! prefill-first step, byte for byte), or bounded prefill chunks
+//! interleaved with the decode wave under `ChunkPolicy::Bounded`.
+//!
 //! The step loop is the serving hot path, and it is **zero-allocation in
-//! steady state** (DESIGN.md §Decode hot path): the per-step `StepPlan`,
-//! `StepBatch`, `StepOutcome`, and retirement list live in a
-//! [`StepScratch`] reused across steps; the split decision rides the
+//! steady state** (DESIGN.md §Decode hot path): the per-step
+//! `MixedStepPlan`, `StepBatch`, `StepOutcome`, and retirement list live
+//! in a [`StepScratch`] reused across steps; the split decision rides the
 //! scheduler's `PlanCursor`; and per-request buffers are pre-sized at
 //! admission. `tests/alloc_guard.rs` holds a warmed-up decode step to
-//! exactly zero heap allocations under a counting global allocator.
+//! exactly zero heap allocations under a counting global allocator, and
+//! `tests/alloc_guard_chunked.rs` does the same for a warm chunking
+//! window.
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -38,9 +47,10 @@ use crate::backend::{
     AttnGeometry, BackendCaps, ExecutionBackend, StepBatch, StepKind, StepOutcome, StepRow,
 };
 use crate::planner::{CursorStats, Planner};
+use crate::schedule::{ChunkSpan, MixedStepPlan, ScheduleConfig, SlotView, StepComposer};
 
 use super::admission::{AdmissionConfig, AdmissionController, AdmissionStats, SubmitError};
-use super::batcher::{Batcher, BatcherConfig, StepPlan};
+use super::batcher::{Batcher, BatcherConfig};
 use super::kv_cache::{BlockManager, BlockManagerConfig};
 use super::lifecycle::{
     handle_pair, CancelKind, RequestHandle, StreamEvent, SubmitOptions, TrackedRequest,
@@ -55,6 +65,10 @@ pub struct EngineConfig {
     pub batcher: BatcherConfig,
     pub blocks: BlockManagerConfig,
     pub admission: AdmissionConfig,
+    /// Step composition: chunked prefill + per-step token budget. The
+    /// default ([`ScheduleConfig::default`], monolithic/unbounded) is
+    /// byte-identical to the pre-composer engine.
+    pub schedule: ScheduleConfig,
 }
 
 /// Builder: the only way to construct an [`Engine`]. The backend is
@@ -115,11 +129,13 @@ impl EngineBuilder {
         let scheduler = DecodeScheduler::new(planner, geometry, available_splits);
         let mut blocks_cfg = self.cfg.blocks.clone();
         blocks_cfg.max_seq = blocks_cfg.max_seq.min(geometry.max_seq);
+        self.cfg.schedule.validate(self.cfg.batcher.max_batch)?;
         let caps = self.backend.caps();
         Ok(Engine {
             backend: self.backend,
             caps,
             scheduler,
+            composer: StepComposer::new(self.cfg.schedule),
             batcher: Batcher::new(self.cfg.batcher.clone()),
             admission: AdmissionController::new(self.cfg.admission.clone()),
             blocks: BlockManager::new(blocks_cfg),
@@ -137,9 +153,11 @@ impl EngineBuilder {
 /// (the zero-allocation decode hot path). Each is `mem::take`n for the
 /// duration of a step (an `Option`-style move, no allocation) and put
 /// back, so `&mut self` methods can run while the buffers are borrowed.
+/// `batch.rows` doubles as a row pool for mixed steps: chunk rows reuse
+/// the prompt buffers of previous steps' rows instead of reallocating.
 #[derive(Default)]
 struct StepScratch {
-    plan: StepPlan,
+    mixed: MixedStepPlan,
     batch: StepBatch,
     outcome: StepOutcome,
     to_retire: Vec<(usize, FinishReason)>,
@@ -150,6 +168,7 @@ pub struct Engine {
     backend: Box<dyn ExecutionBackend>,
     caps: BackendCaps,
     scheduler: DecodeScheduler,
+    composer: StepComposer,
     batcher: Batcher,
     admission: AdmissionController,
     blocks: BlockManager,
@@ -206,6 +225,11 @@ impl Engine {
     /// The prefix-sharing KV block manager (read-only).
     pub fn block_manager(&self) -> &BlockManager {
         &self.blocks
+    }
+
+    /// The step-composition policy this engine runs under.
+    pub fn schedule(&self) -> &ScheduleConfig {
+        self.composer.config()
     }
 
     /// Admission counters (accepted, rejected, reaped).
@@ -461,6 +485,7 @@ impl Engine {
             prompt_len: t.req.prompt.len(),
             tokens: Vec::new(),
             reason,
+            priority: t.ticket.priority,
             timing: RequestTiming {
                 arrival_us: t.req.arrival_us,
                 finished_us: now,
@@ -490,9 +515,10 @@ impl Engine {
     // The step loop
     // ------------------------------------------------------------------
 
-    /// One engine step: ingest → reap → admit → prefill one batch or
-    /// decode one batch → stream/retire. Steady-state decode performs no
-    /// heap allocation: every per-step buffer comes from [`StepScratch`].
+    /// One engine step: ingest → reap → admit → compose (prefill chunks +
+    /// decode wave) → execute → stream/retire. Steady-state decode
+    /// performs no heap allocation: every per-step buffer comes from
+    /// [`StepScratch`].
     // pallas-lint: no_alloc
     pub fn step(&mut self) -> Result<()> {
         if self.caps.virtual_clock {
@@ -514,12 +540,12 @@ impl Engine {
             }
         }
         // Take the plan scratch for the step (an Option-style move, no
-        // allocation), fill it from the batcher, and put it back after —
-        // `step_with_plan` needs `&mut self` while the plan is borrowed.
-        let mut plan = std::mem::take(&mut self.scratch.plan);
-        self.batcher.plan_into(&mut plan);
-        let result = self.step_with_plan(&plan);
-        self.scratch.plan = plan;
+        // allocation), compose it over the running set, and put it back
+        // after — `step_with_mixed` needs `&mut self` while it's borrowed.
+        let mut mixed = std::mem::take(&mut self.scratch.mixed);
+        self.compose_step(&mut mixed);
+        let result = self.step_with_mixed(&mixed);
+        self.scratch.mixed = mixed;
         // The block manager's prefix-cache counters are the single source
         // of truth; the metrics mirror them by copy (a Copy struct — no
         // allocation on the hot path), same discipline as the rejection
@@ -528,26 +554,97 @@ impl Engine {
         result
     }
 
-    fn step_with_plan(&mut self, plan: &StepPlan) -> Result<()> {
-        if !plan.prefill_slots.is_empty() {
-            self.run_prefill(&plan.prefill_slots)
-        } else if !plan.decode_slots.is_empty() {
-            let bucket = plan.decode_bucket.context("decode slots without a bucket")?;
-            self.run_decode(&plan.decode_slots, bucket)
+    /// Project the running set into [`SlotView`]s and let the composer
+    /// pick this step's work. Under the default monolithic policy the
+    /// result is exactly [`Batcher::plan_into`]'s plan (chunks ↔
+    /// prefill_slots), proven by the equivalence test in `batcher.rs`.
+    // pallas-lint: no_alloc
+    fn compose_step(&self, out: &mut MixedStepPlan) {
+        let batcher = &self.batcher;
+        let slots = (0..batcher.num_slots()).filter_map(move |slot| {
+            batcher.running(slot).map(|r| SlotView {
+                slot,
+                prompt_len: r.req.prompt.len(),
+                prefilled: r.prefilled,
+                cached_tokens: r.cached_prompt_tokens,
+                done: r.done(),
+            })
+        });
+        self.composer.compose_into(slots, batcher.buckets(), out);
+    }
+
+    fn step_with_mixed(&mut self, mixed: &MixedStepPlan) -> Result<()> {
+        if mixed.chunks.is_empty() {
+            if mixed.decode_slots.is_empty() {
+                return Ok(());
+            }
+            let bucket = mixed.decode_bucket.context("decode slots without a bucket")?;
+            return self.run_decode(&mixed.decode_slots, bucket);
+        }
+        if self.composer.is_monolithic() {
+            // Monolithic spans cover each remaining prompt whole, and
+            // decode waits — the legacy prefill-first step, byte for byte.
+            self.run_prefill(&mixed.chunks)
         } else {
-            Ok(())
+            self.run_mixed(mixed)
         }
     }
 
-    fn run_prefill(&mut self, slots: &[usize]) -> Result<()> {
+    fn run_prefill(&mut self, spans: &[ChunkSpan]) -> Result<()> {
         let mut batch = std::mem::take(&mut self.scratch.batch);
         let mut outcome = std::mem::take(&mut self.scratch.outcome);
         let result = (|| {
-            self.fill_prefill_batch(&mut batch, slots)?;
+            self.fill_prefill_batch(&mut batch, spans)?;
             let prepared = self.backend.prepare(&batch, None)?;
             self.backend.execute(&batch, &prepared, &mut outcome)?;
             self.apply_outcome(&outcome)
         })();
+        self.metrics.record_rows(spans.len(), 0);
+        self.scratch.batch = batch;
+        self.scratch.outcome = outcome;
+        result
+    }
+
+    /// One mixed step: every chunk row ingests its span, decode rows each
+    /// emit a token under one shared launch plan. The decode wave is
+    /// planned exactly as a pure-decode step of the same shape; the chunk
+    /// wave gets its own `q_len > 1` decision (separate cursor) whose
+    /// occupancy is reported via [`EngineMetrics::record_chunk_wave`].
+    fn run_mixed(&mut self, mixed: &MixedStepPlan) -> Result<()> {
+        let decode_decision = if mixed.decode_slots.is_empty() {
+            None
+        } else {
+            let max_kv = mixed
+                .decode_slots
+                .iter()
+                .map(|&s| self.batcher.running(s).map(|r| r.kv_len() + 1).unwrap_or(1))
+                .max()
+                .unwrap_or(1);
+            let d = self.scheduler.decide(mixed.decode_slots.len(), max_kv)?;
+            self.metrics.record_split(d.plan.metadata.num_splits);
+            self.metrics.record_decode_occupancy(d.plan.occupancy);
+            Some(d)
+        };
+        // The chunk wave's split decision: l_q = longest chunk, l_k = the
+        // longest row's post-chunk context. Chunk rows are executed by the
+        // backend's prefill path (no split-kernel launch yet), so only the
+        // planned occupancy is recorded — the first q_len > 1 evidence the
+        // heuristic produces.
+        let l_q = mixed.chunks.iter().map(|c| c.len).max().unwrap_or(1);
+        let max_ctx = mixed.chunks.iter().map(|c| c.end()).max().unwrap_or(1);
+        let wave = self.scheduler.decide_mixed(mixed.chunks.len(), l_q, max_ctx)?;
+        self.metrics.record_chunk_wave(wave.plan.occupancy);
+        let mut batch = std::mem::take(&mut self.scratch.batch);
+        let mut outcome = std::mem::take(&mut self.scratch.outcome);
+        let result = (|| {
+            self.fill_mixed_batch(&mut batch, mixed)?;
+            let plan = decode_decision.as_ref().map(|d| &d.plan);
+            let prepared = self.backend.prepare(&batch, plan)?;
+            self.backend.execute(&batch, &prepared, &mut outcome)?;
+            self.apply_outcome(&outcome)
+        })();
+        self.metrics.mixed_steps += 1;
+        self.metrics.record_rows(mixed.chunks.len(), mixed.decode_slots.len());
         self.scratch.batch = batch;
         self.scratch.outcome = outcome;
         result
@@ -573,19 +670,20 @@ impl Engine {
             self.backend.execute(&batch, &prepared, &mut outcome)?;
             self.apply_outcome(&outcome)
         })();
+        self.metrics.record_rows(0, slots.len());
         self.scratch.batch = batch;
         self.scratch.outcome = outcome;
         result
     }
 
-    fn fill_prefill_batch(&self, batch: &mut StepBatch, slots: &[usize]) -> Result<()> {
+    fn fill_prefill_batch(&self, batch: &mut StepBatch, spans: &[ChunkSpan]) -> Result<()> {
         batch.kind = StepKind::Prefill;
         batch.bucket = self.batcher.max_batch();
         batch.rows.clear();
-        for &slot in slots {
-            let r = self.batcher.running(slot).context("prefill slot")?;
+        for span in spans {
+            let r = self.batcher.running(span.slot).context("prefill slot")?;
             batch.rows.push(StepRow {
-                slot,
+                slot: span.slot,
                 input_token: 0,
                 position: r.prefilled,
                 kv_len: r.kv_len(),
@@ -593,6 +691,47 @@ impl Engine {
                 cached_tokens: r.cached_prompt_tokens,
             });
         }
+        Ok(())
+    }
+
+    /// Fill a [`StepKind::Mixed`] batch: decode rows first (they carry the
+    /// launch plan's shape), then one row per chunk span. Rows are pooled —
+    /// existing entries (and their prompt buffers) are overwritten in
+    /// place, so a steady chunking window allocates nothing once warm.
+    // pallas-lint: no_alloc
+    fn fill_mixed_batch(&self, batch: &mut StepBatch, mixed: &MixedStepPlan) -> Result<()> {
+        batch.kind = StepKind::Mixed;
+        let n_rows = mixed.decode_slots.len() + mixed.chunks.len();
+        batch.bucket = mixed.decode_bucket.unwrap_or(0).max(n_rows);
+        // Pool growth is amortized; a warm window overwrites in place.
+        batch.rows.resize_with(n_rows.max(batch.rows.len()), StepRow::default);
+        let mut i = 0;
+        for &slot in &mixed.decode_slots {
+            let r = self.batcher.running(slot).context("mixed decode slot")?;
+            let row = &mut batch.rows[i];
+            row.slot = slot;
+            row.input_token = *r.generated.last().unwrap_or(r.req.prompt.last().unwrap_or(&0));
+            row.position = r.kv_len();
+            row.kv_len = r.kv_len();
+            row.prompt.clear();
+            row.cached_tokens = 0;
+            i += 1;
+        }
+        for span in &mixed.chunks {
+            let r = self.batcher.running(span.slot).context("mixed chunk slot")?;
+            let row = &mut batch.rows[i];
+            row.slot = span.slot;
+            row.input_token = 0;
+            row.position = span.start;
+            // Resident context the chunk attends over (including any
+            // prefix-cache-shared blocks the first chunk skipped).
+            row.kv_len = span.start;
+            row.prompt.clear();
+            row.prompt.extend_from_slice(&r.req.prompt[span.start..span.end()]);
+            row.cached_tokens = 0;
+            i += 1;
+        }
+        batch.rows.truncate(n_rows);
         Ok(())
     }
 
@@ -698,8 +837,9 @@ impl Engine {
             finished_us: now,
             n_generated: r.generated.len(),
         };
+        let priority = r.ticket.priority;
         if reason.is_natural() {
-            self.metrics.record_finished(&timing);
+            self.metrics.record_finished(&timing, priority);
         } else {
             self.metrics.record_cancelled(reason == FinishReason::DeadlineExceeded);
         }
@@ -708,6 +848,7 @@ impl Engine {
             prompt_len: r.req.prompt.len(),
             tokens: r.generated,
             reason,
+            priority,
             timing,
         };
         r.ticket.sink.send(StreamEvent::Finished(fin.clone()));
@@ -844,12 +985,24 @@ mod tests {
     use super::*;
     use crate::backend::SimBackend;
     use crate::coordinator::lifecycle::Priority;
+    use crate::schedule::TokenBudget;
 
     fn sim_engine(planner: Planner) -> Engine {
         Engine::builder(Box::new(SimBackend::h100()))
             .planner(planner)
             .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
             .available_splits(vec![1, 3])
+            .build()
+            .unwrap()
+    }
+
+    fn chunked_engine(schedule: ScheduleConfig) -> Engine {
+        let cfg = EngineConfig { schedule, ..EngineConfig::default() };
+        Engine::builder(Box::new(SimBackend::h100()))
+            .planner(Planner::sequence_aware())
+            .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+            .available_splits(vec![1, 3])
+            .config(cfg)
             .build()
             .unwrap()
     }
@@ -911,6 +1064,110 @@ mod tests {
         assert!(e.metrics.split_histogram.get(3).copied().unwrap_or(0) > 0);
         assert_eq!(first[0].tokens, second[0].tokens);
         assert_eq!(e.block_manager().num_seqs(), 0);
+        e.block_manager().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_token_streams() {
+        // Chunking reshapes steps, never content: the sim's synthetic
+        // token is position-pure, so any chunk schedule must reproduce the
+        // monolithic run's tokens and finish reasons exactly.
+        let run = |schedule: ScheduleConfig| {
+            let mut e = chunked_engine(schedule);
+            for (id, (plen, new)) in [(300usize, 8usize), (37, 12), (520, 8)].iter().enumerate() {
+                e.submit(Request::new(id as u64, vec![1; *plen], *new)).unwrap();
+            }
+            let mut done = e.run_until_idle().unwrap();
+            done.sort_by_key(|f| f.id);
+            assert!(e.block_manager().check_invariants().is_ok());
+            assert_eq!(e.block_manager().num_seqs(), 0);
+            (done, e.metrics.mixed_steps, e.metrics.prefill_rows)
+        };
+        let (mono, mono_mixed, _) = run(ScheduleConfig::default());
+        let (chunked, chunked_mixed, chunked_rows) =
+            run(ScheduleConfig::bounded(64, TokenBudget::capped(256)));
+        assert_eq!(mono_mixed, 0, "monolithic never composes a mixed step");
+        assert!(chunked_mixed > 0, "bounded chunking must interleave");
+        // 300/64 + 37/64 + 520/64 span ceilings = 5 + 1 + 9 chunk rows.
+        assert!(chunked_rows >= 15, "rows={chunked_rows}");
+        for (a, b) in mono.iter().zip(&chunked) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "id={}", a.id);
+            assert_eq!(a.reason, b.reason);
+        }
+    }
+
+    #[test]
+    fn chunking_keeps_decode_flowing_during_long_prefill() {
+        // A request mid-generation keeps emitting every step while a long
+        // prompt ingests chunk by chunk — the head-of-line fix itself.
+        let mut e = chunked_engine(ScheduleConfig::bounded(64, TokenBudget::unbounded()));
+        e.submit(Request::new(1, vec![1; 20], 40)).unwrap();
+        // Warm up until request 1 is decoding.
+        while e.metrics.tokens_generated < 4 {
+            e.step().unwrap();
+        }
+        e.submit(Request::new(2, vec![2; 600], 4)).unwrap();
+        let mixed_before = e.metrics.mixed_steps;
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done.len(), 2);
+        // 600 tokens / 64-token chunks = 10 mixed steps, each carrying
+        // request 1's decode row alongside the chunk.
+        assert!(e.metrics.mixed_steps - mixed_before >= 10, "{}", e.metrics.mixed_steps);
+        assert!(e.metrics.decode_rows > 0 && e.metrics.prefill_rows >= 10);
+        let r1 = done.iter().find(|f| f.id == 1).unwrap();
+        assert_eq!(r1.tokens.len(), 40);
+        assert_eq!(e.block_manager().num_seqs(), 0);
+    }
+
+    #[test]
+    fn token_budget_rations_chunks() {
+        // Budget 64 with chunk 64 and a live decode row: the chunk shrinks
+        // to budget − decode_rows = 63, so the 600-token prompt needs more
+        // steps but still lands exactly.
+        let mut e = chunked_engine(ScheduleConfig::bounded(64, TokenBudget::capped(64)));
+        e.submit(Request::new(1, vec![1; 20], 64)).unwrap();
+        while e.metrics.tokens_generated < 2 {
+            e.step().unwrap();
+        }
+        e.submit(Request::new(2, vec![2; 600], 4)).unwrap();
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done.len(), 2);
+        let r2 = done.iter().find(|f| f.id == 2).unwrap();
+        assert_eq!(r2.tokens.len(), 4);
+        assert_eq!(r2.prompt_len, 600);
+        e.block_manager().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn invalid_schedule_rejected_at_build() {
+        let cfg = EngineConfig {
+            schedule: ScheduleConfig::bounded(64, TokenBudget::capped(2)),
+            ..EngineConfig::default()
+        };
+        // Budget 2 < max_batch 4: decode rows would be rationed.
+        let err = Engine::builder(Box::new(SimBackend::h100()))
+            .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+            .config(cfg)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("decode"), "{err:#}");
+    }
+
+    #[test]
+    fn cancel_mid_chunking_frees_all_blocks() {
+        let mut e = chunked_engine(ScheduleConfig::bounded(32, TokenBudget::unbounded()));
+        let free_before = e.block_manager().free_blocks();
+        let victim = e.submit(Request::new(1, vec![3; 500], 8)).unwrap();
+        // Step a few chunks in, then cancel mid-prefill.
+        for _ in 0..4 {
+            e.step().unwrap();
+        }
+        assert!(e.running_len() == 1, "still chunking");
+        victim.cancel();
+        let done = e.run_until_idle().unwrap();
+        assert_eq!(done[0].reason, FinishReason::Cancelled);
+        assert_eq!(e.block_manager().free_blocks(), free_before, "all chunk blocks freed");
         e.block_manager().check_invariants().unwrap();
     }
 

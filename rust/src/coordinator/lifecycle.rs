@@ -381,6 +381,7 @@ mod tests {
             prompt_len: 3,
             tokens: vec![11, 12],
             reason: FinishReason::Length,
+            priority: Priority::Standard,
             timing: Default::default(),
         }));
         drop(ticket);

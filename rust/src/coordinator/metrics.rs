@@ -3,6 +3,7 @@
 use crate::util::stats::Summary;
 
 use super::kv_cache::PrefixCacheStats;
+use super::lifecycle::{Priority, PRIORITY_CLASSES};
 
 /// Timing of one completed request (all µs, relative to engine start).
 #[derive(Debug, Clone, Default)]
@@ -46,6 +47,14 @@ impl RequestTiming {
 pub struct EngineMetrics {
     pub steps: usize,
     pub decode_steps: usize,
+    /// Steps that interleaved chunked-prefill rows with decode rows (a
+    /// subset of `steps`; zero under monolithic prefill).
+    pub mixed_steps: usize,
+    /// Rows executed per kind, summed over all steps: chunk/prefill rows
+    /// ingest prompt tokens, decode rows emit one token each. The
+    /// continuous-batching bench reports the interleave ratio from these.
+    pub prefill_rows: usize,
+    pub decode_rows: usize,
     pub prefill_calls: usize,
     pub tokens_generated: usize,
     pub requests_finished: usize,
@@ -66,6 +75,12 @@ pub struct EngineMetrics {
     step_latencies_us: Vec<f64>,
     tpots_us: Vec<f64>,
     ttfts_us: Vec<f64>,
+    /// TTFT/TPOT samples split by admission class (index =
+    /// `Priority::index()`), so mixed-load runs can gate interactive
+    /// latency separately from batch-lane latency. The flat `ttfts_us` /
+    /// `tpots_us` remain the all-classes aggregate.
+    ttfts_class_us: [Vec<f64>; PRIORITY_CLASSES],
+    tpots_class_us: [Vec<f64>; PRIORITY_CLASSES],
     /// Histogram of split counts chosen by the scheduler (index = splits).
     pub split_histogram: Vec<usize>,
     /// Sum of planned first-wave SM occupancy over decode steps (the §2.1
@@ -73,6 +88,13 @@ pub struct EngineMetrics {
     /// occupancy is what the cluster fleet aggregates to show TP sharding
     /// entering the paper's starved regime.
     decode_occupancy_sum: f64,
+    /// Sum/count of planned first-wave occupancy over chunk waves — the
+    /// `q_len > 1` side of the split heuristic's evidence. Chunk rows pack
+    /// `l_q * group` query rows per M-block, so their occupancy sits far
+    /// above the starved decode regime; reporting the two separately keeps
+    /// the decode mean honest under mixed steps.
+    chunk_occupancy_sum: f64,
+    chunk_waves: usize,
     pub wall_us: u64,
 }
 
@@ -86,6 +108,10 @@ impl EngineMetrics {
         self.step_latencies_us.reserve(steps);
         self.tpots_us.reserve(requests);
         self.ttfts_us.reserve(requests);
+        for class in 0..PRIORITY_CLASSES {
+            self.ttfts_class_us[class].reserve(requests);
+            self.tpots_class_us[class].reserve(requests);
+        }
         // Headroom for any split count a device can choose (caps are
         // <= 128 on every preset), so a first-seen split mid-window
         // resizes within capacity instead of reallocating.
@@ -121,13 +147,35 @@ impl EngineMetrics {
         (self.decode_steps > 0).then(|| self.decode_occupancy_sum / self.decode_steps as f64)
     }
 
-    /// Record a naturally-finished request's timing.
-    pub fn record_finished(&mut self, timing: &RequestTiming) {
+    /// Record the row mix of one executed step (chunk/prefill rows vs
+    /// decode rows).
+    pub fn record_rows(&mut self, prefill: usize, decode: usize) {
+        self.prefill_rows += prefill;
+        self.decode_rows += decode;
+    }
+
+    /// Record the planned first-wave occupancy of one chunk wave
+    /// (`q_len > 1` rows inside a mixed step).
+    pub fn record_chunk_wave(&mut self, occupancy: f64) {
+        self.chunk_occupancy_sum += occupancy;
+        self.chunk_waves += 1;
+    }
+
+    /// Mean planned SM occupancy across chunk waves, if any ran.
+    pub fn mean_chunk_occupancy(&self) -> Option<f64> {
+        (self.chunk_waves > 0).then(|| self.chunk_occupancy_sum / self.chunk_waves as f64)
+    }
+
+    /// Record a naturally-finished request's timing under its admission
+    /// class.
+    pub fn record_finished(&mut self, timing: &RequestTiming, priority: Priority) {
         self.requests_finished += 1;
         if timing.n_generated >= 2 {
             self.tpots_us.push(timing.tpot_us());
+            self.tpots_class_us[priority.index()].push(timing.tpot_us());
         }
         self.ttfts_us.push(timing.ttft_us() as f64);
+        self.ttfts_class_us[priority.index()].push(timing.ttft_us() as f64);
     }
 
     /// Record a request cut short (cancel, shutdown, or deadline).
@@ -153,6 +201,18 @@ impl EngineMetrics {
         (!self.ttfts_us.is_empty()).then(|| Summary::of(&self.ttfts_us))
     }
 
+    /// TTFT distribution for one admission class.
+    pub fn ttft_for(&self, priority: Priority) -> Option<Summary> {
+        let samples = &self.ttfts_class_us[priority.index()];
+        (!samples.is_empty()).then(|| Summary::of(samples))
+    }
+
+    /// TPOT distribution for one admission class.
+    pub fn tpot_for(&self, priority: Priority) -> Option<Summary> {
+        let samples = &self.tpots_class_us[priority.index()];
+        (!samples.is_empty()).then(|| Summary::of(samples))
+    }
+
     /// Generated tokens per second of wall time.
     pub fn throughput_tok_s(&self) -> f64 {
         if self.wall_us == 0 {
@@ -168,6 +228,12 @@ impl EngineMetrics {
             "steps={} (decode={} prefill_calls={}) tokens={} finished={}\n",
             self.steps, self.decode_steps, self.prefill_calls, self.tokens_generated, self.requests_finished
         ));
+        if self.mixed_steps > 0 {
+            out.push_str(&format!(
+                "mixed steps={} rows: prefill={} decode={}\n",
+                self.mixed_steps, self.prefill_rows, self.decode_rows
+            ));
+        }
         if self.requests_cancelled + self.rejected_backpressure + self.rejected_unschedulable > 0 {
             out.push_str(&format!(
                 "cancelled={} (deadline={}) rejected: backpressure={} unschedulable={}\n",
@@ -189,6 +255,26 @@ impl EngineMetrics {
         if let Some(s) = self.ttft() {
             out.push_str(&format!("TTFT µs: mean={:.1} p50={:.1} p99={:.1}\n", s.mean, s.p50, s.p99));
         }
+        // Per-class split only when the run actually mixed classes.
+        let classes_seen =
+            Priority::all().iter().filter(|p| self.ttft_for(**p).is_some()).count();
+        if classes_seen > 1 {
+            for p in Priority::all() {
+                if let Some(s) = self.ttft_for(p) {
+                    out.push_str(&format!(
+                        "  {} TTFT µs: mean={:.1} p50={:.1} p99={:.1}",
+                        p.name(),
+                        s.mean,
+                        s.p50,
+                        s.p99
+                    ));
+                    if let Some(t) = self.tpot_for(p) {
+                        out.push_str(&format!("  TPOT p50={:.1}", t.p50));
+                    }
+                    out.push('\n');
+                }
+            }
+        }
         out.push_str(&format!("throughput: {:.1} tok/s\n", self.throughput_tok_s()));
         if self.prefix.lookups > 0 {
             out.push_str(&format!(
@@ -206,6 +292,9 @@ impl EngineMetrics {
         }
         if let Some(occ) = self.mean_occupancy() {
             out.push_str(&format!("mean decode SM occupancy: {:.1}%\n", occ * 100.0));
+        }
+        if let Some(occ) = self.mean_chunk_occupancy() {
+            out.push_str(&format!("mean chunk-wave SM occupancy: {:.1}%\n", occ * 100.0));
         }
         let hist: Vec<String> = self
             .split_histogram
@@ -258,6 +347,57 @@ mod tests {
         let occ = m.mean_occupancy().unwrap();
         assert!((occ - 0.03).abs() < 1e-12, "occ={occ}");
         assert!(m.report().contains("mean decode SM occupancy"));
+    }
+
+    #[test]
+    fn per_class_latency_split() {
+        let mut m = EngineMetrics::default();
+        let timing = |arrival: u64, first: u64| RequestTiming {
+            arrival_us: arrival,
+            scheduled_us: arrival,
+            first_token_us: first,
+            finished_us: first + 900,
+            n_generated: 10,
+        };
+        m.record_finished(&timing(0, 100), Priority::Interactive);
+        m.record_finished(&timing(0, 5000), Priority::Batch);
+        assert_eq!(m.requests_finished, 2);
+        // Aggregate sees both; each class sees only its own.
+        assert_eq!(m.ttft().unwrap().max, 5000.0);
+        assert_eq!(m.ttft_for(Priority::Interactive).unwrap().max, 100.0);
+        assert_eq!(m.ttft_for(Priority::Batch).unwrap().p50, 5000.0);
+        assert_eq!(m.ttft_for(Priority::Standard), None);
+        assert!((m.tpot_for(Priority::Interactive).unwrap().p50 - 100.0).abs() < 1e-9);
+        let rep = m.report();
+        assert!(rep.contains("interactive TTFT"), "{rep}");
+        assert!(rep.contains("batch TTFT"), "{rep}");
+        assert!(!rep.contains("standard TTFT"), "{rep}");
+    }
+
+    #[test]
+    fn single_class_report_skips_the_split() {
+        let mut m = EngineMetrics::default();
+        let t = RequestTiming { first_token_us: 100, finished_us: 200, n_generated: 2, ..Default::default() };
+        m.record_finished(&t, Priority::Standard);
+        assert!(!m.report().contains("standard TTFT"), "{}", m.report());
+    }
+
+    #[test]
+    fn chunk_waves_and_row_mix() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.mean_chunk_occupancy(), None);
+        m.mixed_steps = 2;
+        m.record_rows(3, 5);
+        m.record_rows(1, 6);
+        m.record_chunk_wave(0.5);
+        m.record_chunk_wave(0.7);
+        assert_eq!(m.prefill_rows, 4);
+        assert_eq!(m.decode_rows, 11);
+        let occ = m.mean_chunk_occupancy().unwrap();
+        assert!((occ - 0.6).abs() < 1e-12, "occ={occ}");
+        let rep = m.report();
+        assert!(rep.contains("mixed steps=2 rows: prefill=4 decode=11"), "{rep}");
+        assert!(rep.contains("mean chunk-wave SM occupancy: 60.0%"), "{rep}");
     }
 
     #[test]

@@ -52,6 +52,9 @@ pub struct FinishedRequest {
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
     pub reason: FinishReason,
+    /// Admission class the request ran under (mixed-load drivers split
+    /// TTFT/TPOT by class).
+    pub priority: super::lifecycle::Priority,
     pub timing: super::metrics::RequestTiming,
 }
 

@@ -96,10 +96,32 @@ impl DecodeScheduler {
     /// from scratch (the cursor equivalence property).
     // pallas-lint: no_alloc
     pub fn decide(&mut self, batch: usize, max_kv_len: usize) -> Result<StepDecision> {
-        let shape = self.step_shape(batch, max_kv_len);
-        // Linear cursor lookup by live batch size; a fresh cursor keys
+        self.decide_mixed(batch, 1, max_kv_len)
+    }
+
+    /// Generalized decision for a wave of `batch` rows of `l_q` query
+    /// tokens each — the chunked-prefill (and, later, speculative-verify)
+    /// regime where `q_len > 1` rows shift `m_blocks` and with it the
+    /// occupancy the split policy reasons about. `l_q = 1` is exactly
+    /// [`DecodeScheduler::decide`]. Rides the same [`PlanCursor`]
+    /// machinery (both the plan-cache key and the cursor key already
+    /// carry `l_q`); cursors are indexed on `(batch, l_q)` so chunk waves
+    /// never thrash the decode cursors' pinned decisions.
+    // pallas-lint: no_alloc
+    pub fn decide_mixed(
+        &mut self,
+        batch: usize,
+        l_q: usize,
+        max_kv_len: usize,
+    ) -> Result<StepDecision> {
+        let shape = self.wave_shape(batch, l_q, max_kv_len);
+        // Linear cursor lookup by live (batch, l_q); a fresh cursor keys
         // itself on its first refill inside `plan`.
-        let idx = match self.cursors.iter().position(|c| c.batch() == batch) {
+        let idx = match self
+            .cursors
+            .iter()
+            .position(|c| c.batch() == batch && c.l_q() == shape.l_q)
+        {
             Some(idx) => idx,
             None => {
                 self.cursors.push(self.planner.cursor());
@@ -159,8 +181,16 @@ impl DecodeScheduler {
     }
 
     fn step_shape(&self, batch: usize, max_kv_len: usize) -> DecodeShape {
+        self.wave_shape(batch, 1, max_kv_len)
+    }
+
+    /// The live attention shape for a `q_len = l_q` wave: `l_k` clamped to
+    /// the artifact grid's `max_seq` (and to ≥ 1 — an empty cache still
+    /// launches over one padded block), `l_q` clamped to ≥ 1 by
+    /// [`DecodeShape::mixed`].
+    fn wave_shape(&self, batch: usize, l_q: usize, max_kv_len: usize) -> DecodeShape {
         let l_k = max_kv_len.min(self.geometry.max_seq).max(1);
-        DecodeShape::decode(batch, l_k, self.geometry.h_q, self.geometry.h_kv, self.geometry.d)
+        DecodeShape::mixed(batch, l_q, l_k, self.geometry.h_q, self.geometry.h_kv, self.geometry.d)
     }
 
     /// Snap the policy's split count onto the compiled variants: the
@@ -278,6 +308,41 @@ mod tests {
         let cursor = s.cursor_stats();
         assert_eq!(cursor.refills, 2, "one per batch size: {cursor:?}");
         assert_eq!(cursor.hits, 62, "{cursor:?}");
+    }
+
+    #[test]
+    fn mixed_waves_ride_their_own_cursor() {
+        // Interleaving a decode wave (l_q = 1) with a chunk wave (l_q = 64)
+        // at the same batch size must not thrash either cursor: the lookup
+        // keys on (batch, l_q).
+        let mut s = DecodeScheduler::new(Planner::sequence_aware(), geom(), vec![1, 3]);
+        let mut oracle = Planner::sequence_aware();
+        for i in 0..32usize {
+            let kv = 400 + i;
+            let d = s.decide(1, kv).unwrap();
+            assert_eq!(d.plan, oracle.plan(&DecodeShape::decode(1, kv, 8, 1, 128)), "i={i}");
+            let m = s.decide_mixed(1, 64, kv).unwrap();
+            assert_eq!(m.plan, oracle.plan(&DecodeShape::mixed(1, 64, kv, 8, 1, 128)), "i={i}");
+        }
+        let cursor = s.cursor_stats();
+        assert_eq!(cursor.refills, 2, "one per (batch, l_q): {cursor:?}");
+        assert_eq!(cursor.hits, 62, "{cursor:?}");
+    }
+
+    #[test]
+    fn decide_mixed_lq_one_is_decide() {
+        let mut a = DecodeScheduler::new(Planner::sequence_aware(), geom(), vec![1, 3]);
+        let mut b = DecodeScheduler::new(Planner::sequence_aware(), geom(), vec![1, 3]);
+        for kv in [64usize, 385, 512, 1024] {
+            let via_decide = a.decide(2, kv).unwrap();
+            let via_mixed = b.decide_mixed(2, 1, kv).unwrap();
+            assert_eq!(via_decide.plan, via_mixed.plan, "kv={kv}");
+            assert_eq!(via_decide.artifact_splits, via_mixed.artifact_splits);
+        }
+        // l_q = 0 clamps to 1: same cursor as decode, no phantom extra key
+        // (kv stays inside the window the kv=1024 step pinned).
+        b.decide_mixed(2, 0, 1024).unwrap();
+        assert_eq!(b.cursor_stats().refills, a.cursor_stats().refills);
     }
 
     #[test]

@@ -36,6 +36,22 @@ impl DecodeShape {
         DecodeShape::decode(batch, l_k, 8, 1, 128)
     }
 
+    /// Mixed-wave shape (`L_Q > 1`): chunked-prefill rows — and, later,
+    /// speculative multi-token verify steps — put `l_q` query tokens per
+    /// row in a step, shifting `m_blocks` (and with it occupancy and the
+    /// split decision) away from the pure-decode intuition. `l_q = 1`
+    /// reduces to [`DecodeShape::decode`].
+    pub fn mixed(
+        batch: usize,
+        l_q: usize,
+        l_k: usize,
+        h_q: usize,
+        h_kv: usize,
+        d: usize,
+    ) -> DecodeShape {
+        DecodeShape { batch, l_q: l_q.max(1), l_k, h_q, h_kv, d }
+    }
+
     /// GQA group size `H_Q / H_KV`.
     pub fn group_size(&self) -> usize {
         assert!(
@@ -152,6 +168,20 @@ mod tests {
         // Without pack_gqa each query head is a tile.
         let s = DecodeShape::decode(1, 512, 8, 1, 128);
         assert_eq!(s.total_mblocks(false), 8);
+    }
+
+    #[test]
+    fn mixed_shape_scales_mblocks_with_lq() {
+        // A 64-token chunk over the paper's TP-8 geometry packs
+        // 64 * 8 = 512 query rows: 8 M-blocks of 64 — q_len > 1 leaves
+        // the starved Batch * H_KV regime.
+        let chunk = DecodeShape::mixed(1, 64, 512, 8, 1, 128);
+        assert_eq!(chunk.m_blocks(true), 8);
+        assert_eq!(chunk.total_mblocks(true), 8);
+        // l_q = 1 reduces exactly to the decode constructor.
+        assert_eq!(DecodeShape::mixed(2, 1, 512, 8, 1, 128), DecodeShape::llama70b_tp8(2, 512));
+        // l_q = 0 clamps to 1 (an empty wave still shapes as decode).
+        assert_eq!(DecodeShape::mixed(1, 0, 512, 8, 1, 128).l_q, 1);
     }
 
     #[test]

@@ -118,6 +118,20 @@
 //! split policy targets. See `docs/` for the full reader-facing tour and
 //! DESIGN.md §Prefix sharing for the invariants.
 //!
+//! ## Continuous batching
+//!
+//! Step composition lives in [`schedule`]: a [`schedule::StepComposer`]
+//! decides each step which rows run and how much prompt each may ingest.
+//! The default [`schedule::ChunkPolicy::Monolithic`] reproduces the
+//! legacy prefill-first schedule byte-for-byte; bounding it
+//! ([`schedule::ChunkPolicy::Bounded`], the CLI's `--chunk-tokens`)
+//! splits long prompts into chunks that share *mixed* steps with decode
+//! rows under a per-step [`schedule::TokenBudget`] (`--max-batch-tokens`)
+//! — Sarathi-style chunked prefill, which keeps TTFT and TPOT bounded
+//! under open-loop load and puts `q_len > 1` rows in the same wave as
+//! decode for the first time (the split heuristic's mixed-wave regime).
+//! See DESIGN.md §Continuous batching.
+//!
 //! ## Static analysis
 //!
 //! The invariants above are machine-checked by [`analysis`] (pallas-lint,
@@ -141,6 +155,7 @@ pub mod evolve;
 pub mod heuristics;
 pub mod planner;
 pub mod runtime;
+pub mod schedule;
 pub mod sim;
 pub mod util;
 pub mod workload;

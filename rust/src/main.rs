@@ -24,11 +24,12 @@ use std::sync::Arc;
 use fa3_split::backend::{AttnGeometry, ExecutionBackend, PjrtBackend, SimBackend};
 use fa3_split::bench_harness::{regression, table1, ucurve};
 use fa3_split::cluster::{self, ClusterTopology, Fleet, FleetConfig, TpConfig};
-use fa3_split::coordinator::{BatcherConfig, Engine, EngineConfig, StreamEvent};
+use fa3_split::coordinator::{BatcherConfig, Engine, EngineConfig, StreamEvent, SubmitOptions};
 use fa3_split::evolve::{Search, SearchConfig};
 use fa3_split::heuristics::tiles::DecodeShape;
 use fa3_split::planner::{DeviceProfile, Planner, PolicyRegistry};
 use fa3_split::runtime::Registry;
+use fa3_split::schedule::{ScheduleConfig, TokenBudget};
 use fa3_split::sim::Simulator;
 use fa3_split::util::cli;
 use fa3_split::workload::ChatWorkload;
@@ -126,6 +127,42 @@ fn planner_from_args(registry: &PolicyRegistry, args: &cli::Args) -> Planner {
     }
 }
 
+/// Resolve `--chunk-tokens` / `--max-batch-tokens` into a
+/// [`ScheduleConfig`], exiting with the valid ranges on a bad value
+/// (mirrors the policy/device/router listing idiom: the message names
+/// every acceptable value, never just "invalid").
+fn schedule_from_args(args: &cli::Args, max_seq: usize, max_batch: usize) -> ScheduleConfig {
+    let chunk = args.usize("chunk-tokens");
+    let budget = args.usize("max-batch-tokens");
+    if chunk > max_seq {
+        eprintln!(
+            "invalid --chunk-tokens {chunk} (valid: 0 (monolithic prefill) or 1..={max_seq})"
+        );
+        std::process::exit(2);
+    }
+    if chunk == 0 {
+        if budget > 0 {
+            eprintln!(
+                "--max-batch-tokens {budget} requires --chunk-tokens > 0 \
+                 (valid: 0 (unbounded) under monolithic prefill)"
+            );
+            std::process::exit(2);
+        }
+        return ScheduleConfig::default();
+    }
+    let floor = chunk.max(max_batch);
+    if budget > 0 && budget < floor {
+        eprintln!(
+            "invalid --max-batch-tokens {budget} (valid: 0 (unbounded) or \
+             >= {floor} = max(--chunk-tokens, max running batch))"
+        );
+        std::process::exit(2);
+    }
+    let budget =
+        if budget == 0 { TokenBudget::unbounded() } else { TokenBudget::capped(budget) };
+    ScheduleConfig::bounded(chunk, budget)
+}
+
 fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let registry = PolicyRegistry::builtin();
     let args = parse(
@@ -138,11 +175,16 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             .opt("sm-margin", "0", "SMs reserved for the combine scheduler")
             .opt("prefix", "0", "shared system-prompt length, tokens, additive to the sampled prompt (0 = off)")
             .opt("prefix-fanout", "4", "requests per distinct system prompt (1 = disjoint)")
+            .opt("chunk-tokens", "0", "prefill chunk size, tokens (0 = monolithic prefill)")
+            .opt("max-batch-tokens", "0", "per-step token budget across chunk+decode rows (0 = unbounded; requires --chunk-tokens)")
+            .opt("gap-us", "0", "mean Poisson inter-arrival gap, µs (0 = closed loop; requires --backend sim)")
+            .flag("mixed", "mixed open-loop trace: 3/4 short interactive + 1/4 long-prompt batch requests (requires --backend sim)")
             .opt("seed", "7", "workload seed"),
         argv,
     );
     let planner = planner_from_args(&registry, &args);
-    let cfg = EngineConfig::default();
+    let mut cfg = EngineConfig::default();
+    cfg.schedule = schedule_from_args(&args, 1024, cfg.batcher.max_batch);
 
     // Resolve the backend behind the trait: nothing below this point
     // branches on sim vs PJRT.
@@ -167,21 +209,47 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     builder = builder.planner(planner).config(cfg);
     let mut engine = builder.build()?;
 
-    let workload = ChatWorkload {
-        seed: args.u64("seed"),
-        n_requests: args.usize("requests"),
-        output_mean: args.usize("tokens"),
-        output_cap: args.usize("tokens"),
-        shared_prefix_len: args.usize("prefix"),
-        prefix_fanout: args.usize("prefix-fanout").max(1),
-        ..Default::default()
+    let mixed = args.has("mixed");
+    let gap_us = args.u64("gap-us");
+    let open_loop = mixed || gap_us > 0;
+    if open_loop && !engine.backend_caps().virtual_clock {
+        eprintln!(
+            "--mixed / --gap-us replay arrivals on the virtual clock \
+             (valid only with --backend sim)"
+        );
+        std::process::exit(2);
+    }
+    let stream = if mixed {
+        // The mixed trace carries its own per-class prompt/output shapes;
+        // --tokens/--prefix only apply to the homogeneous workload.
+        ChatWorkload::mixed_open_loop(args.u64("seed"), args.usize("requests"), gap_us)
+    } else {
+        ChatWorkload {
+            seed: args.u64("seed"),
+            n_requests: args.usize("requests"),
+            output_mean: args.usize("tokens"),
+            output_cap: args.usize("tokens"),
+            mean_gap_us: gap_us,
+            shared_prefix_len: args.usize("prefix"),
+            prefix_fanout: args.usize("prefix-fanout").max(1),
+            ..Default::default()
+        }
+        .generate()
     };
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
-    for g in workload.generate() {
+    for g in stream {
         let mut r = g.request;
-        r.max_new_tokens = args.usize("tokens");
-        match engine.submit(r) {
+        if !mixed {
+            r.max_new_tokens = args.usize("tokens");
+        }
+        let opts = SubmitOptions::default().priority(g.priority);
+        let submitted = if open_loop {
+            engine.submit_at_with(r, g.arrival_offset_us, opts)
+        } else {
+            engine.submit_with(r, opts)
+        };
+        match submitted {
             Ok(h) => handles.push(h),
             Err(e) => eprintln!("request refused: {e}"),
         }
@@ -230,6 +298,8 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
         .opt("turns", "1", "requests per chat session (the session-affinity unit)")
         .opt("gap-us", "0", "mean Poisson inter-arrival gap, µs (0 = closed loop)")
         .opt("max-batch", "2", "per-replica max running batch")
+        .opt("chunk-tokens", "0", "prefill chunk size, tokens (0 = monolithic prefill)")
+        .opt("max-batch-tokens", "0", "per-step token budget across chunk+decode rows (0 = unbounded; requires --chunk-tokens)")
         .opt("prefix", "0", "shared system-prompt length, tokens, additive to the sampled prompt (0 = off)")
         .opt("prefix-fanout", "4", "requests per distinct system prompt (1 = disjoint)")
         .opt("seed", "7", "workload seed"),
@@ -261,6 +331,7 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
 
     let engine_cfg = EngineConfig {
         batcher: BatcherConfig::for_max_batch(args.usize("max-batch")),
+        schedule: schedule_from_args(&args, 1024, args.usize("max-batch")),
         ..Default::default()
     };
     let mut fleet = Fleet::new(

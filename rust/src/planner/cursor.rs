@@ -151,6 +151,14 @@ impl PlanCursor {
         self.key.batch
     }
 
+    /// The query length this cursor is currently pinned to (0 before the
+    /// first refill): 1 for decode cursors, the chunk length for
+    /// mixed-wave cursors. The scheduler indexes on `(batch, l_q)` so
+    /// chunk waves never thrash the decode cursors.
+    pub fn l_q(&self) -> usize {
+        self.key.l_q
+    }
+
     /// The inclusive `l_k` window of the pinned decision, if any.
     pub fn valid_window(&self) -> Option<(usize, usize)> {
         self.decision.as_ref().map(|_| (self.valid_from_lk, self.valid_until_lk))
@@ -271,6 +279,7 @@ mod tests {
         let cursor = PlanCursor::new();
         assert_eq!(cursor.valid_window(), None);
         assert_eq!(cursor.batch(), 0);
+        assert_eq!(cursor.l_q(), 0);
         assert_eq!(cursor.stats(), CursorStats::default());
     }
 }

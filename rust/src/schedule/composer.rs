@@ -1,0 +1,320 @@
+//! [`StepComposer`]: one decision per step — which rows run, and how
+//! much prompt each may ingest.
+
+use super::policy::{ChunkPolicy, ScheduleConfig};
+
+/// What the composer needs to know about one occupied slot. Plain data —
+/// the engine projects its running set into these each step, so the
+/// composer stays below the coordinator in the layering DAG.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotView {
+    /// KV-cache slot (stable for the request's life).
+    pub slot: usize,
+    /// Total prompt length, tokens.
+    pub prompt_len: usize,
+    /// Prompt tokens already ingested (the per-request chunk cursor).
+    pub prefilled: usize,
+    /// Leading prompt tokens whose KV already exists (the prefix-cache
+    /// grant): the first chunk starts after them — cached prompt blocks
+    /// skip chunking entirely.
+    pub cached_tokens: usize,
+    /// Generation complete: the slot needs no further work.
+    pub done: bool,
+}
+
+/// One prefill chunk: ingest `len` prompt tokens of `slot` starting at
+/// prompt offset `start`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkSpan {
+    /// Target slot.
+    pub slot: usize,
+    /// First prompt offset this chunk ingests.
+    pub start: usize,
+    /// Tokens this chunk ingests (>= 1).
+    pub len: usize,
+}
+
+impl ChunkSpan {
+    /// One past the last prompt offset this chunk ingests.
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+/// The composed step: prefill chunks plus decode rows, in the engine's
+/// reused scratch. Under [`ChunkPolicy::Monolithic`] this is exactly the
+/// legacy `StepPlan` in new clothes (chunks ↔ prefill slots, executed
+/// prefill-first); under [`ChunkPolicy::Bounded`] chunks and decode rows
+/// share one mixed step.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MixedStepPlan {
+    /// Prefill chunks, in ascending slot order.
+    pub chunks: Vec<ChunkSpan>,
+    /// Slots ready for one decode token, in ascending slot order.
+    pub decode_slots: Vec<usize>,
+    /// Artifact bucket for the decode wave (smallest bucket >= the decode
+    /// row count), `None` when no row decodes.
+    pub decode_bucket: Option<usize>,
+}
+
+impl MixedStepPlan {
+    /// Clear for refill (keeps buffer capacity).
+    pub fn clear(&mut self) {
+        self.chunks.clear();
+        self.decode_slots.clear();
+        self.decode_bucket = None;
+    }
+
+    /// Whether the step carries no work at all.
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty() && self.decode_slots.is_empty()
+    }
+
+    /// Total tokens entering the model this step (decode rows count 1
+    /// each) — the quantity [`super::TokenBudget`] bounds.
+    pub fn step_tokens(&self) -> usize {
+        self.decode_slots.len() + self.chunks.iter().map(|c| c.len).sum::<usize>()
+    }
+}
+
+/// Per-step composer: pure function of the slot sweep and the configured
+/// [`ScheduleConfig`]. Owns no request state — the chunk cursor is the
+/// engine's `prefilled` counter, reflected back through [`SlotView`].
+#[derive(Debug, Clone, Default)]
+pub struct StepComposer {
+    cfg: ScheduleConfig,
+}
+
+impl StepComposer {
+    /// A composer for one engine's configuration.
+    pub fn new(cfg: ScheduleConfig) -> StepComposer {
+        StepComposer { cfg }
+    }
+
+    /// The configuration this composer applies.
+    pub fn config(&self) -> &ScheduleConfig {
+        &self.cfg
+    }
+
+    /// Whether this composer reproduces the legacy prefill-first schedule.
+    pub fn is_monolithic(&self) -> bool {
+        self.cfg.chunk.is_monolithic()
+    }
+
+    /// Compose one step into caller-owned scratch (cleared first) from a
+    /// sweep of occupied slots in ascending slot order. `buckets` is the
+    /// ascending artifact bucket ladder the decode wave packs into.
+    ///
+    /// Monolithic: a 1:1 mapping of the legacy `Batcher::plan_into`
+    /// schedule — every prompt-incomplete slot becomes one full-remainder
+    /// chunk, every prompt-complete unfinished slot a decode row (the
+    /// engine then runs chunks XOR decode, prefill first, exactly as
+    /// before).
+    ///
+    /// Bounded: decode rows are admitted first (1 budget token each; the
+    /// config validation guarantees they always all fit), then each
+    /// prompt-incomplete slot gets one chunk of
+    /// `min(chunk, remaining prompt, remaining budget)` tokens. The first
+    /// chunk of a request starts after its prefix-cache-resident tokens —
+    /// but never skips the final prompt token, which must be ingested to
+    /// seed decode.
+    ///
+    /// The steady state refills existing capacity without allocating (the
+    /// engine reuses one [`MixedStepPlan`] across steps).
+    // pallas-lint: no_alloc
+    pub fn compose_into<I>(&self, slots: I, buckets: &[usize], out: &mut MixedStepPlan)
+    where
+        I: Iterator<Item = SlotView> + Clone,
+    {
+        out.clear();
+        match self.cfg.chunk {
+            ChunkPolicy::Monolithic => {
+                for s in slots {
+                    if s.done {
+                        continue;
+                    }
+                    if s.prefilled < s.prompt_len {
+                        out.chunks.push(ChunkSpan {
+                            slot: s.slot,
+                            start: s.prefilled,
+                            len: s.prompt_len - s.prefilled,
+                        });
+                    } else {
+                        out.decode_slots.push(s.slot);
+                    }
+                }
+            }
+            ChunkPolicy::Bounded(chunk) => {
+                // Pass 1 — decode rows reserve their budget first
+                // (invariant 3: generation is never starved by ingestion).
+                // pallas-lint: allow(no_alloc): cloning the slot iterator copies a borrow, no heap
+                for s in slots.clone() {
+                    if !s.done && s.prefilled >= s.prompt_len {
+                        out.decode_slots.push(s.slot);
+                    }
+                }
+                let limit = self.cfg.budget.limit().unwrap_or(usize::MAX);
+                let mut used = out.decode_slots.len();
+                // Pass 2 — chunks take what's left, in slot order.
+                for s in slots {
+                    if s.done || s.prefilled >= s.prompt_len || used >= limit {
+                        continue;
+                    }
+                    let start = chunk_start(&s);
+                    let len = chunk.min(s.prompt_len - start).min(limit - used);
+                    debug_assert!(len >= 1);
+                    used += len;
+                    out.chunks.push(ChunkSpan { slot: s.slot, start, len });
+                }
+            }
+        }
+        if !out.decode_slots.is_empty() {
+            out.decode_bucket =
+                buckets.iter().copied().find(|&b| b >= out.decode_slots.len());
+        }
+    }
+}
+
+/// Where a request's next chunk starts: its chunk cursor, except that the
+/// very first chunk jumps over prefix-cache-resident tokens (their KV
+/// already exists — composing with block-level sharing, cached prompt
+/// blocks skip chunking). The final prompt token is never skipped: even a
+/// fully-cached prompt ingests it to seed the decode state.
+fn chunk_start(s: &SlotView) -> usize {
+    if s.prefilled == 0 {
+        s.cached_tokens.min(s.prompt_len.saturating_sub(1))
+    } else {
+        s.prefilled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::policy::TokenBudget;
+    use super::*;
+
+    const BUCKETS: &[usize] = &[1, 2, 4];
+
+    fn view(slot: usize, prompt_len: usize, prefilled: usize) -> SlotView {
+        SlotView { slot, prompt_len, prefilled, cached_tokens: 0, done: false }
+    }
+
+    fn compose(composer: &StepComposer, views: &[SlotView]) -> MixedStepPlan {
+        let mut out = MixedStepPlan::default();
+        composer.compose_into(views.iter().copied(), BUCKETS, &mut out);
+        out
+    }
+
+    #[test]
+    fn monolithic_is_prefill_first() {
+        let c = StepComposer::new(ScheduleConfig::default());
+        let plan = compose(&c, &[view(0, 100, 0), view(1, 50, 50), view(2, 80, 0)]);
+        assert_eq!(
+            plan.chunks,
+            vec![
+                ChunkSpan { slot: 0, start: 0, len: 100 },
+                ChunkSpan { slot: 2, start: 0, len: 80 }
+            ]
+        );
+        // Decode rows are still reported (the legacy StepPlan does too);
+        // the engine runs chunks first and decode next step.
+        assert_eq!(plan.decode_slots, vec![1]);
+        assert_eq!(plan.decode_bucket, Some(1));
+    }
+
+    #[test]
+    fn monolithic_decode_only_when_prompts_done() {
+        let c = StepComposer::new(ScheduleConfig::default());
+        let plan = compose(&c, &[view(0, 10, 10), view(3, 7, 7)]);
+        assert!(plan.chunks.is_empty());
+        assert_eq!(plan.decode_slots, vec![0, 3]);
+        assert_eq!(plan.decode_bucket, Some(2));
+        assert_eq!(plan.step_tokens(), 2);
+    }
+
+    #[test]
+    fn bounded_interleaves_chunks_with_decode() {
+        let c = StepComposer::new(ScheduleConfig::bounded(32, TokenBudget::unbounded()));
+        let plan = compose(&c, &[view(0, 100, 0), view(1, 50, 50), view(2, 100, 64)]);
+        assert_eq!(plan.decode_slots, vec![1]);
+        assert_eq!(
+            plan.chunks,
+            vec![
+                ChunkSpan { slot: 0, start: 0, len: 32 },
+                ChunkSpan { slot: 2, start: 64, len: 32 }
+            ]
+        );
+        assert_eq!(plan.step_tokens(), 65);
+        // Final partial chunk.
+        let plan = compose(&c, &[view(2, 100, 96)]);
+        assert_eq!(plan.chunks, vec![ChunkSpan { slot: 2, start: 96, len: 4 }]);
+    }
+
+    #[test]
+    fn budget_rations_chunks_never_decode() {
+        // Budget 6 over 4 decode rows: 2 tokens left for chunking.
+        let c = StepComposer::new(ScheduleConfig::bounded(4, TokenBudget::capped(6)));
+        let views = [
+            view(0, 10, 10),
+            view(1, 10, 10),
+            view(2, 10, 10),
+            view(3, 10, 10),
+            view(4, 40, 0),
+            view(5, 40, 0),
+        ];
+        let plan = compose(&c, &views);
+        assert_eq!(plan.decode_slots, vec![0, 1, 2, 3]);
+        assert_eq!(plan.chunks, vec![ChunkSpan { slot: 4, start: 0, len: 2 }]);
+        assert_eq!(plan.step_tokens(), 6);
+        // Exhausted budget: later prompts wait entirely.
+        let c = StepComposer::new(ScheduleConfig::bounded(4, TokenBudget::capped(4)));
+        let plan = compose(&c, &views);
+        assert_eq!(plan.decode_slots.len(), 4);
+        assert!(plan.chunks.is_empty(), "{plan:?}");
+    }
+
+    #[test]
+    fn first_chunk_skips_cached_prefix_but_seeds_decode() {
+        let c = StepComposer::new(ScheduleConfig::bounded(64, TokenBudget::unbounded()));
+        // 128 of 200 tokens prefix-cached: chunking starts at 128.
+        let cached = SlotView { slot: 0, prompt_len: 200, prefilled: 0, cached_tokens: 128, done: false };
+        let plan = compose(&c, &[cached]);
+        assert_eq!(plan.chunks, vec![ChunkSpan { slot: 0, start: 128, len: 64 }]);
+        // Fully cached prompt: still one 1-token chunk (the decode seed).
+        let full = SlotView { slot: 0, prompt_len: 200, prefilled: 0, cached_tokens: 200, done: false };
+        let plan = compose(&c, &[full]);
+        assert_eq!(plan.chunks, vec![ChunkSpan { slot: 0, start: 199, len: 1 }]);
+        // Once the cursor moved, the cache grant no longer matters.
+        let resumed = SlotView { slot: 0, prompt_len: 200, prefilled: 192, cached_tokens: 128, done: false };
+        let plan = compose(&c, &[resumed]);
+        assert_eq!(plan.chunks, vec![ChunkSpan { slot: 0, start: 192, len: 8 }]);
+    }
+
+    #[test]
+    fn done_slots_compose_nothing() {
+        for cfg in [
+            ScheduleConfig::default(),
+            ScheduleConfig::bounded(8, TokenBudget::unbounded()),
+        ] {
+            let c = StepComposer::new(cfg);
+            let done = SlotView { slot: 0, prompt_len: 10, prefilled: 10, cached_tokens: 0, done: true };
+            let plan = compose(&c, &[done]);
+            assert!(plan.is_empty());
+            assert_eq!(plan.decode_bucket, None);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_keeps_capacity() {
+        let c = StepComposer::new(ScheduleConfig::bounded(16, TokenBudget::unbounded()));
+        let views = [view(0, 100, 0), view(1, 50, 50)];
+        let mut out = MixedStepPlan::default();
+        c.compose_into(views.iter().copied(), BUCKETS, &mut out);
+        let want = out.clone();
+        let (cap_c, cap_d) = (out.chunks.capacity(), out.decode_slots.capacity());
+        c.compose_into(views.iter().copied(), BUCKETS, &mut out);
+        assert_eq!(out, want);
+        assert_eq!(out.chunks.capacity(), cap_c);
+        assert_eq!(out.decode_slots.capacity(), cap_d);
+    }
+}

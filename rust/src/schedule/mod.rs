@@ -1,0 +1,53 @@
+//! Step composition: continuous batching with chunked prefill.
+//!
+//! Before this subsystem every engine step was *homogeneous* — either a
+//! monolithic prefill over every prompt-incomplete request or a
+//! decode-only wave — so a long prompt parked the whole running set
+//! behind its ingestion (head-of-line blocking: TPOT spikes for running
+//! decodes, TTFT spikes for everything queued behind the prefill). The
+//! production pattern (TGI-style continuous batching with Sarathi-style
+//! chunked prefill) caps how much prompt one step may ingest and lets
+//! decode rows ride in the same wave, so both latencies stay bounded
+//! under heavy traffic.
+//!
+//! The subsystem is three small pieces, all pure data-in/data-out (it
+//! sits *below* the coordinator in the layering DAG and knows nothing
+//! about requests, KV blocks, or backends):
+//!
+//! * [`ChunkPolicy`] — how much prompt a single step may ingest per
+//!   request: [`ChunkPolicy::Monolithic`] (the chunk = ∞ limit, exactly
+//!   the legacy prefill-first schedule) or [`ChunkPolicy::Bounded`]
+//!   (at most `c` prompt tokens per request per step).
+//! * [`TokenBudget`] — the per-step ceiling on *total* tokens entering
+//!   the model across all rows (decode rows count 1 each); the knob that
+//!   bounds step latency, and therefore TPOT, under chunked prefill.
+//! * [`StepComposer`] — folds the two into one decision per step:
+//!   [`StepComposer::compose_into`] turns a sweep of [`SlotView`]s into
+//!   a [`MixedStepPlan`] (decode rows + prefill [`ChunkSpan`]s) in the
+//!   engine's reused scratch, allocation-free in steady state.
+//!
+//! Invariants (property-tested in `tests/continuous_batching.rs` and the
+//! composer's unit suite; see DESIGN.md §Continuous batching):
+//!
+//! 1. **Monolithic ≡ legacy.** Under [`ChunkPolicy::Monolithic`] the
+//!    composed plan maps 1:1 onto `Batcher::plan_into`'s prefill-first
+//!    schedule, and the engine executes it through the *unchanged*
+//!    legacy prefill/decode paths — chunk = ∞ is byte-identical to the
+//!    pre-composer engine by code-path reuse, not by re-derivation.
+//! 2. **Chunk spans tile the prompt.** Across steps, one request's spans
+//!    are contiguous, non-overlapping, and end exactly at the prompt
+//!    length; the first span skips prefix-cache-resident tokens (but
+//!    always ingests at least the final prompt token, which seeds
+//!    decode).
+//! 3. **Decode first.** Decode rows are admitted into the budget before
+//!    any chunk: an in-flight generation is never starved by prompt
+//!    ingestion (config validation guarantees the budget covers the
+//!    whole running set).
+//! 4. **Progress.** Any step with runnable work composes at least one
+//!    row.
+
+mod composer;
+mod policy;
+
+pub use composer::{ChunkSpan, MixedStepPlan, SlotView, StepComposer};
+pub use policy::{ChunkPolicy, ScheduleConfig, TokenBudget};

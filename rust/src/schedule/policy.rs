@@ -1,0 +1,183 @@
+//! The two knobs of step composition: chunk size and step token budget.
+
+use anyhow::{bail, Result};
+
+/// How much of a prompt a single step may ingest for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ChunkPolicy {
+    /// The chunk = ∞ limit: whole prompts ingest in one step and prefill
+    /// excludes decode from the step (the legacy prefill-first schedule,
+    /// reproduced exactly — the byte-identity baseline).
+    #[default]
+    Monolithic,
+    /// At most this many prompt tokens per request per step; the
+    /// remainder resumes next step, interleaved with decode rows.
+    /// Must be >= 1 (use [`ChunkPolicy::Monolithic`] for "off").
+    Bounded(usize),
+}
+
+impl ChunkPolicy {
+    /// CLI-facing constructor: `0` means monolithic (the `--chunk-tokens`
+    /// off value), anything else bounds the chunk.
+    pub fn from_chunk_tokens(chunk_tokens: usize) -> ChunkPolicy {
+        if chunk_tokens == 0 {
+            ChunkPolicy::Monolithic
+        } else {
+            ChunkPolicy::Bounded(chunk_tokens)
+        }
+    }
+
+    /// Whether this is the chunk = ∞ (legacy-equivalent) policy.
+    pub fn is_monolithic(&self) -> bool {
+        matches!(self, ChunkPolicy::Monolithic)
+    }
+
+    /// The bound, if any.
+    pub fn chunk_tokens(&self) -> Option<usize> {
+        match *self {
+            ChunkPolicy::Monolithic => None,
+            ChunkPolicy::Bounded(c) => Some(c),
+        }
+    }
+}
+
+/// Per-step ceiling on total tokens entering the model across all rows
+/// (decode rows count 1 each, chunk rows their span length). Bounds the
+/// worst-case step latency — the TPOT guarantee chunked prefill exists
+/// to provide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TokenBudget {
+    limit: Option<usize>,
+}
+
+impl TokenBudget {
+    /// No per-step ceiling (the default).
+    pub fn unbounded() -> TokenBudget {
+        TokenBudget { limit: None }
+    }
+
+    /// At most `limit` tokens per step across all rows.
+    pub fn capped(limit: usize) -> TokenBudget {
+        assert!(limit >= 1, "a zero token budget can never make progress");
+        TokenBudget { limit: Some(limit) }
+    }
+
+    /// CLI-facing constructor: `0` means unbounded (the
+    /// `--max-batch-tokens` off value).
+    pub fn from_max_batch_tokens(max_batch_tokens: usize) -> TokenBudget {
+        if max_batch_tokens == 0 {
+            TokenBudget::unbounded()
+        } else {
+            TokenBudget::capped(max_batch_tokens)
+        }
+    }
+
+    /// The ceiling, if any.
+    pub fn limit(&self) -> Option<usize> {
+        self.limit
+    }
+}
+
+/// Step-composition configuration carried by `EngineConfig`. The default
+/// (`Monolithic` + unbounded) reproduces the legacy engine exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ScheduleConfig {
+    /// Prompt-ingestion bound per request per step.
+    pub chunk: ChunkPolicy,
+    /// Total-token ceiling per step.
+    pub budget: TokenBudget,
+}
+
+impl ScheduleConfig {
+    /// Bounded chunking with an explicit step budget — the production
+    /// configuration the continuous-batching bench gates.
+    pub fn bounded(chunk_tokens: usize, budget: TokenBudget) -> ScheduleConfig {
+        ScheduleConfig { chunk: ChunkPolicy::Bounded(chunk_tokens.max(1)), budget }
+    }
+
+    /// Validate against the engine it will drive. `max_batch` is the slot
+    /// capacity: a capped budget must cover one decode token per slot
+    /// (invariant 3 — decode rows are never rationed) and must fit at
+    /// least one full chunk (otherwise chunks could starve forever).
+    pub fn validate(&self, max_batch: usize) -> Result<()> {
+        let Some(limit) = self.budget.limit() else { return Ok(()) };
+        if self.chunk.is_monolithic() {
+            bail!(
+                "a token budget ({limit}) needs bounded chunks: monolithic prefill \
+                 ingests whole prompts and cannot respect a per-step ceiling"
+            );
+        }
+        if limit < max_batch {
+            bail!(
+                "token budget {limit} below the decode batch capacity {max_batch}: \
+                 every running request must fit one decode token per step"
+            );
+        }
+        if let Some(chunk) = self.chunk.chunk_tokens() {
+            if limit < chunk {
+                bail!(
+                    "token budget {limit} below the chunk size {chunk}: \
+                     no prefill chunk could ever be scheduled"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_policy_cli_mapping() {
+        assert_eq!(ChunkPolicy::from_chunk_tokens(0), ChunkPolicy::Monolithic);
+        assert_eq!(ChunkPolicy::from_chunk_tokens(64), ChunkPolicy::Bounded(64));
+        assert!(ChunkPolicy::Monolithic.is_monolithic());
+        assert_eq!(ChunkPolicy::Bounded(64).chunk_tokens(), Some(64));
+        assert_eq!(ChunkPolicy::Monolithic.chunk_tokens(), None);
+    }
+
+    #[test]
+    fn budget_cli_mapping() {
+        assert_eq!(TokenBudget::from_max_batch_tokens(0).limit(), None);
+        assert_eq!(TokenBudget::from_max_batch_tokens(512).limit(), Some(512));
+        assert_eq!(TokenBudget::default(), TokenBudget::unbounded());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_cap_panics() {
+        TokenBudget::capped(0);
+    }
+
+    #[test]
+    fn default_config_is_legacy() {
+        let cfg = ScheduleConfig::default();
+        assert!(cfg.chunk.is_monolithic());
+        assert_eq!(cfg.budget.limit(), None);
+        assert!(cfg.validate(8).is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_inconsistent_budgets() {
+        // Budget without chunking: monolithic prefill can't respect it.
+        let cfg = ScheduleConfig {
+            chunk: ChunkPolicy::Monolithic,
+            budget: TokenBudget::capped(256),
+        };
+        assert!(cfg.validate(4).is_err());
+        // Budget below the decode capacity: decode rows would be rationed.
+        let cfg = ScheduleConfig::bounded(4, TokenBudget::capped(6));
+        assert!(cfg.validate(8).is_err());
+        // Budget below the chunk size: chunks could never schedule.
+        let cfg = ScheduleConfig::bounded(128, TokenBudget::capped(64));
+        assert!(cfg.validate(4).is_err());
+        // Consistent: fine.
+        let cfg = ScheduleConfig::bounded(128, TokenBudget::capped(256));
+        assert!(cfg.validate(8).is_ok());
+        // Unbounded budget never constrains.
+        let cfg = ScheduleConfig::bounded(128, TokenBudget::unbounded());
+        assert!(cfg.validate(1024).is_ok());
+    }
+}

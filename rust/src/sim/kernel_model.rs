@@ -140,7 +140,25 @@ impl Simulator {
     pub fn prefill_cached_us(&self, prompt_len: usize, cached_tokens: usize) -> f64 {
         self.prefill_us(prompt_len.saturating_sub(cached_tokens))
     }
+
+    /// One bounded prefill chunk of `chunk_len` prompt tokens appended
+    /// after `kv_prior` already-resident tokens, µs. Like
+    /// [`Simulator::prefill_us`] this is policy-invariant; the extra
+    /// term models the chunk's queries attending over the resident
+    /// context (causal attention against prior KV — the cost Sarathi-
+    /// style chunking pays for bounding step latency, on top of one
+    /// launch overhead *per chunk* instead of per prompt). With
+    /// `kv_prior = 0` and the whole prompt in one chunk this is exactly
+    /// `prefill_us` — the chunk = ∞ timing identity.
+    pub fn chunk_prefill_us(&self, chunk_len: usize, kv_prior: usize) -> f64 {
+        self.prefill_us(chunk_len) + CHUNK_CONTEXT_US_PER_TOKEN * kv_prior as f64
+    }
 }
+
+/// Per-resident-token attention slope of a prefill chunk (µs/token):
+/// re-reading prior KV is pure bandwidth, far cheaper than the 0.05
+/// compute/IO slope of ingesting a new token.
+pub const CHUNK_CONTEXT_US_PER_TOKEN: f64 = 0.005;
 
 #[cfg(test)]
 mod tests {
@@ -151,6 +169,22 @@ mod tests {
 
     fn sim() -> Simulator {
         Simulator::h100()
+    }
+
+    #[test]
+    fn chunked_prefill_cost_model() {
+        let s = sim();
+        // A first chunk with no resident context is exactly bulk prefill:
+        // the chunk = ∞ timing identity.
+        assert_eq!(s.chunk_prefill_us(512, 0), s.prefill_us(512));
+        // Splitting a prompt costs extra launches plus the context reads.
+        let whole = s.prefill_us(512);
+        let halves = s.chunk_prefill_us(256, 0) + s.chunk_prefill_us(256, 256);
+        assert!(halves > whole, "chunking is never free: {halves} vs {whole}");
+        // Resident context is much cheaper than fresh ingestion.
+        let resident = s.chunk_prefill_us(256, 256) - s.chunk_prefill_us(256, 0);
+        let fresh = s.prefill_us(512) - s.prefill_us(256);
+        assert!(resident < fresh / 2.0);
     }
 
     fn forced(l_k: usize, h_kv: usize, s: usize) -> SchedulerMetadata {

@@ -6,7 +6,7 @@
 //! prompt lengths from a truncated log-normal (chat prompts cluster short
 //! with a long tail), output lengths geometric-ish, Poisson arrivals.
 
-use crate::coordinator::Request;
+use crate::coordinator::{Priority, Request};
 use crate::util::prng::Rng;
 
 /// A generated request plus its arrival offset and chat-session identity.
@@ -15,6 +15,12 @@ pub struct GeneratedRequest {
     pub request: Request,
     /// Arrival offset from stream start, µs.
     pub arrival_offset_us: u64,
+    /// Admission class the driver should submit the request under.
+    /// [`ChatWorkload::generate`] emits everything as
+    /// [`Priority::Standard`]; [`ChatWorkload::mixed_open_loop`] tags its
+    /// two sub-streams `Interactive` and `Batch` so per-class TTFT/TPOT
+    /// splits are observable end to end.
+    pub priority: Priority,
     /// Chat session the request belongs to. Consecutive requests share a
     /// session when [`ChatWorkload::turns_per_session`] > 1 — the unit a
     /// session-affinity router must keep on one replica (its KV lives
@@ -146,6 +152,88 @@ impl ChatWorkload {
         }
     }
 
+    /// The continuous-batching mixed open-loop trace: two Poisson
+    /// streams merged by arrival time. Three quarters of the requests
+    /// are short interactive chats ([`Priority::Interactive`], prompts
+    /// clustering under ~256 tokens, short outputs); the remaining
+    /// quarter are long-prompt batch jobs ([`Priority::Batch`], prompts
+    /// pinned to [384, 768], small outputs) — the monolithic prefill of
+    /// one batch prompt is exactly the head-of-line blocker chunked
+    /// prefill exists to break up. Each sub-stream's inter-arrival gap
+    /// is scaled so the *merged* stream has mean gap `mean_gap_us`.
+    /// Ids are reassigned contiguously after the merge (submission
+    /// order), deterministic in `seed`.
+    pub fn mixed_open_loop(
+        seed: u64,
+        n_requests: usize,
+        mean_gap_us: u64,
+    ) -> Vec<GeneratedRequest> {
+        assert!(n_requests > 0, "mixed_open_loop needs at least one request");
+        let n_batch = (n_requests / 4).max(1).min(n_requests);
+        let n_interactive = n_requests - n_batch;
+        // Per-stream gaps: merged rate = sum of stream rates, so each
+        // stream slows down by its share of the traffic.
+        let scale = |n: usize| {
+            if n == 0 || mean_gap_us == 0 {
+                mean_gap_us
+            } else {
+                mean_gap_us * n_requests as u64 / n as u64
+            }
+        };
+        let interactive = ChatWorkload {
+            seed,
+            n_requests: n_interactive.max(1),
+            prompt_median: 96,
+            prompt_cap: 256,
+            output_mean: 32,
+            output_cap: 64,
+            mean_gap_us: scale(n_interactive),
+            ..Default::default()
+        };
+        let batch = ChatWorkload {
+            seed: Rng::new(seed ^ 0x6d69_7865_646c_6f61).next_u64(),
+            n_requests: n_batch,
+            prompt_median: 480,
+            prompt_min: 384,
+            prompt_cap: 768,
+            output_mean: 16,
+            output_cap: 32,
+            mean_gap_us: scale(n_batch),
+            ..Default::default()
+        };
+        let mut fast = if n_interactive > 0 { interactive.generate() } else { Vec::new() };
+        let mut slow = batch.generate();
+        for g in &mut fast {
+            g.priority = Priority::Interactive;
+        }
+        for g in &mut slow {
+            g.priority = Priority::Batch;
+        }
+        // Merge by arrival; interactive wins ties so the latency-critical
+        // class is never queued behind a simultaneous batch arrival.
+        let mut out = Vec::with_capacity(n_interactive + n_batch);
+        let (mut i, mut j) = (0, 0);
+        while i < fast.len() || j < slow.len() {
+            let take_fast = match (fast.get(i), slow.get(j)) {
+                (Some(f), Some(s)) => f.arrival_offset_us <= s.arrival_offset_us,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            let mut g = if take_fast {
+                i += 1;
+                fast[i - 1].clone()
+            } else {
+                j += 1;
+                slow[j - 1].clone()
+            };
+            g.request.id = out.len() as u64;
+            g.session = g.request.id;
+            g.turn = 0;
+            out.push(g);
+        }
+        out
+    }
+
     /// Generate the stream (deterministic in `seed`).
     pub fn generate(&self) -> Vec<GeneratedRequest> {
         assert!(self.n_requests > 0 && self.prompt_cap >= 1 && self.vocab >= 2);
@@ -181,6 +269,7 @@ impl ChatWorkload {
             out.push(GeneratedRequest {
                 request: Request::new(id as u64, prompt, out_len),
                 arrival_offset_us: clock,
+                priority: Priority::Standard,
                 session: (id / self.turns_per_session) as u64,
                 turn: id % self.turns_per_session,
             });
@@ -364,6 +453,48 @@ mod tests {
         // Off switch: no prefix at all.
         let off = ChatWorkload { shared_prefix_len: 0, ..shared };
         assert_eq!(off.generate()[0].request.prompt.len(), a[0].request.prompt.len() - 128);
+    }
+
+    #[test]
+    fn generate_defaults_to_standard_priority() {
+        let reqs = ChatWorkload { n_requests: 4, ..Default::default() }.generate();
+        assert!(reqs.iter().all(|g| g.priority == Priority::Standard));
+    }
+
+    #[test]
+    fn mixed_open_loop_merges_two_classes() {
+        let reqs = ChatWorkload::mixed_open_loop(7, 32, 1_000);
+        let again = ChatWorkload::mixed_open_loop(7, 32, 1_000);
+        assert_eq!(reqs.len(), 32);
+        // Deterministic, ids contiguous in submission order, arrivals
+        // monotone (the merge invariant the open-loop driver relies on).
+        let mut last = 0u64;
+        for (i, (g, h)) in reqs.iter().zip(&again).enumerate() {
+            assert_eq!(g.request.prompt, h.request.prompt);
+            assert_eq!(g.priority, h.priority);
+            assert_eq!(g.request.id, i as u64);
+            assert!(g.arrival_offset_us >= last);
+            last = g.arrival_offset_us;
+        }
+        // 3:1 class mix with the documented shapes.
+        let batch: Vec<_> = reqs.iter().filter(|g| g.priority == Priority::Batch).collect();
+        let inter: Vec<_> =
+            reqs.iter().filter(|g| g.priority == Priority::Interactive).collect();
+        assert_eq!(batch.len(), 8);
+        assert_eq!(inter.len(), 24);
+        assert!(batch.iter().all(|g| (384..=768).contains(&g.request.prompt.len())));
+        assert!(inter.iter().all(|g| g.request.prompt.len() <= 256));
+    }
+
+    #[test]
+    fn mixed_open_loop_closed_loop_interleaves_interactive_first() {
+        let reqs = ChatWorkload::mixed_open_loop(3, 8, 0);
+        assert!(reqs.iter().all(|g| g.arrival_offset_us == 0));
+        // Tie-break: every interactive request precedes every batch one.
+        let first_batch =
+            reqs.iter().position(|g| g.priority == Priority::Batch).unwrap();
+        assert!(reqs[..first_batch].iter().all(|g| g.priority == Priority::Interactive));
+        assert!(reqs[first_batch..].iter().all(|g| g.priority == Priority::Batch));
     }
 
     #[test]

@@ -1,0 +1,82 @@
+//! The zero-allocation guarantee extended to mixed steps (DESIGN.md
+//! §Continuous batching): a warmed-up engine running a steady
+//! decode + chunked-prefill window must not touch the heap per step.
+//!
+//! The composed plan lives in engine scratch ([`MixedStepPlan`] refills
+//! existing capacity), batch rows are a persistent pool (chunk rows
+//! refill their prompt buffers in place), the decode wave and the chunk
+//! wave each ride their own plan cursor, and the occupancy metrics for
+//! chunk waves are scalar sums. Every chunk boundary — the cursor
+//! advancing `chunk` tokens per step, including the plan-cursor refills
+//! the growing context forces — happens inside the measured window.
+//!
+//! Single `#[test]` file: the allocation counter is process-global (same
+//! constraint as `tests/alloc_guard.rs`, which guards the decode-only
+//! hot path).
+
+use fa3_split::backend::{AttnGeometry, SimBackend};
+use fa3_split::coordinator::{Engine, EngineConfig, Request};
+use fa3_split::planner::Planner;
+use fa3_split::schedule::{ScheduleConfig, TokenBudget};
+use fa3_split::util::alloc_counter::{self, CountingAllocator};
+
+#[global_allocator]
+static COUNTER: CountingAllocator = CountingAllocator;
+
+#[test]
+fn steady_mixed_step_allocates_nothing_after_warmup() {
+    let mut engine = Engine::builder(Box::new(SimBackend::h100()))
+        .planner(Planner::sequence_aware())
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 2048 })
+        .config(EngineConfig {
+            // Chunk = 8 with a 1200-token prompt: 150 mixed steps of
+            // identical shape (1 decode row + 1 full-size chunk row), so
+            // the measured window crosses a chunk boundary every step
+            // without ever changing the composed row count.
+            schedule: ScheduleConfig::bounded(8, TokenBudget::unbounded()),
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+    // Dropped handles: the stream sinks latch dead on first send, so
+    // streaming costs nothing inside the window (same contract as the
+    // decode-only guard).
+    drop(engine.submit(Request::new(1, vec![1; 200], 300)).unwrap());
+    drop(engine.submit(Request::new(2, vec![1; 1200], 4)).unwrap());
+
+    // Warmup: request 1's prompt chunks through (25 steps), its first
+    // decode creates the decode-wave cursor and pushes its TTFT sample,
+    // and the first mixed steps size the composer scratch, the chunk
+    // row's prompt buffer, and the chunk-wave (l_q = 8) plan cursor.
+    for _ in 0..40 {
+        engine.step().unwrap();
+    }
+    assert!(engine.waiting_len() == 0 && engine.running_len() == 2, "warmup should settle");
+    assert!(engine.metrics.mixed_steps > 0, "window precondition: mixed steps are running");
+    engine.metrics.reserve_capacity(512, 16);
+
+    let mixed_before = engine.metrics.mixed_steps;
+    let before = alloc_counter::total_allocations();
+    // 100 steps: request 2 chunks 800 more prompt tokens (still 250+
+    // remaining at the end) while request 1 decodes — every step is a
+    // mixed step with the same two rows, and the chunk wave's growing
+    // context forces plan-cursor refills inside the window.
+    for _ in 0..100 {
+        engine.step().unwrap();
+    }
+    let allocated = alloc_counter::total_allocations() - before;
+
+    assert_eq!(
+        allocated, 0,
+        "steady mixed steps must not allocate (got {allocated} over 100 steps)"
+    );
+    // The window really was mixed throughout, and both requests are
+    // still mid-flight (steady state, not retirement).
+    assert_eq!(engine.metrics.mixed_steps, mixed_before + 100);
+    assert_eq!(engine.running_len(), 2);
+
+    // Sanity: the run still completes correctly afterwards.
+    let done = engine.run_until_idle().unwrap();
+    assert_eq!(done.len(), 2);
+    assert!(done.iter().all(|f| f.reason == fa3_split::coordinator::FinishReason::Length));
+}

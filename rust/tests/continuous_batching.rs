@@ -1,0 +1,353 @@
+//! Property suite for the continuous-batching step composer and its
+//! engine integration (DESIGN.md §Continuous batching).
+//!
+//! The composer invariants under test, numbered as in
+//! `src/schedule/mod.rs`:
+//!
+//! 2. chunk spans tile each prompt exactly (contiguous, non-overlapping,
+//!    ending at the prompt length, first span skipping cached prefix but
+//!    never the final token);
+//! 3. the token budget bounds every composed step, with decode rows
+//!    admitted before any chunk;
+//! 1. chunked execution is semantically identical to monolithic prefill
+//!    (same token streams, same finish reasons) — chunking moves *when*
+//!    prompt tokens are ingested, never what gets computed;
+//! plus the engine-level guarantees that per-step admission stays
+//! FIFO within a priority class, KV block accounting survives every
+//! mid-chunk step, and cancelling a request mid-prefill releases every
+//! block it held.
+
+use fa3_split::backend::{AttnGeometry, SimBackend};
+use fa3_split::coordinator::{
+    BatcherConfig, Engine, EngineConfig, Priority, Request, SubmitOptions,
+};
+use fa3_split::planner::Planner;
+use fa3_split::schedule::{MixedStepPlan, ScheduleConfig, SlotView, StepComposer, TokenBudget};
+use fa3_split::util::proptest_lite::{check, check_with, Config, Domain};
+
+const BUCKETS: &[usize] = &[1, 2, 4];
+
+fn engine_with(schedule: ScheduleConfig, max_batch: usize) -> Engine {
+    Engine::builder(Box::new(SimBackend::h100()))
+        .planner(Planner::sequence_aware())
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+        .available_splits(vec![1, 3])
+        .config(EngineConfig {
+            batcher: BatcherConfig::for_max_batch(max_batch),
+            schedule,
+            ..Default::default()
+        })
+        .build()
+        .unwrap()
+}
+
+/// Deterministic per-case slot population: prompt lengths, cached
+/// prefixes, and which slots start prompt-complete all derive from the
+/// case's seed coordinate.
+fn synth_views(seed: u64, n_slots: usize) -> Vec<SlotView> {
+    let mut state = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1;
+    let mut next = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    (0..n_slots)
+        .map(|slot| {
+            let prompt_len = (next() % 400 + 1) as usize;
+            let cached = if next() % 3 == 0 { (next() as usize) % (prompt_len + 1) } else { 0 };
+            // A third of the slots begin prompt-complete (pure decoders).
+            let prefilled = if next() % 3 == 0 { prompt_len } else { 0 };
+            SlotView { slot, prompt_len, prefilled, cached_tokens: cached, done: false }
+        })
+        .collect()
+}
+
+#[test]
+fn chunk_spans_tile_prompts_exactly() {
+    check(
+        "chunk-spans-tile",
+        &[Domain::new(1, 96), Domain::new(1, 6), Domain::new(0, u64::MAX / 2)],
+        |c| {
+            let (chunk, n_slots, seed) = (c[0] as usize, c[1] as usize, c[2]);
+            let composer =
+                StepComposer::new(ScheduleConfig::bounded(chunk, TokenBudget::unbounded()));
+            let mut views = synth_views(seed, n_slots);
+            let mut spans: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_slots];
+            let mut out = MixedStepPlan::default();
+            // Hard bound: every step must ingest >= 1 token of some
+            // incomplete prompt, so total steps <= total prompt tokens.
+            let max_steps: usize = views.iter().map(|v| v.prompt_len).sum::<usize>() + 1;
+            for _ in 0..max_steps {
+                if views.iter().all(|v| v.prefilled >= v.prompt_len) {
+                    break;
+                }
+                composer.compose_into(views.iter().copied(), BUCKETS, &mut out);
+                if out.chunks.is_empty() {
+                    return Err("incomplete prompts but no chunk composed".into());
+                }
+                for span in &out.chunks {
+                    let v = &mut views[span.slot];
+                    let expect_start = if v.prefilled == 0 {
+                        v.cached_tokens.min(v.prompt_len - 1)
+                    } else {
+                        v.prefilled
+                    };
+                    if span.start != expect_start {
+                        return Err(format!(
+                            "slot {} span starts at {} (cursor {})",
+                            span.slot, span.start, expect_start
+                        ));
+                    }
+                    if span.len == 0 || span.len > chunk {
+                        return Err(format!("span len {} outside 1..={chunk}", span.len));
+                    }
+                    if span.end() > v.prompt_len {
+                        return Err(format!(
+                            "span ends at {} past prompt {}",
+                            span.end(),
+                            v.prompt_len
+                        ));
+                    }
+                    spans[span.slot].push((span.start, span.len));
+                    v.prefilled = span.end();
+                }
+                // Prompt-complete slots leave the sweep (they would become
+                // decode rows in the engine; tiling only concerns chunks).
+                for v in &mut views {
+                    if v.prefilled >= v.prompt_len {
+                        v.done = true;
+                    }
+                }
+            }
+            for (slot, v) in views.iter().enumerate() {
+                if v.prefilled < v.prompt_len {
+                    return Err(format!("slot {slot} never finished its prompt"));
+                }
+                if spans[slot].is_empty() {
+                    continue; // started prompt-complete
+                }
+                // Contiguity + exact tail.
+                let mut cursor = spans[slot][0].0;
+                for &(start, len) in &spans[slot] {
+                    if start != cursor {
+                        return Err(format!("slot {slot} gap: {cursor} -> {start}"));
+                    }
+                    cursor = start + len;
+                }
+                if cursor != v.prompt_len {
+                    return Err(format!(
+                        "slot {slot} tiled to {cursor}, prompt is {}",
+                        v.prompt_len
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn token_budget_bounds_every_step_decode_first() {
+    check(
+        "token-budget-bound",
+        &[
+            Domain::new(1, 64),
+            Domain::new(0, 64),
+            Domain::new(1, 6),
+            Domain::new(0, u64::MAX / 2),
+        ],
+        |c| {
+            let (chunk, extra, n_slots, seed) =
+                (c[0] as usize, c[1] as usize, c[2] as usize, c[3]);
+            // The validation floor: the budget must cover one decode token
+            // per slot and at least one full chunk.
+            let limit = chunk.max(n_slots) + extra;
+            let cfg = ScheduleConfig::bounded(chunk, TokenBudget::capped(limit));
+            cfg.validate(n_slots).map_err(|e| e.to_string())?;
+            let composer = StepComposer::new(cfg);
+            let mut views = synth_views(seed, n_slots);
+            let mut out = MixedStepPlan::default();
+            for _ in 0..views.iter().map(|v| v.prompt_len).sum::<usize>() + 1 {
+                let runnable = views.iter().any(|v| !v.done);
+                composer.compose_into(views.iter().copied(), BUCKETS, &mut out);
+                if !runnable {
+                    break;
+                }
+                if out.is_empty() {
+                    return Err("runnable slots but empty step (no progress)".into());
+                }
+                if out.step_tokens() > limit {
+                    return Err(format!("step {} tokens > budget {limit}", out.step_tokens()));
+                }
+                // Decode first: every prompt-complete live slot rides.
+                for v in views.iter().filter(|v| !v.done && v.prefilled >= v.prompt_len) {
+                    if !out.decode_slots.contains(&v.slot) {
+                        return Err(format!("decode slot {} starved by chunks", v.slot));
+                    }
+                }
+                for span in &out.chunks {
+                    views[span.slot].prefilled = span.end();
+                }
+                // Retire: decoders finish after one ride, fresh
+                // prompt-completions become decoders next step.
+                for v in &mut views {
+                    if out.decode_slots.contains(&v.slot) {
+                        v.done = true;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn chunked_engine_matches_monolithic_token_streams() {
+    let cfg = Config { cases: 10, ..Default::default() };
+    check_with(
+        cfg,
+        "chunked-equals-monolithic",
+        &[Domain::new(1, 128), Domain::new(1, 4), Domain::new(0, u64::MAX / 2)],
+        |c| {
+            let (chunk, n_req, seed) = (c[0] as usize, c[1] as usize, c[2]);
+            let mut state = seed | 1;
+            let mut next = move || {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                state
+            };
+            let reqs: Vec<(usize, usize)> = (0..n_req)
+                .map(|_| ((next() % 300 + 1) as usize, (next() % 20 + 1) as usize))
+                .collect();
+            let run = |schedule: ScheduleConfig| {
+                let mut engine = engine_with(schedule, 4);
+                for (id, &(p, n)) in reqs.iter().enumerate() {
+                    drop(engine.submit(Request::new(id as u64, vec![1; p], n)).unwrap());
+                }
+                let mut done = engine.run_until_idle().unwrap();
+                done.sort_by_key(|f| f.id);
+                done
+            };
+            let mono = run(ScheduleConfig::default());
+            let chunked =
+                run(ScheduleConfig::bounded(chunk, TokenBudget::unbounded()));
+            if mono.len() != chunked.len() {
+                return Err(format!("{} vs {} finished", mono.len(), chunked.len()));
+            }
+            for (a, b) in mono.iter().zip(&chunked) {
+                if a.tokens != b.tokens {
+                    return Err(format!("request {} token streams diverge", a.id));
+                }
+                if a.reason != b.reason {
+                    return Err(format!(
+                        "request {} finish reasons diverge: {:?} vs {:?}",
+                        a.id, a.reason, b.reason
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn admission_stays_fifo_within_class_under_chunking() {
+    // max_batch 2 forces most requests through the waiting queue, so
+    // per-step admission ordering is actually observable.
+    let mut engine =
+        engine_with(ScheduleConfig::bounded(16, TokenBudget::unbounded()), 2);
+    let classes = [Priority::Interactive, Priority::Standard, Priority::Batch];
+    for id in 0..9u64 {
+        let prompt = vec![1; 24 + (id as usize % 3) * 8];
+        let opts = SubmitOptions::default().priority(classes[id as usize % 3]);
+        drop(engine.submit_with(Request::new(id, prompt, 6), opts).unwrap());
+    }
+    let done = engine.run_until_idle().unwrap();
+    assert_eq!(done.len(), 9);
+    for class in Priority::all() {
+        let mut in_class: Vec<_> = done.iter().filter(|f| f.priority == class).collect();
+        in_class.sort_by_key(|f| f.id);
+        assert_eq!(in_class.len(), 3, "{} requests missing", class.name());
+        for pair in in_class.windows(2) {
+            assert!(
+                pair[0].timing.scheduled_us <= pair[1].timing.scheduled_us,
+                "{} class leapfrogged: id {} scheduled after id {}",
+                class.name(),
+                pair[0].id,
+                pair[1].id
+            );
+        }
+    }
+}
+
+#[test]
+fn kv_accounting_holds_on_every_mid_chunk_step() {
+    let cfg = Config { cases: 8, ..Default::default() };
+    check_with(
+        cfg,
+        "kv-invariants-mid-chunk",
+        &[Domain::new(1, 96), Domain::new(0, u64::MAX / 2)],
+        |c| {
+            let (chunk, seed) = (c[0] as usize, c[1]);
+            let mut engine =
+                engine_with(ScheduleConfig::bounded(chunk, TokenBudget::unbounded()), 4);
+            let baseline = engine.block_manager().free_blocks();
+            let mut state = seed | 1;
+            let mut next = move || {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                state
+            };
+            for id in 0..3u64 {
+                let p = (next() % 300 + 100) as usize;
+                drop(engine.submit(Request::new(id, vec![1; p], 8)).unwrap());
+            }
+            let mut guard = 0;
+            while !engine.is_idle() {
+                engine.step().map_err(|e| e.to_string())?;
+                engine.block_manager().check_invariants().map_err(|e| {
+                    format!("block invariants broke mid-chunk (chunk={chunk}): {e}")
+                })?;
+                guard += 1;
+                if guard > 5_000 {
+                    return Err("engine failed to drain".into());
+                }
+            }
+            if engine.block_manager().free_blocks() != baseline {
+                return Err(format!(
+                    "leak: {} free blocks vs baseline {baseline}",
+                    engine.block_manager().free_blocks()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cancel_mid_prefill_frees_every_block() {
+    for chunk in [1usize, 17, 32, 96] {
+        let mut engine =
+            engine_with(ScheduleConfig::bounded(chunk, TokenBudget::unbounded()), 4);
+        let baseline = engine.block_manager().free_blocks();
+        drop(engine.submit(Request::new(1, vec![1; 500], 32)).unwrap());
+        // A few steps in, the prompt is only partially ingested (for
+        // small chunks) — the cancel must still release every block the
+        // partial prefill charged.
+        for _ in 0..4 {
+            engine.step().unwrap();
+        }
+        assert!(engine.cancel(1), "request should be live");
+        let done = engine.run_until_idle().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(
+            engine.block_manager().free_blocks(),
+            baseline,
+            "chunk={chunk}: blocks leaked by mid-prefill cancel"
+        );
+        assert_eq!(engine.block_manager().num_seqs(), 0);
+    }
+}
