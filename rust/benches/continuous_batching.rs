@@ -42,6 +42,7 @@ use fa3_split::coordinator::{
 use fa3_split::planner::Planner;
 use fa3_split::schedule::{ChunkPolicy, ScheduleConfig, TokenBudget};
 use fa3_split::util::json::Json;
+use fa3_split::util::stats;
 use fa3_split::workload::{ChatWorkload, GeneratedRequest};
 
 const MAX_BATCH: usize = 8;
@@ -180,7 +181,7 @@ fn run_rtc() -> LoadResult {
 }
 
 fn ttft_percentiles(done: &[FinishedRequest], class: Option<Priority>) -> Option<(f64, f64)> {
-    let mut ttfts: Vec<f64> = done
+    let ttfts: Vec<f64> = done
         .iter()
         .filter(|f| class.map_or(true, |c| f.priority == c))
         .map(|f| f.timing.ttft_us() as f64)
@@ -188,10 +189,7 @@ fn ttft_percentiles(done: &[FinishedRequest], class: Option<Priority>) -> Option
     if ttfts.is_empty() {
         return None;
     }
-    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mean = ttfts.iter().sum::<f64>() / ttfts.len() as f64;
-    let p99 = ttfts[(ttfts.len() * 99 / 100).min(ttfts.len() - 1)];
-    Some((mean, p99))
+    Some(stats::mean_p99(&ttfts))
 }
 
 fn main() {

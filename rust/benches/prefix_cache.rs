@@ -35,6 +35,7 @@ use fa3_split::coordinator::{
 use fa3_split::planner::Planner;
 use fa3_split::util::alloc_counter::{self, CountingAllocator};
 use fa3_split::util::json::Json;
+use fa3_split::util::stats;
 use fa3_split::workload::ChatWorkload;
 
 #[global_allocator]
@@ -96,10 +97,8 @@ fn run_sweep_point(fanout: usize) -> SweepPoint {
     }
     let done = e.run_until_idle().unwrap();
     assert_eq!(done.len(), 48, "every request must finish");
-    let mut ttfts: Vec<f64> = done.iter().map(|f| f.timing.ttft_us() as f64).collect();
-    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mean = ttfts.iter().sum::<f64>() / ttfts.len() as f64;
-    let p99 = ttfts[(ttfts.len() * 99 / 100).min(ttfts.len() - 1)];
+    let ttfts: Vec<f64> = done.iter().map(|f| f.timing.ttft_us() as f64).collect();
+    let (mean, p99) = stats::mean_p99(&ttfts);
     SweepPoint {
         fanout,
         mean_ttft_us: mean,

@@ -1,0 +1,243 @@
+//! Bench: flight-recorder overhead on the serving hot path.
+//!
+//! The observability contract (DESIGN.md §Observability) is that tracing
+//! is cheap enough to leave on: recording is a store into a pre-sized
+//! ring plus bucket arithmetic, never an allocation, never a syscall.
+//! This bench measures that claim rather than asserting it:
+//!
+//! * **Step-cost ratio** — interleaved A/B of a warmed steady-decode
+//!   window, recorder on (ring small enough to wrap) vs off. Gate:
+//!   median traced step cost ≤ 1.05× untraced.
+//! * **Allocations** — the traced window under the counting allocator.
+//!   Gate: zero heap acquisitions per step.
+//! * **Identity** — a full traced run vs the same run untraced. Gate:
+//!   byte-identical tokens, reasons, and timings (observation, not
+//!   perturbation).
+//! * **Exporters** — the Chrome trace parses as JSON with the trace-event
+//!   envelope, and the Prometheus text exposition carries the occupancy
+//!   histogram families. Gate: both schema checks pass.
+//!
+//! Run: `cargo bench --bench trace_overhead [-- --json PATH]`
+//! (`BENCH_trace_overhead.json` is regenerated this way.)
+
+use fa3_split::backend::{AttnGeometry, SimBackend};
+use fa3_split::coordinator::{Engine, EngineConfig, FinishedRequest, Request};
+use fa3_split::obs;
+use fa3_split::planner::Planner;
+use fa3_split::util::alloc_counter::{self, CountingAllocator};
+use fa3_split::util::json::Json;
+use fa3_split::util::stats;
+use fa3_split::workload::ChatWorkload;
+
+#[global_allocator]
+static COUNTER: CountingAllocator = CountingAllocator;
+
+fn engine(trace_capacity: usize) -> Engine {
+    Engine::builder(Box::new(SimBackend::h100()))
+        .planner(Planner::sequence_aware())
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 2048 })
+        .config(EngineConfig { trace_capacity, ..Default::default() })
+        .build()
+        .unwrap()
+}
+
+const WARMUP_STEPS: usize = 24;
+const MEASURED_STEPS: usize = 400;
+const TRIALS: usize = 7;
+
+/// A warmed steady-decode engine: 2 slots, long generations, scratch
+/// sized, stream sinks latched dead.
+fn warmed(trace_capacity: usize) -> Engine {
+    let mut e = engine(trace_capacity);
+    drop(e.submit(Request::new(1, vec![1; 350], 3_000)).unwrap());
+    drop(e.submit(Request::new(2, vec![1; 350], 3_000)).unwrap());
+    for _ in 0..WARMUP_STEPS {
+        e.step().unwrap();
+    }
+    assert_eq!(e.running_len(), 2, "warmup should settle into steady decode");
+    e.metrics.reserve_capacity(MEASURED_STEPS + 16, 16);
+    e
+}
+
+/// Wall time of one steady-decode window, µs.
+fn timed_window(e: &mut Engine) -> f64 {
+    let t0 = std::time::Instant::now();
+    for _ in 0..MEASURED_STEPS {
+        e.step().unwrap();
+    }
+    t0.elapsed().as_secs_f64() * 1e6
+}
+
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+fn full_run(trace_capacity: usize) -> (Engine, Vec<FinishedRequest>) {
+    let mut e = engine(trace_capacity);
+    let workload = ChatWorkload {
+        seed: 0x0B5E,
+        n_requests: 8,
+        prompt_median: 200,
+        output_mean: 24,
+        output_cap: 48,
+        mean_gap_us: 400,
+        ..Default::default()
+    };
+    for g in workload.generate() {
+        e.submit_at(g.request, g.arrival_offset_us).expect("schedulable");
+    }
+    let mut done = e.run_until_idle().unwrap();
+    done.sort_by_key(|f| f.id);
+    (e, done)
+}
+
+fn identical(a: &[FinishedRequest], b: &[FinishedRequest]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.id == y.id
+                && x.tokens == y.tokens
+                && x.reason == y.reason
+                && x.timing.arrival_us == y.timing.arrival_us
+                && x.timing.first_token_us == y.timing.first_token_us
+                && x.timing.finished_us == y.timing.finished_us
+        })
+}
+
+fn main() {
+    let json_path = {
+        let args: Vec<String> = std::env::args().collect();
+        args.iter().position(|a| a == "--json").and_then(|i| args.get(i + 1).cloned())
+    };
+
+    println!("== Flight-recorder overhead on the decode hot path ==\n");
+
+    // ------------------------------------------------------------------
+    // Scenario 1: interleaved A/B step cost, recorder on vs off. The
+    // 1024-event ring wraps inside every window (~3 events/step × 400
+    // steps), so the measured cost is the overwrite steady state.
+    // ------------------------------------------------------------------
+    let mut on_us = Vec::with_capacity(TRIALS);
+    let mut off_us = Vec::with_capacity(TRIALS);
+    for _ in 0..TRIALS {
+        let mut traced = warmed(1024);
+        let mut untraced = warmed(0);
+        on_us.push(timed_window(&mut traced));
+        off_us.push(timed_window(&mut untraced));
+        assert!(traced.recorder().dropped() > 0, "the window must wrap the ring");
+    }
+    let (on_med, off_med) = (median(on_us.clone()), median(off_us.clone()));
+    let ratio = on_med / off_med;
+    let per_step_on = on_med / MEASURED_STEPS as f64;
+    let per_step_off = off_med / MEASURED_STEPS as f64;
+    println!(
+        "step cost over {TRIALS} trials x {MEASURED_STEPS} steps: \
+         on {per_step_on:.3} µs/step, off {per_step_off:.3} µs/step, ratio {ratio:.4}"
+    );
+
+    // ------------------------------------------------------------------
+    // Scenario 2: allocations in the traced window.
+    // ------------------------------------------------------------------
+    let mut traced = warmed(1024);
+    let before = alloc_counter::total_allocations();
+    for _ in 0..MEASURED_STEPS {
+        traced.step().unwrap();
+    }
+    let allocs = alloc_counter::total_allocations() - before;
+    println!("traced steady-state window: {allocs} heap acquisitions over {MEASURED_STEPS} steps");
+
+    // ------------------------------------------------------------------
+    // Scenario 3: identity — tracing must not perturb the run.
+    // ------------------------------------------------------------------
+    let (traced_engine, with) = full_run(8192);
+    let (_, without) = full_run(0);
+    let id_ok = identical(&with, &without);
+    println!(
+        "traced vs untraced over {} requests: {}",
+        with.len(),
+        if id_ok { "byte-identical" } else { "DIVERGED" }
+    );
+
+    // ------------------------------------------------------------------
+    // Scenario 4: exporter schemas on the traced run.
+    // ------------------------------------------------------------------
+    let trace_json = obs::engine_trace(traced_engine.recorder(), "engine").to_string();
+    let chrome_ok = match Json::parse(&trace_json) {
+        Ok(Json::Obj(top)) => matches!(top.get("traceEvents"), Some(Json::Arr(e)) if !e.is_empty()),
+        _ => false,
+    };
+    let mut traced_engine = traced_engine;
+    let prom = traced_engine.metrics.to_prometheus();
+    let prom_ok = prom.contains("# TYPE fa3_decode_occupancy_keyed histogram")
+        && prom.contains("_bucket{")
+        && prom.ends_with('\n')
+        && prom.lines().all(|l| l.is_empty() || l.starts_with('#') || l.contains(' '));
+    println!(
+        "exporters: chrome {} ({} bytes), prometheus {} ({} bytes)",
+        if chrome_ok { "OK" } else { "INVALID" },
+        trace_json.len(),
+        if prom_ok { "OK" } else { "INVALID" },
+        prom.len()
+    );
+
+    // ------------------------------------------------------------------
+    // Gates.
+    // ------------------------------------------------------------------
+    let mut ok = true;
+    let g1 = ratio <= 1.05;
+    println!("\nrecorder-on step cost within 1.05x of off: {ratio:.4} ({})", if g1 { "OK" } else { "MISS" });
+    ok &= g1;
+    let g2 = allocs == 0;
+    println!("zero allocations per traced step: {allocs} ({})", if g2 { "OK" } else { "MISS" });
+    ok &= g2;
+    println!("token/timing identity with tracing on: {}", if id_ok { "OK" } else { "MISS" });
+    ok &= id_ok;
+    let g4 = chrome_ok && prom_ok;
+    println!("exporter schemas valid: {}", if g4 { "OK" } else { "MISS" });
+    ok &= g4;
+
+    if let Some(path) = json_path {
+        let report = Json::obj(vec![
+            ("bench", Json::str("trace_overhead")),
+            (
+                "generated_by",
+                Json::str("cargo bench --bench trace_overhead -- --json <path>"),
+            ),
+            ("measured", Json::Bool(true)),
+            (
+                "step_cost",
+                Json::obj(vec![
+                    ("trials", Json::int(TRIALS as i64)),
+                    ("steps_per_trial", Json::int(MEASURED_STEPS as i64)),
+                    ("on_us_per_step", Json::num(per_step_on)),
+                    ("off_us_per_step", Json::num(per_step_off)),
+                    ("ratio", Json::num(ratio)),
+                    ("on_us_mean_p99", {
+                        let (m, p) = stats::mean_p99(&on_us);
+                        Json::obj(vec![("mean", Json::num(m)), ("p99", Json::num(p))])
+                    }),
+                ]),
+            ),
+            (
+                "gates",
+                Json::obj(vec![
+                    ("ratio_limit", Json::num(1.05)),
+                    ("ratio", Json::num(ratio)),
+                    ("steady_state_allocs", Json::int(allocs as i64)),
+                    ("identity", Json::Bool(id_ok)),
+                    ("chrome_schema", Json::Bool(chrome_ok)),
+                    ("prometheus_schema", Json::Bool(prom_ok)),
+                ]),
+            ),
+            ("passed", Json::Bool(ok)),
+        ]);
+        match std::fs::write(&path, report.to_string_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -50,6 +50,18 @@ pub fn corpus() -> Vec<Fixture> {
             )],
         },
         Fixture {
+            name: "obs_layering_escape",
+            pass: "layering",
+            expect: "obs -> coordinator",
+            files: &[(
+                // obs is the bottom tracing layer (obs -> util only): an
+                // import of the engine from inside obs inverts the DAG.
+                "obs/bad.rs",
+                "use crate::coordinator::Engine;\n\
+                 pub fn peek(e: &Engine) -> usize { e.metrics.steps }\n",
+            )],
+        },
+        Fixture {
             name: "no_alloc_violation",
             pass: "no_alloc",
             expect: "allocating idiom `vec!`",

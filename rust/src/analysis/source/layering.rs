@@ -4,7 +4,9 @@
 //!
 //! The architecture stacks (DESIGN.md §Static analysis draws the full
 //! picture): `util` and `heuristics` at the bottom with no internal
-//! dependencies, `planner` above `heuristics`, `sim` above both, the
+//! dependencies, `obs` (the tracing/metrics layer) directly above `util`
+//! so every layer may record into it, `planner` above `heuristics`,
+//! `sim` above both, the
 //! serving stack (`runtime` → `backend` → `coordinator` → `workload`)
 //! above those, and `evolve` / `bench_harness` / `cluster` / `analysis`
 //! at the top. Two *documented back-edges* exist and are part of the
@@ -33,6 +35,7 @@ pub const PASS: &str = "layering";
 /// must point from a higher-ranked module to a lower-ranked one.
 pub const MODULE_ORDER: &[&str] = &[
     "util",
+    "obs",
     "heuristics",
     "planner",
     "sim",
@@ -52,17 +55,24 @@ pub const MODULE_ORDER: &[&str] = &[
 /// the binary crate addresses it as `fa3_split::`, not `crate::`.
 pub const ALLOWED: &[(&str, &[&str])] = &[
     ("util", &[]),
+    // obs is the cross-cutting tracing/metrics layer: it sits just above
+    // util (its only dependency) so that every layer of the serving
+    // stack may record into it without creating a cycle.
+    ("obs", &["util"]),
     ("heuristics", &[]),
     ("runtime", &["util"]),
-    ("planner", &["heuristics", "util", "sim", "evolve"]),
+    ("planner", &["heuristics", "obs", "util", "sim", "evolve"]),
     ("sim", &["heuristics", "planner", "util"]),
     ("evolve", &["heuristics", "planner", "sim", "util", "workload"]),
-    ("workload", &["coordinator", "heuristics", "util"]),
-    ("backend", &["heuristics", "planner", "runtime", "sim", "util"]),
-    ("schedule", &["util"]),
-    ("coordinator", &["backend", "heuristics", "planner", "schedule", "util"]),
-    ("cluster", &["backend", "coordinator", "heuristics", "planner", "util", "workload"]),
-    ("bench_harness", &["evolve", "heuristics", "planner", "sim", "util", "workload"]),
+    ("workload", &["coordinator", "heuristics", "obs", "util"]),
+    ("backend", &["heuristics", "obs", "planner", "runtime", "sim", "util"]),
+    ("schedule", &["obs", "util"]),
+    ("coordinator", &["backend", "heuristics", "obs", "planner", "schedule", "util"]),
+    (
+        "cluster",
+        &["backend", "coordinator", "heuristics", "obs", "planner", "util", "workload"],
+    ),
+    ("bench_harness", &["evolve", "heuristics", "obs", "planner", "sim", "util", "workload"]),
     ("analysis", &["heuristics", "planner", "util"]),
 ];
 

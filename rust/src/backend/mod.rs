@@ -179,6 +179,14 @@ pub struct StepOutcome {
     pub elapsed_us: f64,
     /// Model invocations performed for prompt ingestion this step.
     pub prefill_calls: usize,
+    /// Share of `elapsed_us` attributed to the decode attention wave
+    /// (0 when the step carried no decode rows, or when the backend
+    /// doesn't decompose its cost — wall-clock backends report totals
+    /// only). Feeds the flight recorder's per-wave cost counters.
+    pub decode_wave_us: f64,
+    /// Share of `elapsed_us` attributed to prompt ingestion (bulk
+    /// prefill or mixed-step chunks); 0 under the same conditions.
+    pub chunk_wave_us: f64,
 }
 
 impl StepOutcome {
@@ -188,6 +196,8 @@ impl StepOutcome {
         self.prefilled.clear();
         self.elapsed_us = 0.0;
         self.prefill_calls = 0;
+        self.decode_wave_us = 0.0;
+        self.chunk_wave_us = 0.0;
     }
 }
 

@@ -109,6 +109,7 @@ impl ExecutionBackend for SimBackend {
                         self.sim.prefill_cached_us(row.prompt.len(), row.cached_tokens);
                     out.prefilled.push((row.slot, row.prompt.len()));
                 }
+                out.chunk_wave_us = out.elapsed_us;
                 out.prefill_calls = out.prefilled.len();
             }
             StepKind::Decode => {
@@ -116,6 +117,7 @@ impl ExecutionBackend for SimBackend {
                 // One attention launch per layer; 1 layer is the unit
                 // (policy comparisons are ratios, layers scale both sides).
                 out.elapsed_us = self.sim.kernel_us(&plan.metadata) + self.overhead_us;
+                out.decode_wave_us = out.elapsed_us;
                 for r in &batch.rows {
                     out.tokens.push((r.slot, SimBackend::synthetic_token(r.position)));
                 }
@@ -135,8 +137,9 @@ impl ExecutionBackend for SimBackend {
                                 .plan
                                 .as_ref()
                                 .context("mixed step's decode rows lost their plan")?;
-                            out.elapsed_us +=
-                                self.sim.kernel_us(&plan.metadata) + self.overhead_us;
+                            let wave = self.sim.kernel_us(&plan.metadata) + self.overhead_us;
+                            out.elapsed_us += wave;
+                            out.decode_wave_us += wave;
                             decode_priced = true;
                         }
                         out.tokens.push((r.slot, SimBackend::synthetic_token(r.position)));
@@ -144,7 +147,9 @@ impl ExecutionBackend for SimBackend {
                         // `position` is the span start; report the new
                         // TOTAL ingested so the engine's chunk cursor
                         // (`prefilled`) advances to the span end.
-                        out.elapsed_us += self.sim.chunk_prefill_us(r.prompt.len(), r.kv_len);
+                        let chunk = self.sim.chunk_prefill_us(r.prompt.len(), r.kv_len);
+                        out.elapsed_us += chunk;
+                        out.chunk_wave_us += chunk;
                         out.prefilled.push((r.slot, r.position + r.prompt.len()));
                         out.prefill_calls += 1;
                     }
@@ -227,6 +232,8 @@ mod tests {
             prefilled: vec![(7, 7)],
             elapsed_us: 123.0,
             prefill_calls: 5,
+            decode_wave_us: 99.0,
+            chunk_wave_us: 24.0,
         };
         // The one new token fits the existing capacity (2), so a reusing
         // execute must write into the SAME allocation — pointer identity,

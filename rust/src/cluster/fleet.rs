@@ -270,6 +270,36 @@ impl Fleet {
         Ok(self.report(finished))
     }
 
+    /// Merge every replica's flight-recorder ring into one Chrome trace
+    /// (one trace process per replica, labeled with its device). Replicas
+    /// built without `trace_capacity` contribute only metadata. The CLI's
+    /// `cluster --trace-out` writes this.
+    pub fn chrome_trace(&self) -> crate::util::json::Json {
+        let traces: Vec<crate::obs::ReplicaTrace> = self
+            .replicas
+            .iter()
+            .map(|r| crate::obs::ReplicaTrace {
+                pid: r.index() as u32,
+                name: format!("replica {} ({})", r.index(), r.device_name()),
+                recorder: r.recorder(),
+            })
+            .collect();
+        crate::obs::fleet_trace(&traces)
+    }
+
+    /// Prometheus text exposition of every replica's metrics registry,
+    /// one commented section per replica (each replica is its own scrape
+    /// target in a real deployment; the file form keeps the sections
+    /// adjacent). The CLI's `cluster --metrics-out` writes this.
+    pub fn prometheus(&mut self) -> String {
+        let mut out = String::new();
+        for r in &mut self.replicas {
+            out.push_str(&format!("# replica {} ({})\n", r.index(), r.device_name()));
+            out.push_str(&r.metrics_mut().to_prometheus());
+        }
+        out
+    }
+
     fn report(&self, finished: Vec<Vec<FinishedRequest>>) -> FleetReport {
         let mut replica_reports = Vec::with_capacity(self.replicas.len());
         let mut ttfts: Vec<f64> = Vec::new();
@@ -291,6 +321,7 @@ impl Fleet {
                 requests_finished: m.requests_finished,
                 tokens_generated: m.tokens_generated,
                 mean_occupancy: m.mean_occupancy(),
+                decode_occupancy_samples: m.decode_occupancy_samples() as usize,
                 tpot: m.tpot(),
                 ttft: m.ttft(),
                 throughput_tok_s: m.throughput_tok_s(),
@@ -335,6 +366,10 @@ pub struct ReplicaReport {
     /// quantity TP sharding collapses. `None` when the replica ran no
     /// decode steps (an idle replica is not a measured 0%).
     pub mean_occupancy: Option<f64>,
+    /// Decode-occupancy observations behind `mean_occupancy` — the weight
+    /// the fleet-level pooled mean uses (a replica that decoded 10 steps
+    /// must not count as much as one that decoded 10 000).
+    pub decode_occupancy_samples: usize,
     pub tpot: Option<Summary>,
     pub ttft: Option<Summary>,
     pub throughput_tok_s: f64,
@@ -414,14 +449,25 @@ impl FleetReport {
         violators.len()
     }
 
-    /// Mean per-replica occupancy across replicas that actually decoded
+    /// Pooled mean decode occupancy across replicas that actually decoded
     /// (idle replicas carry no sample and must not dilute the mean).
+    /// Weighted by each replica's observation count — the mean of the
+    /// merged samples, not a mean of per-replica means, so a lightly
+    /// loaded replica cannot skew the fleet number (the same pooling
+    /// discipline the fleet TTFT/TPOT summaries follow).
     pub fn mean_occupancy(&self) -> f64 {
-        let samples: Vec<f64> = self.replicas.iter().filter_map(|r| r.mean_occupancy).collect();
-        if samples.is_empty() {
+        let mut weighted = 0.0;
+        let mut n = 0usize;
+        for r in &self.replicas {
+            if let Some(occ) = r.mean_occupancy {
+                weighted += occ * r.decode_occupancy_samples as f64;
+                n += r.decode_occupancy_samples;
+            }
+        }
+        if n == 0 {
             return 0.0;
         }
-        samples.iter().sum::<f64>() / samples.len() as f64
+        weighted / n as f64
     }
 
     /// ASCII rendering for the CLI.
@@ -571,6 +617,7 @@ mod tests {
                     requests_finished: 1,
                     tokens_generated: 100,
                     mean_occupancy: None,
+                    decode_occupancy_samples: 0,
                     tpot: None,
                     ttft: None,
                     throughput_tok_s: 0.0,
@@ -584,6 +631,7 @@ mod tests {
                     requests_finished: 1,
                     tokens_generated: 100,
                     mean_occupancy: None,
+                    decode_occupancy_samples: 0,
                     tpot: None,
                     ttft: None,
                     throughput_tok_s: 0.0,

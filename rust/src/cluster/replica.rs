@@ -43,12 +43,15 @@ impl Replica {
         default_cfg: &EngineConfig,
     ) -> Result<Replica> {
         let cfg = spec.engine.clone().unwrap_or_else(|| default_cfg.clone());
-        let engine = Engine::builder(Box::new(SimBackend::for_profile(&spec.device)))
+        let mut engine = Engine::builder(Box::new(SimBackend::for_profile(&spec.device)))
             .planner(planner)
             .geometry(shard)
             .config(cfg)
             .build()
             .with_context(|| format!("building replica {index} ({})", spec.device.name))?;
+        // Tag the flight recorder so merged fleet traces keep one Chrome
+        // process (pid) per replica.
+        engine.recorder_mut().set_replica(index as u32);
         Ok(Replica { index, device_name: spec.device.name, engine, assigned: 0, rejected: 0 })
     }
 
@@ -70,6 +73,17 @@ impl Replica {
     /// The replica engine's rolling metrics.
     pub fn metrics(&self) -> &EngineMetrics {
         &self.engine.metrics
+    }
+
+    /// Mutable metrics access (the Prometheus exposition syncs mirrored
+    /// counters into the registry before rendering).
+    pub fn metrics_mut(&mut self) -> &mut EngineMetrics {
+        &mut self.engine.metrics
+    }
+
+    /// The replica engine's flight recorder (trace export).
+    pub fn recorder(&self) -> &crate::obs::FlightRecorder {
+        self.engine.recorder()
     }
 
     /// Requests the router has placed here.

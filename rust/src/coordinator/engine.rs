@@ -46,6 +46,7 @@ use anyhow::{Context, Result};
 use crate::backend::{
     AttnGeometry, BackendCaps, ExecutionBackend, StepBatch, StepKind, StepOutcome, StepRow,
 };
+use crate::obs::{CursorOutcome, EventKind, FlightRecorder, Phase, PolicyId, WaveKind};
 use crate::planner::{CursorStats, Planner};
 use crate::schedule::{ChunkSpan, MixedStepPlan, ScheduleConfig, SlotView, StepComposer};
 
@@ -69,6 +70,13 @@ pub struct EngineConfig {
     /// default ([`ScheduleConfig::default`], monolithic/unbounded) is
     /// byte-identical to the pre-composer engine.
     pub schedule: ScheduleConfig,
+    /// Flight-recorder ring capacity in events (the CLI's
+    /// `--trace-capacity`). 0 — the default — disables tracing entirely:
+    /// the record path reduces to one branch and the step loop stays
+    /// byte-identical to an untraced engine. When the ring fills, the
+    /// oldest events are overwritten (most recent window wins) and a drop
+    /// counter runs up; recording never blocks the step loop.
+    pub trace_capacity: usize,
 }
 
 /// Builder: the only way to construct an [`Engine`]. The backend is
@@ -131,6 +139,13 @@ impl EngineBuilder {
         blocks_cfg.max_seq = blocks_cfg.max_seq.min(geometry.max_seq);
         self.cfg.schedule.validate(self.cfg.batcher.max_batch)?;
         let caps = self.backend.caps();
+        // Observability setup runs here, not on the hot path: the policy
+        // name is interned into the recorder once and the keyed occupancy
+        // histograms are registered for this engine's (policy, h_kv).
+        let mut metrics = EngineMetrics::default();
+        metrics.configure_occupancy_keys(scheduler.policy_name(), geometry.h_kv);
+        let mut recorder = FlightRecorder::with_capacity(self.cfg.trace_capacity);
+        let policy_id = recorder.intern_policy(scheduler.policy_name());
         Ok(Engine {
             backend: self.backend,
             caps,
@@ -139,7 +154,9 @@ impl EngineBuilder {
             batcher: Batcher::new(self.cfg.batcher.clone()),
             admission: AdmissionController::new(self.cfg.admission.clone()),
             blocks: BlockManager::new(blocks_cfg),
-            metrics: EngineMetrics::default(),
+            metrics,
+            recorder,
+            policy_id,
             started: Instant::now(),
             clock_us: 0.0,
             pending_arrivals: Vec::new(),
@@ -173,6 +190,13 @@ pub struct Engine {
     admission: AdmissionController,
     blocks: BlockManager,
     pub metrics: EngineMetrics,
+    /// Flight recorder: fixed-capacity event ring on the engine clock.
+    /// Disabled (capacity 0) unless [`EngineConfig::trace_capacity`] set
+    /// it; recording is a single branch when disabled and stays
+    /// allocation-free when enabled.
+    recorder: FlightRecorder,
+    /// The scheduler's policy name interned into the recorder at build.
+    policy_id: PolicyId,
     started: Instant,
     /// Virtual clock (µs) for virtual-clock backends.
     clock_us: f64,
@@ -244,6 +268,17 @@ impl Engine {
         self.scheduler.cursor_stats()
     }
 
+    /// The flight recorder (read side: exporters, span reconstruction).
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
+    /// Mutable recorder access (the fleet stamps each replica's index
+    /// here before running, so merged traces keep one track per replica).
+    pub fn recorder_mut(&mut self) -> &mut FlightRecorder {
+        &mut self.recorder
+    }
+
     /// Requests waiting in admission.
     pub fn waiting_len(&self) -> usize {
         self.admission.waiting_len()
@@ -305,10 +340,27 @@ impl Engine {
     /// Offer without restamping `arrival_us` (open-loop arrivals keep the
     /// timestamp `submit_at` gave them).
     fn offer_tracked(&mut self, t: TrackedRequest) -> Result<(), SubmitError> {
+        let id = t.req.id;
+        let arrival_us = t.req.arrival_us;
+        let class = t.ticket.priority.index() as u8;
         match self.admission.offer(t, &self.blocks) {
-            Ok(()) => Ok(()),
+            Ok(()) => {
+                // Stamped with the request's arrival time (not the offer
+                // time), so span TTFT matches `RequestTiming` exactly even
+                // for open-loop arrivals held in `pending_arrivals`.
+                self.recorder
+                    .record(arrival_us, EventKind::Lifecycle { request: id, phase: Phase::Queued });
+                Ok(())
+            }
             Err((t, err)) => {
                 self.sync_rejection_counters();
+                self.recorder.record(
+                    self.now_us(),
+                    EventKind::AdmissionReject {
+                        class,
+                        backpressure: matches!(err, SubmitError::Backpressure(_)),
+                    },
+                );
                 t.ticket.sink.send(StreamEvent::Rejected(err));
                 Err(err)
             }
@@ -354,6 +406,13 @@ impl Engine {
             self.admission.check_schedulable(&req.prompt, req.max_new_tokens, &self.blocks)
         {
             self.sync_rejection_counters();
+            self.recorder.record(
+                self.now_us(),
+                EventKind::AdmissionReject {
+                    class: opts.priority.index() as u8,
+                    backpressure: false,
+                },
+            );
             return Err(err);
         }
         req.arrival_us = arrival_us;
@@ -480,6 +539,8 @@ impl Engine {
         let reason =
             t.ticket.cancel.get().map(CancelKind::finish_reason).unwrap_or(FinishReason::Aborted);
         self.metrics.record_cancelled(reason == FinishReason::DeadlineExceeded);
+        self.recorder
+            .record(now, EventKind::Lifecycle { request: t.req.id, phase: Phase::Cancelled });
         let fin = FinishedRequest {
             id: t.req.id,
             prompt_len: t.req.prompt.len(),
@@ -534,6 +595,33 @@ impl Engine {
         // done, so this costs nothing on ordinary steps.
         for id in admitted {
             if let Some(slot) = self.batcher.slot_of(id) {
+                if self.recorder.enabled() {
+                    let (cached, prompt_len) = self
+                        .batcher
+                        .running(slot)
+                        .map(|r| (r.cached_prompt_tokens, r.req.prompt.len()))
+                        .unwrap_or((0, 0));
+                    let phase = Phase::Admitted { slot: slot as u32 };
+                    self.recorder.record(now, EventKind::Lifecycle { request: id, phase });
+                    self.recorder.record(
+                        now,
+                        EventKind::KvAdmit {
+                            request: id,
+                            slot: slot as u32,
+                            cached_tokens: cached as u32,
+                        },
+                    );
+                    if prompt_len > 0 {
+                        self.recorder.record(
+                            now,
+                            EventKind::PrefixProbe {
+                                request: id,
+                                hit_tokens: cached as u32,
+                                prompt_tokens: prompt_len as u32,
+                            },
+                        );
+                    }
+                }
                 if self.batcher.running(slot).is_some_and(|r| r.done()) {
                     self.retire(slot, FinishReason::Length)?;
                 }
@@ -544,13 +632,32 @@ impl Engine {
         // after — `step_with_mixed` needs `&mut self` while it's borrowed.
         let mut mixed = std::mem::take(&mut self.scratch.mixed);
         self.compose_step(&mut mixed);
+        if self.recorder.enabled() && !mixed.is_empty() {
+            self.recorder.record(
+                now,
+                EventKind::StepComposed {
+                    class: mixed.step_class(),
+                    chunk_rows: mixed.chunks.len() as u32,
+                    decode_rows: mixed.decode_slots.len() as u32,
+                    step_tokens: mixed.step_tokens() as u32,
+                    kv_used_blocks: self.blocks.used_blocks() as u32,
+                    queue_depth: self.admission.waiting_len() as u32,
+                },
+            );
+        }
         let result = self.step_with_mixed(&mixed);
         self.scratch.mixed = mixed;
         // The block manager's prefix-cache counters are the single source
         // of truth; the metrics mirror them by copy (a Copy struct — no
         // allocation on the hot path), same discipline as the rejection
         // counters.
+        let evicted_before = self.metrics.prefix.evictions;
         self.metrics.prefix = self.blocks.prefix_stats();
+        let evicted = self.metrics.prefix.evictions.saturating_sub(evicted_before);
+        if evicted > 0 {
+            self.recorder
+                .record(self.now_us(), EventKind::KvEvict { blocks: evicted as u32 });
+        }
         result
     }
 
@@ -620,9 +727,19 @@ impl Engine {
                 .map(|&s| self.batcher.running(s).map(|r| r.kv_len() + 1).unwrap_or(1))
                 .max()
                 .unwrap_or(1);
+            let refills_before = self.scheduler.cursor_stats().refills;
             let d = self.scheduler.decide(mixed.decode_slots.len(), max_kv)?;
             self.metrics.record_split(d.plan.metadata.num_splits);
             self.metrics.record_decode_occupancy(d.plan.occupancy);
+            self.metrics.record_decode_occupancy_keyed(d.plan.occupancy, max_kv);
+            self.record_plan_decision(
+                WaveKind::Decode,
+                mixed.decode_slots.len(),
+                max_kv,
+                d.plan.metadata.num_splits,
+                d.plan.occupancy,
+                refills_before,
+            );
             Some(d)
         };
         // The chunk wave's split decision: l_q = longest chunk, l_k = the
@@ -632,8 +749,17 @@ impl Engine {
         // heuristic produces.
         let l_q = mixed.chunks.iter().map(|c| c.len).max().unwrap_or(1);
         let max_ctx = mixed.chunks.iter().map(|c| c.end()).max().unwrap_or(1);
+        let refills_before = self.scheduler.cursor_stats().refills;
         let wave = self.scheduler.decide_mixed(mixed.chunks.len(), l_q, max_ctx)?;
         self.metrics.record_chunk_wave(wave.plan.occupancy);
+        self.record_plan_decision(
+            WaveKind::Chunk,
+            mixed.chunks.len(),
+            max_ctx,
+            wave.plan.metadata.num_splits,
+            wave.plan.occupancy,
+            refills_before,
+        );
         let mut batch = std::mem::take(&mut self.scratch.batch);
         let mut outcome = std::mem::take(&mut self.scratch.outcome);
         let result = (|| {
@@ -659,9 +785,19 @@ impl Engine {
             .map(|&s| self.batcher.running(s).map(|r| r.kv_len() + 1).unwrap_or(1))
             .max()
             .unwrap_or(1);
+        let refills_before = self.scheduler.cursor_stats().refills;
         let decision = self.scheduler.decide(slots.len(), max_kv)?;
         self.metrics.record_split(decision.plan.metadata.num_splits);
         self.metrics.record_decode_occupancy(decision.plan.occupancy);
+        self.metrics.record_decode_occupancy_keyed(decision.plan.occupancy, max_kv);
+        self.record_plan_decision(
+            WaveKind::Decode,
+            slots.len(),
+            max_kv,
+            decision.plan.metadata.num_splits,
+            decision.plan.occupancy,
+            refills_before,
+        );
         let mut batch = std::mem::take(&mut self.scratch.batch);
         let mut outcome = std::mem::take(&mut self.scratch.outcome);
         let result = (|| {
@@ -674,6 +810,42 @@ impl Engine {
         self.scratch.batch = batch;
         self.scratch.outcome = outcome;
         result
+    }
+
+    /// Emit one [`EventKind::PlanDecision`]: the planner's split choice
+    /// for a wave, with whether the scheduler's plan cursor served it from
+    /// the pinned decision (`Hit`) or recomputed (`Refill` — the refill
+    /// counter moved across the `decide` call).
+    // pallas-lint: no_alloc
+    fn record_plan_decision(
+        &mut self,
+        wave: WaveKind,
+        batch: usize,
+        max_kv: usize,
+        num_splits: usize,
+        occupancy: f64,
+        refills_before: u64,
+    ) {
+        if !self.recorder.enabled() {
+            return;
+        }
+        let cursor = if self.scheduler.cursor_stats().refills > refills_before {
+            CursorOutcome::Refill
+        } else {
+            CursorOutcome::Hit
+        };
+        self.recorder.record(
+            self.now_us(),
+            EventKind::PlanDecision {
+                wave,
+                policy: self.policy_id,
+                batch: batch as u32,
+                max_kv: max_kv as u32,
+                num_splits: num_splits as u32,
+                occupancy: occupancy as f32,
+                cursor,
+            },
+        );
     }
 
     fn fill_prefill_batch(&self, batch: &mut StepBatch, spans: &[ChunkSpan]) -> Result<()> {
@@ -772,12 +944,48 @@ impl Engine {
         self.metrics.record_step(outcome.elapsed_us, outcome.tokens.len());
         self.metrics.prefill_calls += outcome.prefill_calls;
         let now = self.now_us();
+        if self.recorder.enabled() {
+            // Per-wave cost attribution (sim decomposes; wall-clock
+            // backends report totals only, leaving these at 0).
+            if outcome.decode_wave_us > 0.0 {
+                self.recorder.record(
+                    now,
+                    EventKind::WaveCost {
+                        wave: WaveKind::Decode,
+                        rows: outcome.tokens.len() as u32,
+                        elapsed_us: outcome.decode_wave_us as f32,
+                    },
+                );
+            }
+            if outcome.chunk_wave_us > 0.0 {
+                self.recorder.record(
+                    now,
+                    EventKind::WaveCost {
+                        wave: WaveKind::Chunk,
+                        rows: outcome.prefilled.len() as u32,
+                        elapsed_us: outcome.chunk_wave_us as f32,
+                    },
+                );
+            }
+        }
 
         self.scratch.to_retire.clear();
         for &(slot, prefilled) in &outcome.prefilled {
             let r = self.batcher.running_mut(slot).context("prefilled slot")?;
+            let start = r.prefilled;
+            let id = r.req.id;
             r.prefilled = prefilled;
-            if r.done() {
+            let finished_prompt = r.done();
+            self.recorder.record(
+                now,
+                EventKind::ChunkIngested {
+                    request: id,
+                    slot: slot as u32,
+                    start: start as u32,
+                    len: prefilled.saturating_sub(start) as u32,
+                },
+            );
+            if finished_prompt {
                 // Degenerate max_new_tokens = 0: nothing to decode.
                 self.scratch.to_retire.push((slot, FinishReason::Length));
             }
@@ -808,7 +1016,11 @@ impl Engine {
             let fork = r.generated.len() == 1;
             let id = r.req.id;
             if fork {
-                self.blocks.cow_fork(id)?;
+                self.recorder
+                    .record(now, EventKind::Lifecycle { request: id, phase: Phase::FirstToken });
+                if self.blocks.cow_fork(id)? {
+                    self.recorder.record(now, EventKind::KvCowFork { request: id });
+                }
             }
             if let Some(reason) = reason {
                 self.scratch.to_retire.push((slot, reason));
@@ -840,8 +1052,17 @@ impl Engine {
         let priority = r.ticket.priority;
         if reason.is_natural() {
             self.metrics.record_finished(&timing, priority);
+            self.recorder.record(
+                now,
+                EventKind::Lifecycle {
+                    request: r.req.id,
+                    phase: Phase::Finished { n_generated: r.generated.len() as u32 },
+                },
+            );
         } else {
             self.metrics.record_cancelled(reason == FinishReason::DeadlineExceeded);
+            self.recorder
+                .record(now, EventKind::Lifecycle { request: r.req.id, phase: Phase::Cancelled });
         }
         let fin = FinishedRequest {
             id: r.req.id,

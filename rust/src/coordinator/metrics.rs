@@ -1,6 +1,18 @@
 //! Serving metrics: per-request timing and engine-level aggregates.
+//!
+//! Since the observability PR, `EngineMetrics` is implemented *over* the
+//! [`crate::obs::MetricsRegistry`]: every distribution (step latency,
+//! TTFT/TPOT, decode/chunk occupancy, occupancy keyed by policy × h_kv ×
+//! nblk bucket) is a pre-registered histogram updated by index handle —
+//! alloc-free in the measured window — and the whole snapshot renders to
+//! Prometheus text exposition via [`EngineMetrics::to_prometheus`]. The
+//! raw sample vectors are kept alongside the histograms so `report()`
+//! still quotes exact interpolated percentiles ([`Summary`]), not
+//! bucket-resolution estimates.
 
-use crate::util::stats::Summary;
+use crate::heuristics::tiles::KV_BLOCK;
+use crate::obs::{CounterId, HistId, MetricsRegistry};
+use crate::util::stats::{Histogram, Summary};
 
 use super::kv_cache::PrefixCacheStats;
 use super::lifecycle::{Priority, PRIORITY_CLASSES};
@@ -42,8 +54,49 @@ impl RequestTiming {
     }
 }
 
+/// The nblk (KV blocks of 128) bucket edges for keyed occupancy
+/// histograms: the guard region of the paper lives at `nblk <= 4`, so
+/// the ladder is dense there and geometric above.
+const NBLK_BUCKETS: &[usize] = &[1, 2, 4, 8, 16, 32];
+
+/// Stable label for a bucket index (`NBLK_BUCKETS.len()` = overflow).
+fn nblk_bucket_label(i: usize) -> String {
+    if i < NBLK_BUCKETS.len() {
+        format!("le{}", NBLK_BUCKETS[i])
+    } else {
+        "inf".to_string()
+    }
+}
+
+/// Bucket index for an nblk value.
+fn nblk_bucket(nblk: usize) -> usize {
+    NBLK_BUCKETS.iter().position(|&b| nblk <= b).unwrap_or(NBLK_BUCKETS.len())
+}
+
+/// Registry handles for every pre-registered instrument. Created once in
+/// `Default::default()`; hot-path updates index through these.
+#[derive(Debug, Clone)]
+struct Instruments {
+    steps: CounterId,
+    decode_steps: CounterId,
+    mixed_steps: CounterId,
+    tokens: CounterId,
+    finished: CounterId,
+    cancelled: CounterId,
+    rejected_backpressure: CounterId,
+    rejected_unschedulable: CounterId,
+    prefix_hits: CounterId,
+    prefix_lookups: CounterId,
+    cow_forks: CounterId,
+    step_us: HistId,
+    ttft_us: HistId,
+    tpot_us: HistId,
+    decode_occ: HistId,
+    chunk_occ: HistId,
+}
+
 /// Rolling engine metrics.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct EngineMetrics {
     pub steps: usize,
     pub decode_steps: usize,
@@ -83,22 +136,156 @@ pub struct EngineMetrics {
     tpots_class_us: [Vec<f64>; PRIORITY_CLASSES],
     /// Histogram of split counts chosen by the scheduler (index = splits).
     pub split_histogram: Vec<usize>,
-    /// Sum of planned first-wave SM occupancy over decode steps (the §2.1
-    /// quantity; divide by `decode_steps` for the mean). Per-replica
-    /// occupancy is what the cluster fleet aggregates to show TP sharding
-    /// entering the paper's starved regime.
-    decode_occupancy_sum: f64,
-    /// Sum/count of planned first-wave occupancy over chunk waves — the
-    /// `q_len > 1` side of the split heuristic's evidence. Chunk rows pack
-    /// `l_q * group` query rows per M-block, so their occupancy sits far
-    /// above the starved decode regime; reporting the two separately keeps
-    /// the decode mean honest under mixed steps.
-    chunk_occupancy_sum: f64,
-    chunk_waves: usize,
+    /// The instrument registry behind every distribution here. Rendered
+    /// by [`EngineMetrics::to_prometheus`].
+    registry: MetricsRegistry,
+    ids: Instruments,
+    /// Keyed decode-occupancy histograms (policy × h_kv × nblk bucket);
+    /// index = nblk bucket. Empty until
+    /// [`EngineMetrics::configure_occupancy_keys`] runs at engine build.
+    occ_keyed: Vec<HistId>,
     pub wall_us: u64,
 }
 
+impl Default for EngineMetrics {
+    fn default() -> EngineMetrics {
+        let mut registry = MetricsRegistry::new();
+        // Occupancy lives in [0, 1]: 20 linear buckets resolve 5% steps,
+        // enough to separate the paper's 18%-vs-54% regimes cleanly.
+        let occ_buckets = || Histogram::linear(0.0, 0.05, 20);
+        // Latencies span µs to seconds: geometric from 50µs, 16 doublings
+        // reaches ~1.6s.
+        let us_buckets = || Histogram::exponential(50.0, 2.0, 16);
+        let ids = Instruments {
+            steps: registry.counter("fa3_steps_total", "Engine steps executed.", &[]),
+            decode_steps: registry.counter(
+                "fa3_decode_steps_total",
+                "Steps that emitted at least one token.",
+                &[],
+            ),
+            mixed_steps: registry.counter(
+                "fa3_mixed_steps_total",
+                "Steps interleaving chunked prefill with decode.",
+                &[],
+            ),
+            tokens: registry.counter("fa3_tokens_generated_total", "Output tokens emitted.", &[]),
+            finished: registry.counter(
+                "fa3_requests_finished_total",
+                "Requests run to natural completion.",
+                &[],
+            ),
+            cancelled: registry.counter(
+                "fa3_requests_cancelled_total",
+                "Requests cut short (cancel, deadline, shutdown).",
+                &[],
+            ),
+            rejected_backpressure: registry.counter(
+                "fa3_rejected_total",
+                "Submissions refused by admission control.",
+                &[("reason", "backpressure")],
+            ),
+            rejected_unschedulable: registry.counter(
+                "fa3_rejected_total",
+                "Submissions refused by admission control.",
+                &[("reason", "unschedulable")],
+            ),
+            prefix_hits: registry.counter(
+                "fa3_prefix_cache_hits_total",
+                "Prefix-cache block hits.",
+                &[],
+            ),
+            prefix_lookups: registry.counter(
+                "fa3_prefix_cache_lookups_total",
+                "Prefix-cache block lookups.",
+                &[],
+            ),
+            cow_forks: registry.counter(
+                "fa3_kv_cow_forks_total",
+                "Copy-on-write forks of shared KV blocks.",
+                &[],
+            ),
+            step_us: registry.histogram(
+                "fa3_step_latency_us",
+                "Engine step latency, µs.",
+                &[],
+                us_buckets(),
+            ),
+            ttft_us: registry.histogram(
+                "fa3_ttft_us",
+                "Time to first token, µs.",
+                &[],
+                us_buckets(),
+            ),
+            tpot_us: registry.histogram(
+                "fa3_tpot_us",
+                "Time per output token, µs.",
+                &[],
+                us_buckets(),
+            ),
+            decode_occ: registry.histogram(
+                "fa3_decode_occupancy",
+                "Planned first-wave SM occupancy of decode waves.",
+                &[],
+                occ_buckets(),
+            ),
+            chunk_occ: registry.histogram(
+                "fa3_chunk_occupancy",
+                "Planned first-wave SM occupancy of chunk waves.",
+                &[],
+                occ_buckets(),
+            ),
+        };
+        EngineMetrics {
+            steps: 0,
+            decode_steps: 0,
+            mixed_steps: 0,
+            prefill_rows: 0,
+            decode_rows: 0,
+            prefill_calls: 0,
+            tokens_generated: 0,
+            requests_finished: 0,
+            requests_cancelled: 0,
+            deadline_misses: 0,
+            rejected_backpressure: 0,
+            rejected_unschedulable: 0,
+            prefix: PrefixCacheStats::default(),
+            step_latencies_us: Vec::new(),
+            tpots_us: Vec::new(),
+            ttfts_us: Vec::new(),
+            ttfts_class_us: Default::default(),
+            tpots_class_us: Default::default(),
+            split_histogram: Vec::new(),
+            registry,
+            ids,
+            occ_keyed: Vec::new(),
+            wall_us: 0,
+        }
+    }
+}
+
 impl EngineMetrics {
+    /// Register the keyed decode-occupancy histograms for this engine's
+    /// policy and (sharded) KV head count: one histogram per nblk bucket,
+    /// labeled `policy × h_kv × nblk`. Engine build time only — after
+    /// this, [`EngineMetrics::record_decode_occupancy_keyed`] is
+    /// alloc-free. Idempotent per metrics instance.
+    pub fn configure_occupancy_keys(&mut self, policy: &str, h_kv: usize) {
+        if !self.occ_keyed.is_empty() {
+            return;
+        }
+        let h_kv_label = h_kv.to_string();
+        for i in 0..=NBLK_BUCKETS.len() {
+            let label = nblk_bucket_label(i);
+            let id = self.registry.histogram(
+                "fa3_decode_occupancy_keyed",
+                "Planned decode-wave SM occupancy by policy, KV heads, and nblk bucket.",
+                &[("policy", policy), ("h_kv", &h_kv_label), ("nblk", &label)],
+                Histogram::linear(0.0, 0.05, 20),
+            );
+            self.occ_keyed.push(id);
+        }
+    }
+
     /// Pre-reserve the aggregate sample buffers so a measured window of
     /// `steps` steps / `requests` completions records without growing any
     /// Vec. The allocation-guard test and the decode hot-path bench call
@@ -120,6 +307,7 @@ impl EngineMetrics {
     }
 
     /// Record one engine step (`decoded` = tokens emitted).
+    // pallas-lint: no_alloc
     pub fn record_step(&mut self, latency_us: f64, decoded: usize) {
         self.steps += 1;
         if decoded > 0 {
@@ -127,6 +315,7 @@ impl EngineMetrics {
             self.tokens_generated += decoded;
         }
         self.step_latencies_us.push(latency_us);
+        self.registry.observe(self.ids.step_us, latency_us);
     }
 
     /// Record the scheduler's split choice for one decode step.
@@ -138,13 +327,31 @@ impl EngineMetrics {
     }
 
     /// Record the planned first-wave occupancy of one decode launch.
+    // pallas-lint: no_alloc
     pub fn record_decode_occupancy(&mut self, occupancy: f64) {
-        self.decode_occupancy_sum += occupancy;
+        self.registry.observe(self.ids.decode_occ, occupancy);
+    }
+
+    /// Record a decode-wave occupancy under its shape key (`max_kv` is
+    /// the longest KV length in the wave; the nblk bucket derives from
+    /// it). Also feeds the unkeyed aggregate. No-op keying before
+    /// [`EngineMetrics::configure_occupancy_keys`].
+    // pallas-lint: no_alloc
+    pub fn record_decode_occupancy_keyed(&mut self, occupancy: f64, max_kv: usize) {
+        self.record_decode_occupancy(occupancy);
+        if self.occ_keyed.is_empty() {
+            return;
+        }
+        let nblk = max_kv.div_ceil(KV_BLOCK);
+        let id = self.occ_keyed[nblk_bucket(nblk)];
+        self.registry.observe(id, occupancy);
     }
 
     /// Mean planned SM occupancy across decode steps, if any ran.
+    /// (Exactly one occupancy sample accompanies each decode step, so
+    /// the histogram's mean *is* the per-decode-step mean.)
     pub fn mean_occupancy(&self) -> Option<f64> {
-        (self.decode_steps > 0).then(|| self.decode_occupancy_sum / self.decode_steps as f64)
+        self.registry.hist(self.ids.decode_occ).mean()
     }
 
     /// Record the row mix of one executed step (chunk/prefill rows vs
@@ -156,26 +363,29 @@ impl EngineMetrics {
 
     /// Record the planned first-wave occupancy of one chunk wave
     /// (`q_len > 1` rows inside a mixed step).
+    // pallas-lint: no_alloc
     pub fn record_chunk_wave(&mut self, occupancy: f64) {
-        self.chunk_occupancy_sum += occupancy;
-        self.chunk_waves += 1;
+        self.registry.observe(self.ids.chunk_occ, occupancy);
     }
 
     /// Mean planned SM occupancy across chunk waves, if any ran.
     pub fn mean_chunk_occupancy(&self) -> Option<f64> {
-        (self.chunk_waves > 0).then(|| self.chunk_occupancy_sum / self.chunk_waves as f64)
+        self.registry.hist(self.ids.chunk_occ).mean()
     }
 
     /// Record a naturally-finished request's timing under its admission
     /// class.
+    // pallas-lint: no_alloc
     pub fn record_finished(&mut self, timing: &RequestTiming, priority: Priority) {
         self.requests_finished += 1;
         if timing.n_generated >= 2 {
             self.tpots_us.push(timing.tpot_us());
             self.tpots_class_us[priority.index()].push(timing.tpot_us());
+            self.registry.observe(self.ids.tpot_us, timing.tpot_us());
         }
         self.ttfts_us.push(timing.ttft_us() as f64);
         self.ttfts_class_us[priority.index()].push(timing.ttft_us() as f64);
+        self.registry.observe(self.ids.ttft_us, timing.ttft_us() as f64);
     }
 
     /// Record a request cut short (cancel, shutdown, or deadline).
@@ -213,12 +423,51 @@ impl EngineMetrics {
         (!samples.is_empty()).then(|| Summary::of(samples))
     }
 
+    /// Raw TTFT samples (µs) over finished requests, all classes. The
+    /// fleet report pools these across replicas so its percentiles are
+    /// percentiles of the merged sample, not means of per-replica
+    /// percentiles.
+    pub fn ttft_samples(&self) -> &[f64] {
+        &self.ttfts_us
+    }
+
+    /// Raw TPOT samples (µs) over finished requests, all classes.
+    pub fn tpot_samples(&self) -> &[f64] {
+        &self.tpots_us
+    }
+
+    /// Decode-occupancy sample count (the weight for pooling per-replica
+    /// occupancy means at the fleet level).
+    pub fn decode_occupancy_samples(&self) -> u64 {
+        self.registry.hist(self.ids.decode_occ).count()
+    }
+
     /// Generated tokens per second of wall time.
     pub fn throughput_tok_s(&self) -> f64 {
         if self.wall_us == 0 {
             return 0.0;
         }
         self.tokens_generated as f64 / (self.wall_us as f64 / 1e6)
+    }
+
+    /// Prometheus text exposition of the full registry snapshot. The
+    /// public counter fields stay the source of truth; this syncs them
+    /// into their registry mirrors (mirror-by-copy) and renders.
+    pub fn to_prometheus(&mut self) -> String {
+        self.registry.set_counter(self.ids.steps, self.steps as u64);
+        self.registry.set_counter(self.ids.decode_steps, self.decode_steps as u64);
+        self.registry.set_counter(self.ids.mixed_steps, self.mixed_steps as u64);
+        self.registry.set_counter(self.ids.tokens, self.tokens_generated as u64);
+        self.registry.set_counter(self.ids.finished, self.requests_finished as u64);
+        self.registry.set_counter(self.ids.cancelled, self.requests_cancelled as u64);
+        self.registry
+            .set_counter(self.ids.rejected_backpressure, self.rejected_backpressure as u64);
+        self.registry
+            .set_counter(self.ids.rejected_unschedulable, self.rejected_unschedulable as u64);
+        self.registry.set_counter(self.ids.prefix_hits, self.prefix.hits as u64);
+        self.registry.set_counter(self.ids.prefix_lookups, self.prefix.lookups as u64);
+        self.registry.set_counter(self.ids.cow_forks, self.prefix.cow_forks as u64);
+        self.registry.render()
     }
 
     /// Multi-line human-readable report (the CLI's output).
@@ -416,5 +665,81 @@ mod tests {
         assert!((m.throughput_tok_s() - 2.0).abs() < 1e-9);
         let rep = m.report();
         assert!(rep.contains("s=3:2"));
+    }
+
+    #[test]
+    fn nblk_bucketing() {
+        assert_eq!(nblk_bucket(1), 0);
+        assert_eq!(nblk_bucket(2), 1);
+        assert_eq!(nblk_bucket(3), 2);
+        assert_eq!(nblk_bucket(4), 2);
+        assert_eq!(nblk_bucket(5), 3);
+        assert_eq!(nblk_bucket(33), NBLK_BUCKETS.len()); // overflow
+        assert_eq!(nblk_bucket_label(0), "le1");
+        assert_eq!(nblk_bucket_label(NBLK_BUCKETS.len()), "inf");
+    }
+
+    #[test]
+    fn keyed_occupancy_lands_in_its_bucket() {
+        let mut m = EngineMetrics::default();
+        m.configure_occupancy_keys("sequence-aware", 1);
+        // L_K = 512 → nblk = 4 → bucket le4; L_K = 4096 → nblk 32 → le32.
+        m.record_decode_occupancy_keyed(0.18, 512);
+        m.record_decode_occupancy_keyed(0.54, 4096);
+        // Both also feed the unkeyed aggregate.
+        assert!((m.mean_occupancy().unwrap() - 0.36).abs() < 1e-9);
+        let text = m.to_prometheus();
+        assert!(
+            text.contains(
+                "fa3_decode_occupancy_keyed_count{h_kv=\"1\",nblk=\"le4\",policy=\"sequence-aware\"} 1"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "fa3_decode_occupancy_keyed_count{h_kv=\"1\",nblk=\"le32\",policy=\"sequence-aware\"} 1"
+            ),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn keying_before_configuration_is_a_safe_noop() {
+        let mut m = EngineMetrics::default();
+        m.record_decode_occupancy_keyed(0.5, 512);
+        assert_eq!(m.decode_occupancy_samples(), 1);
+        assert!(!m.to_prometheus().contains("fa3_decode_occupancy_keyed"));
+    }
+
+    #[test]
+    fn prometheus_mirrors_public_counters() {
+        let mut m = EngineMetrics::default();
+        m.record_step(10.0, 2);
+        m.rejected_backpressure = 3;
+        m.prefix.lookups = 10;
+        m.prefix.hits = 7;
+        let text = m.to_prometheus();
+        assert!(text.contains("fa3_steps_total 1\n"), "{text}");
+        assert!(text.contains("fa3_tokens_generated_total 2\n"), "{text}");
+        assert!(text.contains("fa3_rejected_total{reason=\"backpressure\"} 3\n"), "{text}");
+        assert!(text.contains("fa3_prefix_cache_hits_total 7\n"), "{text}");
+        assert!(text.contains("# TYPE fa3_step_latency_us histogram"), "{text}");
+        assert!(text.contains("fa3_step_latency_us_count 1\n"), "{text}");
+    }
+
+    #[test]
+    fn raw_samples_expose_for_fleet_pooling() {
+        let mut m = EngineMetrics::default();
+        let t = RequestTiming {
+            first_token_us: 100,
+            finished_us: 1000,
+            n_generated: 10,
+            ..Default::default()
+        };
+        m.record_finished(&t, Priority::Standard);
+        assert_eq!(m.ttft_samples(), &[100.0]);
+        assert_eq!(m.tpot_samples().len(), 1);
+        m.record_decode_occupancy(0.5);
+        assert_eq!(m.decode_occupancy_samples(), 1);
     }
 }

@@ -132,6 +132,17 @@
 //! decode for the first time (the split heuristic's mixed-wave regime).
 //! See DESIGN.md §Continuous batching.
 //!
+//! ## Observability
+//!
+//! [`obs`] is the cross-cutting tracing/metrics layer: a zero-allocation
+//! [`obs::FlightRecorder`] (fixed-capacity ring of `Copy` events on the
+//! engine's virtual clock), per-request span timelines reconstructed
+//! from the ring, a Chrome trace-event exporter
+//! (`chrome://tracing`/Perfetto; `--trace-out` on `serve`/`cluster`),
+//! and a histogram-capable [`obs::MetricsRegistry`] with Prometheus text
+//! exposition (`--metrics-out`). `EngineMetrics` records occupancy and
+//! latency distributions through the registry. See docs/observability.md.
+//!
 //! ## Static analysis
 //!
 //! The invariants above are machine-checked by [`analysis`] (pallas-lint,
@@ -153,6 +164,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod evolve;
 pub mod heuristics;
+pub mod obs;
 pub mod planner;
 pub mod runtime;
 pub mod schedule;

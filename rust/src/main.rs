@@ -21,12 +21,15 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use anyhow::Context;
+
 use fa3_split::backend::{AttnGeometry, ExecutionBackend, PjrtBackend, SimBackend};
 use fa3_split::bench_harness::{regression, table1, ucurve};
 use fa3_split::cluster::{self, ClusterTopology, Fleet, FleetConfig, TpConfig};
 use fa3_split::coordinator::{BatcherConfig, Engine, EngineConfig, StreamEvent, SubmitOptions};
 use fa3_split::evolve::{Search, SearchConfig};
 use fa3_split::heuristics::tiles::DecodeShape;
+use fa3_split::obs;
 use fa3_split::planner::{DeviceProfile, Planner, PolicyRegistry};
 use fa3_split::runtime::Registry;
 use fa3_split::schedule::{ScheduleConfig, TokenBudget};
@@ -179,12 +182,20 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             .opt("max-batch-tokens", "0", "per-step token budget across chunk+decode rows (0 = unbounded; requires --chunk-tokens)")
             .opt("gap-us", "0", "mean Poisson inter-arrival gap, µs (0 = closed loop; requires --backend sim)")
             .flag("mixed", "mixed open-loop trace: 3/4 short interactive + 1/4 long-prompt batch requests (requires --backend sim)")
+            .opt("trace-out", "", "write a Chrome trace-event JSON here (open in chrome://tracing or Perfetto)")
+            .opt("trace-capacity", "65536", "flight-recorder ring capacity, events (ring keeps the most recent window)")
+            .opt("metrics-out", "", "write Prometheus text-format metrics here")
             .opt("seed", "7", "workload seed"),
         argv,
     );
     let planner = planner_from_args(&registry, &args);
     let mut cfg = EngineConfig::default();
     cfg.schedule = schedule_from_args(&args, 1024, cfg.batcher.max_batch);
+    // Tracing is opt-in: the recorder stays a capacity-0 no-op unless a
+    // trace is actually being written.
+    if !args.str("trace-out").is_empty() {
+        cfg.trace_capacity = args.usize("trace-capacity");
+    }
 
     // Resolve the backend behind the trait: nothing below this point
     // branches on sim vs PJRT.
@@ -276,6 +287,24 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         })
         .sum();
     println!("streamed {streamed} tokens across {} request handles", handles.len());
+    let trace_out = args.str("trace-out");
+    if !trace_out.is_empty() {
+        let label = format!("engine ({})", engine.backend_caps().name);
+        let trace = obs::engine_trace(engine.recorder(), &label);
+        std::fs::write(&trace_out, trace.to_string())
+            .with_context(|| format!("writing {trace_out}"))?;
+        println!(
+            "wrote Chrome trace to {trace_out} ({} events, {} dropped)",
+            engine.recorder().len(),
+            engine.recorder().dropped()
+        );
+    }
+    let metrics_out = args.str("metrics-out");
+    if !metrics_out.is_empty() {
+        std::fs::write(&metrics_out, engine.metrics.to_prometheus())
+            .with_context(|| format!("writing {metrics_out}"))?;
+        println!("wrote Prometheus metrics to {metrics_out}");
+    }
     Ok(())
 }
 
@@ -302,6 +331,9 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
         .opt("max-batch-tokens", "0", "per-step token budget across chunk+decode rows (0 = unbounded; requires --chunk-tokens)")
         .opt("prefix", "0", "shared system-prompt length, tokens, additive to the sampled prompt (0 = off)")
         .opt("prefix-fanout", "4", "requests per distinct system prompt (1 = disjoint)")
+        .opt("trace-out", "", "write a merged per-replica Chrome trace-event JSON here")
+        .opt("trace-capacity", "65536", "per-replica flight-recorder ring capacity, events")
+        .opt("metrics-out", "", "write per-replica Prometheus text-format metrics here")
         .opt("seed", "7", "workload seed"),
         argv,
     );
@@ -329,9 +361,11 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
         .build()
         .map_err(|e| anyhow::anyhow!("invalid topology: {e}"))?;
 
+    let trace_out = args.str("trace-out");
     let engine_cfg = EngineConfig {
         batcher: BatcherConfig::for_max_batch(args.usize("max-batch")),
         schedule: schedule_from_args(&args, 1024, args.usize("max-batch")),
+        trace_capacity: if trace_out.is_empty() { 0 } else { args.usize("trace-capacity") },
         ..Default::default()
     };
     let mut fleet = Fleet::new(
@@ -367,6 +401,18 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
                 );
             }
         }
+    }
+    if !trace_out.is_empty() {
+        let events: usize = fleet.replicas().iter().map(|r| r.recorder().len()).sum();
+        std::fs::write(&trace_out, fleet.chrome_trace().to_string())
+            .with_context(|| format!("writing {trace_out}"))?;
+        println!("wrote merged Chrome trace to {trace_out} ({events} events across replicas)");
+    }
+    let metrics_out = args.str("metrics-out");
+    if !metrics_out.is_empty() {
+        std::fs::write(&metrics_out, fleet.prometheus())
+            .with_context(|| format!("writing {metrics_out}"))?;
+        println!("wrote Prometheus metrics to {metrics_out}");
     }
     Ok(())
 }

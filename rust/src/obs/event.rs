@@ -1,0 +1,170 @@
+//! Compact `Copy` trace events: the flight recorder's wire format.
+//!
+//! Every event is a fixed-size value — no strings, no heap — so recording
+//! one is a couple of stores into the pre-allocated ring. Anything
+//! variable-length (policy names, device labels) is interned once at
+//! engine build time and referenced here by small integer id
+//! ([`PolicyId`]); the exporters resolve ids back to names.
+//!
+//! Field widths are deliberately narrow (`u32`/`f32`/`u16`) to keep
+//! `TraceEvent` small: a 64k-event ring is a few MiB, cheap enough to
+//! leave enabled on every replica of a fleet run.
+
+/// Engine-assigned request identifier (mirrors
+/// `coordinator::RequestId = u64`; `obs` depends only on `util`, so the
+/// alias is restated here rather than imported).
+pub type ReqId = u64;
+
+/// Interned policy-name handle, assigned by
+/// [`super::FlightRecorder::intern_policy`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicyId(pub u16);
+
+/// What kind of step the composer produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepClass {
+    /// Pure decode: every row emits one token.
+    Decode,
+    /// Monolithic prefill call(s), no decode rows.
+    Prefill,
+    /// Chunked-prefill rows interleaved with decode rows.
+    Mixed,
+}
+
+impl StepClass {
+    /// Stable lowercase label used by the exporters.
+    pub fn label(self) -> &'static str {
+        match self {
+            StepClass::Decode => "decode",
+            StepClass::Prefill => "prefill",
+            StepClass::Mixed => "mixed",
+        }
+    }
+}
+
+/// Which wave of a step a plan/occupancy sample describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaveKind {
+    /// The `q_len = 1` decode wave (the paper's starved regime).
+    Decode,
+    /// A `q_len > 1` chunked-prefill wave inside a mixed step.
+    Chunk,
+}
+
+impl WaveKind {
+    /// Stable lowercase label used by the exporters.
+    pub fn label(self) -> &'static str {
+        match self {
+            WaveKind::Decode => "decode",
+            WaveKind::Chunk => "chunk",
+        }
+    }
+}
+
+/// Whether a plan decision was served from the plan cursor's horizon or
+/// forced a planner refill (cache-miss analog; see `planner/cursor.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CursorOutcome {
+    /// Decision came from the cursor's prefetched horizon.
+    Hit,
+    /// Decision required re-planning (new shape or horizon exhausted).
+    Refill,
+}
+
+/// A request's lifecycle transition (the span reconstructor's input).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Accepted by admission control into a bounded class queue. The
+    /// event is stamped with the request's *arrival* time so span TTFT
+    /// matches `RequestTiming::ttft_us` exactly.
+    Queued,
+    /// Entered the running batch on `slot`.
+    Admitted { slot: u32 },
+    /// First output token emitted (prefill complete).
+    FirstToken,
+    /// Ran to natural completion with `n_generated` output tokens.
+    Finished { n_generated: u32 },
+    /// Cut short by cancellation, deadline, or shutdown.
+    Cancelled,
+}
+
+/// One recorded occurrence. `t_us` is the engine's virtual clock (sim
+/// backends) or wall µs since engine start (real backends) — the same
+/// clock `RequestTiming` uses, so spans and metrics agree by construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub t_us: u64,
+    pub kind: EventKind,
+}
+
+/// The event vocabulary. One variant per instrumented site; see
+/// `docs/observability.md` for the schema table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// The composer assembled one step: its row mix plus the KV-pressure
+    /// and queue-depth gauges sampled at composition time (these feed the
+    /// Chrome counter tracks).
+    StepComposed {
+        class: StepClass,
+        chunk_rows: u32,
+        decode_rows: u32,
+        step_tokens: u32,
+        kv_used_blocks: u32,
+        queue_depth: u32,
+    },
+    /// The planner's split decision for one wave: policy, chosen split
+    /// count, planned first-wave SM occupancy, and whether the plan
+    /// cursor served it without re-planning.
+    PlanDecision {
+        wave: WaveKind,
+        policy: PolicyId,
+        batch: u32,
+        max_kv: u32,
+        num_splits: u32,
+        occupancy: f32,
+        cursor: CursorOutcome,
+    },
+    /// Modeled kernel wave cost for one executed step, split by wave kind
+    /// (sim backend only; zero when the backend doesn't model it).
+    WaveCost { wave: WaveKind, rows: u32, elapsed_us: f32 },
+    /// KV blocks granted to a request at admission; `cached_tokens` is
+    /// how much of the prompt the prefix cache already held.
+    KvAdmit { request: ReqId, slot: u32, cached_tokens: u32 },
+    /// A shared block was copy-on-write forked for this request's first
+    /// divergent token.
+    KvCowFork { request: ReqId },
+    /// Evictions of cached prefix blocks since the previous step
+    /// (recorded as a delta, not a running total).
+    KvEvict { blocks: u32 },
+    /// Prefix-cache probe at admission: how many of `prompt_tokens`
+    /// prompt tokens were served from cache.
+    PrefixProbe { request: ReqId, hit_tokens: u32, prompt_tokens: u32 },
+    /// A submission refused by admission control; `backpressure` is true
+    /// for a full class queue, false for never-schedulable.
+    AdmissionReject { class: u8, backpressure: bool },
+    /// Request lifecycle transition.
+    Lifecycle { request: ReqId, phase: Phase },
+    /// One prefill chunk of `len` prompt tokens starting at offset
+    /// `start` was ingested for the request on `slot`.
+    ChunkIngested { request: ReqId, slot: u32, start: u32, len: u32 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_copy_and_small() {
+        fn assert_copy<T: Copy>() {}
+        assert_copy::<TraceEvent>();
+        // The ring's footprint budget: a 64k ring stays under 4 MiB.
+        assert!(std::mem::size_of::<TraceEvent>() <= 64, "{}", std::mem::size_of::<TraceEvent>());
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(StepClass::Mixed.label(), "mixed");
+        assert_eq!(WaveKind::Decode.label(), "decode");
+        assert_eq!(WaveKind::Chunk.label(), "chunk");
+    }
+}

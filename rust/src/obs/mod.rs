@@ -1,0 +1,44 @@
+//! Observability: flight-recorder tracing, span timelines, and metrics
+//! exposition.
+//!
+//! The paper's claim is an *occupancy* story — the FA-3 heuristic
+//! strands SMs in low-head-count decode — and aggregate means can't tell
+//! you **which** steps, shapes, or split decisions produced a win. This
+//! module captures that per-decision granularity without giving up the
+//! engine's zero-allocation steady state:
+//!
+//! * [`FlightRecorder`] — a fixed-capacity, overwrite-oldest ring
+//!   ([`EventRing`]) of compact `Copy` [`TraceEvent`]s stamped with the
+//!   engine's virtual clock. Recording is a branch plus a store; when the
+//!   ring is full the oldest event is replaced and a drop counter keeps
+//!   the loss honest. It never blocks the step loop.
+//! * [`span`] — per-request timelines (queued → admitted → chunks →
+//!   first token → finished) folded back out of the ring; span TTFT/TPOT
+//!   reproduce `coordinator::RequestTiming` exactly.
+//! * [`chrome`] — a Chrome trace-event JSON exporter (one track per
+//!   batch slot, one process per fleet replica, counter tracks for SM
+//!   occupancy / KV pressure / queue depth) that opens directly in
+//!   `chrome://tracing` or Perfetto.
+//! * [`MetricsRegistry`] — pre-registered counters/gauges/histograms
+//!   (storage is `util::stats::Histogram`) with hot-path updates by index
+//!   handle and a Prometheus text exposition; `EngineMetrics` records its
+//!   occupancy and latency distributions through it.
+//!
+//! Layering: `obs` depends only on `util` (everything above may depend
+//! on `obs`) — enforced by pallas-lint's layering pass.
+//!
+//! See `docs/observability.md` for the event schema and exporter formats.
+
+pub mod chrome;
+pub mod event;
+pub mod recorder;
+pub mod registry;
+pub mod ring;
+pub mod span;
+
+pub use chrome::{engine_trace, fleet_trace, fleet_trace_string, ReplicaTrace};
+pub use event::{CursorOutcome, EventKind, Phase, PolicyId, ReqId, StepClass, TraceEvent, WaveKind};
+pub use recorder::FlightRecorder;
+pub use registry::{CounterId, GaugeId, HistId, MetricsRegistry};
+pub use ring::EventRing;
+pub use span::{reconstruct, RequestSpan};

@@ -1,0 +1,163 @@
+//! The flight recorder: the engine-facing capture handle.
+//!
+//! A [`FlightRecorder`] owns one [`EventRing`] plus the setup-time string
+//! interning table (policy names → [`PolicyId`]). The split of
+//! responsibilities is strict:
+//!
+//! * **Setup time** (engine build): `with_capacity`, `intern_policy` —
+//!   allocation is fine here.
+//! * **Steady state** (inside the step loop's `no_alloc` region):
+//!   [`FlightRecorder::record`] — a disabled-check plus a ring store,
+//!   nothing else. A disabled recorder costs one branch.
+//! * **Export time** (after the run): `events`, the span reconstructor,
+//!   and the Chrome exporter read the ring; they may allocate freely.
+
+use super::event::{EventKind, PolicyId, TraceEvent};
+use super::ring::EventRing;
+
+/// Per-engine (per-replica, in a fleet) trace capture.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    ring: EventRing,
+    /// Interned variable-length strings; index = `PolicyId.0`.
+    policies: Vec<String>,
+    /// Replica index for fleet exports (0 for a standalone engine).
+    replica: u32,
+}
+
+impl FlightRecorder {
+    /// A recorder that stores nothing (capacity-0 ring). This is the
+    /// default for every engine: tracing is strictly opt-in.
+    pub fn disabled() -> FlightRecorder {
+        FlightRecorder::with_capacity(0)
+    }
+
+    /// A recorder with a `capacity`-event ring (0 = disabled).
+    pub fn with_capacity(capacity: usize) -> FlightRecorder {
+        FlightRecorder { ring: EventRing::with_capacity(capacity), policies: Vec::new(), replica: 0 }
+    }
+
+    /// True when events are actually stored.
+    pub fn enabled(&self) -> bool {
+        self.ring.capacity() > 0
+    }
+
+    /// Tag this recorder with its fleet replica index (used as the Chrome
+    /// trace `pid`).
+    pub fn set_replica(&mut self, replica: u32) {
+        self.replica = replica;
+    }
+
+    /// The fleet replica index this recorder is tagged with.
+    pub fn replica(&self) -> u32 {
+        self.replica
+    }
+
+    /// Intern a policy (or other label) string, returning its id. Called
+    /// at engine build time — repeated names return the existing id.
+    pub fn intern_policy(&mut self, name: &str) -> PolicyId {
+        if let Some(i) = self.policies.iter().position(|p| p == name) {
+            return PolicyId(i as u16);
+        }
+        assert!(self.policies.len() < u16::MAX as usize, "policy intern table full");
+        self.policies.push(name.to_string());
+        PolicyId((self.policies.len() - 1) as u16)
+    }
+
+    /// Resolve an interned id back to its string (exporters only).
+    pub fn policy_name(&self, id: PolicyId) -> &str {
+        self.policies.get(id.0 as usize).map(String::as_str).unwrap_or("?")
+    }
+
+    /// Record one event at virtual-clock time `t_us`.
+    ///
+    /// This is the only hot-path entry point: a branch when disabled, a
+    /// ring store when enabled. It never blocks and never allocates.
+    // pallas-lint: no_alloc
+    #[inline]
+    pub fn record(&mut self, t_us: u64, kind: EventKind) {
+        if self.ring.capacity() == 0 {
+            return;
+        }
+        self.ring.push(TraceEvent { t_us, kind });
+    }
+
+    /// Stored events, oldest → newest.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.ring.iter()
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// True when no events are held.
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Ring capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    /// Events lost to ring overwrite.
+    pub fn dropped(&self) -> u64 {
+        self.ring.dropped()
+    }
+}
+
+impl Default for FlightRecorder {
+    fn default() -> FlightRecorder {
+        FlightRecorder::disabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::{EventKind, Phase};
+
+    #[test]
+    fn disabled_recorder_stores_nothing() {
+        let mut r = FlightRecorder::disabled();
+        assert!(!r.enabled());
+        r.record(10, EventKind::KvEvict { blocks: 1 });
+        assert!(r.is_empty());
+        // Disabled recording isn't data loss — nothing was asked for.
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn records_in_order() {
+        let mut r = FlightRecorder::with_capacity(16);
+        assert!(r.enabled());
+        r.record(5, EventKind::Lifecycle { request: 1, phase: Phase::Queued });
+        r.record(9, EventKind::Lifecycle { request: 1, phase: Phase::FirstToken });
+        let ts: Vec<u64> = r.events().map(|e| e.t_us).collect();
+        assert_eq!(ts, vec![5, 9]);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn interning_is_idempotent() {
+        let mut r = FlightRecorder::with_capacity(1);
+        let a = r.intern_policy("sequence-aware");
+        let b = r.intern_policy("upstream");
+        let a2 = r.intern_policy("sequence-aware");
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(r.policy_name(a), "sequence-aware");
+        assert_eq!(r.policy_name(b), "upstream");
+        assert_eq!(r.policy_name(PolicyId(99)), "?");
+    }
+
+    #[test]
+    fn replica_tag_round_trips() {
+        let mut r = FlightRecorder::with_capacity(1);
+        assert_eq!(r.replica(), 0);
+        r.set_replica(3);
+        assert_eq!(r.replica(), 3);
+    }
+}

@@ -1,0 +1,291 @@
+//! Histogram-capable metrics registry with Prometheus text exposition.
+//!
+//! Instruments are registered once at setup time (names and label sets
+//! are rendered to their final exposition strings *then*), handed back as
+//! index handles ([`CounterId`] / [`GaugeId`] / [`HistId`]), and updated
+//! through the handles on the hot path — `inc` / `set` / `observe` are
+//! array indexing plus arithmetic, no hashing, no strings, no heap. The
+//! step loop records from inside `no_alloc` regions; exposition
+//! ([`MetricsRegistry::render`]) is export-time code and allocates
+//! freely.
+//!
+//! The exposition format follows the Prometheus text format (0.0.4):
+//! `# HELP` / `# TYPE` headers, cumulative `_bucket{le="…"}` series with
+//! a terminal `+Inf` bucket, `_sum` and `_count`.
+
+use crate::util::stats::Histogram;
+
+/// Handle to a registered monotonic counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+/// Handle to a registered gauge (a settable level).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GaugeId(usize);
+
+/// Handle to a registered histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistId(usize);
+
+#[derive(Debug, Clone)]
+struct Series {
+    /// Metric family name (`fa3_steps_total`).
+    name: String,
+    /// Help line for the family header.
+    help: String,
+    /// Pre-rendered `{label="v",…}` suffix ("" when unlabeled).
+    labels: String,
+}
+
+impl Series {
+    fn new(name: &str, help: &str, labels: &[(&str, &str)]) -> Series {
+        let rendered = if labels.is_empty() {
+            String::new()
+        } else {
+            // Sort by key so the exposition is deterministic regardless
+            // of registration order.
+            let mut body: Vec<String> =
+                labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+            body.sort();
+            format!("{{{}}}", body.join(","))
+        };
+        Series { name: name.to_string(), help: help.to_string(), labels: rendered }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct CounterSlot {
+    series: Series,
+    value: u64,
+}
+
+#[derive(Debug, Clone)]
+struct GaugeSlot {
+    series: Series,
+    value: f64,
+}
+
+#[derive(Debug, Clone)]
+struct HistSlot {
+    series: Series,
+    hist: Histogram,
+}
+
+/// The registry: owns every instrument, renders the exposition snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: Vec<CounterSlot>,
+    gauges: Vec<GaugeSlot>,
+    hists: Vec<HistSlot>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Register a counter. Setup-time only; label values are rendered
+    /// here so hot-path updates never touch strings.
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)]) -> CounterId {
+        self.counters.push(CounterSlot { series: Series::new(name, help, labels), value: 0 });
+        CounterId(self.counters.len() - 1)
+    }
+
+    /// Register a gauge.
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)]) -> GaugeId {
+        self.gauges.push(GaugeSlot { series: Series::new(name, help, labels), value: 0.0 });
+        GaugeId(self.gauges.len() - 1)
+    }
+
+    /// Register a histogram over a pre-built bucket layout.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        hist: Histogram,
+    ) -> HistId {
+        self.hists.push(HistSlot { series: Series::new(name, help, labels), hist });
+        HistId(self.hists.len() - 1)
+    }
+
+    /// Add to a counter. Hot-path safe.
+    // pallas-lint: no_alloc
+    #[inline]
+    pub fn inc(&mut self, id: CounterId, by: u64) {
+        self.counters[id.0].value += by;
+    }
+
+    /// Overwrite a counter with an externally-tracked total (the
+    /// mirror-by-copy discipline: `EngineMetrics` keeps its public
+    /// counter fields as the source of truth and syncs them into the
+    /// registry at exposition time).
+    pub fn set_counter(&mut self, id: CounterId, value: u64) {
+        self.counters[id.0].value = value;
+    }
+
+    /// Set a gauge level. Hot-path safe.
+    // pallas-lint: no_alloc
+    #[inline]
+    pub fn set(&mut self, id: GaugeId, value: f64) {
+        self.gauges[id.0].value = value;
+    }
+
+    /// Record one histogram observation. Hot-path safe.
+    // pallas-lint: no_alloc
+    #[inline]
+    pub fn observe(&mut self, id: HistId, value: f64) {
+        self.hists[id.0].hist.observe(value);
+    }
+
+    /// Read a counter's current value.
+    pub fn counter_value(&self, id: CounterId) -> u64 {
+        self.counters[id.0].value
+    }
+
+    /// Read a histogram (tests and report paths).
+    pub fn hist(&self, id: HistId) -> &Histogram {
+        &self.hists[id.0].hist
+    }
+
+    /// Render the Prometheus text exposition of every instrument.
+    ///
+    /// Families sharing a name emit their `# HELP`/`# TYPE` header once
+    /// (labeled series of one family are registered consecutively).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut last_header = String::new();
+        for c in &self.counters {
+            push_header(&mut out, &mut last_header, &c.series, "counter");
+            out.push_str(&format!("{}{} {}\n", c.series.name, c.series.labels, c.value));
+        }
+        for g in &self.gauges {
+            push_header(&mut out, &mut last_header, &g.series, "gauge");
+            out.push_str(&format!("{}{} {}\n", g.series.name, g.series.labels, fmt_f64(g.value)));
+        }
+        for h in &self.hists {
+            push_header(&mut out, &mut last_header, &h.series, "histogram");
+            let base = h.series.labels.trim_start_matches('{').trim_end_matches('}');
+            let with_le = |le: &str| {
+                if base.is_empty() {
+                    format!("{{le=\"{le}\"}}")
+                } else {
+                    format!("{{{base},le=\"{le}\"}}")
+                }
+            };
+            let mut cum = 0u64;
+            for (i, count) in h.hist.counts().iter().enumerate() {
+                cum += count;
+                let le = if i == h.hist.bounds().len() {
+                    "+Inf".to_string()
+                } else {
+                    fmt_f64(h.hist.bounds()[i])
+                };
+                out.push_str(&format!("{}_bucket{} {}\n", h.series.name, with_le(&le), cum));
+            }
+            out.push_str(&format!(
+                "{}_sum{} {}\n",
+                h.series.name,
+                h.series.labels,
+                fmt_f64(h.hist.sum())
+            ));
+            out.push_str(&format!("{}_count{} {}\n", h.series.name, h.series.labels, h.hist.count()));
+        }
+        out
+    }
+}
+
+/// Emit the `# HELP`/`# TYPE` header once per metric family (labeled
+/// series of one family are registered consecutively).
+fn push_header(out: &mut String, last: &mut String, s: &Series, kind: &str) {
+    if *last != s.name {
+        out.push_str(&format!("# HELP {} {}\n# TYPE {} {}\n", s.name, s.help, s.name, kind));
+        last.clear();
+        last.push_str(&s.name);
+    }
+}
+
+/// Prometheus-friendly float rendering: integral values lose the
+/// trailing `.0` (matches bucket `le` conventions like `le="128"`).
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_render() {
+        let mut r = MetricsRegistry::new();
+        let c = r.counter("fa3_steps_total", "Engine steps executed.", &[]);
+        let g = r.gauge("fa3_kv_used_blocks", "KV blocks in use.", &[("replica", "0")]);
+        r.inc(c, 3);
+        r.inc(c, 2);
+        r.set(g, 17.0);
+        assert_eq!(r.counter_value(c), 5);
+        let text = r.render();
+        assert!(text.contains("# TYPE fa3_steps_total counter"), "{text}");
+        assert!(text.contains("fa3_steps_total 5\n"), "{text}");
+        assert!(text.contains("fa3_kv_used_blocks{replica=\"0\"} 17\n"), "{text}");
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets() {
+        let mut r = MetricsRegistry::new();
+        let h = r.histogram(
+            "fa3_occupancy",
+            "Planned first-wave SM occupancy.",
+            &[("policy", "sequence-aware")],
+            Histogram::new(vec![0.25, 0.5, 1.0]),
+        );
+        for v in [0.1, 0.2, 0.4, 0.9] {
+            r.observe(h, v);
+        }
+        let text = r.render();
+        assert!(text.contains("# TYPE fa3_occupancy histogram"), "{text}");
+        assert!(text.contains("fa3_occupancy_bucket{policy=\"sequence-aware\",le=\"0.25\"} 2\n"));
+        assert!(text.contains("fa3_occupancy_bucket{policy=\"sequence-aware\",le=\"0.5\"} 3\n"));
+        assert!(text.contains("fa3_occupancy_bucket{policy=\"sequence-aware\",le=\"1\"} 4\n"));
+        assert!(text.contains("fa3_occupancy_bucket{policy=\"sequence-aware\",le=\"+Inf\"} 4\n"));
+        assert!(text.contains("fa3_occupancy_count{policy=\"sequence-aware\"} 4\n"));
+        assert!(text.contains("fa3_occupancy_sum{policy=\"sequence-aware\"} 1.6"), "{text}");
+    }
+
+    #[test]
+    fn unlabeled_histogram_gets_bare_le_braces() {
+        let mut r = MetricsRegistry::new();
+        let h = r.histogram("fa3_step_us", "Step latency µs.", &[], Histogram::linear(0.0, 10.0, 2));
+        r.observe(h, 5.0);
+        let text = r.render();
+        assert!(text.contains("fa3_step_us_bucket{le=\"10\"} 1\n"), "{text}");
+        assert!(text.contains("fa3_step_us_bucket{le=\"+Inf\"} 1\n"), "{text}");
+    }
+
+    #[test]
+    fn shared_family_header_renders_once() {
+        let mut r = MetricsRegistry::new();
+        let a = r.counter("fa3_rejects_total", "Rejected submissions.", &[("kind", "backpressure")]);
+        let b = r.counter("fa3_rejects_total", "Rejected submissions.", &[("kind", "unschedulable")]);
+        r.inc(a, 1);
+        r.inc(b, 2);
+        let text = r.render();
+        assert_eq!(text.matches("# TYPE fa3_rejects_total counter").count(), 1, "{text}");
+        assert!(text.contains("fa3_rejects_total{kind=\"backpressure\"} 1\n"));
+        assert!(text.contains("fa3_rejects_total{kind=\"unschedulable\"} 2\n"));
+    }
+
+    #[test]
+    fn set_counter_mirrors_external_totals() {
+        let mut r = MetricsRegistry::new();
+        let c = r.counter("fa3_tokens_total", "Tokens generated.", &[]);
+        r.set_counter(c, 41);
+        r.set_counter(c, 42);
+        assert_eq!(r.counter_value(c), 42);
+    }
+}

@@ -1,0 +1,166 @@
+//! Fixed-capacity event ring: overwrite-oldest, never blocks, never grows.
+//!
+//! The recorder's storage discipline mirrors hardware trace units
+//! (flight recorders): the buffer is sized once, the hot-path `push` is a
+//! store plus two index updates, and when the ring is full the *oldest*
+//! event is overwritten and a drop counter increments. Keeping the most
+//! recent window (rather than refusing new events) is the right bias for
+//! postmortems — the interesting steps are the ones just before you
+//! stopped the run — and the drop counter keeps the loss honest in every
+//! export.
+
+use super::event::TraceEvent;
+
+/// Overwrite-oldest ring of [`TraceEvent`]s. Capacity 0 = recording
+/// disabled (every push counts as dropped, nothing is stored).
+#[derive(Debug, Clone)]
+pub struct EventRing {
+    /// Backing store; grows by `push` only up to the pre-reserved
+    /// capacity, then is overwritten in place.
+    buf: Vec<TraceEvent>,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    /// Events lost to overwrite (or to a zero-capacity ring).
+    dropped: u64,
+    capacity: usize,
+}
+
+impl EventRing {
+    /// A ring holding at most `capacity` events. The single allocation
+    /// happens here; pushes never reallocate.
+    pub fn with_capacity(capacity: usize) -> EventRing {
+        EventRing { buf: Vec::with_capacity(capacity), head: 0, dropped: 0, capacity }
+    }
+
+    /// Record one event.
+    ///
+    /// Steady-state cost: one bounds-checked store. The `Vec::push` arm
+    /// only runs while the ring is filling and stays within the capacity
+    /// reserved at construction, so no call ever touches the allocator.
+    // pallas-lint: no_alloc
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.capacity == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.buf.len() < self.capacity {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head += 1;
+            if self.head == self.capacity {
+                self.head = 0;
+            }
+            self.dropped += 1;
+        }
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been recorded (or capacity is 0).
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The fixed capacity chosen at construction.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Events lost to overwrite since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Iterate oldest → newest (chronological order even after wrap).
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    /// Forget all events (capacity and allocation are kept).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::EventKind;
+
+    fn ev(t: u64) -> TraceEvent {
+        TraceEvent { t_us: t, kind: EventKind::KvEvict { blocks: t as u32 } }
+    }
+
+    fn times(r: &EventRing) -> Vec<u64> {
+        r.iter().map(|e| e.t_us).collect()
+    }
+
+    #[test]
+    fn fills_then_wraps_keeping_newest() {
+        let mut r = EventRing::with_capacity(3);
+        for t in 0..3 {
+            r.push(ev(t));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 0);
+        assert_eq!(times(&r), vec![0, 1, 2]);
+
+        r.push(ev(3)); // overwrites t=0
+        r.push(ev(4)); // overwrites t=1
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        assert_eq!(times(&r), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn wraps_repeatedly_in_order() {
+        let mut r = EventRing::with_capacity(4);
+        for t in 0..11 {
+            r.push(ev(t));
+        }
+        assert_eq!(r.dropped(), 7);
+        assert_eq!(times(&r), vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn zero_capacity_drops_everything() {
+        let mut r = EventRing::with_capacity(0);
+        r.push(ev(1));
+        r.push(ev(2));
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 2);
+        assert_eq!(times(&r), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn push_never_exceeds_reserved_capacity() {
+        let mut r = EventRing::with_capacity(8);
+        let reserved = r.buf.capacity();
+        for t in 0..100 {
+            r.push(ev(t));
+        }
+        // The wrap path writes in place: the Vec never regrows.
+        assert_eq!(r.buf.capacity(), reserved);
+        assert_eq!(r.len(), 8);
+    }
+
+    #[test]
+    fn clear_resets_but_keeps_allocation() {
+        let mut r = EventRing::with_capacity(2);
+        r.push(ev(1));
+        r.push(ev(2));
+        r.push(ev(3));
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+        assert_eq!(r.capacity(), 2);
+        r.push(ev(9));
+        assert_eq!(times(&r), vec![9]);
+    }
+}

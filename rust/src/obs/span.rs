@@ -1,0 +1,202 @@
+//! Per-request span timelines reconstructed from the event ring.
+//!
+//! The recorder stores flat lifecycle transitions; this module folds them
+//! back into one [`RequestSpan`] per request (queued → admitted → prefill
+//! chunks → first token → finished/cancelled). Span-derived TTFT/TPOT use
+//! *exactly* the arithmetic of `coordinator::RequestTiming`, so a span
+//! timeline and the engine metrics agree to the microsecond — that
+//! equivalence is a tested acceptance criterion, not an aspiration.
+//!
+//! Reconstruction is export-time code: it allocates freely and tolerates
+//! truncated histories (a wrapped ring may have lost a request's early
+//! events; such spans simply have `None` for the lost timestamps).
+
+use std::collections::HashMap;
+
+use super::event::{EventKind, Phase, ReqId, TraceEvent};
+
+/// One request's reconstructed timeline. All timestamps are the engine
+/// clock in µs; `None` means the event fell out of the ring (or never
+/// happened — a cancelled request has no `finished_us`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RequestSpan {
+    pub request: ReqId,
+    /// Batch slot, once admitted.
+    pub slot: Option<u32>,
+    pub queued_us: Option<u64>,
+    pub admitted_us: Option<u64>,
+    pub first_token_us: Option<u64>,
+    pub finished_us: Option<u64>,
+    pub cancelled_us: Option<u64>,
+    /// Output tokens at completion (from the `Finished` event).
+    pub n_generated: u32,
+    /// Prefill chunks ingested (chunked-prefill runs only).
+    pub chunks: u32,
+    /// Prompt tokens served by the prefix cache at admission.
+    pub cached_prompt_tokens: u32,
+    /// This request triggered a copy-on-write fork at first divergence.
+    pub cow_forked: bool,
+}
+
+impl RequestSpan {
+    /// Time to first token from arrival (matches
+    /// `RequestTiming::ttft_us`). `None` until both endpoints are known.
+    pub fn ttft_us(&self) -> Option<u64> {
+        Some(self.first_token_us?.saturating_sub(self.queued_us?))
+    }
+
+    /// Time per output token after the first (matches
+    /// `RequestTiming::tpot_us`): zero if fewer than 2 tokens.
+    pub fn tpot_us(&self) -> Option<f64> {
+        let (first, done) = (self.first_token_us?, self.finished_us?);
+        if self.n_generated < 2 {
+            return Some(0.0);
+        }
+        Some(done.saturating_sub(first) as f64 / (self.n_generated - 1) as f64)
+    }
+
+    /// Queueing delay before entering the running batch.
+    pub fn queue_us(&self) -> Option<u64> {
+        Some(self.admitted_us?.saturating_sub(self.queued_us?))
+    }
+
+    /// End-to-end latency from arrival to completion.
+    pub fn e2e_us(&self) -> Option<u64> {
+        Some(self.finished_us?.saturating_sub(self.queued_us?))
+    }
+
+    /// True when the request ran to natural completion.
+    pub fn finished(&self) -> bool {
+        self.finished_us.is_some()
+    }
+}
+
+/// Fold an event stream (oldest → newest) into per-request spans, in
+/// order of first appearance. Non-lifecycle events that carry a request
+/// id (chunks, prefix probes, COW forks) enrich the span they belong to.
+pub fn reconstruct<'a>(events: impl Iterator<Item = &'a TraceEvent>) -> Vec<RequestSpan> {
+    let mut spans: Vec<RequestSpan> = Vec::new();
+    let mut index: HashMap<ReqId, usize> = HashMap::new();
+    let mut span_for = |spans: &mut Vec<RequestSpan>, id: ReqId| -> usize {
+        *index.entry(id).or_insert_with(|| {
+            spans.push(RequestSpan { request: id, ..RequestSpan::default() });
+            spans.len() - 1
+        })
+    };
+    for ev in events {
+        match ev.kind {
+            EventKind::Lifecycle { request, phase } => {
+                let i = span_for(&mut spans, request);
+                let s = &mut spans[i];
+                match phase {
+                    Phase::Queued => s.queued_us = Some(ev.t_us),
+                    Phase::Admitted { slot } => {
+                        s.admitted_us = Some(ev.t_us);
+                        s.slot = Some(slot);
+                    }
+                    Phase::FirstToken => s.first_token_us = Some(ev.t_us),
+                    Phase::Finished { n_generated } => {
+                        s.finished_us = Some(ev.t_us);
+                        s.n_generated = n_generated;
+                    }
+                    Phase::Cancelled => s.cancelled_us = Some(ev.t_us),
+                }
+            }
+            EventKind::ChunkIngested { request, .. } => {
+                let i = span_for(&mut spans, request);
+                spans[i].chunks += 1;
+            }
+            EventKind::PrefixProbe { request, hit_tokens, .. } => {
+                let i = span_for(&mut spans, request);
+                spans[i].cached_prompt_tokens = hit_tokens;
+            }
+            EventKind::KvCowFork { request } => {
+                let i = span_for(&mut spans, request);
+                spans[i].cow_forked = true;
+            }
+            _ => {}
+        }
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lc(t: u64, request: ReqId, phase: Phase) -> TraceEvent {
+        TraceEvent { t_us: t, kind: EventKind::Lifecycle { request, phase } }
+    }
+
+    #[test]
+    fn full_lifecycle_reconstructs() {
+        let events = [
+            lc(100, 7, Phase::Queued),
+            lc(150, 7, Phase::Admitted { slot: 2 }),
+            TraceEvent {
+                t_us: 200,
+                kind: EventKind::ChunkIngested { request: 7, slot: 2, start: 0, len: 128 },
+            },
+            TraceEvent {
+                t_us: 210,
+                kind: EventKind::ChunkIngested { request: 7, slot: 2, start: 128, len: 64 },
+            },
+            lc(400, 7, Phase::FirstToken),
+            lc(1400, 7, Phase::Finished { n_generated: 11 }),
+        ];
+        let spans = reconstruct(events.iter());
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!(s.request, 7);
+        assert_eq!(s.slot, Some(2));
+        assert_eq!(s.chunks, 2);
+        // Matches RequestTiming on the same numbers (timing_derivations
+        // test in coordinator/metrics.rs).
+        assert_eq!(s.ttft_us(), Some(300));
+        assert_eq!(s.queue_us(), Some(50));
+        assert_eq!(s.e2e_us(), Some(1300));
+        assert!((s.tpot_us().unwrap() - 100.0).abs() < 1e-9);
+        assert!(s.finished());
+    }
+
+    #[test]
+    fn interleaved_requests_separate() {
+        let events = [
+            lc(0, 1, Phase::Queued),
+            lc(5, 2, Phase::Queued),
+            lc(10, 2, Phase::Admitted { slot: 0 }),
+            lc(20, 1, Phase::Admitted { slot: 1 }),
+            lc(30, 2, Phase::Cancelled),
+        ];
+        let spans = reconstruct(events.iter());
+        assert_eq!(spans.len(), 2);
+        // Order of first appearance.
+        assert_eq!(spans[0].request, 1);
+        assert_eq!(spans[1].request, 2);
+        assert_eq!(spans[1].cancelled_us, Some(30));
+        assert!(!spans[1].finished());
+        assert_eq!(spans[0].slot, Some(1));
+    }
+
+    #[test]
+    fn truncated_history_yields_partial_span() {
+        // Ring wrapped: the Queued/Admitted events are gone.
+        let events = [lc(400, 9, Phase::FirstToken), lc(900, 9, Phase::Finished { n_generated: 6 })];
+        let spans = reconstruct(events.iter());
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].queued_us, None);
+        assert_eq!(spans[0].ttft_us(), None);
+        assert!((spans[0].tpot_us().unwrap() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_token_tpot_is_zero() {
+        let events = [
+            lc(0, 1, Phase::Queued),
+            lc(10, 1, Phase::FirstToken),
+            lc(10, 1, Phase::Finished { n_generated: 1 }),
+        ];
+        let spans = reconstruct(events.iter());
+        assert_eq!(spans[0].tpot_us(), Some(0.0));
+    }
+}

@@ -75,6 +75,19 @@ impl MixedStepPlan {
     pub fn step_tokens(&self) -> usize {
         self.decode_slots.len() + self.chunks.iter().map(|c| c.len).sum::<usize>()
     }
+
+    /// Classify the composition for the flight recorder: decode rows
+    /// only, prompt ingestion only, or a genuinely mixed wave. Meaningful
+    /// only for non-empty plans (an empty plan classifies as `Decode`;
+    /// callers gate on [`MixedStepPlan::is_empty`] first).
+    // pallas-lint: no_alloc
+    pub fn step_class(&self) -> crate::obs::StepClass {
+        match (self.chunks.is_empty(), self.decode_slots.is_empty()) {
+            (true, _) => crate::obs::StepClass::Decode,
+            (false, true) => crate::obs::StepClass::Prefill,
+            (false, false) => crate::obs::StepClass::Mixed,
+        }
+    }
 }
 
 /// Per-step composer: pure function of the slot sweep and the configured

@@ -78,6 +78,146 @@ pub fn geomean(ratios: &[f64]) -> f64 {
     (log_sum / ratios.len() as f64).exp()
 }
 
+/// Mean and interpolated p99 of an unsorted sample, in one call.
+///
+/// The serving benches used to hand-roll this pair with a biased
+/// nearest-rank index (`v[len * 99 / 100]`), which disagrees with
+/// [`Summary::of`] on small samples; they now share this helper so every
+/// reported p99 uses the same interpolation as the engine metrics.
+pub fn mean_p99(samples: &[f64]) -> (f64, f64) {
+    assert!(!samples.is_empty(), "mean_p99 on empty sample");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+    let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+    (mean, percentile_sorted(&sorted, 99.0))
+}
+
+/// Fixed-bucket histogram: ascending upper bounds plus an implicit
+/// overflow (+Inf) bucket, with running sum and count.
+///
+/// This is the storage type behind the observability metrics registry
+/// (`obs::MetricsRegistry`): bucket layout is fixed at construction so
+/// [`Histogram::observe`] touches no heap — the serving step loop records
+/// into pre-registered histograms from inside `no_alloc` regions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    /// Histogram over explicit ascending upper bounds. A value `v` lands
+    /// in the first bucket with `v <= bound`, else in the overflow bucket.
+    pub fn new(bounds: Vec<f64>) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        let counts = vec![0u64; bounds.len() + 1];
+        Histogram { bounds, counts, sum: 0.0, count: 0 }
+    }
+
+    /// `n` buckets of equal `width` starting at `start` (first upper bound
+    /// is `start + width`).
+    pub fn linear(start: f64, width: f64, n: usize) -> Histogram {
+        assert!(width > 0.0 && n > 0);
+        Histogram::new((1..=n).map(|i| start + width * i as f64).collect())
+    }
+
+    /// `n` buckets growing geometrically from `first` by `factor`.
+    pub fn exponential(first: f64, factor: f64, n: usize) -> Histogram {
+        assert!(first > 0.0 && factor > 1.0 && n > 0);
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = first;
+        for _ in 0..n {
+            bounds.push(b);
+            b *= factor;
+        }
+        Histogram::new(bounds)
+    }
+
+    /// Record one observation. Never allocates: bucket layout is fixed at
+    /// construction, so this is safe inside measured `no_alloc` windows.
+    // pallas-lint: no_alloc
+    pub fn observe(&mut self, v: f64) {
+        let mut idx = self.bounds.len();
+        for (i, b) in self.bounds.iter().enumerate() {
+            if v <= *b {
+                idx = i;
+                break;
+            }
+        }
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all observed values.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean of all observations, if any.
+    pub fn mean(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum / self.count as f64)
+    }
+
+    /// Bucket upper bounds (the overflow bucket is implicit).
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts; the final entry is the overflow bucket.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Quantile estimate `q` in [0, 1] by linear interpolation within the
+    /// containing bucket (Prometheus `histogram_quantile` semantics; the
+    /// overflow bucket clamps to its lower edge).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        assert!((0.0..=1.0).contains(&q));
+        if self.count == 0 {
+            return None;
+        }
+        let target = q * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let prev = cum;
+            cum += c;
+            if (cum as f64) >= target && c > 0 {
+                if i == self.bounds.len() {
+                    // Overflow bucket has no upper edge; clamp to its floor.
+                    return Some(self.bounds.last().copied().unwrap_or(0.0));
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let frac = (target - prev as f64) / c as f64;
+                return Some(lo + (hi - lo) * frac.clamp(0.0, 1.0));
+            }
+        }
+        self.bounds.last().copied()
+    }
+
+    /// Merge another histogram recorded over the same bucket layout
+    /// (fleet-level pooling of per-replica histograms).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "merging histograms with different buckets");
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,5 +275,75 @@ mod tests {
     #[should_panic]
     fn empty_sample_panics() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn mean_p99_matches_summary() {
+        let samples: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        let (mean, p99) = mean_p99(&samples);
+        let s = Summary::of(&samples);
+        assert!((mean - s.mean).abs() < 1e-12);
+        assert!((p99 - s.p99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bucketing_and_mean() {
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0]);
+        for v in [0.5, 1.0, 1.5, 3.0, 100.0] {
+            h.observe(v);
+        }
+        // v <= bound lands in that bucket: 0.5 and 1.0 in le=1.
+        assert_eq!(h.counts(), &[2, 1, 1, 1]);
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 106.0).abs() < 1e-12);
+        assert!((h.mean().unwrap() - 21.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_constructors() {
+        let lin = Histogram::linear(0.0, 0.25, 4);
+        assert_eq!(lin.bounds(), &[0.25, 0.5, 0.75, 1.0]);
+        let exp = Histogram::exponential(100.0, 2.0, 3);
+        assert_eq!(exp.bounds(), &[100.0, 200.0, 400.0]);
+    }
+
+    #[test]
+    fn histogram_quantile_interpolates() {
+        let mut h = Histogram::linear(0.0, 10.0, 10);
+        for i in 0..100 {
+            h.observe(i as f64 + 0.5);
+        }
+        assert_eq!(h.quantile(0.5), Some(50.0));
+        assert_eq!(h.quantile(0.9), Some(90.0));
+        assert_eq!(Histogram::linear(0.0, 1.0, 2).quantile(0.5), None);
+    }
+
+    #[test]
+    fn histogram_overflow_clamps() {
+        let mut h = Histogram::new(vec![1.0]);
+        h.observe(50.0);
+        h.observe(60.0);
+        assert_eq!(h.quantile(0.99), Some(1.0));
+        assert_eq!(h.counts(), &[0, 2]);
+    }
+
+    #[test]
+    fn histogram_merge_pools() {
+        let mut a = Histogram::linear(0.0, 1.0, 3);
+        let mut b = Histogram::linear(0.0, 1.0, 3);
+        a.observe(0.5);
+        b.observe(1.5);
+        b.observe(2.5);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.counts(), &[1, 1, 1, 0]);
+        assert!((a.sum() - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn histogram_merge_rejects_mismatched_buckets() {
+        let mut a = Histogram::linear(0.0, 1.0, 3);
+        a.merge(&Histogram::linear(0.0, 2.0, 3));
     }
 }
