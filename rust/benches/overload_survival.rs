@@ -1,0 +1,335 @@
+//! Bench: overload survival — priority preemption + SLO goodput vs the
+//! refusal-only engine, on the simulated H100's virtual clock.
+//!
+//! Scenarios:
+//!
+//! * **Disabled identity** — `preemption.enabled = false` must be inert:
+//!   a default-config run vs a run with the preemption knobs explicitly
+//!   set (but disabled) and `slo = None` must be byte-identical,
+//!   including timings, wall clock, and step counts. The overload
+//!   machinery may not perturb the engine it is bolted onto.
+//! * **2x sustained overload** — `ChatWorkload::mixed_open_loop` (3/4
+//!   short interactive + 1/4 long-prompt batch) arriving at roughly
+//!   twice the service rate of a `max_batch = 4` engine. Refusal-only
+//!   baseline: bounded admission, no preemption, no shedding (SLO
+//!   accounting on, so goodput is measured on both sides). Survival
+//!   run: priority preemption on (`ResumePolicy::Auto` picks swap vs
+//!   recompute per victim from the modeled costs) plus hopeless-shed.
+//! * **Resume integrity** — every request the survival run preempted
+//!   and later finished naturally is re-run alone in an uncontended
+//!   engine; the token streams must match byte-for-byte (preemption
+//!   moves *when* tokens are computed, never what gets computed).
+//!
+//! Gates (exit nonzero on failure — the CI `overload-survival` job):
+//!
+//! 1. the disabled-identity leg holds exactly,
+//! 2. goodput (SLO-met tokens) with preemption strictly exceeds the
+//!    refusal-only baseline,
+//! 3. interactive-class p99 TTFT under preemption strictly beats the
+//!    refusal-only baseline,
+//! 4. at least one request was preempted and every preempted-then-
+//!    resumed stream is identical to its uncontended run.
+//!
+//! Run: `cargo bench --bench overload_survival [-- --json PATH]`
+//! (`BENCH_overload_survival.json` is regenerated this way.)
+
+use std::collections::BTreeSet;
+
+use fa3_split::backend::{AttnGeometry, SimBackend};
+use fa3_split::coordinator::{
+    BatcherConfig, Engine, EngineConfig, FinishedRequest, PreemptionConfig, Priority,
+    ResumePolicy, SloConfig, SubmitOptions,
+};
+use fa3_split::obs::EventKind;
+use fa3_split::planner::Planner;
+use fa3_split::util::json::Json;
+use fa3_split::util::stats;
+use fa3_split::workload::{ChatWorkload, GeneratedRequest};
+
+const MAX_BATCH: usize = 4;
+const N_REQUESTS: usize = 64;
+/// Mean merged inter-arrival gap. A `max_batch = 4` engine drains the
+/// mixed trace at roughly one request per ~200 µs; arrivals every
+/// ~100 µs sustain ~2x overload for the whole stream.
+const MEAN_GAP_US: u64 = 100;
+const TRACE_CAPACITY: usize = 65_536;
+
+fn engine(cfg: EngineConfig) -> Engine {
+    Engine::builder(Box::new(SimBackend::h100()))
+        .planner(Planner::sequence_aware())
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+        .available_splits(vec![1, 3])
+        .config(cfg)
+        .build()
+        .unwrap()
+}
+
+fn base_config() -> EngineConfig {
+    EngineConfig {
+        batcher: BatcherConfig::for_max_batch(MAX_BATCH),
+        ..Default::default()
+    }
+}
+
+fn overload_trace() -> Vec<GeneratedRequest> {
+    ChatWorkload::mixed_open_loop(0x0B5E_55ED, N_REQUESTS, MEAN_GAP_US)
+}
+
+struct RunResult {
+    done: Vec<FinishedRequest>,
+    goodput_tokens: usize,
+    goodput_tok_s: f64,
+    preemptions: usize,
+    shed: usize,
+    wall_us: u64,
+    steps: usize,
+    preempted_ids: BTreeSet<u64>,
+}
+
+fn run_overload(cfg: EngineConfig) -> RunResult {
+    let mut e = engine(cfg);
+    for g in overload_trace() {
+        if let Err(err) = e.submit_at_with(
+            g.request,
+            g.arrival_offset_us,
+            SubmitOptions::default().priority(g.priority),
+        ) {
+            // Refusal is part of the scenario under overload.
+            eprintln!("refused at submit: {err}");
+        }
+    }
+    let done = e.run_until_idle().unwrap();
+    let preempted_ids: BTreeSet<u64> = e
+        .recorder()
+        .events()
+        .filter_map(|ev| match ev.kind {
+            EventKind::Preempt { request, .. } => Some(request),
+            _ => None,
+        })
+        .collect();
+    RunResult {
+        done,
+        goodput_tokens: e.metrics.goodput_tokens,
+        goodput_tok_s: e.metrics.goodput_tok_s(),
+        preemptions: e.metrics.preemptions,
+        shed: e.metrics.requests_shed,
+        wall_us: e.metrics.wall_us,
+        steps: e.metrics.steps,
+        preempted_ids,
+    }
+}
+
+fn byte_identical(a: &[FinishedRequest], b: &[FinishedRequest]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.id == y.id
+                && x.tokens == y.tokens
+                && x.reason == y.reason
+                && x.timing.arrival_us == y.timing.arrival_us
+                && x.timing.scheduled_us == y.timing.scheduled_us
+                && x.timing.first_token_us == y.timing.first_token_us
+                && x.timing.finished_us == y.timing.finished_us
+        })
+}
+
+/// p99 TTFT over naturally-finished requests of one class (shed or
+/// cancelled requests never produced a first token).
+fn p99_ttft(done: &[FinishedRequest], class: Priority) -> Option<f64> {
+    let ttfts: Vec<f64> = done
+        .iter()
+        .filter(|f| f.priority == class && f.reason.is_natural())
+        .map(|f| f.timing.ttft_us() as f64)
+        .collect();
+    if ttfts.is_empty() {
+        return None;
+    }
+    Some(stats::mean_p99(&ttfts).1)
+}
+
+fn main() {
+    let json_path = {
+        let args: Vec<String> = std::env::args().collect();
+        args.iter().position(|a| a == "--json").and_then(|i| args.get(i + 1).cloned())
+    };
+
+    println!("== Overload survival: preemption + goodput vs refusal-only ==\n");
+
+    // ------------------------------------------------------------------
+    // Scenario 1: disabled identity.
+    // ------------------------------------------------------------------
+    let plain = run_overload(base_config());
+    let knobs_off = run_overload(EngineConfig {
+        // Every preemption knob moved off its default — but disabled.
+        preemption: PreemptionConfig {
+            enabled: false,
+            max_per_step: 4,
+            resume: ResumePolicy::Recompute,
+            ..Default::default()
+        },
+        slo: None,
+        ..base_config()
+    });
+    let mut plain_sorted = plain.done.clone();
+    let mut knobs_sorted = knobs_off.done.clone();
+    plain_sorted.sort_by_key(|f| f.id);
+    knobs_sorted.sort_by_key(|f| f.id);
+    let id_ok = byte_identical(&plain_sorted, &knobs_sorted)
+        && plain.wall_us == knobs_off.wall_us
+        && plain.steps == knobs_off.steps
+        && knobs_off.preemptions == 0;
+    println!(
+        "disabled identity: default vs explicit-but-disabled knobs — {}",
+        if id_ok { "byte-identical" } else { "DIVERGED" }
+    );
+
+    // ------------------------------------------------------------------
+    // Scenario 2: 2x sustained overload, refusal-only vs survival.
+    // ------------------------------------------------------------------
+    // Refusal-only: measure goodput but change nothing — no preemption,
+    // no shedding. This is the pre-PR engine with a measuring stick.
+    let refusal = run_overload(EngineConfig {
+        slo: Some(SloConfig { shed_hopeless: false, ..Default::default() }),
+        ..base_config()
+    });
+    // Survival: preemption + auto resume + hopeless-shed.
+    let survival = run_overload(EngineConfig {
+        preemption: PreemptionConfig { enabled: true, ..Default::default() },
+        slo: Some(SloConfig::default()),
+        trace_capacity: TRACE_CAPACITY,
+        ..base_config()
+    });
+    assert!(survival.preemptions > 0, "2x overload must trigger preemption");
+
+    println!(
+        "\noverload: {N_REQUESTS} requests, mean gap {MEAN_GAP_US} µs, max batch {MAX_BATCH}"
+    );
+    println!(
+        "refusal-only: goodput {} tok ({:.0} tok/s), finished {}",
+        refusal.goodput_tokens,
+        refusal.goodput_tok_s,
+        refusal.done.iter().filter(|f| f.reason.is_natural()).count()
+    );
+    println!(
+        "survival:     goodput {} tok ({:.0} tok/s), finished {}, preemptions {}, shed {}",
+        survival.goodput_tokens,
+        survival.goodput_tok_s,
+        survival.done.iter().filter(|f| f.reason.is_natural()).count(),
+        survival.preemptions,
+        survival.shed
+    );
+    let refusal_int_p99 = p99_ttft(&refusal.done, Priority::Interactive).unwrap();
+    let survival_int_p99 = p99_ttft(&survival.done, Priority::Interactive).unwrap();
+    println!(
+        "interactive p99 TTFT: survival {survival_int_p99:.0} µs vs refusal-only \
+         {refusal_int_p99:.0} µs"
+    );
+
+    // ------------------------------------------------------------------
+    // Scenario 3: resume integrity against uncontended re-runs.
+    // ------------------------------------------------------------------
+    let trace = overload_trace();
+    let mut resumed_checked = 0usize;
+    let mut streams_identical = true;
+    for f in &survival.done {
+        if !survival.preempted_ids.contains(&f.id) || !f.reason.is_natural() {
+            continue;
+        }
+        let g = trace.iter().find(|g| g.request.id == f.id).unwrap();
+        let mut solo = engine(base_config());
+        solo.submit(g.request.clone()).unwrap();
+        let alone = solo.run_until_idle().unwrap();
+        let same = alone.len() == 1
+            && alone[0].tokens == f.tokens
+            && alone[0].reason == f.reason;
+        if !same {
+            eprintln!("request {} diverged from its uncontended run", f.id);
+        }
+        streams_identical &= same;
+        resumed_checked += 1;
+    }
+    println!(
+        "resume integrity: {resumed_checked} preempted-then-finished streams checked \
+         against uncontended runs"
+    );
+
+    // ------------------------------------------------------------------
+    // Gates.
+    // ------------------------------------------------------------------
+    let mut ok = true;
+
+    println!("\ndisabled preemption is byte-identical: {}", if id_ok { "OK" } else { "MISS" });
+    ok &= id_ok;
+
+    let g2 = survival.goodput_tokens > refusal.goodput_tokens;
+    println!(
+        "goodput beats refusal-only: {} vs {} tok ({})",
+        survival.goodput_tokens,
+        refusal.goodput_tokens,
+        if g2 { "OK" } else { "MISS" }
+    );
+    ok &= g2;
+
+    let g3 = survival_int_p99 < refusal_int_p99;
+    println!(
+        "interactive p99 TTFT beats refusal-only: {survival_int_p99:.0} µs vs \
+         {refusal_int_p99:.0} µs ({})",
+        if g3 { "OK" } else { "MISS" }
+    );
+    ok &= g3;
+
+    let g4 = resumed_checked > 0 && streams_identical;
+    println!(
+        "resumed streams identical to uncontended ({resumed_checked} checked): {}",
+        if g4 { "OK" } else { "MISS" }
+    );
+    ok &= g4;
+
+    if let Some(path) = json_path {
+        let report = Json::obj(vec![
+            ("bench", Json::str("overload_survival")),
+            (
+                "generated_by",
+                Json::str(
+                    "cargo bench --bench overload_survival -- --json BENCH_overload_survival.json",
+                ),
+            ),
+            ("measured", Json::Bool(true)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("requests", Json::int(N_REQUESTS as i64)),
+                    ("mean_gap_us", Json::int(MEAN_GAP_US as i64)),
+                    ("max_batch", Json::int(MAX_BATCH as i64)),
+                ]),
+            ),
+            ("disabled_identity", Json::Bool(id_ok)),
+            (
+                "overload",
+                Json::obj(vec![
+                    ("refusal_goodput_tokens", Json::int(refusal.goodput_tokens as i64)),
+                    ("survival_goodput_tokens", Json::int(survival.goodput_tokens as i64)),
+                    ("refusal_interactive_p99_ttft_us", Json::num(refusal_int_p99)),
+                    ("survival_interactive_p99_ttft_us", Json::num(survival_int_p99)),
+                    ("preemptions", Json::int(survival.preemptions as i64)),
+                    ("shed", Json::int(survival.shed as i64)),
+                ]),
+            ),
+            (
+                "resume_integrity",
+                Json::obj(vec![
+                    ("streams_checked", Json::int(resumed_checked as i64)),
+                    ("identical", Json::Bool(streams_identical)),
+                ]),
+            ),
+            ("passed", Json::Bool(ok)),
+        ]);
+        match std::fs::write(&path, report.to_string_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -67,7 +67,7 @@ pub const ALLOWED: &[(&str, &[&str])] = &[
     ("workload", &["coordinator", "heuristics", "obs", "util"]),
     ("backend", &["heuristics", "obs", "planner", "runtime", "sim", "util"]),
     ("schedule", &["obs", "util"]),
-    ("coordinator", &["backend", "heuristics", "obs", "planner", "schedule", "util"]),
+    ("coordinator", &["backend", "heuristics", "obs", "planner", "schedule", "sim", "util"]),
     (
         "cluster",
         &["backend", "coordinator", "heuristics", "obs", "planner", "util", "workload"],

@@ -327,14 +327,20 @@ impl Fleet {
                 throughput_tok_s: m.throughput_tok_s(),
                 wall_us: m.wall_us,
                 rejected_backpressure: m.rejected_backpressure,
+                goodput_tokens: m.goodput_tokens,
+                preemptions: m.preemptions,
+                requests_shed: m.requests_shed,
             });
         }
         let total_tokens: usize = replica_reports.iter().map(|r| r.tokens_generated).sum();
+        let goodput_tokens: usize = replica_reports.iter().map(|r| r.goodput_tokens).sum();
         // Replicas run concurrently in a real deployment: fleet wall time
         // is the slowest replica's, and aggregate throughput follows.
         let wall_us = replica_reports.iter().map(|r| r.wall_us).max().unwrap_or(0);
         let aggregate_tok_s =
             if wall_us == 0 { 0.0 } else { total_tokens as f64 / (wall_us as f64 / 1e6) };
+        let goodput_tok_s =
+            if wall_us == 0 { 0.0 } else { goodput_tokens as f64 / (wall_us as f64 / 1e6) };
         FleetReport {
             policy: self.policy.clone(),
             router: self.router.name(),
@@ -347,8 +353,10 @@ impl Fleet {
             ttft: (!ttfts.is_empty()).then(|| Summary::of(&ttfts)),
             tpot: (!tpots.is_empty()).then(|| Summary::of(&tpots)),
             total_tokens,
+            goodput_tokens,
             wall_us,
             aggregate_tok_s,
+            goodput_tok_s,
             rejected: self.rejected,
         }
     }
@@ -378,6 +386,13 @@ pub struct ReplicaReport {
     /// when they came due (they were routed but never served — without
     /// this counter they would silently vanish from the report).
     pub rejected_backpressure: usize,
+    /// Tokens of naturally-finished requests that met their class's SLOs
+    /// (zero when the replica ran without an SLO config).
+    pub goodput_tokens: usize,
+    /// Running requests the replica evicted for higher-priority heads.
+    pub preemptions: usize,
+    /// Queued requests the replica shed as hopeless.
+    pub requests_shed: usize,
 }
 
 /// What a fleet run produced.
@@ -395,9 +410,13 @@ pub struct FleetReport {
     pub ttft: Option<Summary>,
     pub tpot: Option<Summary>,
     pub total_tokens: usize,
+    /// SLO-meeting tokens summed over replicas (zero without SLO config).
+    pub goodput_tokens: usize,
     /// Slowest replica's clock (replicas run concurrently).
     pub wall_us: u64,
     pub aggregate_tok_s: f64,
+    /// Fleet goodput rate over the same wall time as `aggregate_tok_s`.
+    pub goodput_tok_s: f64,
     /// Requests refused at routing time: unroutable (no eligible replica,
     /// or a pinned replica that can't take the turn) plus never-fits
     /// shapes the chosen replica refused at submission.
@@ -529,6 +548,16 @@ impl FleetReport {
             self.rejected,
             self.rejected_backpressure()
         ));
+        // Overload-survival line only when something happened: keeps the
+        // default (no-SLO, no-preemption) rendering byte-identical.
+        let preemptions: usize = self.replicas.iter().map(|r| r.preemptions).sum();
+        let shed: usize = self.replicas.iter().map(|r| r.requests_shed).sum();
+        if self.goodput_tokens + preemptions + shed > 0 {
+            out.push_str(&format!(
+                "goodput: {} tokens ({:.0} tok/s), preemptions {}, shed {}\n",
+                self.goodput_tokens, self.goodput_tok_s, preemptions, shed
+            ));
+        }
         if let Some(s) = &self.tpot {
             out.push_str(&format!(
                 "fleet TPOT µs: mean={:.1} p50={:.1} p99={:.1}\n",
@@ -623,6 +652,9 @@ mod tests {
                     throughput_tok_s: 0.0,
                     wall_us: 0,
                     rejected_backpressure: 0,
+                    goodput_tokens: 0,
+                    preemptions: 0,
+                    requests_shed: 0,
                 },
                 ReplicaReport {
                     index: 1,
@@ -637,6 +669,9 @@ mod tests {
                     throughput_tok_s: 0.0,
                     wall_us: 0,
                     rejected_backpressure: 0,
+                    goodput_tokens: 0,
+                    preemptions: 0,
+                    requests_shed: 0,
                 },
             ],
             assignments: Vec::new(),
@@ -644,8 +679,10 @@ mod tests {
             ttft: None,
             tpot: None,
             total_tokens: 200,
+            goodput_tokens: 0,
             wall_us: 0,
             aggregate_tok_s: 0.0,
+            goodput_tok_s: 0.0,
             rejected: 0,
         };
         assert_eq!(even.imbalance(), 0.0);

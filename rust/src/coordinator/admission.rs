@@ -92,13 +92,24 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-/// Admission counters (surfaced through `EngineMetrics`).
+/// Admission counters (surfaced through `EngineMetrics`, and per class
+/// as the `fa3_admission_rejected_total{class,reason}` Prometheus
+/// family). `admitted` counts *admissions*, so a preempted-then-resumed
+/// request contributes twice.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct AdmissionStats {
     pub rejected_backpressure: usize,
     pub rejected_unschedulable: usize,
     pub cancelled_while_queued: usize,
     pub admitted: usize,
+    /// Queued requests dropped as hopeless by the SLO shed pass (they
+    /// could no longer produce any goodput).
+    pub shed: usize,
+    /// Per-class splits of the rejection/shed counters (index =
+    /// `Priority::index()`).
+    pub rejected_backpressure_class: [usize; PRIORITY_CLASSES],
+    pub rejected_unschedulable_class: [usize; PRIORITY_CLASSES],
+    pub shed_class: [usize; PRIORITY_CLASSES],
 }
 
 /// The admission controller: bounded waiting queues, one per class.
@@ -145,10 +156,12 @@ impl AdmissionController {
         &mut self,
         prompt: &[i32],
         max_new: usize,
+        priority: Priority,
         blocks: &BlockManager,
     ) -> Result<(), SubmitError> {
         if !blocks.can_ever_admit(prompt.len(), max_new) {
             self.stats.rejected_unschedulable += 1;
+            self.stats.rejected_unschedulable_class[priority.index()] += 1;
             return Err(SubmitError::Unschedulable {
                 required_tokens: prompt.len() + max_new,
                 max_seq: blocks.config().max_seq,
@@ -165,14 +178,18 @@ impl AdmissionController {
         tracked: TrackedRequest,
         blocks: &BlockManager,
     ) -> Result<(), (TrackedRequest, SubmitError)> {
-        if let Err(err) =
-            self.check_schedulable(&tracked.req.prompt, tracked.req.max_new_tokens, blocks)
-        {
+        if let Err(err) = self.check_schedulable(
+            &tracked.req.prompt,
+            tracked.req.max_new_tokens,
+            tracked.priority(),
+            blocks,
+        ) {
             return Err((tracked, err));
         }
         let q = &mut self.queues[tracked.priority().index()];
         if q.len() >= self.cfg.queue_capacity {
             self.stats.rejected_backpressure += 1;
+            self.stats.rejected_backpressure_class[tracked.priority().index()] += 1;
             let bp = Backpressure {
                 priority: tracked.priority(),
                 queue_depth: q.len(),
@@ -231,6 +248,13 @@ impl AdmissionController {
         'classes: for priority in Priority::all() {
             let q = &mut self.queues[priority.index()];
             while let Some(front) = q.front() {
+                // A swap-parked head whose host transfer hasn't landed
+                // blocks like a KV-starved head: strict priority means
+                // nothing may leapfrog it, and the engine fast-forwards
+                // the virtual clock to its ready time when idle.
+                if front.resume_ready_at().is_some_and(|ready| ready > now_us) {
+                    break 'classes;
+                }
                 let Some(slot) = batcher.free_slot() else { break 'classes };
                 // One probe, not two: `admit` applies the same
                 // sharing-aware capacity predicate `can_admit_prompt`
@@ -247,15 +271,95 @@ impl AdmissionController {
                     // Head-of-line: a blocked head blocks lower classes too.
                     Err(_full) => break 'classes,
                 };
-                let t = q.pop_front().unwrap();
+                let mut t = q.pop_front().unwrap();
+                let resume = t.resume.take();
                 admitted.push(t.req.id);
                 self.stats.admitted += 1;
                 let mut running = RunningRequest::new(t.req, t.ticket, slot, now_us);
                 running.cached_prompt_tokens = grant.cached_tokens;
+                if let Some(rs) = resume {
+                    running.restore(*rs);
+                }
                 batcher.install(running);
             }
         }
         admitted
+    }
+
+    /// Re-enqueue a preempted request at the HEAD of its class: it keeps
+    /// its FIFO position relative to everything that arrived after it,
+    /// so preemption delays a victim, never starves it. Deliberately
+    /// exempt from the queue-capacity bound — the request was already
+    /// inside the system (it held a slot a moment ago); bouncing it at
+    /// the door would turn preemption into silent cancellation.
+    pub(crate) fn requeue_preempted(&mut self, t: TrackedRequest) {
+        self.queues[t.priority().index()].push_front(t);
+    }
+
+    /// Class index of the head request blocked on *capacity* (slots or
+    /// KV), if any: the front of the highest-priority non-empty class,
+    /// unless that front is swap-parked (then it waits on its transfer,
+    /// and preempting victims for it would be pointless).
+    pub(crate) fn blocked_head_class(&self, now_us: u64) -> Option<usize> {
+        for priority in Priority::all() {
+            if let Some(front) = self.queues[priority.index()].front() {
+                if front.resume_ready_at().is_some_and(|ready| ready > now_us) {
+                    return None;
+                }
+                return Some(priority.index());
+            }
+        }
+        None
+    }
+
+    /// The head request's prompt/max_new (admission cost probe for the
+    /// preemption pass), for the blocked head identified by
+    /// [`AdmissionController::blocked_head_class`].
+    pub(crate) fn head_request(&self, class: usize) -> Option<&TrackedRequest> {
+        self.queues[class].front()
+    }
+
+    /// If the highest-priority non-empty class's head is swap-parked in
+    /// the future, when it becomes ready — the engine's idle
+    /// fast-forward target (without it, a virtual-clock engine whose
+    /// only remaining work is a parked resume would spin forever).
+    pub(crate) fn blocking_resume_ready_us(&self, now_us: u64) -> Option<u64> {
+        for priority in Priority::all() {
+            if let Some(front) = self.queues[priority.index()].front() {
+                return front.resume_ready_at().filter(|&ready| ready > now_us);
+            }
+        }
+        None
+    }
+
+    /// Drop queued requests the predicate deems hopeless (negative
+    /// slack: no schedule can land them inside their deadline/SLO).
+    /// They hold no blocks, so this is pure queue surgery like
+    /// [`AdmissionController::reap_cancelled`]; the engine finishes
+    /// their streams. The common nothing-hopeless case is a scan with
+    /// no moves or allocation.
+    pub(crate) fn shed_where(
+        &mut self,
+        mut hopeless: impl FnMut(&TrackedRequest) -> bool,
+    ) -> Vec<TrackedRequest> {
+        if !self.queues.iter().flatten().any(&mut hopeless) {
+            return Vec::new();
+        }
+        let mut shed = Vec::new();
+        for (class, q) in self.queues.iter_mut().enumerate() {
+            let mut keep = VecDeque::with_capacity(q.len());
+            while let Some(t) = q.pop_front() {
+                if hopeless(&t) {
+                    self.stats.shed += 1;
+                    self.stats.shed_class[class] += 1;
+                    shed.push(t);
+                } else {
+                    keep.push_back(t);
+                }
+            }
+            *q = keep;
+        }
+        shed
     }
 
     /// Cancel a queued request by id (running requests are the engine's
@@ -293,7 +397,7 @@ mod tests {
         // Content unique per id: these tests exercise the prefix-blind
         // accounting; sharing has its own suites.
         let prompt = (0..prompt_len).map(|i| (id as i32 + 1) * 10_000 + i as i32).collect();
-        TrackedRequest { req: Request::new(id, prompt, max_new), ticket }
+        TrackedRequest { req: Request::new(id, prompt, max_new), ticket, resume: None }
     }
 
     fn setup(max_batch: usize, num_blocks: usize) -> (AdmissionController, Batcher, BlockManager) {

@@ -46,19 +46,87 @@ use anyhow::{Context, Result};
 use crate::backend::{
     AttnGeometry, BackendCaps, ExecutionBackend, StepBatch, StepKind, StepOutcome, StepRow,
 };
-use crate::obs::{CursorOutcome, EventKind, FlightRecorder, Phase, PolicyId, WaveKind};
+use crate::obs::{CursorOutcome, EventKind, FlightRecorder, Phase, PolicyId, PreemptClass, WaveKind};
 use crate::planner::{CursorStats, Planner};
-use crate::schedule::{ChunkSpan, MixedStepPlan, ScheduleConfig, SlotView, StepComposer};
+use crate::schedule::{
+    deadline_slack_us, min_service_us, ttft_slack_us, ChunkSpan, MixedStepPlan, ScheduleConfig,
+    SlotView, StepComposer,
+};
+use crate::sim::{recompute_estimate_us, HostTransferModel, Simulator, DECODE_STEP_ESTIMATE_US};
 
 use super::admission::{AdmissionConfig, AdmissionController, AdmissionStats, SubmitError};
 use super::batcher::{Batcher, BatcherConfig};
 use super::kv_cache::{BlockManager, BlockManagerConfig};
 use super::lifecycle::{
-    handle_pair, CancelKind, RequestHandle, StreamEvent, SubmitOptions, TrackedRequest,
+    handle_pair, CancelKind, RequestHandle, ResumeKind, ResumeState, StreamEvent, SubmitOptions,
+    TrackedRequest,
 };
-use super::metrics::{EngineMetrics, RequestTiming};
+use super::metrics::{EngineMetrics, RequestTiming, SloConfig};
 use super::request::{FinishReason, FinishedRequest, Request, RequestId};
 use super::scheduler::DecodeScheduler;
+
+/// How a preemption victim's KV state comes back at re-admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ResumePolicy {
+    /// Per victim: swap iff the modeled host round trip
+    /// ([`HostTransferModel::round_trip_us`] over the blocks it holds) is
+    /// cheaper than re-prefilling its prompt and regenerating its tokens
+    /// ([`recompute_estimate_us`]).
+    #[default]
+    Auto,
+    /// Always park KV on the host-transfer ledger.
+    Swap,
+    /// Always discard KV and recompute after re-admission.
+    Recompute,
+}
+
+impl ResumePolicy {
+    /// CLI-facing name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ResumePolicy::Auto => "auto",
+            ResumePolicy::Swap => "swap",
+            ResumePolicy::Recompute => "recompute",
+        }
+    }
+
+    /// Parse a CLI flag value.
+    pub fn parse(s: &str) -> Option<ResumePolicy> {
+        match s {
+            "auto" => Some(ResumePolicy::Auto),
+            "swap" => Some(ResumePolicy::Swap),
+            "recompute" => Some(ResumePolicy::Recompute),
+            _ => None,
+        }
+    }
+}
+
+/// Priority preemption under KV/slot pressure (DESIGN.md §Overload
+/// survival). Disabled by default: an engine with `enabled = false` is
+/// byte-identical to the pre-preemption engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PreemptionConfig {
+    /// Master switch. Off = strict head-of-line blocking only.
+    pub enabled: bool,
+    /// Most victims evicted per engine step (bounds per-step eviction
+    /// work and the KV churn a single overloaded step can cause).
+    pub max_per_step: usize,
+    /// How victims resume.
+    pub resume: ResumePolicy,
+    /// The modeled host-transfer costs behind swap decisions.
+    pub transfer: HostTransferModel,
+}
+
+impl Default for PreemptionConfig {
+    fn default() -> Self {
+        PreemptionConfig {
+            enabled: false,
+            max_per_step: 1,
+            resume: ResumePolicy::Auto,
+            transfer: HostTransferModel::default(),
+        }
+    }
+}
 
 /// Engine configuration.
 #[derive(Debug, Clone, Default)]
@@ -66,6 +134,12 @@ pub struct EngineConfig {
     pub batcher: BatcherConfig,
     pub blocks: BlockManagerConfig,
     pub admission: AdmissionConfig,
+    /// Priority preemption of running requests. The default (disabled)
+    /// preserves pre-PR behavior exactly.
+    pub preemption: PreemptionConfig,
+    /// Per-class TTFT/TPOT targets for goodput accounting and the
+    /// hopeless-request shed pass. `None` (the default) disables both.
+    pub slo: Option<SloConfig>,
     /// Step composition: chunked prefill + per-step token budget. The
     /// default ([`ScheduleConfig::default`], monolithic/unbounded) is
     /// byte-identical to the pre-composer engine.
@@ -147,13 +221,20 @@ impl EngineBuilder {
         let mut recorder = FlightRecorder::with_capacity(self.cfg.trace_capacity);
         let policy_id = recorder.intern_policy(scheduler.policy_name());
         Ok(Engine {
-            backend: self.backend,
             caps,
             scheduler,
             composer: StepComposer::new(self.cfg.schedule),
             batcher: Batcher::new(self.cfg.batcher.clone()),
             admission: AdmissionController::new(self.cfg.admission.clone()),
             blocks: BlockManager::new(blocks_cfg),
+            preemption: self.cfg.preemption.clone(),
+            slo: self.cfg.slo.clone(),
+            // Cost oracle for the swap-vs-recompute decision and the shed
+            // pass's service lower bound — modeled costs, same anchors as
+            // the sim backend, valid for wall-clock backends too (the
+            // decision only needs relative magnitudes).
+            cost_sim: Simulator::h100(),
+            backend: self.backend,
             metrics,
             recorder,
             policy_id,
@@ -189,6 +270,12 @@ pub struct Engine {
     batcher: Batcher,
     admission: AdmissionController,
     blocks: BlockManager,
+    /// Priority-preemption policy (disabled by default).
+    preemption: PreemptionConfig,
+    /// Goodput SLOs; `None` disables goodput accounting and shedding.
+    slo: Option<SloConfig>,
+    /// Modeled cost oracle for resume decisions and slack bounds.
+    cost_sim: Simulator,
     pub metrics: EngineMetrics,
     /// Flight recorder: fixed-capacity event ring on the engine clock.
     /// Disabled (capacity 0) unless [`EngineConfig::trace_capacity`] set
@@ -325,7 +412,7 @@ impl Engine {
         opts: SubmitOptions,
     ) -> Result<RequestHandle, SubmitError> {
         let (handle, ticket) = handle_pair(req.id, &opts);
-        self.submit_tracked(TrackedRequest { req, ticket })?;
+        self.submit_tracked(TrackedRequest { req, ticket, resume: None })?;
         Ok(handle)
     }
 
@@ -373,6 +460,8 @@ impl Engine {
     fn sync_rejection_counters(&mut self) {
         self.metrics.rejected_backpressure = self.admission.stats.rejected_backpressure;
         self.metrics.rejected_unschedulable = self.admission.stats.rejected_unschedulable;
+        self.metrics.requests_shed = self.admission.stats.shed;
+        self.metrics.admission = self.admission.stats;
     }
 
     /// Open-loop arrival (virtual-clock backends): the request becomes
@@ -402,9 +491,12 @@ impl Engine {
         // admission controller, so its stats stay authoritative); queue
         // capacity is checked when the arrival becomes due (the rejection
         // then arrives as a `StreamEvent::Rejected`).
-        if let Err(err) =
-            self.admission.check_schedulable(&req.prompt, req.max_new_tokens, &self.blocks)
-        {
+        if let Err(err) = self.admission.check_schedulable(
+            &req.prompt,
+            req.max_new_tokens,
+            opts.priority,
+            &self.blocks,
+        ) {
             self.sync_rejection_counters();
             self.recorder.record(
                 self.now_us(),
@@ -418,7 +510,8 @@ impl Engine {
         req.arrival_us = arrival_us;
         let (handle, ticket) = handle_pair(req.id, &opts);
         let pos = self.pending_arrivals.partition_point(|(t, _)| *t <= arrival_us);
-        self.pending_arrivals.insert(pos, (arrival_us, TrackedRequest { req, ticket }));
+        self.pending_arrivals
+            .insert(pos, (arrival_us, TrackedRequest { req, ticket, resume: None }));
         Ok(handle)
     }
 
@@ -586,7 +679,12 @@ impl Engine {
             self.ingest_arrivals();
         }
         self.reap_cancellations()?;
+        self.shed_hopeless();
+        self.fast_forward_to_parked_resume();
         let now = self.now_us();
+        if self.preemption.enabled {
+            self.preempt_for_blocked_head(now)?;
+        }
         let admitted = self.admission.admit(&mut self.batcher, &mut self.blocks, now);
         // Degenerate requests that are already complete on admission
         // (empty prompt + max_new_tokens = 0) appear in neither the
@@ -620,6 +718,21 @@ impl Engine {
                                 prompt_tokens: prompt_len as u32,
                             },
                         );
+                    }
+                }
+                let resumed = self.batcher.running_mut(slot).and_then(|r| r.resumed.take());
+                if let Some(kind) = resumed {
+                    self.metrics.record_resume(kind);
+                    self.recorder
+                        .record(now, EventKind::Resume { request: id, slot: slot as u32, kind });
+                    if matches!(kind, PreemptClass::Swap) {
+                        // The first-token COW trigger has already passed
+                        // for a resumed deep-decode row: fork any tail
+                        // share re-admission armed, before its next write.
+                        // A no-op when nothing is armed.
+                        if self.blocks.cow_fork(id)? {
+                            self.recorder.record(now, EventKind::KvCowFork { request: id });
+                        }
                     }
                 }
                 if self.batcher.running(slot).is_some_and(|r| r.done()) {
@@ -659,6 +772,172 @@ impl Engine {
                 .record(self.now_us(), EventKind::KvEvict { blocks: evicted as u32 });
         }
         result
+    }
+
+    /// Drop queued requests that can no longer produce goodput: negative
+    /// deadline slack (no schedule lands them before their deadline) or —
+    /// for never-admitted requests — negative TTFT slack against their
+    /// class SLO. Gated on [`SloConfig::shed_hopeless`]; a shed request
+    /// finishes `DeadlineExceeded` with a [`EventKind::Shed`] trace
+    /// event. Cold path: the common nothing-hopeless case is one scan.
+    fn shed_hopeless(&mut self) {
+        let Some(slo) = &self.slo else { return };
+        if !slo.shed_hopeless || self.admission.waiting_len() == 0 {
+            return;
+        }
+        let ttft_targets = slo.ttft_us;
+        let now = self.now_us();
+        let sim = &self.cost_sim;
+        let shed = self.admission.shed_where(|t| {
+            // Conservative lower bound on remaining service: full prompt
+            // prefill (the prefix cache can only make it cheaper) plus one
+            // decode step per owed token.
+            let prefill = sim.prefill_us(t.req.prompt.len());
+            if let Some(deadline) = t.ticket.deadline_us {
+                let min_service =
+                    min_service_us(prefill, t.req.max_new_tokens, DECODE_STEP_ESTIMATE_US);
+                if deadline_slack_us(deadline, now, min_service) < 0.0 {
+                    return true;
+                }
+            }
+            // TTFT slack applies only before the first token: a resumed
+            // request already delivered tokens, so its TTFT is settled.
+            t.resume.is_none()
+                && ttft_slack_us(
+                    t.req.arrival_us,
+                    ttft_targets[t.priority().index()],
+                    now,
+                    prefill,
+                ) < 0.0
+        });
+        for t in shed {
+            self.recorder.record(
+                now,
+                EventKind::Shed {
+                    request: t.req.id,
+                    class: t.priority().index() as u8,
+                    waited_us: now.saturating_sub(t.req.arrival_us) as u32,
+                },
+            );
+            t.ticket.cancel.cancel(CancelKind::Deadline);
+            self.finish_unstarted(t, now);
+        }
+        self.sync_rejection_counters();
+    }
+
+    /// When a virtual-clock engine's only runnable work is a swap-parked
+    /// resume, advance the clock to the earlier of its ready time and the
+    /// next open-loop arrival — without this, `run_until_idle` would spin
+    /// forever on a frozen clock (time only advances via step outcomes).
+    fn fast_forward_to_parked_resume(&mut self) {
+        if !self.caps.virtual_clock || !self.batcher.is_empty() {
+            return;
+        }
+        let now = self.now_us();
+        let Some(ready) = self.admission.blocking_resume_ready_us(now) else { return };
+        let target = match self.pending_arrivals.first() {
+            Some(&(next, _)) => ready.min(next),
+            None => ready,
+        };
+        if (self.clock_us as u64) < target {
+            self.clock_us = target as f64;
+        }
+    }
+
+    /// When the queue head of a higher class is blocked on capacity,
+    /// evict running victims of strictly lower classes until the head
+    /// fits, bounded by [`PreemptionConfig::max_per_step`]. Victim order:
+    /// lowest priority class first, then fewest generated tokens (least
+    /// sunk work), then most KV blocks held (frees the most).
+    fn preempt_for_blocked_head(&mut self, now: u64) -> Result<()> {
+        let Some(head_class) = self.admission.blocked_head_class(now) else { return Ok(()) };
+        for _ in 0..self.preemption.max_per_step {
+            let head_fits = {
+                let Some(head) = self.admission.head_request(head_class) else { return Ok(()) };
+                self.batcher.free_slot().is_some()
+                    && self.blocks.can_admit_prompt(&head.req.prompt, head.req.max_new_tokens)
+            };
+            if head_fits {
+                break;
+            }
+            let Some(slot) = self.pick_victim(head_class) else { break };
+            self.preempt_slot(slot, now)?;
+        }
+        Ok(())
+    }
+
+    /// The slot to evict for a blocked head of `head_class`, if any
+    /// running request belongs to a strictly lower class.
+    fn pick_victim(&self, head_class: usize) -> Option<usize> {
+        let mut best: Option<(usize, (usize, usize, usize))> = None;
+        for slot in 0..self.batcher.num_slots() {
+            let Some(r) = self.batcher.running(slot) else { continue };
+            let class = r.ticket.priority.index();
+            if class <= head_class {
+                continue;
+            }
+            let blocks = self.blocks.blocks_held(r.req.id).unwrap_or(0);
+            // Maximized lexicographically: lowest-priority class, then
+            // fewest generated (inverted), then most blocks held.
+            let key = (class, usize::MAX - r.generated.len(), blocks);
+            if best.map_or(true, |(_, k)| key > k) {
+                best = Some((slot, key));
+            }
+        }
+        best.map(|(slot, _)| slot)
+    }
+
+    /// Evict one running request: release its KV blocks and backend row,
+    /// decide how it resumes (swap vs recompute), and re-enqueue it at
+    /// the head of its class carrying a [`ResumeState`]. The request's
+    /// stream sees nothing — already-delivered tokens stand, and the
+    /// resume path never re-sends an index.
+    fn preempt_slot(&mut self, slot: usize, now: u64) -> Result<()> {
+        let mut r = self.batcher.take(slot).context("preempt empty slot")?;
+        let blocks_held = self.blocks.blocks_held(r.req.id).unwrap_or(0);
+        self.blocks.release(r.req.id)?;
+        self.backend.release_slot(slot)?;
+        let kind = match self.preemption.resume {
+            ResumePolicy::Swap => ResumeKind::Swapped {
+                ready_at_us: now + self.preemption.transfer.round_trip_us(blocks_held) as u64,
+            },
+            ResumePolicy::Recompute => ResumeKind::Recompute,
+            ResumePolicy::Auto => {
+                let swap_us = self.preemption.transfer.round_trip_us(blocks_held);
+                let recompute_us =
+                    recompute_estimate_us(&self.cost_sim, r.req.prompt.len(), r.generated.len());
+                if swap_us < recompute_us {
+                    ResumeKind::Swapped { ready_at_us: now + swap_us as u64 }
+                } else {
+                    ResumeKind::Recompute
+                }
+            }
+        };
+        let tag = kind.tag();
+        self.metrics.record_preemption(tag);
+        self.recorder.record(
+            now,
+            EventKind::Preempt {
+                request: r.req.id,
+                slot: slot as u32,
+                blocks: blocks_held as u32,
+                kind: tag,
+            },
+        );
+        let rs = ResumeState {
+            generated: std::mem::take(&mut r.generated),
+            prefilled: r.prefilled,
+            emitted: r.emitted,
+            first_token_us: r.first_token_us,
+            scheduled_us: r.scheduled_us,
+            kind,
+        };
+        self.admission.requeue_preempted(TrackedRequest {
+            req: r.req,
+            ticket: r.ticket,
+            resume: Some(Box::new(rs)),
+        });
+        Ok(())
     }
 
     /// Project the running set into [`SlotView`]s and let the composer
@@ -995,11 +1274,20 @@ impl Engine {
             let r = self.batcher.running_mut(slot).context("decoded slot")?;
             r.generated.push(token);
             r.first_token_us.get_or_insert(now);
-            r.ticket.sink.send(StreamEvent::Token {
-                token,
-                index: r.generated.len() - 1,
-                emitted_us: now,
-            });
+            // Stream only indices not yet delivered: a recompute-resume
+            // regenerates history below `emitted`, and re-sending those
+            // indices would duplicate the stream. In the never-preempted
+            // case `emitted` always trails by exactly the one token just
+            // pushed, so every token streams — unchanged behavior.
+            let streamed = r.generated.len() > r.emitted;
+            if streamed {
+                r.ticket.sink.send(StreamEvent::Token {
+                    token,
+                    index: r.generated.len() - 1,
+                    emitted_us: now,
+                });
+                r.emitted = r.generated.len();
+            }
             let reason = if r.done() {
                 Some(FinishReason::Length)
             } else if r.kv_len() + 1 > max_seq {
@@ -1016,8 +1304,14 @@ impl Engine {
             let fork = r.generated.len() == 1;
             let id = r.req.id;
             if fork {
-                self.recorder
-                    .record(now, EventKind::Lifecycle { request: id, phase: Phase::FirstToken });
+                // A recompute replay re-crosses index 0 with the stream's
+                // first token long since delivered — the fork must still
+                // run (re-admission may have armed a new tail share), but
+                // the FirstToken lifecycle event must not repeat.
+                if streamed {
+                    self.recorder
+                        .record(now, EventKind::Lifecycle { request: id, phase: Phase::FirstToken });
+                }
                 if self.blocks.cow_fork(id)? {
                     self.recorder.record(now, EventKind::KvCowFork { request: id });
                 }
@@ -1052,6 +1346,10 @@ impl Engine {
         let priority = r.ticket.priority;
         if reason.is_natural() {
             self.metrics.record_finished(&timing, priority);
+            if let Some(slo) = &self.slo {
+                let met = slo.met(&timing, priority);
+                self.metrics.record_slo_outcome(met, timing.n_generated);
+            }
             self.recorder.record(
                 now,
                 EventKind::Lifecycle {
@@ -1173,7 +1471,7 @@ impl EngineHandle {
     pub fn submit_with(&self, req: Request, opts: SubmitOptions) -> Result<RequestHandle> {
         let (handle, ticket) = handle_pair(req.id, &opts);
         self.tx
-            .send(EngineMsg::Submit(TrackedRequest { req, ticket }))
+            .send(EngineMsg::Submit(TrackedRequest { req, ticket, resume: None }))
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         Ok(handle)
     }

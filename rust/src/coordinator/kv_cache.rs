@@ -556,6 +556,15 @@ impl BlockManager {
         self.seqs.get(&id).map(|a| a.cached_tokens)
     }
 
+    /// Blocks a sequence currently holds references on (shared prefix +
+    /// COW pair + private). Victim selection's final tie-break: among
+    /// equal-priority, equally-fresh candidates, preempting the largest
+    /// holder frees the most budget per eviction. Also the size of a
+    /// swap transfer for the host-transfer ledger.
+    pub fn blocks_held(&self, id: RequestId) -> Option<usize> {
+        self.seqs.get(&id).map(|a| a.attached.len())
+    }
+
     // ------------------------------------------------------------------
     // Internals
     // ------------------------------------------------------------------

@@ -321,11 +321,64 @@ impl SubmitOptions {
     }
 }
 
+/// How a preempted request's KV state comes back when it is re-admitted.
+///
+/// Chosen at preemption time by the engine's
+/// [`crate::coordinator::ResumePolicy`] and carried through the admission
+/// queue inside [`ResumeState`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResumeKind {
+    /// KV blocks parked on the modeled host-transfer ledger
+    /// (`sim/host_transfer.rs`): the request is ineligible for
+    /// re-admission until the round trip completes at `ready_at_us`, then
+    /// resumes decoding exactly where it stopped.
+    Swapped { ready_at_us: u64 },
+    /// KV blocks discarded: on re-admission the prompt is re-prefilled
+    /// (chunked through the step composer, prefix-cache-assisted) and the
+    /// already-delivered tokens are regenerated position-pure — the
+    /// resumed stream stays byte-identical, already-emitted indices are
+    /// not re-sent.
+    Recompute,
+}
+
+impl ResumeKind {
+    /// The trace-event tag for this kind.
+    pub fn tag(&self) -> crate::obs::PreemptClass {
+        match self {
+            ResumeKind::Swapped { .. } => crate::obs::PreemptClass::Swap,
+            ResumeKind::Recompute => crate::obs::PreemptClass::Recompute,
+        }
+    }
+}
+
+/// Everything a preempted request needs to continue after re-admission.
+/// Boxed on [`TrackedRequest`] so the common never-preempted case pays
+/// one `Option` discriminant, not the full struct.
+#[derive(Debug)]
+pub struct ResumeState {
+    /// Tokens generated before preemption (moved out of the running
+    /// state; keeps its `max_new_tokens` capacity across the round trip).
+    pub(crate) generated: Vec<i32>,
+    /// Prompt tokens whose KV existed at preemption time.
+    pub(crate) prefilled: usize,
+    /// Tokens already delivered to the request's stream — regenerated
+    /// tokens below this index are suppressed so the stream never
+    /// duplicates an index.
+    pub(crate) emitted: usize,
+    /// Original first-token stamp, restored so TTFT stays truthful.
+    pub(crate) first_token_us: Option<u64>,
+    /// Original admission stamp, restored so queue_us stays truthful.
+    pub(crate) scheduled_us: u64,
+    pub(crate) kind: ResumeKind,
+}
+
 /// A request plus its lifecycle ticket (what flows through admission).
 #[derive(Debug)]
 pub struct TrackedRequest {
     pub req: Request,
     pub(crate) ticket: Ticket,
+    /// Present iff this request was preempted and is waiting to resume.
+    pub(crate) resume: Option<Box<ResumeState>>,
 }
 
 impl TrackedRequest {
@@ -337,6 +390,17 @@ impl TrackedRequest {
     /// The tracked request's priority class.
     pub fn priority(&self) -> Priority {
         self.ticket.priority
+    }
+
+    /// If this is a swap-parked resume, the engine-clock instant its
+    /// host transfer completes (it may not re-admit earlier).
+    pub(crate) fn resume_ready_at(&self) -> Option<u64> {
+        match self.resume.as_deref() {
+            Some(ResumeState { kind: ResumeKind::Swapped { ready_at_us }, .. }) => {
+                Some(*ready_at_us)
+            }
+            _ => None,
+        }
     }
 }
 

@@ -11,9 +11,10 @@
 //! bucket-resolution estimates.
 
 use crate::heuristics::tiles::KV_BLOCK;
-use crate::obs::{CounterId, HistId, MetricsRegistry};
+use crate::obs::{CounterId, HistId, MetricsRegistry, PreemptClass};
 use crate::util::stats::{Histogram, Summary};
 
+use super::admission::AdmissionStats;
 use super::kv_cache::PrefixCacheStats;
 use super::lifecycle::{Priority, PRIORITY_CLASSES};
 
@@ -54,6 +55,45 @@ impl RequestTiming {
     }
 }
 
+/// Per-class latency targets defining *goodput*: a naturally-finished
+/// request's tokens count as goodput iff its TTFT and TPOT both landed
+/// inside its class's targets; everything else is throughput the user
+/// stopped waiting for. `None` on `EngineConfig::slo` disables the whole
+/// accounting (and shedding), which is the byte-identity default.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloConfig {
+    /// TTFT targets, µs, indexed by `Priority::index()`.
+    pub ttft_us: [u64; PRIORITY_CLASSES],
+    /// TPOT targets, µs/token, indexed by `Priority::index()`.
+    pub tpot_us: [f64; PRIORITY_CLASSES],
+    /// Shed queued requests whose slack went negative (they can no
+    /// longer produce goodput) instead of letting them burn KV.
+    pub shed_hopeless: bool,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        // Anchored to the simulated H100: an uncontended request sees
+        // ~50–90 µs prefill and ~12–30 µs/token decode, so these targets
+        // are generous in the small and bind only under real overload —
+        // interactive tight, standard medium, batch loose.
+        SloConfig {
+            ttft_us: [5_000, 20_000, 100_000],
+            tpot_us: [100.0, 300.0, 2_000.0],
+            shed_hopeless: true,
+        }
+    }
+}
+
+impl SloConfig {
+    /// Did this finished request land inside its class's SLOs?
+    // pallas-lint: no_alloc
+    pub fn met(&self, timing: &RequestTiming, priority: Priority) -> bool {
+        timing.ttft_us() <= self.ttft_us[priority.index()]
+            && (timing.n_generated < 2 || timing.tpot_us() <= self.tpot_us[priority.index()])
+    }
+}
+
 /// The nblk (KV blocks of 128) bucket edges for keyed occupancy
 /// histograms: the guard region of the paper lives at `nblk <= 4`, so
 /// the ladder is dense there and geometric above.
@@ -88,6 +128,14 @@ struct Instruments {
     prefix_hits: CounterId,
     prefix_lookups: CounterId,
     cow_forks: CounterId,
+    preemptions: CounterId,
+    resumes_swap: CounterId,
+    resumes_recompute: CounterId,
+    shed: CounterId,
+    goodput_tokens: CounterId,
+    /// `fa3_admission_rejected_total{class,reason}`:
+    /// `[class][reason]`, reasons = backpressure, unschedulable, shed.
+    admission_rejected: [[CounterId; 3]; PRIORITY_CLASSES],
     step_us: HistId,
     ttft_us: HistId,
     tpot_us: HistId,
@@ -120,6 +168,25 @@ pub struct EngineMetrics {
     pub rejected_backpressure: usize,
     /// Submissions refused because they can never fit the KV budget.
     pub rejected_unschedulable: usize,
+    /// Running requests evicted for a higher-priority blocked head.
+    pub preemptions: usize,
+    /// Preempted requests re-admitted from the host-transfer ledger.
+    pub resumes_swap: usize,
+    /// Preempted requests re-admitted via re-prefill + regeneration.
+    pub resumes_recompute: usize,
+    /// Queued requests dropped as hopeless by the SLO shed pass.
+    pub requests_shed: usize,
+    /// Tokens of naturally-finished requests that met their class's
+    /// TTFT and TPOT SLOs (`SloConfig::met`) — the numerator of
+    /// [`EngineMetrics::goodput_tok_s`]. Zero when no SLO is configured.
+    pub goodput_tokens: usize,
+    /// Naturally-finished requests that missed an SLO (their tokens
+    /// count toward throughput but not goodput).
+    pub slo_misses: usize,
+    /// Admission-controller counters, mirrored by copy from
+    /// `AdmissionController::stats` (the per-class rejection/shed splits
+    /// feed `fa3_admission_rejected_total{class,reason}`).
+    pub admission: AdmissionStats,
     /// Prefix-cache counters, mirrored by copy from the block manager
     /// every step (hit-rate, blocks saved, tokens whose prefill was
     /// skipped, COW forks — the single source of truth stays
@@ -204,6 +271,42 @@ impl Default for EngineMetrics {
                 "Copy-on-write forks of shared KV blocks.",
                 &[],
             ),
+            preemptions: registry.counter(
+                "fa3_preemptions_total",
+                "Running requests evicted for a higher-priority blocked head.",
+                &[],
+            ),
+            resumes_swap: registry.counter(
+                "fa3_resumes_total",
+                "Preempted requests re-admitted, by resume kind.",
+                &[("kind", "swap")],
+            ),
+            resumes_recompute: registry.counter(
+                "fa3_resumes_total",
+                "Preempted requests re-admitted, by resume kind.",
+                &[("kind", "recompute")],
+            ),
+            shed: registry.counter(
+                "fa3_shed_total",
+                "Queued requests dropped as hopeless (negative SLO slack).",
+                &[],
+            ),
+            goodput_tokens: registry.counter(
+                "fa3_goodput_tokens_total",
+                "Tokens delivered within their class's TTFT/TPOT SLOs.",
+                &[],
+            ),
+            admission_rejected: std::array::from_fn(|c| {
+                let class = Priority::all()[c].name();
+                std::array::from_fn(|r| {
+                    let reason = ["backpressure", "unschedulable", "shed"][r];
+                    registry.counter(
+                        "fa3_admission_rejected_total",
+                        "Submissions refused or shed by admission control, by class and reason.",
+                        &[("class", class), ("reason", reason)],
+                    )
+                })
+            }),
             step_us: registry.histogram(
                 "fa3_step_latency_us",
                 "Engine step latency, µs.",
@@ -248,6 +351,13 @@ impl Default for EngineMetrics {
             deadline_misses: 0,
             rejected_backpressure: 0,
             rejected_unschedulable: 0,
+            preemptions: 0,
+            resumes_swap: 0,
+            resumes_recompute: 0,
+            requests_shed: 0,
+            goodput_tokens: 0,
+            slo_misses: 0,
+            admission: AdmissionStats::default(),
             prefix: PrefixCacheStats::default(),
             step_latencies_us: Vec::new(),
             tpots_us: Vec::new(),
@@ -396,6 +506,38 @@ impl EngineMetrics {
         }
     }
 
+    /// Record one preemption of a running request, by resume kind.
+    pub fn record_preemption(&mut self, kind: PreemptClass) {
+        self.preemptions += 1;
+        // The eventual resume is counted separately at re-admission;
+        // the kind is recorded here only through the trace event.
+        let _ = kind;
+    }
+
+    /// Record one re-admission of a preempted request.
+    pub fn record_resume(&mut self, kind: PreemptClass) {
+        match kind {
+            PreemptClass::Swap => self.resumes_swap += 1,
+            PreemptClass::Recompute => self.resumes_recompute += 1,
+        }
+    }
+
+    /// Record one queued request shed as hopeless.
+    pub fn record_shed(&mut self) {
+        self.requests_shed += 1;
+    }
+
+    /// Record a naturally-finished request's SLO outcome: its tokens
+    /// count as goodput iff it met its class's targets.
+    // pallas-lint: no_alloc
+    pub fn record_slo_outcome(&mut self, met: bool, n_tokens: usize) {
+        if met {
+            self.goodput_tokens += n_tokens;
+        } else {
+            self.slo_misses += 1;
+        }
+    }
+
     /// Step-latency distribution, if any step ran.
     pub fn step_latency(&self) -> Option<Summary> {
         (!self.step_latencies_us.is_empty()).then(|| Summary::of(&self.step_latencies_us))
@@ -450,6 +592,16 @@ impl EngineMetrics {
         self.tokens_generated as f64 / (self.wall_us as f64 / 1e6)
     }
 
+    /// SLO-meeting tokens per second of wall time — the overload
+    /// scheduler's objective (raw tok/s counts tokens nobody was still
+    /// waiting for; goodput doesn't).
+    pub fn goodput_tok_s(&self) -> f64 {
+        if self.wall_us == 0 {
+            return 0.0;
+        }
+        self.goodput_tokens as f64 / (self.wall_us as f64 / 1e6)
+    }
+
     /// Prometheus text exposition of the full registry snapshot. The
     /// public counter fields stay the source of truth; this syncs them
     /// into their registry mirrors (mirror-by-copy) and renders.
@@ -467,6 +619,21 @@ impl EngineMetrics {
         self.registry.set_counter(self.ids.prefix_hits, self.prefix.hits as u64);
         self.registry.set_counter(self.ids.prefix_lookups, self.prefix.lookups as u64);
         self.registry.set_counter(self.ids.cow_forks, self.prefix.cow_forks as u64);
+        self.registry.set_counter(self.ids.preemptions, self.preemptions as u64);
+        self.registry.set_counter(self.ids.resumes_swap, self.resumes_swap as u64);
+        self.registry.set_counter(self.ids.resumes_recompute, self.resumes_recompute as u64);
+        self.registry.set_counter(self.ids.shed, self.requests_shed as u64);
+        self.registry.set_counter(self.ids.goodput_tokens, self.goodput_tokens as u64);
+        for c in 0..PRIORITY_CLASSES {
+            let by_reason = [
+                self.admission.rejected_backpressure_class[c],
+                self.admission.rejected_unschedulable_class[c],
+                self.admission.shed_class[c],
+            ];
+            for (r, &count) in by_reason.iter().enumerate() {
+                self.registry.set_counter(self.ids.admission_rejected[c][r], count as u64);
+            }
+        }
         self.registry.render()
     }
 
@@ -524,7 +691,21 @@ impl EngineMetrics {
                 }
             }
         }
+        if self.preemptions + self.requests_shed > 0 {
+            out.push_str(&format!(
+                "preemptions={} (resumed: swap={} recompute={}) shed={}\n",
+                self.preemptions, self.resumes_swap, self.resumes_recompute, self.requests_shed
+            ));
+        }
         out.push_str(&format!("throughput: {:.1} tok/s\n", self.throughput_tok_s()));
+        if self.goodput_tokens + self.slo_misses > 0 {
+            out.push_str(&format!(
+                "goodput: {} tok ({:.1} tok/s), slo misses={}\n",
+                self.goodput_tokens,
+                self.goodput_tok_s(),
+                self.slo_misses
+            ));
+        }
         if self.prefix.lookups > 0 {
             out.push_str(&format!(
                 "prefix cache: hit-rate {:.1}% ({}/{} blocks), saved {} blocks / {} tokens, \
@@ -725,6 +906,75 @@ mod tests {
         assert!(text.contains("fa3_prefix_cache_hits_total 7\n"), "{text}");
         assert!(text.contains("# TYPE fa3_step_latency_us histogram"), "{text}");
         assert!(text.contains("fa3_step_latency_us_count 1\n"), "{text}");
+    }
+
+    #[test]
+    fn slo_met_checks_both_targets_per_class() {
+        let slo = SloConfig::default();
+        let t = |ttft: u64, total: u64, n: usize| RequestTiming {
+            arrival_us: 0,
+            scheduled_us: 0,
+            first_token_us: ttft,
+            finished_us: ttft + total,
+            n_generated: n,
+        };
+        // Interactive: TTFT ≤ 5 ms and TPOT ≤ 100 µs.
+        assert!(slo.met(&t(4_000, 900, 10), Priority::Interactive));
+        assert!(!slo.met(&t(6_000, 900, 10), Priority::Interactive), "ttft miss");
+        assert!(!slo.met(&t(4_000, 9_000, 10), Priority::Interactive), "tpot miss");
+        // The same timings pass under batch's looser targets.
+        assert!(slo.met(&t(6_000, 9_000, 10), Priority::Batch));
+        // Single-token requests have no TPOT to judge.
+        assert!(slo.met(&t(4_000, 0, 1), Priority::Interactive));
+    }
+
+    #[test]
+    fn goodput_counts_only_slo_met_tokens() {
+        let mut m = EngineMetrics::default();
+        m.wall_us = 1_000_000;
+        m.record_slo_outcome(true, 30);
+        m.record_slo_outcome(false, 50);
+        assert_eq!(m.goodput_tokens, 30);
+        assert_eq!(m.slo_misses, 1);
+        assert!((m.goodput_tok_s() - 30.0).abs() < 1e-9);
+        let rep = m.report();
+        assert!(rep.contains("goodput: 30 tok (30.0 tok/s), slo misses=1"), "{rep}");
+    }
+
+    #[test]
+    fn prometheus_exports_overload_families() {
+        let mut m = EngineMetrics::default();
+        m.record_preemption(PreemptClass::Swap);
+        m.record_resume(PreemptClass::Swap);
+        m.record_resume(PreemptClass::Recompute);
+        m.record_shed();
+        m.record_slo_outcome(true, 17);
+        m.admission.rejected_backpressure_class[0] = 4;
+        m.admission.shed_class[2] = 2;
+        let text = m.to_prometheus();
+        assert!(text.contains("fa3_preemptions_total 1\n"), "{text}");
+        assert!(text.contains("fa3_resumes_total{kind=\"swap\"} 1\n"), "{text}");
+        assert!(text.contains("fa3_resumes_total{kind=\"recompute\"} 1\n"), "{text}");
+        assert!(text.contains("fa3_shed_total 1\n"), "{text}");
+        assert!(text.contains("fa3_goodput_tokens_total 17\n"), "{text}");
+        assert!(
+            text.contains(
+                "fa3_admission_rejected_total{class=\"interactive\",reason=\"backpressure\"} 4\n"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains("fa3_admission_rejected_total{class=\"batch\",reason=\"shed\"} 2\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "fa3_admission_rejected_total{class=\"standard\",reason=\"unschedulable\"} 0\n"
+            ),
+            "{text}"
+        );
+        let rep = m.report();
+        assert!(rep.contains("preemptions=1 (resumed: swap=1 recompute=1) shed=1"), "{rep}");
     }
 
     #[test]

@@ -32,11 +32,15 @@ pub mod scheduler;
 
 pub use admission::{AdmissionConfig, AdmissionController, AdmissionStats, Backpressure, SubmitError};
 pub use batcher::{Batcher, BatcherConfig, StepPlan};
-pub use engine::{Engine, EngineBuilder, EngineConfig, EngineHandle};
+pub use engine::{
+    Engine, EngineBuilder, EngineConfig, EngineHandle, PreemptionConfig, ResumePolicy,
+};
 pub use kv_cache::{
     AdmitGrant, BlockId, BlockManager, BlockManagerConfig, PrefixCacheStats, PrefixProbe,
 };
-pub use lifecycle::{CancelKind, Priority, RequestHandle, StreamEvent, SubmitOptions, WaitOutcome};
-pub use metrics::{EngineMetrics, RequestTiming};
+pub use lifecycle::{
+    CancelKind, Priority, RequestHandle, ResumeKind, StreamEvent, SubmitOptions, WaitOutcome,
+};
+pub use metrics::{EngineMetrics, RequestTiming, SloConfig};
 pub use request::{FinishReason, FinishedRequest, Request, RequestId};
 pub use scheduler::{AttnGeometry, DecodeScheduler, StepDecision};

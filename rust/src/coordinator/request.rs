@@ -1,6 +1,6 @@
 //! Request/response types for the decode engine.
 
-use super::lifecycle::Ticket;
+use super::lifecycle::{ResumeKind, ResumeState, Ticket};
 
 /// Engine-assigned request identifier.
 pub type RequestId = u64;
@@ -79,6 +79,14 @@ pub(crate) struct RunningRequest {
     pub first_token_us: Option<u64>,
     /// µs timestamp when scheduling started.
     pub scheduled_us: u64,
+    /// Tokens already delivered on the stream. Trails `generated.len()`
+    /// only while a recompute-resume regenerates history: indices below
+    /// this are suppressed so the stream never duplicates an index.
+    pub emitted: usize,
+    /// Set when this running state was restored from a preemption
+    /// (consumed by the engine's post-admission pass for Resume events
+    /// and counters).
+    pub resumed: Option<crate::obs::PreemptClass>,
 }
 
 impl RunningRequest {
@@ -98,6 +106,35 @@ impl RunningRequest {
             slot,
             first_token_us: None,
             scheduled_us: now_us,
+            emitted: 0,
+            resumed: None,
+        }
+    }
+
+    /// Restore state carried across a preemption. Swap resumes continue
+    /// exactly where they stopped (their KV is back after the modeled
+    /// host round trip); recompute resumes keep only the stream ledger
+    /// and re-derive KV from scratch — the prompt re-prefills and the
+    /// generated tokens replay position-pure, so the visible stream is
+    /// unchanged. Timing stamps are restored so TTFT/queue_us stay
+    /// truthful across the round trip.
+    pub fn restore(&mut self, rs: ResumeState) {
+        self.emitted = rs.emitted;
+        self.first_token_us = rs.first_token_us;
+        self.scheduled_us = rs.scheduled_us;
+        self.resumed = Some(rs.kind.tag());
+        match rs.kind {
+            ResumeKind::Swapped { .. } => {
+                self.prefilled = rs.prefilled;
+                self.generated = rs.generated;
+            }
+            ResumeKind::Recompute => {
+                self.prefilled = 0;
+                // Keep the buffer (and its max_new capacity); regeneration
+                // refills it with the same position-pure tokens.
+                self.generated = rs.generated;
+                self.generated.clear();
+            }
         }
     }
 

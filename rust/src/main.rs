@@ -26,7 +26,9 @@ use anyhow::Context;
 use fa3_split::backend::{AttnGeometry, ExecutionBackend, PjrtBackend, SimBackend};
 use fa3_split::bench_harness::{regression, table1, ucurve};
 use fa3_split::cluster::{self, ClusterTopology, Fleet, FleetConfig, TpConfig};
-use fa3_split::coordinator::{BatcherConfig, Engine, EngineConfig, StreamEvent, SubmitOptions};
+use fa3_split::coordinator::{
+    BatcherConfig, Engine, EngineConfig, ResumePolicy, SloConfig, StreamEvent, SubmitOptions,
+};
 use fa3_split::evolve::{Search, SearchConfig};
 use fa3_split::heuristics::tiles::DecodeShape;
 use fa3_split::obs;
@@ -182,6 +184,11 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             .opt("max-batch-tokens", "0", "per-step token budget across chunk+decode rows (0 = unbounded; requires --chunk-tokens)")
             .opt("gap-us", "0", "mean Poisson inter-arrival gap, µs (0 = closed loop; requires --backend sim)")
             .flag("mixed", "mixed open-loop trace: 3/4 short interactive + 1/4 long-prompt batch requests (requires --backend sim)")
+            .opt("arrivals", "poisson", "mixed-trace arrival process: poisson | flash-crowd | diurnal (requires --mixed)")
+            .opt("preemption", "off", "priority preemption of running requests: on | off")
+            .opt("resume", "auto", "preempted-request resume path: auto (modeled-cost pick) | swap | recompute")
+            .opt("preempt-budget", "1", "max preemptions per engine step (>= 1)")
+            .flag("slo", "per-class SLO goodput accounting with default TTFT/TPOT targets (sheds hopeless queued requests)")
             .opt("trace-out", "", "write a Chrome trace-event JSON here (open in chrome://tracing or Perfetto)")
             .opt("trace-capacity", "65536", "flight-recorder ring capacity, events (ring keeps the most recent window)")
             .opt("metrics-out", "", "write Prometheus text-format metrics here")
@@ -191,6 +198,31 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let planner = planner_from_args(&registry, &args);
     let mut cfg = EngineConfig::default();
     cfg.schedule = schedule_from_args(&args, 1024, cfg.batcher.max_batch);
+    match args.str("preemption").as_str() {
+        "on" => cfg.preemption.enabled = true,
+        "off" => {}
+        other => {
+            eprintln!("invalid --preemption '{other}' (valid: on, off)");
+            std::process::exit(2);
+        }
+    }
+    let resume_name = args.str("resume");
+    match ResumePolicy::parse(&resume_name) {
+        Some(p) => cfg.preemption.resume = p,
+        None => {
+            eprintln!("invalid --resume '{resume_name}' (valid: auto, swap, recompute)");
+            std::process::exit(2);
+        }
+    }
+    let preempt_budget = args.usize("preempt-budget");
+    if preempt_budget == 0 {
+        eprintln!("invalid --preempt-budget 0 (valid: >= 1)");
+        std::process::exit(2);
+    }
+    cfg.preemption.max_per_step = preempt_budget;
+    if args.has("slo") {
+        cfg.slo = Some(SloConfig::default());
+    }
     // Tracing is opt-in: the recorder stays a capacity-0 no-op unless a
     // trace is actually being written.
     if !args.str("trace-out").is_empty() {
@@ -230,10 +262,26 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         );
         std::process::exit(2);
     }
+    let arrivals = args.str("arrivals");
+    if arrivals != "poisson" && !mixed {
+        eprintln!("--arrivals {arrivals} warps the mixed trace (requires --mixed)");
+        std::process::exit(2);
+    }
     let stream = if mixed {
         // The mixed trace carries its own per-class prompt/output shapes;
         // --tokens/--prefix only apply to the homogeneous workload.
-        ChatWorkload::mixed_open_loop(args.u64("seed"), args.usize("requests"), gap_us)
+        let (seed, n) = (args.u64("seed"), args.usize("requests"));
+        match arrivals.as_str() {
+            "poisson" => ChatWorkload::mixed_open_loop(seed, n, gap_us),
+            "flash-crowd" => ChatWorkload::flash_crowd(seed, n, gap_us, 4),
+            "diurnal" => ChatWorkload::diurnal(seed, n, gap_us, 50_000),
+            other => {
+                eprintln!(
+                    "unknown arrival process '{other}' (known: poisson, flash-crowd, diurnal)"
+                );
+                std::process::exit(2);
+            }
+        }
     } else {
         ChatWorkload {
             seed: args.u64("seed"),
@@ -331,6 +379,8 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
         .opt("max-batch-tokens", "0", "per-step token budget across chunk+decode rows (0 = unbounded; requires --chunk-tokens)")
         .opt("prefix", "0", "shared system-prompt length, tokens, additive to the sampled prompt (0 = off)")
         .opt("prefix-fanout", "4", "requests per distinct system prompt (1 = disjoint)")
+        .opt("preemption", "off", "per-replica priority preemption: on | off")
+        .flag("slo", "per-replica SLO goodput accounting with default TTFT/TPOT targets")
         .opt("trace-out", "", "write a merged per-replica Chrome trace-event JSON here")
         .opt("trace-capacity", "65536", "per-replica flight-recorder ring capacity, events")
         .opt("metrics-out", "", "write per-replica Prometheus text-format metrics here")
@@ -362,12 +412,23 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!("invalid topology: {e}"))?;
 
     let trace_out = args.str("trace-out");
-    let engine_cfg = EngineConfig {
+    let mut engine_cfg = EngineConfig {
         batcher: BatcherConfig::for_max_batch(args.usize("max-batch")),
         schedule: schedule_from_args(&args, 1024, args.usize("max-batch")),
         trace_capacity: if trace_out.is_empty() { 0 } else { args.usize("trace-capacity") },
         ..Default::default()
     };
+    match args.str("preemption").as_str() {
+        "on" => engine_cfg.preemption.enabled = true,
+        "off" => {}
+        other => {
+            eprintln!("invalid --preemption '{other}' (valid: on, off)");
+            std::process::exit(2);
+        }
+    }
+    if args.has("slo") {
+        engine_cfg.slo = Some(SloConfig::default());
+    }
     let mut fleet = Fleet::new(
         topology,
         router,

@@ -228,6 +228,44 @@ fn emit_replica(r: &ReplicaTrace, out: &mut Vec<Json>) {
                     ],
                 ));
             }
+            EventKind::Preempt { request, slot, blocks, kind } => {
+                out.push(instant(
+                    pid,
+                    slot + 1,
+                    ev.t_us,
+                    "preempt",
+                    vec![
+                        ("request", Json::int(request as i64)),
+                        ("blocks", Json::int(blocks as i64)),
+                        ("kind", Json::str(kind.label())),
+                    ],
+                ));
+            }
+            EventKind::Resume { request, slot, kind } => {
+                out.push(instant(
+                    pid,
+                    slot + 1,
+                    ev.t_us,
+                    "resume",
+                    vec![
+                        ("request", Json::int(request as i64)),
+                        ("kind", Json::str(kind.label())),
+                    ],
+                ));
+            }
+            EventKind::Shed { request, class, waited_us } => {
+                out.push(instant(
+                    pid,
+                    0,
+                    ev.t_us,
+                    "shed",
+                    vec![
+                        ("request", Json::int(request as i64)),
+                        ("class", Json::int(class as i64)),
+                        ("waited_us", Json::int(waited_us as i64)),
+                    ],
+                ));
+            }
             // Lifecycle / KvAdmit / KvCowFork / PrefixProbe are consumed
             // through the span reconstruction above.
             _ => {}

@@ -61,6 +61,28 @@ impl WaveKind {
     }
 }
 
+/// How a preempted request's KV comes back: swapped to host (latency
+/// ledger) or recomputed (re-prefill + position-pure regeneration).
+/// Restated here rather than imported (`obs` depends only on `util`);
+/// `coordinator::ResumeKind` maps onto it via `ResumeKind::tag`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptClass {
+    /// KV parked on the modeled host-transfer ledger.
+    Swap,
+    /// KV discarded; prompt re-prefills and tokens regenerate.
+    Recompute,
+}
+
+impl PreemptClass {
+    /// Stable lowercase label used by the exporters and metric labels.
+    pub fn label(self) -> &'static str {
+        match self {
+            PreemptClass::Swap => "swap",
+            PreemptClass::Recompute => "recompute",
+        }
+    }
+}
+
 /// Whether a plan decision was served from the plan cursor's horizon or
 /// forced a planner refill (cache-miss analog; see `planner/cursor.rs`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -147,6 +169,16 @@ pub enum EventKind {
     /// One prefill chunk of `len` prompt tokens starting at offset
     /// `start` was ingested for the request on `slot`.
     ChunkIngested { request: ReqId, slot: u32, start: u32, len: u32 },
+    /// A running request was preempted for a higher-priority blocked
+    /// head: its `blocks` KV blocks were released from `slot` and it was
+    /// re-enqueued at the head of its class.
+    Preempt { request: ReqId, slot: u32, blocks: u32, kind: PreemptClass },
+    /// A preempted request re-entered the running set on `slot`.
+    Resume { request: ReqId, slot: u32, kind: PreemptClass },
+    /// A queued request was shed as hopeless: it could no longer meet
+    /// its deadline/TTFT SLO, so admission dropped it instead of letting
+    /// it burn KV. `waited_us` is how long it sat queued.
+    Shed { request: ReqId, class: u8, waited_us: u32 },
 }
 
 #[cfg(test)]

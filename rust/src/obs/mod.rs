@@ -37,7 +37,9 @@ pub mod ring;
 pub mod span;
 
 pub use chrome::{engine_trace, fleet_trace, fleet_trace_string, ReplicaTrace};
-pub use event::{CursorOutcome, EventKind, Phase, PolicyId, ReqId, StepClass, TraceEvent, WaveKind};
+pub use event::{
+    CursorOutcome, EventKind, Phase, PolicyId, PreemptClass, ReqId, StepClass, TraceEvent, WaveKind,
+};
 pub use recorder::FlightRecorder;
 pub use registry::{CounterId, GaugeId, HistId, MetricsRegistry};
 pub use ring::EventRing;

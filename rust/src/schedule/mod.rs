@@ -48,6 +48,8 @@
 
 mod composer;
 mod policy;
+pub mod slack;
 
 pub use composer::{ChunkSpan, MixedStepPlan, SlotView, StepComposer};
 pub use policy::{ChunkPolicy, ScheduleConfig, TokenBudget};
+pub use slack::{deadline_slack_us, min_service_us, ttft_slack_us};

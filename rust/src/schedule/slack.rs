@@ -1,0 +1,71 @@
+//! Slack arithmetic for deadline-aware goodput scheduling.
+//!
+//! *Slack* is how much schedule margin a request still has: its latest
+//! acceptable finish (absolute deadline, or arrival + SLO) minus the
+//! earliest instant it could possibly finish (now + a modeled lower
+//! bound on remaining service). A request with negative slack is
+//! *hopeless* — no schedule can land it inside its target, so every KV
+//! block and token budget it would consume is goodput-free; the engine
+//! sheds it at admission instead (DESIGN.md §Overload survival).
+//!
+//! Everything here is pure arithmetic over caller-supplied costs: the
+//! `schedule` layer sits below `sim` and `coordinator` in the layering
+//! DAG (it may use only `obs`/`util`), so the engine passes in the
+//! modeled prefill/decode costs rather than this module importing a cost
+//! model.
+
+/// Modeled lower bound on a queued request's remaining service time, µs:
+/// its (remaining) prompt ingestion plus one decode step per output
+/// token still owed. A *lower* bound by construction — contention, chunk
+/// interleaving, and queueing only push the real finish later — so a
+/// request this bound already disqualifies is truly hopeless.
+pub fn min_service_us(prefill_cost_us: f64, remaining_tokens: usize, decode_step_us: f64) -> f64 {
+    prefill_cost_us + remaining_tokens as f64 * decode_step_us
+}
+
+/// Deadline slack, µs: `deadline − (now + min_service)`. Negative means
+/// even the contention-free schedule misses the deadline.
+pub fn deadline_slack_us(deadline_us: u64, now_us: u64, min_service_us: f64) -> f64 {
+    deadline_us as f64 - (now_us as f64 + min_service_us)
+}
+
+/// First-token slack against a TTFT SLO, µs:
+/// `(arrival + slo) − (now + modeled prefill)`. Negative means the
+/// request will miss its TTFT target even if admitted this instant —
+/// and a missed TTFT target means zero goodput for the whole request,
+/// which is what makes shedding on this signal safe.
+pub fn ttft_slack_us(arrival_us: u64, ttft_slo_us: u64, now_us: u64, prefill_cost_us: f64) -> f64 {
+    (arrival_us as f64 + ttft_slo_us as f64) - (now_us as f64 + prefill_cost_us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_service_is_prefill_plus_decode_steps() {
+        assert!((min_service_us(100.0, 10, 12.0) - 220.0).abs() < 1e-9);
+        assert!((min_service_us(50.0, 0, 12.0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_slack_signs() {
+        // Deadline 1000, now 500, needs 400 → 100 µs to spare.
+        assert!((deadline_slack_us(1000, 500, 400.0) - 100.0).abs() < 1e-9);
+        // Needs 600 → hopeless by 100 µs.
+        assert!(deadline_slack_us(1000, 500, 600.0) < 0.0);
+        // Deadline already passed: negative regardless of service cost.
+        assert!(deadline_slack_us(400, 500, 0.0) < 0.0);
+    }
+
+    #[test]
+    fn ttft_slack_signs() {
+        // Arrived at 0 with a 2 ms TTFT SLO; at now=1500 a 300 µs
+        // prefill still lands at 1800 ≤ 2000.
+        assert!(ttft_slack_us(0, 2000, 1500, 300.0) > 0.0);
+        // At now=1900 the same prefill lands at 2200 > 2000: hopeless.
+        assert!(ttft_slack_us(0, 2000, 1900, 300.0) < 0.0);
+        // Later arrival shifts the window right.
+        assert!(ttft_slack_us(1000, 2000, 1900, 300.0) > 0.0);
+    }
+}

@@ -11,17 +11,21 @@
 //! evolutionary search's fitness function.
 //!
 //! Modules:
-//! * [`gpu`]          — device descriptions (H100 SXM5 and variants),
-//! * [`calibration`]  — cost-model constants fitted to the paper's anchors,
-//! * [`kernel_model`] — the launch-latency model itself,
-//! * [`trace`]        — multi-step decode traces and TPOT aggregation.
+//! * [`gpu`]           — device descriptions (H100 SXM5 and variants),
+//! * [`calibration`]   — cost-model constants fitted to the paper's anchors,
+//! * [`kernel_model`]  — the launch-latency model itself,
+//! * [`host_transfer`] — the KV swap-out/swap-in latency ledger and the
+//!                       recompute estimate (preemption resume costs),
+//! * [`trace`]         — multi-step decode traces and TPOT aggregation.
 
 pub mod calibration;
 pub mod gpu;
+pub mod host_transfer;
 pub mod kernel_model;
 pub mod trace;
 
 pub use calibration::Calibration;
 pub use gpu::GpuSpec;
+pub use host_transfer::{recompute_estimate_us, HostTransferModel, DECODE_STEP_ESTIMATE_US};
 pub use kernel_model::{simulate_kernel, KernelTiming, Simulator};
 pub use trace::{DecodeTrace, TraceSummary};

@@ -234,6 +234,60 @@ impl ChatWorkload {
         out
     }
 
+    /// Flash-crowd overload trace: the [`ChatWorkload::mixed_open_loop`]
+    /// stream with the middle third of its requests arriving
+    /// `burst_factor`× faster (inter-arrival gaps divided, offsets
+    /// rebuilt so the stream stays monotone). The prompts, outputs,
+    /// priorities, and ids are byte-identical to the un-warped stream —
+    /// only the clock moves — so overload A/B pairs (preemption on vs
+    /// off, burst vs steady) compare the same work under different
+    /// pressure. `burst_factor = 1` is the identity.
+    pub fn flash_crowd(
+        seed: u64,
+        n_requests: usize,
+        mean_gap_us: u64,
+        burst_factor: u64,
+    ) -> Vec<GeneratedRequest> {
+        assert!(burst_factor >= 1, "burst_factor must be >= 1");
+        let mut reqs = ChatWorkload::mixed_open_loop(seed, n_requests, mean_gap_us);
+        let (start, end) = (n_requests / 3, 2 * n_requests / 3);
+        let mut clock = 0u64;
+        let mut prev_raw = 0u64;
+        for (i, g) in reqs.iter_mut().enumerate() {
+            let gap = g.arrival_offset_us - prev_raw;
+            prev_raw = g.arrival_offset_us;
+            clock += if (start..end).contains(&i) { gap / burst_factor } else { gap };
+            g.arrival_offset_us = clock;
+        }
+        reqs
+    }
+
+    /// Diurnal overload trace: the mixed open-loop stream with its
+    /// arrival rate modulated sinusoidally over `period_us` —
+    /// `rate(t) = 1 + 0.8·sin(2πt/period)`, so the peak runs 1.8× the
+    /// mean rate and the trough 0.2×. Same warp contract as
+    /// [`ChatWorkload::flash_crowd`]: only arrival offsets move.
+    pub fn diurnal(
+        seed: u64,
+        n_requests: usize,
+        mean_gap_us: u64,
+        period_us: u64,
+    ) -> Vec<GeneratedRequest> {
+        assert!(period_us > 0, "period_us must be positive");
+        let mut reqs = ChatWorkload::mixed_open_loop(seed, n_requests, mean_gap_us);
+        let mut clock = 0u64;
+        let mut prev_raw = 0u64;
+        for g in reqs.iter_mut() {
+            let gap = g.arrival_offset_us - prev_raw;
+            prev_raw = g.arrival_offset_us;
+            let phase = 2.0 * std::f64::consts::PI * clock as f64 / period_us as f64;
+            let rate = 1.0 + 0.8 * phase.sin();
+            clock += (gap as f64 / rate) as u64;
+            g.arrival_offset_us = clock;
+        }
+        reqs
+    }
+
     /// Generate the stream (deterministic in `seed`).
     pub fn generate(&self) -> Vec<GeneratedRequest> {
         assert!(self.n_requests > 0 && self.prompt_cap >= 1 && self.vocab >= 2);
@@ -495,6 +549,53 @@ mod tests {
             reqs.iter().position(|g| g.priority == Priority::Batch).unwrap();
         assert!(reqs[..first_batch].iter().all(|g| g.priority == Priority::Interactive));
         assert!(reqs[first_batch..].iter().all(|g| g.priority == Priority::Batch));
+    }
+
+    #[test]
+    fn flash_crowd_compresses_only_the_burst_window() {
+        let base = ChatWorkload::mixed_open_loop(9, 60, 2_000);
+        let crowd = ChatWorkload::flash_crowd(9, 60, 2_000, 4);
+        let again = ChatWorkload::flash_crowd(9, 60, 2_000, 4);
+        // Same work, different clock: prompts/priorities/ids untouched.
+        let mut last = 0u64;
+        for ((b, c), c2) in base.iter().zip(&crowd).zip(&again) {
+            assert_eq!(b.request.prompt, c.request.prompt);
+            assert_eq!(b.priority, c.priority);
+            assert_eq!(b.request.id, c.request.id);
+            assert_eq!(c.arrival_offset_us, c2.arrival_offset_us, "deterministic");
+            assert!(c.arrival_offset_us >= last, "monotone arrivals");
+            last = c.arrival_offset_us;
+        }
+        // The middle third spans ~1/4 the time it took un-warped.
+        let span = |r: &[GeneratedRequest]| {
+            r[39].arrival_offset_us.saturating_sub(r[20].arrival_offset_us)
+        };
+        assert!(span(&crowd) * 3 < span(&base), "burst window must compress");
+        // Identity factor leaves the stream untouched.
+        let id = ChatWorkload::flash_crowd(9, 60, 2_000, 1);
+        for (b, i) in base.iter().zip(&id) {
+            assert_eq!(b.arrival_offset_us, i.arrival_offset_us);
+        }
+    }
+
+    #[test]
+    fn diurnal_peak_is_denser_than_trough() {
+        let reqs = ChatWorkload::diurnal(5, 200, 1_000, 50_000);
+        let again = ChatWorkload::diurnal(5, 200, 1_000, 50_000);
+        let mut last = 0u64;
+        for (g, h) in reqs.iter().zip(&again) {
+            assert_eq!(g.arrival_offset_us, h.arrival_offset_us, "deterministic");
+            assert!(g.arrival_offset_us >= last, "monotone arrivals");
+            last = g.arrival_offset_us;
+        }
+        // Count arrivals in the first half-period (rate > 1, the peak)
+        // vs the second (rate < 1, the trough): the peak must be denser.
+        let peak = reqs.iter().filter(|g| g.arrival_offset_us < 25_000).count();
+        let trough = reqs
+            .iter()
+            .filter(|g| (25_000..50_000).contains(&g.arrival_offset_us))
+            .count();
+        assert!(peak > trough, "peak {peak} <= trough {trough}");
     }
 
     #[test]

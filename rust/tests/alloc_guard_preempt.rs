@@ -1,0 +1,66 @@
+//! The zero-allocation decode guarantee **with preemption enabled**
+//! (DESIGN.md §Overload survival).
+//!
+//! PR 9 added a preemption check to the front of every engine step.
+//! This guard pins down its steady-state cost: with `preemption.enabled
+//! = true` but no blocked higher-class head (the common case — overload
+//! is the exception, not the rule), the check must decide "nothing to
+//! do" without touching the heap. Victim selection, KV release, swap
+//! ledger writes, and re-admission are all cold-path work that only
+//! runs when a preemption actually fires.
+//!
+//! Same single-`#[test]` discipline as `alloc_guard.rs`: the counting
+//! allocator is process-global, so the measured window gets the binary
+//! to itself.
+
+use fa3_split::backend::{AttnGeometry, SimBackend};
+use fa3_split::coordinator::{Engine, EngineConfig, PreemptionConfig, Request};
+use fa3_split::planner::Planner;
+use fa3_split::util::alloc_counter::{self, CountingAllocator};
+
+#[global_allocator]
+static COUNTER: CountingAllocator = CountingAllocator;
+
+#[test]
+fn steady_state_decode_allocates_nothing_with_preemption_enabled() {
+    let cfg = EngineConfig {
+        preemption: PreemptionConfig { enabled: true, ..Default::default() },
+        ..Default::default()
+    };
+    let mut engine = Engine::builder(Box::new(SimBackend::h100()))
+        .planner(Planner::sequence_aware())
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 2048 })
+        .config(cfg)
+        .build()
+        .unwrap();
+    // Same-priority fire-and-forget submissions: nothing ever blocks a
+    // higher class, so the per-step preemption probe runs and declines
+    // on every one of the measured steps.
+    drop(engine.submit(Request::new(1, vec![1; 350], 400)).unwrap());
+    drop(engine.submit(Request::new(2, vec![1; 350], 400)).unwrap());
+
+    for _ in 0..24 {
+        engine.step().unwrap();
+    }
+    assert!(engine.waiting_len() == 0 && engine.running_len() == 2, "warmup should settle");
+    engine.metrics.reserve_capacity(256, 16);
+
+    let before = alloc_counter::total_allocations();
+    for _ in 0..100 {
+        engine.step().unwrap();
+    }
+    let allocated = alloc_counter::total_allocations() - before;
+
+    assert_eq!(
+        allocated, 0,
+        "the enabled-but-idle preemption probe must not allocate \
+         (got {allocated} over 100 steps)"
+    );
+    // The probe never found a blocked head, so nothing was preempted.
+    assert_eq!(engine.metrics.preemptions, 0);
+    assert_eq!(engine.running_len(), 2);
+
+    let done = engine.run_until_idle().unwrap();
+    assert_eq!(done.len(), 2);
+    assert!(done.iter().all(|f| f.tokens.len() == 400));
+}

@@ -357,6 +357,53 @@ fn strict_priority_serves_interactive_first() {
 }
 
 #[test]
+fn queued_request_past_deadline_is_reaped_before_it_ever_runs() {
+    // Regression (PR 9): the step loop reaps expired deadlines BEFORE
+    // the admission pass, so a request whose deadline elapses while it
+    // waits in the queue must finish `DeadlineExceeded` without ever
+    // occupying a slot — even when a slot frees up on the very step the
+    // reap happens. A single long-running request holds the one slot
+    // well past the queued request's deadline; the zeroed
+    // scheduled/first-token timestamps prove the victim never ran.
+    let mut e = engine(1, 256, 64);
+    e.submit(Request::new(0, vec![1; 64], 200)).unwrap();
+    // ~200 decode steps at 12-30 µs each: the slot stays busy for
+    // thousands of µs, far past the 500 µs deadline below.
+    e.submit_with(
+        Request::new(1, vec![2; 32], 8),
+        SubmitOptions::default().deadline_us(500),
+    )
+    .unwrap();
+    let mut done = e.run_until_idle().unwrap();
+    done.sort_by_key(|f| f.id);
+    assert_eq!(done.len(), 2);
+
+    let held = &done[0];
+    assert_eq!(held.reason, FinishReason::Length);
+    assert_eq!(held.tokens.len(), 200, "the slot-holder must be untouched by the reap");
+
+    let reaped = &done[1];
+    assert_eq!(reaped.reason, FinishReason::DeadlineExceeded);
+    assert!(reaped.tokens.is_empty(), "an expired queued request must not generate");
+    assert_eq!(reaped.timing.scheduled_us, 0, "reaped before admit: never scheduled");
+    assert_eq!(reaped.timing.first_token_us, 0, "reaped before admit: no first token");
+    assert!(
+        reaped.timing.finished_us >= 500,
+        "reaped at {} µs, before its own 500 µs deadline",
+        reaped.timing.finished_us
+    );
+    // And it finished long before the slot-holder ever released the
+    // slot — the reap didn't wait for capacity.
+    assert!(
+        reaped.timing.finished_us < held.timing.finished_us,
+        "queued deadline ({} µs) should fire while the slot is still held (released {} µs)",
+        reaped.timing.finished_us,
+        held.timing.finished_us
+    );
+    assert_eq!(e.metrics.deadline_misses, 1);
+}
+
+#[test]
 fn proptest_config_is_replayable() {
     // The lifecycle suites honor FA3_PROPTEST_SEED (documented replay
     // path); just assert the plumbing exists.

@@ -1,0 +1,274 @@
+//! Preemption / swap / resume invariants (DESIGN.md §Overload survival),
+//! property-style:
+//!
+//! 1. **KV blocks never leak or double-free** — under random
+//!    interleavings of submissions, preemptions, swap/recompute resumes,
+//!    cancellations, and steps, block accounting balances at every step
+//!    boundary and a full drain returns every block.
+//! 2. **Resumed streams are byte-identical** — a preempted-then-resumed
+//!    request finishes with exactly the token stream of a never-preempted
+//!    run (position-pure regeneration on the recompute path, parked KV on
+//!    the swap path), and its streaming handle never re-sends or skips an
+//!    index.
+//! 3. **Preemption actually pays** — the deterministic two-request
+//!    scenario's interactive TTFT beats the same scenario with
+//!    preemption off.
+
+use fa3_split::backend::{AttnGeometry, SimBackend};
+use fa3_split::coordinator::{
+    BatcherConfig, BlockManagerConfig, Engine, EngineConfig, FinishReason, PreemptionConfig,
+    Priority, Request, ResumePolicy, SloConfig, StreamEvent, SubmitOptions,
+};
+use fa3_split::planner::Planner;
+use fa3_split::util::prng::Rng;
+use fa3_split::util::proptest_lite::{check, Domain};
+use fa3_split::workload::ChatWorkload;
+
+fn engine(max_batch: usize, num_blocks: usize, preemption: PreemptionConfig) -> Engine {
+    let buckets: Vec<usize> = [1, 2, 4, 8].into_iter().filter(|&b| b <= max_batch).collect();
+    let cfg = EngineConfig {
+        batcher: BatcherConfig { max_batch: *buckets.last().unwrap(), batch_buckets: buckets },
+        blocks: BlockManagerConfig {
+            block_size: 16,
+            num_blocks,
+            max_seq: 1024,
+            ..Default::default()
+        },
+        preemption,
+        ..Default::default()
+    };
+    Engine::builder(Box::new(SimBackend::h100()))
+        .planner(Planner::sequence_aware())
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+        .available_splits(vec![1, 3])
+        .config(cfg)
+        .build()
+        .unwrap()
+}
+
+fn preempt_on(resume: ResumePolicy) -> PreemptionConfig {
+    PreemptionConfig { enabled: true, resume, ..Default::default() }
+}
+
+/// The expected position-pure stream for a prompt of `prompt_len`:
+/// generated token `i` sits at cache position `prompt_len + i`.
+fn expected_tokens(prompt_len: usize, n: usize) -> Vec<i32> {
+    (0..n).map(|i| SimBackend::synthetic_token(prompt_len + i)).collect()
+}
+
+// ----------------------------------------------------------------------
+// 1. Block accounting under random preempt/resume/cancel interleavings.
+// ----------------------------------------------------------------------
+
+#[test]
+fn preemption_interleavings_never_leak_kv_blocks() {
+    check(
+        "preempt-kv-accounting",
+        &[Domain::new(0, 2), Domain::new(8, 48), Domain::new(0, u64::MAX)],
+        |case| {
+            let resume = match case[0] {
+                0 => ResumePolicy::Auto,
+                1 => ResumePolicy::Swap,
+                _ => ResumePolicy::Recompute,
+            };
+            let num_blocks = case[1] as usize * 4;
+            let mut rng = Rng::new(case[2]);
+            let mut e = engine(2, num_blocks, preempt_on(resume));
+            // Mixed-class open-loop overload: interactive arrivals keep
+            // hitting slots held by standard/batch victims, so preempt,
+            // park, resume, and shed all actually engage.
+            let trace = ChatWorkload::mixed_open_loop(rng.next_u64(), 24, 40);
+            let mut handles = Vec::new();
+            for g in trace {
+                let h = e
+                    .submit_at_with(
+                        g.request,
+                        g.arrival_offset_us,
+                        SubmitOptions::default().priority(g.priority),
+                    )
+                    .map_err(|err| format!("submit: {err}"))?;
+                handles.push(h);
+            }
+            let mut steps = 0usize;
+            while !e.is_idle() {
+                e.step().map_err(|err| format!("step: {err:#}"))?;
+                // Random mid-flight cancels race the preemption machinery:
+                // a victim can be cancelled while parked or while running.
+                if rng.range(0, 9) == 0 && !handles.is_empty() {
+                    handles[rng.range(0, handles.len() - 1)].cancel();
+                }
+                let blocks = e.block_manager();
+                blocks.check_invariants().map_err(|err| format!("{err:#}"))?;
+                if blocks.used_blocks() > num_blocks {
+                    return Err(format!(
+                        "{} blocks in use, budget {num_blocks}",
+                        blocks.used_blocks()
+                    ));
+                }
+                steps += 1;
+                if steps > 20_000 {
+                    return Err("engine failed to drain".into());
+                }
+            }
+            let blocks = e.block_manager();
+            blocks.check_invariants().map_err(|err| format!("{err:#}"))?;
+            if blocks.num_seqs() != 0 {
+                return Err(format!("{} sequences leaked after drain", blocks.num_seqs()));
+            }
+            if blocks.free_blocks() != num_blocks {
+                return Err(format!(
+                    "blocks leaked: {} of {num_blocks} free after drain",
+                    blocks.free_blocks()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ----------------------------------------------------------------------
+// 2. Resumed streams byte-identical to never-preempted runs.
+// ----------------------------------------------------------------------
+
+/// Two requests, one slot: a Batch victim decodes until an Interactive
+/// arrival preempts it mid-stream. Returns the engine plus the finished
+/// requests sorted by id (victim first).
+fn preempt_scenario(resume: ResumePolicy) -> (Engine, Vec<fa3_split::coordinator::FinishedRequest>) {
+    let mut e = engine(1, 128, preempt_on(resume));
+    e.submit_at_with(
+        Request::new(0, vec![7; 64], 32),
+        0,
+        SubmitOptions::default().priority(Priority::Batch),
+    )
+    .unwrap();
+    e.submit_at_with(
+        Request::new(1, vec![9; 32], 4),
+        150,
+        SubmitOptions::default().priority(Priority::Interactive),
+    )
+    .unwrap();
+    let mut done = e.run_until_idle().unwrap();
+    done.sort_by_key(|f| f.id);
+    (e, done)
+}
+
+#[test]
+fn resumed_stream_is_byte_identical_per_resume_policy() {
+    // The never-preempted reference: the victim alone.
+    let mut solo = engine(1, 128, PreemptionConfig::default());
+    solo.submit(Request::new(0, vec![7; 64], 32)).unwrap();
+    let reference = solo.run_until_idle().unwrap();
+    assert_eq!(reference.len(), 1);
+    assert_eq!(reference[0].tokens, expected_tokens(64, 32));
+
+    for resume in [ResumePolicy::Swap, ResumePolicy::Recompute, ResumePolicy::Auto] {
+        let (e, done) = preempt_scenario(resume);
+        assert_eq!(e.metrics.preemptions, 1, "{resume:?}: the victim must be preempted");
+        assert_eq!(
+            e.metrics.resumes_swap + e.metrics.resumes_recompute,
+            1,
+            "{resume:?}: the victim must resume"
+        );
+        match resume {
+            ResumePolicy::Swap => assert_eq!(e.metrics.resumes_swap, 1),
+            ResumePolicy::Recompute => assert_eq!(e.metrics.resumes_recompute, 1),
+            ResumePolicy::Auto => {}
+        }
+        assert_eq!(done.len(), 2);
+        let victim = &done[0];
+        assert_eq!(victim.reason, FinishReason::Length, "{resume:?}");
+        assert_eq!(
+            victim.tokens, reference[0].tokens,
+            "{resume:?}: resumed stream diverged from the uncontended run"
+        );
+        // The interloper is untouched by the machinery.
+        assert_eq!(done[1].tokens, expected_tokens(32, 4), "{resume:?}");
+    }
+}
+
+#[test]
+fn resumed_handle_never_resends_or_skips_an_index() {
+    for resume in [ResumePolicy::Swap, ResumePolicy::Recompute] {
+        let mut e = engine(1, 128, preempt_on(resume));
+        let victim = e
+            .submit_at_with(
+                Request::new(0, vec![7; 64], 32),
+                0,
+                SubmitOptions::default().priority(Priority::Batch),
+            )
+            .unwrap();
+        e.submit_at_with(
+            Request::new(1, vec![9; 32], 4),
+            150,
+            SubmitOptions::default().priority(Priority::Interactive),
+        )
+        .unwrap();
+        e.run_until_idle().unwrap();
+        assert_eq!(e.metrics.preemptions, 1, "{resume:?}");
+        let mut indices = Vec::new();
+        while let Some(ev) = victim.try_event() {
+            if let StreamEvent::Token { index, .. } = ev {
+                indices.push(index);
+            }
+        }
+        let want: Vec<usize> = (0..32).collect();
+        assert_eq!(indices, want, "{resume:?}: stream indices must be 0..32 exactly once");
+    }
+}
+
+// ----------------------------------------------------------------------
+// 3. The payoff, and goodput accounting.
+// ----------------------------------------------------------------------
+
+#[test]
+fn preemption_cuts_interactive_ttft_in_the_blocked_head_scenario() {
+    let (_, with) = preempt_scenario(ResumePolicy::Auto);
+    // Same two requests, preemption off: the interactive arrival waits
+    // for the victim's full 32-token decode.
+    let mut off = engine(1, 128, PreemptionConfig::default());
+    off.submit_at_with(
+        Request::new(0, vec![7; 64], 32),
+        0,
+        SubmitOptions::default().priority(Priority::Batch),
+    )
+    .unwrap();
+    off.submit_at_with(
+        Request::new(1, vec![9; 32], 4),
+        150,
+        SubmitOptions::default().priority(Priority::Interactive),
+    )
+    .unwrap();
+    let mut without = off.run_until_idle().unwrap();
+    without.sort_by_key(|f| f.id);
+    assert_eq!(off.metrics.preemptions, 0);
+    let ttft_with = with[1].timing.ttft_us();
+    let ttft_without = without[1].timing.ttft_us();
+    assert!(
+        ttft_with < ttft_without,
+        "interactive TTFT {ttft_with}µs !< refusal-only {ttft_without}µs"
+    );
+}
+
+#[test]
+fn goodput_counts_slo_met_streams_and_misses_the_rest() {
+    // One uncontended request trivially meets the default targets.
+    let mut cfg = EngineConfig {
+        batcher: BatcherConfig::for_max_batch(1),
+        slo: Some(SloConfig::default()),
+        ..Default::default()
+    };
+    cfg.blocks.max_seq = 1024;
+    let mut e = Engine::builder(Box::new(SimBackend::h100()))
+        .planner(Planner::sequence_aware())
+        .geometry(AttnGeometry { h_q: 8, h_kv: 1, d: 128, max_seq: 1024 })
+        .available_splits(vec![1, 3])
+        .config(cfg)
+        .build()
+        .unwrap();
+    e.submit(Request::new(0, vec![7; 64], 16)).unwrap();
+    let done = e.run_until_idle().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(e.metrics.goodput_tokens, 16);
+    assert_eq!(e.metrics.slo_misses, 0);
+    assert!(e.metrics.goodput_tok_s() > 0.0);
+}
