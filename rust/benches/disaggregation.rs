@@ -1,0 +1,444 @@
+//! Bench: disaggregated prefill/decode pools vs colocated serving at an
+//! equal device count.
+//!
+//! The sequence-aware policy pays off almost exclusively in `q_len = 1`
+//! decode steps, so a decode pool that does nothing else concentrates the
+//! paper's `Batch × H_KV < 4` starved regime — prefill interference leaves
+//! the pool entirely, at the price of one modeled KV transfer per request
+//! across the cross-pool interconnect. This harness sweeps tp ∈ {1,2,4,8}
+//! over the fixed 8-KV-head GQA model and, per TP point, runs the same
+//! heavy-decode workload four ways on two devices:
+//!
+//! * colocated (2 unified replicas, session-affinity) × {standard,
+//!   sequence-aware} — advantage read off the pooled end-to-end TPOT,
+//! * disaggregated (1 prefill + 1 decode replica, two-stage router,
+//!   InfiniBand link) × {standard, sequence-aware} — advantage read off
+//!   the decode-pool TPOT (decode-side step time; wire time and prefill
+//!   interference excluded, since those are policy-independent costs).
+//!
+//! Gates (exit 1 on failure):
+//!
+//! * the sequence-aware advantage in the decode pool survives
+//!   disaggregation at every TP point (≥ colocated advantage − 0.01) and
+//!   never shrinks as tp grows,
+//! * a zero-cost link (1P+1D, `--xfer zero`) serves byte-identical token
+//!   streams to a colocated single replica — the handoff machinery itself
+//!   must not perturb generation (position-pure synthetic tokens),
+//! * the two-stage router on a *colocated* topology collapses to plain
+//!   session-affinity (identical assignments and streams),
+//! * every run drains its transfer ledger: handoffs delivered, none
+//!   cancelled, conservation `begun = delivered + cancelled` intact.
+//!
+//! Run: `cargo bench --bench disaggregation [-- --json PATH]`
+//! (`BENCH_disaggregation.json` is regenerated with `--json`.)
+
+use fa3_split::backend::AttnGeometry;
+use fa3_split::cluster::{
+    router, ClusterTopology, Fleet, FleetConfig, FleetReport, Interconnect, ReplicaRole, Router,
+    TpConfig,
+};
+use fa3_split::coordinator::{BatcherConfig, EngineConfig};
+use fa3_split::planner::DeviceProfile;
+use fa3_split::util::json::Json;
+use fa3_split::util::table::{speedup, us, Align, Table};
+use fa3_split::workload::ChatWorkload;
+
+/// Full-model attention geometry (Llama-3.1-70B: 64 Q heads, 8 KV heads).
+const MODEL: AttnGeometry = AttnGeometry { h_q: 64, h_kv: 8, d: 128, max_seq: 1024 };
+const TP_DEGREES: [usize; 4] = [1, 2, 4, 8];
+const N_REQUESTS: usize = 16;
+const SEED: u64 = 0xD15A;
+
+/// Heavy-decode chat pinned to the L_K=385..512 boundary bucket, where
+/// the sequence-aware window opens at low per-shard head count.
+fn heavy_decode(seed: u64, n_requests: usize) -> ChatWorkload {
+    ChatWorkload::boundary_bucket(seed, n_requests, 96)
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig { batcher: BatcherConfig::for_max_batch(4), ..Default::default() }
+}
+
+fn colocated_topology(tp: usize, replicas: usize) -> ClusterTopology {
+    ClusterTopology::builder(MODEL)
+        .tp(TpConfig::new(tp))
+        .replicas(replicas, DeviceProfile::H100_SXM)
+        .build()
+        .expect("valid colocated topology")
+}
+
+fn split_topology(tp: usize, link: Interconnect) -> ClusterTopology {
+    ClusterTopology::builder(MODEL)
+        .tp(TpConfig::new(tp))
+        .pool(1, DeviceProfile::H100_SXM, ReplicaRole::Prefill)
+        .pool(1, DeviceProfile::H100_SXM, ReplicaRole::Decode)
+        .interconnect(link)
+        .build()
+        .expect("valid split topology")
+}
+
+fn run(
+    topology: ClusterTopology,
+    policy: &str,
+    router: Box<dyn Router>,
+    workload: &ChatWorkload,
+) -> FleetReport {
+    let mut fleet = Fleet::new(
+        topology,
+        router,
+        FleetConfig::default().policy(policy).engine(engine_cfg()),
+    )
+    .expect("fleet builds");
+    fleet.run(&workload.generate()).expect("fleet run completes")
+}
+
+/// One TP point: colocated and disaggregated, each under both policies.
+struct SweepRow {
+    tp: usize,
+    shard_h_kv: usize,
+    coloc_std: FleetReport,
+    coloc_seq: FleetReport,
+    disagg_std: FleetReport,
+    disagg_seq: FleetReport,
+}
+
+fn tpot_mean(report: &FleetReport) -> f64 {
+    report.tpot.as_ref().map(|s| s.mean).unwrap_or(0.0)
+}
+
+fn decode_tpot_mean(report: &FleetReport) -> f64 {
+    report.decode_pool_tpot.as_ref().map(|s| s.mean).unwrap_or(0.0)
+}
+
+impl SweepRow {
+    /// Colocated advantage: standard / sequence-aware end-to-end TPOT.
+    fn coloc_advantage(&self) -> f64 {
+        ratio(tpot_mean(&self.coloc_std), tpot_mean(&self.coloc_seq))
+    }
+
+    /// Decode-pool advantage: standard / sequence-aware decode-side TPOT.
+    /// Wire time is excluded — the transfer cost is policy-independent,
+    /// so including it would only dilute the measured planner effect.
+    fn disagg_advantage(&self) -> f64 {
+        ratio(decode_tpot_mean(&self.disagg_std), decode_tpot_mean(&self.disagg_seq))
+    }
+}
+
+fn ratio(a: f64, b: f64) -> f64 {
+    if b > 0.0 {
+        a / b
+    } else {
+        0.0
+    }
+}
+
+fn sweep() -> Vec<SweepRow> {
+    TP_DEGREES
+        .iter()
+        .map(|&tp| {
+            let workload = heavy_decode(SEED, N_REQUESTS);
+            let coloc = |policy: &str| {
+                run(
+                    colocated_topology(tp, 2),
+                    policy,
+                    Box::new(router::SessionAffinity::default()),
+                    &workload,
+                )
+            };
+            let disagg = |policy: &str| {
+                run(
+                    split_topology(tp, Interconnect::INFINIBAND),
+                    policy,
+                    Box::new(router::Disaggregated::default()),
+                    &workload,
+                )
+            };
+            SweepRow {
+                tp,
+                shard_h_kv: MODEL.h_kv / tp,
+                coloc_std: coloc("standard"),
+                coloc_seq: coloc("sequence-aware"),
+                disagg_std: disagg("standard"),
+                disagg_seq: disagg("sequence-aware"),
+            }
+        })
+        .collect()
+}
+
+/// Per-request `(id, reason, tokens)` signature for stream identity.
+fn stream_signature(report: &FleetReport) -> Vec<(u64, String, Vec<i32>)> {
+    let mut sig: Vec<(u64, String, Vec<i32>)> = report
+        .finished
+        .iter()
+        .map(|f| (f.id, format!("{:?}", f.reason), f.tokens.clone()))
+        .collect();
+    sig.sort();
+    sig
+}
+
+/// Zero-cost identity: a free link must leave the token streams exactly
+/// as a colocated single replica produces them.
+struct IdentityCheck {
+    coloc: FleetReport,
+    zero: FleetReport,
+}
+
+fn zero_cost_identity(tp: usize) -> IdentityCheck {
+    let workload = heavy_decode(SEED ^ 0xF, N_REQUESTS);
+    let coloc = run(
+        colocated_topology(tp, 1),
+        "sequence-aware",
+        Box::new(router::RoundRobin::new()),
+        &workload,
+    );
+    let zero = run(
+        split_topology(tp, Interconnect::ZERO),
+        "sequence-aware",
+        Box::new(router::Disaggregated::default()),
+        &workload,
+    );
+    IdentityCheck { coloc, zero }
+}
+
+/// Collapsed pools: the two-stage router on a colocated topology must be
+/// indistinguishable from its decode stage (plain session-affinity).
+struct CollapseCheck {
+    affinity: FleetReport,
+    collapsed: FleetReport,
+}
+
+fn collapsed_pools(tp: usize) -> CollapseCheck {
+    let workload = ChatWorkload { turns_per_session: 2, ..heavy_decode(SEED ^ 0xC0, N_REQUESTS) };
+    let affinity = run(
+        colocated_topology(tp, 2),
+        "sequence-aware",
+        Box::new(router::SessionAffinity::default()),
+        &workload,
+    );
+    let collapsed = run(
+        colocated_topology(tp, 2),
+        "sequence-aware",
+        Box::new(router::Disaggregated::default()),
+        &workload,
+    );
+    CollapseCheck { affinity, collapsed }
+}
+
+/// The acceptance gate (mirrored in tests/disaggregation.rs): the
+/// sequence-aware advantage must survive the move into the decode pool
+/// at every TP point, and the handoff machinery must be invisible in the
+/// token streams and leak-free in the ledger.
+fn verify(rows: &[SweepRow], ident: &IdentityCheck, collapse: &CollapseCheck) -> Result<(), String> {
+    for r in rows {
+        if r.disagg_advantage() < r.coloc_advantage() - 0.01 {
+            return Err(format!(
+                "tp={}: decode-pool advantage {:.3}x fell below colocated {:.3}x",
+                r.tp,
+                r.disagg_advantage(),
+                r.coloc_advantage()
+            ));
+        }
+        for (label, rep) in [
+            ("coloc/std", &r.coloc_std),
+            ("coloc/seq", &r.coloc_seq),
+            ("disagg/std", &r.disagg_std),
+            ("disagg/seq", &r.disagg_seq),
+        ] {
+            if rep.finished.len() != N_REQUESTS || rep.rejected != 0 {
+                return Err(format!(
+                    "tp={} {label}: served {}/{N_REQUESTS}, rejected {}",
+                    r.tp,
+                    rep.finished.len(),
+                    rep.rejected
+                ));
+            }
+        }
+        for rep in [&r.disagg_std, &r.disagg_seq] {
+            if rep.handoffs == 0 {
+                return Err(format!("tp={}: disaggregated run delivered no handoffs", r.tp));
+            }
+            if rep.handoffs_cancelled != 0 {
+                return Err(format!(
+                    "tp={}: {} handoffs cancelled under nominal load",
+                    r.tp, rep.handoffs_cancelled
+                ));
+            }
+            if rep.transferred_blocks == 0 || rep.transfer_wire_us == 0 {
+                return Err(format!(
+                    "tp={}: transfer ledger empty (blocks={}, wire_us={})",
+                    r.tp, rep.transferred_blocks, rep.transfer_wire_us
+                ));
+            }
+        }
+    }
+    for w in rows.windows(2) {
+        if w[1].disagg_advantage() < w[0].disagg_advantage() - 0.01 {
+            return Err(format!(
+                "decode-pool advantage shrank from tp={} ({:.3}x) to tp={} ({:.3}x)",
+                w[0].tp,
+                w[0].disagg_advantage(),
+                w[1].tp,
+                w[1].disagg_advantage()
+            ));
+        }
+    }
+    let tp8 = rows.last().expect("tp=8 row");
+    if tp8.disagg_advantage() < 1.05 {
+        return Err(format!(
+            "tp=8 decode-pool advantage too small: {:.3}x",
+            tp8.disagg_advantage()
+        ));
+    }
+    // Zero-cost link: the handoff must be invisible in the streams.
+    if stream_signature(&ident.coloc) != stream_signature(&ident.zero) {
+        return Err("zero-cost disaggregated streams diverged from colocated".into());
+    }
+    if ident.zero.transfer_wire_us != 0 {
+        return Err(format!(
+            "zero link accrued {}us of wire time",
+            ident.zero.transfer_wire_us
+        ));
+    }
+    // Collapsed pools: two-stage router degenerates to session-affinity.
+    if collapse.affinity.assignments != collapse.collapsed.assignments {
+        return Err("collapsed two-stage router placed requests differently".into());
+    }
+    if stream_signature(&collapse.affinity) != stream_signature(&collapse.collapsed) {
+        return Err("collapsed two-stage router perturbed the token streams".into());
+    }
+    if collapse.collapsed.handoffs != 0 || collapse.collapsed.transferred_blocks != 0 {
+        return Err("colocated topology recorded phantom handoffs".into());
+    }
+    Ok(())
+}
+
+fn row_json(r: &SweepRow) -> Json {
+    Json::obj(vec![
+        ("tp_degree", Json::int(r.tp as i64)),
+        ("shard_h_kv", Json::int(r.shard_h_kv as i64)),
+        ("coloc_standard_tpot_us", Json::num(tpot_mean(&r.coloc_std))),
+        ("coloc_sequence_aware_tpot_us", Json::num(tpot_mean(&r.coloc_seq))),
+        ("coloc_advantage", Json::num(r.coloc_advantage())),
+        ("decode_pool_standard_tpot_us", Json::num(decode_tpot_mean(&r.disagg_std))),
+        ("decode_pool_sequence_aware_tpot_us", Json::num(decode_tpot_mean(&r.disagg_seq))),
+        ("decode_pool_advantage", Json::num(r.disagg_advantage())),
+        ("handoffs_delivered", Json::int(r.disagg_seq.handoffs as i64)),
+        ("transferred_blocks", Json::int(r.disagg_seq.transferred_blocks as i64)),
+        ("transfer_wire_us", Json::int(r.disagg_seq.transfer_wire_us as i64)),
+        (
+            "decode_pool_occupancy_sequence_aware",
+            Json::num(r.disagg_seq.pool_mean_occupancy(ReplicaRole::Decode)),
+        ),
+        (
+            "decode_pool_occupancy_standard",
+            Json::num(r.disagg_std.pool_mean_occupancy(ReplicaRole::Decode)),
+        ),
+    ])
+}
+
+fn print_sweep(rows: &[SweepRow]) {
+    let mut t = Table::new(&[
+        "tp",
+        "H_KV/shard",
+        "Coloc adv",
+        "Pool Std TPOT",
+        "Pool Seq TPOT",
+        "Pool adv",
+        "Handoffs",
+        "Wire us",
+    ])
+    .align(&[
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for r in rows {
+        t.row(&[
+            r.tp.to_string(),
+            r.shard_h_kv.to_string(),
+            speedup(r.coloc_advantage()),
+            us(decode_tpot_mean(&r.disagg_std)),
+            us(decode_tpot_mean(&r.disagg_seq)),
+            speedup(r.disagg_advantage()),
+            r.disagg_seq.handoffs.to_string(),
+            r.disagg_seq.transfer_wire_us.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    let json_path = {
+        let args: Vec<String> = std::env::args().collect();
+        args.iter().position(|a| a == "--json").and_then(|i| args.get(i + 1).cloned())
+    };
+
+    println!(
+        "== Disaggregation: 1P+1D (InfiniBand) vs 2 colocated replicas, 8-KV-head model =="
+    );
+    let rows = sweep();
+    print_sweep(&rows);
+
+    println!("\n== Identity checks ==");
+    let ident = zero_cost_identity(8);
+    let ident_ok = stream_signature(&ident.coloc) == stream_signature(&ident.zero);
+    println!(
+        "zero-cost link vs colocated single replica: {} ({} streams)",
+        if ident_ok { "byte-identical" } else { "DIVERGED" },
+        ident.zero.finished.len()
+    );
+    let collapse = collapsed_pools(8);
+    let collapse_ok = collapse.affinity.assignments == collapse.collapsed.assignments;
+    println!(
+        "collapsed pools vs session-affinity: {} ({} assignments)",
+        if collapse_ok { "identical placement" } else { "DIVERGED" },
+        collapse.collapsed.assignments.len()
+    );
+
+    let verdict = verify(&rows, &ident, &collapse);
+    if let Some(path) = &json_path {
+        let report = Json::obj(vec![
+            ("bench", Json::str("disaggregation")),
+            (
+                "regenerate_with",
+                Json::str("cargo bench --bench disaggregation -- --json BENCH_disaggregation.json"),
+            ),
+            ("measured", Json::Bool(true)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("requests", Json::int(N_REQUESTS as i64)),
+                    ("devices_per_arm", Json::int(2)),
+                    ("interconnect", Json::str("infiniband")),
+                    ("h_kv", Json::int(MODEL.h_kv as i64)),
+                ]),
+            ),
+            ("tp_sweep", Json::arr(rows.iter().map(row_json))),
+            (
+                "identity",
+                Json::obj(vec![
+                    ("zero_cost_streams_byte_identical", Json::Bool(ident_ok)),
+                    ("collapsed_pools_match_session_affinity", Json::Bool(collapse_ok)),
+                ]),
+            ),
+            ("passed", Json::Bool(verdict.is_ok())),
+        ]);
+        std::fs::write(path, report.to_string_pretty()).expect("write json report");
+        println!("\nwrote {path}");
+    }
+    match verdict {
+        Ok(()) => println!(
+            "\nOK: the sequence-aware advantage survives disaggregation and the handoff \
+             machinery is stream-invisible and leak-free"
+        ),
+        Err(msg) => {
+            eprintln!("\nFAILED: {msg}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -62,6 +62,19 @@ pub fn corpus() -> Vec<Fixture> {
             )],
         },
         Fixture {
+            name: "cluster_upward_edge",
+            pass: "layering",
+            expect: "cluster -> analysis",
+            files: &[(
+                // cluster's allow-list grew a `sim` edge for the
+                // disaggregation transfer model; this fixture proves the
+                // widened list still rejects a genuinely upward import.
+                "cluster/bad.rs",
+                "use crate::analysis::report::Finding;\n\
+                 pub fn peek(f: &Finding) -> usize { f.line }\n",
+            )],
+        },
+        Fixture {
             name: "no_alloc_violation",
             pass: "no_alloc",
             expect: "allocating idiom `vec!`",

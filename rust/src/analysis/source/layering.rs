@@ -68,9 +68,12 @@ pub const ALLOWED: &[(&str, &[&str])] = &[
     ("backend", &["heuristics", "obs", "planner", "runtime", "sim", "util"]),
     ("schedule", &["obs", "util"]),
     ("coordinator", &["backend", "heuristics", "obs", "planner", "schedule", "sim", "util"]),
+    // `sim` joined the list for disaggregation: the fleet prices
+    // cross-pool KV handoffs with `sim::HostTransferModel` (via
+    // `Interconnect::transfer_model`), a plain downward edge.
     (
         "cluster",
-        &["backend", "coordinator", "heuristics", "obs", "planner", "util", "workload"],
+        &["backend", "coordinator", "heuristics", "obs", "planner", "sim", "util", "workload"],
     ),
     ("bench_harness", &["evolve", "heuristics", "obs", "planner", "sim", "util", "workload"]),
     ("analysis", &["heuristics", "planner", "util"]),

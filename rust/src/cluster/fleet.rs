@@ -22,17 +22,22 @@
 //! submissions are counted, never retried elsewhere (a retry would make
 //! the A/B benches sensitive to rejection order; explicit is better).
 
+use std::collections::HashMap;
+
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::{EngineConfig, FinishedRequest, RequestId};
+use crate::coordinator::{
+    EngineConfig, FinishedRequest, Request, RequestId, RequestTiming,
+};
 use crate::planner::PolicyRegistry;
 use crate::util::stats::Summary;
 use crate::util::table::{Align, Table};
 use crate::workload::GeneratedRequest;
 
+use super::handoff::{Transfer, TransferLedger};
 use super::replica::Replica;
 use super::router::{ReplicaSnapshot, RouteError, Router};
-use super::topology::ClusterTopology;
+use super::topology::{ClusterTopology, ReplicaRole};
 
 /// Fleet-wide configuration.
 pub struct FleetConfig {
@@ -84,6 +89,12 @@ pub struct Fleet {
     router: Box<dyn Router>,
     policy: String,
     assignments: Vec<Assignment>,
+    /// Prefill-leg placements on a disaggregated fleet (empty when
+    /// colocated; `assignments` then holds the decode-leg placements the
+    /// affinity invariants are checked against).
+    prefill_assignments: Vec<Assignment>,
+    /// Cross-pool KV transfer accounting (empty when colocated).
+    ledger: TransferLedger,
     rejected: usize,
     /// Latest arrival placed so far — `submit_at` enforces monotone
     /// arrivals (an out-of-order arrival would race replicas whose
@@ -107,9 +118,16 @@ impl Fleet {
     /// sharded geometry.
     pub fn new(
         topology: ClusterTopology,
-        router: Box<dyn Router>,
+        mut router: Box<dyn Router>,
         cfg: FleetConfig,
     ) -> Result<Fleet> {
+        if topology.is_disaggregated() && router.two_stage().is_none() {
+            bail!(
+                "router '{}' is single-stage; a disaggregated topology (prefill/decode pools) \
+                 requires the 'disaggregated' two-stage router",
+                router.name()
+            );
+        }
         let shard = topology.shard_geometry();
         let mut replicas = Vec::with_capacity(topology.num_replicas());
         for (index, spec) in topology.replicas().iter().enumerate() {
@@ -127,6 +145,8 @@ impl Fleet {
             router,
             policy: cfg.policy,
             assignments: Vec::new(),
+            prefill_assignments: Vec::new(),
+            ledger: TransferLedger::new(),
             rejected: 0,
             last_arrival_us: 0,
             ran: false,
@@ -154,9 +174,21 @@ impl Fleet {
         &self.policy
     }
 
-    /// Every routing decision made so far, in arrival order.
+    /// Every routing decision made so far, in arrival order. On a
+    /// disaggregated fleet these are the **decode-leg** placements (the
+    /// ones session affinity governs); see [`Fleet::prefill_assignments`].
     pub fn assignments(&self) -> &[Assignment] {
         &self.assignments
+    }
+
+    /// Prefill-leg placements on a disaggregated fleet (empty otherwise).
+    pub fn prefill_assignments(&self) -> &[Assignment] {
+        &self.prefill_assignments
+    }
+
+    /// The cross-pool KV transfer ledger (all-zero when colocated).
+    pub fn ledger(&self) -> &TransferLedger {
+        &self.ledger
     }
 
     /// Route and place one arrival at `arrival_us` on the fleet timeline.
@@ -199,18 +231,8 @@ impl Fleet {
             }
             Err(e @ RouteError::NoReplicas) => return Err(e.into()),
         };
-        // Router contract (DESIGN.md §Cluster invariant 1). `get` rather
-        // than indexing: a misbehaving custom Router returning an
-        // out-of-range replica hits this error path, not a panic.
-        let eligible = self.snaps.get(idx).is_some_and(|s| s.can_ever_admit);
-        if !eligible {
-            bail!(
-                "router '{}' violated its contract: replica {idx} {} request {}",
-                self.router.name(),
-                if idx < self.snaps.len() { "can never admit" } else { "does not exist for" },
-                g.request.id
-            );
-        }
+        // Router contract (DESIGN.md §Cluster invariants 1 and 4).
+        self.check_route_contract(idx, g.request.id)?;
         match self.replicas[idx].submit_at(g.request.clone(), arrival_us) {
             Ok(()) => {
                 self.assignments.push(Assignment {
@@ -225,6 +247,26 @@ impl Fleet {
                 Ok(None)
             }
         }
+    }
+
+    /// Router contract (DESIGN.md §Cluster invariants 1 and 4): the
+    /// routed index must name a member of the snapshot slice the router
+    /// was shown (a pool subset on disaggregated fleets — membership is
+    /// resolved by `ReplicaSnapshot::index`, never by slice position)
+    /// that can ever admit the request. A misbehaving custom `Router`
+    /// hits this error path, not a panic or a silently-wrong placement.
+    fn check_route_contract(&self, idx: usize, request: RequestId) -> Result<()> {
+        let member = self.snaps.iter().find(|s| s.index == idx);
+        let eligible = member.is_some_and(|s| s.can_ever_admit);
+        if !eligible {
+            bail!(
+                "router '{}' violated its contract: replica {idx} {} request {}",
+                self.router.name(),
+                if member.is_some() { "can never admit" } else { "is not a candidate for" },
+                request
+            );
+        }
+        Ok(())
     }
 
     /// Fan a generated stream (time-ordered, as `ChatWorkload::generate`
@@ -257,17 +299,262 @@ impl Fleet {
             bail!("Fleet::run is one-shot (aggregates would mix runs); build a new Fleet");
         }
         self.ran = true;
+        if self.topology.is_disaggregated() {
+            return self.run_disaggregated(stream);
+        }
         // Arrival ordering is enforced per submission by `submit_at`
         // (`ChatWorkload::generate` produces ordered streams by
         // construction).
         for g in stream {
             self.submit_at(g, g.arrival_offset_us)?;
         }
-        let mut finished: Vec<Vec<FinishedRequest>> = Vec::with_capacity(self.replicas.len());
+        let mut finished: Vec<FinishedRequest> = Vec::new();
         for r in &mut self.replicas {
-            finished.push(r.run_until_idle()?);
+            finished.extend(r.run_until_idle()?);
         }
-        Ok(self.report(finished))
+        Ok(self.report(finished, None))
+    }
+
+    /// The role-aware run loop: every request makes a **prefill leg**
+    /// (prompt + first token) in the prefill pool, hands its KV across
+    /// the modeled interconnect, then runs its **decode leg** (the
+    /// remaining tokens) in the decode pool.
+    ///
+    /// ```text
+    /// arrival ──route_prefill──► prefill pool ──finish(t0)──┐
+    ///                                                       │ ledger.begin
+    ///                                     [wire: Interconnect::transfer_us]
+    ///                                                       │
+    ///   decode pool ◄──route (sticky) ◄── continuation arrives at
+    ///       │                             depart + wire
+    ///       │ ledger.deliver + Replica::import_handoff (KV lands as
+    ///       │ evictable prefix blocks; admission revives them, so the
+    ///       │ continuation's prompt is a cache hit, not a re-prefill)
+    ///       ▼
+    ///   merged FinishedRequest (prefill timing front, decode tail)
+    /// ```
+    ///
+    /// A continuation the decode pool refuses cancels its transfer on
+    /// the ledger and counts as rejected — its prefill-leg work is
+    /// dropped from the report (the request was never fully served).
+    /// Requests that finish entirely at prefill (`max_new <= 1`, or cut
+    /// short there) never enter the ledger.
+    fn run_disaggregated(&mut self, stream: &[GeneratedRequest]) -> Result<FleetReport> {
+        struct Pending {
+            session: u64,
+            max_new: usize,
+            prompt: Vec<i32>,
+            replica: usize,
+        }
+        let prefill_pool = self.topology.pool(ReplicaRole::Prefill);
+        let decode_pool = self.topology.pool(ReplicaRole::Decode);
+        let ic = self.topology.interconnect();
+
+        // Phase 1: route and place every prefill leg in arrival order.
+        let mut pending: HashMap<RequestId, Pending> = HashMap::new();
+        for g in stream {
+            let arrival_us = g.arrival_offset_us;
+            if arrival_us < self.last_arrival_us {
+                bail!(
+                    "arrivals must be time-ordered: request {} at {arrival_us}µs after one at \
+                     {}µs",
+                    g.request.id,
+                    self.last_arrival_us
+                );
+            }
+            self.last_arrival_us = arrival_us;
+            for r in &mut self.replicas {
+                r.advance_to(arrival_us)?;
+            }
+            // The prefill leg runs the prompt and emits the first token
+            // (`max_new.min(1)`: a zero-token request never decodes, so
+            // it must not grow a token the colocated fleet wouldn't).
+            let pre = Request::new(
+                g.request.id,
+                g.request.prompt.clone(),
+                g.request.max_new_tokens.min(1),
+            );
+            self.snaps.clear();
+            for &i in &prefill_pool {
+                self.snaps.push(self.replicas[i].snapshot_for(&pre));
+            }
+            let routed = self
+                .router
+                .two_stage()
+                .expect("Fleet::new validated a two-stage router")
+                .route_prefill(&pre, g.session, &self.snaps);
+            let idx = match routed {
+                Ok(idx) => idx,
+                Err(RouteError::Unroutable { .. }) => {
+                    self.rejected += 1;
+                    continue;
+                }
+                Err(e @ RouteError::NoReplicas) => return Err(e.into()),
+            };
+            self.check_route_contract(idx, g.request.id)?;
+            match self.replicas[idx].submit_at(pre, arrival_us) {
+                Ok(()) => {
+                    self.prefill_assignments.push(Assignment {
+                        request: g.request.id,
+                        session: g.session,
+                        replica: idx,
+                    });
+                    pending.insert(
+                        g.request.id,
+                        Pending {
+                            session: g.session,
+                            max_new: g.request.max_new_tokens,
+                            prompt: g.request.prompt.clone(),
+                            replica: idx,
+                        },
+                    );
+                }
+                Err(_refused) => {
+                    self.rejected += 1;
+                }
+            }
+        }
+
+        // Phase 2: drain the prefill pool.
+        let mut prefill_fins: Vec<FinishedRequest> = Vec::new();
+        for &i in &prefill_pool {
+            prefill_fins.extend(self.replicas[i].run_until_idle()?);
+        }
+
+        // Phase 3: open a transfer per continuation-bound finish.
+        // Requests that are already complete (nothing left to decode, or
+        // cut short at prefill) are final as-is.
+        struct Handoff {
+            fin: FinishedRequest,
+            session: u64,
+            max_new: usize,
+            prompt: Vec<i32>,
+            transfer: Transfer,
+        }
+        let mut merged: Vec<FinishedRequest> = Vec::new();
+        let mut handoffs: Vec<Handoff> = Vec::new();
+        for fin in prefill_fins {
+            let Some(p) = pending.remove(&fin.id) else {
+                bail!("prefill pool finished unrouted request {}", fin.id);
+            };
+            if !fin.reason.is_natural() || p.max_new <= 1 {
+                merged.push(fin);
+                continue;
+            }
+            let bs =
+                self.replicas[p.replica].engine().block_manager().config().block_size;
+            let blocks = (fin.prompt_len + fin.tokens.len()).div_ceil(bs);
+            let depart_us = fin.timing.finished_us;
+            let transfer = Transfer {
+                request: fin.id,
+                from: p.replica,
+                blocks,
+                depart_us,
+                arrive_us: depart_us + ic.transfer_us(blocks),
+            };
+            self.ledger.begin(transfer)?;
+            handoffs.push(Handoff {
+                fin,
+                session: p.session,
+                max_new: p.max_new,
+                prompt: p.prompt,
+                transfer,
+            });
+        }
+
+        // Phase 4: land continuations on the decode pool in wire-arrival
+        // order (ties broken by request id for determinism).
+        handoffs.sort_by_key(|h| (h.transfer.arrive_us, h.fin.id));
+        let mut continued: Vec<Handoff> = Vec::new();
+        for h in handoffs {
+            for &i in &decode_pool {
+                self.replicas[i].advance_to(h.transfer.arrive_us)?;
+            }
+            // Continuation = original prompt ++ the prefill-leg token;
+            // the sim backend's position-pure tokens make its output the
+            // exact tail of the colocated stream.
+            let mut cont_prompt = h.prompt.clone();
+            cont_prompt.extend_from_slice(&h.fin.tokens);
+            let cont = Request::new(h.fin.id, cont_prompt.clone(), h.max_new - 1);
+            self.snaps.clear();
+            for &i in &decode_pool {
+                self.snaps.push(self.replicas[i].snapshot_for(&cont));
+            }
+            let routed = self.router.route(&cont, h.session, &self.snaps);
+            let idx = match routed {
+                Ok(idx) => idx,
+                Err(RouteError::Unroutable { .. }) => {
+                    // The decode pool refused the continuation: the
+                    // blocks crossed the wire for nothing.
+                    self.ledger.cancel(h.fin.id)?;
+                    self.rejected += 1;
+                    continue;
+                }
+                Err(e @ RouteError::NoReplicas) => return Err(e.into()),
+            };
+            self.check_route_contract(idx, h.fin.id)?;
+            self.ledger.deliver(h.fin.id)?;
+            let wire_us = h.transfer.arrive_us - h.transfer.depart_us;
+            self.replicas[idx].import_handoff(h.fin.id, &cont_prompt, wire_us);
+            match self.replicas[idx].submit_at(cont, h.transfer.arrive_us) {
+                Ok(()) => {
+                    self.assignments.push(Assignment {
+                        request: h.fin.id,
+                        session: h.session,
+                        replica: idx,
+                    });
+                    continued.push(h);
+                }
+                Err(_refused) => {
+                    // Delivered but refused at admission: the transfer
+                    // stays closed (the import is just warm cache) and
+                    // the request counts as rejected.
+                    self.rejected += 1;
+                }
+            }
+        }
+
+        // Phase 5: drain the decode pool and merge each continuation
+        // with its prefill leg: prefill-side arrival/TTFT, decode-side
+        // finish, token streams concatenated.
+        let mut decode_fins: HashMap<RequestId, FinishedRequest> = HashMap::new();
+        for &i in &decode_pool {
+            for fin in self.replicas[i].run_until_idle()? {
+                decode_fins.insert(fin.id, fin);
+            }
+        }
+        let mut decode_tpots: Vec<f64> = Vec::new();
+        for h in continued {
+            let Some(dec) = decode_fins.remove(&h.fin.id) else {
+                bail!("decode pool lost admitted continuation {}", h.fin.id);
+            };
+            if dec.reason.is_natural() && dec.timing.n_generated >= 2 {
+                decode_tpots.push(dec.timing.tpot_us());
+            }
+            let mut tokens = h.fin.tokens;
+            tokens.extend_from_slice(&dec.tokens);
+            merged.push(FinishedRequest {
+                id: h.fin.id,
+                prompt_len: h.fin.prompt_len,
+                tokens,
+                reason: dec.reason,
+                priority: dec.priority,
+                timing: RequestTiming {
+                    arrival_us: h.fin.timing.arrival_us,
+                    scheduled_us: h.fin.timing.scheduled_us,
+                    first_token_us: h.fin.timing.first_token_us,
+                    finished_us: dec.timing.finished_us,
+                    n_generated: h.fin.timing.n_generated + dec.timing.n_generated,
+                },
+            });
+        }
+        merged.sort_by_key(|f| (f.timing.arrival_us, f.id));
+        self.ledger.check_invariants()?;
+        if !self.ledger.drained() {
+            bail!("{} KV transfers still in flight after the run", self.ledger.in_flight());
+        }
+        let decode_pool_tpot = (!decode_tpots.is_empty()).then(|| Summary::of(&decode_tpots));
+        Ok(self.report(merged, decode_pool_tpot))
     }
 
     /// Merge every replica's flight-recorder ring into one Chrome trace
@@ -300,23 +587,28 @@ impl Fleet {
         out
     }
 
-    fn report(&self, finished: Vec<Vec<FinishedRequest>>) -> FleetReport {
+    fn report(
+        &self,
+        finished: Vec<FinishedRequest>,
+        decode_pool_tpot: Option<Summary>,
+    ) -> FleetReport {
         let mut replica_reports = Vec::with_capacity(self.replicas.len());
         let mut ttfts: Vec<f64> = Vec::new();
         let mut tpots: Vec<f64> = Vec::new();
-        for (r, fin) in self.replicas.iter().zip(&finished) {
-            let m = r.metrics();
-            for f in fin {
-                if f.reason.is_natural() {
-                    ttfts.push(f.timing.ttft_us() as f64);
-                    if f.timing.n_generated >= 2 {
-                        tpots.push(f.timing.tpot_us());
-                    }
+        for f in &finished {
+            if f.reason.is_natural() {
+                ttfts.push(f.timing.ttft_us() as f64);
+                if f.timing.n_generated >= 2 {
+                    tpots.push(f.timing.tpot_us());
                 }
             }
+        }
+        for r in &self.replicas {
+            let m = r.metrics();
             replica_reports.push(ReplicaReport {
                 index: r.index(),
                 device: r.device_name(),
+                role: r.role(),
                 requests_assigned: r.assigned(),
                 requests_finished: m.requests_finished,
                 tokens_generated: m.tokens_generated,
@@ -347,11 +639,18 @@ impl Fleet {
             tp_degree: self.topology.tp().degree,
             shard_h_q: self.topology.shard_geometry().h_q,
             shard_h_kv: self.topology.shard_geometry().h_kv,
+            interconnect: self.topology.interconnect().name,
             replicas: replica_reports,
             assignments: self.assignments.clone(),
-            finished: finished.into_iter().flatten().collect(),
+            prefill_assignments: self.prefill_assignments.clone(),
+            finished,
             ttft: (!ttfts.is_empty()).then(|| Summary::of(&ttfts)),
             tpot: (!tpots.is_empty()).then(|| Summary::of(&tpots)),
+            decode_pool_tpot,
+            handoffs: self.ledger.delivered(),
+            handoffs_cancelled: self.ledger.cancelled(),
+            transferred_blocks: self.ledger.blocks_delivered(),
+            transfer_wire_us: self.ledger.total_wire_us(),
             total_tokens,
             goodput_tokens,
             wall_us,
@@ -367,6 +666,8 @@ impl Fleet {
 pub struct ReplicaReport {
     pub index: usize,
     pub device: &'static str,
+    /// Pool membership (`Unified` on colocated fleets).
+    pub role: ReplicaRole,
     pub requests_assigned: usize,
     pub requests_finished: usize,
     pub tokens_generated: usize,
@@ -403,12 +704,35 @@ pub struct FleetReport {
     pub tp_degree: usize,
     pub shard_h_q: usize,
     pub shard_h_kv: usize,
+    /// The modeled cross-pool link's preset name (report metadata even
+    /// when colocated, where no transfer ever uses it).
+    pub interconnect: &'static str,
     pub replicas: Vec<ReplicaReport>,
+    /// Decode-leg placements on a disaggregated fleet (all placements
+    /// when colocated) — the list affinity invariants are checked on.
     pub assignments: Vec<Assignment>,
+    /// Prefill-leg placements (empty when colocated).
+    pub prefill_assignments: Vec<Assignment>,
     pub finished: Vec<FinishedRequest>,
-    /// Pooled across replicas, naturally-finished requests only.
+    /// Pooled across replicas, naturally-finished requests only. On a
+    /// disaggregated fleet these are **end-to-end** merged-request
+    /// numbers: TPOT spans the wire gap between the pools, so it answers
+    /// "what did the client see", not "how fast did decode step".
     pub ttft: Option<Summary>,
     pub tpot: Option<Summary>,
+    /// Decode-side-only TPOT of handed-off continuations (`None` when
+    /// colocated): inter-token time inside the decode pool, wire and
+    /// prefill interference excluded — the paper's decode-step regime,
+    /// and the quantity the disaggregation bench gates on.
+    pub decode_pool_tpot: Option<Summary>,
+    /// KV handoffs delivered to the decode pool (0 when colocated).
+    pub handoffs: usize,
+    /// KV handoffs whose continuation the decode pool refused.
+    pub handoffs_cancelled: usize,
+    /// KV blocks delivered across the interconnect.
+    pub transferred_blocks: usize,
+    /// Total one-way wire time paid by closed transfers, µs.
+    pub transfer_wire_us: u64,
     pub total_tokens: usize,
     /// SLO-meeting tokens summed over replicas (zero without SLO config).
     pub goodput_tokens: usize,
@@ -433,21 +757,78 @@ impl FleetReport {
     }
 }
 
+/// Coefficient of variation (std/mean); 0 for degenerate inputs.
+fn coeff_of_variation(values: &[f64]) -> f64 {
+    let n = values.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mean = values.iter().sum::<f64>() / n as f64;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = values.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / n as f64;
+    var.sqrt() / mean
+}
+
 impl FleetReport {
+    /// Whether this fleet ran with prefill/decode pools.
+    pub fn is_disaggregated(&self) -> bool {
+        self.replicas.iter().any(|r| r.role != ReplicaRole::Unified)
+    }
+
+    /// Replica slices belonging to a pool, in index order.
+    pub fn pool(&self, role: ReplicaRole) -> Vec<&ReplicaReport> {
+        self.replicas.iter().filter(|r| r.role == role).collect()
+    }
+
     /// Load-imbalance coefficient: coefficient of variation (std/mean) of
     /// per-replica generated tokens. 0 = perfectly balanced.
     pub fn imbalance(&self) -> f64 {
-        let n = self.replicas.len();
-        if n < 2 {
+        let tokens: Vec<f64> =
+            self.replicas.iter().map(|r| r.tokens_generated as f64).collect();
+        coeff_of_variation(&tokens)
+    }
+
+    /// Imbalance within one pool. Comparing a pool's number against the
+    /// fleet-wide one separates "the router balanced each pool" from
+    /// "the pools happen to be differently sized" — cross-pool token
+    /// asymmetry is *structural* in disaggregation (prefill legs emit 1
+    /// token each), not a routing defect.
+    pub fn pool_imbalance(&self, role: ReplicaRole) -> f64 {
+        let tokens: Vec<f64> =
+            self.pool(role).iter().map(|r| r.tokens_generated as f64).collect();
+        coeff_of_variation(&tokens)
+    }
+
+    /// Tokens generated inside one pool.
+    pub fn pool_tokens(&self, role: ReplicaRole) -> usize {
+        self.pool(role).iter().map(|r| r.tokens_generated).sum()
+    }
+
+    /// SLO-meeting tokens inside one pool (0 without SLO config).
+    pub fn pool_goodput_tokens(&self, role: ReplicaRole) -> usize {
+        self.pool(role).iter().map(|r| r.goodput_tokens).sum()
+    }
+
+    /// Sample-weighted mean decode occupancy inside one pool (the same
+    /// pooling discipline as [`FleetReport::mean_occupancy`]). On a
+    /// disaggregated fleet the decode pool's number is the paper's
+    /// quantity: every step there is a `q_len = 1` starved-regime step,
+    /// undiluted by chunked-prefill waves.
+    pub fn pool_mean_occupancy(&self, role: ReplicaRole) -> f64 {
+        let mut weighted = 0.0;
+        let mut n = 0usize;
+        for r in self.pool(role) {
+            if let Some(occ) = r.mean_occupancy {
+                weighted += occ * r.decode_occupancy_samples as f64;
+                n += r.decode_occupancy_samples;
+            }
+        }
+        if n == 0 {
             return 0.0;
         }
-        let tokens: Vec<f64> = self.replicas.iter().map(|r| r.tokens_generated as f64).collect();
-        let mean = tokens.iter().sum::<f64>() / n as f64;
-        if mean == 0.0 {
-            return 0.0;
-        }
-        let var = tokens.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / n as f64;
-        var.sqrt() / mean
+        weighted / n as f64
     }
 
     /// Sessions whose requests landed on more than one replica (must be 0
@@ -548,6 +929,32 @@ impl FleetReport {
             self.rejected,
             self.rejected_backpressure()
         ));
+        // Pool + handoff lines only on disaggregated fleets: colocated
+        // rendering stays byte-identical to the pre-pool format.
+        if self.is_disaggregated() {
+            out.push_str(&format!(
+                "pools: prefill {} replica(s) (occupancy {:.1}%, imbalance {:.3}), decode {} \
+                 replica(s) (occupancy {:.1}%, imbalance {:.3}), interconnect {}\n",
+                self.pool(ReplicaRole::Prefill).len(),
+                self.pool_mean_occupancy(ReplicaRole::Prefill) * 100.0,
+                self.pool_imbalance(ReplicaRole::Prefill),
+                self.pool(ReplicaRole::Decode).len(),
+                self.pool_mean_occupancy(ReplicaRole::Decode) * 100.0,
+                self.pool_imbalance(ReplicaRole::Decode),
+                self.interconnect
+            ));
+            out.push_str(&format!(
+                "handoffs: {} delivered (+{} cancelled), {} blocks, wire {}µs total\n",
+                self.handoffs, self.handoffs_cancelled, self.transferred_blocks,
+                self.transfer_wire_us
+            ));
+            if let Some(s) = &self.decode_pool_tpot {
+                out.push_str(&format!(
+                    "decode-pool TPOT µs: mean={:.1} p50={:.1} p99={:.1}\n",
+                    s.mean, s.p50, s.p99
+                ));
+            }
+        }
         // Overload-survival line only when something happened: keeps the
         // default (no-SLO, no-preemption) rendering byte-identical.
         let preemptions: usize = self.replicas.iter().map(|r| r.preemptions).sum();
@@ -638,10 +1045,12 @@ mod tests {
             tp_degree: 1,
             shard_h_q: 8,
             shard_h_kv: 1,
+            interconnect: "nvlink",
             replicas: vec![
                 ReplicaReport {
                     index: 0,
                     device: "a",
+                    role: ReplicaRole::Unified,
                     requests_assigned: 1,
                     requests_finished: 1,
                     tokens_generated: 100,
@@ -659,6 +1068,7 @@ mod tests {
                 ReplicaReport {
                     index: 1,
                     device: "a",
+                    role: ReplicaRole::Unified,
                     requests_assigned: 1,
                     requests_finished: 1,
                     tokens_generated: 100,
@@ -675,9 +1085,15 @@ mod tests {
                 },
             ],
             assignments: Vec::new(),
+            prefill_assignments: Vec::new(),
             finished: Vec::new(),
             ttft: None,
             tpot: None,
+            decode_pool_tpot: None,
+            handoffs: 0,
+            handoffs_cancelled: 0,
+            transferred_blocks: 0,
+            transfer_wire_us: 0,
             total_tokens: 200,
             goodput_tokens: 0,
             wall_us: 0,
@@ -701,6 +1117,73 @@ mod tests {
         ];
         assert_eq!(pingpong.affinity_violations(), 1);
         assert_eq!(pingpong.rejected_backpressure(), 0);
+    }
+
+    #[test]
+    fn disaggregated_run_hands_off_and_merges() {
+        use crate::cluster::router::Disaggregated;
+        use crate::cluster::topology::Interconnect;
+        let topo = ClusterTopology::builder(AttnGeometry {
+            h_q: 64,
+            h_kv: 8,
+            d: 128,
+            max_seq: 1024,
+        })
+        .tp(TpConfig::new(8))
+        .pool(1, DeviceProfile::H100_SXM, ReplicaRole::Prefill)
+        .pool(2, DeviceProfile::H100_SXM, ReplicaRole::Decode)
+        .interconnect(Interconnect::NVLINK)
+        .build()
+        .unwrap();
+        let mut f =
+            Fleet::new(topo, Box::new(Disaggregated::new()), FleetConfig::default()).unwrap();
+        let stream = ChatWorkload { n_requests: 6, ..Default::default() }.generate();
+        let report = f.run(&stream).unwrap();
+        assert_eq!(report.finished.len(), 6);
+        assert_eq!(report.rejected, 0);
+        assert!(report.is_disaggregated());
+        // Every multi-token request crossed the wire exactly once.
+        assert!(report.handoffs > 0 && report.handoffs <= 6, "{}", report.handoffs);
+        assert_eq!(report.handoffs_cancelled, 0);
+        assert!(report.transferred_blocks > 0);
+        assert!(report.transfer_wire_us > 0, "NVLink still costs base latency");
+        assert!(f.ledger().drained());
+        f.ledger().check_invariants().unwrap();
+        // Legs land in their own pools.
+        assert_eq!(report.prefill_assignments.len(), 6);
+        assert!(report.prefill_assignments.iter().all(|a| a.replica == 0));
+        assert_eq!(report.assignments.len(), report.handoffs);
+        assert!(report.assignments.iter().all(|a| [1, 2].contains(&a.replica)));
+        // Merged requests carry their full budget of tokens, and the
+        // decode-side TPOT summary exists for multi-token continuations.
+        for (fin, g) in report.finished.iter().zip(&stream) {
+            assert_eq!(fin.id, g.request.id);
+            assert_eq!(fin.tokens.len(), g.request.max_new_tokens);
+            assert_eq!(fin.prompt_len, g.request.prompt.len());
+        }
+        assert!(report.decode_pool_tpot.is_some());
+        assert!(report.pool_tokens(ReplicaRole::Decode) > report.pool_tokens(ReplicaRole::Prefill));
+        let rendered = report.render();
+        assert!(rendered.contains("pools: prefill 1 replica(s)"), "{rendered}");
+        assert!(rendered.contains("handoffs:"), "{rendered}");
+    }
+
+    #[test]
+    fn disaggregated_topology_rejects_single_stage_routers() {
+        let topo = ClusterTopology::builder(AttnGeometry {
+            h_q: 64,
+            h_kv: 8,
+            d: 128,
+            max_seq: 1024,
+        })
+        .tp(TpConfig::new(8))
+        .pool(1, DeviceProfile::H100_SXM, ReplicaRole::Prefill)
+        .pool(1, DeviceProfile::H100_SXM, ReplicaRole::Decode)
+        .build()
+        .unwrap();
+        let err =
+            Fleet::new(topo, Box::new(SessionAffinity::new()), FleetConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("single-stage"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Cross-pool KV handoff accounting for disaggregated fleets.
+//!
+//! When a prefill replica finishes a request's prompt pass, its KV blocks
+//! must reach a decode replica over the fleet's modeled interconnect
+//! ([`super::topology::Interconnect`]). Nothing moves real bytes — like
+//! `sim/host_transfer.rs`, the link is a latency oracle on the virtual
+//! clock — but the *accounting* is real and must balance: every block
+//! that departs a prefill replica is either **delivered** to a decode
+//! replica or **cancelled** (the decode pool refused the continuation),
+//! never both, never neither, and never twice.
+//!
+//! The [`TransferLedger`] is the single bookkeeper for that flow. The
+//! fleet opens a [`Transfer`] per handoff at prefill-finish time and
+//! closes it exactly once at decode-admission (or refusal) time; the
+//! property suite in `rust/tests/disaggregation.rs` drives random
+//! admit/handoff/cancel interleavings against [`TransferLedger::
+//! check_invariants`] to prove the accounting never leaks or
+//! double-frees.
+//!
+//! Handoff state machine (one `Transfer` per request):
+//!
+//! ```text
+//!   prefill finishes            decode admits
+//!  ───────────────▶  IN-FLIGHT ───────────────▶ DELIVERED
+//!      begin()           │         deliver()
+//!                        │ decode refuses
+//!                        └────────────────────▶ CANCELLED
+//!                                  cancel()
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::RequestId;
+
+/// One in-flight KV handoff: `blocks` KV blocks leaving prefill replica
+/// `from` at `depart_us`, landing (if delivered) at `arrive_us` =
+/// depart + the interconnect's one-way wire time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    pub request: RequestId,
+    /// Global index of the prefill replica the blocks left.
+    pub from: usize,
+    /// KV blocks on the wire (the request's prompt + first token,
+    /// rounded up to the prefill replica's block size).
+    pub blocks: usize,
+    /// Virtual-clock instant the prefill leg finished.
+    pub depart_us: u64,
+    /// Earliest instant the decode pool can admit the continuation.
+    pub arrive_us: u64,
+}
+
+/// Balance-sheet for cross-pool KV transfers. Conservation law:
+/// `begun == delivered + cancelled + in_flight`, and the same identity
+/// block-for-block.
+#[derive(Debug, Default)]
+pub struct TransferLedger {
+    in_flight: HashMap<RequestId, Transfer>,
+    begun: usize,
+    delivered: usize,
+    cancelled: usize,
+    blocks_sent: usize,
+    blocks_delivered: usize,
+    blocks_cancelled: usize,
+    /// Total one-way wire time paid by delivered + cancelled transfers.
+    total_wire_us: u64,
+}
+
+impl TransferLedger {
+    /// An empty ledger.
+    pub fn new() -> TransferLedger {
+        TransferLedger::default()
+    }
+
+    /// Open a handoff: the request's KV is now on the wire. A second
+    /// `begin` for the same request would double-count its blocks, so it
+    /// is an error, not an overwrite.
+    pub fn begin(&mut self, t: Transfer) -> Result<()> {
+        if self.in_flight.contains_key(&t.request) {
+            bail!("request {} already has an in-flight KV transfer", t.request);
+        }
+        self.begun += 1;
+        self.blocks_sent += t.blocks;
+        self.in_flight.insert(t.request, t);
+        Ok(())
+    }
+
+    /// Close a handoff as delivered (decode admitted the continuation).
+    /// Delivering a transfer that was never begun — or one already
+    /// closed — is the double-free analog and fails loudly.
+    pub fn deliver(&mut self, request: RequestId) -> Result<Transfer> {
+        let Some(t) = self.in_flight.remove(&request) else {
+            bail!("request {request} has no in-flight KV transfer to deliver");
+        };
+        self.delivered += 1;
+        self.blocks_delivered += t.blocks;
+        self.total_wire_us += t.arrive_us - t.depart_us;
+        Ok(t)
+    }
+
+    /// Close a handoff as cancelled (the decode pool refused the
+    /// continuation). The wire time was still paid — the blocks crossed
+    /// before the refusal — so it still accrues.
+    pub fn cancel(&mut self, request: RequestId) -> Result<Transfer> {
+        let Some(t) = self.in_flight.remove(&request) else {
+            bail!("request {request} has no in-flight KV transfer to cancel");
+        };
+        self.cancelled += 1;
+        self.blocks_cancelled += t.blocks;
+        self.total_wire_us += t.arrive_us - t.depart_us;
+        Ok(t)
+    }
+
+    /// Transfers currently on the wire.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Blocks currently on the wire.
+    pub fn in_flight_blocks(&self) -> usize {
+        self.in_flight.values().map(|t| t.blocks).sum()
+    }
+
+    /// Handoffs opened over the ledger's lifetime.
+    pub fn begun(&self) -> usize {
+        self.begun
+    }
+
+    /// Handoffs closed as delivered.
+    pub fn delivered(&self) -> usize {
+        self.delivered
+    }
+
+    /// Handoffs closed as cancelled.
+    pub fn cancelled(&self) -> usize {
+        self.cancelled
+    }
+
+    /// Blocks closed as delivered.
+    pub fn blocks_delivered(&self) -> usize {
+        self.blocks_delivered
+    }
+
+    /// Total one-way wire time paid by closed transfers, µs.
+    pub fn total_wire_us(&self) -> u64 {
+        self.total_wire_us
+    }
+
+    /// True once every opened handoff has been closed — the full-drain
+    /// condition a finished fleet run must satisfy.
+    pub fn drained(&self) -> bool {
+        self.in_flight.is_empty()
+    }
+
+    /// Conservation check: counts and blocks both balance. Returns the
+    /// violation as an error so property tests can surface it verbatim.
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.begun != self.delivered + self.cancelled + self.in_flight.len() {
+            bail!(
+                "transfer count leak: begun {} != delivered {} + cancelled {} + in-flight {}",
+                self.begun,
+                self.delivered,
+                self.cancelled,
+                self.in_flight.len()
+            );
+        }
+        let on_wire = self.in_flight_blocks();
+        if self.blocks_sent != self.blocks_delivered + self.blocks_cancelled + on_wire {
+            bail!(
+                "transfer block leak: sent {} != delivered {} + cancelled {} + on-wire {}",
+                self.blocks_sent,
+                self.blocks_delivered,
+                self.blocks_cancelled,
+                on_wire
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xfer(request: RequestId, blocks: usize) -> Transfer {
+        Transfer { request, from: 0, blocks, depart_us: 100, arrive_us: 150 }
+    }
+
+    #[test]
+    fn ledger_balances_through_deliver_and_cancel() {
+        let mut l = TransferLedger::new();
+        l.begin(xfer(1, 4)).unwrap();
+        l.begin(xfer(2, 7)).unwrap();
+        assert_eq!(l.in_flight(), 2);
+        assert_eq!(l.in_flight_blocks(), 11);
+        l.check_invariants().unwrap();
+        assert!(!l.drained());
+
+        let t = l.deliver(1).unwrap();
+        assert_eq!(t.blocks, 4);
+        l.cancel(2).unwrap();
+        l.check_invariants().unwrap();
+        assert!(l.drained());
+        assert_eq!((l.begun(), l.delivered(), l.cancelled()), (2, 1, 1));
+        assert_eq!(l.blocks_delivered(), 4);
+        assert_eq!(l.total_wire_us(), 100, "both closures paid the 50 µs wire");
+    }
+
+    #[test]
+    fn double_begin_and_double_close_fail_loudly() {
+        let mut l = TransferLedger::new();
+        l.begin(xfer(1, 4)).unwrap();
+        assert!(l.begin(xfer(1, 4)).unwrap_err().to_string().contains("already has"));
+        l.deliver(1).unwrap();
+        // Both closure paths reject an already-closed transfer.
+        assert!(l.deliver(1).is_err());
+        assert!(l.cancel(1).is_err());
+        // Closing a never-begun transfer is the same error.
+        assert!(l.deliver(99).unwrap_err().to_string().contains("no in-flight"));
+        l.check_invariants().unwrap();
+    }
+}

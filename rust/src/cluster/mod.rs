@@ -14,33 +14,52 @@
 //!   PackGqa packing validated at build time) so each replica's
 //!   [`crate::planner::Planner`] plans the **sharded** shape,
 //! * [`router`]   — the [`Router`] contract with [`RoundRobin`],
-//!   [`LeastLoaded`] (queue depth + KV-block pressure), and
-//!   [`SessionAffinity`] (sticky: a session's KV stays on its replica)
-//!   policies, placed in front of each replica's admission controller,
+//!   [`LeastLoaded`] (queue depth + KV-block pressure),
+//!   [`SessionAffinity`] (sticky: a session's KV stays on its replica),
+//!   and the two-stage [`Disaggregated`] (prefill placement, then sticky
+//!   decode placement) policies, placed in front of each replica's
+//!   admission controller,
 //! * [`replica`]  — one TP group as a full [`crate::coordinator::Engine`]
 //!   over its own [`crate::backend::SimBackend`] (heterogeneous device
-//!   profiles allowed),
+//!   profiles allowed), each tagged with a [`ReplicaRole`],
+//! * [`handoff`]  — the [`TransferLedger`]: leak-free accounting for KV
+//!   blocks crossing the modeled [`Interconnect`] between a prefill and
+//!   a decode pool,
 //! * [`fleet`]    — the driver that fans a
 //!   [`crate::workload::ChatWorkload`] stream across replicas on the
 //!   simulated virtual clock and aggregates [`FleetReport`] metrics
 //!   (per-replica SM occupancy, pooled TTFT/TPOT, load imbalance,
-//!   aggregate tokens/s).
+//!   aggregate tokens/s; per-pool occupancy/imbalance/goodput and the
+//!   decode-pool TPOT when disaggregated).
 //!
-//! Surfaces: the `fa3-split cluster` CLI subcommand, the
-//! `benches/cluster_scale.rs` sweep (`BENCH_cluster_scale.json` — the
-//! occupancy gap widening as sharding shrinks head count), and the
-//! `rust/tests/cluster_fleet.rs` suite.
+//! Disaggregation matters here for the same reason TP does: the
+//! sequence-aware policy pays off almost exclusively in `q_len = 1`
+//! decode steps, so pooling decode on its own replicas concentrates the
+//! paper's starved regime on hardware that does nothing else — prefill
+//! interference leaves the decode pool entirely, at the price of one
+//! modeled KV transfer per request between the pools.
+//!
+//! Surfaces: the `fa3-split cluster` CLI subcommand (`--roles`/`--xfer`
+//! select pooling and the link), the `benches/cluster_scale.rs` and
+//! `benches/disaggregation.rs` sweeps (`BENCH_cluster_scale.json`,
+//! `BENCH_disaggregation.json`), and the `rust/tests/cluster_fleet.rs`,
+//! `rust/tests/router_conformance.rs`, and `rust/tests/disaggregation.rs`
+//! suites.
 
 pub mod fleet;
+pub mod handoff;
 pub mod replica;
 pub mod router;
 pub mod topology;
 
 pub use fleet::{Assignment, Fleet, FleetConfig, FleetReport, ReplicaReport};
+pub use handoff::{Transfer, TransferLedger};
 pub use replica::Replica;
 pub use router::{
-    LeastLoaded, ReplicaSnapshot, RouteError, Router, RoundRobin, SessionAffinity, ROUTER_NAMES,
+    Disaggregated, LeastLoaded, ReplicaSnapshot, RouteError, Router, RoundRobin,
+    SessionAffinity, ROUTER_NAMES,
 };
 pub use topology::{
-    ClusterTopology, ClusterTopologyBuilder, ReplicaSpec, TopologyError, TpConfig,
+    ClusterTopology, ClusterTopologyBuilder, Interconnect, ReplicaRole, ReplicaSpec,
+    TopologyError, TpConfig, INTERCONNECT_NAMES, KV_BLOCK_BYTES,
 };

@@ -17,12 +17,14 @@ use crate::coordinator::{
 use crate::planner::Planner;
 
 use super::router::ReplicaSnapshot;
-use super::topology::ReplicaSpec;
+use super::topology::{ReplicaRole, ReplicaSpec};
 
 /// One replica of the fleet.
 pub struct Replica {
     index: usize,
     device_name: &'static str,
+    /// Pool membership (`Unified` on colocated topologies).
+    role: ReplicaRole,
     engine: Engine,
     /// Requests the router has assigned here (accepted by `submit_at`).
     assigned: usize,
@@ -52,12 +54,24 @@ impl Replica {
         // Tag the flight recorder so merged fleet traces keep one Chrome
         // process (pid) per replica.
         engine.recorder_mut().set_replica(index as u32);
-        Ok(Replica { index, device_name: spec.device.name, engine, assigned: 0, rejected: 0 })
+        Ok(Replica {
+            index,
+            device_name: spec.device.name,
+            role: spec.role,
+            engine,
+            assigned: 0,
+            rejected: 0,
+        })
     }
 
     /// This replica's index in the fleet.
     pub fn index(&self) -> usize {
         self.index
+    }
+
+    /// Which pool this replica serves (`Unified` when colocated).
+    pub fn role(&self) -> ReplicaRole {
+        self.role
     }
 
     /// The device-profile preset name this replica simulates.
@@ -136,6 +150,14 @@ impl Replica {
         }
     }
 
+    /// Land a cross-pool KV handoff on this (decode) replica: import the
+    /// handed-off token prefix as evictable cache blocks so the routed
+    /// continuation admits against a warm cache. Passthrough to
+    /// [`Engine::import_handoff`]; returns the imported block count.
+    pub fn import_handoff(&mut self, request: u64, tokens: &[i32], wire_us: u64) -> usize {
+        self.engine.import_handoff(request, tokens, wire_us)
+    }
+
     /// Step the engine until its virtual clock reaches `t_us` or it goes
     /// idle — how the fleet interleaves replicas on a shared timeline.
     /// This loop runs for every replica at every fleet arrival, so it
@@ -163,6 +185,7 @@ impl std::fmt::Debug for Replica {
         f.debug_struct("Replica")
             .field("index", &self.index)
             .field("device", &self.device_name)
+            .field("role", &self.role)
             .field("assigned", &self.assigned)
             .field("running", &self.engine.running_len())
             .finish()

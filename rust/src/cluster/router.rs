@@ -31,6 +31,23 @@
 //! 3. **Determinism** — same snapshots, same state, same decision (ties
 //!    break toward the lowest replica index), so fleet runs are exactly
 //!    reproducible.
+//! 4. **Routers speak global indices** — the returned value is always a
+//!    [`ReplicaSnapshot::index`], never a position in the candidate
+//!    slice. A disaggregated fleet routes over *pool subsets* of its
+//!    replicas, so the slice a router sees may be `[3, 5, 9]`; position
+//!    arithmetic would silently land requests on the wrong replica.
+//!    Corollary for [`SessionAffinity`]: a pin is resolved by searching
+//!    the slice for its index, and a pin whose replica is absent from
+//!    the slice (a session pinned in another pool) is an explicit
+//!    refusal — stickiness is pool-scoped, never a cross-pool re-pin.
+//!
+//! Disaggregated fleets use [`Disaggregated`], a two-stage composite:
+//! a load/prefix-aware stage places the *prefill* leg, and a
+//! [`SessionAffinity`] stage places the *decode* leg after the KV
+//! handoff, keeping later turns of a session glued to the decode
+//! replica that already holds its history. All four policies are
+//! exercised by the shared invariant harness in
+//! `rust/tests/router_conformance.rs`.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -126,14 +143,23 @@ impl std::error::Error for RouteError {}
 pub trait Router: Send {
     fn name(&self) -> &'static str;
 
-    /// Choose a replica index for `req` (belonging to chat `session`)
-    /// among `replicas`. Must uphold the module-level invariants.
+    /// Choose a replica for `req` (belonging to chat `session`) among
+    /// `replicas`, returning its **global** [`ReplicaSnapshot::index`]
+    /// (invariant 4 — `replicas` may be a pool subset). Must uphold the
+    /// module-level invariants.
     fn route(
         &mut self,
         req: &Request,
         session: u64,
         replicas: &[ReplicaSnapshot],
     ) -> Result<usize, RouteError>;
+
+    /// Downcast hook for the two-stage disaggregated router: a fleet with
+    /// prefill/decode pools needs both stages, so `Fleet::new` rejects
+    /// single-stage routers on a disaggregated topology via this probe.
+    fn two_stage(&mut self) -> Option<&mut Disaggregated> {
+        None
+    }
 }
 
 fn no_eligible(req: &Request) -> RouteError {
@@ -181,7 +207,9 @@ impl Router for RoundRobin {
             let i = (self.next + off) % n;
             if replicas[i].can_ever_admit {
                 self.next = (i + 1) % n;
-                return Ok(i);
+                // Invariant 4: hand back the replica's global index, not
+                // its position in this (possibly pool-subset) slice.
+                return Ok(replicas[i].index);
             }
         }
         Err(no_eligible(req))
@@ -275,9 +303,18 @@ impl Router for SessionAffinity {
             return Err(RouteError::NoReplicas);
         }
         if let Some(&idx) = self.pinned.get(&session) {
-            let snap = replicas.get(idx).ok_or_else(|| RouteError::Unroutable {
-                request: req.id,
-                reason: format!("session {session} pinned to missing replica {idx}"),
+            // Resolve the pin by global index (invariant 4). A pin whose
+            // replica is not in this candidate slice means the session
+            // was placed in a different pool: refusing keeps stickiness
+            // pool-scoped instead of silently re-pinning across pools.
+            let snap = replicas.iter().find(|s| s.index == idx).ok_or_else(|| {
+                RouteError::Unroutable {
+                    request: req.id,
+                    reason: format!(
+                        "session {session} is pinned to replica {idx}, outside this candidate \
+                         pool"
+                    ),
+                }
             })?;
             if !snap.can_ever_admit {
                 // Stickiness is absolute: refusing is correct, re-pinning
@@ -298,11 +335,89 @@ impl Router for SessionAffinity {
     }
 }
 
+/// The two-stage router for disaggregated fleets: a load/prefix-aware
+/// stage places the **prefill** leg of each request, and a
+/// [`SessionAffinity`] stage places the **decode** leg after the KV
+/// handoff. Decode stickiness means every later turn of a session lands
+/// on the decode replica that already holds its KV history — and because
+/// the affinity stage only ever sees decode-pool snapshots, its pins are
+/// pool-scoped by construction (a prefill replica can never be pinned).
+///
+/// On a *colocated* topology (no pools) both stages see the full
+/// replica set and the router degenerates to its decode stage — which is
+/// exactly `SessionAffinity` over `LeastLoaded`. The differential tests
+/// in `rust/tests/disaggregation.rs` pin that equivalence down.
+pub struct Disaggregated {
+    prefill: Box<dyn Router>,
+    decode: SessionAffinity,
+}
+
+impl Disaggregated {
+    /// Least-loaded prefill placement + sticky decode placement (the
+    /// default, and the only composition the CLI exposes).
+    pub fn new() -> Disaggregated {
+        Disaggregated::over(Box::new(LeastLoaded::new()))
+    }
+
+    /// Custom prefill stage; the decode stage is always
+    /// [`SessionAffinity`] over [`LeastLoaded`].
+    pub fn over(prefill: Box<dyn Router>) -> Disaggregated {
+        Disaggregated { prefill, decode: SessionAffinity::new() }
+    }
+
+    /// Stage 1: place the prefill leg among `replicas` (the prefill
+    /// pool's snapshots). Load/prefix-aware, no stickiness — prefill is
+    /// a one-shot pass and benefits most from balance + prefix reuse.
+    pub fn route_prefill(
+        &mut self,
+        req: &Request,
+        session: u64,
+        replicas: &[ReplicaSnapshot],
+    ) -> Result<usize, RouteError> {
+        self.prefill.route(req, session, replicas)
+    }
+
+    /// The decode replica a session is pinned to, if any — for the
+    /// cross-pool regression tests.
+    pub fn decode_pin_of(&self, session: u64) -> Option<usize> {
+        self.decode.pin_of(session)
+    }
+}
+
+impl Default for Disaggregated {
+    fn default() -> Self {
+        Disaggregated::new()
+    }
+}
+
+impl Router for Disaggregated {
+    fn name(&self) -> &'static str {
+        "disaggregated"
+    }
+
+    /// Stage 2 (and the whole policy on a colocated topology): sticky
+    /// decode placement among `replicas` (the decode pool's snapshots).
+    fn route(
+        &mut self,
+        req: &Request,
+        session: u64,
+        replicas: &[ReplicaSnapshot],
+    ) -> Result<usize, RouteError> {
+        self.decode.route(req, session, replicas)
+    }
+
+    fn two_stage(&mut self) -> Option<&mut Disaggregated> {
+        Some(self)
+    }
+}
+
 /// Router names accepted by [`by_name`] — the single source the CLI help
 /// and unknown-value errors are generated from.
-pub const ROUTER_NAMES: [&str; 3] = ["round-robin", "least-loaded", "session-affinity"];
+pub const ROUTER_NAMES: [&str; 4] =
+    ["round-robin", "least-loaded", "session-affinity", "disaggregated"];
 
-/// `round-robin|least-loaded|session-affinity` — for CLI help.
+/// `round-robin|least-loaded|session-affinity|disaggregated` — for CLI
+/// help.
 pub fn help_line() -> String {
     ROUTER_NAMES.join("|")
 }
@@ -313,6 +428,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn Router>> {
         "round-robin" | "rr" => Some(Box::new(RoundRobin::new())),
         "least-loaded" | "ll" => Some(Box::new(LeastLoaded::new())),
         "session-affinity" | "sticky" => Some(Box::new(SessionAffinity::new())),
+        "disaggregated" | "disagg" => Some(Box::new(Disaggregated::new())),
         _ => None,
     }
 }
@@ -428,12 +544,71 @@ mod tests {
     }
 
     #[test]
+    fn routers_return_global_indices_on_pool_subsets() {
+        // A pool-subset slice with non-contiguous indices: every router
+        // must hand back a member's global index, never a slice position.
+        let snaps = vec![snap(3, 0, 0, 100), snap(5, 0, 0, 100), snap(9, 0, 0, 100)];
+        let mut routers: Vec<Box<dyn Router>> = vec![
+            Box::new(RoundRobin::new()),
+            Box::new(LeastLoaded::new()),
+            Box::new(SessionAffinity::new()),
+            Box::new(Disaggregated::new()),
+        ];
+        for router in &mut routers {
+            for turn in 0..4 {
+                let idx = router.route(&req(turn), turn, &snaps).unwrap();
+                assert!([3, 5, 9].contains(&idx), "{} returned {idx}", router.name());
+            }
+        }
+        // Round-robin specifically cycles through the *members*.
+        let mut rr = RoundRobin::new();
+        let picks: Vec<usize> =
+            (0..4).map(|i| rr.route(&req(i), i, &snaps).unwrap()).collect();
+        assert_eq!(picks, vec![3, 5, 9, 3]);
+    }
+
+    #[test]
+    fn session_affinity_refuses_pins_outside_the_candidate_pool() {
+        let mut sa = SessionAffinity::new();
+        let decode_pool = vec![snap(2, 0, 0, 100), snap(3, 0, 0, 100)];
+        assert_eq!(sa.route(&req(0), 11, &decode_pool).unwrap(), 2);
+        // The same session shown a different pool: refusal, not a re-pin.
+        let other_pool = vec![snap(0, 0, 0, 100), snap(1, 0, 0, 100)];
+        let err = sa.route(&req(1), 11, &other_pool).unwrap_err();
+        assert!(err.to_string().contains("outside this candidate pool"), "{err}");
+        assert_eq!(sa.pin_of(11), Some(2), "the pin survives untouched");
+        // Back in its own pool the session routes home again.
+        assert_eq!(sa.route(&req(2), 11, &decode_pool).unwrap(), 2);
+    }
+
+    #[test]
+    fn disaggregated_stages_are_independent() {
+        let mut d = Disaggregated::new();
+        let prefill_pool = vec![snap(0, 2, 1, 50), snap(1, 0, 0, 100)];
+        let decode_pool = vec![snap(2, 0, 0, 100), snap(3, 1, 1, 80)];
+        // Stage 1 balances without pinning.
+        assert_eq!(d.route_prefill(&req(0), 7, &prefill_pool).unwrap(), 1);
+        assert_eq!(d.decode_pin_of(7), None, "prefill placement must not pin");
+        // Stage 2 pins within the decode pool and sticks there.
+        assert_eq!(d.route(&req(0), 7, &decode_pool).unwrap(), 2);
+        assert_eq!(d.decode_pin_of(7), Some(2));
+        let inverted = vec![snap(2, 9, 9, 1), snap(3, 0, 0, 100)];
+        assert_eq!(d.route(&req(1), 7, &inverted).unwrap(), 2, "stickiness holds");
+        // Only the two-stage router advertises itself as such.
+        assert!(d.two_stage().is_some());
+        assert!(RoundRobin::new().two_stage().is_none());
+        assert!(LeastLoaded::new().two_stage().is_none());
+        assert!(SessionAffinity::new().two_stage().is_none());
+    }
+
+    #[test]
     fn name_registry_round_trips() {
         for name in ROUTER_NAMES {
             assert_eq!(by_name(name).unwrap().name(), name);
         }
         assert_eq!(by_name("rr").unwrap().name(), "round-robin");
         assert_eq!(by_name("sticky").unwrap().name(), "session-affinity");
+        assert_eq!(by_name("disagg").unwrap().name(), "disaggregated");
         assert!(by_name("random").is_none());
         for name in ROUTER_NAMES {
             assert!(help_line().contains(name));

@@ -32,6 +32,7 @@ use crate::backend::AttnGeometry;
 use crate::coordinator::EngineConfig;
 use crate::heuristics::tiles::{DecodeShape, Q_BLOCK};
 use crate::planner::DeviceProfile;
+use crate::sim::host_transfer::HostTransferModel;
 
 /// Tensor-parallel configuration of every replica in a fleet (each replica
 /// models one TP group's single shard — the devices inside a group run in
@@ -83,6 +84,106 @@ impl TpConfig {
     }
 }
 
+/// Which serving phase a replica hosts.
+///
+/// Colocated fleets run every replica [`ReplicaRole::Unified`]; a
+/// disaggregated fleet partitions its replicas into a **prefill pool**
+/// (prompt ingestion + first token) and a **decode pool** (token
+/// generation over KV handed off across the [`Interconnect`]). The
+/// split matters because the two phases live in different planning
+/// regimes: prefill is compute-saturated at any head count, while
+/// decode is exactly the `Batch × H_KV < 4` starved regime the
+/// sequence-aware policy targets — a decode pool concentrates it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaRole {
+    /// Both phases (the colocated default).
+    Unified,
+    /// Prompt ingestion only: runs each request's prefill and emits its
+    /// first token, then hands the KV blocks to the decode pool.
+    Prefill,
+    /// Token generation only: continues requests whose prefilled KV
+    /// arrived over the modeled interconnect.
+    Decode,
+}
+
+impl ReplicaRole {
+    /// Stable lowercase label for reports and the CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            ReplicaRole::Unified => "unified",
+            ReplicaRole::Prefill => "prefill",
+            ReplicaRole::Decode => "decode",
+        }
+    }
+}
+
+/// KV bytes per 16-token block used to convert interconnect bandwidth
+/// into per-block wire time — the same Llama-70B-class anchor
+/// `sim::host_transfer` documents (a block is a few hundred KiB across
+/// the layer stack).
+pub const KV_BLOCK_BYTES: usize = 256 * 1024;
+
+/// The modeled cross-pool link a prefill→decode KV handoff travels.
+///
+/// Presets are anchored the way `sim/kernel_model.rs` anchors kernel
+/// costs: effective (not peak) per-direction bandwidth plus a fixed
+/// submission+sync latency. [`Interconnect::ZERO`] is the free link the
+/// differential tests force (`--xfer zero`): byte-identity to colocated
+/// serving must survive a handoff that costs nothing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interconnect {
+    pub name: &'static str,
+    /// Effective per-direction bandwidth, GB/s (`f64::INFINITY` = free).
+    pub gbps: f64,
+    /// Fixed per-transfer submission + sync latency, µs.
+    pub base_us: f64,
+}
+
+/// Interconnect names accepted by [`Interconnect::by_name`] — the single
+/// source the CLI `--xfer` help and unknown-value errors come from.
+pub const INTERCONNECT_NAMES: [&str; 4] = ["nvlink", "infiniband", "pcie", "zero"];
+
+impl Interconnect {
+    /// NVLink-class scale-up fabric (effective, not peak).
+    pub const NVLINK: Interconnect = Interconnect { name: "nvlink", gbps: 200.0, base_us: 5.0 };
+    /// 400 Gb InfiniBand-class scale-out fabric.
+    pub const INFINIBAND: Interconnect =
+        Interconnect { name: "infiniband", gbps: 50.0, base_us: 15.0 };
+    /// Host-bounced PCIe path (matches the `HostTransferModel` default).
+    pub const PCIE: Interconnect = Interconnect { name: "pcie", gbps: 25.0, base_us: 20.0 };
+    /// The free link: infinite bandwidth, zero latency (identity tests).
+    pub const ZERO: Interconnect =
+        Interconnect { name: "zero", gbps: f64::INFINITY, base_us: 0.0 };
+
+    /// Look up a preset by CLI-friendly name.
+    pub fn by_name(name: &str) -> Option<Interconnect> {
+        match name {
+            "nvlink" => Some(Interconnect::NVLINK),
+            "infiniband" | "ib" => Some(Interconnect::INFINIBAND),
+            "pcie" => Some(Interconnect::PCIE),
+            "zero" => Some(Interconnect::ZERO),
+            _ => None,
+        }
+    }
+
+    /// `nvlink|infiniband|pcie|zero` — for CLI help.
+    pub fn help_line() -> String {
+        INTERCONNECT_NAMES.join("|")
+    }
+
+    /// Derive the per-block transfer model from this link's bandwidth —
+    /// the host-transfer ledger machinery reused for cross-pool D2D.
+    pub fn transfer_model(&self) -> HostTransferModel {
+        HostTransferModel::for_link(self.base_us, self.gbps, KV_BLOCK_BYTES)
+    }
+
+    /// One-way wire time for `blocks` KV blocks, µs (a handoff crosses
+    /// the link once; there is no return trip to wait for).
+    pub fn transfer_us(&self, blocks: usize) -> u64 {
+        self.transfer_model().swap_out_us(blocks).round() as u64
+    }
+}
+
 /// Why a topology failed to build.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TopologyError {
@@ -95,6 +196,13 @@ pub enum TopologyError {
     PackGqaSpill { group: usize, q_block: usize },
     /// A fleet needs at least one replica.
     NoReplicas,
+    /// Unified replicas mixed with pooled (prefill/decode) ones — a fleet
+    /// is either fully colocated or fully disaggregated, never both (a
+    /// unified replica inside a disaggregated fleet would need per-request
+    /// phase decisions this model deliberately keeps at the pool level).
+    MixedRoles { unified: usize, pooled: usize },
+    /// A disaggregated fleet is missing one of its pools.
+    MissingPool { role: ReplicaRole },
 }
 
 impl fmt::Display for TopologyError {
@@ -115,6 +223,16 @@ impl fmt::Display for TopologyError {
                  per-shard tile accounting would change meaning"
             ),
             TopologyError::NoReplicas => write!(f, "a fleet needs at least one replica"),
+            TopologyError::MixedRoles { unified, pooled } => write!(
+                f,
+                "{unified} unified replica(s) mixed with {pooled} pooled one(s); a fleet is \
+                 either fully colocated or fully disaggregated"
+            ),
+            TopologyError::MissingPool { role } => write!(
+                f,
+                "disaggregated fleet has no {} pool (needs at least one replica of each role)",
+                role.label()
+            ),
         }
     }
 }
@@ -128,17 +246,25 @@ pub struct ReplicaSpec {
     pub device: DeviceProfile,
     /// Engine-config override; `None` inherits the fleet default.
     pub engine: Option<EngineConfig>,
+    /// Which serving phase this replica hosts (colocated by default).
+    pub role: ReplicaRole,
 }
 
 impl ReplicaSpec {
     /// A replica of `device` using the fleet's default engine config.
     pub fn new(device: DeviceProfile) -> ReplicaSpec {
-        ReplicaSpec { device, engine: None }
+        ReplicaSpec { device, engine: None, role: ReplicaRole::Unified }
     }
 
     /// Override the engine configuration for this replica alone.
     pub fn engine(mut self, cfg: EngineConfig) -> ReplicaSpec {
         self.engine = Some(cfg);
+        self
+    }
+
+    /// Assign this replica to a serving-phase pool.
+    pub fn role(mut self, role: ReplicaRole) -> ReplicaSpec {
+        self.role = role;
         self
     }
 }
@@ -151,12 +277,18 @@ pub struct ClusterTopology {
     tp: TpConfig,
     shard: AttnGeometry,
     replicas: Vec<ReplicaSpec>,
+    interconnect: Interconnect,
 }
 
 impl ClusterTopology {
     /// Start describing a cluster around the full (unsharded) model geometry.
     pub fn builder(model: AttnGeometry) -> ClusterTopologyBuilder {
-        ClusterTopologyBuilder { model, tp: TpConfig::new(1), replicas: Vec::new() }
+        ClusterTopologyBuilder {
+            model,
+            tp: TpConfig::new(1),
+            replicas: Vec::new(),
+            interconnect: Interconnect::NVLINK,
+        }
     }
 
     /// The full (unsharded) model geometry.
@@ -196,6 +328,33 @@ impl ClusterTopology {
     pub fn shard_tiles(&self, batch: usize) -> usize {
         batch * self.shard.h_kv
     }
+
+    /// The cross-pool link prefill→decode handoffs travel (relevant only
+    /// for disaggregated fleets; colocated ones never cross it).
+    pub fn interconnect(&self) -> Interconnect {
+        self.interconnect
+    }
+
+    /// Whether this fleet is split into prefill/decode pools. Build-time
+    /// validation guarantees the alternative is all-[`ReplicaRole::Unified`].
+    pub fn is_disaggregated(&self) -> bool {
+        self.replicas.iter().any(|s| s.role != ReplicaRole::Unified)
+    }
+
+    /// Replica indices holding `role`, in index order.
+    pub fn pool(&self, role: ReplicaRole) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.role == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// The role of replica `index`.
+    pub fn role_of(&self, index: usize) -> ReplicaRole {
+        self.replicas[index].role
+    }
 }
 
 /// Builder for [`ClusterTopology`]; all validation happens in `build`.
@@ -203,6 +362,7 @@ pub struct ClusterTopologyBuilder {
     model: AttnGeometry,
     tp: TpConfig,
     replicas: Vec<ReplicaSpec>,
+    interconnect: Interconnect,
 }
 
 impl ClusterTopologyBuilder {
@@ -224,13 +384,49 @@ impl ClusterTopologyBuilder {
         self
     }
 
-    /// Validate and freeze the topology (head divisibility, PackGqa packing).
+    /// Add `n` identical replicas on `device` assigned to `role`'s pool.
+    pub fn pool(
+        mut self,
+        n: usize,
+        device: DeviceProfile,
+        role: ReplicaRole,
+    ) -> ClusterTopologyBuilder {
+        self.replicas.extend((0..n).map(|_| ReplicaSpec::new(device).role(role)));
+        self
+    }
+
+    /// Set the cross-pool interconnect (only disaggregated fleets use it).
+    pub fn interconnect(mut self, ic: Interconnect) -> ClusterTopologyBuilder {
+        self.interconnect = ic;
+        self
+    }
+
+    /// Validate and freeze the topology (head divisibility, PackGqa
+    /// packing, role partitioning).
     pub fn build(self) -> Result<ClusterTopology, TopologyError> {
         if self.replicas.is_empty() {
             return Err(TopologyError::NoReplicas);
         }
+        let unified = self.replicas.iter().filter(|s| s.role == ReplicaRole::Unified).count();
+        let pooled = self.replicas.len() - unified;
+        if unified > 0 && pooled > 0 {
+            return Err(TopologyError::MixedRoles { unified, pooled });
+        }
+        if pooled > 0 {
+            for role in [ReplicaRole::Prefill, ReplicaRole::Decode] {
+                if !self.replicas.iter().any(|s| s.role == role) {
+                    return Err(TopologyError::MissingPool { role });
+                }
+            }
+        }
         let shard = self.tp.shard_geometry(&self.model)?;
-        Ok(ClusterTopology { model: self.model, tp: self.tp, shard, replicas: self.replicas })
+        Ok(ClusterTopology {
+            model: self.model,
+            tp: self.tp,
+            shard,
+            replicas: self.replicas,
+            interconnect: self.interconnect,
+        })
     }
 }
 
@@ -294,6 +490,73 @@ mod tests {
         let wide = AttnGeometry { h_q: 256, h_kv: 2, d: 128, max_seq: 1024 };
         let err = TpConfig::new(2).shard_geometry(&wide).unwrap_err();
         assert!(matches!(err, TopologyError::PackGqaSpill { group: 128, .. }), "{err}");
+    }
+
+    #[test]
+    fn role_partition_validated_at_build() {
+        // Colocated: all unified, fine.
+        let topo = ClusterTopology::builder(llama70b())
+            .replicas(2, DeviceProfile::H100_SXM)
+            .build()
+            .unwrap();
+        assert!(!topo.is_disaggregated());
+        assert_eq!(topo.pool(ReplicaRole::Prefill), Vec::<usize>::new());
+        // Disaggregated: one of each pool, fine.
+        let topo = ClusterTopology::builder(llama70b())
+            .tp(TpConfig::new(8))
+            .pool(1, DeviceProfile::H100_SXM, ReplicaRole::Prefill)
+            .pool(2, DeviceProfile::H100_SXM, ReplicaRole::Decode)
+            .build()
+            .unwrap();
+        assert!(topo.is_disaggregated());
+        assert_eq!(topo.pool(ReplicaRole::Prefill), vec![0]);
+        assert_eq!(topo.pool(ReplicaRole::Decode), vec![1, 2]);
+        assert_eq!(topo.role_of(0), ReplicaRole::Prefill);
+        // Mixed unified + pooled: rejected.
+        let err = ClusterTopology::builder(llama70b())
+            .replicas(1, DeviceProfile::H100_SXM)
+            .pool(1, DeviceProfile::H100_SXM, ReplicaRole::Decode)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, TopologyError::MixedRoles { unified: 1, pooled: 1 }), "{err}");
+        // A pool on its own: rejected, naming the missing role.
+        let err = ClusterTopology::builder(llama70b())
+            .pool(2, DeviceProfile::H100_SXM, ReplicaRole::Decode)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, TopologyError::MissingPool { role: ReplicaRole::Prefill }));
+        assert!(err.to_string().contains("no prefill pool"));
+    }
+
+    #[test]
+    fn interconnect_presets_price_transfers() {
+        // PCIe matches the host-transfer anchor: ~10 µs/block + base.
+        let m = Interconnect::PCIE.transfer_model();
+        assert!((m.us_per_block - 10.486).abs() < 0.01, "{}", m.us_per_block);
+        assert_eq!(Interconnect::PCIE.transfer_us(10), 125); // 20 + 10*10.486
+        // Faster links cost strictly less; the zero link costs nothing.
+        assert!(Interconnect::NVLINK.transfer_us(10) < Interconnect::INFINIBAND.transfer_us(10));
+        assert!(
+            Interconnect::INFINIBAND.transfer_us(10) < Interconnect::PCIE.transfer_us(10)
+        );
+        assert_eq!(Interconnect::ZERO.transfer_us(1_000), 0);
+        // Name registry round-trips; default topology link is NVLink.
+        for name in INTERCONNECT_NAMES {
+            assert_eq!(Interconnect::by_name(name).unwrap().name, name);
+            assert!(Interconnect::help_line().contains(name));
+        }
+        assert!(Interconnect::by_name("carrier-pigeon").is_none());
+        let topo = ClusterTopology::builder(llama70b())
+            .replicas(1, DeviceProfile::H100_SXM)
+            .build()
+            .unwrap();
+        assert_eq!(topo.interconnect().name, "nvlink");
+        let topo = ClusterTopology::builder(llama70b())
+            .replicas(1, DeviceProfile::H100_SXM)
+            .interconnect(Interconnect::ZERO)
+            .build()
+            .unwrap();
+        assert_eq!(topo.interconnect().name, "zero");
     }
 
     #[test]

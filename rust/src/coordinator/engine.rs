@@ -338,6 +338,31 @@ impl Engine {
         &self.blocks
     }
 
+    /// Land a cross-pool KV handoff: import `tokens`' full prefix blocks
+    /// into this engine's block manager as evictable cache entries (see
+    /// [`BlockManager::import_prefix`]) and record the handoff on the
+    /// flight recorder. `wire_us` is the modeled one-way interconnect
+    /// time the blocks already paid — it prices the trace event, not the
+    /// import (the fleet delays the continuation's arrival instead).
+    ///
+    /// The import is deliberately decoupled from admission: blocks park
+    /// at refcount 0, so the continuation's later `submit_at` revives
+    /// them as ordinary prefix hits and skips their prefill — and if
+    /// memory pressure recycles them first, the continuation simply
+    /// re-prefills (slower, never wrong). Returns the imported count.
+    pub fn import_handoff(&mut self, request: RequestId, tokens: &[i32], wire_us: u64) -> usize {
+        let imported = self.blocks.import_prefix(tokens);
+        self.recorder.record(
+            self.now_us(),
+            EventKind::KvHandoff {
+                request,
+                blocks: imported as u32,
+                wire_us: wire_us.min(u32::MAX as u64) as u32,
+            },
+        );
+        imported
+    }
+
     /// The step-composition policy this engine runs under.
     pub fn schedule(&self) -> &ScheduleConfig {
         self.composer.config()

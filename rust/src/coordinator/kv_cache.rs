@@ -565,6 +565,59 @@ impl BlockManager {
         self.seqs.get(&id).map(|a| a.attached.len())
     }
 
+    /// Materialize a prefix's full blocks as **evictable** cache entries
+    /// without admitting a sequence — the receiving half of a cross-pool
+    /// KV handoff. Each imported block is hashed, indexed, and parked at
+    /// refcount 0, so the continuation's admission revives it as an
+    /// ordinary prefix hit (charging zero prefill for those tokens) while
+    /// a fleet under pressure can still recycle it like any other
+    /// evictable block — an import can therefore never wedge capacity.
+    ///
+    /// Returns how many blocks were *newly* materialized. Blocks already
+    /// resident (live or evictable) are skipped and the walk continues.
+    /// Imports are opportunistic: they draw only on the plain free pool
+    /// and never evict resident cache state (recycling evictable entries
+    /// to make room for an import could churn out exactly the prefixes
+    /// live sessions are about to revive — or, for an oversized import,
+    /// its own just-written chain root). An exhausted free pool stops
+    /// the import early; the un-imported tail simply re-prefills on the
+    /// decode side (the recompute fallback), which costs time, never
+    /// correctness.
+    pub fn import_prefix(&mut self, tokens: &[i32]) -> usize {
+        if !self.cfg.enable_prefix_sharing {
+            return 0;
+        }
+        let bs = self.cfg.block_size;
+        let mut imported = 0;
+        let mut chain = HASH_SEED;
+        for chunk in tokens.chunks_exact(bs) {
+            let prev = chain;
+            chain = chain_hash(chain, chunk);
+            if let Some(&bid) = self.by_hash.get(&chain) {
+                if self.blocks[bid].tokens == chunk {
+                    continue; // already resident — keep walking the chain
+                }
+                break; // 64-bit collision: never alias content
+            }
+            if self.free.is_empty() {
+                break; // never evict to import — see the doc comment
+            }
+            let bid = self.alloc_block().expect("free pool is non-empty");
+            let b = &mut self.blocks[bid];
+            b.hash = Some(chain);
+            b.prev_hash = prev;
+            b.tokens.clear();
+            b.tokens.extend_from_slice(chunk);
+            self.by_hash.entry(chain).or_insert(bid);
+            self.by_prev.entry(prev).or_insert(bid);
+            // Drop the allocation reference: hashed + refcount 0 parks
+            // the block on the evictable list, where probe/admit find it.
+            self.deref_block(bid);
+            imported += 1;
+        }
+        imported
+    }
+
     // ------------------------------------------------------------------
     // Internals
     // ------------------------------------------------------------------
@@ -795,6 +848,50 @@ mod tests {
         m.admit(2, &prompt(2, 16), 1).unwrap(); // 17 tokens = 2 blocks
         assert_eq!(m.free_blocks(), 7);
         m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn import_prefix_parks_evictable_blocks_the_next_admit_revives() {
+        let mut m = mgr(10);
+        let p = prompt(3, 64); // 4 full blocks
+        assert_eq!(m.import_prefix(&p), 4);
+        assert_eq!(m.evictable_blocks(), 4);
+        assert_eq!(m.free_blocks(), 10, "evictable blocks still count as spare");
+        m.check_invariants().unwrap();
+        // The continuation's admission sees a full prefix hit.
+        let g = m.admit(1, &p, 16).unwrap(); // 80 tokens = 5 blocks
+        assert_eq!((g.shared_blocks, g.cached_tokens, g.new_blocks), (4, 64, 1));
+        assert_eq!(m.evictable_blocks(), 0);
+        // Re-importing a resident prefix is a no-op; a longer prefix
+        // imports only its new tail blocks.
+        assert_eq!(m.import_prefix(&p), 0);
+        let mut longer = p.clone();
+        longer.extend(prompt(4, 32));
+        assert_eq!(m.import_prefix(&longer), 2);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn import_prefix_never_wedges_capacity() {
+        let mut m = mgr(4);
+        // 6 full blocks into a 4-block manager: the import stops when
+        // the free pool runs dry instead of evicting its own entries.
+        let imported = m.import_prefix(&prompt(5, 96));
+        assert_eq!(imported, 4);
+        m.check_invariants().unwrap();
+        // The whole budget is still admissible: imports only park
+        // evictable blocks, which allocation recycles freely.
+        m.admit(1, &prompt(6, 48), 16).unwrap(); // 64 tokens = 4 blocks
+        m.check_invariants().unwrap();
+        // Sharing off: imports are a no-op.
+        let mut off = BlockManager::new(BlockManagerConfig {
+            block_size: 16,
+            num_blocks: 4,
+            max_seq: 1024,
+            enable_prefix_sharing: false,
+        });
+        assert_eq!(off.import_prefix(&prompt(5, 96)), 0);
+        assert_eq!(off.evictable_blocks(), 0);
     }
 
     #[test]

@@ -368,6 +368,8 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
         .opt("hkv", "8", "full-model KV heads (H_Q = 8*H_KV, Llama-70B-style GQA)")
         .opt("device", "h100-sxm", format!("device profile: {}", DeviceProfile::help_line()))
         .opt("router", "least-loaded", format!("routing policy: {}", cluster::router::help_line()))
+        .opt("roles", "colocated", "replica roles: colocated | split (prefill/decode pools; requires --router disaggregated)")
+        .opt("xfer", "nvlink", format!("cross-pool KV interconnect: {}", cluster::topology::Interconnect::help_line()))
         .opt("policy", "sequence-aware", format!("split policy: {}", registry.help_line()))
         .opt("requests", "16", "number of requests")
         .opt("tokens", "64", "max new tokens per request")
@@ -403,13 +405,45 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
         std::process::exit(2);
     }
 
+    // `--roles`/`--xfer` get the same listed-names exit(2) treatment as
+    // `--router`/`--policy`: typos die before any replica is built.
+    let roles_name = args.str("roles");
+    let split = match roles_name.as_str() {
+        "colocated" => false,
+        "split" => true,
+        other => {
+            eprintln!("unknown roles '{other}' (known: colocated|split)");
+            std::process::exit(2);
+        }
+    };
+    let xfer_name = args.str("xfer");
+    let Some(interconnect) = cluster::topology::Interconnect::by_name(&xfer_name) else {
+        eprintln!(
+            "unknown interconnect '{xfer_name}' (known: {})",
+            cluster::topology::Interconnect::help_line()
+        );
+        std::process::exit(2);
+    };
+
     let h_kv = args.usize("hkv");
     let model = AttnGeometry { h_q: 8 * h_kv, h_kv, d: 128, max_seq: 1024 };
-    let topology = ClusterTopology::builder(model)
+    let n_replicas = args.usize("replicas");
+    let mut builder = ClusterTopology::builder(model)
         .tp(TpConfig::new(args.usize("tp")))
-        .replicas(args.usize("replicas"), device)
-        .build()
-        .map_err(|e| anyhow::anyhow!("invalid topology: {e}"))?;
+        .interconnect(interconnect);
+    if split {
+        // Equal-device split: half the fleet prefills (at least one
+        // replica), the rest decodes. `build()` rejects a pool-less side
+        // (e.g. --replicas 1) with its MissingPool error.
+        let prefill = (n_replicas / 2).max(1);
+        let decode = n_replicas.saturating_sub(prefill);
+        builder = builder
+            .pool(prefill, device, cluster::ReplicaRole::Prefill)
+            .pool(decode, device, cluster::ReplicaRole::Decode);
+    } else {
+        builder = builder.replicas(n_replicas, device);
+    }
+    let topology = builder.build().map_err(|e| anyhow::anyhow!("invalid topology: {e}"))?;
 
     let trace_out = args.str("trace-out");
     let mut engine_cfg = EngineConfig {

@@ -266,6 +266,19 @@ fn emit_replica(r: &ReplicaTrace, out: &mut Vec<Json>) {
                     ],
                 ));
             }
+            EventKind::KvHandoff { request, blocks, wire_us } => {
+                out.push(instant(
+                    pid,
+                    0,
+                    ev.t_us,
+                    "kv handoff",
+                    vec![
+                        ("request", Json::int(request as i64)),
+                        ("blocks", Json::int(blocks as i64)),
+                        ("wire_us", Json::int(wire_us as i64)),
+                    ],
+                ));
+            }
             // Lifecycle / KvAdmit / KvCowFork / PrefixProbe are consumed
             // through the span reconstruction above.
             _ => {}

@@ -179,6 +179,11 @@ pub enum EventKind {
     /// its deadline/TTFT SLO, so admission dropped it instead of letting
     /// it burn KV. `waited_us` is how long it sat queued.
     Shed { request: ReqId, class: u8, waited_us: u32 },
+    /// A cross-pool KV handoff landed on this (decode) replica: `blocks`
+    /// prefix blocks were imported into the block manager after
+    /// `wire_us` of modeled interconnect time (cluster disaggregation;
+    /// recorded at the import instant on the receiving replica's clock).
+    KvHandoff { request: ReqId, blocks: u32, wire_us: u32 },
 }
 
 #[cfg(test)]

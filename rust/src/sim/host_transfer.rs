@@ -40,6 +40,22 @@ impl Default for HostTransferModel {
 }
 
 impl HostTransferModel {
+    /// Derive a transfer model from raw link parameters: a fixed per-hop
+    /// submission latency plus a bandwidth-priced per-block wire cost for
+    /// blocks of `block_bytes`. A non-positive or infinite bandwidth maps
+    /// to a free wire (`us_per_block == 0.0`) — the `Interconnect::ZERO`
+    /// link the differential tests use to prove disaggregation degenerates
+    /// to the colocated fleet when transfers cost nothing.
+    pub fn for_link(base_us: f64, gbps: f64, block_bytes: usize) -> HostTransferModel {
+        let us_per_block = if gbps <= 0.0 || gbps.is_infinite() {
+            0.0
+        } else {
+            // bytes / (GB/s) = ns, so divide by 1e3 more for µs.
+            block_bytes as f64 / (gbps * 1e3)
+        };
+        HostTransferModel { base_us, us_per_block }
+    }
+
     /// Device-to-host cost of parking `blocks` KV blocks, µs.
     pub fn swap_out_us(&self, blocks: usize) -> f64 {
         self.base_us + self.us_per_block * blocks as f64
@@ -76,6 +92,21 @@ mod tests {
         assert!((m.round_trip_us(4) - (2.0 * 20.0 + 2.0 * 4.0 * 10.0)).abs() < 1e-9);
         // More blocks strictly cost more.
         assert!(m.round_trip_us(8) > m.round_trip_us(4));
+    }
+
+    #[test]
+    fn for_link_prices_blocks_by_bandwidth() {
+        // 256 KiB blocks over a 25 GB/s PCIe-class link: ~10.5 µs/block,
+        // recovering the default model's anchor.
+        let m = HostTransferModel::for_link(20.0, 25.0, 256 * 1024);
+        assert!((m.us_per_block - 10.486).abs() < 0.01, "{}", m.us_per_block);
+        assert_eq!(m.base_us, 20.0);
+        // Doubling bandwidth halves the wire cost; base is untouched.
+        let fast = HostTransferModel::for_link(20.0, 50.0, 256 * 1024);
+        assert!((fast.us_per_block * 2.0 - m.us_per_block).abs() < 1e-9);
+        // Degenerate links are free per block.
+        assert_eq!(HostTransferModel::for_link(5.0, f64::INFINITY, 256 * 1024).us_per_block, 0.0);
+        assert_eq!(HostTransferModel::for_link(5.0, 0.0, 256 * 1024).us_per_block, 0.0);
     }
 
     #[test]

@@ -1,0 +1,430 @@
+//! Disaggregation differential + property suite.
+//!
+//! Two identity theorems and one conservation law pin the handoff
+//! machinery down:
+//!
+//! * **Collapsed pools** — the two-stage router mounted on a *colocated*
+//!   topology must be byte-identical to plain session-affinity: same
+//!   placements, same token streams, same timings. The disaggregated
+//!   code path must be strictly additive.
+//! * **Zero-cost link** — a 1-prefill + 1-decode split over the free
+//!   interconnect must serve byte-identical token streams to a colocated
+//!   single replica: position-pure synthetic tokens make the prefill leg
+//!   + continuation concatenation equal the uninterrupted stream, so any
+//!   divergence is a real handoff bug (wrong continuation prompt, lost
+//!   first token, off-by-one in `max_new`).
+//! * **Ledger conservation** — `begun == delivered + cancelled +
+//!   in_flight`, counts and blocks, under random admit/handoff/cancel
+//!   interleavings, with failed closures leaving the books untouched.
+//!
+//! Plus the fleet-level regressions: churn (decode refusals) cancels
+//! handoffs without leaking, and decode pins never migrate across pools.
+
+use std::collections::HashMap;
+
+use fa3_split::backend::AttnGeometry;
+use fa3_split::cluster::{
+    router, ClusterTopology, Fleet, FleetConfig, FleetReport, Interconnect, ReplicaRole, Router,
+    Transfer, TransferLedger, TpConfig,
+};
+use fa3_split::coordinator::{
+    BatcherConfig, BlockManagerConfig, EngineConfig, Priority, Request,
+};
+use fa3_split::planner::DeviceProfile;
+use fa3_split::util::prng::Rng;
+use fa3_split::util::proptest_lite::{check, Domain};
+use fa3_split::workload::{ChatWorkload, GeneratedRequest};
+
+fn llama70b() -> AttnGeometry {
+    AttnGeometry { h_q: 64, h_kv: 8, d: 128, max_seq: 1024 }
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig { batcher: BatcherConfig::for_max_batch(4), ..Default::default() }
+}
+
+fn colocated(n: usize) -> ClusterTopology {
+    ClusterTopology::builder(llama70b())
+        .tp(TpConfig::new(8))
+        .replicas(n, DeviceProfile::H100_SXM)
+        .build()
+        .unwrap()
+}
+
+fn split(prefill: usize, decode: usize, link: Interconnect) -> ClusterTopology {
+    ClusterTopology::builder(llama70b())
+        .tp(TpConfig::new(8))
+        .pool(prefill, DeviceProfile::H100_SXM, ReplicaRole::Prefill)
+        .pool(decode, DeviceProfile::H100_SXM, ReplicaRole::Decode)
+        .interconnect(link)
+        .build()
+        .unwrap()
+}
+
+fn run_fleet(
+    topology: ClusterTopology,
+    router: Box<dyn Router>,
+    engine: EngineConfig,
+    stream: &[GeneratedRequest],
+) -> FleetReport {
+    let mut fleet =
+        Fleet::new(topology, router, FleetConfig::default().policy("sequence-aware").engine(engine))
+            .unwrap();
+    fleet.run(stream).unwrap()
+}
+
+fn heavy_decode(seed: u64, n: usize) -> ChatWorkload {
+    ChatWorkload::boundary_bucket(seed, n, 48)
+}
+
+/// `(id, reason, tokens)` per finished request, sorted — the
+/// stream-identity signature (timings deliberately excluded where only
+/// streams must match).
+fn streams(report: &FleetReport) -> Vec<(u64, String, Vec<i32>)> {
+    let mut sig: Vec<(u64, String, Vec<i32>)> = report
+        .finished
+        .iter()
+        .map(|f| (f.id, format!("{:?}", f.reason), f.tokens.clone()))
+        .collect();
+    sig.sort();
+    sig
+}
+
+// ---------------------------------------------------------------------
+// Collapsed pools: two-stage router on a colocated topology ==
+// session-affinity, byte for byte.
+// ---------------------------------------------------------------------
+
+#[test]
+fn collapsed_pools_are_byte_identical_to_session_affinity() {
+    for seed in [0x1D, 0x2D, 0x3D] {
+        let workload =
+            ChatWorkload { turns_per_session: 2, mean_gap_us: 300, ..heavy_decode(seed, 12) };
+        let stream = workload.generate();
+        let affinity = run_fleet(
+            colocated(2),
+            Box::new(router::SessionAffinity::new()),
+            engine_cfg(),
+            &stream,
+        );
+        let collapsed = run_fleet(
+            colocated(2),
+            Box::new(router::Disaggregated::new()),
+            engine_cfg(),
+            &stream,
+        );
+
+        assert_eq!(affinity.assignments, collapsed.assignments, "seed {seed:#x}: placement");
+        assert!(collapsed.prefill_assignments.is_empty(), "no prefill legs when colocated");
+        assert_eq!((collapsed.handoffs, collapsed.handoffs_cancelled), (0, 0));
+        assert_eq!(collapsed.transferred_blocks, 0);
+        assert_eq!(streams(&affinity), streams(&collapsed), "seed {seed:#x}: streams");
+        // Identical placement + identical engines => identical timings.
+        let timing = |r: &FleetReport| {
+            let mut t: Vec<(u64, u64, u64, u64)> = r
+                .finished
+                .iter()
+                .map(|f| {
+                    (f.id, f.timing.scheduled_us, f.timing.first_token_us, f.timing.finished_us)
+                })
+                .collect();
+            t.sort();
+            t
+        };
+        assert_eq!(timing(&affinity), timing(&collapsed), "seed {seed:#x}: timings");
+        assert_eq!(affinity.rejected, collapsed.rejected, "seed {seed:#x}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Zero-cost link: split serving is stream-invisible.
+// ---------------------------------------------------------------------
+
+#[test]
+fn zero_cost_split_streams_match_colocated_byte_for_byte() {
+    for seed in [0xA1, 0xB2] {
+        let workload = ChatWorkload { mean_gap_us: 500, ..heavy_decode(seed, 10) };
+        let stream = workload.generate();
+        let coloc = run_fleet(
+            colocated(1),
+            Box::new(router::RoundRobin::new()),
+            engine_cfg(),
+            &stream,
+        );
+        let zero = run_fleet(
+            split(1, 1, Interconnect::ZERO),
+            Box::new(router::Disaggregated::new()),
+            engine_cfg(),
+            &stream,
+        );
+
+        assert_eq!(coloc.finished.len(), zero.finished.len(), "seed {seed:#x}");
+        assert_eq!(zero.rejected, 0, "seed {seed:#x}");
+        assert_eq!(streams(&coloc), streams(&zero), "seed {seed:#x}: streams diverged");
+        // The free link still moves blocks — it just charges nothing.
+        assert!(zero.handoffs > 0, "seed {seed:#x}");
+        assert_eq!(zero.transfer_wire_us, 0, "seed {seed:#x}: zero link charged wire time");
+        // Every generated token count survives the split exactly.
+        let total = |r: &FleetReport| -> usize {
+            r.finished.iter().map(|f| f.tokens.len()).sum()
+        };
+        assert_eq!(total(&coloc), total(&zero), "seed {seed:#x}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ledger conservation under random interleavings.
+// ---------------------------------------------------------------------
+
+#[test]
+fn ledger_conservation_survives_random_interleavings() {
+    check(
+        "ledger-conservation",
+        &[Domain::new(1, 60), Domain::new(0, u64::MAX / 2), Domain::new(2, 9)],
+        |case| {
+            let (n_ops, seed, id_space) = (case[0], case[1], case[2]);
+            let mut rng = Rng::new(seed);
+            let mut ledger = TransferLedger::new();
+            // Shadow model: the set of ids we believe are in flight.
+            let mut open: Vec<u64> = Vec::new();
+            for step in 0..n_ops {
+                let id = rng.below(id_space);
+                let blocks = 1 + rng.below(40) as usize;
+                let t = Transfer {
+                    request: id,
+                    from: 0,
+                    blocks,
+                    depart_us: 10 * step,
+                    arrive_us: 10 * step + rng.below(500),
+                };
+                let before =
+                    (ledger.begun(), ledger.delivered(), ledger.cancelled(), ledger.in_flight());
+                let mut refused = false;
+                match rng.below(3) {
+                    0 => {
+                        let res = ledger.begin(t);
+                        if open.contains(&id) {
+                            if res.is_ok() {
+                                return Err(format!("double begin for {id} accepted"));
+                            }
+                            refused = true;
+                        } else {
+                            res.map_err(|e| format!("begin({id}) refused: {e}"))?;
+                            open.push(id);
+                        }
+                    }
+                    1 => {
+                        let res = ledger.deliver(id);
+                        if open.contains(&id) {
+                            let got =
+                                res.map_err(|e| format!("deliver({id}) refused: {e}"))?;
+                            if got.request != id {
+                                return Err("deliver returned the wrong transfer".into());
+                            }
+                            open.retain(|&x| x != id);
+                        } else {
+                            if res.is_ok() {
+                                return Err(format!(
+                                    "double-free: deliver({id}) with nothing open"
+                                ));
+                            }
+                            refused = true;
+                        }
+                    }
+                    _ => {
+                        let res = ledger.cancel(id);
+                        if open.contains(&id) {
+                            res.map_err(|e| format!("cancel({id}) refused: {e}"))?;
+                            open.retain(|&x| x != id);
+                        } else {
+                            if res.is_ok() {
+                                return Err(format!(
+                                    "double-free: cancel({id}) with nothing open"
+                                ));
+                            }
+                            refused = true;
+                        }
+                    }
+                }
+                // Conservation must hold after every single op, and a
+                // refused op must leave the books exactly as they were.
+                ledger.check_invariants().map_err(|e| format!("after op {step}: {e}"))?;
+                let after =
+                    (ledger.begun(), ledger.delivered(), ledger.cancelled(), ledger.in_flight());
+                if refused && before != after {
+                    return Err(format!(
+                        "refused op mutated the books: {before:?} -> {after:?}"
+                    ));
+                }
+                if open.len() != ledger.in_flight() {
+                    return Err(format!(
+                        "in-flight drifted from the model: {} vs {}",
+                        ledger.in_flight(),
+                        open.len()
+                    ));
+                }
+            }
+            // Full drain: close everything both ways, alternating.
+            for (i, id) in open.drain(..).enumerate() {
+                if i % 2 == 0 {
+                    ledger.deliver(id).map_err(|e| format!("drain deliver: {e}"))?;
+                } else {
+                    ledger.cancel(id).map_err(|e| format!("drain cancel: {e}"))?;
+                }
+            }
+            ledger.check_invariants().map_err(|e| format!("after drain: {e}"))?;
+            if !ledger.drained() {
+                return Err("ledger not drained after closing every open transfer".into());
+            }
+            if ledger.begun() != ledger.delivered() + ledger.cancelled() {
+                return Err("drained ledger does not balance".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Fleet churn: decode refusals cancel their transfers, books balance.
+// ---------------------------------------------------------------------
+
+/// A hand-built arrival stream: `normal` requests that fit everywhere
+/// interleaved with `oversized` ones whose *continuation* (prompt +
+/// max_new) exceeds the KV budget while the prefill leg (prompt + 1)
+/// still fits — the shape that forces a decode-side refusal after a
+/// successful prefill, i.e. the cancel path.
+fn churn_stream() -> Vec<GeneratedRequest> {
+    let mut out = Vec::new();
+    for i in 0..12u64 {
+        let oversized = i % 3 == 2;
+        let (prompt_len, max_new) = if oversized { (150, 60) } else { (64, 8) };
+        let prompt: Vec<i32> = (0..prompt_len).map(|p| (p % 1000) as i32).collect();
+        out.push(GeneratedRequest {
+            request: Request::new(i, prompt, max_new),
+            arrival_offset_us: 50 * i,
+            priority: Priority::Standard,
+            session: i,
+            turn: 0,
+        });
+    }
+    out
+}
+
+#[test]
+fn decode_refusals_cancel_their_transfers_without_leaking() {
+    // 12 blocks x 16 tokens = 192-token budget: the oversized requests
+    // (150 + 60 = 210) can never decode, but their prefill leg (151) fits.
+    let engine = EngineConfig {
+        blocks: BlockManagerConfig {
+            block_size: 16,
+            num_blocks: 12,
+            max_seq: 1024,
+            enable_prefix_sharing: true,
+        },
+        ..engine_cfg()
+    };
+    let stream = churn_stream();
+    let n_oversized = stream.iter().filter(|g| g.request.max_new_tokens == 60).count();
+    let topology = split(1, 1, Interconnect::PCIE);
+    let mut fleet = Fleet::new(
+        topology,
+        Box::new(router::Disaggregated::new()),
+        FleetConfig::default().policy("sequence-aware").engine(engine),
+    )
+    .unwrap();
+    let report = fleet.run(&stream).unwrap();
+
+    assert_eq!(report.finished.len() + report.rejected, stream.len(), "requests lost");
+    assert_eq!(report.rejected, n_oversized, "exactly the oversized requests bounce");
+    assert_eq!(report.handoffs_cancelled, n_oversized, "each bounce cancels its transfer");
+    assert_eq!(report.handoffs, stream.len() - n_oversized, "the rest deliver");
+    // Cancelled wire time still accrues (the blocks crossed before the
+    // refusal), and the ledger must balance to the block.
+    assert!(report.transfer_wire_us > 0);
+    fleet.ledger().check_invariants().unwrap();
+    assert!(fleet.ledger().drained(), "transfers left on the wire after a full run");
+    assert_eq!(
+        fleet.ledger().begun(),
+        fleet.ledger().delivered() + fleet.ledger().cancelled()
+    );
+}
+
+// ---------------------------------------------------------------------
+// Cross-pool pin regression: decode stickiness never migrates.
+// ---------------------------------------------------------------------
+
+#[test]
+fn decode_pins_stay_in_the_decode_pool_across_turns() {
+    let workload = ChatWorkload {
+        turns_per_session: 3,
+        mean_gap_us: 400,
+        ..heavy_decode(0x5E55, 18)
+    };
+    let topology = split(1, 2, Interconnect::NVLINK);
+    let prefill_pool = topology.pool(ReplicaRole::Prefill);
+    let decode_pool = topology.pool(ReplicaRole::Decode);
+    let mut fleet = Fleet::new(
+        topology,
+        Box::new(router::Disaggregated::new()),
+        FleetConfig::default().policy("sequence-aware").engine(engine_cfg()),
+    )
+    .unwrap();
+    let report = fleet.run(&workload.generate()).unwrap();
+
+    assert_eq!(report.rejected, 0);
+    // Prefill legs only ever land in the prefill pool...
+    for a in &report.prefill_assignments {
+        assert!(prefill_pool.contains(&a.replica), "prefill leg on replica {}", a.replica);
+    }
+    // ...decode legs only in the decode pool, and a session's decode
+    // replica never changes once pinned.
+    let mut pin: HashMap<u64, usize> = HashMap::new();
+    for a in &report.assignments {
+        assert!(decode_pool.contains(&a.replica), "decode leg on replica {}", a.replica);
+        let home = *pin.entry(a.session).or_insert(a.replica);
+        assert_eq!(home, a.replica, "session {} migrated decode replicas", a.session);
+    }
+    assert!(report.handoffs > 0);
+    assert_eq!(report.pool(ReplicaRole::Decode).len(), 2);
+    assert_eq!(report.pool(ReplicaRole::Prefill).len(), 1);
+}
+
+// ---------------------------------------------------------------------
+// CLI flag validation: unknown --roles / --xfer values exit 2 with the
+// known names listed (same contract as every other enumerated flag).
+// ---------------------------------------------------------------------
+
+#[test]
+fn cli_rejects_unknown_roles_and_xfer_values() {
+    let bin = env!("CARGO_BIN_EXE_fa3-split");
+    let run = |args: &[&str]| {
+        std::process::Command::new(bin)
+            .args(args)
+            .output()
+            .expect("binary runs")
+    };
+    let base = ["cluster", "--replicas", "2", "--tp", "8", "--requests", "2", "--tokens", "4"];
+
+    let mut args = base.to_vec();
+    args.extend(["--roles", "sideways"]);
+    let out = run(&args);
+    assert_eq!(out.status.code(), Some(2), "unknown --roles must exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("colocated") && stderr.contains("split"), "{stderr}");
+
+    let mut args = base.to_vec();
+    args.extend(["--xfer", "carrier-pigeon"]);
+    let out = run(&args);
+    assert_eq!(out.status.code(), Some(2), "unknown --xfer must exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    for name in fa3_split::cluster::INTERCONNECT_NAMES {
+        assert!(stderr.contains(name), "help should list {name}: {stderr}");
+    }
+
+    // Split pools without the two-stage router is a topology/router
+    // mismatch, reported as an error (nonzero), not a hang or a panic.
+    let mut args = base.to_vec();
+    args.extend(["--roles", "split", "--router", "round-robin"]);
+    let out = run(&args);
+    assert!(!out.status.success(), "split + single-stage router must fail");
+}

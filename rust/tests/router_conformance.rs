@@ -1,0 +1,317 @@
+//! Router conformance: one shared invariant harness run over every
+//! routing policy the fleet can mount (`round-robin`, `least-loaded`,
+//! `session-affinity`, `disaggregated`).
+//!
+//! The fleet asserts these contracts at runtime (`check_route_contract`);
+//! this suite proves them *of the policies themselves*, over randomized
+//! snapshot sets, so a new router cannot land without inheriting the
+//! obligations:
+//!
+//! 1. a router never returns a replica whose `can_ever_admit` is false —
+//!    and when nobody qualifies it refuses with a typed
+//!    [`RouteError::Unroutable`] naming the request and its demand,
+//! 2. refusal reasons are actionable: pin refusals name the pinned
+//!    replica, cross-pool refusals say "outside this candidate pool",
+//! 3. equal state + equal inputs = equal decisions (fleet replays are
+//!    byte-reproducible),
+//! 4. routers speak **global** [`ReplicaSnapshot::index`] values, never
+//!    slice positions — a disaggregated fleet routes over pool subsets
+//!    like `[3, 5, 9]`,
+//! 5. the prefix-affinity bonus is bounded: it steers between equally
+//!    loaded replicas but never outweighs a whole queued request.
+
+use fa3_split::cluster::router::{self, Disaggregated, ReplicaSnapshot, RouteError, Router};
+use fa3_split::coordinator::Request;
+use fa3_split::util::prng::Rng;
+use fa3_split::util::proptest_lite::{check, Domain};
+
+/// All mountable policies, fresh. The closure form lets properties build
+/// as many independent instances of the same policy as they need.
+fn fresh_routers() -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn Router>>)> {
+    let mut out: Vec<(&'static str, Box<dyn Fn() -> Box<dyn Router>>)> = Vec::new();
+    for name in router::ROUTER_NAMES {
+        out.push((name, Box::new(move || router::by_name(name).expect("registered"))));
+    }
+    out
+}
+
+fn snap(index: usize, queue: usize, running: usize, free: usize) -> ReplicaSnapshot {
+    ReplicaSnapshot {
+        index,
+        queue_depth: queue,
+        running,
+        free_blocks: free,
+        total_blocks: 100,
+        can_admit_now: free > 0,
+        can_ever_admit: true,
+        shared_blocks: 0,
+        demand_blocks: 6,
+    }
+}
+
+fn req(id: u64) -> Request {
+    Request::new(id, vec![1; 64], 32)
+}
+
+/// Randomized snapshot set: `n` replicas at stride-2 global indices
+/// starting at `base`, eligibility from the low bits of `mask`, load
+/// fields from a seeded Rng.
+fn random_pool(n: usize, base: usize, mask: u64, seed: u64) -> Vec<ReplicaSnapshot> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let mut s = snap(
+                base + 2 * i,
+                rng.below(5) as usize,
+                rng.below(4) as usize,
+                rng.below(101) as usize,
+            );
+            s.can_ever_admit = mask & (1 << i) != 0;
+            s.shared_blocks = rng.below(7) as usize;
+            s
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// 1. Eligibility: never route to a guaranteed refusal; refuse loudly
+//    when nobody qualifies.
+// ---------------------------------------------------------------------
+
+#[test]
+fn no_router_ever_picks_a_never_admit_replica() {
+    check(
+        "router-eligibility",
+        &[
+            Domain::new(1, 5),   // pool size
+            Domain::new(0, 31),  // eligibility mask
+            Domain::new(0, 9),   // base of the global-index range
+            Domain::new(0, 999), // load-field seed
+        ],
+        |case| {
+            let (n, mask, base) = (case[0] as usize, case[1], case[2] as usize);
+            let pool = random_pool(n, base, mask, case[3]);
+            let any_eligible = pool.iter().any(|s| s.can_ever_admit);
+            for (name, fresh) in fresh_routers() {
+                let mut r = fresh();
+                // Distinct sessions per turn: stickiness stays out of the
+                // eligibility question.
+                for turn in 0..3u64 {
+                    match r.route(&req(turn), 1000 + turn, &pool) {
+                        Ok(idx) => {
+                            let s = pool.iter().find(|s| s.index == idx).ok_or(format!(
+                                "{name} returned {idx}, not a member of the pool"
+                            ))?;
+                            if !s.can_ever_admit {
+                                return Err(format!(
+                                    "{name} routed to replica {idx} which can never admit"
+                                ));
+                            }
+                        }
+                        Err(RouteError::Unroutable { request, reason }) => {
+                            if any_eligible {
+                                return Err(format!(
+                                    "{name} refused request {request} with an eligible \
+                                     replica present: {reason}"
+                                ));
+                            }
+                        }
+                        Err(e) => return Err(format!("{name} failed unexpectedly: {e}")),
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn refusals_name_the_request_and_its_demand() {
+    // Nobody can ever admit: every policy must refuse with the typed
+    // error carrying the request id and the token demand (96 = 64 + 32).
+    let mut pool = vec![snap(0, 0, 0, 100), snap(1, 0, 0, 100)];
+    for s in &mut pool {
+        s.can_ever_admit = false;
+    }
+    for (name, fresh) in fresh_routers() {
+        let mut r = fresh();
+        let err = r.route(&req(7), 7, &pool).unwrap_err();
+        match &err {
+            RouteError::Unroutable { request: 7, reason } => {
+                assert!(reason.contains("96 tokens"), "{name}: uninformative reason {reason:?}");
+            }
+            other => panic!("{name}: expected Unroutable for request 7, got {other:?}"),
+        }
+        // An empty slice is the distinct NoReplicas error, not a panic.
+        assert_eq!(r.route(&req(8), 8, &[]).unwrap_err(), RouteError::NoReplicas, "{name}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Determinism: two fresh instances fed the same call sequence make
+//    the same decisions, errors included.
+// ---------------------------------------------------------------------
+
+#[test]
+fn equal_state_and_inputs_give_equal_decisions() {
+    check(
+        "router-determinism",
+        &[Domain::new(1, 5), Domain::new(0, 31), Domain::new(0, 999)],
+        |case| {
+            let (n, mask, seed) = (case[0] as usize, case[1], case[2]);
+            for (name, fresh) in fresh_routers() {
+                let (mut a, mut b) = (fresh(), fresh());
+                let mut rng = Rng::new(seed);
+                for turn in 0..8u64 {
+                    // Sessions drawn from a small space so sticky routers
+                    // exercise both pin hits and first-turn placement.
+                    let session = rng.below(3);
+                    let pool = random_pool(n, 0, mask, seed ^ turn);
+                    let da = a.route(&req(turn), session, &pool);
+                    let db = b.route(&req(turn), session, &pool);
+                    if da != db {
+                        return Err(format!(
+                            "{name} diverged on turn {turn}: {da:?} vs {db:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// 3. Global-index contract: pool subsets route by member index, and a
+//    sticky pin resolves by index — or refuses when shown another pool.
+// ---------------------------------------------------------------------
+
+#[test]
+fn routers_speak_global_indices_over_pool_subsets() {
+    check(
+        "router-global-index",
+        &[Domain::new(0, 20), Domain::new(1, 4), Domain::new(0, 999)],
+        |case| {
+            let (base, n, seed) = (case[0] as usize, case[1] as usize, case[2]);
+            let pool = random_pool(n, base, u64::MAX, seed);
+            let members: Vec<usize> = pool.iter().map(|s| s.index).collect();
+            for (name, fresh) in fresh_routers() {
+                let mut r = fresh();
+                for turn in 0..2 * n as u64 {
+                    let idx = r
+                        .route(&req(turn), turn % 2, &pool)
+                        .map_err(|e| format!("{name}: {e}"))?;
+                    if !members.contains(&idx) {
+                        return Err(format!(
+                            "{name} returned {idx}; pool members are {members:?} \
+                             (slice-position arithmetic?)"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sticky_policies_keep_pins_pool_scoped() {
+    // Both sticky policies (session-affinity, and disaggregated's decode
+    // stage) pin in one pool, then refuse — rather than re-pin — when the
+    // same session is presented a disjoint pool.
+    let decode_pool = vec![snap(4, 0, 0, 100), snap(6, 0, 0, 100)];
+    let other_pool = vec![snap(0, 0, 0, 100), snap(1, 0, 0, 100)];
+    for name in ["session-affinity", "disaggregated"] {
+        let mut r = router::by_name(name).expect("registered");
+        let first = r.route(&req(0), 77, &decode_pool).unwrap();
+        assert!([4, 6].contains(&first), "{name}");
+        let err = r.route(&req(1), 77, &other_pool).unwrap_err();
+        assert!(
+            err.to_string().contains("outside this candidate pool"),
+            "{name}: wrong refusal {err}"
+        );
+        // The pin survives the refusal: back home, the session lands on
+        // the same replica as before.
+        assert_eq!(r.route(&req(2), 77, &decode_pool).unwrap(), first, "{name}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. Bounded prefix bonus: affinity steers ties, never jumps queues.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prefix_bonus_never_outweighs_a_queued_request() {
+    check(
+        "router-prefix-bounded",
+        &[Domain::new(1, 6), Domain::new(0, 6), Domain::new(0, 100)],
+        |case| {
+            let (queue, shared, free) = (case[0] as usize, case[1] as usize, case[2] as usize);
+            // Replica 5: idle, cold cache. Replica 9: >= 1 queued request
+            // ahead, up to a full prefix hit (demand_blocks = 6). Equal KV
+            // pressure. The load-aware policies must pick the idle replica:
+            // hit ratio <= 1 < queue + running gap.
+            let idle = snap(5, 0, 0, free);
+            let mut warm = snap(9, queue, 0, free);
+            warm.shared_blocks = shared;
+            let pool = vec![idle, warm];
+            for name in ["least-loaded", "session-affinity", "disaggregated"] {
+                let mut r = router::by_name(name).expect("registered");
+                let idx = r.route(&req(0), 0, &pool).map_err(|e| format!("{name}: {e}"))?;
+                if idx != 5 {
+                    return Err(format!(
+                        "{name} jumped a {queue}-deep queue for a {shared}/6 prefix hit"
+                    ));
+                }
+            }
+            // The disaggregated prefill stage is load/prefix-aware too.
+            let mut d = Disaggregated::new();
+            let idx = d.route_prefill(&req(0), 0, &pool).map_err(|e| e.to_string())?;
+            if idx != 5 {
+                return Err("prefill stage jumped the queue for a prefix hit".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// 5. Stage independence: the two-stage router's prefill placement never
+//    creates decode pins, and only it advertises two stages.
+// ---------------------------------------------------------------------
+
+#[test]
+fn only_the_disaggregated_router_is_two_stage() {
+    for (name, fresh) in fresh_routers() {
+        let mut r = fresh();
+        assert_eq!(r.two_stage().is_some(), name == "disaggregated", "{name}");
+    }
+}
+
+#[test]
+fn prefill_placement_never_pins_the_decode_stage() {
+    check(
+        "router-stage-independence",
+        &[Domain::new(1, 4), Domain::new(0, 999)],
+        |case| {
+            let (n, seed) = (case[0] as usize, case[1]);
+            let prefill_pool = random_pool(n, 0, u64::MAX, seed);
+            let decode_pool = random_pool(n, 10, u64::MAX, seed ^ 1);
+            let mut d = Disaggregated::new();
+            for turn in 0..4u64 {
+                d.route_prefill(&req(turn), turn, &prefill_pool).map_err(|e| e.to_string())?;
+                if d.decode_pin_of(turn).is_some() {
+                    return Err(format!("prefill placement pinned session {turn}"));
+                }
+                let idx = d.route(&req(turn), turn, &decode_pool).map_err(|e| e.to_string())?;
+                if d.decode_pin_of(turn) != Some(idx) {
+                    return Err(format!("decode placement failed to pin session {turn}"));
+                }
+                if prefill_pool.iter().any(|s| s.index == idx) {
+                    return Err(format!("decode pin {idx} landed in the prefill pool"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
